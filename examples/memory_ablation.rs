@@ -1,0 +1,53 @@
+//! Memory-pressure ablation (extends the paper's Table 4): sweep the GPU
+//! memory utilization knob and watch each method's behaviour change —
+//! SC's waiting time explodes as the budget shrinks while STEP's
+//! accuracy holds because its scorer identifies winners early (§5.3.5).
+//!
+//!     cargo run --release --example memory_ablation
+
+use step::coordinator::method::Method;
+use step::harness::cells::{run_cell, CellOpts};
+use step::harness::{artifact_dir, load_sim_bundle};
+use step::sim::profiles::{BenchId, ModelId};
+
+fn main() -> anyhow::Result<()> {
+    let (gen_params, scorer) = load_sim_bundle(&artifact_dir())?;
+    let questions = Some(15);
+
+    println!("GPU-memory ablation: DeepSeek-8B / HMMT-25 / N=32\n");
+    println!(
+        "{:>5} | {:<8} | {:>6} {:>8} {:>8} {:>9} {:>7}",
+        "util", "method", "acc%", "lat(s)", "wait(s)", "preempts", "pruned"
+    );
+    for util in [0.5, 0.6, 0.7, 0.8, 0.9] {
+        for method in [Method::Sc, Method::Step] {
+            let opts = CellOpts {
+                n_traces: 32,
+                max_questions: questions,
+                mem_util: util,
+                ..Default::default()
+            };
+            let r = run_cell(
+                ModelId::DeepSeek8B,
+                BenchId::Hmmt2425,
+                method,
+                &gen_params,
+                &scorer,
+                &opts,
+            );
+            println!(
+                "{:>5.1} | {:<8} | {:>6.1} {:>8.0} {:>8.0} {:>9.1} {:>7.1}",
+                util,
+                method.name(),
+                r.acc,
+                r.lat_s,
+                r.engine_wait_s,
+                r.n_preemptions,
+                r.n_pruned,
+            );
+        }
+    }
+    println!("\nexpected shape: SC wait grows as util shrinks; STEP wait stays 0");
+    println!("and its accuracy is flat across budgets (paper: 70.1 +/- 1.8).");
+    Ok(())
+}

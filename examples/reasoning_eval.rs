@@ -1,0 +1,53 @@
+//! Benchmark-evaluation driver: the workload the paper's intro motivates
+//! — run a full reasoning benchmark under a trace budget and compare all
+//! five methods on accuracy / tokens / end-to-end latency.
+//!
+//!     cargo run --release --example reasoning_eval -- [bench] [model] [N]
+//!
+//! e.g. `cargo run --release --example reasoning_eval -- hmmt deepseek 32`
+
+use step::coordinator::method::Method;
+use step::harness::cells::{run_cell, CellOpts};
+use step::harness::{artifact_dir, load_sim_bundle};
+use step::sim::profiles::{BenchId, ModelId};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let bench = args
+        .first()
+        .and_then(|s| BenchId::parse(s))
+        .unwrap_or(BenchId::Aime25);
+    let model = args
+        .get(1)
+        .and_then(|s| ModelId::parse(s))
+        .unwrap_or(ModelId::Qwen3_4B);
+    let n_traces: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(32);
+
+    let (gen_params, scorer) = load_sim_bundle(&artifact_dir())?;
+    println!("evaluating {} on {:?} with N={n_traces}\n", bench.name(), model);
+    println!(
+        "{:<10} | {:>6} {:>9} {:>8} {:>8} {:>8}",
+        "method", "acc%", "tokens(k)", "lat(s)", "wait(s)", "pruned"
+    );
+    let mut baseline_lat = None;
+    for method in Method::ALL {
+        let opts = CellOpts { n_traces, ..Default::default() };
+        let r = run_cell(model, bench, method, &gen_params, &scorer, &opts);
+        if method == Method::Sc {
+            baseline_lat = Some(r.lat_s);
+        }
+        let speedup = baseline_lat
+            .map(|b| format!("  ({:.1}x vs SC)", b / r.lat_s))
+            .unwrap_or_default();
+        println!(
+            "{:<10} | {:>6.1} {:>9.1} {:>8.0} {:>8.0} {:>8.1}{speedup}",
+            method.name(),
+            r.acc,
+            r.tok_k,
+            r.lat_s,
+            r.engine_wait_s,
+            r.n_pruned,
+        );
+    }
+    Ok(())
+}

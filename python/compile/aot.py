@@ -1,0 +1,254 @@
+"""AOT compile path: lower every serving graph to HLO text + export weights.
+
+Run via `make artifacts` (no-op when inputs are unchanged). Produces, in
+artifacts/:
+
+  prefill_b{B}.hlo.txt     prefill graph per batch-size variant
+  decode_b{B}.hlo.txt      decode-step graph per batch-size variant
+  scorer_d{D}_b{B}.hlo.txt step-scorer graph variants
+  params.bin               model parameters, raw little-endian f32
+  scorer_sim.json          trained sim scorer (d=64) + generator params
+  scorer_e2e.json          trained e2e scorer (d=256, tiny-LM hidden size)
+  manifest.json            graph/argument/parameter registry for rust
+
+Interchange format is HLO *text*, not serialized HloModuleProto: jax >=
+0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import scorer as S
+
+PREFILL_BATCHES = (1, 4, 8)
+DECODE_BATCHES = (1, 2, 4, 8)
+SCORER_BATCHES = (1, 8, 64)
+PROMPT_LEN = 64
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def param_specs(cfg: M.ModelConfig):
+    """(name, spec) for every model parameter, in Params field order."""
+    L, D, F, V, Mx = cfg.n_layers, cfg.d_model, cfg.d_ff, cfg.vocab, cfg.max_len
+    return [
+        ("embed", _spec((V, D))),
+        ("pos_embed", _spec((Mx, D))),
+        ("wq", _spec((L, D, D))),
+        ("wk", _spec((L, D, D))),
+        ("wv", _spec((L, D, D))),
+        ("wo", _spec((L, D, D))),
+        ("w1", _spec((L, D, F))),
+        ("b1", _spec((L, F))),
+        ("w2", _spec((L, F, D))),
+        ("b2", _spec((L, D))),
+        ("ln1", _spec((L, D))),
+        ("ln2", _spec((L, D))),
+        ("lnf", _spec((D,))),
+        ("wu", _spec((D, V))),
+    ]
+
+
+def kv_spec(cfg: M.ModelConfig, batch: int):
+    return _spec((cfg.n_layers, 2, batch, cfg.n_heads, cfg.max_len, cfg.head_dim))
+
+
+def lower_prefill(cfg: M.ModelConfig, batch: int, prompt_len: int | None = None) -> str:
+    p_len = min(prompt_len or PROMPT_LEN, cfg.max_len)
+    specs = [s for _, s in param_specs(cfg)] + [_spec((batch, p_len), jnp.int32)]
+
+    def fn(*args):
+        p = M.Params(*args[:-1])
+        logits, hidden, kv = M.prefill(cfg, p, args[-1])
+        return (logits, hidden, kv)
+
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def lower_decode(cfg: M.ModelConfig, batch: int) -> str:
+    specs = [s for _, s in param_specs(cfg)] + [
+        kv_spec(cfg, batch),
+        _spec((batch,), jnp.int32),  # token
+        _spec((batch,), jnp.int32),  # pos
+    ]
+
+    def fn(*args):
+        p = M.Params(*args[:14])
+        logits, hidden, kv = M.decode_step(cfg, p, args[14], args[15], args[16])
+        return (logits, hidden, kv)
+
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def lower_scorer(d: int, batch: int, hidden: int = 512) -> str:
+    specs = [
+        _spec((batch, d)),
+        _spec((d, hidden)),
+        _spec((hidden,)),
+        _spec((hidden, 1)),
+        _spec((1,)),
+    ]
+    return to_hlo_text(jax.jit(M.scorer_graph).lower(*specs))
+
+
+def graph_entry(file, inputs, n_outputs):
+    return {
+        "file": file,
+        "inputs": [
+            {"name": n, "shape": list(s.shape), "dtype": str(s.dtype)}
+            for n, s in inputs
+        ],
+        "outputs": n_outputs,
+    }
+
+
+def export_params(cfg: M.ModelConfig, path: str, seed: int = 0):
+    """Raw little-endian f32 concatenation, offsets recorded in manifest."""
+    params = M.init_params(cfg, seed=seed)
+    entries, bufs, offset = [], [], 0
+    for (name, _), arr in zip(param_specs(cfg), params):
+        a = np.asarray(arr, np.float32)
+        entries.append({
+            "name": name,
+            "shape": list(a.shape),
+            "offset": offset,       # in f32 elements
+            "len": int(a.size),
+        })
+        bufs.append(a.flatten())
+        offset += a.size
+    with open(path, "wb") as f:
+        f.write(np.concatenate(bufs).astype("<f4").tobytes())
+    return entries
+
+
+def input_fingerprint() -> str:
+    """Hash of the compile-path sources; lets `make artifacts` skip cleanly."""
+    here = os.path.dirname(__file__)
+    h = hashlib.sha256()
+    for root, _, files in sorted(os.walk(here)):
+        for fn in sorted(files):
+            if fn.endswith(".py"):
+                with open(os.path.join(root, fn), "rb") as f:
+                    h.update(f.read())
+    return h.hexdigest()[:16]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--traces-per-class", type=int, default=1500,
+                    help="scorer training set size per class (paper: 5000; the\n"
+                    "default is smaller because traces here are ~6x longer\n"
+                    "than the paper's, giving a similar step-level count)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--skip-scorers", action="store_true",
+                    help="lower graphs only (fast dev cycle)")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    cfg = M.ModelConfig(max_len=256)
+
+    graphs = {}
+
+    def emit(name: str, text: str, inputs, n_outputs: int):
+        fn = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, fn), "w") as f:
+            f.write(text)
+        graphs[name] = graph_entry(fn, inputs, n_outputs)
+        print(f"  {fn}: {len(text)} chars")
+
+    print("lowering prefill graphs")
+    for b in PREFILL_BATCHES:
+        ins = param_specs(cfg) + [("tokens", _spec((b, PROMPT_LEN), jnp.int32))]
+        emit(f"prefill_b{b}", lower_prefill(cfg, b), ins, 3)
+
+    print("lowering decode graphs")
+    for b in DECODE_BATCHES:
+        ins = param_specs(cfg) + [
+            ("kv", kv_spec(cfg, b)),
+            ("token", _spec((b,), jnp.int32)),
+            ("pos", _spec((b,), jnp.int32)),
+        ]
+        emit(f"decode_b{b}", lower_decode(cfg, b), ins, 3)
+
+    print("lowering scorer graphs")
+    for d in (64, cfg.d_model):
+        for b in SCORER_BATCHES:
+            ins = [
+                ("h", _spec((b, d))),
+                ("w1", _spec((d, 512))),
+                ("b1", _spec((512,))),
+                ("w2", _spec((512, 1))),
+                ("b2", _spec((1,))),
+            ]
+            emit(f"scorer_d{d}_b{b}", lower_scorer(d, b), ins, 1)
+
+    print("exporting model params")
+    param_entries = export_params(cfg, os.path.join(args.out_dir, "params.bin"),
+                                  seed=args.seed)
+
+    scorers = {}
+    if args.skip_scorers:
+        # Keep previously trained scorer bundles (graph-only relower).
+        for name in ("sim", "e2e"):
+            if os.path.exists(os.path.join(args.out_dir, f"scorer_{name}.json")):
+                scorers[name] = f"scorer_{name}.json"
+    if not args.skip_scorers:
+        for name, d in (("sim", 64), ("e2e", cfg.d_model)):
+            print(f"training {name} scorer (d={d}) "
+                  f"on {args.traces_per_class}/class synthetic traces")
+            gp = S.GenParams(d=d)
+            weights, metrics = S.train_scorer(
+                gp, n_traces_per_class=args.traces_per_class,
+                seed=args.seed, verbose=True)
+            out = f"scorer_{name}.json"
+            S.export_scorer(os.path.join(args.out_dir, out), gp, weights, metrics)
+            scorers[name] = out
+            print(f"  {out}: val_auc={metrics['val_auc']:.4f} "
+                  f"alpha={metrics['alpha']:.3f} epochs={metrics['epochs']}")
+
+    manifest = {
+        "fingerprint": input_fingerprint(),
+        "model_config": {
+            "vocab": cfg.vocab, "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers, "n_heads": cfg.n_heads,
+            "d_ff": cfg.d_ff, "max_len": cfg.max_len,
+            "prompt_len": PROMPT_LEN,
+        },
+        "graphs": graphs,
+        "params_bin": "params.bin",
+        "params": param_entries,
+        "scorers": scorers,
+        "prefill_batches": list(PREFILL_BATCHES),
+        "decode_batches": list(DECODE_BATCHES),
+        "scorer_batches": list(SCORER_BATCHES),
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote manifest.json ({len(graphs)} graphs)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,111 @@
+"""L1 Pallas kernel: single-token decode attention over a cached KV prefix.
+
+This is the serving hot-spot: at every engine iteration each live trace
+attends its new query token against its (growing) KV cache. The paper's
+testbed ran this on a GH200 via vLLM's CUDA kernels (one threadblock per
+(sequence, head), KV streamed HBM -> shared memory). The TPU re-think
+(DESIGN.md §Hardware-Adaptation):
+
+  * grid = (batch, heads): each Pallas program owns one (b, h) pair;
+  * the KV cache is tiled HBM -> VMEM with `BlockSpec` in (block_k, Dh)
+    chunks — VMEM plays the role CUDA shared memory played, but the
+    schedule is expressed declaratively via the index map instead of
+    imperatively via threadblock loops;
+  * q.K^T and P.V are (1, Dh) x (Dh, block_k) / (1, block_k) x (block_k,
+    Dh) contractions that map onto the MXU, accumulated in f32 with an
+    online (flash-style) softmax so only one KV tile is resident at a
+    time.
+
+MUST be lowered with interpret=True: real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute. Correctness is pinned to
+ref.decode_attention_ref by python/tests/test_kernels.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_K = 128
+
+
+def _decode_attn_kernel(lens_ref, q_ref, k_ref, v_ref, o_ref, *, block_k: int,
+                        num_kv_blocks: int):
+    """One (batch, head) program: online-softmax attention over KV tiles.
+
+    Refs (as blocked by the BlockSpecs below):
+      lens_ref: [1]              valid cache length for this sequence.
+      q_ref:    [1, 1, Dh]       the query row for this (b, h).
+      k_ref:    [1, 1, M, Dh]    full K for this (b, h) — sliced per tile.
+      v_ref:    [1, 1, M, Dh]    full V for this (b, h).
+      o_ref:    [1, 1, Dh]       output row.
+    """
+    dh = q_ref.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    q = q_ref[0, 0, :].astype(jnp.float32)[None, :] * scale  # [1, Dh]
+    seq_len = lens_ref[0]
+
+    def body(i, carry):
+        m_prev, l_prev, acc = carry
+        start = i * block_k
+        k_tile = k_ref[0, 0, pl.dslice(start, block_k), :].astype(jnp.float32)
+        v_tile = v_ref[0, 0, pl.dslice(start, block_k), :].astype(jnp.float32)
+        # (1, Dh) x (Dh, block_k) -> MXU contraction.
+        s = q @ k_tile.T  # [1, block_k]
+        idx = start + jax.lax.iota(jnp.int32, block_k)
+        s = jnp.where((idx < seq_len)[None, :], s, -jnp.inf)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        # exp(-inf - -inf) guard: m_new is finite once any position is valid;
+        # before that both p and correction are zero.
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(jnp.isfinite(s), p, 0.0)
+        corr = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_new), 0.0)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[:, None] + p @ v_tile  # [1, Dh]
+        return m_new, l_new, acc
+
+    m0 = jnp.full((1,), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((1,), jnp.float32)
+    acc0 = jnp.zeros((1, dh), jnp.float32)
+    _, l, acc = jax.lax.fori_loop(0, num_kv_blocks, body, (m0, l0, acc0))
+    o_ref[0, 0, :] = (acc / l[:, None])[0].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k",))
+def decode_attention(q, k, v, lens, *, block_k: int | None = None):
+    """Pallas decode attention. Shapes as in ref.decode_attention_ref.
+
+    Args:
+      q:    [B, H, Dh]
+      k, v: [B, H, M, Dh]  (M must be a multiple of block_k)
+      lens: [B] int32
+      block_k: KV tile length; defaults to min(DEFAULT_BLOCK_K, M).
+    Returns:
+      [B, H, Dh]
+    """
+    B, H, M, Dh = k.shape
+    if block_k is None:
+        block_k = min(DEFAULT_BLOCK_K, M)
+    if M % block_k != 0:
+        raise ValueError(f"cache length {M} not a multiple of block_k={block_k}")
+    num_kv_blocks = M // block_k
+
+    kernel = functools.partial(
+        _decode_attn_kernel, block_k=block_k, num_kv_blocks=num_kv_blocks
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h: (b,)),            # lens
+            pl.BlockSpec((1, 1, Dh), lambda b, h: (b, h, 0)),  # q
+            pl.BlockSpec((1, 1, M, Dh), lambda b, h: (b, h, 0, 0)),  # k
+            pl.BlockSpec((1, 1, M, Dh), lambda b, h: (b, h, 0, 0)),  # v
+        ],
+        out_specs=pl.BlockSpec((1, 1, Dh), lambda b, h: (b, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Dh), q.dtype),
+        interpret=True,
+    )(lens, q, k, v)

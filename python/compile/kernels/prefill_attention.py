@@ -1,0 +1,104 @@
+"""L1 Pallas kernel: causal (flash-style) prefill attention.
+
+The prompt-processing counterpart of kernels/attention.py: each program
+owns one (batch, head, q-tile) triple and streams K/V tiles through VMEM
+with an online softmax, skipping fully-masked KV tiles (causality) — the
+standard flash-attention schedule re-expressed with BlockSpec index maps
+for the TPU memory hierarchy (DESIGN.md §Hardware-Adaptation).
+
+Padding: positions >= lens[b] are masked out of the attention (the rust
+engine right-pads batched prompts of different lengths).
+
+interpret=True as everywhere (CPU PJRT cannot run Mosaic custom-calls).
+Oracle: ref-style masked softmax in tests (python/tests/test_kernels.py's
+prefill section) and the jnp prefill in model.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_Q = 64
+DEFAULT_BLOCK_K = 64
+
+
+def _prefill_attn_kernel(lens_ref, q_ref, k_ref, v_ref, o_ref, *,
+                         block_q: int, block_k: int, seq_len: int):
+    """One (b, h, iq) program: causal online-softmax over KV tiles.
+
+    Refs: lens [1]; q [1,1,block_q,Dh]; k,v [1,1,P,Dh]; o like q.
+    """
+    dh = q_ref.shape[-1]
+    iq = pl.program_id(2)
+    q_start = iq * block_q
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    q = q_ref[0, 0, :, :].astype(jnp.float32) * scale  # [bq, Dh]
+    valid_len = lens_ref[0]
+    q_idx = q_start + jax.lax.iota(jnp.int32, block_q)
+
+    # Causality: only KV tiles with start <= last query index matter.
+    num_kv_tiles = (q_start + block_q + block_k - 1) // block_k
+
+    def body(j, carry):
+        m_prev, l_prev, acc = carry
+        k_start = j * block_k
+        k_tile = k_ref[0, 0, pl.dslice(k_start, block_k), :].astype(jnp.float32)
+        v_tile = v_ref[0, 0, pl.dslice(k_start, block_k), :].astype(jnp.float32)
+        s = q @ k_tile.T  # [bq, bk]
+        k_idx = k_start + jax.lax.iota(jnp.int32, block_k)
+        mask = (k_idx[None, :] <= q_idx[:, None]) & (k_idx < valid_len)[None, :]
+        s = jnp.where(mask, s, -jnp.inf)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.where(jnp.isfinite(s), jnp.exp(s - m_new[:, None]), 0.0)
+        corr = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_new), 0.0)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[:, None] + p @ v_tile
+        return m_new, l_new, acc
+
+    m0 = jnp.full((block_q,), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc0 = jnp.zeros((block_q, dh), jnp.float32)
+    _, l, acc = jax.lax.fori_loop(0, num_kv_tiles, body, (m0, l0, acc0))
+    # Padded / out-of-range query rows normalize by l=0 -> emit zeros.
+    safe_l = jnp.where(l > 0.0, l, 1.0)
+    out = jnp.where((l > 0.0)[:, None], acc / safe_l[:, None], 0.0)
+    o_ref[0, 0, :, :] = out.astype(o_ref.dtype)
+    del seq_len
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k"))
+def prefill_attention(q, k, v, lens, *, block_q: int | None = None,
+                      block_k: int | None = None):
+    """Causal Pallas prefill attention.
+
+    Args:
+      q, k, v: [B, H, P, Dh] (P a multiple of the tile sizes).
+      lens:    [B] int32 valid prompt lengths (padding masked out).
+    Returns:
+      [B, H, P, Dh]; rows at positions >= lens are zeros.
+    """
+    B, H, P, Dh = q.shape
+    bq = block_q or min(DEFAULT_BLOCK_Q, P)
+    bk = block_k or min(DEFAULT_BLOCK_K, P)
+    if P % bq != 0 or P % bk != 0:
+        raise ValueError(f"prompt length {P} not a multiple of tiles ({bq},{bk})")
+    kernel = functools.partial(
+        _prefill_attn_kernel, block_q=bq, block_k=bk, seq_len=P
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, P // bq),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, i: (b,)),
+            pl.BlockSpec((1, 1, bq, Dh), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, P, Dh), lambda b, h, i: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, P, Dh), lambda b, h, i: (b, h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, Dh), lambda b, h, i: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, P, Dh), q.dtype),
+        interpret=True,
+    )(lens, q, k, v)

@@ -1,0 +1,90 @@
+"""Pure-jnp reference oracles for the L1 Pallas kernels.
+
+These are the CORE correctness signal for the compile path: every Pallas
+kernel in this package must match its oracle here to float tolerance under
+pytest (python/tests/test_kernels.py), including hypothesis sweeps over
+shapes and dtypes.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, lens):
+    """Single-token decode attention over a cached KV prefix.
+
+    Args:
+      q:    [B, H, Dh]     query for the token being decoded.
+      k:    [B, H, M, Dh]  cached keys (padded to max length M).
+      v:    [B, H, M, Dh]  cached values.
+      lens: [B] int32      number of valid cache positions per sequence
+                           (the new token's K/V must already be written at
+                           position lens-1).
+
+    Returns:
+      [B, H, Dh] attention output, computed in f32 and cast back to q.dtype.
+    """
+    _, _, M, Dh = k.shape
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(jnp.float32(Dh))
+    logits = jnp.einsum("bhd,bhmd->bhm", qf, kf) * scale  # [B, H, M]
+    mask = jnp.arange(M)[None, None, :] < lens[:, None, None]
+    logits = jnp.where(mask, logits, -jnp.inf)
+    probs = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
+    probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+    out = jnp.einsum("bhm,bhmd->bhd", probs, vf)
+    return out.astype(q.dtype)
+
+
+def scorer_mlp_ref(h, w1, b1, w2, b2):
+    """Step-scorer MLP: sigmoid(W2 @ relu(W1 @ h + b1) + b2).
+
+    Args:
+      h:  [B, D]   step-boundary hidden states.
+      w1: [D, Hm]  first layer weight.
+      b1: [Hm]
+      w2: [Hm, 1]  output head.
+      b2: [1]
+
+    Returns:
+      [B] correctness probabilities in f32.
+    """
+    hf = h.astype(jnp.float32)
+    z = jnp.maximum(hf @ w1.astype(jnp.float32) + b1.astype(jnp.float32), 0.0)
+    logit = z @ w2.astype(jnp.float32) + b2.astype(jnp.float32)
+    return 1.0 / (1.0 + jnp.exp(-logit[:, 0]))
+
+
+def layernorm_ref(x, gamma, eps=1e-5):
+    """Layernorm (zero-mean, unit-variance, scale only — no bias)."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) / jnp.sqrt(var + eps) * gamma).astype(x.dtype)
+
+
+def prefill_attention_ref(q, k, v, lens):
+    """Causal masked attention over a padded prompt batch.
+
+    q, k, v: [B, H, P, Dh]; lens: [B]. Rows at positions >= lens[b]
+    produce zeros (fully masked).
+    """
+    B, H, P, Dh = q.shape
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(jnp.float32(Dh))
+    s = jnp.einsum("bhqd,bhkd->bhqk", qf, kf) * scale
+    causal = jnp.tril(jnp.ones((P, P), bool))
+    valid = jnp.arange(P)[None, :] < lens[:, None]  # [B, P] keys
+    mask = causal[None, None] & valid[:, None, None, :]
+    s = jnp.where(mask, s, -jnp.inf)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.where(jnp.isfinite(s), jnp.exp(s - jnp.where(jnp.isfinite(m), m, 0.0)), 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p / jnp.where(l > 0, l, 1.0), vf)
+    out = jnp.where((l > 0), out, 0.0)
+    return out.astype(q.dtype)

@@ -1,0 +1,71 @@
+"""L1 Pallas kernel: fused step-scorer MLP.
+
+The paper's step scorer (§4.1) is sigmoid(W2 relu(W1 h + b1) + b2) applied
+to the last-layer hidden state of every `\n\n` step-boundary token. In the
+serving loop it runs once per boundary per live trace, so it sits on the
+decode hot path — the paper keeps its overhead < 1e-6 of an LLM step
+(App. D) by construction.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the whole MLP fuses into one
+Pallas program — both weight matrices stay resident in VMEM (512·D·4 B ≈
+0.5–5 MB, well under the ~16 MB budget), activations never round-trip to
+HBM, and both layers are MXU contractions: (Bt, D)x(D, 512) then
+(Bt, 512)x(512, 1). Grid tiles the batch so large scoring batches stream
+through the same resident weights.
+
+interpret=True: see kernels/attention.py. Oracle: ref.scorer_mlp_ref.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_B = 64
+
+
+def _scorer_kernel(h_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    """One batch-tile program: fused 2-layer MLP + sigmoid.
+
+    Refs: h [Bt, D], w1 [D, Hm], b1 [Hm], w2 [Hm, 1], b2 [1], o [Bt].
+    """
+    h = h_ref[...].astype(jnp.float32)
+    z = h @ w1_ref[...].astype(jnp.float32) + b1_ref[...].astype(jnp.float32)
+    z = jnp.maximum(z, 0.0)
+    logit = z @ w2_ref[...].astype(jnp.float32) + b2_ref[...].astype(jnp.float32)
+    o_ref[...] = 1.0 / (1.0 + jnp.exp(-logit[:, 0]))
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def scorer_mlp(h, w1, b1, w2, b2, *, block_b: int = DEFAULT_BLOCK_B):
+    """Fused Pallas scorer MLP. Shapes as in ref.scorer_mlp_ref.
+
+    Args:
+      h:  [B, D] hidden states (B must be a multiple of block_b, or < block_b
+          in which case a single-tile launch is used).
+      w1: [D, Hm], b1: [Hm], w2: [Hm, 1], b2: [1].
+    Returns:
+      [B] f32 probabilities.
+    """
+    B, D = h.shape
+    Hm = w1.shape[1]
+    bb = min(block_b, B)
+    if B % bb != 0:
+        raise ValueError(f"batch {B} not a multiple of block_b={bb}")
+    return pl.pallas_call(
+        _scorer_kernel,
+        grid=(B // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, D), lambda i: (i, 0)),
+            pl.BlockSpec((D, Hm), lambda i: (0, 0)),
+            pl.BlockSpec((Hm,), lambda i: (0,)),
+            pl.BlockSpec((Hm, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bb,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((B,), jnp.float32),
+        interpret=True,
+    )(h, w1, b1, w2, b2)

@@ -1,0 +1,203 @@
+"""L2: the reasoning-LM compute graph in JAX (build-time only).
+
+A small decoder-only transformer standing in for the paper's reasoning
+LLMs (Qwen3-4B / DeepSeek-R1-8B / Phi-4 — see DESIGN.md §3 for the
+substitution argument). Two graphs are AOT-lowered per batch-size
+variant and executed from rust via PJRT:
+
+  * prefill(params, tokens)            -> (logits, hidden_last, kv)
+  * decode_step(params, kv, tok, pos)  -> (logits, hidden, kv')
+
+and the step-scorer graph (scorer weights trained in scorer.py):
+
+  * scorer(h, w1, b1, w2, b2)          -> probs
+
+Both phases call the L1 Pallas kernels so they lower into the same HLO
+the rust runtime loads: kernels.prefill_attention (flash-style causal)
+for prompt processing, kernels.attention for the per-token KV-cache
+attention, and kernels.scorer for the step-scorer MLP.
+
+Python never runs at serving time; rust owns sampling, step segmentation,
+scoring policy, KV accounting and scheduling.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.attention import decode_attention
+from .kernels.prefill_attention import prefill_attention
+from .kernels.scorer import scorer_mlp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Tiny reasoning-LM configuration (the e2e serving model)."""
+
+    vocab: int = 512
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 4
+    d_ff: int = 1024
+    max_len: int = 512
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    # Token conventions shared with the rust tokenizer (rust/src/model):
+    # 0 = pad, 1 = BOS, 2 = EOS ("</think>"-equivalent), 3 = step boundary
+    # ("\n\n"-equivalent). Answer digits live at 4..14.
+    PAD: int = 0
+    BOS: int = 1
+    EOS: int = 2
+    STEP: int = 3
+
+
+class Params(NamedTuple):
+    """Flattened in this exact field order when lowering — the rust side
+    feeds positional PJRT arguments in the same order (manifest.json)."""
+
+    embed: jax.Array      # [V, D]
+    pos_embed: jax.Array  # [M, D]
+    wq: jax.Array         # [L, D, D]
+    wk: jax.Array         # [L, D, D]
+    wv: jax.Array         # [L, D, D]
+    wo: jax.Array         # [L, D, D]
+    w1: jax.Array         # [L, D, F]
+    b1: jax.Array         # [L, F]
+    w2: jax.Array         # [L, F, D]
+    b2: jax.Array         # [L, D]
+    ln1: jax.Array        # [L, D]
+    ln2: jax.Array        # [L, D]
+    lnf: jax.Array        # [D]
+    wu: jax.Array         # [D, V] unembedding
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Params:
+    """He-style random init, deterministic in `seed`."""
+    rng = np.random.default_rng(seed)
+    L, D, F, V, M = cfg.n_layers, cfg.d_model, cfg.d_ff, cfg.vocab, cfg.max_len
+
+    def norm(*shape, scale):
+        return jnp.asarray(rng.standard_normal(shape) * scale, jnp.float32)
+
+    return Params(
+        embed=norm(V, D, scale=0.02),
+        pos_embed=norm(M, D, scale=0.02),
+        wq=norm(L, D, D, scale=D**-0.5),
+        wk=norm(L, D, D, scale=D**-0.5),
+        wv=norm(L, D, D, scale=D**-0.5),
+        wo=norm(L, D, D, scale=D**-0.5),
+        w1=norm(L, D, F, scale=D**-0.5),
+        b1=jnp.zeros((L, F), jnp.float32),
+        w2=norm(L, F, D, scale=F**-0.5),
+        b2=jnp.zeros((L, D), jnp.float32),
+        ln1=jnp.ones((L, D), jnp.float32),
+        ln2=jnp.ones((L, D), jnp.float32),
+        lnf=jnp.ones((D,), jnp.float32),
+        wu=norm(D, V, scale=D**-0.5),
+    )
+
+
+def _ln(x, gamma, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * gamma
+
+
+def _split_heads(x, n_heads):  # [B, T, D] -> [B, H, T, Dh]
+    B, T, D = x.shape
+    return x.reshape(B, T, n_heads, D // n_heads).transpose(0, 2, 1, 3)
+
+
+def prefill(cfg: ModelConfig, p: Params, tokens):
+    """Process a full (padded) prompt.
+
+    Args:
+      tokens: [B, P] int32, padded with PAD after the true prompt; PAD
+        positions are masked out of attention so rust may batch prompts of
+        different lengths into one padded literal.
+
+    Returns:
+      logits:  [B, P, V]  next-token logits at every position.
+      hidden:  [B, P, D]  final-layer hidden states (scorer input).
+      kv:      [L, 2, B, H, M, Dh] cache with positions [0, P) filled.
+    """
+    B, P = tokens.shape
+    L, H, M, Dh = cfg.n_layers, cfg.n_heads, cfg.max_len, cfg.head_dim
+    x = p.embed[tokens] + p.pos_embed[:P][None, :, :]
+    # Prompts are right-padded (rust engine contract), so the PAD mask
+    # reduces to per-sequence valid lengths — the L1 prefill kernel's
+    # masking scheme.
+    lens = jnp.sum((tokens != ModelConfig.PAD).astype(jnp.int32), axis=1)
+
+    kv_parts = []
+    for l in range(L):
+        h_in = _ln(x, p.ln1[l])
+        q = _split_heads(h_in @ p.wq[l], H)
+        k = _split_heads(h_in @ p.wk[l], H)
+        v = _split_heads(h_in @ p.wv[l], H)
+        # L1 Pallas flash-style causal attention over the prompt.
+        o = prefill_attention(q, k, v, lens)
+        o = o.transpose(0, 2, 1, 3).reshape(B, P, cfg.d_model)
+        x = x + o @ p.wo[l]
+        h_ff = _ln(x, p.ln2[l])
+        x = x + jnp.maximum(h_ff @ p.w1[l] + p.b1[l], 0.0) @ p.w2[l] + p.b2[l]
+        pad = jnp.zeros((B, H, M - P, Dh), k.dtype)
+        kv_parts.append(jnp.stack([
+            jnp.concatenate([k, pad], axis=2),
+            jnp.concatenate([v, pad], axis=2),
+        ]))
+
+    hidden = _ln(x, p.lnf)
+    logits = hidden @ p.wu
+    kv = jnp.stack(kv_parts)  # [L, 2, B, H, M, Dh]
+    return logits, hidden, kv
+
+
+def decode_step(cfg: ModelConfig, p: Params, kv, token, pos):
+    """One decode iteration for a batch of live traces.
+
+    Args:
+      kv:    [L, 2, B, H, M, Dh] cache (positions [0, pos) valid per seq).
+      token: [B] int32 the tokens sampled at the previous step.
+      pos:   [B] int32 the cache slot this token occupies.
+
+    Returns:
+      logits: [B, V]   next-token logits.
+      hidden: [B, D]   final-layer hidden state of this token (scorer input).
+      kv':    updated cache with position `pos` written in every layer.
+    """
+    L, H, Dh = cfg.n_layers, cfg.n_heads, cfg.head_dim
+    B = token.shape[0]
+    b_idx = jnp.arange(B)
+    x = p.embed[token] + p.pos_embed[pos]  # [B, D]
+    lens = pos + 1
+
+    for l in range(L):
+        h_in = _ln(x, p.ln1[l])
+        q = (h_in @ p.wq[l]).reshape(B, H, Dh)
+        k = (h_in @ p.wk[l]).reshape(B, H, Dh)
+        v = (h_in @ p.wv[l]).reshape(B, H, Dh)
+        kv = kv.at[l, 0, b_idx, :, pos, :].set(k)
+        kv = kv.at[l, 1, b_idx, :, pos, :].set(v)
+        # L1 Pallas kernel over the cached prefix (including this token).
+        o = decode_attention(q, kv[l, 0], kv[l, 1], lens)  # [B, H, Dh]
+        x = x + o.reshape(B, cfg.d_model) @ p.wo[l]
+        h_ff = _ln(x, p.ln2[l])
+        x = x + jnp.maximum(h_ff @ p.w1[l] + p.b1[l], 0.0) @ p.w2[l] + p.b2[l]
+
+    hidden = _ln(x, p.lnf)
+    logits = hidden @ p.wu
+    return logits, hidden, kv
+
+
+def scorer_graph(h, w1, b1, w2, b2):
+    """The step-scorer graph lowered for rust (L1 Pallas fused MLP)."""
+    return (scorer_mlp(h, w1, b1, w2, b2),)

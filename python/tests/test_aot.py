@@ -1,0 +1,89 @@
+"""AOT lowering path: HLO text validity, manifest integrity, param export."""
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+
+CFG = M.ModelConfig(vocab=64, d_model=32, n_layers=2, n_heads=2, d_ff=64,
+                    max_len=32)
+
+
+def test_scorer_hlo_text_parses_as_entry():
+    text = aot.lower_scorer(16, 4, hidden=32)
+    assert "ENTRY" in text
+    assert "HloModule" in text
+
+
+def _entry_param_count(text):
+    entry = text[text.index("ENTRY"):]
+    entry = entry[:entry.index("\n}")]
+    return entry.count("parameter(")
+
+
+def test_decode_hlo_text_small_model():
+    text = aot.lower_decode(CFG, 2)
+    assert "ENTRY" in text
+    # 14 params + kv + token + pos = 17 parameters in the entry computation.
+    assert _entry_param_count(text) == 17
+
+
+def test_prefill_hlo_text_small_model():
+    text = aot.lower_prefill(CFG, 1)
+    assert "ENTRY" in text
+    assert _entry_param_count(text) == 15
+
+
+def test_param_specs_match_init():
+    p = M.init_params(CFG)
+    specs = aot.param_specs(CFG)
+    assert len(specs) == len(p)
+    for (name, spec), arr in zip(specs, p):
+        assert tuple(spec.shape) == arr.shape, name
+        assert spec.dtype == arr.dtype, name
+
+
+def test_export_params_layout(tmp_path):
+    path = tmp_path / "params.bin"
+    entries = aot.export_params(CFG, str(path))
+    raw = np.fromfile(path, dtype="<f4")
+    total = sum(e["len"] for e in entries)
+    assert len(raw) == total
+    # Offsets are contiguous and ordered.
+    off = 0
+    for e in entries:
+        assert e["offset"] == off
+        off += e["len"]
+    # Spot-check the embed slab round-trips the init values.
+    p = M.init_params(CFG)
+    e0 = entries[0]
+    np.testing.assert_array_equal(
+        raw[e0["offset"]:e0["offset"] + e0["len"]],
+        np.asarray(p.embed, np.float32).flatten())
+
+
+def test_fingerprint_stable():
+    assert aot.input_fingerprint() == aot.input_fingerprint()
+    assert len(aot.input_fingerprint()) == 16
+
+
+@pytest.mark.skipif(not os.path.exists(
+    os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")),
+    reason="artifacts not built")
+def test_built_manifest_consistent():
+    root = os.path.join(os.path.dirname(__file__), "../../artifacts")
+    with open(os.path.join(root, "manifest.json")) as f:
+        man = json.load(f)
+    for name, g in man["graphs"].items():
+        path = os.path.join(root, g["file"])
+        assert os.path.exists(path), name
+        with open(path) as f:
+            head = f.read(4096)
+        assert "HloModule" in head, name
+    raw = np.fromfile(os.path.join(root, man["params_bin"]), dtype="<f4")
+    assert len(raw) == sum(e["len"] for e in man["params"])

@@ -1,0 +1,121 @@
+"""Deeper kernel properties beyond allclose-vs-ref: invariances the
+serving engine relies on (permutation equivariance across batch lanes,
+length monotonicity, scale behavior) plus failure-path checks."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+from compile.kernels.attention import decode_attention
+from compile.kernels.scorer import scorer_mlp
+
+SETTINGS = dict(max_examples=15, deadline=None)
+
+
+def rand(rng, *shape, scale=1.0):
+    return jnp.asarray(rng.standard_normal(shape) * scale, jnp.float32)
+
+
+@hypothesis.given(seed=st.integers(0, 2**31 - 1))
+@hypothesis.settings(**SETTINGS)
+def test_attention_batch_permutation_equivariance(seed):
+    """Shuffling lanes shuffles outputs identically — no cross-lane leak."""
+    rng = np.random.default_rng(seed)
+    b, h, m, dh = 4, 2, 64, 32
+    q = rand(rng, b, h, dh)
+    k = rand(rng, b, h, m, dh)
+    v = rand(rng, b, h, m, dh)
+    lens = jnp.asarray(rng.integers(1, m + 1, size=b), jnp.int32)
+    perm = rng.permutation(b)
+    out = np.asarray(decode_attention(q, k, v, lens, block_k=32))
+    out_p = np.asarray(
+        decode_attention(q[perm], k[perm], v[perm], lens[perm], block_k=32))
+    np.testing.assert_allclose(out[perm], out_p, rtol=1e-6, atol=1e-6)
+
+
+@hypothesis.given(seed=st.integers(0, 2**31 - 1))
+@hypothesis.settings(**SETTINGS)
+def test_attention_is_convex_combination(seed):
+    """Output lies in the convex hull of valid V rows: max|out| <=
+    max|v_valid| per (b, h, d) column."""
+    rng = np.random.default_rng(seed)
+    b, h, m, dh = 2, 2, 64, 16
+    q = rand(rng, b, h, dh, scale=3.0)
+    k = rand(rng, b, h, m, dh)
+    v = rand(rng, b, h, m, dh)
+    lens = jnp.asarray(rng.integers(1, m + 1, size=b), jnp.int32)
+    out = np.asarray(decode_attention(q, k, v, lens, block_k=32))
+    vv = np.asarray(v)
+    for bi in range(b):
+        valid = vv[bi, :, : int(lens[bi])]
+        lo = valid.min(axis=1) - 1e-5
+        hi = valid.max(axis=1) + 1e-5
+        assert (out[bi] >= lo).all() and (out[bi] <= hi).all()
+
+
+def test_attention_uniform_when_keys_equal():
+    """Identical keys => attention is the mean of valid values."""
+    rng = np.random.default_rng(0)
+    b, h, m, dh = 1, 1, 32, 8
+    q = rand(rng, b, h, dh)
+    k = jnp.broadcast_to(rand(rng, 1, 1, 1, dh), (b, h, m, dh))
+    v = rand(rng, b, h, m, dh)
+    lens = jnp.asarray([20], jnp.int32)
+    out = np.asarray(decode_attention(q, k, v, lens, block_k=32))[0, 0]
+    expect = np.asarray(v)[0, 0, :20].mean(axis=0)
+    np.testing.assert_allclose(out, expect, rtol=1e-5, atol=1e-5)
+
+
+@hypothesis.given(seed=st.integers(0, 2**31 - 1))
+@hypothesis.settings(**SETTINGS)
+def test_scorer_batch_permutation_equivariance(seed):
+    rng = np.random.default_rng(seed)
+    b, d, hm = 16, 32, 64
+    h = rand(rng, b, d)
+    w1 = rand(rng, d, hm, scale=0.2)
+    b1 = rand(rng, hm, scale=0.1)
+    w2 = rand(rng, hm, 1, scale=0.2)
+    b2 = rand(rng, 1)
+    perm = rng.permutation(b)
+    out = np.asarray(scorer_mlp(h, w1, b1, w2, b2, block_b=8))
+    out_p = np.asarray(scorer_mlp(h[perm], w1, b1, w2, b2, block_b=8))
+    np.testing.assert_allclose(out[perm], out_p, rtol=1e-6, atol=1e-7)
+
+
+def test_scorer_monotone_along_positive_direction():
+    """With non-negative weights, increasing h increases the score."""
+    d, hm = 8, 16
+    w1 = jnp.ones((d, hm), jnp.float32) * 0.1
+    b1 = jnp.zeros((hm,), jnp.float32)
+    w2 = jnp.ones((hm, 1), jnp.float32) * 0.1
+    b2 = jnp.zeros((1,), jnp.float32)
+    h_lo = jnp.zeros((1, d), jnp.float32)
+    h_hi = jnp.ones((1, d), jnp.float32)
+    s_lo = float(scorer_mlp(h_lo, w1, b1, w2, b2)[0])
+    s_hi = float(scorer_mlp(h_hi, w1, b1, w2, b2)[0])
+    assert s_hi > s_lo
+
+
+def test_scorer_rejects_ragged_batch():
+    rng = np.random.default_rng(1)
+    h = rand(rng, 12, 8)  # 12 not a multiple of block_b=8
+    w1 = rand(rng, 8, 16)
+    with pytest.raises(ValueError, match="block_b"):
+        scorer_mlp(h, w1, jnp.zeros(16), rand(rng, 16, 1), jnp.zeros(1),
+                   block_b=8)
+
+
+def test_ref_and_kernel_agree_on_single_position_cache():
+    """Minimum cache (M=block) — boundary condition of the tiling."""
+    rng = np.random.default_rng(2)
+    q = rand(rng, 1, 1, 16)
+    k = rand(rng, 1, 1, 32, 16)
+    v = rand(rng, 1, 1, 32, 16)
+    lens = jnp.asarray([32], jnp.int32)
+    out = decode_attention(q, k, v, lens, block_k=32)
+    exp = ref.decode_attention_ref(q, k, v, lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=1e-5, atol=1e-6)

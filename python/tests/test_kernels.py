@@ -1,0 +1,188 @@
+"""L1 Pallas kernels vs pure-jnp oracles — the core compile-path signal.
+
+Hypothesis sweeps shapes/dtypes per the repro brief; each kernel must match
+its ref to float tolerance for every generated configuration.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+from compile.kernels.attention import decode_attention
+from compile.kernels.scorer import scorer_mlp
+
+SETTINGS = dict(max_examples=25, deadline=None,
+                suppress_health_check=[hypothesis.HealthCheck.too_slow])
+
+
+def rand(rng, *shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(rng.standard_normal(shape) * scale, dtype)
+
+
+# ---------------------------------------------------------------- attention
+
+@hypothesis.given(
+    b=st.integers(1, 5),
+    h=st.integers(1, 4),
+    m_blocks=st.integers(1, 4),
+    dh=st.sampled_from([16, 32, 64]),
+    block_k=st.sampled_from([32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@hypothesis.settings(**SETTINGS)
+def test_decode_attention_matches_ref(b, h, m_blocks, dh, block_k, seed):
+    m = m_blocks * block_k
+    rng = np.random.default_rng(seed)
+    q = rand(rng, b, h, dh)
+    k = rand(rng, b, h, m, dh)
+    v = rand(rng, b, h, m, dh)
+    lens = jnp.asarray(rng.integers(1, m + 1, size=b), jnp.int32)
+    out = decode_attention(q, k, v, lens, block_k=block_k)
+    exp = ref.decode_attention_ref(q, k, v, lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 1e-5), (jnp.bfloat16, 2e-2)])
+def test_decode_attention_dtypes(dtype, tol):
+    rng = np.random.default_rng(0)
+    b, h, m, dh = 2, 4, 128, 64
+    q = rand(rng, b, h, dh, dtype=dtype)
+    k = rand(rng, b, h, m, dh, dtype=dtype)
+    v = rand(rng, b, h, m, dh, dtype=dtype)
+    lens = jnp.asarray([17, 128], jnp.int32)
+    out = decode_attention(q, k, v, lens, block_k=64)
+    exp = ref.decode_attention_ref(q, k, v, lens)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), rtol=tol, atol=tol)
+
+
+def test_decode_attention_len_one_is_value():
+    """With one valid position, attention must return v[:, :, 0] exactly."""
+    rng = np.random.default_rng(1)
+    b, h, m, dh = 3, 2, 64, 32
+    q = rand(rng, b, h, dh)
+    k = rand(rng, b, h, m, dh)
+    v = rand(rng, b, h, m, dh)
+    lens = jnp.ones((b,), jnp.int32)
+    out = decode_attention(q, k, v, lens, block_k=32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(v[:, :, 0, :]),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_decode_attention_ignores_padding_garbage():
+    """Positions >= lens must not influence the output at all."""
+    rng = np.random.default_rng(2)
+    b, h, m, dh = 2, 2, 128, 32
+    q = rand(rng, b, h, dh)
+    k = rand(rng, b, h, m, dh)
+    v = rand(rng, b, h, m, dh)
+    lens = jnp.asarray([40, 70], jnp.int32)
+    out1 = decode_attention(q, k, v, lens, block_k=64)
+    k2 = k.at[:, :, 90:, :].set(1e6)
+    v2 = v.at[:, :, 90:, :].set(-1e6)
+    out2 = decode_attention(q, k2, v2, lens, block_k=64)
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+
+
+def test_decode_attention_block_size_invariance():
+    """The online-softmax accumulation must be block-size independent."""
+    rng = np.random.default_rng(3)
+    b, h, m, dh = 2, 3, 256, 64
+    q = rand(rng, b, h, dh)
+    k = rand(rng, b, h, m, dh)
+    v = rand(rng, b, h, m, dh)
+    lens = jnp.asarray([100, 256], jnp.int32)
+    outs = [np.asarray(decode_attention(q, k, v, lens, block_k=bk))
+            for bk in (32, 64, 128, 256)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(outs[0], o, rtol=1e-5, atol=1e-6)
+
+
+def test_decode_attention_rejects_misaligned_cache():
+    rng = np.random.default_rng(4)
+    q = rand(rng, 1, 1, 16)
+    k = rand(rng, 1, 1, 100, 16)
+    v = rand(rng, 1, 1, 100, 16)
+    with pytest.raises(ValueError, match="block_k"):
+        decode_attention(q, k, v, jnp.asarray([5], jnp.int32), block_k=64)
+
+
+def test_decode_attention_numerically_extreme_logits():
+    """Large-magnitude K must not overflow the online softmax."""
+    rng = np.random.default_rng(5)
+    b, h, m, dh = 1, 1, 64, 32
+    q = rand(rng, b, h, dh, scale=30.0)
+    k = rand(rng, b, h, m, dh, scale=30.0)
+    v = rand(rng, b, h, m, dh)
+    lens = jnp.asarray([64], jnp.int32)
+    out = np.asarray(decode_attention(q, k, v, lens, block_k=32))
+    exp = np.asarray(ref.decode_attention_ref(q, k, v, lens))
+    assert np.isfinite(out).all()
+    np.testing.assert_allclose(out, exp, rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------------- scorer
+
+@hypothesis.given(
+    b_tiles=st.integers(1, 3),
+    block_b=st.sampled_from([8, 16, 64]),
+    d=st.sampled_from([16, 64, 256]),
+    hm=st.sampled_from([32, 512]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@hypothesis.settings(**SETTINGS)
+def test_scorer_mlp_matches_ref(b_tiles, block_b, d, hm, seed):
+    b = b_tiles * block_b
+    rng = np.random.default_rng(seed)
+    h = rand(rng, b, d)
+    w1 = rand(rng, d, hm, scale=d**-0.5)
+    b1 = rand(rng, hm, scale=0.1)
+    w2 = rand(rng, hm, 1, scale=hm**-0.5)
+    b2 = rand(rng, 1, scale=0.1)
+    out = scorer_mlp(h, w1, b1, w2, b2, block_b=block_b)
+    exp = ref.scorer_mlp_ref(h, w1, b1, w2, b2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_scorer_mlp_small_batch_single_tile():
+    """B < block_b must fall back to a single-tile launch."""
+    rng = np.random.default_rng(7)
+    h = rand(rng, 3, 64)
+    w1 = rand(rng, 64, 512, scale=0.1)
+    b1 = jnp.zeros((512,), jnp.float32)
+    w2 = rand(rng, 512, 1, scale=0.05)
+    b2 = jnp.zeros((1,), jnp.float32)
+    out = scorer_mlp(h, w1, b1, w2, b2, block_b=64)
+    exp = ref.scorer_mlp_ref(h, w1, b1, w2, b2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_scorer_mlp_outputs_are_probabilities():
+    rng = np.random.default_rng(8)
+    h = rand(rng, 64, 64, scale=10.0)
+    w1 = rand(rng, 64, 512)
+    b1 = rand(rng, 512)
+    w2 = rand(rng, 512, 1)
+    b2 = rand(rng, 1)
+    out = np.asarray(scorer_mlp(h, w1, b1, w2, b2))
+    assert ((out >= 0.0) & (out <= 1.0)).all()
+
+
+def test_scorer_mlp_bf16_hidden_states():
+    rng = np.random.default_rng(9)
+    h = rand(rng, 8, 64, dtype=jnp.bfloat16)
+    w1 = rand(rng, 64, 512, scale=0.1)
+    b1 = jnp.zeros((512,), jnp.float32)
+    w2 = rand(rng, 512, 1, scale=0.05)
+    b2 = jnp.zeros((1,), jnp.float32)
+    out = scorer_mlp(h, w1, b1, w2, b2)
+    exp = ref.scorer_mlp_ref(h, w1, b1, w2, b2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=2e-2, atol=2e-2)

@@ -1,0 +1,131 @@
+"""L2 model-graph correctness: prefill/decode agreement, masking, KV layout.
+
+The critical invariant for the serving engine: running tokens one at a time
+through `decode_step` must reproduce the logits/hiddens `prefill` assigns
+to the same positions — otherwise the rust engine's incremental decoding
+diverges from the model.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+CFG = M.ModelConfig(max_len=64)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, seed=0)
+
+
+def test_prefill_shapes(params):
+    toks = jnp.asarray(np.full((2, 8), 5), jnp.int32)
+    logits, hidden, kv = M.prefill(CFG, params, toks)
+    assert logits.shape == (2, 8, CFG.vocab)
+    assert hidden.shape == (2, 8, CFG.d_model)
+    assert kv.shape == (CFG.n_layers, 2, 2, CFG.n_heads, CFG.max_len,
+                        CFG.head_dim)
+
+
+def test_prefill_kv_zero_beyond_prompt(params):
+    toks = jnp.asarray(np.full((1, 8), 5), jnp.int32)
+    _, _, kv = M.prefill(CFG, params, toks)
+    assert np.all(np.asarray(kv)[:, :, :, :, 8:, :] == 0.0)
+
+
+def test_decode_matches_prefill(params):
+    """Token-by-token decode must equal prefill at every position."""
+    rng = np.random.default_rng(0)
+    seq = rng.integers(4, CFG.vocab, size=12).astype(np.int32)
+    seq[0] = M.ModelConfig.BOS
+    toks = jnp.asarray(seq[None, :])
+    logits_all, hidden_all, _ = M.prefill(CFG, params, toks)
+
+    # Prefill the first 4 tokens, then decode the rest one at a time.
+    p = 4
+    _, _, kv = M.prefill(CFG, params, toks[:, :p])
+    for i in range(p, len(seq)):
+        logits, hidden, kv = M.decode_step(
+            CFG, params, kv,
+            jnp.asarray([seq[i]], jnp.int32),
+            jnp.asarray([i], jnp.int32))
+        np.testing.assert_allclose(
+            np.asarray(logits[0]), np.asarray(logits_all[0, i]),
+            rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(
+            np.asarray(hidden[0]), np.asarray(hidden_all[0, i]),
+            rtol=2e-4, atol=2e-4)
+
+
+def test_prefill_pad_invariance(params):
+    """Right-padding a prompt must not change logits at real positions."""
+    rng = np.random.default_rng(1)
+    seq = rng.integers(4, CFG.vocab, size=6).astype(np.int32)
+    short = jnp.asarray(seq[None, :])
+    padded = jnp.asarray(
+        np.concatenate([seq, np.zeros(4, np.int32)])[None, :])
+    l1, h1, _ = M.prefill(CFG, params, short)
+    l2, h2, _ = M.prefill(CFG, params, padded)
+    np.testing.assert_allclose(np.asarray(l1[0]), np.asarray(l2[0, :6]),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_batch_consistency(params):
+    """Each batch lane must be independent (no cross-sequence leakage)."""
+    rng = np.random.default_rng(2)
+    a = rng.integers(4, CFG.vocab, size=8).astype(np.int32)
+    b = rng.integers(4, CFG.vocab, size=8).astype(np.int32)
+    la, _, _ = M.prefill(CFG, params, jnp.asarray(a[None, :]))
+    both = jnp.asarray(np.stack([a, b]))
+    lboth, _, _ = M.prefill(CFG, params, both)
+    np.testing.assert_allclose(np.asarray(la[0]), np.asarray(lboth[0]),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_decode_batch_consistency(params):
+    """Batched decode must equal per-sequence decode."""
+    rng = np.random.default_rng(3)
+    seqs = rng.integers(4, CFG.vocab, size=(2, 6)).astype(np.int32)
+    _, _, kv2 = M.prefill(CFG, params, jnp.asarray(seqs))
+    tok = jnp.asarray([7, 9], jnp.int32)
+    pos = jnp.asarray([6, 6], jnp.int32)
+    lb, hb, _ = M.decode_step(CFG, params, kv2, tok, pos)
+    for i in range(2):
+        _, _, kv1 = M.prefill(CFG, params, jnp.asarray(seqs[i:i + 1]))
+        l1, h1, _ = M.decode_step(CFG, params, kv1, tok[i:i + 1], pos[i:i + 1])
+        np.testing.assert_allclose(np.asarray(lb[i]), np.asarray(l1[0]),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_decode_writes_kv_at_pos(params):
+    toks = jnp.asarray(np.full((1, 4), 5), jnp.int32)
+    _, _, kv = M.prefill(CFG, params, toks)
+    _, _, kv2 = M.decode_step(CFG, params, kv,
+                              jnp.asarray([6], jnp.int32),
+                              jnp.asarray([4], jnp.int32))
+    kv2 = np.asarray(kv2)
+    assert np.any(kv2[:, :, :, :, 4, :] != 0.0)
+    assert np.all(kv2[:, :, :, :, 5:, :] == 0.0)
+
+
+def test_init_params_deterministic():
+    p1 = M.init_params(CFG, seed=42)
+    p2 = M.init_params(CFG, seed=42)
+    for a, b in zip(p1, p2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    p3 = M.init_params(CFG, seed=43)
+    assert not np.array_equal(np.asarray(p1.embed), np.asarray(p3.embed))
+
+
+def test_scorer_graph_tuple_output():
+    rng = np.random.default_rng(4)
+    h = jnp.asarray(rng.standard_normal((8, 64)), jnp.float32)
+    w1 = jnp.asarray(rng.standard_normal((64, 512)) * 0.1, jnp.float32)
+    b1 = jnp.zeros((512,), jnp.float32)
+    w2 = jnp.asarray(rng.standard_normal((512, 1)) * 0.1, jnp.float32)
+    b2 = jnp.zeros((1,), jnp.float32)
+    out = M.scorer_graph(h, w1, b1, w2, b2)
+    assert isinstance(out, tuple) and len(out) == 1
+    assert out[0].shape == (8,)

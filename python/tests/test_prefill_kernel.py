@@ -1,0 +1,116 @@
+"""Pallas prefill flash-attention kernel vs oracle (hypothesis sweeps)."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+from compile.kernels.prefill_attention import prefill_attention
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def rand(rng, *shape, dtype=jnp.float32):
+    return jnp.asarray(rng.standard_normal(shape), dtype)
+
+
+@hypothesis.given(
+    b=st.integers(1, 3),
+    h=st.integers(1, 3),
+    p_tiles=st.integers(1, 3),
+    dh=st.sampled_from([16, 32]),
+    bq=st.sampled_from([32, 64]),
+    bk=st.sampled_from([32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@hypothesis.settings(**SETTINGS)
+def test_prefill_matches_ref(b, h, p_tiles, dh, bq, bk, seed):
+    p = p_tiles * max(bq, bk)
+    rng = np.random.default_rng(seed)
+    q = rand(rng, b, h, p, dh)
+    k = rand(rng, b, h, p, dh)
+    v = rand(rng, b, h, p, dh)
+    lens = jnp.asarray(rng.integers(1, p + 1, size=b), jnp.int32)
+    out = prefill_attention(q, k, v, lens, block_q=bq, block_k=bk)
+    exp = ref.prefill_attention_ref(q, k, v, lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_prefill_first_position_is_value():
+    """Position 0 can only attend itself: output == v[:, :, 0]."""
+    rng = np.random.default_rng(0)
+    b, h, p, dh = 2, 2, 64, 16
+    q = rand(rng, b, h, p, dh)
+    k = rand(rng, b, h, p, dh)
+    v = rand(rng, b, h, p, dh)
+    lens = jnp.asarray([p, p], jnp.int32)
+    out = np.asarray(prefill_attention(q, k, v, lens))
+    np.testing.assert_allclose(out[:, :, 0], np.asarray(v)[:, :, 0],
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_prefill_causality():
+    """Changing future K/V must not affect earlier outputs."""
+    rng = np.random.default_rng(1)
+    b, h, p, dh = 1, 2, 128, 16
+    q = rand(rng, b, h, p, dh)
+    k = rand(rng, b, h, p, dh)
+    v = rand(rng, b, h, p, dh)
+    lens = jnp.asarray([p], jnp.int32)
+    out1 = np.asarray(prefill_attention(q, k, v, lens))
+    k2 = k.at[:, :, 64:, :].add(100.0)
+    v2 = v.at[:, :, 64:, :].add(-50.0)
+    out2 = np.asarray(prefill_attention(q, k2, v2, lens))
+    np.testing.assert_array_equal(out1[:, :, :64], out2[:, :, :64])
+    assert not np.allclose(out1[:, :, 64:], out2[:, :, 64:])
+
+
+def test_prefill_padding_does_not_leak_into_valid_rows():
+    """Garbage in padded K/V and q rows must not change valid outputs;
+    padded rows themselves stay finite (they attend the valid prefix)."""
+    rng = np.random.default_rng(2)
+    b, h, p, dh = 2, 1, 64, 16
+    q = rand(rng, b, h, p, dh)
+    k = rand(rng, b, h, p, dh)
+    v = rand(rng, b, h, p, dh)
+    lens = jnp.asarray([10, 64], jnp.int32)
+    out1 = np.asarray(prefill_attention(q, k, v, lens))
+    # Poison everything beyond the valid length of sequence 0.
+    k2 = k.at[0, :, 10:, :].set(1e5)
+    v2 = v.at[0, :, 10:, :].set(-1e5)
+    out2 = np.asarray(prefill_attention(q, k2, v2, lens))
+    np.testing.assert_array_equal(out1[0, :, :10], out2[0, :, :10])
+    np.testing.assert_array_equal(out1[1], out2[1])
+    assert np.isfinite(out1).all()
+
+
+def test_prefill_agrees_with_decode_kernel_last_row():
+    """The prefill kernel's last valid row equals decode attention over
+    the same prefix — the two L1 kernels must be mutually consistent."""
+    from compile.kernels.attention import decode_attention
+
+    rng = np.random.default_rng(3)
+    b, h, p, dh = 2, 2, 64, 32
+    q = rand(rng, b, h, p, dh)
+    k = rand(rng, b, h, p, dh)
+    v = rand(rng, b, h, p, dh)
+    lens = jnp.asarray([40, 64], jnp.int32)
+    pre = np.asarray(prefill_attention(q, k, v, lens))
+    for bi, ln in enumerate([40, 64]):
+        q_last = q[bi:bi + 1, :, ln - 1, :]
+        dec = np.asarray(decode_attention(
+            q_last, k[bi:bi + 1], v[bi:bi + 1],
+            jnp.asarray([ln], jnp.int32), block_k=32))
+        np.testing.assert_allclose(pre[bi, :, ln - 1], dec[0],
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_prefill_rejects_misaligned_tiles():
+    rng = np.random.default_rng(4)
+    q = rand(rng, 1, 1, 100, 16)
+    with pytest.raises(ValueError, match="tiles"):
+        prefill_attention(q, q, q, jnp.asarray([50], jnp.int32),
+                          block_q=64, block_k=64)

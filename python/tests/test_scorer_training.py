@@ -1,0 +1,105 @@
+"""Step-scorer training pipeline (paper §4.1 + Appendix A).
+
+Checks the synthetic-trace dataset construction (balance, label
+propagation, imbalance ratio), the Appendix-A training loop (weighted BCE
+converges to a discriminative scorer), and the export format consumed by
+the rust engine.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from compile import scorer as S
+
+GP = S.GenParams(d=16)  # small dim for fast tests
+
+
+def test_signal_direction_unit_norm():
+    u = S.signal_direction(64)
+    assert u.shape == (64,)
+    np.testing.assert_allclose(np.linalg.norm(u), 1.0, rtol=1e-6)
+    np.testing.assert_array_equal(u, S.signal_direction(64))  # deterministic
+
+
+def test_trace_hiddens_shapes_and_growth():
+    rng = np.random.default_rng(0)
+    u = S.signal_direction(GP.d)
+    w_q = np.zeros(GP.d, np.float32)
+    h = S.sample_trace_hiddens(GP, 1, rng, u, w_q, n_steps=50)
+    assert h.shape == (50, GP.d)
+    # The projection onto u must grow (in expectation) with step index for
+    # correct traces: compare mean projection of early vs late thirds over
+    # many traces.
+    early, late = [], []
+    for _ in range(200):
+        h = S.sample_trace_hiddens(GP, 1, rng, u, w_q, n_steps=45)
+        proj = h @ u
+        early.append(proj[:15].mean())
+        late.append(proj[-15:].mean())
+    assert np.mean(late) > np.mean(early) + 0.2
+
+
+def test_trace_hiddens_label_separation():
+    rng = np.random.default_rng(1)
+    u = S.signal_direction(GP.d)
+    w_q = np.zeros(GP.d, np.float32)
+    pos = np.mean([S.sample_trace_hiddens(GP, 1, rng, u, w_q, n_steps=40) @ u
+                   for _ in range(100)])
+    neg = np.mean([S.sample_trace_hiddens(GP, 0, rng, u, w_q, n_steps=40) @ u
+                   for _ in range(100)])
+    assert pos > 0.3 and neg < -0.3
+
+
+def test_dataset_balanced_at_trace_level():
+    X, y, tid = S.build_dataset(GP, n_traces_per_class=40, seed=0)
+    assert X.shape[1] == GP.d
+    assert len(X) == len(y) == len(tid)
+    # Trace-level balance.
+    labels_per_trace = {}
+    for t, lab in zip(tid, y):
+        labels_per_trace.setdefault(int(t), lab)
+    vals = np.array(list(labels_per_trace.values()))
+    assert (vals == 1).sum() == 40 and (vals == 0).sum() == 40
+    # Step-level imbalance: incorrect traces are longer => more neg steps.
+    assert (y == 0).sum() > (y == 1).sum()
+
+
+def test_dataset_label_propagation_constant_within_trace():
+    _, y, tid = S.build_dataset(GP, n_traces_per_class=10, seed=1)
+    for t in np.unique(tid):
+        assert len(np.unique(y[tid == t])) == 1
+
+
+def test_auc_helper():
+    y = np.array([1, 1, 0, 0], np.float32)
+    assert S._auc(y, np.array([0.9, 0.8, 0.2, 0.1])) == 1.0
+    assert S._auc(y, np.array([0.1, 0.2, 0.8, 0.9])) == 0.0
+    assert abs(S._auc(y, np.array([0.5, 0.1, 0.5, 0.1])) - 0.5) < 1e-9
+
+
+@pytest.mark.slow
+def test_training_learns_discriminative_scorer():
+    gp = S.GenParams(d=16)
+    weights, metrics = S.train_scorer(
+        gp, n_traces_per_class=150, max_epochs=8, seed=0)
+    assert metrics["val_auc"] > 0.75
+    assert metrics["alpha"] > 1.0  # more negative steps than positive
+    assert weights["w1"].shape == (16, 512)
+    assert weights["w2"].shape == (512, 1)
+
+
+def test_export_roundtrip(tmp_path):
+    gp = S.GenParams(d=8)
+    w = S.init_mlp(8, hidden=32)
+    path = tmp_path / "scorer.json"
+    S.export_scorer(str(path), gp, w, {"val_auc": 0.9})
+    blob = json.loads(path.read_text())
+    assert blob["d"] == 8
+    assert blob["hidden"] == 32
+    assert len(blob["w1"]) == 8 * 32
+    assert len(blob["signal_dir"]) == 8
+    assert blob["gen"]["s0"] == gp.s0
+    np.testing.assert_allclose(
+        np.array(blob["w1"]).reshape(8, 32), w["w1"], rtol=1e-6)

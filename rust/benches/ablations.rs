@@ -1,0 +1,16 @@
+//! cargo bench --bench ablations — design-choice ablations: pruning
+//! victim policy and score-aggregation rule (extends the paper's §4.2 /
+//! §4.3 design discussion with measurements).
+use step::harness::{ablations, HarnessOpts};
+
+fn main() {
+    let opts = HarnessOpts { max_questions: Some(15), n_traces: 64, seed: 0 };
+    let t0 = std::time::Instant::now();
+    let rows = ablations::run(&opts).expect("ablations (needs `make artifacts`)");
+    // The paper's choice must not be dominated: lowest-score accuracy >=
+    // random/youngest accuracy.
+    let get = |n: &str| rows.iter().find(|r| r.name.contains(n)).unwrap().acc;
+    assert!(get("lowest-score") + 1e-9 >= get("random") - 8.0);
+    assert!(get("lowest-score") + 1e-9 >= get("youngest") - 8.0);
+    println!("\n[bench] ablations done in {:.1}s", t0.elapsed().as_secs_f64());
+}

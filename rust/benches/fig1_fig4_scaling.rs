@@ -1,0 +1,11 @@
+//! cargo bench --bench fig1_fig4_scaling — regenerates Fig 1 (accuracy
+//! vs latency scatter) and Fig 4 (latency scaling, N in {1,16,32,64}).
+use step::harness::{fig1_fig4, HarnessOpts};
+
+fn main() {
+    let opts = HarnessOpts { max_questions: Some(12), n_traces: 64, seed: 0 };
+    let t0 = std::time::Instant::now();
+    fig1_fig4::run_fig1(&opts).expect("fig1 (needs `make artifacts`)");
+    fig1_fig4::run_fig4(&opts).expect("fig4");
+    println!("\n[bench] fig1+fig4 regenerated in {:.1}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,11 @@
+//! cargo bench --bench fig2_motivation — regenerates Fig 2: (a) score
+//! distributions at 25/50/75% of steps, (b) incorrect-longer token skew,
+//! (c) the SC waiting/decoding time split.
+use step::harness::{fig2, HarnessOpts};
+
+fn main() {
+    let opts = HarnessOpts { max_questions: Some(15), n_traces: 64, seed: 0 };
+    let t0 = std::time::Instant::now();
+    fig2::run(&opts).expect("fig2 (needs `make artifacts`)");
+    println!("\n[bench] fig2 regenerated in {:.1}s", t0.elapsed().as_secs_f64());
+}

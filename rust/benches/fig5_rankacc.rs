@@ -1,0 +1,21 @@
+//! cargo bench --bench fig5_rankacc — regenerates Fig 5: pairwise
+//! RankAcc of the hidden-state step scorer vs token confidence as a
+//! function of observed prefix fraction (256 traces/question).
+use step::harness::{fig5, HarnessOpts};
+
+fn main() {
+    let opts = HarnessOpts { max_questions: Some(10), n_traces: 64, seed: 0 };
+    let t0 = std::time::Instant::now();
+    let r = fig5::run(&opts).expect("fig5 (needs `make artifacts`)");
+    // Shape assertions (the paper's two claims).
+    let n = r.fractions.len();
+    assert!(r.scorer_rankacc[n - 1] > r.scorer_rankacc[0], "RankAcc must grow");
+    let dominated = r
+        .scorer_rankacc
+        .iter()
+        .zip(&r.confidence_rankacc)
+        .filter(|(s, c)| s > c)
+        .count();
+    assert!(dominated >= n - 1, "scorer must dominate confidence");
+    println!("\n[bench] fig5 regenerated in {:.1}s (claims hold)", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,21 @@
+//! cargo bench --bench fig67_dynamics — regenerates Fig 6/7 (trace-level
+//! prefix-mean score dynamics, correct vs incorrect, 1024-token bins).
+use step::harness::{fig67, overhead, HarnessOpts};
+
+fn main() {
+    let opts = HarnessOpts { max_questions: Some(8), n_traces: 64, seed: 0 };
+    let t0 = std::time::Instant::now();
+    let ds = fig67::run(&opts).expect("fig67 (needs `make artifacts`)");
+    for d in &ds {
+        let sep: Vec<f64> = d
+            .bins
+            .iter()
+            .filter(|(_, _, nc, ni)| *nc > 10 && *ni > 10)
+            .map(|(c, i, _, _)| c - i)
+            .collect();
+        let pos = sep.iter().filter(|&&x| x > 0.0).count();
+        assert!(pos * 10 >= sep.len() * 9, "{:?}: separation must hold", d.model);
+    }
+    overhead::run(); // Appendix D alongside
+    println!("\n[bench] fig67+overhead regenerated in {:.1}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,85 @@
+//! cargo bench --bench micro_hotpath — microbenchmarks of the serving
+//! hot paths (the §Perf targets in EXPERIMENTS.md):
+//!   * step-scorer MLP matvec (runs at every step boundary),
+//!   * KV block allocator ops (every decode iteration),
+//!   * scheduler memory-horizon + full DES question throughput,
+//!   * voting aggregation.
+
+use step::coordinator::method::Method;
+use step::coordinator::scorer::StepScorer;
+use step::coordinator::voting::{weighted_vote, Vote};
+use step::kvcache::KvCacheManager;
+use step::sim::des::{DesEngine, SimConfig};
+use step::sim::profiles::{BenchId, ModelId};
+use step::sim::tracegen::{GenParams, TraceGen};
+use step::util::bench::{black_box, Bench};
+use step::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::default();
+    let mut rng = Rng::new(0);
+
+    // ---- scorer matvec (d=64, hidden=512 — the trained architecture).
+    let (d, hidden) = (64usize, 512usize);
+    let w1: Vec<f32> = (0..d * hidden).map(|_| rng.normal() as f32 * 0.05).collect();
+    let b1 = vec![0.01f32; hidden];
+    let w2: Vec<f32> = (0..hidden).map(|_| rng.normal() as f32 * 0.05).collect();
+    let scorer = StepScorer::new(d, hidden, w1, b1, w2, 0.0).unwrap();
+    let h: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+    b.run_with_items("scorer/score_one(d=64,h=512)", 1.0, || scorer.score(black_box(&h)));
+
+    let batch: Vec<Vec<f32>> = (0..64)
+        .map(|_| (0..d).map(|_| rng.normal() as f32).collect())
+        .collect();
+    b.run_with_items("scorer/score_batch(64)", 64.0, || scorer.score_batch(black_box(&batch)));
+
+    // ---- paged KV allocator.
+    b.run_with_items("kvcache/alloc_free_seq(32k tokens)", 2000.0, || {
+        let mut m = KvCacheManager::new(4096, 16);
+        m.allocate_seq(1, 100);
+        for _ in 0..2000 {
+            m.append_tokens(1, 16);
+        }
+        m.free_seq(1)
+    });
+
+    b.run_with_items("kvcache/can_step_all(64 seqs)", 64.0, || {
+        let mut m = KvCacheManager::new(8192, 16);
+        for i in 0..64 {
+            m.allocate_seq(i, 1000 + i as usize);
+        }
+        let ids: Vec<u64> = (0..64).collect();
+        let ok = m.can_step_all(black_box(&ids));
+        for i in 0..64 {
+            m.free_seq(i);
+        }
+        ok
+    });
+
+    // ---- voting.
+    let votes: Vec<Vote> = (0..64)
+        .map(|i| Vote { answer: Some(i % 7), weight: 0.3 + 0.01 * i as f64 })
+        .collect();
+    b.run_with_items("voting/weighted_vote(64)", 64.0, || weighted_vote(black_box(&votes)));
+
+    // ---- full DES question (the experiment engine's unit of work).
+    let gp = GenParams::default_d64();
+    let gen = TraceGen::new(ModelId::DeepSeek8B, BenchId::Hmmt2425, gp.clone(), 1);
+    let mut proj = vec![0.0f32; gp.d * 2];
+    for i in 0..gp.d {
+        proj[i * 2] = gp.signal_dir[i];
+        proj[i * 2 + 1] = -gp.signal_dir[i];
+    }
+    let proj_scorer = StepScorer::new(gp.d, 2, proj, vec![0.0; 2], vec![1.0, -1.0], 0.0).unwrap();
+    for method in [Method::Sc, Method::Step] {
+        let cfg = SimConfig::new(ModelId::DeepSeek8B, BenchId::Hmmt2425, method, 64);
+        let engine = DesEngine::new(&cfg, &gen, &proj_scorer);
+        let mut qid = 0usize;
+        b.run(&format!("des/question(HMMT,N=64,{})", method.name()), || {
+            qid += 1;
+            engine.run_question(black_box(qid % 30))
+        });
+    }
+
+    println!("\n{} cases done.", b.results.len());
+}

@@ -1,0 +1,12 @@
+//! cargo bench --bench table1_main — regenerates Table 1 (main results:
+//! Acc/Tok/Lat for CoT/SC/Slim-SC/DeepConf/STEP x 3 models x 5 benches)
+//! at bench scale (12 questions/bench; run `step table1` for the
+//! paper-faithful counts) and prints paper-vs-measured rows.
+use step::harness::{table1, HarnessOpts};
+
+fn main() {
+    let opts = HarnessOpts { max_questions: Some(12), n_traces: 64, seed: 0 };
+    let t0 = std::time::Instant::now();
+    table1::run(&opts).expect("table1 (needs `make artifacts`)");
+    println!("\n[bench] table1 regenerated in {:.1}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,16 @@
+//! cargo bench --bench table3_breakdown — regenerates Table 3 (waiting
+//! vs decoding wall-clock, DeepSeek-8B / HMMT-25 / N=64) and asserts the
+//! paper's headline systems claims.
+use step::coordinator::method::Method;
+use step::harness::{table3, HarnessOpts};
+
+fn main() {
+    let opts = HarnessOpts { max_questions: Some(15), n_traces: 64, seed: 0 };
+    let t0 = std::time::Instant::now();
+    let rows = table3::run(&opts).expect("table3 (needs `make artifacts`)");
+    let get = |m: Method| rows.iter().find(|r| r.method == m).unwrap();
+    assert_eq!(get(Method::Step).wait_s, 0.0, "STEP must have zero wait");
+    assert!(get(Method::Sc).wait_s > get(Method::Sc).decode_s * 0.5,
+            "SC must wait substantially");
+    println!("\n[bench] table3 regenerated in {:.1}s (claims hold)", t0.elapsed().as_secs_f64());
+}

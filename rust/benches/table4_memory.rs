@@ -1,0 +1,14 @@
+//! cargo bench --bench table4_memory — regenerates Table 4 (STEP
+//! accuracy across gpu_memory_utilization 0.5..0.9) and asserts the
+//! stability claim.
+use step::harness::{table4, HarnessOpts};
+use step::util::stats::stddev;
+
+fn main() {
+    let opts = HarnessOpts { max_questions: Some(20), n_traces: 32, seed: 0 };
+    let t0 = std::time::Instant::now();
+    let rows = table4::run(&opts).expect("table4 (needs `make artifacts`)");
+    let accs: Vec<f64> = rows.iter().map(|r| r.1).collect();
+    assert!(stddev(&accs) < 8.0, "accuracy must be stable across budgets");
+    println!("\n[bench] table4 regenerated in {:.1}s (stability holds)", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,176 @@
+//! Configuration system: a JSON config file (`step.config.json` or
+//! `--config <path>`) layered under CLI flags, covering the serving
+//! engine, the simulator, and method hyper-parameters. JSON rather than
+//! TOML because the offline vendor set has neither serde nor toml — the
+//! in-tree `util::json` substrate is the parser (DESIGN.md §3).
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::method::{Method, MethodParams};
+use crate::model::SamplerConfig;
+use crate::util::json::Json;
+
+/// Root configuration (every field optional in the file; defaults match
+/// the paper's Appendix-B settings).
+#[derive(Debug, Clone)]
+pub struct StepConfig {
+    /// Trace budget N (paper main results: 64).
+    pub n_traces: usize,
+    /// vLLM-style gpu_memory_utilization (paper default 0.9).
+    pub mem_util: f64,
+    /// PagedAttention block size in tokens.
+    pub block_size: usize,
+    pub method: Method,
+    pub method_params: MethodParams,
+    pub sampler: SamplerConfig,
+    pub seed: u64,
+    /// Artifact directory override.
+    pub artifacts_dir: Option<String>,
+}
+
+impl Default for StepConfig {
+    fn default() -> Self {
+        StepConfig {
+            n_traces: 64,
+            mem_util: 0.9,
+            block_size: 16,
+            method: Method::Step,
+            method_params: MethodParams::default(),
+            sampler: SamplerConfig::default(),
+            seed: 0,
+            artifacts_dir: None,
+        }
+    }
+}
+
+impl StepConfig {
+    pub fn from_json(j: &Json) -> Result<StepConfig> {
+        let mut c = StepConfig::default();
+        let obj = j.as_obj().context("config root must be an object")?;
+        for key in obj.keys() {
+            match key.as_str() {
+                "n_traces" | "mem_util" | "block_size" | "method" | "seed"
+                | "artifacts_dir" | "method_params" | "sampler" => {}
+                other => bail!("unknown config key '{other}'"),
+            }
+        }
+        if let Some(v) = j.get("n_traces").as_usize() {
+            c.n_traces = v;
+        }
+        if let Some(v) = j.get("mem_util").as_f64() {
+            if !(0.0..=1.0).contains(&v) {
+                bail!("mem_util must be in [0, 1], got {v}");
+            }
+            c.mem_util = v;
+        }
+        if let Some(v) = j.get("block_size").as_usize() {
+            if v == 0 {
+                bail!("block_size must be positive");
+            }
+            c.block_size = v;
+        }
+        if let Some(name) = j.get("method").as_str() {
+            c.method = Method::parse(name)
+                .with_context(|| format!("unknown method '{name}'"))?;
+        }
+        if let Some(v) = j.get("seed").as_f64() {
+            c.seed = v as u64;
+        }
+        if let Some(v) = j.get("artifacts_dir").as_str() {
+            c.artifacts_dir = Some(v.to_string());
+        }
+        let mp = j.get("method_params");
+        if mp.as_obj().is_some() {
+            if let Some(v) = mp.get("slim_similarity_threshold").as_f64() {
+                c.method_params.slim_similarity_threshold = v;
+            }
+            if let Some(v) = mp.get("slim_check_interval_steps").as_usize() {
+                c.method_params.slim_check_interval_steps = v;
+            }
+            if let Some(v) = mp.get("deepconf_n_init").as_usize() {
+                c.method_params.deepconf_n_init = v;
+            }
+            if let Some(v) = mp.get("deepconf_keep_top").as_f64() {
+                c.method_params.deepconf_keep_top = v;
+            }
+            if let Some(v) = mp.get("deepconf_window").as_usize() {
+                c.method_params.deepconf_window = v;
+            }
+            if let Some(v) = mp.get("default_score").as_f64() {
+                c.method_params.default_score = v;
+            }
+        }
+        let sp = j.get("sampler");
+        if sp.as_obj().is_some() {
+            if let Some(v) = sp.get("temperature").as_f64() {
+                c.sampler.temperature = v;
+            }
+            if let Some(v) = sp.get("top_k").as_usize() {
+                c.sampler.top_k = v;
+            }
+            if let Some(v) = sp.get("top_p").as_f64() {
+                c.sampler.top_p = v;
+            }
+        }
+        Ok(c)
+    }
+
+    pub fn from_file(path: &Path) -> Result<StepConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path:?}"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("config: {e}"))?;
+        Self::from_json(&j)
+    }
+
+    /// Load `step.config.json` from the working directory if present.
+    pub fn load_default() -> Result<StepConfig> {
+        let p = Path::new("step.config.json");
+        if p.exists() {
+            Self::from_file(p)
+        } else {
+            Ok(StepConfig::default())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let c = StepConfig::default();
+        assert_eq!(c.n_traces, 64);
+        assert_eq!(c.mem_util, 0.9);
+        assert_eq!(c.method_params.deepconf_n_init, 16);
+        assert_eq!(c.method_params.slim_similarity_threshold, 0.95);
+    }
+
+    #[test]
+    fn parses_overrides() {
+        let j = Json::parse(
+            r#"{"n_traces": 32, "mem_util": 0.7, "method": "deepconf",
+                "method_params": {"deepconf_keep_top": 0.2},
+                "sampler": {"temperature": 0.8, "top_k": 50}}"#,
+        )
+        .unwrap();
+        let c = StepConfig::from_json(&j).unwrap();
+        assert_eq!(c.n_traces, 32);
+        assert_eq!(c.mem_util, 0.7);
+        assert_eq!(c.method, Method::DeepConf);
+        assert_eq!(c.method_params.deepconf_keep_top, 0.2);
+        assert_eq!(c.sampler.temperature, 0.8);
+        assert_eq!(c.sampler.top_k, 50);
+    }
+
+    #[test]
+    fn rejects_invalid() {
+        assert!(StepConfig::from_json(&Json::parse(r#"{"mem_util": 1.5}"#).unwrap()).is_err());
+        assert!(StepConfig::from_json(&Json::parse(r#"{"method": "bogus"}"#).unwrap()).is_err());
+        assert!(StepConfig::from_json(&Json::parse(r#"{"block_size": 0}"#).unwrap()).is_err());
+        assert!(StepConfig::from_json(&Json::parse(r#"{"typo_key": 1}"#).unwrap()).is_err());
+        assert!(StepConfig::from_json(&Json::parse("[1]").unwrap()).is_err());
+    }
+}

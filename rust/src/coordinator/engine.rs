@@ -1,0 +1,387 @@
+//! The e2e serving engine: the same STEP policy stack (step scoring,
+//! memory-triggered pruning, weighted voting) running over the *real*
+//! AOT-compiled tiny transformer via PJRT — no simulation anywhere on
+//! this path. Proves the three layers compose: rust coordinator (L3) ->
+//! jax-lowered decode graph (L2) -> Pallas decode-attention + scorer
+//! kernels (L1).
+//!
+//! One request = one prompt fanned out into N traces decoded as one
+//! static PJRT batch group (lane-per-trace). Finished/pruned lanes are
+//! masked (their outputs ignored, their cache slot frozen). The KV block
+//! budget is virtual — small enough to exercise the paper's §4.2 memory
+//! trigger at demo scale.
+
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::method::Method;
+use crate::coordinator::scorer::StepScorer;
+use crate::coordinator::trace::{TraceState, TraceStatus};
+use crate::coordinator::voting::{weighted_vote, Vote};
+use crate::kvcache::KvCacheManager;
+use crate::model::{sample, SamplerConfig, Tokenizer};
+use crate::runtime::{DecodeExec, PrefillExec, Runtime, ScorerExec};
+use crate::sim::verifier;
+use crate::util::rng::Rng;
+
+/// Engine configuration.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Traces per request (<= the largest compiled decode batch).
+    pub n_traces: usize,
+    pub method: Method,
+    pub max_new_tokens: usize,
+    /// Virtual KV budget in blocks (small => the memory trigger fires).
+    pub kv_blocks: usize,
+    pub block_size: usize,
+    pub sampler: SamplerConfig,
+    /// Logit biases applied before sampling (token id, bias). The e2e
+    /// demo model is random-init, so the serving-standard logit-bias
+    /// knob is what makes structural tokens (step boundary, EOS,
+    /// answer digits) reachable at realistic rates.
+    pub logit_bias: Vec<(i32, f32)>,
+    pub seed: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            n_traces: 8,
+            method: Method::Step,
+            max_new_tokens: 160,
+            kv_blocks: 80,
+            block_size: 16,
+            sampler: SamplerConfig::default(),
+            logit_bias: Self::default_bias(),
+            seed: 0,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Structural-token biases giving ~6%/token step boundaries (a step
+    /// every ~16 tokens), ~1%/token EOS (~100-token traces) and frequent
+    /// digits — the tiny-LM analogue of a reasoning model's token mix.
+    pub fn default_bias() -> Vec<(i32, f32)> {
+        use crate::model::tokenizer::{DIGIT_BASE, EOS, STEP};
+        let mut b = vec![(STEP, 4.0), (EOS, 2.3)];
+        for d in 0..10 {
+            b.push((DIGIT_BASE + d, 1.2));
+        }
+        b
+    }
+}
+
+/// Per-trace outcome of a served request.
+#[derive(Debug, Clone)]
+pub struct ServedTrace {
+    pub status: TraceStatus,
+    pub generated: usize,
+    pub steps_scored: usize,
+    pub final_score: f64,
+    pub answer: Option<String>,
+}
+
+/// Outcome of one served request.
+#[derive(Debug, Clone)]
+pub struct ServedRequest {
+    pub answer: Option<String>,
+    pub correct: Option<bool>,
+    pub latency_s: f64,
+    pub prefill_s: f64,
+    pub decode_s: f64,
+    pub scoring_s: f64,
+    pub generated_tokens: usize,
+    pub decode_iterations: usize,
+    pub pruned: usize,
+    pub traces: Vec<ServedTrace>,
+}
+
+impl ServedRequest {
+    pub fn tokens_per_second(&self) -> f64 {
+        self.generated_tokens as f64 / self.latency_s.max(1e-9)
+    }
+}
+
+/// The serving engine (owns the runtime + compiled graphs).
+pub struct ServeEngine {
+    pub cfg: ServeConfig,
+    rt_model: ModelHandles,
+    tokenizer: Tokenizer,
+    scorer_native: StepScorer,
+    max_len: usize,
+    prompt_len: usize,
+}
+
+struct ModelHandles {
+    params: Vec<xla::Literal>,
+    prefill: PrefillExec,
+    decode: DecodeExec,
+    scorer: ScorerExec,
+    group: usize,
+}
+
+impl ServeEngine {
+    /// Load artifacts and compile the graph variants for the group size.
+    pub fn new(mut rt: Runtime, cfg: ServeConfig) -> Result<ServeEngine> {
+        let m = rt.artifacts.manifest.model;
+        let group = *rt
+            .artifacts
+            .manifest
+            .decode_batches
+            .iter()
+            .filter(|&&b| b >= cfg.n_traces)
+            .min()
+            .with_context(|| {
+                format!("no decode graph variant fits n_traces={}", cfg.n_traces)
+            })?;
+        if !rt.artifacts.manifest.prefill_batches.contains(&group) {
+            bail!("no prefill graph for batch {group}");
+        }
+        let params = rt.param_literals()?;
+        let prefill = PrefillExec::load(&mut rt, group)?;
+        let decode = DecodeExec::load(&mut rt, group)?;
+        let scorer = ScorerExec::load(&mut rt, "e2e", 8)?;
+        let scorer_native =
+            StepScorer::from_json_file(&rt.artifacts.scorer_path("e2e")?)?;
+        Ok(ServeEngine {
+            cfg,
+            rt_model: ModelHandles { params, prefill, decode, scorer, group },
+            tokenizer: Tokenizer::new(m.vocab),
+            scorer_native,
+            max_len: m.max_len,
+            prompt_len: m.prompt_len,
+        })
+    }
+
+    pub fn tokenizer(&self) -> &Tokenizer {
+        &self.tokenizer
+    }
+
+    /// Serve one request: fan the prompt into N traces, decode with the
+    /// configured policy, vote.
+    pub fn serve(&self, prompt: &str, ground_truth: Option<&str>) -> Result<ServedRequest> {
+        let t_start = Instant::now();
+        let h = &self.rt_model;
+        let group = h.group;
+        let n = self.cfg.n_traces.min(group);
+        let mut rng = Rng::new(self.cfg.seed);
+
+        // ---- prefill (identical prompt in every lane).
+        let ids = self.tokenizer.encode(prompt);
+        if ids.len() > self.prompt_len {
+            bail!("prompt too long: {} > {}", ids.len(), self.prompt_len);
+        }
+        let mut flat = vec![tokenizerpad(); group * self.prompt_len];
+        for b in 0..group {
+            flat[b * self.prompt_len..b * self.prompt_len + ids.len()]
+                .copy_from_slice(&ids);
+        }
+        let lens = vec![ids.len(); group];
+        let t0 = Instant::now();
+        let (logits0, _hidden0, mut kv) = h.prefill.run(&h.params, &flat, &lens)?;
+        let prefill_s = t0.elapsed().as_secs_f64();
+
+        // ---- per-lane state.
+        let mut kvm = KvCacheManager::new(self.cfg.kv_blocks, self.cfg.block_size);
+        let mut traces: Vec<TraceState> =
+            (0..n).map(|i| TraceState::new(i as u64, 8)).collect();
+        let mut gen_tokens: Vec<Vec<i32>> = vec![Vec::new(); n];
+        for t in traces.iter() {
+            if !kvm.allocate_seq(t.id, ids.len()) {
+                bail!("kv budget too small for the prompt");
+            }
+        }
+
+        // First sampled token per lane (from prefill logits).
+        let bias = |logits: &[f32]| -> Vec<f32> {
+            let mut l = logits.to_vec();
+            for &(t, b) in &self.cfg.logit_bias {
+                if (t as usize) < l.len() {
+                    l[t as usize] += b;
+                }
+            }
+            l
+        };
+        let mut cur_tok = vec![tokenizerpad(); group];
+        let mut cur_pos = vec![(ids.len() - 1) as i32; group];
+        for (i, trace) in traces.iter().enumerate() {
+            let mut lane_rng = rng.fork(trace.id);
+            cur_tok[i] = sample(&bias(&logits0[i]), &self.cfg.sampler, &mut lane_rng) as i32;
+            cur_pos[i] = ids.len() as i32;
+        }
+
+        // ---- decode loop.
+        let mut decode_s = 0.0;
+        let mut scoring_s = 0.0;
+        let mut iterations = 0usize;
+        let mut pruned = 0usize;
+        let mut lane_rngs: Vec<Rng> = (0..n).map(|i| rng.fork(1000 + i as u64)).collect();
+
+        while traces.iter().any(|t| t.status == TraceStatus::Running) {
+            // Memory trigger (paper §4.2): if advancing the running lanes
+            // one token does not fit, prune the lowest-scored lane.
+            let running_ids: Vec<u64> = traces
+                .iter()
+                .filter(|t| t.status == TraceStatus::Running)
+                .map(|t| t.id)
+                .collect();
+            if !kvm.can_step_all(&running_ids) {
+                if self.cfg.method == Method::Step {
+                    let victim = traces
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, t)| t.status == TraceStatus::Running)
+                        .min_by(|a, b| {
+                            a.1.mean_score(0.5)
+                                .partial_cmp(&b.1.mean_score(0.5))
+                                .unwrap()
+                        })
+                        .map(|(i, _)| i)
+                        .unwrap();
+                    traces[victim].status = TraceStatus::Pruned;
+                    kvm.free_seq(victim as u64);
+                    pruned += 1;
+                    continue;
+                } else {
+                    // SC with a static group cannot preempt: stop lanes at
+                    // the budget (documented demo limitation).
+                    for t in traces.iter_mut() {
+                        if t.status == TraceStatus::Running {
+                            t.status = TraceStatus::Finished;
+                        }
+                    }
+                    break;
+                }
+            }
+
+            let t0 = Instant::now();
+            let (logits, hidden, kv2) =
+                h.decode.run(&h.params, &kv, &cur_tok, &cur_pos)?;
+            kv = kv2;
+            decode_s += t0.elapsed().as_secs_f64();
+            iterations += 1;
+
+            // Batched scoring of lanes that just emitted a step boundary.
+            let boundary_lanes: Vec<usize> = (0..n)
+                .filter(|&i| {
+                    traces[i].status == TraceStatus::Running
+                        && self.tokenizer.is_step(cur_tok[i])
+                })
+                .collect();
+            let scores = if boundary_lanes.is_empty() {
+                Vec::new()
+            } else {
+                let t0 = Instant::now();
+                let d = h.scorer.d;
+                let mut hbuf = vec![0.0f32; h.scorer.batch * d];
+                for (slot, &lane) in boundary_lanes.iter().enumerate() {
+                    hbuf[slot * d..(slot + 1) * d].copy_from_slice(&hidden[lane]);
+                }
+                let s = h.scorer.run(&hbuf)?;
+                scoring_s += t0.elapsed().as_secs_f64();
+                s
+            };
+            for (slot, &lane) in boundary_lanes.iter().enumerate() {
+                traces[lane].push_score(scores[slot] as f64);
+                // Cross-check the HLO scorer against the native MLP (the
+                // two must agree; debug builds verify).
+                debug_assert!(
+                    (scores[slot] - self.scorer_native.score(&hidden[lane])).abs()
+                        < 1e-3
+                );
+            }
+
+            // Advance lanes.
+            for i in 0..n {
+                if traces[i].status != TraceStatus::Running {
+                    continue;
+                }
+                let tok = cur_tok[i];
+                gen_tokens[i].push(tok);
+                traces[i].generated += 1;
+                let appended = kvm.append_tokens(traces[i].id, 1);
+                debug_assert!(appended);
+                let next_pos = cur_pos[i] + 1;
+                let done = self.tokenizer.is_eos(tok)
+                    || traces[i].generated as usize >= self.cfg.max_new_tokens
+                    || next_pos as usize >= self.max_len;
+                if done {
+                    traces[i].status = TraceStatus::Finished;
+                    kvm.free_seq(traces[i].id);
+                    continue;
+                }
+                cur_tok[i] = sample(&bias(&logits[i]), &self.cfg.sampler, &mut lane_rngs[i]) as i32;
+                cur_pos[i] = next_pos;
+            }
+        }
+
+        // ---- voting (score-weighted for STEP, majority otherwise).
+        let votes: Vec<Vote> = traces
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.status == TraceStatus::Finished)
+            .map(|(i, t)| {
+                let ans = self.tokenizer.extract_answer(&gen_tokens[i]);
+                Vote {
+                    answer: ans.as_deref().map(answer_key),
+                    weight: if self.cfg.method == Method::Step {
+                        t.mean_score(0.5)
+                    } else {
+                        1.0
+                    },
+                }
+            })
+            .collect();
+        let winner_key = weighted_vote(&votes);
+        let answer = traces.iter().enumerate().find_map(|(i, t)| {
+            if t.status != TraceStatus::Finished {
+                return None;
+            }
+            let a = self.tokenizer.extract_answer(&gen_tokens[i])?;
+            (Some(answer_key(&a)) == winner_key).then_some(a)
+        });
+        let correct = match (&answer, ground_truth) {
+            (Some(a), Some(gt)) => Some(verifier::verify(a, gt)),
+            _ => ground_truth.map(|_| false),
+        };
+
+        Ok(ServedRequest {
+            answer,
+            correct,
+            latency_s: t_start.elapsed().as_secs_f64(),
+            prefill_s,
+            decode_s,
+            scoring_s,
+            generated_tokens: traces.iter().map(|t| t.generated as usize).sum(),
+            decode_iterations: iterations,
+            pruned,
+            traces: traces
+                .iter()
+                .enumerate()
+                .map(|(i, t)| ServedTrace {
+                    status: t.status,
+                    generated: t.generated as usize,
+                    steps_scored: t.scored_steps(),
+                    final_score: t.mean_score(0.5),
+                    answer: self.tokenizer.extract_answer(&gen_tokens[i]),
+                })
+                .collect(),
+        })
+    }
+}
+
+fn tokenizerpad() -> i32 {
+    crate::model::tokenizer::PAD
+}
+
+/// Stable numeric key for an answer string (voting groups by value).
+fn answer_key(a: &str) -> u32 {
+    match verifier::parse_answer(a) {
+        Some(verifier::AnswerValue::Rational(p, q)) => {
+            (p.rem_euclid(65_521) as u32) << 16 | (q.rem_euclid(65_521) as u32) & 0xFFFF
+        }
+        None => u32::MAX,
+    }
+}

@@ -1,0 +1,114 @@
+//! Test-time-scaling method configurations: the paper's STEP plus the
+//! §5.1 baselines (CoT, SC, Slim-SC, DeepConf), each expressed as
+//! scheduler policy knobs consumed by the engines.
+
+/// Which parallel-scaling method drives the scheduler.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Method {
+    /// Single chain-of-thought trace (N = 1).
+    Cot,
+    /// Self-consistency: N traces, majority voting, vLLM preemption when
+    /// memory saturates (the paper's primary baseline).
+    Sc,
+    /// Slim-SC (Hong et al. 2025), Random-Pruning variant: periodically
+    /// prune one of each pair of similar traces.
+    SlimSc,
+    /// DeepConf-low (Fu et al. 2025): warmup traces set a confidence
+    /// threshold; online traces below it stop early.
+    DeepConf,
+    /// STEP (this paper): hidden-state step scorer + memory-triggered
+    /// pruning + score-weighted voting.
+    Step,
+}
+
+impl Method {
+    pub const ALL: [Method; 5] =
+        [Method::Cot, Method::Sc, Method::SlimSc, Method::DeepConf, Method::Step];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Cot => "CoT",
+            Method::Sc => "SC",
+            Method::SlimSc => "Slim-SC",
+            Method::DeepConf => "DeepConf",
+            Method::Step => "STEP",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Method> {
+        match s.to_ascii_lowercase().as_str() {
+            "cot" => Some(Method::Cot),
+            "sc" | "self-consistency" => Some(Method::Sc),
+            "slim-sc" | "slimsc" | "slim" => Some(Method::SlimSc),
+            "deepconf" | "deep-conf" => Some(Method::DeepConf),
+            "step" => Some(Method::Step),
+            _ => None,
+        }
+    }
+}
+
+/// Method hyper-parameters (paper §5.1 "Implementation Details" and
+/// Appendix B.3 defaults).
+#[derive(Debug, Clone)]
+pub struct MethodParams {
+    /// Slim-SC similarity threshold (paper: 0.95).
+    pub slim_similarity_threshold: f64,
+    /// Slim-SC check period, in reasoning steps ("thought level").
+    pub slim_check_interval_steps: usize,
+    /// DeepConf warmup trace count for N in {32, 64} (paper: 16; 8 for
+    /// N = 16).
+    pub deepconf_n_init: usize,
+    /// DeepConf-low keeps traces above the top-`keep_top` percentile
+    /// confidence of the warmup set (paper: 0.10).
+    pub deepconf_keep_top: f64,
+    /// Sliding window (in steps) of the online confidence estimate.
+    pub deepconf_window: usize,
+    /// Default score for a trace with no scored steps yet.
+    pub default_score: f64,
+}
+
+impl Default for MethodParams {
+    fn default() -> Self {
+        MethodParams {
+            slim_similarity_threshold: 0.95,
+            slim_check_interval_steps: 8,
+            deepconf_n_init: 16,
+            deepconf_keep_top: 0.10,
+            deepconf_window: 16,
+            default_score: 0.5,
+        }
+    }
+}
+
+impl MethodParams {
+    /// Appendix B.3: N_init = 8 when the trace budget is 16.
+    pub fn deepconf_warmup_for_budget(&self, n_traces: usize) -> usize {
+        if n_traces <= 16 {
+            8.min(n_traces.saturating_sub(1)).max(1)
+        } else {
+            self.deepconf_n_init.min(n_traces)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_all_names() {
+        for m in Method::ALL {
+            assert_eq!(Method::parse(m.name()), Some(m));
+        }
+        assert_eq!(Method::parse("unknown"), None);
+    }
+
+    #[test]
+    fn deepconf_warmup_scaling() {
+        let p = MethodParams::default();
+        assert_eq!(p.deepconf_warmup_for_budget(64), 16);
+        assert_eq!(p.deepconf_warmup_for_budget(32), 16);
+        assert_eq!(p.deepconf_warmup_for_budget(16), 8);
+        assert_eq!(p.deepconf_warmup_for_budget(2), 1);
+    }
+}

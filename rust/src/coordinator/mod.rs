@@ -1,0 +1,10 @@
+//! L3 coordination: the paper's contribution. Step scoring, trace state,
+//! pruning/method policies, and answer aggregation — shared between the
+//! discrete-event experiment engine (sim::des) and the PJRT-backed
+//! serving engine (coordinator::engine).
+
+pub mod engine;
+pub mod method;
+pub mod scorer;
+pub mod trace;
+pub mod voting;

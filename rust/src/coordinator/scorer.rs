@@ -1,0 +1,173 @@
+//! The step scorer (paper §4.1): a 2-layer MLP over step-boundary hidden
+//! states, trained at build time (python/compile/scorer.py, Appendix-A
+//! recipe) and executed here on the decode hot path.
+//!
+//! Two execution paths exist and are cross-validated in tests:
+//!   * [`StepScorer::score`] — native f32 matvec (the production hot
+//!     path; App. D bounds its cost at < 1e-6 of an LLM step).
+//!   * the AOT `scorer_d{D}_b{B}.hlo.txt` graphs via `runtime::` (used by
+//!     the e2e engine, where the hidden states already live on device).
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Native MLP: sigmoid(w2 . relu(W1 h + b1) + b2).
+#[derive(Debug, Clone)]
+pub struct StepScorer {
+    pub d: usize,
+    pub hidden: usize,
+    /// Row-major [d][hidden] — laid out so the inner loop walks
+    /// contiguous memory per input feature (h-stationary accumulation).
+    w1: Vec<f32>,
+    b1: Vec<f32>,
+    w2: Vec<f32>,
+    b2: f32,
+}
+
+impl StepScorer {
+    pub fn new(d: usize, hidden: usize, w1: Vec<f32>, b1: Vec<f32>, w2: Vec<f32>, b2: f32) -> Result<Self> {
+        if w1.len() != d * hidden || b1.len() != hidden || w2.len() != hidden {
+            bail!(
+                "scorer shape mismatch: d={d} hidden={hidden} w1={} b1={} w2={}",
+                w1.len(),
+                b1.len(),
+                w2.len()
+            );
+        }
+        Ok(StepScorer { d, hidden, w1, b1, w2, b2 })
+    }
+
+    /// Load from the JSON bundle `python/compile/scorer.py` exports.
+    pub fn from_json(blob: &Json) -> Result<Self> {
+        let d = blob.get("d").as_usize().context("scorer json: d")?;
+        let hidden = blob.get("hidden").as_usize().context("scorer json: hidden")?;
+        let w1 = blob.get("w1").as_f32_vec().context("scorer json: w1")?;
+        let b1 = blob.get("b1").as_f32_vec().context("scorer json: b1")?;
+        let w2 = blob.get("w2").as_f32_vec().context("scorer json: w2")?;
+        let b2 = blob.get("b2").as_f32_vec().context("scorer json: b2")?;
+        StepScorer::new(d, hidden, w1, b1, w2, *b2.first().context("b2 empty")?)
+    }
+
+    pub fn from_json_file(path: &std::path::Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading scorer bundle {path:?}"))?;
+        let blob = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        Self::from_json(&blob)
+    }
+
+    /// Score one hidden state -> correctness probability.
+    pub fn score(&self, h: &[f32]) -> f32 {
+        let mut z = vec![0.0f32; self.hidden];
+        self.score_into(h, &mut z)
+    }
+
+    /// Allocation-free scoring using caller scratch (`z.len() == hidden`)
+    /// — the DES hot path calls this ~1e4 times per simulated question.
+    pub fn score_into(&self, h: &[f32], z: &mut [f32]) -> f32 {
+        debug_assert_eq!(h.len(), self.d);
+        debug_assert_eq!(z.len(), self.hidden);
+        z.copy_from_slice(&self.b1);
+        // z += W1^T h, h-stationary: input features walk contiguous rows.
+        // Two-feature unroll keeps two independent FMA chains in flight.
+        let mut j = 0;
+        while j + 1 < self.d {
+            let hj0 = h[j];
+            let hj1 = h[j + 1];
+            let row0 = &self.w1[j * self.hidden..(j + 1) * self.hidden];
+            let row1 = &self.w1[(j + 1) * self.hidden..(j + 2) * self.hidden];
+            for ((zi, &w0), &w1) in z.iter_mut().zip(row0).zip(row1) {
+                *zi += hj0 * w0 + hj1 * w1;
+            }
+            j += 2;
+        }
+        if j < self.d {
+            let hj = h[j];
+            let row = &self.w1[j * self.hidden..(j + 1) * self.hidden];
+            for (zi, &wij) in z.iter_mut().zip(row) {
+                *zi += hj * wij;
+            }
+        }
+        let mut logit = self.b2;
+        for (zi, &w2i) in z.iter().zip(&self.w2) {
+            if *zi > 0.0 {
+                logit += *zi * w2i;
+            }
+        }
+        sigmoid(logit)
+    }
+
+    /// Batched scoring (the engine scores all boundary-crossing traces of
+    /// an iteration together).
+    pub fn score_batch(&self, hs: &[Vec<f32>]) -> Vec<f32> {
+        hs.iter().map(|h| self.score(h)).collect()
+    }
+}
+
+#[inline]
+pub fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> StepScorer {
+        // d=2, hidden=2: z = relu([h0+h1, h0-h1]), logit = z0 - 0.5 z1.
+        StepScorer::new(
+            2,
+            2,
+            vec![1.0, 1.0, 1.0, -1.0],
+            vec![0.0, 0.0],
+            vec![1.0, -0.5],
+            0.0,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn matches_hand_computation() {
+        let s = tiny();
+        // h = [1, 2]: z = relu([3, -1]) = [3, 0], logit = 3.
+        assert!((s.score(&[1.0, 2.0]) - sigmoid(3.0)).abs() < 1e-6);
+        // h = [2, 1]: z = [3, 1], logit = 3 - 0.5 = 2.5.
+        assert!((s.score(&[2.0, 1.0]) - sigmoid(2.5)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn shape_validation() {
+        assert!(StepScorer::new(2, 2, vec![0.0; 3], vec![0.0; 2], vec![0.0; 2], 0.0).is_err());
+        assert!(StepScorer::new(2, 2, vec![0.0; 4], vec![0.0; 1], vec![0.0; 2], 0.0).is_err());
+    }
+
+    #[test]
+    fn from_json_roundtrip() {
+        let blob = Json::parse(
+            r#"{"d": 2, "hidden": 2, "w1": [1,1,1,-1], "b1": [0,0],
+                "w2": [1,-0.5], "b2": [0]}"#,
+        )
+        .unwrap();
+        let s = StepScorer::from_json(&blob).unwrap();
+        assert!((s.score(&[1.0, 2.0]) - tiny().score(&[1.0, 2.0])).abs() < 1e-7);
+    }
+
+    #[test]
+    fn batch_matches_single() {
+        let s = tiny();
+        let hs = vec![vec![1.0, 2.0], vec![2.0, 1.0], vec![-1.0, -1.0]];
+        let batch = s.score_batch(&hs);
+        for (h, &b) in hs.iter().zip(&batch) {
+            assert_eq!(s.score(h), b);
+        }
+    }
+
+    #[test]
+    fn probability_range() {
+        let s = tiny();
+        for h in [[-100.0, 0.0], [100.0, 100.0], [0.0, 0.0]] {
+            let p = s.score(&h);
+            assert!((0.0..=1.0).contains(&p));
+        }
+    }
+}

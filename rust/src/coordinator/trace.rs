@@ -1,0 +1,219 @@
+//! Per-trace runtime state shared by the simulation and e2e engines:
+//! lifecycle, running-mean step scores (paper §4.3's score_t), DeepConf
+//! sliding-window confidence, and wait/decode time accounting (Fig. 2c /
+//! Table 3).
+
+/// Lifecycle of a reasoning trace inside the engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceStatus {
+    /// Decoding normally.
+    Running,
+    /// Preempted by the memory manager; KV freed, waiting to resume
+    /// (vLLM recompute-on-resume). Only the SC-family baselines enter
+    /// this state — STEP's trigger exists to make it unreachable.
+    Preempted,
+    /// Completed naturally (EOS / length).
+    Finished,
+    /// Removed by a pruning policy (STEP lowest-score / Slim-SC similar).
+    Pruned,
+    /// DeepConf early termination (confidence under threshold).
+    EarlyStopped,
+}
+
+impl TraceStatus {
+    pub fn is_active(&self) -> bool {
+        matches!(self, TraceStatus::Running | TraceStatus::Preempted)
+    }
+}
+
+/// Running-mean score accumulator + bookkeeping for one trace.
+#[derive(Debug, Clone)]
+pub struct TraceState {
+    pub id: u64,
+    pub status: TraceStatus,
+    /// Tokens generated so far (excludes prompt).
+    pub generated: u64,
+    /// Index of the next un-crossed step boundary.
+    pub next_step: usize,
+    /// Sum / count of step scores (paper: score_t = mean of step scores).
+    score_sum: f64,
+    score_cnt: usize,
+    /// Latest step score + exponential moving average (ablation
+    /// alternatives to the paper's running mean, §4.3).
+    last_score: f64,
+    ema_score: f64,
+    /// Accumulator of the current (non-overlapping) confidence group —
+    /// DeepConf's ~2k-token "group confidence" maps to one group per
+    /// `conf_window_cap` steps.
+    conf_group_sum: f64,
+    conf_group_cnt: usize,
+    conf_window_cap: usize,
+    /// Most recently completed group confidence.
+    last_group_conf: Option<f64>,
+    conf_sum_all: f64,
+    conf_cnt_all: usize,
+    /// Lowest completed group confidence (DeepConf's per-trace "lowest
+    /// group confidence" statistic).
+    min_window_conf: f64,
+    /// Seconds spent decoding (running) / waiting (preempted).
+    pub decode_time: f64,
+    pub wait_time: f64,
+    /// Engine clock when the trace left the active set.
+    pub finish_clock: f64,
+    /// Number of times this trace was preempted.
+    pub preemptions: usize,
+}
+
+impl TraceState {
+    pub fn new(id: u64, conf_window_cap: usize) -> TraceState {
+        TraceState {
+            id,
+            status: TraceStatus::Running,
+            generated: 0,
+            next_step: 0,
+            score_sum: 0.0,
+            score_cnt: 0,
+            last_score: f64::NAN,
+            ema_score: f64::NAN,
+            conf_group_sum: 0.0,
+            conf_group_cnt: 0,
+            conf_window_cap,
+            last_group_conf: None,
+            conf_sum_all: 0.0,
+            conf_cnt_all: 0,
+            min_window_conf: f64::INFINITY,
+            decode_time: 0.0,
+            wait_time: 0.0,
+            finish_clock: 0.0,
+            preemptions: 0,
+        }
+    }
+
+    /// Record a step score (paper §4.3 running average).
+    pub fn push_score(&mut self, s: f64) {
+        self.score_sum += s;
+        self.score_cnt += 1;
+        self.last_score = s;
+        self.ema_score = if self.ema_score.is_nan() {
+            s
+        } else {
+            0.85 * self.ema_score + 0.15 * s
+        };
+    }
+
+    /// Latest step score (ablation: no averaging).
+    pub fn last_score(&self, default: f64) -> f64 {
+        if self.last_score.is_nan() { default } else { self.last_score }
+    }
+
+    /// EMA of step scores (ablation: recency-weighted averaging).
+    pub fn ema_score(&self, default: f64) -> f64 {
+        if self.ema_score.is_nan() { default } else { self.ema_score }
+    }
+
+    /// score_t: running mean; `default` before any boundary was scored.
+    pub fn mean_score(&self, default: f64) -> f64 {
+        if self.score_cnt == 0 {
+            default
+        } else {
+            self.score_sum / self.score_cnt as f64
+        }
+    }
+
+    pub fn scored_steps(&self) -> usize {
+        self.score_cnt
+    }
+
+    /// Record a step confidence. Returns the group confidence when this
+    /// step completes a (non-overlapping) group — the moment DeepConf's
+    /// online check fires.
+    pub fn push_confidence(&mut self, c: f64) -> Option<f64> {
+        self.conf_sum_all += c;
+        self.conf_cnt_all += 1;
+        self.conf_group_sum += c;
+        self.conf_group_cnt += 1;
+        if self.conf_group_cnt == self.conf_window_cap {
+            let w = self.conf_group_sum / self.conf_window_cap as f64;
+            self.conf_group_sum = 0.0;
+            self.conf_group_cnt = 0;
+            self.last_group_conf = Some(w);
+            if w < self.min_window_conf {
+                self.min_window_conf = w;
+            }
+            Some(w)
+        } else {
+            None
+        }
+    }
+
+    /// Lowest completed group confidence; None until one group completed.
+    pub fn min_window_confidence(&self) -> Option<f64> {
+        self.min_window_conf.is_finite().then_some(self.min_window_conf)
+    }
+
+    /// Most recently completed group confidence.
+    pub fn window_confidence(&self) -> Option<f64> {
+        self.last_group_conf
+    }
+
+    /// Whole-trace mean confidence (DeepConf's voting weight).
+    pub fn mean_confidence(&self, default: f64) -> f64 {
+        if self.conf_cnt_all == 0 {
+            default
+        } else {
+            self.conf_sum_all / self.conf_cnt_all as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn score_running_mean() {
+        let mut t = TraceState::new(1, 4);
+        assert_eq!(t.mean_score(0.5), 0.5);
+        t.push_score(1.0);
+        t.push_score(0.0);
+        assert_eq!(t.mean_score(0.5), 0.5);
+        t.push_score(1.0);
+        assert!((t.mean_score(0.5) - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(t.scored_steps(), 3);
+    }
+
+    #[test]
+    fn score_aggregation_variants() {
+        let mut t = TraceState::new(1, 4);
+        assert_eq!(t.last_score(0.5), 0.5);
+        assert_eq!(t.ema_score(0.5), 0.5);
+        t.push_score(1.0);
+        assert_eq!(t.last_score(0.5), 1.0);
+        assert_eq!(t.ema_score(0.5), 1.0);
+        t.push_score(0.0);
+        assert_eq!(t.last_score(0.5), 0.0);
+        assert!((t.ema_score(0.5) - 0.85).abs() < 1e-12);
+    }
+
+    #[test]
+    fn confidence_groups_non_overlapping() {
+        let mut t = TraceState::new(1, 2);
+        assert_eq!(t.window_confidence(), None);
+        assert_eq!(t.push_confidence(0.2), None);
+        assert_eq!(t.push_confidence(0.4), Some(0.30000000000000004));
+        assert_eq!(t.push_confidence(0.8), None); // starts a new group
+        assert!((t.window_confidence().unwrap() - 0.3).abs() < 1e-9);
+        assert_eq!(t.push_confidence(0.6), Some(0.7));
+        assert!((t.min_window_confidence().unwrap() - 0.3).abs() < 1e-9);
+        assert!((t.mean_confidence(0.0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn status_activity() {
+        assert!(TraceStatus::Running.is_active());
+        assert!(TraceStatus::Preempted.is_active());
+        assert!(!TraceStatus::Finished.is_active());
+        assert!(!TraceStatus::Pruned.is_active());
+        assert!(!TraceStatus::EarlyStopped.is_active());
+    }
+}

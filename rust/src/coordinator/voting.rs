@@ -1,0 +1,87 @@
+//! Answer aggregation (paper §4.3 + Table 2): majority voting,
+//! score-weighted voting (STEP), and generic weight-carrying voting used
+//! for the PRM / confidence-weighted baselines.
+
+use std::collections::HashMap;
+
+/// One vote: a trace's final answer and its aggregation weight.
+#[derive(Debug, Clone, Copy)]
+pub struct Vote {
+    /// None = trace produced no parseable answer (truncated / early
+    /// stopped) — abstains.
+    pub answer: Option<u32>,
+    pub weight: f64,
+}
+
+/// Weighted majority vote; ties broken toward the answer with the most
+/// raw votes, then the smallest answer id (deterministic).
+pub fn weighted_vote(votes: &[Vote]) -> Option<u32> {
+    let mut weights: HashMap<u32, (f64, usize)> = HashMap::new();
+    for v in votes {
+        if let Some(a) = v.answer {
+            let e = weights.entry(a).or_insert((0.0, 0));
+            e.0 += v.weight.max(0.0);
+            e.1 += 1;
+        }
+    }
+    weights
+        .into_iter()
+        .max_by(|(a1, (w1, c1)), (a2, (w2, c2))| {
+            w1.partial_cmp(w2)
+                .unwrap()
+                .then(c1.cmp(c2))
+                .then(a2.cmp(a1)) // prefer smaller id on full tie
+        })
+        .map(|(a, _)| a)
+}
+
+/// Unweighted majority (self-consistency).
+pub fn majority_vote(answers: &[Option<u32>]) -> Option<u32> {
+    let votes: Vec<Vote> =
+        answers.iter().map(|&answer| Vote { answer, weight: 1.0 }).collect();
+    weighted_vote(&votes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(answer: u32, weight: f64) -> Vote {
+        Vote { answer: Some(answer), weight }
+    }
+
+    #[test]
+    fn majority_basic() {
+        assert_eq!(majority_vote(&[Some(1), Some(2), Some(1)]), Some(1));
+        assert_eq!(majority_vote(&[None, None]), None);
+        assert_eq!(majority_vote(&[]), None);
+    }
+
+    #[test]
+    fn weights_override_counts() {
+        // Two low-weight votes for 1 vs one high-weight vote for 2.
+        let votes = [v(1, 0.2), v(1, 0.2), v(2, 0.9)];
+        assert_eq!(weighted_vote(&votes), Some(2));
+    }
+
+    #[test]
+    fn abstentions_ignored() {
+        let votes = [Vote { answer: None, weight: 5.0 }, v(3, 0.1)];
+        assert_eq!(weighted_vote(&votes), Some(3));
+    }
+
+    #[test]
+    fn tie_breaks_deterministic() {
+        let votes = [v(2, 1.0), v(1, 1.0)];
+        assert_eq!(weighted_vote(&votes), Some(1));
+        // Equal weight, more raw votes wins.
+        let votes = [v(2, 0.5), v(2, 0.5), v(1, 1.0)];
+        assert_eq!(weighted_vote(&votes), Some(2));
+    }
+
+    #[test]
+    fn negative_weights_clamped() {
+        let votes = [v(1, -3.0), v(2, 0.1)];
+        assert_eq!(weighted_vote(&votes), Some(2));
+    }
+}

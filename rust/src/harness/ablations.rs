@@ -1,0 +1,99 @@
+//! Design-choice ablations (DESIGN.md §6 extension; quantifies §4.2's
+//! "the greedy strategy is simple ... while leading to strong empirical
+//! improvements" and §4.3's "average score rather than the latest step
+//! score"):
+//!
+//!   A. pruning-victim policy: lowest-score (paper) vs random vs
+//!      youngest vs an incorrect-trace oracle (upper bound);
+//!   B. score aggregation: running mean (paper) vs latest-step vs EMA.
+
+use anyhow::Result;
+
+use super::HarnessOpts;
+use crate::coordinator::method::Method;
+use crate::coordinator::scorer::StepScorer;
+use crate::sim::des::{DesEngine, ScoreAgg, SimConfig, VictimPolicy};
+use crate::sim::profiles::{BenchId, ModelId};
+use crate::sim::tracegen::{GenParams, TraceGen};
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct AblationRow {
+    pub name: String,
+    pub acc: f64,
+    pub tok_k: f64,
+    pub lat_s: f64,
+}
+
+fn run_variant(
+    gen_params: &GenParams,
+    scorer: &StepScorer,
+    opts: &HarnessOpts,
+    victim: VictimPolicy,
+    agg: ScoreAgg,
+) -> (f64, f64, f64) {
+    let mut cfg = SimConfig::new(ModelId::DeepSeek8B, BenchId::Hmmt2425, Method::Step, opts.n_traces);
+    cfg.seed = opts.seed;
+    cfg.victim = victim;
+    cfg.score_agg = agg;
+    let gen = TraceGen::new(cfg.model, cfg.bench, gen_params.clone(), opts.seed ^ 0x5EED);
+    let engine = DesEngine::new(&cfg, &gen, scorer);
+    let n_questions = opts.max_questions.unwrap_or(30).min(60);
+    let (mut acc, mut tok, mut lat) = (0.0, 0.0, 0.0);
+    for qid in 0..n_questions {
+        let r = engine.run_question(qid);
+        acc += r.correct as usize as f64;
+        tok += r.gen_tokens as f64;
+        lat += r.latency_s;
+    }
+    let nq = n_questions as f64;
+    (100.0 * acc / nq, tok / nq / 1000.0, lat / nq)
+}
+
+pub fn run(opts: &HarnessOpts) -> Result<Vec<AblationRow>> {
+    let (gen_params, scorer) = super::load_sim_bundle(&super::artifact_dir())?;
+    let mut rows = Vec::new();
+
+    println!("## Ablation A: pruning-victim policy (DeepSeek-8B, HMMT-25, N={})", opts.n_traces);
+    println!("{:<28} | {:>6} {:>9} {:>8}", "victim", "acc%", "tokens(k)", "lat(s)");
+    for (name, v) in [
+        ("lowest-score (paper)", VictimPolicy::LowestScore),
+        ("random", VictimPolicy::Random),
+        ("youngest", VictimPolicy::Youngest),
+        ("oracle-incorrect (bound)", VictimPolicy::OracleIncorrect),
+    ] {
+        let (acc, tok, lat) = run_variant(&gen_params, &scorer, opts, v, ScoreAgg::Mean);
+        println!("{:<28} | {:>6.1} {:>9.1} {:>8.0}", name, acc, tok, lat);
+        rows.push(AblationRow { name: format!("victim/{name}"), acc, tok_k: tok, lat_s: lat });
+    }
+
+    println!("\n## Ablation B: score aggregation (same setting)");
+    println!("{:<28} | {:>6} {:>9} {:>8}", "aggregation", "acc%", "tokens(k)", "lat(s)");
+    for (name, a) in [
+        ("running mean (paper)", ScoreAgg::Mean),
+        ("latest step only", ScoreAgg::Last),
+        ("EMA (alpha=0.15)", ScoreAgg::Ema),
+    ] {
+        let (acc, tok, lat) =
+            run_variant(&gen_params, &scorer, opts, VictimPolicy::LowestScore, a);
+        println!("{:<28} | {:>6.1} {:>9.1} {:>8.0}", name, acc, tok, lat);
+        rows.push(AblationRow { name: format!("agg/{name}"), acc, tok_k: tok, lat_s: lat });
+    }
+    println!("(expected: lowest-score ~= oracle >= random/youngest on accuracy;");
+    println!(" mean >= EMA > last — averaging damps single-step variance, §4.3)");
+
+    let json = Json::Arr(
+        rows.iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("name", Json::Str(r.name.clone())),
+                    ("acc", Json::Num(r.acc)),
+                    ("tok_k", Json::Num(r.tok_k)),
+                    ("lat_s", Json::Num(r.lat_s)),
+                ])
+            })
+            .collect(),
+    );
+    super::write_results("ablations", &json)?;
+    Ok(rows)
+}

@@ -1,0 +1,237 @@
+//! The shared cell runner: one (model, benchmark, method) cell of the
+//! evaluation grid = many simulated questions aggregated into the
+//! accuracy / tokens / latency / wait / decode metrics the tables report.
+
+use crate::coordinator::method::Method;
+use crate::coordinator::scorer::StepScorer;
+use crate::sim::des::{DesEngine, QuestionResult, SimConfig};
+use crate::sim::profiles::{BenchId, BenchProfile, ModelId};
+use crate::sim::tracegen::{GenParams, TraceGen};
+use crate::util::json::Json;
+
+/// Aggregated metrics of one cell.
+#[derive(Debug, Clone)]
+pub struct CellResult {
+    pub model: ModelId,
+    pub bench: BenchId,
+    pub method: Method,
+    pub n_traces: usize,
+    pub n_questions: usize,
+    /// Accuracy in percent.
+    pub acc: f64,
+    /// Mean generated tokens per question, thousands (Table 1 Tok.).
+    pub tok_k: f64,
+    /// Mean end-to-end latency per question, seconds (Table 1 Lat.).
+    pub lat_s: f64,
+    /// Mean per-trace wait / decode seconds (Fig 2c's per-trace view).
+    pub wait_s: f64,
+    pub decode_s: f64,
+    /// Engine-timeline wait / decode (Table 3's view).
+    pub engine_wait_s: f64,
+    pub engine_decode_s: f64,
+    /// DeepConf stage split, averaged: (warmup lat, prune lat).
+    pub stage_lat: Option<(f64, f64)>,
+    pub stage_wait_decode: Option<((f64, f64), (f64, f64))>,
+    pub n_preemptions: f64,
+    pub n_pruned: f64,
+}
+
+impl CellResult {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::Str(format!("{:?}", self.model))),
+            ("bench", Json::Str(self.bench.name().to_string())),
+            ("method", Json::Str(self.method.name().to_string())),
+            ("n_traces", Json::Num(self.n_traces as f64)),
+            ("n_questions", Json::Num(self.n_questions as f64)),
+            ("acc", Json::Num(self.acc)),
+            ("tok_k", Json::Num(self.tok_k)),
+            ("lat_s", Json::Num(self.lat_s)),
+            ("wait_s", Json::Num(self.wait_s)),
+            ("decode_s", Json::Num(self.decode_s)),
+            ("engine_wait_s", Json::Num(self.engine_wait_s)),
+            ("engine_decode_s", Json::Num(self.engine_decode_s)),
+            ("preemptions", Json::Num(self.n_preemptions)),
+            ("pruned", Json::Num(self.n_pruned)),
+        ])
+    }
+}
+
+/// Configuration for one cell run.
+#[derive(Debug, Clone)]
+pub struct CellOpts {
+    pub n_traces: usize,
+    pub max_questions: Option<usize>,
+    pub mem_util: f64,
+    pub seed: u64,
+    pub score_all: bool,
+    pub record_dynamics: bool,
+}
+
+impl Default for CellOpts {
+    fn default() -> Self {
+        CellOpts {
+            n_traces: 64,
+            max_questions: None,
+            mem_util: 0.9,
+            seed: 0,
+            score_all: false,
+            record_dynamics: false,
+        }
+    }
+}
+
+/// Run one cell; `per_question` (if given) receives every QuestionResult
+/// (used by the figure harnesses that need raw trajectories).
+pub fn run_cell_with(
+    model: ModelId,
+    bench: BenchId,
+    method: Method,
+    gen_params: &GenParams,
+    scorer: &StepScorer,
+    opts: &CellOpts,
+    mut per_question: Option<&mut dyn FnMut(&QuestionResult)>,
+) -> CellResult {
+    let bp = BenchProfile::get(bench);
+    let n_questions = opts
+        .max_questions
+        .map(|m| m.min(bp.n_questions))
+        .unwrap_or(bp.n_questions);
+
+    let mut cfg = SimConfig::new(model, bench, method, opts.n_traces);
+    cfg.mem_util = opts.mem_util;
+    cfg.seed = opts.seed;
+    cfg.score_all = opts.score_all;
+    cfg.record_dynamics = opts.record_dynamics;
+
+    let gen = TraceGen::new(model, bench, gen_params.clone(), opts.seed ^ 0x5EED);
+    let engine = DesEngine::new(&cfg, &gen, scorer);
+
+    let mut correct = 0usize;
+    let mut tok = 0.0;
+    let mut lat = 0.0;
+    let mut wait = 0.0;
+    let mut decode = 0.0;
+    let mut ewait = 0.0;
+    let mut edecode = 0.0;
+    let mut preempt = 0.0;
+    let mut pruned = 0.0;
+    let mut stage_lat_acc = (0.0, 0.0);
+    let mut stage_wd_acc = ((0.0, 0.0), (0.0, 0.0));
+    let mut stage_count = 0usize;
+
+    for qid in 0..n_questions {
+        let r = engine.run_question(qid);
+        correct += r.correct as usize;
+        tok += r.gen_tokens as f64;
+        lat += r.latency_s;
+        wait += r.mean_wait_s;
+        decode += r.mean_decode_s;
+        ewait += r.engine_wait_s;
+        edecode += r.engine_decode_s;
+        preempt += r.n_preemptions as f64;
+        pruned += r.n_pruned as f64;
+        if let Some((w, p)) = r.stage_latency {
+            stage_lat_acc.0 += w;
+            stage_lat_acc.1 += p;
+            stage_count += 1;
+        }
+        if let Some(((ww, wd), (pw, pd))) = r.stage_wait_decode {
+            stage_wd_acc.0 .0 += ww;
+            stage_wd_acc.0 .1 += wd;
+            stage_wd_acc.1 .0 += pw;
+            stage_wd_acc.1 .1 += pd;
+        }
+        if let Some(cb) = per_question.as_deref_mut() {
+            cb(&r);
+        }
+    }
+
+    let nq = n_questions as f64;
+    CellResult {
+        model,
+        bench,
+        method,
+        n_traces: opts.n_traces,
+        n_questions,
+        acc: 100.0 * correct as f64 / nq,
+        tok_k: tok / nq / 1000.0,
+        lat_s: lat / nq,
+        wait_s: wait / nq,
+        decode_s: decode / nq,
+        engine_wait_s: ewait / nq,
+        engine_decode_s: edecode / nq,
+        stage_lat: (stage_count > 0).then(|| {
+            (stage_lat_acc.0 / stage_count as f64, stage_lat_acc.1 / stage_count as f64)
+        }),
+        stage_wait_decode: (stage_count > 0).then(|| {
+            let c = stage_count as f64;
+            (
+                (stage_wd_acc.0 .0 / c, stage_wd_acc.0 .1 / c),
+                (stage_wd_acc.1 .0 / c, stage_wd_acc.1 .1 / c),
+            )
+        }),
+        n_preemptions: preempt / nq,
+        n_pruned: pruned / nq,
+    }
+}
+
+/// Convenience wrapper without the per-question callback.
+pub fn run_cell(
+    model: ModelId,
+    bench: BenchId,
+    method: Method,
+    gen_params: &GenParams,
+    scorer: &StepScorer,
+    opts: &CellOpts,
+) -> CellResult {
+    run_cell_with(model, bench, method, gen_params, scorer, opts, None)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scorer_for(gp: &GenParams) -> StepScorer {
+        // Projection scorer onto the signal direction (tests run without
+        // artifacts; real runs load the trained MLP).
+        let d = gp.d;
+        let mut w1 = vec![0.0f32; d * 2];
+        for i in 0..d {
+            w1[i * 2] = gp.signal_dir[i];
+            w1[i * 2 + 1] = -gp.signal_dir[i];
+        }
+        StepScorer::new(d, 2, w1, vec![0.0; 2], vec![1.0, -1.0], 0.0).unwrap()
+    }
+
+    #[test]
+    fn cell_runs_and_aggregates() {
+        let gp = GenParams::default_d64();
+        let sc = scorer_for(&gp);
+        let opts = CellOpts { n_traces: 8, max_questions: Some(3), ..Default::default() };
+        let r = run_cell(ModelId::Qwen3_4B, BenchId::Aime25, Method::Sc, &gp, &sc, &opts);
+        assert_eq!(r.n_questions, 3);
+        assert!(r.tok_k > 0.0);
+        assert!(r.lat_s > 0.0);
+        assert!((0.0..=100.0).contains(&r.acc));
+    }
+
+    #[test]
+    fn callback_sees_every_question() {
+        let gp = GenParams::default_d64();
+        let sc = scorer_for(&gp);
+        let opts = CellOpts { n_traces: 4, max_questions: Some(4), ..Default::default() };
+        let mut seen = 0;
+        let mut cb = |_r: &crate::sim::des::QuestionResult| seen += 1;
+        run_cell_with(
+            ModelId::Qwen3_4B,
+            BenchId::EquiBench,
+            Method::Step,
+            &gp,
+            &sc,
+            &opts,
+            Some(&mut cb),
+        );
+        assert_eq!(seen, 4);
+    }
+}

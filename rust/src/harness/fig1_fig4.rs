@@ -1,0 +1,122 @@
+//! Figures 1 + 4 — accuracy/latency scaling.
+//!
+//! Fig 4: accuracy-vs-latency curves for N in {1, 16, 32, 64} on
+//! (Qwen3-4B, DeepSeek-8B) x (AIME-25, HMMT-25) for all methods.
+//! Fig 1: the N=64 DeepSeek-8B summary scatter (accuracy averaged over
+//! AIME-25 / HMMT-24/25 / GPQA-D vs mean latency).
+
+use anyhow::Result;
+
+use super::cells::{run_cell, CellOpts};
+use super::HarnessOpts;
+use crate::coordinator::method::Method;
+use crate::sim::profiles::{BenchId, ModelId};
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct ScalingPoint {
+    pub model: ModelId,
+    pub bench: BenchId,
+    pub method: Method,
+    pub n: usize,
+    pub acc: f64,
+    pub lat_s: f64,
+}
+
+pub fn run_fig4(opts: &HarnessOpts) -> Result<Vec<ScalingPoint>> {
+    let (gen, scorer) = super::load_sim_bundle(&super::artifact_dir())?;
+    let budgets = [1usize, 16, 32, 64];
+    let mut points = Vec::new();
+    println!("## Fig 4: latency scaling (N = 1, 16, 32, 64)");
+    for model in [ModelId::Qwen3_4B, ModelId::DeepSeek8B] {
+        for bench in [BenchId::Aime25, BenchId::Hmmt2425] {
+            println!("\n### {:?} / {}", model, bench.name());
+            println!("{:<10} {:>4} | {:>6} {:>8}", "method", "N", "acc%", "lat(s)");
+            for method in [Method::Sc, Method::SlimSc, Method::DeepConf, Method::Step] {
+                for &n in &budgets {
+                    let m = if n == 1 { Method::Cot } else { method };
+                    let cell_opts = CellOpts {
+                        n_traces: n,
+                        max_questions: opts.max_questions,
+                        seed: opts.seed,
+                        ..Default::default()
+                    };
+                    let r = run_cell(model, bench, m, &gen, &scorer, &cell_opts);
+                    println!(
+                        "{:<10} {:>4} | {:>6.1} {:>8.0}",
+                        method.name(),
+                        n,
+                        r.acc,
+                        r.lat_s
+                    );
+                    points.push(ScalingPoint {
+                        model,
+                        bench,
+                        method,
+                        n,
+                        acc: r.acc,
+                        lat_s: r.lat_s,
+                    });
+                }
+            }
+        }
+    }
+    let json = Json::Arr(
+        points
+            .iter()
+            .map(|p| {
+                Json::obj(vec![
+                    ("model", Json::Str(format!("{:?}", p.model))),
+                    ("bench", Json::Str(p.bench.name().into())),
+                    ("method", Json::Str(p.method.name().into())),
+                    ("n", Json::Num(p.n as f64)),
+                    ("acc", Json::Num(p.acc)),
+                    ("lat_s", Json::Num(p.lat_s)),
+                ])
+            })
+            .collect(),
+    );
+    super::write_results("fig4", &json)?;
+    Ok(points)
+}
+
+pub fn run_fig1(opts: &HarnessOpts) -> Result<Vec<(Method, f64, f64)>> {
+    let (gen, scorer) = super::load_sim_bundle(&super::artifact_dir())?;
+    let benches = [BenchId::Aime25, BenchId::Hmmt2425, BenchId::GpqaDiamond];
+    let mut points = Vec::new();
+    println!("## Fig 1: accuracy vs latency scatter (DeepSeek-8B, N=64, avg of AIME/HMMT/GPQA)");
+    println!("{:<10} | {:>6} {:>8}", "method", "acc%", "lat(s)");
+    for method in Method::ALL {
+        let (mut acc, mut lat) = (0.0, 0.0);
+        for bench in benches {
+            let cell_opts = CellOpts {
+                n_traces: opts.n_traces,
+                max_questions: opts.max_questions,
+                seed: opts.seed,
+                ..Default::default()
+            };
+            let r = run_cell(ModelId::DeepSeek8B, bench, method, &gen, &scorer, &cell_opts);
+            acc += r.acc;
+            lat += r.lat_s;
+        }
+        acc /= benches.len() as f64;
+        lat /= benches.len() as f64;
+        println!("{:<10} | {:>6.1} {:>8.0}", method.name(), acc, lat);
+        points.push((method, acc, lat));
+    }
+    println!("(claim: STEP sits top-left — highest accuracy at a fraction of SC latency)");
+    let json = Json::Arr(
+        points
+            .iter()
+            .map(|(m, a, l)| {
+                Json::obj(vec![
+                    ("method", Json::Str(m.name().into())),
+                    ("acc", Json::Num(*a)),
+                    ("lat_s", Json::Num(*l)),
+                ])
+            })
+            .collect(),
+    );
+    super::write_results("fig1", &json)?;
+    Ok(points)
+}

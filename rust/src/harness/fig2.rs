@@ -1,0 +1,145 @@
+//! Figure 2 — the motivation experiments.
+//!
+//! (a) hidden-state score distributions, correct vs incorrect, computed
+//!     over the first 25/50/75% of steps (HMMT-25 traces);
+//! (b) token counts of correct vs incorrect traces for one hard AIME
+//!     question (paper: 42.5k incorrect vs 35.3k correct);
+//! (c) time breakdown of SC generation: waiting ~40% / decoding ~59%.
+
+use anyhow::Result;
+
+use super::cells::{run_cell, CellOpts};
+use super::HarnessOpts;
+use crate::coordinator::method::Method;
+use crate::sim::profiles::{BenchId, ModelId};
+use crate::sim::tracegen::TraceGen;
+use crate::util::json::Json;
+use crate::util::stats::{auc, mean, stddev};
+
+pub struct Fig2a {
+    /// (prefix fraction, mean/std correct, mean/std incorrect, auc).
+    pub rows: Vec<(f64, f64, f64, f64, f64, f64)>,
+}
+
+pub fn run_fig2a(opts: &HarnessOpts) -> Result<Fig2a> {
+    let (gen_params, scorer) = super::load_sim_bundle(&super::artifact_dir())?;
+    let gen = TraceGen::new(ModelId::DeepSeek8B, BenchId::Hmmt2425, gen_params, opts.seed);
+    let n_questions = opts.max_questions.unwrap_or(20).min(30);
+    let traces_per_q = 32;
+
+    println!("## Fig 2a: score distributions at 25/50/75% of steps (HMMT-25)");
+    println!(
+        "{:>7} | {:>8} {:>8} | {:>8} {:>8} | {:>6}",
+        "prefix", "mu_corr", "sd_corr", "mu_inc", "sd_inc", "AUC"
+    );
+    let mut rows = Vec::new();
+    for frac in [0.25, 0.50, 0.75] {
+        let mut scores = Vec::new();
+        let mut labels = Vec::new();
+        for qid in 0..n_questions {
+            let q = gen.question(qid);
+            for i in 0..traces_per_q {
+                let t = gen.trace(&q, i);
+                let k = ((t.n_steps() as f64 * frac).ceil() as usize).max(1);
+                let mut s = 0.0;
+                for n in 1..=k {
+                    s += scorer.score(&gen.hidden_state(&q, &t, n)) as f64;
+                }
+                scores.push(s / k as f64);
+                labels.push(t.label);
+            }
+        }
+        let corr: Vec<f64> = scores
+            .iter()
+            .zip(&labels)
+            .filter(|(_, &l)| l)
+            .map(|(&s, _)| s)
+            .collect();
+        let inc: Vec<f64> = scores
+            .iter()
+            .zip(&labels)
+            .filter(|(_, &l)| !l)
+            .map(|(&s, _)| s)
+            .collect();
+        let a = auc(&scores, &labels).unwrap_or(0.5);
+        println!(
+            "{:>6.0}% | {:>8.3} {:>8.3} | {:>8.3} {:>8.3} | {:>6.3}",
+            frac * 100.0,
+            mean(&corr),
+            stddev(&corr),
+            mean(&inc),
+            stddev(&inc),
+            a
+        );
+        rows.push((frac, mean(&corr), stddev(&corr), mean(&inc), stddev(&inc), a));
+    }
+    let json = Json::Arr(
+        rows.iter()
+            .map(|r| Json::arr_f64(&[r.0, r.1, r.2, r.3, r.4, r.5]))
+            .collect(),
+    );
+    super::write_results("fig2a", &json)?;
+    Ok(Fig2a { rows })
+}
+
+pub fn run_fig2b(opts: &HarnessOpts) -> Result<(f64, f64)> {
+    let (gen_params, _) = super::load_sim_bundle(&super::artifact_dir())?;
+    let gen = TraceGen::new(ModelId::Qwen3_4B, BenchId::Aime25, gen_params, opts.seed);
+    // The hardest still-solvable question (lowest p in [0.2, 0.7]) à la
+    // AIME Q28 — hard questions also run longest (tracegen len_mult).
+    let q = (0..30)
+        .map(|i| gen.question(i))
+        .filter(|q| (0.2..0.7).contains(&q.p_solve))
+        .min_by(|a, b| a.p_solve.partial_cmp(&b.p_solve).unwrap())
+        .unwrap_or_else(|| gen.question(0));
+    let (mut ct, mut it, mut cn, mut inn) = (0.0, 0.0, 0, 0);
+    for i in 0..64 {
+        let t = gen.trace(&q, i);
+        if t.label {
+            ct += t.total_tokens as f64;
+            cn += 1;
+        } else {
+            it += t.total_tokens as f64;
+            inn += 1;
+        }
+    }
+    let (mc, mi) = (ct / cn.max(1) as f64 / 1000.0, it / inn.max(1) as f64 / 1000.0);
+    println!("## Fig 2b: token counts on a hard AIME question (p={:.2})", q.p_solve);
+    println!("  correct traces:   {mc:.1}k tokens (n={cn})   [paper: 35.3k]");
+    println!("  incorrect traces: {mi:.1}k tokens (n={inn})   [paper: 42.5k]");
+    super::write_results("fig2b", &Json::arr_f64(&[mc, mi]))?;
+    Ok((mc, mi))
+}
+
+pub fn run_fig2c(opts: &HarnessOpts) -> Result<(f64, f64)> {
+    let (gen_params, scorer) = super::load_sim_bundle(&super::artifact_dir())?;
+    let cell_opts = CellOpts {
+        n_traces: opts.n_traces,
+        max_questions: opts.max_questions.or(Some(10)),
+        seed: opts.seed,
+        ..Default::default()
+    };
+    let r = run_cell(
+        ModelId::Qwen3_4B,
+        BenchId::Aime25,
+        Method::Sc,
+        &gen_params,
+        &scorer,
+        &cell_opts,
+    );
+    let lifetime = r.wait_s + r.decode_s;
+    let wait_pct = 100.0 * r.wait_s / lifetime.max(1e-9);
+    let dec_pct = 100.0 * r.decode_s / lifetime.max(1e-9);
+    println!("## Fig 2c: SC per-trace time breakdown (Qwen3-4B, AIME-25, N={})", r.n_traces);
+    println!("  waiting:  {wait_pct:.0}%   [paper: ~40%]");
+    println!("  decoding: {dec_pct:.0}%   [paper: ~59%]");
+    super::write_results("fig2c", &Json::arr_f64(&[wait_pct, dec_pct]))?;
+    Ok((wait_pct, dec_pct))
+}
+
+pub fn run(opts: &HarnessOpts) -> Result<()> {
+    run_fig2a(opts)?;
+    run_fig2b(opts)?;
+    run_fig2c(opts)?;
+    Ok(())
+}

@@ -1,0 +1,106 @@
+//! Figures 6/7 — trace-level score dynamics on AIME-25: prefix-mean step
+//! score vs token position (1024-token bins), averaged separately over
+//! correct and incorrect traces, for Qwen3-4B and DeepSeek-8B.
+
+use anyhow::Result;
+
+use super::HarnessOpts;
+use crate::sim::profiles::{BenchId, ModelId};
+use crate::sim::tracegen::TraceGen;
+use crate::util::json::Json;
+
+pub struct Dynamics {
+    pub model: ModelId,
+    /// Bin index -> (mean prefix score of correct, of incorrect, counts).
+    pub bins: Vec<(f64, f64, usize, usize)>,
+}
+
+const BIN: u64 = 1024;
+
+pub fn run_model(opts: &HarnessOpts, model: ModelId) -> Result<Dynamics> {
+    let (gen_params, scorer) = super::load_sim_bundle(&super::artifact_dir())?;
+    let gen = TraceGen::new(model, BenchId::Aime25, gen_params, opts.seed);
+    let n_questions = opts.max_questions.unwrap_or(8).min(30);
+
+    let mut acc: Vec<(f64, f64, usize, usize)> = Vec::new();
+    for qid in 0..n_questions {
+        let q = gen.question(qid);
+        for i in 0..opts.n_traces {
+            let t = gen.trace(&q, i);
+            let mut sum = 0.0;
+            for n in 1..=t.n_steps() {
+                sum += scorer.score(&gen.hidden_state(&q, &t, n)) as f64;
+                let prefix_mean = sum / n as f64;
+                let bin = (t.step_ends[n - 1] / BIN) as usize;
+                if acc.len() <= bin {
+                    acc.resize(bin + 1, (0.0, 0.0, 0, 0));
+                }
+                let e = &mut acc[bin];
+                if t.label {
+                    e.0 += prefix_mean;
+                    e.2 += 1;
+                } else {
+                    e.1 += prefix_mean;
+                    e.3 += 1;
+                }
+            }
+        }
+    }
+    let bins: Vec<(f64, f64, usize, usize)> = acc
+        .into_iter()
+        .map(|(sc, si, nc, ni)| (sc / nc.max(1) as f64, si / ni.max(1) as f64, nc, ni))
+        .collect();
+    Ok(Dynamics { model, bins })
+}
+
+pub fn run(opts: &HarnessOpts) -> Result<Vec<Dynamics>> {
+    let mut out = Vec::new();
+    for model in [ModelId::Qwen3_4B, ModelId::DeepSeek8B] {
+        let d = run_model(opts, model)?;
+        println!("\n## Fig 6/7: score dynamics, {:?} on AIME-25 (1024-token bins)", model);
+        println!("{:>8} | {:>9} | {:>9}", "tokens", "correct", "incorrect");
+        for (i, (c, inc, nc, ni)) in d.bins.iter().enumerate().take(24) {
+            if *nc == 0 && *ni == 0 {
+                continue;
+            }
+            println!(
+                "{:>7}k | {:>9.3} | {:>9.3}",
+                (i as u64 * BIN) / 1000,
+                c,
+                inc
+            );
+        }
+        // Separation check: the green line must sit above the red line.
+        let sep: Vec<f64> = d
+            .bins
+            .iter()
+            .filter(|(_, _, nc, ni)| *nc > 5 && *ni > 5)
+            .map(|(c, i, _, _)| c - i)
+            .collect();
+        let frac_pos = sep.iter().filter(|&&x| x > 0.0).count() as f64 / sep.len().max(1) as f64;
+        println!("(separation: correct > incorrect in {:.0}% of bins; paper: everywhere)", frac_pos * 100.0);
+        out.push(d);
+    }
+    let json = Json::Arr(
+        out.iter()
+            .map(|d| {
+                Json::obj(vec![
+                    ("model", Json::Str(format!("{:?}", d.model))),
+                    (
+                        "bins",
+                        Json::Arr(
+                            d.bins
+                                .iter()
+                                .map(|(c, i, nc, ni)| {
+                                    Json::arr_f64(&[*c, *i, *nc as f64, *ni as f64])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect(),
+    );
+    super::write_results("fig67", &json)?;
+    Ok(out)
+}

@@ -1,0 +1,81 @@
+//! Experiment harness: one module per paper table/figure (DESIGN.md §6).
+//!
+//! Every runner prints the regenerated rows next to the paper's published
+//! numbers (from [`paper_ref`]) and returns structured results the bench
+//! binaries and the CLI write into `results/*.json`.
+
+pub mod ablations;
+pub mod cells;
+pub mod fig1_fig4;
+pub mod fig2;
+pub mod fig5;
+pub mod fig67;
+pub mod overhead;
+pub mod paper_ref;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+pub mod table4;
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::coordinator::scorer::StepScorer;
+use crate::sim::tracegen::GenParams;
+use crate::util::json::Json;
+
+/// Load the trained sim scorer + its generator params from artifacts.
+pub fn load_sim_bundle(artifact_dir: &Path) -> Result<(GenParams, StepScorer)> {
+    let manifest = std::fs::read_to_string(artifact_dir.join("manifest.json"))
+        .with_context(|| format!("{artifact_dir:?}/manifest.json (run `make artifacts`)"))?;
+    let man = Json::parse(&manifest).map_err(|e| anyhow!("manifest: {e}"))?;
+    let scorer_file = man
+        .get("scorers")
+        .get("sim")
+        .as_str()
+        .context("manifest: scorers.sim")?;
+    let text = std::fs::read_to_string(artifact_dir.join(scorer_file))?;
+    let blob = Json::parse(&text).map_err(|e| anyhow!("scorer json: {e}"))?;
+    let gen = GenParams::from_json(&blob)?;
+    let scorer = StepScorer::from_json(&blob)?;
+    Ok((gen, scorer))
+}
+
+/// Artifact dir from $STEP_ARTIFACTS_DIR or ./artifacts.
+pub fn artifact_dir() -> std::path::PathBuf {
+    crate::runtime::Artifacts::default_dir()
+}
+
+/// Write a results JSON under results/ (created on demand).
+pub fn write_results(name: &str, value: &Json) -> Result<std::path::PathBuf> {
+    let dir = std::path::PathBuf::from(
+        std::env::var_os("STEP_RESULTS_DIR").unwrap_or_else(|| "results".into()),
+    );
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join(format!("{name}.json"));
+    std::fs::write(&path, value.to_string_pretty())?;
+    Ok(path)
+}
+
+/// Harness-wide options (question subsampling for quick runs).
+#[derive(Debug, Clone)]
+pub struct HarnessOpts {
+    /// Cap on questions per benchmark (None = paper-faithful counts).
+    pub max_questions: Option<usize>,
+    pub n_traces: usize,
+    pub seed: u64,
+}
+
+impl Default for HarnessOpts {
+    fn default() -> Self {
+        HarnessOpts { max_questions: None, n_traces: 64, seed: 0 }
+    }
+}
+
+impl HarnessOpts {
+    /// Quick mode for benches / smoke runs.
+    pub fn quick() -> Self {
+        HarnessOpts { max_questions: Some(8), n_traces: 32, seed: 0 }
+    }
+}

@@ -1,0 +1,73 @@
+//! Appendix D — the step scorer's computational overhead relative to one
+//! LLM decode step: 2m(d+1) / (2N*t) with m = 512, d = hidden size,
+//! N = non-embedding parameters, t = mean tokens/step. The paper's claim:
+//! below 1e-6.
+
+use crate::sim::profiles::{BenchId, BenchProfile, ModelId, ModelProfile};
+
+#[derive(Debug, Clone)]
+pub struct OverheadRow {
+    pub model: ModelId,
+    pub scorer_flops_per_step: f64,
+    pub llm_flops_per_step: f64,
+    pub relative: f64,
+}
+
+/// Non-embedding parameter counts (approx, from the model cards).
+fn non_embedding_params(model: ModelId) -> f64 {
+    match model {
+        ModelId::Qwen3_4B => 3.6e9,
+        ModelId::DeepSeek8B => 7.6e9,
+        ModelId::Phi4_14B => 14.2e9,
+    }
+}
+
+pub fn run() -> Vec<OverheadRow> {
+    const M: f64 = 512.0;
+    println!("## Appendix D: scorer overhead per reasoning step");
+    println!(
+        "{:<14} | {:>12} | {:>12} | {:>10}",
+        "model", "scorer FLOPs", "LLM FLOPs", "relative"
+    );
+    let mut rows = Vec::new();
+    for model in ModelId::ALL {
+        let p = ModelProfile::get(model);
+        let d = p.hidden_dim as f64;
+        let t = BenchProfile::get(BenchId::Aime25).tokens_per_step;
+        let scorer = 2.0 * M * (d + 1.0);
+        let llm = 2.0 * non_embedding_params(model) * t;
+        let relative = scorer / llm;
+        println!(
+            "{:<14} | {:>12.3e} | {:>12.3e} | {:>10.2e}",
+            format!("{:?}", model),
+            scorer,
+            llm,
+            relative
+        );
+        rows.push(OverheadRow {
+            model,
+            scorer_flops_per_step: scorer,
+            llm_flops_per_step: llm,
+            relative,
+        });
+    }
+    println!("(paper claim: < 1e-6. Note: the paper's own formula with its");
+    println!(" stated constants (m=512, d~1e3.4, N~1e9.6, t~1e2) evaluates to");
+    println!(" ~2-3e-6; the <1e-6 bound holds for t >~ 330 tokens/step. Either");
+    println!(" way the overhead is negligible — 5+ orders below an LLM step.)");
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn overhead_negligible() {
+        for row in run() {
+            // Negligible means orders of magnitude below an LLM step; the
+            // paper's exact <1e-6 needs t >= ~330 tokens/step (see run()).
+            assert!(row.relative < 1e-5, "{:?}: {}", row.model, row.relative);
+        }
+    }
+}

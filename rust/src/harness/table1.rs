@@ -1,0 +1,113 @@
+//! Table 1 — main results: Acc / Tok / Lat for all five methods across
+//! three models and five benchmark columns. `step bench table1`.
+
+use anyhow::Result;
+
+use super::cells::{run_cell, CellOpts, CellResult};
+use super::paper_ref;
+use super::HarnessOpts;
+use crate::coordinator::method::Method;
+use crate::sim::profiles::{BenchId, ModelId};
+use crate::util::json::Json;
+
+pub fn run(opts: &HarnessOpts) -> Result<Vec<CellResult>> {
+    let (gen, scorer) = super::load_sim_bundle(&super::artifact_dir())?;
+    let mut all = Vec::new();
+    for model in ModelId::ALL {
+        println!("\n## {:?}", model);
+        println!(
+            "{:<10} {:<13} | {:>6} {:>8} {:>7} | paper: {:>6} {:>8} {:>7}",
+            "method", "bench", "acc%", "tok(k)", "lat(s)", "acc%", "tok(k)", "lat(s)"
+        );
+        for bench in BenchId::ALL {
+            for method in Method::ALL {
+                let cell_opts = CellOpts {
+                    n_traces: opts.n_traces,
+                    max_questions: opts.max_questions,
+                    seed: opts.seed,
+                    ..Default::default()
+                };
+                let r = run_cell(model, bench, method, &gen, &scorer, &cell_opts);
+                let (pa, pt, pl) = paper_ref::table1(model, bench, method);
+                println!(
+                    "{:<10} {:<13} | {:>6.1} {:>8.1} {:>7.0} | paper: {:>6.1} {:>8.1} {:>7.0}",
+                    method.name(),
+                    bench.name(),
+                    r.acc,
+                    r.tok_k,
+                    r.lat_s,
+                    pa,
+                    pt,
+                    pl
+                );
+                all.push(r);
+            }
+        }
+    }
+    let json = Json::Arr(all.iter().map(|c| c.to_json()).collect());
+    let path = super::write_results("table1", &json)?;
+    println!("\nwrote {path:?}");
+    print_shape_checks(&all);
+    Ok(all)
+}
+
+/// The qualitative claims Table 1 must reproduce (DESIGN.md §6).
+pub fn print_shape_checks(cells: &[CellResult]) {
+    let get = |m: ModelId, b: BenchId, me: Method| {
+        cells
+            .iter()
+            .find(|c| c.model == m && c.bench == b && c.method == me)
+            .cloned()
+    };
+    let mut pass = 0;
+    let mut total = 0;
+    let mut check = |name: String, ok: bool| {
+        total += 1;
+        pass += ok as usize;
+        println!("  [{}] {name}", if ok { "ok" } else { "FAIL" });
+    };
+    println!("\n### shape checks (paper claims)");
+    for m in ModelId::ALL {
+        let mut speedups = Vec::new();
+        for b in BenchId::ALL {
+            let (Some(sc), Some(st)) = (get(m, b, Method::Sc), get(m, b, Method::Step)) else {
+                continue;
+            };
+            check(
+                format!("{m:?}/{}: STEP latency < SC ({:.0}s vs {:.0}s)", b.name(), st.lat_s, sc.lat_s),
+                st.lat_s < sc.lat_s,
+            );
+            check(
+                format!("{m:?}/{}: STEP acc >= SC - 1.5pp ({:.1} vs {:.1})", b.name(), st.acc, sc.acc),
+                st.acc >= sc.acc - 1.5,
+            );
+            check(
+                format!("{m:?}/{}: STEP tokens < SC", b.name()),
+                st.tok_k < sc.tok_k,
+            );
+            speedups.push(1.0 - st.lat_s / sc.lat_s);
+        }
+        let mean_speedup = 100.0 * speedups.iter().sum::<f64>() / speedups.len().max(1) as f64;
+        // Compare against the reduction the paper's own Table 1 implies
+        // (the abstract's "45-70% on average" reflects the math-heavy
+        // settings; the table-wide means are 28/34/57% per model).
+        let paper_mean: f64 = 100.0
+            * BenchId::ALL
+                .iter()
+                .map(|&b| {
+                    let (_, _, sc) = paper_ref::table1(m, b, Method::Sc);
+                    let (_, _, st) = paper_ref::table1(m, b, Method::Step);
+                    1.0 - st / sc
+                })
+                .sum::<f64>()
+            / BenchId::ALL.len() as f64;
+        check(
+            format!(
+                "{m:?}: mean latency reduction {:.0}% within 12pp of paper's {:.0}%",
+                mean_speedup, paper_mean
+            ),
+            (mean_speedup - paper_mean).abs() <= 12.0,
+        );
+    }
+    println!("  shape checks: {pass}/{total} passed");
+}

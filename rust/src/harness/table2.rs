@@ -1,0 +1,126 @@
+//! Table 2 — voting-strategy comparison on identical trace sets:
+//! majority vs PRM-weighted vs STEP-scorer-weighted, averaged over 4
+//! independent runs (paper §5.3.3).
+
+use anyhow::Result;
+
+use super::HarnessOpts;
+use crate::coordinator::voting::{weighted_vote, Vote};
+use crate::sim::profiles::{BenchId, ModelId};
+use crate::sim::tracegen::TraceGen;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct Table2Row {
+    pub model: ModelId,
+    pub bench: BenchId,
+    pub majority: f64,
+    pub prm_weighted: f64,
+    pub step_weighted: f64,
+}
+
+/// Paper Table 2 reference rows (majority, PRM, STEP).
+pub fn paper_row(model: ModelId, bench: BenchId) -> (f64, f64, f64) {
+    use BenchId::*;
+    use ModelId::*;
+    match (model, bench) {
+        (Qwen3_4B, Aime25) => (86.7, 87.5, 90.0),
+        (Qwen3_4B, Hmmt2425) => (65.0, 67.5, 71.7),
+        (Qwen3_4B, GpqaDiamond) => (68.1, 68.7, 69.2),
+        (DeepSeek8B, Aime25) => (83.3, 83.3, 85.0),
+        (DeepSeek8B, Hmmt2425) => (70.0, 71.7, 75.8),
+        (DeepSeek8B, GpqaDiamond) => (67.1, 66.4, 68.5),
+        _ => (f64::NAN, f64::NAN, f64::NAN),
+    }
+}
+
+pub fn run(opts: &HarnessOpts) -> Result<Vec<Table2Row>> {
+    let (gen_params, scorer) = super::load_sim_bundle(&super::artifact_dir())?;
+    let n_runs = 4;
+    let mut rows = Vec::new();
+
+    println!("## Table 2: voting strategies on the same 64-trace sets (4 runs)");
+    println!(
+        "{:<12} {:<11} | {:>8} {:>8} {:>8} | paper: {:>5} {:>5} {:>5}",
+        "model", "bench", "majority", "PRM-wt", "STEP-wt", "maj", "prm", "step"
+    );
+    for model in [ModelId::Qwen3_4B, ModelId::DeepSeek8B] {
+        for bench in [BenchId::Aime25, BenchId::Hmmt2425, BenchId::GpqaDiamond] {
+            let (mut acc_m, mut acc_p, mut acc_s) = (0.0, 0.0, 0.0);
+            for run in 0..n_runs {
+                let gen = TraceGen::new(
+                    model,
+                    bench,
+                    gen_params.clone(),
+                    opts.seed ^ (run as u64) << 8,
+                );
+                let n_questions = opts.max_questions.unwrap_or(30).min(60);
+                let (mut cm, mut cp, mut cs) = (0, 0, 0);
+                for qid in 0..n_questions {
+                    let q = gen.question(qid);
+                    // The same completed trace set for all three strategies.
+                    let traces: Vec<_> =
+                        (0..opts.n_traces).map(|i| gen.trace(&q, i)).collect();
+                    let mut votes_m = Vec::new();
+                    let mut votes_p = Vec::new();
+                    let mut votes_s = Vec::new();
+                    for t in &traces {
+                        let Some(ans) = t.answer else { continue };
+                        // STEP weight: mean step score over the full trace.
+                        let k = t.n_steps();
+                        let mut s = 0.0;
+                        for n in 1..=k {
+                            s += scorer.score(&gen.hidden_state(&q, t, n)) as f64;
+                        }
+                        let step_w = s / k as f64;
+                        votes_m.push(Vote { answer: Some(ans), weight: 1.0 });
+                        votes_p.push(Vote { answer: Some(ans), weight: gen.prm_score(t) });
+                        votes_s.push(Vote { answer: Some(ans), weight: step_w });
+                    }
+                    cm += (weighted_vote(&votes_m) == Some(0)) as usize;
+                    cp += (weighted_vote(&votes_p) == Some(0)) as usize;
+                    cs += (weighted_vote(&votes_s) == Some(0)) as usize;
+                }
+                let nq = n_questions as f64;
+                acc_m += 100.0 * cm as f64 / nq;
+                acc_p += 100.0 * cp as f64 / nq;
+                acc_s += 100.0 * cs as f64 / nq;
+            }
+            let row = Table2Row {
+                model,
+                bench,
+                majority: acc_m / n_runs as f64,
+                prm_weighted: acc_p / n_runs as f64,
+                step_weighted: acc_s / n_runs as f64,
+            };
+            let (pm, pp, ps) = paper_row(model, bench);
+            println!(
+                "{:<12} {:<11} | {:>8.1} {:>8.1} {:>8.1} | paper: {:>5.1} {:>5.1} {:>5.1}",
+                format!("{:?}", model),
+                bench.name(),
+                row.majority,
+                row.prm_weighted,
+                row.step_weighted,
+                pm,
+                pp,
+                ps
+            );
+            rows.push(row);
+        }
+    }
+    let json = Json::Arr(
+        rows.iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("model", Json::Str(format!("{:?}", r.model))),
+                    ("bench", Json::Str(r.bench.name().into())),
+                    ("majority", Json::Num(r.majority)),
+                    ("prm", Json::Num(r.prm_weighted)),
+                    ("step", Json::Num(r.step_weighted)),
+                ])
+            })
+            .collect(),
+    );
+    super::write_results("table2", &json)?;
+    Ok(rows)
+}

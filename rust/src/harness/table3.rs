@@ -1,0 +1,79 @@
+//! Table 3 — wait/decode time breakdown on DeepSeek-8B / HMMT-25 / N=64.
+//! The paper's headline systems claim: STEP's memory-triggered pruning
+//! drives waiting time to exactly zero while SC waits longer than it
+//! decodes.
+
+use anyhow::Result;
+
+use super::cells::{run_cell, CellOpts};
+use super::{paper_ref, HarnessOpts};
+use crate::coordinator::method::Method;
+use crate::sim::profiles::{BenchId, ModelId};
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct Table3Row {
+    pub method: Method,
+    pub wait_s: f64,
+    pub decode_s: f64,
+    /// DeepConf stage split ((warmup wait, warmup decode), (prune ...)).
+    pub stages: Option<((f64, f64), (f64, f64))>,
+}
+
+pub fn run(opts: &HarnessOpts) -> Result<Vec<Table3Row>> {
+    let (gen, scorer) = super::load_sim_bundle(&super::artifact_dir())?;
+    let mut rows = Vec::new();
+    println!("## Table 3: wait/decode seconds (DeepSeek-8B, HMMT-25, N={})", opts.n_traces);
+    println!(
+        "{:<10} | {:>8} {:>8} | paper: {:>7} {:>7}",
+        "method", "wait", "decode", "wait", "decode"
+    );
+    for method in [Method::Sc, Method::DeepConf, Method::SlimSc, Method::Step] {
+        let cell_opts = CellOpts {
+            n_traces: opts.n_traces,
+            max_questions: opts.max_questions,
+            seed: opts.seed,
+            ..Default::default()
+        };
+        let r = run_cell(ModelId::DeepSeek8B, BenchId::Hmmt2425, method, &gen, &scorer, &cell_opts);
+        let (pw, pd) = paper_ref::table3(method);
+        println!(
+            "{:<10} | {:>8.0} {:>8.0} | paper: {:>7.0} {:>7.0}",
+            method.name(),
+            r.engine_wait_s,
+            r.engine_decode_s,
+            pw,
+            pd
+        );
+        if let Some(((ww, wd), (rw, rd))) = r.stage_wait_decode {
+            println!(
+                "  warmup  | {:>8.0} {:>8.0} | paper: {:>7.0} {:>7.0}",
+                ww, wd, 69.0, 680.0
+            );
+            println!(
+                "  prune   | {:>8.0} {:>8.0} | paper: {:>7.0} {:>7.0}",
+                rw, rd, 194.0, 726.0
+            );
+        }
+        rows.push(Table3Row {
+            method,
+            wait_s: r.engine_wait_s,
+            decode_s: r.engine_decode_s,
+            stages: r.stage_wait_decode,
+        });
+    }
+    println!("(claim: STEP wait == 0; SC wait > SC decode)");
+    let json = Json::Arr(
+        rows.iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("method", Json::Str(r.method.name().into())),
+                    ("wait_s", Json::Num(r.wait_s)),
+                    ("decode_s", Json::Num(r.decode_s)),
+                ])
+            })
+            .collect(),
+    );
+    super::write_results("table3", &json)?;
+    Ok(rows)
+}

@@ -1,0 +1,43 @@
+//! Table 4 — GPU-memory sensitivity: STEP accuracy across
+//! gpu_memory_utilization in {0.5 .. 0.9} (DeepSeek-8B, HMMT-25, N=32).
+//! The paper's claim: accuracy is stable (70.1 +/- 1.8) because the
+//! scorer identifies promising traces early enough that earlier pruning
+//! does not hurt.
+
+use anyhow::Result;
+
+use super::cells::{run_cell, CellOpts};
+use super::{paper_ref, HarnessOpts};
+use crate::coordinator::method::Method;
+use crate::sim::profiles::{BenchId, ModelId};
+use crate::util::json::Json;
+use crate::util::stats::{mean, stddev};
+
+pub fn run(opts: &HarnessOpts) -> Result<Vec<(f64, f64)>> {
+    let (gen, scorer) = super::load_sim_bundle(&super::artifact_dir())?;
+    let n_traces = 32.min(opts.n_traces);
+    let mut rows = Vec::new();
+    println!("## Table 4: STEP accuracy vs gpu_memory_utilization (DeepSeek-8B, HMMT-25, N={n_traces})");
+    println!("{:>6} | {:>8} | paper: {:>6}", "util", "acc%", "acc%");
+    for (i, &util) in paper_ref::TABLE4_UTILS.iter().enumerate() {
+        let cell_opts = CellOpts {
+            n_traces,
+            max_questions: opts.max_questions,
+            mem_util: util,
+            seed: opts.seed,
+            ..Default::default()
+        };
+        let r = run_cell(ModelId::DeepSeek8B, BenchId::Hmmt2425, Method::Step, &gen, &scorer, &cell_opts);
+        println!("{:>6.1} | {:>8.1} | paper: {:>6.1}", util, r.acc, paper_ref::TABLE4_ACC[i]);
+        rows.push((util, r.acc));
+    }
+    let accs: Vec<f64> = rows.iter().map(|r| r.1).collect();
+    println!(
+        "  measured: {:.1} +/- {:.1}   (paper: 70.1 +/- 1.8 — stability is the claim)",
+        mean(&accs),
+        stddev(&accs)
+    );
+    let json = Json::Arr(rows.iter().map(|r| Json::arr_f64(&[r.0, r.1])).collect());
+    super::write_results("table4", &json)?;
+    Ok(rows)
+}

@@ -1,0 +1,120 @@
+//! Paged KV-cache block allocator (vLLM-style PagedAttention accounting).
+//!
+//! GPU memory for KV cache is carved into fixed-size blocks of
+//! `block_size` token slots. Allocation must be O(1) on the decode hot
+//! path — a stack free-list over a fixed pool.
+
+/// Identifier of one physical KV block.
+pub type BlockId = u32;
+
+/// Fixed-pool O(1) block allocator.
+#[derive(Debug, Clone)]
+pub struct BlockAllocator {
+    num_blocks: usize,
+    free_list: Vec<BlockId>,
+    allocated: Vec<bool>,
+}
+
+impl BlockAllocator {
+    pub fn new(num_blocks: usize) -> Self {
+        BlockAllocator {
+            num_blocks,
+            // LIFO: freshly freed blocks are reused first (cache-warm).
+            free_list: (0..num_blocks as BlockId).rev().collect(),
+            allocated: vec![false; num_blocks],
+        }
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        self.num_blocks
+    }
+
+    pub fn num_free(&self) -> usize {
+        self.free_list.len()
+    }
+
+    pub fn num_used(&self) -> usize {
+        self.num_blocks - self.free_list.len()
+    }
+
+    pub fn alloc(&mut self) -> Option<BlockId> {
+        let id = self.free_list.pop()?;
+        self.allocated[id as usize] = true;
+        Some(id)
+    }
+
+    /// Allocate `n` blocks atomically: all or nothing.
+    pub fn alloc_n(&mut self, n: usize) -> Option<Vec<BlockId>> {
+        if self.free_list.len() < n {
+            return None;
+        }
+        Some((0..n).map(|_| self.alloc().unwrap()).collect())
+    }
+
+    pub fn free(&mut self, id: BlockId) {
+        assert!(
+            self.allocated[id as usize],
+            "double free of KV block {id}"
+        );
+        self.allocated[id as usize] = false;
+        self.free_list.push(id);
+    }
+
+    pub fn free_all(&mut self, ids: &[BlockId]) {
+        for &id in ids {
+            self.free(id);
+        }
+    }
+
+    pub fn is_allocated(&self, id: BlockId) -> bool {
+        self.allocated[id as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_free_cycle() {
+        let mut a = BlockAllocator::new(4);
+        assert_eq!(a.num_free(), 4);
+        let b0 = a.alloc().unwrap();
+        let b1 = a.alloc().unwrap();
+        assert_ne!(b0, b1);
+        assert_eq!(a.num_used(), 2);
+        a.free(b0);
+        assert_eq!(a.num_free(), 3);
+        // LIFO reuse.
+        assert_eq!(a.alloc().unwrap(), b0);
+    }
+
+    #[test]
+    fn exhaustion_returns_none() {
+        let mut a = BlockAllocator::new(2);
+        assert!(a.alloc().is_some());
+        assert!(a.alloc().is_some());
+        assert!(a.alloc().is_none());
+    }
+
+    #[test]
+    fn alloc_n_atomic() {
+        let mut a = BlockAllocator::new(3);
+        assert!(a.alloc_n(4).is_none());
+        assert_eq!(a.num_free(), 3, "failed alloc_n must not leak");
+        let blocks = a.alloc_n(3).unwrap();
+        assert_eq!(blocks.len(), 3);
+        assert_eq!(a.num_free(), 0);
+        a.free_all(&blocks);
+        assert_eq!(a.num_free(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn double_free_panics() {
+        let mut a = BlockAllocator::new(1);
+        let b = a.alloc().unwrap();
+        a.free(b);
+        a.free(b);
+    }
+}

@@ -1,0 +1,274 @@
+//! Paged KV-cache management (the substrate whose exhaustion behaviour the
+//! paper's §4.2 memory-triggered pruning targets).
+//!
+//! [`KvCacheManager`] tracks a block table per live sequence and answers
+//! the scheduler's two hot-path questions:
+//!   * can every running sequence take one more token this iteration?
+//!   * how many blocks would admitting / resuming a sequence need?
+//!
+//! When the answer is no, the SC baseline *preempts* (frees the blocks and
+//! moves the sequence to a waiting queue — vLLM recompute-on-resume),
+//! while STEP *prunes* the lowest-scored trace and releases its blocks.
+
+pub mod allocator;
+
+pub use allocator::{BlockAllocator, BlockId};
+
+/// Sequence identifier (one reasoning trace = one sequence).
+pub type SeqId = u64;
+
+/// Per-sequence block table.
+#[derive(Debug, Clone, Default)]
+pub struct BlockTable {
+    pub blocks: Vec<BlockId>,
+    pub num_tokens: usize,
+}
+
+/// Manager over the physical block pool.
+///
+/// Sequence ids index a dense slot vector: the scheduler's hot loop
+/// touches every running sequence every iteration, and dense indexing
+/// measured ~25% faster than hashing at 64-trace batches (§Perf).
+#[derive(Debug, Clone)]
+pub struct KvCacheManager {
+    alloc: BlockAllocator,
+    block_size: usize,
+    tables: Vec<Option<BlockTable>>,
+    num_seqs: usize,
+    /// Peak block usage observed (for reports).
+    pub peak_used_blocks: usize,
+}
+
+impl KvCacheManager {
+    pub fn new(num_blocks: usize, block_size: usize) -> Self {
+        assert!(block_size > 0);
+        KvCacheManager {
+            alloc: BlockAllocator::new(num_blocks),
+            block_size,
+            tables: Vec::new(),
+            num_seqs: 0,
+            peak_used_blocks: 0,
+        }
+    }
+
+    #[inline]
+    fn slot(&self, seq: SeqId) -> Option<&BlockTable> {
+        self.tables.get(seq as usize).and_then(|t| t.as_ref())
+    }
+
+    #[inline]
+    fn slot_mut(&mut self, seq: SeqId) -> Option<&mut BlockTable> {
+        self.tables.get_mut(seq as usize).and_then(|t| t.as_mut())
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    pub fn capacity_tokens(&self) -> usize {
+        self.alloc.num_blocks() * self.block_size
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.alloc.num_free()
+    }
+
+    pub fn used_blocks(&self) -> usize {
+        self.alloc.num_used()
+    }
+
+    pub fn num_seqs(&self) -> usize {
+        self.num_seqs
+    }
+
+    #[inline]
+    pub fn seq_tokens(&self, seq: SeqId) -> usize {
+        self.slot(seq).map(|t| t.num_tokens).unwrap_or(0)
+    }
+
+    fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_size)
+    }
+
+    /// Blocks required to admit a new sequence of `tokens` tokens.
+    pub fn blocks_needed_for_new(&self, tokens: usize) -> usize {
+        self.blocks_for(tokens)
+    }
+
+    /// Blocks required to append `n` tokens to an existing sequence.
+    #[inline]
+    pub fn blocks_needed_for_append(&self, seq: SeqId, n: usize) -> usize {
+        let t = self.slot(seq).expect("unknown seq");
+        self.blocks_for(t.num_tokens + n) - t.blocks.len()
+    }
+
+    pub fn can_allocate(&self, blocks: usize) -> bool {
+        self.alloc.num_free() >= blocks
+    }
+
+    /// Admit a sequence with `tokens` prefilled tokens. All-or-nothing.
+    pub fn allocate_seq(&mut self, seq: SeqId, tokens: usize) -> bool {
+        assert!(self.slot(seq).is_none(), "seq {seq} already allocated");
+        let need = self.blocks_for(tokens);
+        match self.alloc.alloc_n(need) {
+            Some(blocks) => {
+                let idx = seq as usize;
+                if self.tables.len() <= idx {
+                    self.tables.resize(idx + 1, None);
+                }
+                self.tables[idx] = Some(BlockTable { blocks, num_tokens: tokens });
+                self.num_seqs += 1;
+                self.peak_used_blocks = self.peak_used_blocks.max(self.alloc.num_used());
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Append `n` tokens; allocates new blocks at block boundaries.
+    /// Returns false (and changes nothing) if the pool is short.
+    pub fn append_tokens(&mut self, seq: SeqId, n: usize) -> bool {
+        let need = self.blocks_needed_for_append(seq, n);
+        if need > 0 {
+            match self.alloc.alloc_n(need) {
+                Some(blocks) => {
+                    let t = self.slot_mut(seq).unwrap();
+                    t.blocks.extend(blocks);
+                }
+                None => return false,
+            }
+            self.peak_used_blocks = self.peak_used_blocks.max(self.alloc.num_used());
+        }
+        let t = self.slot_mut(seq).unwrap();
+        t.num_tokens += n;
+        true
+    }
+
+    /// Release a sequence entirely (finish / prune / preempt-with-recompute).
+    /// Returns the number of blocks released.
+    pub fn free_seq(&mut self, seq: SeqId) -> usize {
+        let t = self
+            .tables
+            .get_mut(seq as usize)
+            .and_then(|t| t.take())
+            .expect("freeing unknown seq");
+        self.num_seqs -= 1;
+        let n = t.blocks.len();
+        self.alloc.free_all(&t.blocks);
+        n
+    }
+
+    /// Block table of a sequence (e2e backend uses it to address slots).
+    pub fn block_table(&self, seq: SeqId) -> Option<&BlockTable> {
+        self.slot(seq)
+    }
+
+    /// True iff advancing every listed sequence by one token fits.
+    pub fn can_step_all(&self, seqs: &[SeqId]) -> bool {
+        let need: usize = seqs
+            .iter()
+            .map(|&s| self.blocks_needed_for_append(s, 1))
+            .sum();
+        self.can_allocate(need)
+    }
+
+    /// Invariant check for tests: internal accounting is consistent.
+    pub fn check_invariants(&self) {
+        let table_blocks: usize =
+            self.tables.iter().flatten().map(|t| t.blocks.len()).sum();
+        assert_eq!(table_blocks, self.alloc.num_used(), "block leak");
+        for t in self.tables.iter().flatten() {
+            assert_eq!(
+                t.blocks.len(),
+                self.blocks_for(t.num_tokens),
+                "table/token mismatch"
+            );
+            for &b in &t.blocks {
+                assert!(self.alloc.is_allocated(b));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mgr(blocks: usize) -> KvCacheManager {
+        KvCacheManager::new(blocks, 16)
+    }
+
+    #[test]
+    fn allocate_and_grow() {
+        let mut m = mgr(4);
+        assert!(m.allocate_seq(1, 10)); // 1 block
+        assert_eq!(m.used_blocks(), 1);
+        assert!(m.append_tokens(1, 6)); // fills block exactly (16)
+        assert_eq!(m.used_blocks(), 1);
+        assert!(m.append_tokens(1, 1)); // spills to block 2
+        assert_eq!(m.used_blocks(), 2);
+        assert_eq!(m.seq_tokens(1), 17);
+        m.check_invariants();
+    }
+
+    #[test]
+    fn exhaustion_and_release() {
+        let mut m = mgr(2);
+        assert!(m.allocate_seq(1, 16));
+        assert!(m.allocate_seq(2, 16));
+        assert!(!m.append_tokens(1, 1), "pool exhausted");
+        assert_eq!(m.seq_tokens(1), 16, "failed append must not change state");
+        let freed = m.free_seq(2);
+        assert_eq!(freed, 1);
+        assert!(m.append_tokens(1, 1));
+        m.check_invariants();
+    }
+
+    #[test]
+    fn can_step_all_counts_boundary_crossings() {
+        let mut m = mgr(3);
+        assert!(m.allocate_seq(1, 16)); // at boundary: next token needs a block
+        assert!(m.allocate_seq(2, 8));  // mid-block: free append
+        assert!(m.allocate_seq(3, 16)); // at boundary
+        // 0 free blocks, two sequences need one each.
+        assert!(!m.can_step_all(&[1, 2, 3]));
+        assert!(m.can_step_all(&[2]));
+        m.free_seq(3);
+        assert!(m.can_step_all(&[1, 2]));
+    }
+
+    #[test]
+    fn new_seq_admission_cost() {
+        let m = mgr(10);
+        assert_eq!(m.blocks_needed_for_new(1), 1);
+        assert_eq!(m.blocks_needed_for_new(16), 1);
+        assert_eq!(m.blocks_needed_for_new(17), 2);
+        assert_eq!(m.blocks_needed_for_new(160), 10);
+    }
+
+    #[test]
+    fn all_or_nothing_admission() {
+        let mut m = mgr(2);
+        assert!(!m.allocate_seq(1, 33)); // needs 3 blocks
+        assert_eq!(m.used_blocks(), 0);
+        assert!(m.allocate_seq(1, 32));
+    }
+
+    #[test]
+    fn peak_tracking() {
+        let mut m = mgr(8);
+        m.allocate_seq(1, 64);
+        assert_eq!(m.peak_used_blocks, 4);
+        m.free_seq(1);
+        m.allocate_seq(2, 16);
+        assert_eq!(m.peak_used_blocks, 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "already allocated")]
+    fn duplicate_seq_panics() {
+        let mut m = mgr(4);
+        m.allocate_seq(1, 1);
+        m.allocate_seq(1, 1);
+    }
+}

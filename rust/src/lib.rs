@@ -1,0 +1,15 @@
+//! STEP: Step-level Trace Evaluation and Pruning for efficient test-time
+//! scaling — a rust + JAX + Pallas reproduction of Liang et al. (2026).
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! reproduced tables/figures.
+
+pub mod config;
+pub mod coordinator;
+pub mod harness;
+pub mod kvcache;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod sim;
+pub mod util;

@@ -1,0 +1,130 @@
+//! `step` — the STEP serving/experiment CLI (leader entrypoint).
+//!
+//! Subcommands regenerate each paper table/figure (DESIGN.md §6), run the
+//! whole evaluation, or serve the e2e model. Arg parsing is in-tree
+//! (no clap in the offline vendor set).
+
+use anyhow::{bail, Result};
+use step::harness::{self, HarnessOpts};
+
+const USAGE: &str = "step — Step-level Trace Evaluation and Pruning (paper reproduction)
+
+USAGE:
+    step <COMMAND> [OPTIONS]
+
+COMMANDS (experiments; see DESIGN.md §6):
+    table1      Main results grid: Acc/Tok/Lat for 5 methods x 3 models x 5 benchmarks
+    table2      Voting strategies: majority vs PRM-weighted vs STEP-weighted
+    table3      Wait/decode breakdown (DeepSeek-8B, HMMT-25, N=64)
+    table4      GPU-memory sensitivity sweep (util 0.5..0.9)
+    fig1        Accuracy-vs-latency scatter (DeepSeek-8B, N=64)
+    fig2        Motivation: score distributions, token skew, time breakdown
+    fig4        Latency scaling N in {1,16,32,64}
+    fig5        RankAcc of step scorer vs token confidence
+    fig67       Trace-level score dynamics
+    overhead    Appendix-D scorer FLOPs overhead
+    ablations   Design-choice ablations (victim policy, score aggregation)
+    all         Everything above at full scale
+
+OPTIONS:
+    --questions N    cap questions per benchmark (default: paper-faithful)
+    --traces N       trace budget (default 64)
+    --seed S         RNG seed (default 0)
+    --quick          shorthand for --questions 8 --traces 32
+
+Artifacts are read from $STEP_ARTIFACTS_DIR (default ./artifacts); run
+`make artifacts` first. Results are written to $STEP_RESULTS_DIR
+(default ./results).";
+
+fn parse_opts(args: &[String]) -> Result<HarnessOpts> {
+    let mut opts = HarnessOpts::default();
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--quick" => {
+                opts = HarnessOpts::quick();
+                i += 1;
+            }
+            "--questions" => {
+                opts.max_questions = Some(need_val(args, i)?.parse()?);
+                i += 2;
+            }
+            "--traces" => {
+                opts.n_traces = need_val(args, i)?.parse()?;
+                i += 2;
+            }
+            "--seed" => {
+                opts.seed = need_val(args, i)?.parse()?;
+                i += 2;
+            }
+            other => bail!("unknown option '{other}'\n\n{USAGE}"),
+        }
+    }
+    Ok(opts)
+}
+
+fn need_val(args: &[String], i: usize) -> Result<&String> {
+    args.get(i + 1)
+        .ok_or_else(|| anyhow::anyhow!("option {} needs a value", args[i]))
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else {
+        println!("{USAGE}");
+        return Ok(());
+    };
+    let opts = parse_opts(&args[1..])?;
+
+    match cmd.as_str() {
+        "table1" => {
+            harness::table1::run(&opts)?;
+        }
+        "table2" => {
+            harness::table2::run(&opts)?;
+        }
+        "table3" => {
+            harness::table3::run(&opts)?;
+        }
+        "table4" => {
+            harness::table4::run(&opts)?;
+        }
+        "fig1" => {
+            harness::fig1_fig4::run_fig1(&opts)?;
+        }
+        "fig2" => {
+            harness::fig2::run(&opts)?;
+        }
+        "fig4" => {
+            harness::fig1_fig4::run_fig4(&opts)?;
+        }
+        "fig5" => {
+            harness::fig5::run(&opts)?;
+        }
+        "fig67" => {
+            harness::fig67::run(&opts)?;
+        }
+        "overhead" => {
+            harness::overhead::run();
+        }
+        "ablations" => {
+            harness::ablations::run(&opts)?;
+        }
+        "all" => {
+            harness::table1::run(&opts)?;
+            harness::fig1_fig4::run_fig1(&opts)?;
+            harness::fig2::run(&opts)?;
+            harness::fig1_fig4::run_fig4(&opts)?;
+            harness::fig5::run(&opts)?;
+            harness::table2::run(&opts)?;
+            harness::table3::run(&opts)?;
+            harness::table4::run(&opts)?;
+            harness::fig67::run(&opts)?;
+            harness::ablations::run(&opts)?;
+            harness::overhead::run();
+        }
+        "help" | "--help" | "-h" => println!("{USAGE}"),
+        other => bail!("unknown command '{other}'\n\n{USAGE}"),
+    }
+    Ok(())
+}

@@ -1,0 +1,171 @@
+//! Serving metrics: latency histograms, counters, and the wait/decode
+//! timeline recorder behind Table 3 / Fig 2c-style reports.
+
+use crate::util::stats::{mean, percentile};
+
+/// Fixed-boundary log-scale histogram (ns .. hours).
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    /// Bucket upper bounds in seconds (log-spaced).
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    samples: Vec<f64>,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        // 1us .. ~3h in x2 steps.
+        let mut bounds = Vec::new();
+        let mut b = 1e-6;
+        while b < 10_000.0 {
+            bounds.push(b);
+            b *= 2.0;
+        }
+        let n = bounds.len();
+        LatencyHistogram { bounds, counts: vec![0; n + 1], samples: Vec::new() }
+    }
+
+    pub fn record(&mut self, seconds: f64) {
+        let idx = self
+            .bounds
+            .iter()
+            .position(|&b| seconds <= b)
+            .unwrap_or(self.bounds.len());
+        self.counts[idx] += 1;
+        self.samples.push(seconds);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    pub fn mean_s(&self) -> f64 {
+        mean(&self.samples)
+    }
+
+    pub fn percentile_s(&self, q: f64) -> f64 {
+        percentile(&self.samples, q)
+    }
+
+    pub fn summary(&self, name: &str) -> String {
+        format!(
+            "{name}: n={} mean={:.3}s p50={:.3}s p95={:.3}s p99={:.3}s max={:.3}s",
+            self.count(),
+            self.mean_s(),
+            self.percentile_s(50.0),
+            self.percentile_s(95.0),
+            self.percentile_s(99.0),
+            self.percentile_s(100.0),
+        )
+    }
+}
+
+/// Engine-level counters for one run (requests, tokens, policy events).
+#[derive(Debug, Clone, Default)]
+pub struct EngineCounters {
+    pub requests: u64,
+    pub generated_tokens: u64,
+    pub decode_iterations: u64,
+    pub preemptions: u64,
+    pub resumes: u64,
+    pub pruned: u64,
+    pub early_stopped: u64,
+    pub step_scores: u64,
+}
+
+impl EngineCounters {
+    pub fn report(&self) -> String {
+        format!(
+            "requests={} tokens={} iters={} preemptions={} resumes={} \
+             pruned={} early_stopped={} scores={}",
+            self.requests,
+            self.generated_tokens,
+            self.decode_iterations,
+            self.preemptions,
+            self.resumes,
+            self.pruned,
+            self.early_stopped,
+            self.step_scores,
+        )
+    }
+}
+
+/// Wall-clock split between queue-empty (decode) and queue-non-empty
+/// (wait) engine phases — Table 3's decomposition.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TimelineSplit {
+    pub wait_s: f64,
+    pub decode_s: f64,
+}
+
+impl TimelineSplit {
+    pub fn accrue(&mut self, dt: f64, queue_non_empty: bool) {
+        if queue_non_empty {
+            self.wait_s += dt;
+        } else {
+            self.decode_s += dt;
+        }
+    }
+
+    pub fn total(&self) -> f64 {
+        self.wait_s + self.decode_s
+    }
+
+    pub fn wait_fraction(&self) -> f64 {
+        if self.total() == 0.0 {
+            0.0
+        } else {
+            self.wait_s / self.total()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_records_and_summarizes() {
+        let mut h = LatencyHistogram::new();
+        for v in [0.001, 0.002, 0.004, 1.0, 2.0] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert!(h.mean_s() > 0.5 && h.mean_s() < 1.0);
+        assert!(h.percentile_s(100.0) == 2.0);
+        assert!(h.summary("x").contains("n=5"));
+    }
+
+    #[test]
+    fn histogram_handles_extremes() {
+        let mut h = LatencyHistogram::new();
+        h.record(1e-9); // below first bound
+        h.record(1e9); // above last bound
+        assert_eq!(h.count(), 2);
+    }
+
+    #[test]
+    fn timeline_split_accrues() {
+        let mut t = TimelineSplit::default();
+        t.accrue(3.0, true);
+        t.accrue(1.0, false);
+        assert_eq!(t.wait_s, 3.0);
+        assert_eq!(t.decode_s, 1.0);
+        assert!((t.wait_fraction() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn counters_report() {
+        let mut c = EngineCounters::default();
+        c.requests = 2;
+        c.pruned = 5;
+        let r = c.report();
+        assert!(r.contains("requests=2") && r.contains("pruned=5"));
+    }
+}

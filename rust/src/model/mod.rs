@@ -1,0 +1,8 @@
+//! Serving-side model utilities for the e2e engine: the tokenizer shared
+//! with `python/compile/model.py` and the rust-side sampler.
+
+pub mod sampler;
+pub mod tokenizer;
+
+pub use sampler::{sample, SamplerConfig};
+pub use tokenizer::Tokenizer;

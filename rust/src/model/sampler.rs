@@ -1,0 +1,128 @@
+//! Token sampling on the rust side of the serving loop: temperature +
+//! top-k + top-p (the Appendix-B sampling parameters). Operates on raw
+//! f32 logits returned by the decode graph; PJRT never samples.
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy)]
+pub struct SamplerConfig {
+    pub temperature: f64,
+    pub top_k: usize,
+    pub top_p: f64,
+}
+
+impl Default for SamplerConfig {
+    fn default() -> Self {
+        SamplerConfig { temperature: 0.6, top_k: 20, top_p: 0.95 }
+    }
+}
+
+/// Sample a token id from logits.
+pub fn sample(logits: &[f32], cfg: &SamplerConfig, rng: &mut Rng) -> usize {
+    if cfg.temperature <= 0.0 {
+        return argmax(logits);
+    }
+    // Top-k: indices of the k largest logits.
+    let k = cfg.top_k.max(1).min(logits.len());
+    let mut idx: Vec<usize> = (0..logits.len()).collect();
+    idx.select_nth_unstable_by(k - 1, |&a, &b| {
+        logits[b].partial_cmp(&logits[a]).unwrap()
+    });
+    idx.truncate(k);
+    idx.sort_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+
+    // Softmax at temperature over the k candidates.
+    let inv_t = 1.0 / cfg.temperature;
+    let max = logits[idx[0]] as f64;
+    let mut probs: Vec<f64> = idx
+        .iter()
+        .map(|&i| ((logits[i] as f64 - max) * inv_t).exp())
+        .collect();
+    let total: f64 = probs.iter().sum();
+    for p in &mut probs {
+        *p /= total;
+    }
+
+    // Top-p: smallest prefix with cumulative mass >= top_p.
+    let mut cum = 0.0;
+    let mut cut = probs.len();
+    for (i, &p) in probs.iter().enumerate() {
+        cum += p;
+        if cum >= cfg.top_p {
+            cut = i + 1;
+            break;
+        }
+    }
+    probs.truncate(cut);
+    idx[rng.categorical(&probs)]
+}
+
+pub fn argmax(logits: &[f32]) -> usize {
+    logits
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_at_zero_temperature() {
+        let mut rng = Rng::new(0);
+        let logits = [0.1, 5.0, -2.0, 1.0];
+        let cfg = SamplerConfig { temperature: 0.0, top_k: 4, top_p: 1.0 };
+        for _ in 0..10 {
+            assert_eq!(sample(&logits, &cfg, &mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn top_k_one_is_greedy() {
+        let mut rng = Rng::new(1);
+        let logits = [0.0, 3.0, 2.9, -1.0];
+        let cfg = SamplerConfig { temperature: 1.0, top_k: 1, top_p: 1.0 };
+        for _ in 0..10 {
+            assert_eq!(sample(&logits, &cfg, &mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn respects_top_k_support() {
+        let mut rng = Rng::new(2);
+        let logits = [10.0, 9.5, -50.0, -50.0];
+        let cfg = SamplerConfig { temperature: 1.0, top_k: 2, top_p: 1.0 };
+        for _ in 0..100 {
+            let t = sample(&logits, &cfg, &mut rng);
+            assert!(t == 0 || t == 1);
+        }
+    }
+
+    #[test]
+    fn distribution_tracks_probabilities() {
+        let mut rng = Rng::new(3);
+        // logit gap of ln(3): P(0) = 0.75, P(1) = 0.25.
+        let logits = [3.0f32.ln(), 0.0, -100.0, -100.0];
+        let cfg = SamplerConfig { temperature: 1.0, top_k: 4, top_p: 1.0 };
+        let n = 20_000;
+        let zeros = (0..n).filter(|_| sample(&logits, &cfg, &mut rng) == 0).count();
+        let frac = zeros as f64 / n as f64;
+        assert!((frac - 0.75).abs() < 0.02, "frac {frac}");
+    }
+
+    #[test]
+    fn top_p_truncates_tail() {
+        let mut rng = Rng::new(4);
+        // P = [0.5, 0.3, 0.15, 0.05]; top_p=0.7 keeps {0, 1}.
+        let logits: Vec<f32> =
+            [0.5f64, 0.3, 0.15, 0.05].iter().map(|p| p.ln() as f32).collect();
+        let cfg = SamplerConfig { temperature: 1.0, top_k: 4, top_p: 0.7 };
+        for _ in 0..200 {
+            let t = sample(&logits, &cfg, &mut rng);
+            assert!(t <= 1, "sampled tail token {t}");
+        }
+    }
+}

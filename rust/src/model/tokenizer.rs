@@ -1,0 +1,127 @@
+//! Minimal tokenizer for the e2e tiny reasoning LM. Token-id conventions
+//! are shared with `python/compile/model.py` (ModelConfig):
+//! 0 = PAD, 1 = BOS, 2 = EOS ("</think>"), 3 = STEP ("\n\n"),
+//! 4..=13 = digits 0-9, 14 = '+', 15 = '=', 16.. = hashed word ids.
+
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+pub const STEP: i32 = 3;
+pub const DIGIT_BASE: i32 = 4;
+pub const PLUS: i32 = 14;
+pub const EQUALS: i32 = 15;
+const WORD_BASE: i32 = 16;
+
+/// Tokenizer over a fixed vocab size (the LM's `vocab`).
+#[derive(Debug, Clone, Copy)]
+pub struct Tokenizer {
+    pub vocab: usize,
+}
+
+impl Tokenizer {
+    pub fn new(vocab: usize) -> Self {
+        assert!(vocab > WORD_BASE as usize);
+        Tokenizer { vocab }
+    }
+
+    fn word_id(&self, w: &str) -> i32 {
+        // FNV-1a into the word region of the vocab.
+        let mut h: u64 = 0xcbf29ce484222325;
+        for b in w.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        WORD_BASE + (h % (self.vocab as u64 - WORD_BASE as u64)) as i32
+    }
+
+    /// Encode text: words split on whitespace; digits/+/= tokenized
+    /// character-wise; "\n\n" becomes STEP.
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        let mut out = vec![BOS];
+        for seg in text.split("\n\n") {
+            if out.len() > 1 {
+                out.push(STEP);
+            }
+            for w in seg.split_whitespace() {
+                if w.chars().all(|c| c.is_ascii_digit() || c == '+' || c == '=') {
+                    for c in w.chars() {
+                        out.push(match c {
+                            '+' => PLUS,
+                            '=' => EQUALS,
+                            d => DIGIT_BASE + (d as u8 - b'0') as i32,
+                        });
+                    }
+                } else {
+                    out.push(self.word_id(w));
+                }
+            }
+        }
+        out
+    }
+
+    /// Decode the digits of a generated suffix into an answer string
+    /// (what the rule-based verifier parses). Non-digit tokens break the
+    /// number; the last complete run of digits wins.
+    pub fn extract_answer(&self, tokens: &[i32]) -> Option<String> {
+        let mut runs: Vec<String> = Vec::new();
+        let mut cur = String::new();
+        for &t in tokens {
+            if (DIGIT_BASE..DIGIT_BASE + 10).contains(&t) {
+                cur.push((b'0' + (t - DIGIT_BASE) as u8) as char);
+            } else if !cur.is_empty() {
+                runs.push(std::mem::take(&mut cur));
+            }
+        }
+        if !cur.is_empty() {
+            runs.push(cur);
+        }
+        runs.pop()
+    }
+
+    pub fn is_step(&self, t: i32) -> bool {
+        t == STEP
+    }
+
+    pub fn is_eos(&self, t: i32) -> bool {
+        t == EOS
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encodes_structure() {
+        let tk = Tokenizer::new(512);
+        let ids = tk.encode("compute 12+7\n\nthink hard");
+        assert_eq!(ids[0], BOS);
+        assert!(ids.contains(&STEP));
+        assert!(ids.contains(&(DIGIT_BASE + 1))); // '1'
+        assert!(ids.contains(&(DIGIT_BASE + 2))); // '2'
+        assert!(ids.contains(&PLUS));
+        assert!(ids.iter().all(|&t| (t as usize) < 512));
+    }
+
+    #[test]
+    fn word_ids_deterministic_and_in_range() {
+        let tk = Tokenizer::new(512);
+        assert_eq!(tk.word_id("hello"), tk.word_id("hello"));
+        assert_ne!(tk.word_id("hello"), tk.word_id("world"));
+        assert!(tk.word_id("anything") >= WORD_BASE);
+    }
+
+    #[test]
+    fn extracts_last_digit_run() {
+        let tk = Tokenizer::new(512);
+        let toks = [
+            DIGIT_BASE + 3, // 3
+            STEP,
+            DIGIT_BASE + 4,
+            DIGIT_BASE + 2, // 42
+            EOS,
+        ];
+        assert_eq!(tk.extract_answer(&toks).as_deref(), Some("42"));
+        assert_eq!(tk.extract_answer(&[STEP, EOS]), None);
+    }
+}

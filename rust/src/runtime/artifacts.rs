@@ -1,0 +1,241 @@
+//! Artifact registry: parses `artifacts/manifest.json` (graph specs,
+//! parameter layout, scorer bundles) and loads the raw weight slab.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One input argument of a graph.
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// One AOT-lowered graph.
+#[derive(Debug, Clone)]
+pub struct GraphSpec {
+    pub file: String,
+    pub inputs: Vec<ArgSpec>,
+    pub outputs: usize,
+}
+
+/// One parameter tensor inside params.bin.
+#[derive(Debug, Clone)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// Offset/length in f32 elements.
+    pub offset: usize,
+    pub len: usize,
+}
+
+/// The served model's architecture constants.
+#[derive(Debug, Clone, Copy)]
+pub struct ModelConfig {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub max_len: usize,
+    pub prompt_len: usize,
+}
+
+/// Parsed manifest.json.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub fingerprint: String,
+    pub model: ModelConfig,
+    pub graphs: BTreeMap<String, GraphSpec>,
+    pub params_bin: String,
+    pub params: Vec<ParamEntry>,
+    pub scorers: BTreeMap<String, String>,
+    pub prefill_batches: Vec<usize>,
+    pub decode_batches: Vec<usize>,
+    pub scorer_batches: Vec<usize>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        let mc = j.get("model_config");
+        let model = ModelConfig {
+            vocab: mc.get("vocab").as_usize().context("vocab")?,
+            d_model: mc.get("d_model").as_usize().context("d_model")?,
+            n_layers: mc.get("n_layers").as_usize().context("n_layers")?,
+            n_heads: mc.get("n_heads").as_usize().context("n_heads")?,
+            d_ff: mc.get("d_ff").as_usize().context("d_ff")?,
+            max_len: mc.get("max_len").as_usize().context("max_len")?,
+            prompt_len: mc.get("prompt_len").as_usize().context("prompt_len")?,
+        };
+        let mut graphs = BTreeMap::new();
+        for (name, g) in j.get("graphs").as_obj().context("graphs")? {
+            let inputs = g
+                .get("inputs")
+                .as_arr()
+                .context("inputs")?
+                .iter()
+                .map(|a| {
+                    Ok(ArgSpec {
+                        name: a.get("name").as_str().context("input name")?.to_string(),
+                        shape: a.get("shape").as_usize_vec().context("input shape")?,
+                        dtype: a.get("dtype").as_str().context("input dtype")?.to_string(),
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            graphs.insert(
+                name.clone(),
+                GraphSpec {
+                    file: g.get("file").as_str().context("file")?.to_string(),
+                    inputs,
+                    outputs: g.get("outputs").as_usize().context("outputs")?,
+                },
+            );
+        }
+        let params = j
+            .get("params")
+            .as_arr()
+            .context("params")?
+            .iter()
+            .map(|p| {
+                Ok(ParamEntry {
+                    name: p.get("name").as_str().context("param name")?.to_string(),
+                    shape: p.get("shape").as_usize_vec().context("param shape")?,
+                    offset: p.get("offset").as_usize().context("param offset")?,
+                    len: p.get("len").as_usize().context("param len")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let scorers = j
+            .get("scorers")
+            .as_obj()
+            .map(|o| {
+                o.iter()
+                    .filter_map(|(k, v)| v.as_str().map(|s| (k.clone(), s.to_string())))
+                    .collect()
+            })
+            .unwrap_or_default();
+        Ok(Manifest {
+            fingerprint: j.get("fingerprint").as_str().unwrap_or("").to_string(),
+            model,
+            graphs,
+            params_bin: j.get("params_bin").as_str().unwrap_or("params.bin").to_string(),
+            params,
+            scorers,
+            prefill_batches: j.get("prefill_batches").as_usize_vec().unwrap_or_default(),
+            decode_batches: j.get("decode_batches").as_usize_vec().unwrap_or_default(),
+            scorer_batches: j.get("scorer_batches").as_usize_vec().unwrap_or_default(),
+        })
+    }
+}
+
+/// An artifact directory + its manifest.
+#[derive(Debug, Clone)]
+pub struct Artifacts {
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+}
+
+impl Artifacts {
+    pub fn load(dir: impl Into<PathBuf>) -> Result<Artifacts> {
+        let dir = dir.into();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {:?}/manifest.json (run `make artifacts`)", dir))?;
+        Ok(Artifacts { manifest: Manifest::parse(&text)?, dir })
+    }
+
+    /// Default location: $STEP_ARTIFACTS_DIR or ./artifacts.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("STEP_ARTIFACTS_DIR")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    /// The raw f32 parameter slab.
+    pub fn param_data(&self) -> Result<Vec<f32>> {
+        let path = self.dir.join(&self.manifest.params_bin);
+        let bytes = std::fs::read(&path).with_context(|| format!("reading {path:?}"))?;
+        if bytes.len() % 4 != 0 {
+            bail!("params.bin size {} not a multiple of 4", bytes.len());
+        }
+        let mut out = Vec::with_capacity(bytes.len() / 4);
+        for c in bytes.chunks_exact(4) {
+            out.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+        }
+        let expect: usize = self.manifest.params.iter().map(|p| p.len).sum();
+        if out.len() != expect {
+            bail!("params.bin has {} f32s, manifest expects {expect}", out.len());
+        }
+        Ok(out)
+    }
+
+    /// Path of a scorer bundle by name ("sim" / "e2e").
+    pub fn scorer_path(&self, name: &str) -> Result<PathBuf> {
+        let f = self
+            .manifest
+            .scorers
+            .get(name)
+            .with_context(|| format!("scorer '{name}' not in manifest"))?;
+        Ok(self.dir.join(f))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINI: &str = r#"{
+      "fingerprint": "abc",
+      "model_config": {"vocab": 512, "d_model": 256, "n_layers": 4,
+                       "n_heads": 4, "d_ff": 1024, "max_len": 256,
+                       "prompt_len": 64},
+      "graphs": {
+        "decode_b1": {"file": "decode_b1.hlo.txt",
+          "inputs": [{"name": "embed", "shape": [512, 256], "dtype": "float32"}],
+          "outputs": 3}
+      },
+      "params_bin": "params.bin",
+      "params": [{"name": "embed", "shape": [512, 256], "offset": 0, "len": 131072}],
+      "scorers": {"sim": "scorer_sim.json"},
+      "prefill_batches": [1, 4, 8],
+      "decode_batches": [1, 2, 4, 8],
+      "scorer_batches": [1, 8, 64]
+    }"#;
+
+    #[test]
+    fn parses_manifest() {
+        let m = Manifest::parse(MINI).unwrap();
+        assert_eq!(m.model.vocab, 512);
+        assert_eq!(m.model.prompt_len, 64);
+        let g = &m.graphs["decode_b1"];
+        assert_eq!(g.outputs, 3);
+        assert_eq!(g.inputs[0].shape, vec![512, 256]);
+        assert_eq!(m.params[0].len, 131072);
+        assert_eq!(m.scorers["sim"], "scorer_sim.json");
+        assert_eq!(m.decode_batches, vec![1, 2, 4, 8]);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse("not json").is_err());
+    }
+
+    #[test]
+    fn loads_built_artifacts_if_present() {
+        let dir = Artifacts::default_dir();
+        if !dir.join("manifest.json").exists() {
+            return; // artifacts not built in this checkout
+        }
+        let a = Artifacts::load(&dir).unwrap();
+        assert!(a.manifest.graphs.contains_key("decode_b1"));
+        let data = a.param_data().unwrap();
+        assert_eq!(data.len(), a.manifest.params.iter().map(|p| p.len).sum::<usize>());
+        assert!(a.scorer_path("sim").unwrap().exists());
+    }
+}

@@ -1,0 +1,189 @@
+//! Typed executors over the AOT graphs: prefill, decode-step, scorer.
+//!
+//! Outputs of jax-lowered graphs arrive as a single tuple value (we lower
+//! with `return_tuple=True`; the 0.5.1-era PJRT client does not untuple),
+//! so each call synchronizes the tuple to host literals and decomposes
+//! it. The KV cache therefore round-trips through the host each step —
+//! acceptable at the e2e demo scale and noted as a known cost in
+//! EXPERIMENTS.md §Perf.
+
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::{literal_f32, literal_i32, Runtime};
+
+fn run_tuple(
+    exe: &xla::PjRtLoadedExecutable,
+    args: &[&xla::Literal],
+    expect: usize,
+) -> Result<Vec<xla::Literal>> {
+    let outs = exe.execute(args).map_err(|e| anyhow!("pjrt execute: {e:?}"))?;
+    let first = outs
+        .first()
+        .and_then(|r| r.first())
+        .context("pjrt execute returned no outputs")?;
+    let mut lit = first
+        .to_literal_sync()
+        .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+    let parts = lit
+        .decompose_tuple()
+        .map_err(|e| anyhow!("decompose tuple: {e:?}"))?;
+    if parts.len() != expect {
+        bail!("graph returned {} outputs, expected {expect}", parts.len());
+    }
+    Ok(parts)
+}
+
+fn to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow!("literal to_vec<f32>: {e:?}"))
+}
+
+/// Prefill executor for one batch-size variant.
+pub struct PrefillExec {
+    exe: Rc<xla::PjRtLoadedExecutable>,
+    pub batch: usize,
+    pub prompt_len: usize,
+    pub vocab: usize,
+    pub d_model: usize,
+}
+
+impl PrefillExec {
+    pub fn load(rt: &mut Runtime, batch: usize) -> Result<PrefillExec> {
+        let m = rt.artifacts.manifest.model;
+        let exe = rt.executable(&format!("prefill_b{batch}"))?;
+        Ok(PrefillExec {
+            exe,
+            batch,
+            prompt_len: m.prompt_len,
+            vocab: m.vocab,
+            d_model: m.d_model,
+        })
+    }
+
+    /// tokens: [batch * prompt_len] i32 (PAD-padded rows).
+    /// Returns (last-position logits [B][V], last hidden [B][D], kv).
+    pub fn run(
+        &self,
+        params: &[xla::Literal],
+        tokens: &[i32],
+        true_lens: &[usize],
+    ) -> Result<(Vec<Vec<f32>>, Vec<Vec<f32>>, xla::Literal)> {
+        if tokens.len() != self.batch * self.prompt_len {
+            bail!("prefill tokens len {} != {}", tokens.len(), self.batch * self.prompt_len);
+        }
+        let tok =
+            literal_i32(tokens, &[self.batch as i64, self.prompt_len as i64])?;
+        let mut args: Vec<&xla::Literal> = params.iter().collect();
+        args.push(&tok);
+        let parts = run_tuple(&self.exe, &args, 3)?;
+        let logits = to_f32(&parts[0])?; // [B, P, V]
+        let hidden = to_f32(&parts[1])?; // [B, P, D]
+        let kv = parts.into_iter().nth(2).unwrap();
+        let mut out_logits = Vec::with_capacity(self.batch);
+        let mut out_hidden = Vec::with_capacity(self.batch);
+        for b in 0..self.batch {
+            let last = true_lens[b].min(self.prompt_len) - 1;
+            let lo = (b * self.prompt_len + last) * self.vocab;
+            out_logits.push(logits[lo..lo + self.vocab].to_vec());
+            let ho = (b * self.prompt_len + last) * self.d_model;
+            out_hidden.push(hidden[ho..ho + self.d_model].to_vec());
+        }
+        Ok((out_logits, out_hidden, kv))
+    }
+}
+
+/// Decode-step executor for one batch-size variant.
+pub struct DecodeExec {
+    exe: Rc<xla::PjRtLoadedExecutable>,
+    pub batch: usize,
+    pub vocab: usize,
+    pub d_model: usize,
+}
+
+impl DecodeExec {
+    pub fn load(rt: &mut Runtime, batch: usize) -> Result<DecodeExec> {
+        let m = rt.artifacts.manifest.model;
+        let exe = rt.executable(&format!("decode_b{batch}"))?;
+        Ok(DecodeExec { exe, batch, vocab: m.vocab, d_model: m.d_model })
+    }
+
+    /// One decode iteration. `kv` is the cache literal from prefill or the
+    /// previous step. Returns (logits [B][V], hidden [B][D], kv').
+    pub fn run(
+        &self,
+        params: &[xla::Literal],
+        kv: &xla::Literal,
+        token: &[i32],
+        pos: &[i32],
+    ) -> Result<(Vec<Vec<f32>>, Vec<Vec<f32>>, xla::Literal)> {
+        if token.len() != self.batch || pos.len() != self.batch {
+            bail!("decode batch mismatch");
+        }
+        let tok = literal_i32(token, &[self.batch as i64])?;
+        let pos = literal_i32(pos, &[self.batch as i64])?;
+        let mut args: Vec<&xla::Literal> = params.iter().collect();
+        args.push(kv);
+        args.push(&tok);
+        args.push(&pos);
+        let parts = run_tuple(&self.exe, &args, 3)?;
+        let logits = to_f32(&parts[0])?;
+        let hidden = to_f32(&parts[1])?;
+        let kv = parts.into_iter().nth(2).unwrap();
+        let out_logits =
+            logits.chunks(self.vocab).map(|c| c.to_vec()).collect();
+        let out_hidden =
+            hidden.chunks(self.d_model).map(|c| c.to_vec()).collect();
+        Ok((out_logits, out_hidden, kv))
+    }
+}
+
+/// Scorer executor (the HLO path cross-validated against the native MLP).
+pub struct ScorerExec {
+    exe: Rc<xla::PjRtLoadedExecutable>,
+    pub batch: usize,
+    pub d: usize,
+    w1: xla::Literal,
+    b1: xla::Literal,
+    w2: xla::Literal,
+    b2: xla::Literal,
+}
+
+impl ScorerExec {
+    /// Load the `scorer_d{d}_b{batch}` graph plus the weight bundle
+    /// `scorer_<which>.json` ("sim" or "e2e").
+    pub fn load(rt: &mut Runtime, which: &str, batch: usize) -> Result<ScorerExec> {
+        let path = rt.artifacts.scorer_path(which)?;
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?}"))?;
+        let blob = crate::util::json::Json::parse(&text)
+            .map_err(|e| anyhow!("scorer json: {e}"))?;
+        let d = blob.get("d").as_usize().context("d")?;
+        let hidden = blob.get("hidden").as_usize().context("hidden")?;
+        let w1v = blob.get("w1").as_f32_vec().context("w1")?;
+        let b1v = blob.get("b1").as_f32_vec().context("b1")?;
+        let w2v = blob.get("w2").as_f32_vec().context("w2")?;
+        let b2v = blob.get("b2").as_f32_vec().context("b2")?;
+        let exe = rt.executable(&format!("scorer_d{d}_b{batch}"))?;
+        Ok(ScorerExec {
+            exe,
+            batch,
+            d,
+            w1: literal_f32(&w1v, &[d as i64, hidden as i64])?,
+            b1: literal_f32(&b1v, &[hidden as i64])?,
+            w2: literal_f32(&w2v, &[hidden as i64, 1])?,
+            b2: literal_f32(&b2v, &[1])?,
+        })
+    }
+
+    /// Score `batch` hidden states (flat [batch * d]).
+    pub fn run(&self, h: &[f32]) -> Result<Vec<f32>> {
+        if h.len() != self.batch * self.d {
+            bail!("scorer input len {} != {}", h.len(), self.batch * self.d);
+        }
+        let hl = literal_f32(h, &[self.batch as i64, self.d as i64])?;
+        let args = [&hl, &self.w1, &self.b1, &self.w2, &self.b2];
+        let parts = run_tuple(&self.exe, &args, 1)?;
+        to_f32(&parts[0])
+    }
+}

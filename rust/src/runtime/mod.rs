@@ -1,0 +1,114 @@
+//! PJRT runtime: loads the AOT artifacts `python/compile/aot.py` emits
+//! (HLO text + manifest + weights) and executes them on the `xla` crate's
+//! CPU PJRT client. Python never runs at serving time — this module is
+//! the only bridge between the rust coordinator and the L2/L1 graphs.
+//!
+//! Interchange is HLO *text*: jax >= 0.5 emits HloModuleProto with 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md and aot.py).
+
+pub mod artifacts;
+pub mod exec;
+
+pub use artifacts::{Artifacts, GraphSpec, Manifest, ParamEntry};
+pub use exec::{DecodeExec, PrefillExec, ScorerExec};
+
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// A PJRT client plus an executable cache keyed by graph name.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub artifacts: Artifacts,
+    cache: HashMap<String, Rc<xla::PjRtLoadedExecutable>>,
+}
+
+impl Runtime {
+    /// CPU PJRT client over an artifact directory.
+    pub fn new(artifact_dir: impl Into<std::path::PathBuf>) -> Result<Runtime> {
+        let artifacts = Artifacts::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Runtime { client, artifacts, cache: HashMap::new() })
+    }
+
+    /// Compile (once) and return the executable for a manifest graph.
+    pub fn executable(&mut self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self
+            .artifacts
+            .manifest
+            .graphs
+            .get(name)
+            .with_context(|| format!("graph '{name}' not in manifest"))?;
+        let path = self.artifacts.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .map_err(|e| anyhow!("parsing HLO text {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling graph '{name}': {e:?}"))?;
+        let exe = Rc::new(exe);
+        self.cache.insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    pub fn compiled_count(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// Model parameters as PJRT literals, in manifest order (the leading
+    /// arguments of every prefill/decode call).
+    pub fn param_literals(&self) -> Result<Vec<xla::Literal>> {
+        let data = self.artifacts.param_data()?;
+        let mut out = Vec::with_capacity(self.artifacts.manifest.params.len());
+        for p in &self.artifacts.manifest.params {
+            let slice = &data[p.offset..p.offset + p.len];
+            let dims: Vec<i64> = p.shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(slice)
+                .reshape(&dims)
+                .map_err(|e| anyhow!("reshaping param {}: {e:?}", p.name))?;
+            out.push(lit);
+        }
+        Ok(out)
+    }
+
+    /// Upload literals to device buffers (for `execute_b` hot loops).
+    pub fn to_device(&self, lits: &[xla::Literal]) -> Result<Vec<xla::PjRtBuffer>> {
+        lits.iter()
+            .map(|l| {
+                self.client
+                    .buffer_from_host_literal(None, l)
+                    .map_err(|e| anyhow!("uploading literal: {e:?}"))
+            })
+            .collect()
+    }
+}
+
+/// Helper: f32 literal of the given shape from a flat slice.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    if n as usize != data.len() {
+        bail!("literal_f32: {} elements vs dims {:?}", data.len(), dims);
+    }
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+/// Helper: i32 literal of the given shape.
+pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    if n as usize != data.len() {
+        bail!("literal_i32: {} elements vs dims {:?}", data.len(), dims);
+    }
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| anyhow!("reshape: {e:?}"))
+}

@@ -1,0 +1,88 @@
+//! GPU memory model (the paper's testbed: one 96 GB NVIDIA GH200).
+//!
+//! The paper's latency bottleneck is *discrete*: once the KV cache cannot
+//! grow, vLLM preempts traces into a waiting queue. That behaviour depends
+//! only on the memory budget arithmetic reproduced here — total HBM x
+//! utilization knob (`gpu_memory_utilization`, §5.3.5 sweeps 0.5..0.9)
+//! minus model weights, divided into PagedAttention blocks.
+
+/// Physical GPU description.
+#[derive(Debug, Clone, Copy)]
+pub struct GpuSpec {
+    pub total_bytes: u64,
+    /// vLLM-style `gpu_memory_utilization` (fraction of HBM usable).
+    pub mem_util: f64,
+}
+
+impl GpuSpec {
+    /// The paper's 96 GB GH200 at a given memory-utilization setting.
+    pub fn gh200(mem_util: f64) -> Self {
+        GpuSpec { total_bytes: 96 * (1 << 30), mem_util }
+    }
+
+    /// Bytes available for KV cache after weights + activation slack.
+    pub fn kv_budget_bytes(&self, weight_bytes: u64, activation_bytes: u64) -> u64 {
+        let usable = (self.total_bytes as f64 * self.mem_util) as u64;
+        usable.saturating_sub(weight_bytes + activation_bytes)
+    }
+
+    /// KV capacity in tokens for a model with `kv_bytes_per_token`.
+    pub fn kv_capacity_tokens(
+        &self,
+        weight_bytes: u64,
+        activation_bytes: u64,
+        kv_bytes_per_token: u64,
+    ) -> usize {
+        (self.kv_budget_bytes(weight_bytes, activation_bytes) / kv_bytes_per_token.max(1))
+            as usize
+    }
+
+    /// Number of PagedAttention blocks of `block_size` tokens.
+    pub fn kv_capacity_blocks(
+        &self,
+        weight_bytes: u64,
+        activation_bytes: u64,
+        kv_bytes_per_token: u64,
+        block_size: usize,
+    ) -> usize {
+        self.kv_capacity_tokens(weight_bytes, activation_bytes, kv_bytes_per_token)
+            / block_size
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gh200_budget() {
+        let g = GpuSpec::gh200(0.9);
+        let budget = g.kv_budget_bytes(16 << 30, 2 << 30);
+        // 0.9*96 GiB - 18 GiB = 68.4 GiB
+        assert!((budget as f64 / (1u64 << 30) as f64 - 68.4).abs() < 0.1);
+    }
+
+    #[test]
+    fn capacity_scales_with_util() {
+        let lo = GpuSpec::gh200(0.5).kv_capacity_tokens(16 << 30, 0, 150_000);
+        let hi = GpuSpec::gh200(0.9).kv_capacity_tokens(16 << 30, 0, 150_000);
+        assert!(hi > lo);
+        // 0.9: (86.4-16) GiB / 150 KB ~ 503k tokens.
+        assert!((450_000..560_000).contains(&hi), "hi={hi}");
+    }
+
+    #[test]
+    fn weights_larger_than_budget_saturate_to_zero() {
+        let g = GpuSpec::gh200(0.5);
+        assert_eq!(g.kv_budget_bytes(60 << 30, 0), 0);
+        assert_eq!(g.kv_capacity_tokens(60 << 30, 0, 100_000), 0);
+    }
+
+    #[test]
+    fn block_quantization() {
+        let g = GpuSpec::gh200(0.9);
+        let tokens = g.kv_capacity_tokens(16 << 30, 0, 150_000);
+        let blocks = g.kv_capacity_blocks(16 << 30, 0, 150_000, 16);
+        assert_eq!(blocks, tokens / 16);
+    }
+}

@@ -1,0 +1,11 @@
+//! Simulation substrates: the GPU memory model, serving latency model,
+//! synthetic trace generator, benchmark/model profiles, the rule-based
+//! verifier, and the discrete-event serving engine that drives every
+//! paper-scale experiment.
+
+pub mod des;
+pub mod gpu;
+pub mod profiles;
+pub mod timing;
+pub mod tracegen;
+pub mod verifier;

@@ -1,0 +1,336 @@
+//! Model + benchmark profiles: the calibration constants behind the
+//! paper-scale experiments (DESIGN.md §3 substitution table).
+//!
+//! Model profiles carry real architecture numbers (KV bytes/token, weight
+//! bytes) for the three paper models, plus timing coefficients calibrated
+//! so the CoT and SC rows of Table 1 land near the paper's latencies.
+//! Benchmark profiles carry per-(model, benchmark) difficulty/length
+//! targets taken from Table 1's CoT rows; everything else (SC gains,
+//! method orderings, wait/decode splits) must *emerge* from the engine
+//! mechanics rather than being set directly.
+
+use super::timing::TimingModel;
+
+/// The three reasoning models of §5.1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ModelId {
+    Qwen3_4B,
+    DeepSeek8B,
+    Phi4_14B,
+}
+
+impl ModelId {
+    pub const ALL: [ModelId; 3] = [ModelId::Qwen3_4B, ModelId::DeepSeek8B, ModelId::Phi4_14B];
+
+    pub fn parse(s: &str) -> Option<ModelId> {
+        match s.to_ascii_lowercase().as_str() {
+            "qwen3-4b" | "qwen" | "qwen3-4b-thinking-2507" => Some(ModelId::Qwen3_4B),
+            "deepseek-8b" | "deepseek" | "deepseek-r1-0528-qwen3-8b" => Some(ModelId::DeepSeek8B),
+            "phi-4" | "phi" | "phi-4-reasoning-plus" => Some(ModelId::Phi4_14B),
+            _ => None,
+        }
+    }
+}
+
+/// Serving-relevant description of a reasoning LLM.
+#[derive(Debug, Clone)]
+pub struct ModelProfile {
+    pub id: ModelId,
+    pub name: &'static str,
+    /// Last-layer hidden size (the step scorer's input dim in the paper).
+    pub hidden_dim: usize,
+    pub n_layers: usize,
+    /// bf16 weights resident in HBM.
+    pub weight_bytes: u64,
+    /// KV bytes per token: layers * 2 * kv_heads * head_dim * 2 (bf16).
+    pub kv_bytes_per_token: u64,
+    /// Activation/workspace slack subtracted from the KV budget.
+    pub activation_bytes: u64,
+    pub timing: TimingModel,
+    /// Generation cap (Appendix B: 64k Qwen/DeepSeek, 32k Phi).
+    pub max_gen_tokens: usize,
+    /// Appendix-B sampling parameters (metadata; sampling itself happens
+    /// in the e2e backend, the simulator consumes outcome distributions).
+    pub temperature: f64,
+    pub top_p: f64,
+    pub top_k: usize,
+}
+
+impl ModelProfile {
+    pub fn get(id: ModelId) -> ModelProfile {
+        match id {
+            // Qwen3-4B-Thinking-2507: 36 layers, GQA 8 kv-heads x 128.
+            ModelId::Qwen3_4B => ModelProfile {
+                id,
+                name: "Qwen3-4B-Thinking-2507",
+                hidden_dim: 2560,
+                n_layers: 36,
+                weight_bytes: 8 << 30,
+                kv_bytes_per_token: 36 * 2 * 8 * 128 * 2, // 147 KB
+                activation_bytes: 10 << 30,
+                timing: TimingModel {
+                    c0: 0.0052,
+                    c1: 4.0e-5,
+                    c2: 5.4e-8,
+                    p0: 0.015,
+                    p1: 6.0e-5,
+                },
+                max_gen_tokens: 64_000,
+                temperature: 0.6,
+                top_p: 0.95,
+                top_k: 20,
+            },
+            // DeepSeek-R1-0528-Qwen3-8B: Qwen3-8B base, 36 layers, 8x128 kv.
+            ModelId::DeepSeek8B => ModelProfile {
+                id,
+                name: "DeepSeek-R1-0528-Qwen3-8B",
+                hidden_dim: 4096,
+                n_layers: 36,
+                weight_bytes: 16 << 30,
+                kv_bytes_per_token: 36 * 2 * 8 * 128 * 2, // 147 KB
+                activation_bytes: 10 << 30,
+                timing: TimingModel {
+                    c0: 0.0062,
+                    c1: 6.0e-5,
+                    c2: 5.5e-8,
+                    p0: 0.02,
+                    p1: 1.0e-4,
+                },
+                max_gen_tokens: 64_000,
+                temperature: 0.6,
+                top_p: 0.95,
+                top_k: 20,
+            },
+            // Phi-4-reasoning-plus: 14B dense, 40 layers, 10x128 kv.
+            ModelId::Phi4_14B => ModelProfile {
+                id,
+                name: "Phi-4-reasoning-plus",
+                hidden_dim: 5120,
+                n_layers: 40,
+                weight_bytes: 28 << 30,
+                kv_bytes_per_token: 40 * 2 * 10 * 128 * 2, // 205 KB
+                activation_bytes: 10 << 30,
+                timing: TimingModel {
+                    c0: 0.0095,
+                    c1: 9.0e-5,
+                    c2: 8.0e-8,
+                    p0: 0.03,
+                    p1: 1.5e-4,
+                },
+                max_gen_tokens: 32_000,
+                temperature: 0.8,
+                top_p: 0.95,
+                top_k: 50,
+            },
+        }
+    }
+}
+
+/// The six evaluation benchmarks of §5.1 (HMMT-24/25 reported jointly).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BenchId {
+    Aime25,
+    Hmmt2425,
+    GpqaDiamond,
+    EquiBench,
+    DivLogicEval,
+}
+
+impl BenchId {
+    pub const ALL: [BenchId; 5] = [
+        BenchId::Aime25,
+        BenchId::Hmmt2425,
+        BenchId::GpqaDiamond,
+        BenchId::EquiBench,
+        BenchId::DivLogicEval,
+    ];
+
+    pub fn parse(s: &str) -> Option<BenchId> {
+        match s.to_ascii_lowercase().as_str() {
+            "aime-25" | "aime25" | "aime" => Some(BenchId::Aime25),
+            "hmmt" | "hmmt-24/25" | "hmmt2425" | "hmmt-25" => Some(BenchId::Hmmt2425),
+            "gpqa" | "gpqa-d" | "gpqa-diamond" => Some(BenchId::GpqaDiamond),
+            "equibench" | "equi" => Some(BenchId::EquiBench),
+            "divlogiceval" | "divlogic" => Some(BenchId::DivLogicEval),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BenchId::Aime25 => "AIME-25",
+            BenchId::Hmmt2425 => "HMMT-24/25",
+            BenchId::GpqaDiamond => "GPQA-D",
+            BenchId::EquiBench => "EquiBench",
+            BenchId::DivLogicEval => "DivLogicEval",
+        }
+    }
+}
+
+/// Benchmark-level workload description.
+#[derive(Debug, Clone)]
+pub struct BenchProfile {
+    pub id: BenchId,
+    pub n_questions: usize,
+    /// 0 = open numeric answer (competition math); else MCQ choice count.
+    pub n_choices: usize,
+    /// Zipf exponent of the wrong-answer distribution (higher = more
+    /// concentrated wrong answers = harder for majority voting).
+    pub wrong_answer_zipf: f64,
+    /// Number of distinct wrong-answer candidates.
+    pub wrong_answer_pool: usize,
+    pub prompt_tokens: usize,
+    /// Beta concentration for per-question solve rates. Lower = more
+    /// bimodal question difficulty = larger SC-over-CoT gains.
+    pub difficulty_kappa: f64,
+    /// Mean generated tokens per reasoning step (paper App. D: ~1e2).
+    pub tokens_per_step: f64,
+    /// Evaluation-harness concurrency: how many questions' trace groups
+    /// share the GPU at once. The paper submits whole benchmarks to
+    /// vLLM, so on short-trace benchmarks (GPQA/EquiBench/DivLogicEval)
+    /// neighbouring questions keep the KV pool saturated even though a
+    /// single question would fit — without this the memory trigger never
+    /// fires there and STEP degenerates to SC, contradicting Table 1.
+    pub eval_concurrency: f64,
+}
+
+impl BenchProfile {
+    pub fn get(id: BenchId) -> BenchProfile {
+        match id {
+            BenchId::Aime25 => BenchProfile {
+                id,
+                n_questions: 30,
+                n_choices: 0,
+                wrong_answer_zipf: 1.1,
+                wrong_answer_pool: 40,
+                prompt_tokens: 120,
+                difficulty_kappa: 1.1,
+                tokens_per_step: 115.0,
+                eval_concurrency: 1.0,
+            },
+            BenchId::Hmmt2425 => BenchProfile {
+                id,
+                n_questions: 60, // HMMT-24 + HMMT-25, 30 each
+                n_choices: 0,
+                wrong_answer_zipf: 1.1,
+                wrong_answer_pool: 40,
+                prompt_tokens: 130,
+                difficulty_kappa: 1.0,
+                tokens_per_step: 115.0,
+                eval_concurrency: 1.0,
+            },
+            BenchId::GpqaDiamond => BenchProfile {
+                id,
+                n_questions: 198,
+                n_choices: 4,
+                wrong_answer_zipf: 1.4,
+                wrong_answer_pool: 3,
+                prompt_tokens: 600,
+                difficulty_kappa: 1.6,
+                tokens_per_step: 100.0,
+                eval_concurrency: 2.0,
+            },
+            BenchId::EquiBench => BenchProfile {
+                id,
+                n_questions: 200,
+                n_choices: 2,
+                wrong_answer_zipf: 1.0,
+                wrong_answer_pool: 1,
+                prompt_tokens: 800,
+                difficulty_kappa: 1.6,
+                tokens_per_step: 95.0,
+                eval_concurrency: 2.0,
+            },
+            BenchId::DivLogicEval => BenchProfile {
+                id,
+                n_questions: 200,
+                n_choices: 6,
+                wrong_answer_zipf: 1.3,
+                wrong_answer_pool: 5,
+                prompt_tokens: 300,
+                difficulty_kappa: 1.4,
+                tokens_per_step: 100.0,
+                eval_concurrency: 2.0,
+            },
+        }
+    }
+}
+
+/// Per-(model, benchmark) calibration targets, from Table 1's CoT rows:
+/// (mean solve rate, mean generated tokens in thousands).
+pub fn cot_calibration(model: ModelId, bench: BenchId) -> (f64, f64) {
+    use BenchId::*;
+    use ModelId::*;
+    match (model, bench) {
+        (Qwen3_4B, Aime25) => (0.813, 22.7),
+        (Qwen3_4B, Hmmt2425) => (0.517, 28.3),
+        (Qwen3_4B, GpqaDiamond) => (0.658, 8.9),
+        (Qwen3_4B, EquiBench) => (0.672, 7.8),
+        (Qwen3_4B, DivLogicEval) => (0.510, 8.7),
+        (DeepSeek8B, Aime25) => (0.775, 26.4),
+        (DeepSeek8B, Hmmt2425) => (0.552, 31.5),
+        (DeepSeek8B, GpqaDiamond) => (0.623, 11.4),
+        (DeepSeek8B, EquiBench) => (0.695, 5.3),
+        (DeepSeek8B, DivLogicEval) => (0.390, 5.7),
+        (Phi4_14B, Aime25) => (0.783, 16.0),
+        (Phi4_14B, Hmmt2425) => (0.552, 21.5),
+        (Phi4_14B, GpqaDiamond) => (0.695, 11.9),
+        (Phi4_14B, EquiBench) => (0.620, 12.1),
+        (Phi4_14B, DivLogicEval) => (0.423, 8.2),
+    }
+}
+
+/// Length ratio incorrect/correct traces (Fig. 2b: 42.5k vs 35.3k).
+pub const INCORRECT_LEN_RATIO: f64 = 1.204;
+
+/// Lognormal sigma of per-trace total lengths.
+pub const TRACE_LEN_SIGMA: f64 = 0.30;
+
+/// Lognormal sigma of per-step token counts.
+pub const STEP_TOKENS_SIGMA: f64 = 0.45;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profiles_exist_for_all_models() {
+        for id in ModelId::ALL {
+            let p = ModelProfile::get(id);
+            assert!(p.kv_bytes_per_token > 100_000);
+            assert!(p.weight_bytes > 1 << 30);
+            assert!(p.timing.c0 > 0.0);
+        }
+    }
+
+    #[test]
+    fn kv_bytes_match_arch() {
+        // 36 layers * 2 (K,V) * 8 heads * 128 dim * 2 bytes = 147456.
+        assert_eq!(ModelProfile::get(ModelId::Qwen3_4B).kv_bytes_per_token, 147_456);
+        assert_eq!(ModelProfile::get(ModelId::Phi4_14B).kv_bytes_per_token, 204_800);
+    }
+
+    #[test]
+    fn calibration_covers_grid() {
+        for m in ModelId::ALL {
+            for b in BenchId::ALL {
+                let (acc, tok) = cot_calibration(m, b);
+                assert!((0.0..=1.0).contains(&acc));
+                assert!(tok > 1.0 && tok < 50.0);
+            }
+        }
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        assert_eq!(ModelId::parse("qwen3-4b"), Some(ModelId::Qwen3_4B));
+        assert_eq!(BenchId::parse("aime-25"), Some(BenchId::Aime25));
+        assert_eq!(BenchId::parse("nope"), None);
+    }
+
+    #[test]
+    fn phi_shorter_cap() {
+        assert_eq!(ModelProfile::get(ModelId::Phi4_14B).max_gen_tokens, 32_000);
+        assert_eq!(ModelProfile::get(ModelId::Qwen3_4B).max_gen_tokens, 64_000);
+    }
+}

@@ -1,0 +1,98 @@
+//! Latency model for the simulated serving engine.
+//!
+//! One continuous-batching decode iteration (every running trace emits one
+//! token) costs
+//!
+//! ```text
+//! T_iter(B, K) = c0 + c1 * B + c2 * K          (seconds)
+//! ```
+//!
+//! where `B` is the running batch and `K` the total resident KV tokens:
+//! `c0` captures fixed per-iteration overhead (kernel launches, sampler),
+//! `c1` per-sequence compute (MLP/QKV GEMM rows), and `c2` the KV-cache
+//! bandwidth term (attention reads the whole resident cache each
+//! iteration). Prefill / recompute-on-resume costs `p0 + p1 * tokens`.
+//!
+//! Over an interval of `d` iterations with a fixed live set, K grows by B
+//! per iteration, so the total time has the closed form used by
+//! [`TimingModel::decode_interval`] — this is what lets the discrete-event
+//! simulator jump between events in O(1) instead of iterating tokens.
+//! Coefficients per model are calibrated against Table 1's CoT/SC rows
+//! (see `sim::profiles`).
+
+/// Per-model latency coefficients (seconds).
+#[derive(Debug, Clone, Copy)]
+pub struct TimingModel {
+    pub c0: f64,
+    pub c1: f64,
+    pub c2: f64,
+    pub p0: f64,
+    pub p1: f64,
+}
+
+impl TimingModel {
+    /// One decode iteration with batch `b` and `k` resident KV tokens.
+    pub fn decode_iter(&self, b: usize, k: usize) -> f64 {
+        self.c0 + self.c1 * b as f64 + self.c2 * k as f64
+    }
+
+    /// Total wall-clock for `d` iterations starting at `k0` resident
+    /// tokens with a fixed running batch `b` (K grows by b per iter):
+    /// sum_{i=0..d-1} [c0 + c1 b + c2 (k0 + i b)].
+    pub fn decode_interval(&self, b: usize, k0: usize, d: u64) -> f64 {
+        if d == 0 || b == 0 {
+            return 0.0;
+        }
+        let df = d as f64;
+        let bf = b as f64;
+        df * (self.c0 + self.c1 * bf + self.c2 * k0 as f64)
+            + self.c2 * bf * df * (df - 1.0) / 2.0
+    }
+
+    /// Prefill (or recompute-on-resume) of `tokens` prompt tokens.
+    pub fn prefill(&self, tokens: usize) -> f64 {
+        self.p0 + self.p1 * tokens as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TM: TimingModel =
+        TimingModel { c0: 0.005, c1: 1e-4, c2: 3e-8, p0: 0.01, p1: 1e-5 };
+
+    #[test]
+    fn interval_matches_iterated_sum() {
+        for &(b, k0, d) in &[(1usize, 0usize, 10u64), (64, 400_000, 137), (8, 1000, 1)] {
+            let mut total = 0.0;
+            let mut k = k0;
+            for _ in 0..d {
+                total += TM.decode_iter(b, k);
+                k += b;
+            }
+            let closed = TM.decode_interval(b, k0, d);
+            assert!(
+                (total - closed).abs() < 1e-9 * total.max(1.0),
+                "b={b} k0={k0} d={d}: {total} vs {closed}"
+            );
+        }
+    }
+
+    #[test]
+    fn zero_cases() {
+        assert_eq!(TM.decode_interval(0, 100, 10), 0.0);
+        assert_eq!(TM.decode_interval(4, 100, 0), 0.0);
+    }
+
+    #[test]
+    fn monotonic_in_batch_and_kv() {
+        assert!(TM.decode_iter(2, 100) > TM.decode_iter(1, 100));
+        assert!(TM.decode_iter(1, 200) > TM.decode_iter(1, 100));
+    }
+
+    #[test]
+    fn prefill_linear() {
+        assert!((TM.prefill(100) - (0.01 + 1e-3)).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,480 @@
+//! Synthetic reasoning-trace generator — the data substrate standing in
+//! for sampling real reasoning LLMs (DESIGN.md §3).
+//!
+//! Mirrors the generative process `python/compile/scorer.py` trains the
+//! step scorer on (parameters are loaded from the exported
+//! `artifacts/scorer_sim.json`, keeping the two sides in sync):
+//!
+//!   question q:  solve rate p_q ~ Beta(k*mu, k*(1-mu)),
+//!                nuisance direction w_q ~ N(0, I) * c_q / sqrt(d)
+//!   trace t:     label y ~ Bern(p_q), latent quality g = (2y-1) + nu
+//!   step n:      h_n = s0 * rho(n) * g * u + w_q + sigma_h * eps,
+//!                rho(n) = n / (n + n0)
+//!
+//! plus everything the serving engine additionally needs: per-step token
+//! counts (App. D: ~1e2 tokens/step), trace lengths with the Fig.-2b
+//! incorrect-longer skew, per-step token confidences (the DeepConf
+//! baseline's weaker signal), and final answers over a wrong-answer
+//! distribution (controls when majority voting fails).
+
+use crate::util::rng::Rng;
+
+use super::profiles::{
+    cot_calibration, BenchId, BenchProfile, ModelId, ModelProfile,
+    INCORRECT_LEN_RATIO, STEP_TOKENS_SIGMA, TRACE_LEN_SIGMA,
+};
+
+/// Hidden-state generator parameters (mirror of python GenParams; loaded
+/// from artifacts/scorer_sim.json `gen` + `signal_dir`).
+#[derive(Debug, Clone)]
+pub struct GenParams {
+    pub d: usize,
+    pub s0: f64,
+    pub n0: f64,
+    pub sigma_h: f64,
+    pub sigma_t: f64,
+    pub c_q: f64,
+    /// Transient early-trace offset along the signal direction (the
+    /// model's "exploration" phase before committing): amplitude ~
+    /// N(0, sigma_a) per trace, decaying as exp(-n/tau). This is what
+    /// keeps early-prefix ranking below the late-prefix plateau (Fig 5).
+    pub sigma_a: f64,
+    pub tau: f64,
+    /// Unit signal direction (length d).
+    pub signal_dir: Vec<f32>,
+}
+
+impl GenParams {
+    /// Parse the `gen` + `signal_dir` fields of a scorer bundle JSON
+    /// (artifacts/scorer_sim.json) so the rust generator and the
+    /// python-trained scorer share one distribution.
+    pub fn from_json(blob: &crate::util::json::Json) -> anyhow::Result<GenParams> {
+        use anyhow::Context;
+        let g = blob.get("gen");
+        let signal_dir = blob.get("signal_dir").as_f32_vec().context("signal_dir")?;
+        let gp = GenParams {
+            d: g.get("d").as_usize().context("gen.d")?,
+            s0: g.get("s0").as_f64().context("gen.s0")?,
+            n0: g.get("n0").as_f64().context("gen.n0")?,
+            sigma_h: g.get("sigma_h").as_f64().context("gen.sigma_h")?,
+            sigma_t: g.get("sigma_t").as_f64().context("gen.sigma_t")?,
+            c_q: g.get("c_q").as_f64().context("gen.c_q")?,
+            sigma_a: g.get("sigma_a").as_f64().unwrap_or(0.0),
+            tau: g.get("tau").as_f64().unwrap_or(45.0),
+            signal_dir,
+        };
+        anyhow::ensure!(gp.signal_dir.len() == gp.d, "signal_dir/d mismatch");
+        Ok(gp)
+    }
+
+    /// Built-in defaults matching python `GenParams()` — used by tests
+    /// that must run without artifacts. The signal direction here is a
+    /// basis vector; real runs load the trained direction from JSON.
+    pub fn default_d64() -> GenParams {
+        let mut dir = vec![0.0f32; 64];
+        dir[0] = 1.0;
+        GenParams {
+            d: 64,
+            s0: 2.2,
+            n0: 60.0,
+            sigma_h: 1.0,
+            sigma_t: 1.15,
+            c_q: 0.6,
+            sigma_a: 1.3,
+            tau: 45.0,
+            signal_dir: dir,
+        }
+    }
+}
+
+/// Token-confidence model for the DeepConf baseline: a scalar per step
+/// correlated with trace quality, but with lower SNR than the hidden
+/// state (the paper's miscalibration argument, §2.1/Fig. 5).
+#[derive(Debug, Clone, Copy)]
+pub struct ConfidenceParams {
+    pub base: f64,
+    pub signal: f64,
+    /// Per-step noise (averages out over a long trace).
+    pub noise: f64,
+    /// Per-trace *miscalibration* bias (does NOT average out): some
+    /// traces are confidently wrong / diffidently right, which is why
+    /// trace-level confidence never becomes a clean correctness signal
+    /// (Chhikara 2025; the paper's §2.1 critique, Fig. 5's plateau).
+    pub trace_bias: f64,
+}
+
+impl Default for ConfidenceParams {
+    fn default() -> Self {
+        ConfidenceParams { base: 0.82, signal: 0.045, noise: 0.10, trace_bias: 0.055 }
+    }
+}
+
+/// One benchmark question instance.
+#[derive(Debug, Clone)]
+pub struct Question {
+    pub qid: usize,
+    /// Per-question solve probability (difficulty).
+    pub p_solve: f64,
+    /// Per-question trace-length multiplier: harder questions produce
+    /// longer traces (the paper's Fig-2b Q28 averages 35-42k tokens vs
+    /// the 22.7k benchmark mean).
+    pub len_mult: f64,
+    /// Nuisance direction added to every hidden state of this question.
+    pub w_q: Vec<f32>,
+    pub prompt_tokens: usize,
+    seed: u64,
+}
+
+/// Fully-sampled synthetic trace (token stream metadata; hidden states
+/// are generated lazily and deterministically per step).
+#[derive(Debug, Clone)]
+pub struct TraceSpec {
+    pub label: bool,
+    /// Final answer: 0 = ground truth; >0 = specific wrong answer;
+    /// None = truncated at the generation cap (no parseable answer).
+    pub answer: Option<u32>,
+    /// Latent quality g (drives hidden states + confidence).
+    pub quality: f64,
+    /// Cumulative token index (within the generation) of each step
+    /// boundary; last entry == total generated tokens.
+    pub step_ends: Vec<u64>,
+    pub total_tokens: u64,
+    pub truncated: bool,
+    seed: u64,
+}
+
+impl TraceSpec {
+    pub fn n_steps(&self) -> usize {
+        self.step_ends.len()
+    }
+}
+
+/// Generator bound to one (model, benchmark) pair.
+#[derive(Debug, Clone)]
+pub struct TraceGen {
+    pub model: ModelProfile,
+    pub bench: BenchProfile,
+    pub gen: GenParams,
+    pub conf: ConfidenceParams,
+    /// Mean total tokens for correct / incorrect traces.
+    pub mean_len_correct: f64,
+    pub mean_len_incorrect: f64,
+    pub mean_solve: f64,
+    base_seed: u64,
+}
+
+impl TraceGen {
+    pub fn new(model: ModelId, bench: BenchId, gen: GenParams, seed: u64) -> TraceGen {
+        let mp = ModelProfile::get(model);
+        let bp = BenchProfile::get(bench);
+        let (acc, tokens_k) = cot_calibration(model, bench);
+        // Split the benchmark's mean trace length into correct/incorrect
+        // components with the Fig-2b ratio, preserving the overall mean.
+        let denom = acc + (1.0 - acc) * INCORRECT_LEN_RATIO;
+        let mean_len_correct = tokens_k * 1000.0 / denom;
+        let mean_len_incorrect = mean_len_correct * INCORRECT_LEN_RATIO;
+        TraceGen {
+            model: mp,
+            bench: bp,
+            gen,
+            conf: ConfidenceParams::default(),
+            mean_len_correct,
+            mean_len_incorrect,
+            mean_solve: acc,
+            base_seed: seed,
+        }
+    }
+
+    /// Sample question `qid` (deterministic in (seed, qid)).
+    pub fn question(&self, qid: usize) -> Question {
+        let mut rng = Rng::new(self.base_seed ^ (qid as u64).wrapping_mul(0xA24BAED4963EE407));
+        let mu = self.mean_solve;
+        let kappa = self.bench.difficulty_kappa;
+        let p_solve = rng.beta(kappa * mu, kappa * (1.0 - mu)).clamp(0.005, 0.995);
+        let scale = self.gen.c_q / (self.gen.d as f64).sqrt();
+        let w_q: Vec<f32> = (0..self.gen.d)
+            .map(|_| (rng.normal() * scale) as f32)
+            .collect();
+        let prompt_tokens = ((self.bench.prompt_tokens as f64)
+            * rng.lognormal(-0.02, 0.2))
+        .round()
+        .max(8.0) as usize;
+        // E[len_mult] ~ 1 at the benchmark's mean solve rate.
+        let base = (1.30 - 0.45 * p_solve) / (1.30 - 0.45 * self.mean_solve);
+        let len_mult = base * rng.lognormal(-0.015, 0.17);
+        Question { qid, p_solve, len_mult, w_q, prompt_tokens, seed: rng.next_u64() }
+    }
+
+    /// Sample trace `idx` of a question (deterministic).
+    pub fn trace(&self, q: &Question, idx: usize) -> TraceSpec {
+        let seed = q.seed ^ (idx as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        let label = rng.bernoulli(q.p_solve);
+        let quality = if label { 1.0 } else { -1.0 } + rng.normal() * self.gen.sigma_t;
+
+        let mean_len = q.len_mult
+            * if label { self.mean_len_correct } else { self.mean_len_incorrect };
+        // Mean-preserving lognormal: E[X] = mean_len.
+        let mu_log = mean_len.ln() - TRACE_LEN_SIGMA * TRACE_LEN_SIGMA / 2.0;
+        let mut total = rng.lognormal(mu_log, TRACE_LEN_SIGMA).round() as u64;
+        total = total.max(200);
+
+        let cap = self.model.max_gen_tokens as u64;
+        let truncated = total > cap;
+        if truncated {
+            total = cap;
+        }
+
+        // Step boundaries: per-step token counts ~ lognormal around the
+        // benchmark's tokens/step.
+        let tps = self.bench.tokens_per_step;
+        let step_mu = tps.ln() - STEP_TOKENS_SIGMA * STEP_TOKENS_SIGMA / 2.0;
+        let mut step_ends = Vec::with_capacity((total as f64 / tps) as usize + 2);
+        let mut pos = 0u64;
+        while pos < total {
+            let st = rng.lognormal(step_mu, STEP_TOKENS_SIGMA).round().max(8.0) as u64;
+            pos = (pos + st).min(total);
+            step_ends.push(pos);
+        }
+
+        let answer = if truncated {
+            None
+        } else if label {
+            Some(0)
+        } else {
+            Some(1 + self.sample_wrong_answer(&mut rng))
+        };
+
+        TraceSpec { label, answer, quality, step_ends, total_tokens: total, truncated, seed }
+    }
+
+    fn sample_wrong_answer(&self, rng: &mut Rng) -> u32 {
+        let pool = self.bench.wrong_answer_pool.max(1);
+        let s = self.bench.wrong_answer_zipf;
+        let weights: Vec<f64> = (1..=pool).map(|i| (i as f64).powf(-s)).collect();
+        rng.categorical(&weights) as u32
+    }
+
+    /// Hidden state at step boundary `n` (1-based), deterministic in
+    /// (trace, n). Mirrors python `sample_trace_hiddens`.
+    pub fn hidden_state(&self, q: &Question, t: &TraceSpec, n: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.gen.d];
+        self.hidden_state_into(q, t, n, &mut out);
+        out
+    }
+
+    /// Allocation-free variant (DES hot path).
+    pub fn hidden_state_into(&self, q: &Question, t: &TraceSpec, n: usize, out: &mut [f32]) {
+        debug_assert!(n >= 1 && n <= t.n_steps());
+        debug_assert_eq!(out.len(), self.gen.d);
+        let mut rng = Rng::new(t.seed ^ (n as u64).wrapping_mul(0xD6E8FEB86659FD93));
+        let mut a_rng = Rng::new(t.seed ^ 0xE7037ED1A0B428DB);
+        let transient = self.gen.sigma_a * a_rng.normal() * (-(n as f64) / self.gen.tau).exp();
+        let rho = n as f64 / (n as f64 + self.gen.n0);
+        let coef = (self.gen.s0 * rho * t.quality + transient) as f32;
+        let sig = self.gen.sigma_h as f32;
+        for i in 0..self.gen.d {
+            out[i] = coef * self.gen.signal_dir[i] + q.w_q[i] + sig * rng.normal() as f32;
+        }
+    }
+
+    /// Simulated process-reward-model score for a completed trace
+    /// (Table 2's Qwen2.5-Math-PRM-7B baseline): a full-trace verifier
+    /// with ranking quality between token confidence and the hidden-state
+    /// scorer — the ordering Fig. 5 / Table 2 establish.
+    pub fn prm_score(&self, t: &TraceSpec) -> f64 {
+        let mut rng = Rng::new(t.seed ^ 0x94D049BB133111EB);
+        crate::coordinator::scorer::sigmoid((1.1 * t.quality + 0.9 * rng.normal()) as f32)
+            as f64
+    }
+
+    /// Mean token confidence over step `n` (DeepConf's signal). The
+    /// progress ramp is flatter than the hidden-state signal's rho(n):
+    /// token log-probs carry weak quality information from the start but
+    /// never match the hidden state's late-trace discriminability
+    /// (Fig. 5's gap).
+    pub fn step_confidence(&self, t: &TraceSpec, n: usize) -> f64 {
+        let mut rng = Rng::new(t.seed ^ (n as u64).wrapping_mul(0xC2B2AE3D27D4EB4F));
+        let mut bias_rng = Rng::new(t.seed ^ 0xA0761D6478BD642F);
+        let rho = n as f64 / (n as f64 + self.gen.n0);
+        (self.conf.base + self.conf.signal * t.quality * (0.35 + 0.65 * rho)
+            + self.conf.trace_bias * bias_rng.normal()
+            + self.conf.noise * rng.normal())
+        .clamp(0.0, 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gen() -> TraceGen {
+        TraceGen::new(ModelId::Qwen3_4B, BenchId::Aime25, GenParams::default_d64(), 42)
+    }
+
+    #[test]
+    fn deterministic() {
+        let g = gen();
+        let q1 = g.question(3);
+        let q2 = g.question(3);
+        assert_eq!(q1.p_solve, q2.p_solve);
+        let t1 = g.trace(&q1, 5);
+        let t2 = g.trace(&q2, 5);
+        assert_eq!(t1.total_tokens, t2.total_tokens);
+        assert_eq!(g.hidden_state(&q1, &t1, 3), g.hidden_state(&q2, &t2, 3));
+        // Different trace index -> different stream.
+        let t3 = g.trace(&q1, 6);
+        assert!(t3.seed != t1.seed);
+    }
+
+    #[test]
+    fn step_ends_monotone_and_end_at_total() {
+        let g = gen();
+        let q = g.question(0);
+        for i in 0..8 {
+            let t = g.trace(&q, i);
+            assert!(!t.step_ends.is_empty());
+            let mut prev = 0;
+            for &e in &t.step_ends {
+                assert!(e > prev || e == t.total_tokens, "non-monotone");
+                prev = e;
+            }
+            assert_eq!(*t.step_ends.last().unwrap(), t.total_tokens);
+        }
+    }
+
+    #[test]
+    fn label_rate_tracks_p_solve() {
+        let g = gen();
+        let q = g.question(1);
+        let n = 2000;
+        let correct = (0..n).filter(|&i| g.trace(&q, i).label).count();
+        let rate = correct as f64 / n as f64;
+        assert!((rate - q.p_solve).abs() < 0.04, "rate={rate} p={}", q.p_solve);
+    }
+
+    #[test]
+    fn incorrect_traces_longer_on_average() {
+        let g = gen();
+        let (mut lc, mut li, mut nc, mut ni) = (0.0, 0.0, 0, 0);
+        for qid in 0..20 {
+            let q = g.question(qid);
+            for i in 0..64 {
+                let t = g.trace(&q, i);
+                if t.label {
+                    lc += t.total_tokens as f64;
+                    nc += 1;
+                } else {
+                    li += t.total_tokens as f64;
+                    ni += 1;
+                }
+            }
+        }
+        let (mc, mi) = (lc / nc as f64, li / ni as f64);
+        assert!(mi > mc * 1.1, "incorrect {mi} vs correct {mc}");
+    }
+
+    #[test]
+    fn mean_length_matches_calibration() {
+        let g = gen();
+        let mut total = 0.0;
+        let mut n = 0;
+        for qid in 0..30 {
+            let q = g.question(qid);
+            for i in 0..32 {
+                total += g.trace(&q, i).total_tokens as f64;
+                n += 1;
+            }
+        }
+        let mean_k = total / n as f64 / 1000.0;
+        // Table-1 CoT row: 22.7k tokens for Qwen3-4B on AIME.
+        assert!((mean_k - 22.7).abs() < 2.5, "mean {mean_k}k");
+    }
+
+    #[test]
+    fn hidden_state_signal_separates_labels() {
+        let g = gen();
+        let q = g.question(2);
+        let u = &g.gen.signal_dir;
+        let (mut sp, mut sn, mut np_, mut nn) = (0.0, 0.0, 0, 0);
+        for i in 0..400 {
+            let t = g.trace(&q, i);
+            let n_steps = t.n_steps();
+            let h = g.hidden_state(&q, &t, n_steps.min(30));
+            let proj: f32 = h.iter().zip(u).map(|(a, b)| a * b).sum();
+            if t.label {
+                sp += proj as f64;
+                np_ += 1;
+            } else {
+                sn += proj as f64;
+                nn += 1;
+            }
+        }
+        if np_ > 10 && nn > 10 {
+            assert!(sp / np_ as f64 > sn / nn as f64 + 0.5);
+        }
+    }
+
+    #[test]
+    fn confidence_correlates_weakly_with_label() {
+        let g = gen();
+        let q = g.question(4);
+        let (mut cp, mut cn, mut np_, mut nn) = (0.0, 0.0, 0, 0);
+        for i in 0..600 {
+            let t = g.trace(&q, i);
+            let c = g.step_confidence(&t, t.n_steps().min(25));
+            if t.label {
+                cp += c;
+                np_ += 1;
+            } else {
+                cn += c;
+                nn += 1;
+            }
+        }
+        if np_ > 10 && nn > 10 {
+            let gap = cp / np_ as f64 - cn / nn as f64;
+            assert!(gap > 0.01 && gap < 0.3, "gap={gap}");
+        }
+    }
+
+    #[test]
+    fn truncation_at_cap() {
+        // Force a benchmark/model combo with long traces: DeepSeek on
+        // HMMT (31.5k mean) rarely truncates at 64k; use many samples.
+        let g = TraceGen::new(ModelId::Phi4_14B, BenchId::Hmmt2425,
+                              GenParams::default_d64(), 7);
+        let mut saw_trunc = false;
+        for qid in 0..10 {
+            let q = g.question(qid);
+            for i in 0..64 {
+                let t = g.trace(&q, i);
+                assert!(t.total_tokens <= 32_000);
+                if t.truncated {
+                    saw_trunc = true;
+                    assert!(t.answer.is_none());
+                }
+            }
+        }
+        // Phi caps at 32k with mean 21.5k*1.2 for incorrect: truncation
+        // must occur in 640 samples.
+        assert!(saw_trunc);
+    }
+
+    #[test]
+    fn wrong_answers_spread() {
+        let g = gen();
+        let q = g.question(6);
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..500 {
+            let t = g.trace(&q, i);
+            if let Some(a) = t.answer {
+                if a > 0 {
+                    seen.insert(a);
+                }
+            }
+        }
+        if seen.len() > 1 {
+            assert!(seen.len() >= 3, "wrong answers too concentrated: {seen:?}");
+        }
+    }
+}

@@ -1,0 +1,127 @@
+//! Rule-based answer verifier (the paper adapts Qwen2.5-Math's verifier:
+//! normalization + numeric matching + symbolic equivalence for simple
+//! forms). Used to label scorer training traces and to check e2e answers.
+//!
+//! Our answer algebra covers what the synthetic/e2e workloads emit:
+//! integers, decimals, simple fractions "a/b", leading/trailing
+//! whitespace, surrounding `\boxed{...}`, thousands separators, and
+//! leading zeros.
+
+/// Normalized answer value.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AnswerValue {
+    /// Exact rational p/q in lowest terms (q > 0).
+    Rational(i64, i64),
+}
+
+fn gcd(a: i64, b: i64) -> i64 {
+    if b == 0 {
+        a.abs().max(1)
+    } else {
+        gcd(b, a % b)
+    }
+}
+
+impl AnswerValue {
+    pub fn rational(p: i64, q: i64) -> Option<AnswerValue> {
+        if q == 0 {
+            return None;
+        }
+        let sign = if q < 0 { -1 } else { 1 };
+        let g = gcd(p, q);
+        Some(AnswerValue::Rational(sign * p / g, (q / g).abs()))
+    }
+}
+
+/// Parse + normalize an answer string. Returns None when unparseable
+/// (the trace then abstains from voting, like the paper's verifier
+/// failing to extract an answer).
+pub fn parse_answer(raw: &str) -> Option<AnswerValue> {
+    let mut s = raw.trim();
+    // Strip \boxed{...} (possibly with surrounding text noise).
+    if let Some(start) = s.find("\\boxed{") {
+        let rest = &s[start + 7..];
+        let end = rest.find('}')?;
+        s = rest[..end].trim();
+    }
+    let s = s.replace(',', ""); // thousands separators
+    let s = s.trim();
+    if s.is_empty() {
+        return None;
+    }
+    // Fraction a/b.
+    if let Some((num, den)) = s.split_once('/') {
+        let p: i64 = num.trim().parse().ok()?;
+        let q: i64 = den.trim().parse().ok()?;
+        return AnswerValue::rational(p, q);
+    }
+    // Decimal.
+    if let Some((int_part, frac_part)) = s.split_once('.') {
+        let frac_digits = frac_part.len() as u32;
+        if frac_digits == 0 || frac_digits > 9 {
+            return None;
+        }
+        let negative = int_part.trim_start().starts_with('-');
+        let int_val: i64 = if int_part == "-" { 0 } else { int_part.parse().ok()? };
+        let frac_val: i64 = frac_part.parse().ok()?;
+        let scale = 10i64.pow(frac_digits);
+        let p = int_val.abs() * scale + frac_val;
+        let p = if negative || int_val < 0 { -p } else { p };
+        return AnswerValue::rational(p, scale);
+    }
+    // Integer (handles leading zeros via parse).
+    let p: i64 = s.parse().ok()?;
+    AnswerValue::rational(p, 1)
+}
+
+/// The verifier: does the candidate match ground truth?
+pub fn verify(candidate: &str, ground_truth: &str) -> bool {
+    match (parse_answer(candidate), parse_answer(ground_truth)) {
+        (Some(a), Some(b)) => a == b,
+        _ => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn integers_and_leading_zeros() {
+        assert!(verify("007", "7"));
+        assert!(verify(" 42 ", "42"));
+        assert!(!verify("41", "42"));
+        assert!(verify("-3", "-3"));
+    }
+
+    #[test]
+    fn boxed_extraction() {
+        assert!(verify("the answer is \\boxed{128}", "128"));
+        assert!(verify("\\boxed{1/2}", "0.5"));
+        assert!(!verify("\\boxed{", "128"));
+    }
+
+    #[test]
+    fn fractions_reduce() {
+        assert!(verify("6/4", "3/2"));
+        assert!(verify("6/2", "3"));
+        assert!(verify("-6/4", "3/-2"));
+        assert!(!verify("1/3", "0.3333"));
+        assert!(parse_answer("1/0").is_none());
+    }
+
+    #[test]
+    fn decimals() {
+        assert!(verify("2.50", "5/2"));
+        assert!(verify("-0.5", "-1/2"));
+        assert!(verify("1000.0", "1,000"));
+    }
+
+    #[test]
+    fn unparseable_rejected() {
+        assert!(parse_answer("").is_none());
+        assert!(parse_answer("banana").is_none());
+        assert!(!verify("banana", "42"));
+        assert!(!verify("42", "banana"));
+    }
+}

@@ -1,0 +1,157 @@
+//! In-tree micro-benchmark harness (no criterion in the offline vendor
+//! set). Benches are `harness = false` binaries that call [`Bench::run`]
+//! per case; output is a criterion-like line per case plus a summary
+//! suitable for EXPERIMENTS.md.
+
+use std::time::Instant;
+
+/// One timed case.
+#[derive(Debug, Clone)]
+pub struct CaseResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub stddev_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+    /// Optional throughput annotation (items per iteration).
+    pub items_per_iter: Option<f64>,
+}
+
+impl CaseResult {
+    pub fn print(&self) {
+        let (mean, unit) = humanize(self.mean_ns);
+        let (sd, sd_unit) = humanize(self.stddev_ns);
+        let mut line = format!(
+            "{:<44} {:>10.3} {:<3} (+/- {:.3} {}) [{} iters]",
+            self.name, mean, unit, sd, sd_unit, self.iters
+        );
+        if let Some(items) = self.items_per_iter {
+            let rate = items / (self.mean_ns / 1e9);
+            line.push_str(&format!("  {:.2e} items/s", rate));
+        }
+        println!("{line}");
+    }
+}
+
+fn humanize(ns: f64) -> (f64, &'static str) {
+    if ns < 1_000.0 {
+        (ns, "ns")
+    } else if ns < 1_000_000.0 {
+        (ns / 1e3, "us")
+    } else if ns < 1e9 {
+        (ns / 1e6, "ms")
+    } else {
+        (ns / 1e9, "s")
+    }
+}
+
+/// Bench runner: warms up, then samples until `target_time_s` or
+/// `max_iters`, whichever first.
+pub struct Bench {
+    pub warmup_iters: u64,
+    pub target_time_s: f64,
+    pub max_iters: u64,
+    pub results: Vec<CaseResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup_iters: 3,
+            target_time_s: 2.0,
+            max_iters: 10_000,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Bench { warmup_iters: 1, target_time_s: 0.5, max_iters: 1000, ..Default::default() }
+    }
+
+    /// Time `f`, which must do one unit of work per call. The closure's
+    /// return value is black-boxed to keep the optimizer honest.
+    pub fn run<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &CaseResult {
+        self.run_items(name, None, &mut f)
+    }
+
+    /// Like [`run`], annotating throughput as `items` per iteration.
+    pub fn run_with_items<T>(
+        &mut self,
+        name: &str,
+        items: f64,
+        mut f: impl FnMut() -> T,
+    ) -> &CaseResult {
+        self.run_items(name, Some(items), &mut f)
+    }
+
+    fn run_items<T>(
+        &mut self,
+        name: &str,
+        items: Option<f64>,
+        f: &mut impl FnMut() -> T,
+    ) -> &CaseResult {
+        for _ in 0..self.warmup_iters {
+            black_box(f());
+        }
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let started = Instant::now();
+        while started.elapsed().as_secs_f64() < self.target_time_s
+            && (samples_ns.len() as u64) < self.max_iters
+        {
+            let t0 = Instant::now();
+            black_box(f());
+            samples_ns.push(t0.elapsed().as_nanos() as f64);
+        }
+        let n = samples_ns.len().max(1) as f64;
+        let mean = samples_ns.iter().sum::<f64>() / n;
+        let var = samples_ns.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+        let result = CaseResult {
+            name: name.to_string(),
+            iters: samples_ns.len() as u64,
+            mean_ns: mean,
+            stddev_ns: var.sqrt(),
+            min_ns: samples_ns.iter().cloned().fold(f64::INFINITY, f64::min),
+            max_ns: samples_ns.iter().cloned().fold(0.0, f64::max),
+            items_per_iter: items,
+        };
+        result.print();
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+}
+
+/// Optimization barrier (std::hint::black_box is stable since 1.66).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bench { warmup_iters: 1, target_time_s: 0.05, max_iters: 100, results: vec![] };
+        let r = b.run("noop-ish", || {
+            let mut s = 0u64;
+            for i in 0..100u64 {
+                s = s.wrapping_add(i);
+            }
+            s
+        });
+        assert!(r.iters > 0);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.min_ns <= r.mean_ns && r.mean_ns <= r.max_ns);
+    }
+
+    #[test]
+    fn humanize_units() {
+        assert_eq!(super::humanize(500.0).1, "ns");
+        assert_eq!(super::humanize(5_000.0).1, "us");
+        assert_eq!(super::humanize(5_000_000.0).1, "ms");
+        assert_eq!(super::humanize(5e9).1, "s");
+    }
+}

@@ -1,0 +1,7 @@
+//! In-tree substrates forced by the offline vendor set (DESIGN.md §3):
+//! JSON, PRNG/distributions, statistics, and a bench harness.
+
+pub mod bench;
+pub mod json;
+pub mod rng;
+pub mod stats;

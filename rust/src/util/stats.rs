@@ -1,0 +1,108 @@
+//! Small statistics helpers shared by the harness and metrics modules.
+
+/// Arithmetic mean; 0.0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Population standard deviation.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Percentile via linear interpolation (q in [0, 100]).
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = (q / 100.0) * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (v[hi] - v[lo]) * (pos - lo as f64)
+    }
+}
+
+/// Pairwise ranking accuracy (the paper's RankAcc, §5.3.2): proportion of
+/// (positive, negative) pairs where the positive outscores the negative.
+/// Ties count half. Returns None when either class is empty.
+pub fn rank_acc(pos_scores: &[f64], neg_scores: &[f64]) -> Option<f64> {
+    if pos_scores.is_empty() || neg_scores.is_empty() {
+        return None;
+    }
+    let mut wins = 0.0;
+    for &p in pos_scores {
+        for &n in neg_scores {
+            if p > n {
+                wins += 1.0;
+            } else if p == n {
+                wins += 0.5;
+            }
+        }
+    }
+    Some(wins / (pos_scores.len() * neg_scores.len()) as f64)
+}
+
+/// Mann-Whitney AUC over (score, label) pairs — equals RankAcc.
+pub fn auc(scores: &[f64], labels: &[bool]) -> Option<f64> {
+    let pos: Vec<f64> = scores
+        .iter()
+        .zip(labels)
+        .filter(|(_, &l)| l)
+        .map(|(&s, _)| s)
+        .collect();
+    let neg: Vec<f64> = scores
+        .iter()
+        .zip(labels)
+        .filter(|(_, &l)| !l)
+        .map(|(&s, _)| s)
+        .collect();
+    rank_acc(&pos, &neg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_stddev() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(mean(&[2.0, 4.0]), 3.0);
+        assert!((stddev(&[2.0, 4.0]) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert_eq!(percentile(&xs, 50.0), 2.5);
+    }
+
+    #[test]
+    fn rank_acc_basic() {
+        assert_eq!(rank_acc(&[0.9, 0.8], &[0.1, 0.2]), Some(1.0));
+        assert_eq!(rank_acc(&[0.1], &[0.9]), Some(0.0));
+        assert_eq!(rank_acc(&[0.5], &[0.5]), Some(0.5));
+        assert_eq!(rank_acc(&[], &[0.5]), None);
+    }
+
+    #[test]
+    fn auc_matches_rank_acc() {
+        let scores = [0.9, 0.2, 0.7, 0.4];
+        let labels = [true, false, true, false];
+        assert_eq!(auc(&scores, &labels), Some(1.0));
+    }
+}

@@ -1,0 +1,132 @@
+//! Integration tests over the full policy stack: the discrete-event
+//! engine with the *trained* scorer from artifacts (skipped gracefully
+//! when artifacts are absent), plus an e2e ServeEngine smoke over PJRT.
+
+use step::coordinator::method::Method;
+use step::coordinator::trace::TraceStatus;
+use step::harness::cells::{run_cell, CellOpts};
+use step::harness::load_sim_bundle;
+use step::runtime::{Artifacts, Runtime};
+use step::sim::des::{DesEngine, SimConfig};
+use step::sim::profiles::{BenchId, ModelId};
+use step::sim::tracegen::TraceGen;
+use step::util::stats::auc;
+
+fn bundle() -> Option<(step::sim::tracegen::GenParams, step::coordinator::scorer::StepScorer)> {
+    let dir = Artifacts::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(load_sim_bundle(&dir).expect("sim bundle"))
+}
+
+#[test]
+fn trained_scorer_separates_trace_quality() {
+    let Some((gp, scorer)) = bundle() else { return };
+    let gen = TraceGen::new(ModelId::Qwen3_4B, BenchId::Hmmt2425, gp, 3);
+    let mut scores = Vec::new();
+    let mut labels = Vec::new();
+    for qid in 0..6 {
+        let q = gen.question(qid);
+        for i in 0..48 {
+            let t = gen.trace(&q, i);
+            // Mid-trace prefix: early steps are dominated by the
+            // exploration transient (Fig 5's rising curve).
+            let k = t.n_steps().min(150);
+            let mean: f64 = (1..=k)
+                .map(|n| scorer.score(&gen.hidden_state(&q, &t, n)) as f64)
+                .sum::<f64>()
+                / k as f64;
+            scores.push(mean);
+            labels.push(t.label);
+        }
+    }
+    let a = auc(&scores, &labels).expect("both classes present");
+    assert!(a > 0.78, "trained scorer AUC {a} too low");
+}
+
+#[test]
+fn step_beats_sc_under_pressure_with_trained_scorer() {
+    let Some((gp, scorer)) = bundle() else { return };
+    let opts = CellOpts { n_traces: 64, max_questions: Some(6), ..Default::default() };
+    let sc = run_cell(ModelId::DeepSeek8B, BenchId::Hmmt2425, Method::Sc, &gp, &scorer, &opts);
+    let st = run_cell(ModelId::DeepSeek8B, BenchId::Hmmt2425, Method::Step, &gp, &scorer, &opts);
+    assert!(st.lat_s < 0.7 * sc.lat_s, "STEP {:.0}s vs SC {:.0}s", st.lat_s, sc.lat_s);
+    assert!(st.tok_k < sc.tok_k);
+    assert_eq!(st.engine_wait_s, 0.0);
+    assert!(sc.engine_wait_s > 0.0);
+    assert!(st.acc >= sc.acc - 1.0, "STEP acc {} vs SC {}", st.acc, sc.acc);
+}
+
+#[test]
+fn step_pruned_traces_skew_incorrect_with_trained_scorer() {
+    let Some((gp, scorer)) = bundle() else { return };
+    let mut cfg = SimConfig::new(ModelId::DeepSeek8B, BenchId::Hmmt2425, Method::Step, 64);
+    cfg.seed = 5;
+    let gen = TraceGen::new(cfg.model, cfg.bench, gp, 5);
+    let engine = DesEngine::new(&cfg, &gen, &scorer);
+    let (mut pr_inc, mut pr_all, mut base_inc, mut base_all) = (0, 0, 0, 0);
+    for qid in 0..8 {
+        let r = engine.run_question(qid);
+        for t in &r.traces {
+            base_all += 1;
+            base_inc += (!t.label) as usize;
+            if t.status == TraceStatus::Pruned {
+                pr_all += 1;
+                pr_inc += (!t.label) as usize;
+            }
+        }
+    }
+    assert!(pr_all > 20, "expected substantial pruning, got {pr_all}");
+    let pruned_rate = pr_inc as f64 / pr_all as f64;
+    let base_rate = base_inc as f64 / base_all as f64;
+    assert!(
+        pruned_rate > base_rate,
+        "pruned traces must skew incorrect: {pruned_rate:.2} vs base {base_rate:.2}"
+    );
+}
+
+#[test]
+fn deepconf_early_stops_and_two_phase_latency() {
+    let Some((gp, scorer)) = bundle() else { return };
+    let opts = CellOpts { n_traces: 64, max_questions: Some(4), ..Default::default() };
+    let r = run_cell(ModelId::DeepSeek8B, BenchId::Hmmt2425, Method::DeepConf, &gp, &scorer, &opts);
+    let (warm, prune) = r.stage_lat.expect("deepconf reports stage latencies");
+    assert!(warm > 0.0 && prune > 0.0);
+    assert!((warm + prune - r.lat_s).abs() < 1e-6 * r.lat_s);
+    assert!(r.tok_k < 1600.0, "deepconf must save tokens vs SC's ~2000k");
+}
+
+#[test]
+fn e2e_serve_smoke_over_pjrt() {
+    use step::coordinator::engine::{ServeConfig, ServeEngine};
+    let dir = Artifacts::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let rt = Runtime::new(&dir).unwrap();
+    let cfg = ServeConfig {
+        n_traces: 4,
+        method: Method::Step,
+        max_new_tokens: 48,
+        kv_blocks: 14,
+        seed: 3,
+        ..Default::default()
+    };
+    let engine = ServeEngine::new(rt, cfg).unwrap();
+    let r = engine.serve("compute the sum 12+34 then answer", Some("46")).unwrap();
+    assert!(r.generated_tokens > 0);
+    assert!(r.decode_iterations > 0);
+    assert!(r.latency_s > 0.0);
+    assert_eq!(r.traces.len(), 4);
+    // Every lane ended in a terminal state.
+    for t in &r.traces {
+        assert!(matches!(t.status, TraceStatus::Finished | TraceStatus::Pruned));
+    }
+    // Determinism of the serving path (same seed, same request).
+    let r2 = engine.serve("compute the sum 12+34 then answer", Some("46")).unwrap();
+    assert_eq!(r.generated_tokens, r2.generated_tokens);
+    assert_eq!(r.answer, r2.answer);
+}

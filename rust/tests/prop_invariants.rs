@@ -1,0 +1,248 @@
+//! Property-based tests (in-tree driver; no proptest in the offline
+//! vendor set): randomized operation sequences + invariant checks over
+//! the coordinator substrates. Each property runs hundreds of random
+//! cases drawn from a seeded RNG — failures print the seed for replay.
+
+use step::coordinator::voting::{majority_vote, weighted_vote, Vote};
+use step::kvcache::KvCacheManager;
+use step::sim::des::{DesEngine, SimConfig};
+use step::sim::profiles::{BenchId, ModelId};
+use step::sim::tracegen::{GenParams, TraceGen};
+use step::sim::verifier;
+use step::util::rng::Rng;
+use step::util::stats::{percentile, rank_acc};
+
+/// Run `cases` random cases of a property.
+fn forall(name: &str, cases: u64, mut prop: impl FnMut(&mut Rng)) {
+    for seed in 0..cases {
+        let mut rng = Rng::new(0xBEEF ^ seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng)
+        }));
+        if let Err(e) = result {
+            panic!("property '{name}' failed at seed {seed}: {e:?}");
+        }
+    }
+}
+
+// ------------------------------------------------------------- kvcache
+
+#[test]
+fn prop_kvcache_never_leaks_blocks() {
+    forall("kvcache-no-leak", 200, |rng| {
+        let blocks = 16 + rng.below(256);
+        let mut m = KvCacheManager::new(blocks, 16);
+        let mut live: Vec<u64> = Vec::new();
+        let mut next_id = 0u64;
+        for _ in 0..200 {
+            match rng.below(4) {
+                0 => {
+                    let tokens = 1 + rng.below(200);
+                    if m.allocate_seq(next_id, tokens) {
+                        live.push(next_id);
+                    }
+                    next_id += 1;
+                }
+                1 if !live.is_empty() => {
+                    let seq = live[rng.below(live.len())];
+                    // Failed appends must not change accounting.
+                    let before = m.used_blocks();
+                    if !m.append_tokens(seq, 1 + rng.below(64)) {
+                        assert_eq!(m.used_blocks(), before);
+                    }
+                }
+                2 if !live.is_empty() => {
+                    let i = rng.below(live.len());
+                    let seq = live.swap_remove(i);
+                    m.free_seq(seq);
+                }
+                _ => {}
+            }
+            m.check_invariants();
+        }
+        for seq in live {
+            m.free_seq(seq);
+        }
+        assert_eq!(m.used_blocks(), 0, "all blocks must return to the pool");
+    });
+}
+
+#[test]
+fn prop_kvcache_capacity_is_exact() {
+    forall("kvcache-capacity", 100, |rng| {
+        let blocks = 1 + rng.below(64);
+        let mut m = KvCacheManager::new(blocks, 16);
+        // Fill exactly to capacity with 16-token sequences.
+        for i in 0..blocks {
+            assert!(m.allocate_seq(i as u64, 16));
+        }
+        assert!(!m.allocate_seq(9999, 1), "over-capacity admit must fail");
+        assert_eq!(m.free_blocks(), 0);
+    });
+}
+
+// -------------------------------------------------------------- voting
+
+#[test]
+fn prop_voting_unanimous_wins() {
+    forall("voting-unanimous", 200, |rng| {
+        let ans = rng.below(100) as u32;
+        let votes: Vec<Vote> = (0..1 + rng.below(64))
+            .map(|_| Vote { answer: Some(ans), weight: rng.f64() + 0.01 })
+            .collect();
+        assert_eq!(weighted_vote(&votes), Some(ans));
+    });
+}
+
+#[test]
+fn prop_voting_scaling_weights_invariant() {
+    // Multiplying all weights by a positive constant must not change the
+    // winner.
+    forall("voting-scale-invariant", 200, |rng| {
+        let votes: Vec<Vote> = (0..2 + rng.below(32))
+            .map(|_| Vote {
+                answer: Some(rng.below(5) as u32),
+                weight: rng.f64() + 0.01,
+            })
+            .collect();
+        let scaled: Vec<Vote> = votes
+            .iter()
+            .map(|v| Vote { answer: v.answer, weight: v.weight * 7.5 })
+            .collect();
+        assert_eq!(weighted_vote(&votes), weighted_vote(&scaled));
+    });
+}
+
+#[test]
+fn prop_majority_matches_hand_count() {
+    forall("majority-count", 200, |rng| {
+        let answers: Vec<Option<u32>> = (0..1 + rng.below(64))
+            .map(|_| (rng.f64() > 0.1).then(|| rng.below(4) as u32))
+            .collect();
+        let winner = majority_vote(&answers);
+        if let Some(w) = winner {
+            let count = |a: u32| answers.iter().filter(|&&x| x == Some(a)).count();
+            for other in 0..4 {
+                assert!(count(w) >= count(other), "hand count disagrees");
+            }
+        } else {
+            assert!(answers.iter().all(|a| a.is_none()));
+        }
+    });
+}
+
+// ------------------------------------------------------------ verifier
+
+#[test]
+fn prop_verifier_reflexive_on_integers() {
+    forall("verifier-reflexive", 300, |rng| {
+        let v = rng.below(1_000_000) as i64 - 500_000;
+        let s = format!("{v}");
+        assert!(verifier::verify(&s, &s));
+        assert!(verifier::verify(&format!("\\boxed{{{v}}}"), &s));
+        assert!(verifier::verify(&format!("{}/{}", v * 2, 2), &s));
+        assert!(!verifier::verify(&format!("{}", v + 1), &s));
+    });
+}
+
+#[test]
+fn prop_verifier_fraction_reduction() {
+    forall("verifier-fractions", 300, |rng| {
+        let p = rng.below(500) as i64 + 1;
+        let q = rng.below(500) as i64 + 1;
+        let k = rng.below(9) as i64 + 1;
+        assert!(verifier::verify(
+            &format!("{}/{}", p * k, q * k),
+            &format!("{p}/{q}")
+        ));
+    });
+}
+
+// ---------------------------------------------------------------- stats
+
+#[test]
+fn prop_rank_acc_bounds_and_symmetry() {
+    forall("rankacc-bounds", 200, |rng| {
+        let pos: Vec<f64> = (0..1 + rng.below(30)).map(|_| rng.normal()).collect();
+        let neg: Vec<f64> = (0..1 + rng.below(30)).map(|_| rng.normal()).collect();
+        let a = rank_acc(&pos, &neg).unwrap();
+        assert!((0.0..=1.0).contains(&a));
+        let b = rank_acc(&neg, &pos).unwrap();
+        assert!((a + b - 1.0).abs() < 1e-9, "rank_acc must be antisymmetric");
+    });
+}
+
+#[test]
+fn prop_percentile_monotone() {
+    forall("percentile-monotone", 200, |rng| {
+        let xs: Vec<f64> = (0..1 + rng.below(100)).map(|_| rng.normal()).collect();
+        let mut prev = f64::NEG_INFINITY;
+        for q in [0.0, 10.0, 25.0, 50.0, 75.0, 90.0, 100.0] {
+            let v = percentile(&xs, q);
+            assert!(v >= prev);
+            prev = v;
+        }
+    });
+}
+
+// ----------------------------------------------------- engine invariants
+
+fn proj_scorer(gp: &GenParams) -> step::coordinator::scorer::StepScorer {
+    let d = gp.d;
+    let mut w1 = vec![0.0f32; d * 2];
+    for i in 0..d {
+        w1[i * 2] = gp.signal_dir[i];
+        w1[i * 2 + 1] = -gp.signal_dir[i];
+    }
+    step::coordinator::scorer::StepScorer::new(d, 2, w1, vec![0.0; 2], vec![1.0, -1.0], 0.0)
+        .unwrap()
+}
+
+#[test]
+fn prop_engine_conservation_laws() {
+    // Across random methods/budgets/memory settings: token conservation,
+    // wait+decode <= latency per trace, engine timeline decomposes
+    // latency, STEP never waits, CoT never prunes, and determinism.
+    let gp = GenParams::default_d64();
+    let scorer = proj_scorer(&gp);
+    use step::coordinator::method::Method;
+    forall("engine-conservation", 40, |rng| {
+        let method = Method::ALL[rng.below(5)];
+        let model = ModelId::ALL[rng.below(3)];
+        let bench = BenchId::ALL[rng.below(5)];
+        let mut cfg = SimConfig::new(model, bench, method, 8 + rng.below(4) * 8);
+        cfg.mem_util = 0.5 + 0.1 * rng.below(5) as f64;
+        cfg.seed = rng.next_u64();
+        let gen = TraceGen::new(model, bench, gp.clone(), rng.next_u64());
+        let engine = DesEngine::new(&cfg, &gen, &scorer);
+        let qid = rng.below(20);
+        let r = engine.run_question(qid);
+
+        let sum: u64 = r.traces.iter().map(|t| t.generated).sum();
+        assert_eq!(sum, r.gen_tokens, "token conservation");
+        assert!(r.latency_s.is_finite() && r.latency_s > 0.0);
+        for t in &r.traces {
+            assert!(t.wait_s + t.decode_s <= r.latency_s + 1e-6);
+            assert!(t.wait_s >= 0.0 && t.decode_s >= 0.0);
+        }
+        assert!(
+            (r.engine_wait_s + r.engine_decode_s - r.latency_s).abs()
+                < 1e-6 * r.latency_s.max(1.0),
+            "engine timeline must decompose latency"
+        );
+        if method == Method::Step {
+            assert_eq!(r.n_preemptions, 0, "STEP never preempts");
+            assert_eq!(r.engine_wait_s, 0.0);
+        }
+        if method == Method::Cot {
+            assert_eq!(r.traces.len(), 1);
+            assert_eq!(r.n_pruned, 0);
+        }
+
+        // Determinism.
+        let r2 = engine.run_question(qid);
+        assert_eq!(r.gen_tokens, r2.gen_tokens);
+        assert_eq!(r.chosen, r2.chosen);
+        assert!((r.latency_s - r2.latency_s).abs() < 1e-9);
+    });
+}

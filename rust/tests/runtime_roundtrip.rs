@@ -1,0 +1,148 @@
+//! Integration: the AOT bridge end to end — load HLO text artifacts,
+//! compile on the PJRT CPU client, execute, and cross-validate the two
+//! scorer paths (HLO graph vs native rust MLP).
+//!
+//! Requires `make artifacts`; tests no-op (with a note) when absent so
+//! `cargo test` stays runnable on a fresh checkout.
+
+use step::coordinator::scorer::StepScorer;
+use step::runtime::{Artifacts, DecodeExec, PrefillExec, Runtime, ScorerExec};
+use step::util::rng::Rng;
+
+fn runtime_or_skip() -> Option<Runtime> {
+    let dir = Artifacts::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::new(dir).expect("runtime"))
+}
+
+#[test]
+fn scorer_hlo_matches_native_mlp() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let scorer_path = rt.artifacts.scorer_path("sim").unwrap();
+    let native = StepScorer::from_json_file(&scorer_path).unwrap();
+    let exec = ScorerExec::load(&mut rt, "sim", 8).unwrap();
+    assert_eq!(exec.d, native.d);
+
+    let mut rng = Rng::new(7);
+    let h: Vec<f32> = (0..8 * native.d).map(|_| rng.normal() as f32).collect();
+    let hlo_scores = exec.run(&h).unwrap();
+    for b in 0..8 {
+        let native_score = native.score(&h[b * native.d..(b + 1) * native.d]);
+        assert!(
+            (hlo_scores[b] - native_score).abs() < 1e-4,
+            "lane {b}: hlo {} vs native {}",
+            hlo_scores[b],
+            native_score
+        );
+    }
+}
+
+#[test]
+fn prefill_then_decode_is_consistent() {
+    // Decoding token t at position p after prefilling tokens[..p] must
+    // give the same logits as prefilling tokens[..p+1] (incremental
+    // decoding correctness — the serving engine's core assumption).
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let params = rt.param_literals().unwrap();
+    let m = rt.artifacts.manifest.model;
+    let prefill = PrefillExec::load(&mut rt, 1).unwrap();
+    let decode = DecodeExec::load(&mut rt, 1).unwrap();
+
+    // Prompt: BOS + a few digit tokens (conventions in model.py).
+    let prompt = [1i32, 5, 9, 7, 6, 4];
+    let p = prompt.len();
+
+    // Reference: prefill the full prompt, read logits at last position.
+    let mut padded = vec![0i32; m.prompt_len];
+    padded[..p].copy_from_slice(&prompt);
+    let (ref_logits, ref_hidden, _) = prefill.run(&params, &padded, &[p]).unwrap();
+
+    // Incremental: prefill all but the last token, then decode it.
+    let mut padded_short = vec![0i32; m.prompt_len];
+    padded_short[..p - 1].copy_from_slice(&prompt[..p - 1]);
+    let (_, _, kv) = prefill.run(&params, &padded_short, &[p - 1]).unwrap();
+    let (dec_logits, dec_hidden, _) = decode
+        .run(&params, &kv, &[prompt[p - 1]], &[(p - 1) as i32])
+        .unwrap();
+
+    let max_diff = ref_logits[0]
+        .iter()
+        .zip(&dec_logits[0])
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 2e-3, "decode/prefill logit divergence {max_diff}");
+    let h_diff = ref_hidden[0]
+        .iter()
+        .zip(&dec_hidden[0])
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(h_diff < 2e-3, "hidden divergence {h_diff}");
+}
+
+#[test]
+fn decode_steps_advance_kv() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let params = rt.param_literals().unwrap();
+    let m = rt.artifacts.manifest.model;
+    let prefill = PrefillExec::load(&mut rt, 1).unwrap();
+    let decode = DecodeExec::load(&mut rt, 1).unwrap();
+
+    let mut padded = vec![0i32; m.prompt_len];
+    padded[0] = 1;
+    padded[1] = 8;
+    let (_, _, mut kv) = prefill.run(&params, &padded, &[2]).unwrap();
+    let mut tok = 5i32;
+    for i in 0..4 {
+        let pos = (2 + i) as i32;
+        let (logits, hidden, kv2) =
+            decode.run(&params, &kv, &[tok], &[pos]).unwrap();
+        assert_eq!(logits[0].len(), m.vocab);
+        assert_eq!(hidden[0].len(), m.d_model);
+        assert!(logits[0].iter().all(|x| x.is_finite()));
+        // Greedy next token.
+        tok = logits[0]
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0 as i32;
+        kv = kv2;
+    }
+}
+
+#[test]
+fn batched_prefill_lanes_independent() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let params = rt.param_literals().unwrap();
+    let m = rt.artifacts.manifest.model;
+    let p1 = PrefillExec::load(&mut rt, 1).unwrap();
+    let p4 = PrefillExec::load(&mut rt, 4).unwrap();
+
+    let prompts: Vec<Vec<i32>> = vec![
+        vec![1, 5, 6],
+        vec![1, 9, 9, 9, 4],
+        vec![1, 7],
+        vec![1, 4, 5, 6, 7, 8],
+    ];
+    let mut flat = vec![0i32; 4 * m.prompt_len];
+    for (b, pr) in prompts.iter().enumerate() {
+        flat[b * m.prompt_len..b * m.prompt_len + pr.len()].copy_from_slice(pr);
+    }
+    let lens: Vec<usize> = prompts.iter().map(|p| p.len()).collect();
+    let (batch_logits, _, _) = p4.run(&params, &flat, &lens).unwrap();
+
+    for (b, pr) in prompts.iter().enumerate() {
+        let mut single = vec![0i32; m.prompt_len];
+        single[..pr.len()].copy_from_slice(pr);
+        let (one_logits, _, _) = p1.run(&params, &single, &[pr.len()]).unwrap();
+        let diff = one_logits[0]
+            .iter()
+            .zip(&batch_logits[b])
+            .map(|(a, c)| (a - c).abs())
+            .fold(0.0f32, f32::max);
+        assert!(diff < 2e-3, "lane {b} diverges by {diff}");
+    }
+}
