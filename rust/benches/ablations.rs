@@ -4,7 +4,7 @@
 use step::harness::{ablations, HarnessOpts};
 
 fn main() {
-    let opts = HarnessOpts { max_questions: Some(15), n_traces: 64, seed: 0 };
+    let opts = HarnessOpts { max_questions: Some(15), n_traces: 64, seed: 0, ..Default::default() };
     let t0 = std::time::Instant::now();
     let rows = ablations::run(&opts).expect("ablations (needs `make artifacts`)");
     // The paper's choice must not be dominated: lowest-score accuracy >=

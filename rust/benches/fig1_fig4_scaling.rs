@@ -3,7 +3,7 @@
 use step::harness::{fig1_fig4, HarnessOpts};
 
 fn main() {
-    let opts = HarnessOpts { max_questions: Some(12), n_traces: 64, seed: 0 };
+    let opts = HarnessOpts { max_questions: Some(12), n_traces: 64, seed: 0, ..Default::default() };
     let t0 = std::time::Instant::now();
     fig1_fig4::run_fig1(&opts).expect("fig1 (needs `make artifacts`)");
     fig1_fig4::run_fig4(&opts).expect("fig4");

@@ -4,7 +4,7 @@
 use step::harness::{fig2, HarnessOpts};
 
 fn main() {
-    let opts = HarnessOpts { max_questions: Some(15), n_traces: 64, seed: 0 };
+    let opts = HarnessOpts { max_questions: Some(15), n_traces: 64, seed: 0, ..Default::default() };
     let t0 = std::time::Instant::now();
     fig2::run(&opts).expect("fig2 (needs `make artifacts`)");
     println!("\n[bench] fig2 regenerated in {:.1}s", t0.elapsed().as_secs_f64());

@@ -4,7 +4,7 @@
 use step::harness::{fig5, HarnessOpts};
 
 fn main() {
-    let opts = HarnessOpts { max_questions: Some(10), n_traces: 64, seed: 0 };
+    let opts = HarnessOpts { max_questions: Some(10), n_traces: 64, seed: 0, ..Default::default() };
     let t0 = std::time::Instant::now();
     let r = fig5::run(&opts).expect("fig5 (needs `make artifacts`)");
     // Shape assertions (the paper's two claims).

@@ -3,7 +3,7 @@
 use step::harness::{fig67, overhead, HarnessOpts};
 
 fn main() {
-    let opts = HarnessOpts { max_questions: Some(8), n_traces: 64, seed: 0 };
+    let opts = HarnessOpts { max_questions: Some(8), n_traces: 64, seed: 0, ..Default::default() };
     let t0 = std::time::Instant::now();
     let ds = fig67::run(&opts).expect("fig67 (needs `make artifacts`)");
     for d in &ds {

@@ -1,0 +1,76 @@
+//! cargo bench --bench grid_wallclock — end-to-end wall-clock of a quick
+//! Table-1-style evaluation grid, serial vs parallel, asserting the two
+//! runs produce byte-identical results. Writes the measurement to
+//! `results/BENCH_grid.json`.
+//!
+//! Runs self-contained on the built-in generator defaults (no artifacts
+//! needed), so CI and fresh checkouts can benchmark the harness.
+
+use std::time::Instant;
+
+use step::coordinator::method::Method;
+use step::harness::cells::{projection_scorer, run_cells, CellJob, CellOpts};
+use step::harness::write_results;
+use step::sim::profiles::{BenchId, ModelId};
+use step::sim::tracegen::GenParams;
+use step::util::json::Json;
+use step::util::pool;
+
+fn main() {
+    let gp = GenParams::default_d64();
+    let scorer = projection_scorer(&gp);
+
+    let mut jobs = Vec::new();
+    for model in [ModelId::Qwen3_4B, ModelId::DeepSeek8B] {
+        for bench in [BenchId::Aime25, BenchId::GpqaDiamond] {
+            for method in Method::ALL {
+                jobs.push(CellJob {
+                    model,
+                    bench,
+                    method,
+                    opts: CellOpts {
+                        n_traces: 32,
+                        max_questions: Some(6),
+                        ..Default::default()
+                    },
+                });
+            }
+        }
+    }
+    let threads = pool::available_parallelism();
+    println!(
+        "grid: {} cells x 6 questions x 32 traces; {} hardware threads",
+        jobs.len(),
+        threads
+    );
+
+    let t0 = Instant::now();
+    let serial = run_cells(&jobs, &gp, &scorer, 1);
+    let serial_s = t0.elapsed().as_secs_f64();
+    println!("serial:   {serial_s:.2}s");
+
+    let t1 = Instant::now();
+    let parallel = run_cells(&jobs, &gp, &scorer, threads);
+    let parallel_s = t1.elapsed().as_secs_f64();
+    println!("parallel: {parallel_s:.2}s  ({threads} threads)");
+
+    let ser_json = Json::Arr(serial.iter().map(|c| c.to_json()).collect()).to_string_pretty();
+    let par_json = Json::Arr(parallel.iter().map(|c| c.to_json()).collect()).to_string_pretty();
+    assert_eq!(ser_json, par_json, "parallel grid must be byte-identical to serial");
+
+    let speedup = serial_s / parallel_s.max(1e-9);
+    println!("speedup:  {speedup:.2}x (results byte-identical)");
+
+    let report = Json::obj(vec![
+        ("cells", Json::Num(jobs.len() as f64)),
+        ("questions_per_cell", Json::Num(6.0)),
+        ("n_traces", Json::Num(32.0)),
+        ("threads", Json::Num(threads as f64)),
+        ("serial_s", Json::Num(serial_s)),
+        ("parallel_s", Json::Num(parallel_s)),
+        ("speedup", Json::Num(speedup)),
+        ("identical", Json::Bool(true)),
+    ]);
+    let path = write_results("BENCH_grid", &report).expect("writing BENCH_grid.json");
+    println!("wrote {path:?}");
+}

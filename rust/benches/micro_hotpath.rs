@@ -9,7 +9,7 @@ use step::coordinator::method::Method;
 use step::coordinator::scorer::StepScorer;
 use step::coordinator::voting::{weighted_vote, Vote};
 use step::kvcache::KvCacheManager;
-use step::sim::des::{DesEngine, SimConfig};
+use step::sim::des::{DesEngine, Scratch, SimConfig};
 use step::sim::profiles::{BenchId, ModelId};
 use step::sim::tracegen::{GenParams, TraceGen};
 use step::util::bench::{black_box, Bench};
@@ -31,7 +31,22 @@ fn main() {
     let batch: Vec<Vec<f32>> = (0..64)
         .map(|_| (0..d).map(|_| rng.normal() as f32).collect())
         .collect();
-    b.run_with_items("scorer/score_batch(64)", 64.0, || scorer.score_batch(black_box(&batch)));
+    b.run_with_items("scorer/score_batch_fused(64)", 64.0, || {
+        scorer.score_batch(black_box(&batch))
+    });
+    // Pre-tiling reference path: one independent matvec per input, the
+    // w1 matrix streamed from memory 64 times instead of 8.
+    b.run_with_items("scorer/score_batch_naive(64)", 64.0, || {
+        let out: Vec<f32> = black_box(&batch).iter().map(|h| scorer.score(h)).collect();
+        out
+    });
+    // Allocation-free variant: persistent output + activation scratch.
+    let mut batch_out: Vec<f32> = Vec::with_capacity(64);
+    let mut batch_z: Vec<f32> = Vec::new();
+    b.run_with_items("scorer/score_batch_into(64)", 64.0, || {
+        scorer.score_batch_into(black_box(&batch), &mut batch_out, &mut batch_z);
+        batch_out.len()
+    });
 
     // ---- paged KV allocator.
     b.run_with_items("kvcache/alloc_free_seq(32k tokens)", 2000.0, || {
@@ -56,6 +71,22 @@ fn main() {
         ok
     });
 
+    // Steady-state sequence churn on a warm manager: after the first
+    // lap every admit reuses a recycled block-table Vec and every append
+    // extends it in place (no temporary Vec per boundary crossing).
+    let mut churn_mgr = KvCacheManager::new(8192, 16);
+    b.run_with_items("kvcache/seq_churn(64 lifecycles)", 64.0, || {
+        let mut freed = 0usize;
+        for i in 0..64u64 {
+            churn_mgr.allocate_seq(i, 100);
+            for _ in 0..8 {
+                churn_mgr.append_tokens(i, 64);
+            }
+            freed += churn_mgr.free_seq(i);
+        }
+        freed
+    });
+
     // ---- voting.
     let votes: Vec<Vote> = (0..64)
         .map(|i| Vote { answer: Some(i % 7), weight: 0.3 + 0.01 * i as f64 })
@@ -65,12 +96,7 @@ fn main() {
     // ---- full DES question (the experiment engine's unit of work).
     let gp = GenParams::default_d64();
     let gen = TraceGen::new(ModelId::DeepSeek8B, BenchId::Hmmt2425, gp.clone(), 1);
-    let mut proj = vec![0.0f32; gp.d * 2];
-    for i in 0..gp.d {
-        proj[i * 2] = gp.signal_dir[i];
-        proj[i * 2 + 1] = -gp.signal_dir[i];
-    }
-    let proj_scorer = StepScorer::new(gp.d, 2, proj, vec![0.0; 2], vec![1.0, -1.0], 0.0).unwrap();
+    let proj_scorer = step::harness::cells::projection_scorer(&gp);
     for method in [Method::Sc, Method::Step] {
         let cfg = SimConfig::new(ModelId::DeepSeek8B, BenchId::Hmmt2425, method, 64);
         let engine = DesEngine::new(&cfg, &gen, &proj_scorer);
@@ -78,6 +104,13 @@ fn main() {
         b.run(&format!("des/question(HMMT,N=64,{})", method.name()), || {
             qid += 1;
             engine.run_question(black_box(qid % 30))
+        });
+        // Reused per-worker scratch: the steady-state harness path.
+        let mut scratch = Scratch::new();
+        let mut qid = 0usize;
+        b.run(&format!("des/question_scratch(HMMT,N=64,{})", method.name()), || {
+            qid += 1;
+            engine.run_question_with(black_box(qid % 30), &mut scratch)
         });
     }
 

@@ -5,7 +5,7 @@
 use step::harness::{table1, HarnessOpts};
 
 fn main() {
-    let opts = HarnessOpts { max_questions: Some(12), n_traces: 64, seed: 0 };
+    let opts = HarnessOpts { max_questions: Some(12), n_traces: 64, seed: 0, ..Default::default() };
     let t0 = std::time::Instant::now();
     table1::run(&opts).expect("table1 (needs `make artifacts`)");
     println!("\n[bench] table1 regenerated in {:.1}s", t0.elapsed().as_secs_f64());

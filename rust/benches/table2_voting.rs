@@ -3,7 +3,7 @@
 use step::harness::{table2, HarnessOpts};
 
 fn main() {
-    let opts = HarnessOpts { max_questions: Some(20), n_traces: 64, seed: 0 };
+    let opts = HarnessOpts { max_questions: Some(20), n_traces: 64, seed: 0, ..Default::default() };
     let t0 = std::time::Instant::now();
     table2::run(&opts).expect("table2 (needs `make artifacts`)");
     println!("\n[bench] table2 regenerated in {:.1}s", t0.elapsed().as_secs_f64());

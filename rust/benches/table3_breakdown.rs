@@ -5,7 +5,7 @@ use step::coordinator::method::Method;
 use step::harness::{table3, HarnessOpts};
 
 fn main() {
-    let opts = HarnessOpts { max_questions: Some(15), n_traces: 64, seed: 0 };
+    let opts = HarnessOpts { max_questions: Some(15), n_traces: 64, seed: 0, ..Default::default() };
     let t0 = std::time::Instant::now();
     let rows = table3::run(&opts).expect("table3 (needs `make artifacts`)");
     let get = |m: Method| rows.iter().find(|r| r.method == m).unwrap();

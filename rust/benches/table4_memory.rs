@@ -5,7 +5,7 @@ use step::harness::{table4, HarnessOpts};
 use step::util::stats::stddev;
 
 fn main() {
-    let opts = HarnessOpts { max_questions: Some(20), n_traces: 32, seed: 0 };
+    let opts = HarnessOpts { max_questions: Some(20), n_traces: 32, seed: 0, ..Default::default() };
     let t0 = std::time::Instant::now();
     let rows = table4::run(&opts).expect("table4 (needs `make artifacts`)");
     let accs: Vec<f64> = rows.iter().map(|r| r.1).collect();

@@ -3,6 +3,9 @@
 //! discrete-event experiment engine (sim::des) and the PJRT-backed
 //! serving engine (coordinator::engine).
 
+/// The PJRT-backed serving engine needs the vendored `xla` crate; see
+/// the `pjrt` feature in Cargo.toml.
+#[cfg(feature = "pjrt")]
 pub mod engine;
 pub mod method;
 pub mod scorer;

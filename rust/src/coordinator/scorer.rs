@@ -97,10 +97,73 @@ impl StepScorer {
         sigmoid(logit)
     }
 
-    /// Batched scoring (the engine scores all boundary-crossing traces of
-    /// an iteration together).
+    /// Batched scoring for trace-sweep callers that score many hidden
+    /// states at once (the Fig-5 RankAcc harness scores every step of
+    /// 256 traces per question). Processes inputs in tiles of
+    /// [`Self::BATCH_TILE`] so every row-major `w1` row is loaded from
+    /// memory once per tile instead of once per input, with bias and
+    /// ReLU fused into the activation init / final reduction. Arithmetic
+    /// order per element is identical to [`StepScorer::score`], so the
+    /// batched path is bit-exact with the one-at-a-time path.
     pub fn score_batch(&self, hs: &[Vec<f32>]) -> Vec<f32> {
-        hs.iter().map(|h| self.score(h)).collect()
+        let mut out = Vec::with_capacity(hs.len());
+        let mut z = Vec::new();
+        self.score_batch_into(hs, &mut out, &mut z);
+        out
+    }
+
+    /// Tile width of the batched path: large enough to amortize the w1
+    /// stream, small enough that the z tile stays L1-resident
+    /// (8 x hidden=512 x 4 B = 16 KB).
+    pub const BATCH_TILE: usize = 8;
+
+    /// Batched scoring into caller-owned buffers (`out` is cleared, `z`
+    /// is the activation-tile scratch, resized on demand), so hot-path
+    /// callers reuse both allocations across iterations.
+    pub fn score_batch_into(&self, hs: &[Vec<f32>], out: &mut Vec<f32>, z: &mut Vec<f32>) {
+        out.clear();
+        let m = self.hidden;
+        z.resize(m * Self::BATCH_TILE, 0.0);
+        for tile in hs.chunks(Self::BATCH_TILE) {
+            for (r, h) in tile.iter().enumerate() {
+                debug_assert_eq!(h.len(), self.d);
+                z[r * m..(r + 1) * m].copy_from_slice(&self.b1);
+            }
+            // z_r += W1^T h_r, feature-pair outer loop: each pair of w1
+            // rows streams once and is reused by every input in the tile.
+            let mut j = 0;
+            while j + 1 < self.d {
+                let row0 = &self.w1[j * m..(j + 1) * m];
+                let row1 = &self.w1[(j + 1) * m..(j + 2) * m];
+                for (r, h) in tile.iter().enumerate() {
+                    let hj0 = h[j];
+                    let hj1 = h[j + 1];
+                    let zr = &mut z[r * m..(r + 1) * m];
+                    for ((zi, &w0), &w1v) in zr.iter_mut().zip(row0).zip(row1) {
+                        *zi += hj0 * w0 + hj1 * w1v;
+                    }
+                }
+                j += 2;
+            }
+            if j < self.d {
+                let row = &self.w1[j * m..(j + 1) * m];
+                for (r, h) in tile.iter().enumerate() {
+                    let hj = h[j];
+                    for (zi, &wij) in z[r * m..(r + 1) * m].iter_mut().zip(row) {
+                        *zi += hj * wij;
+                    }
+                }
+            }
+            for (r, _) in tile.iter().enumerate() {
+                let mut logit = self.b2;
+                for (zi, &w2i) in z[r * m..(r + 1) * m].iter().zip(&self.w2) {
+                    if *zi > 0.0 {
+                        logit += *zi * w2i;
+                    }
+                }
+                out.push(sigmoid(logit));
+            }
+        }
     }
 }
 
@@ -159,6 +222,29 @@ mod tests {
         let batch = s.score_batch(&hs);
         for (h, &b) in hs.iter().zip(&batch) {
             assert_eq!(s.score(h), b);
+        }
+    }
+
+    #[test]
+    fn batch_matches_single_across_tiles_and_odd_d() {
+        // d=3 exercises the odd-feature tail; 19 inputs span three tiles
+        // (8 + 8 + 3) of the fused path.
+        let s = StepScorer::new(
+            3,
+            4,
+            (0..12).map(|i| (i as f32 * 0.37).sin()).collect(),
+            vec![0.05, -0.1, 0.0, 0.2],
+            vec![0.9, -0.4, 0.3, -0.2],
+            0.1,
+        )
+        .unwrap();
+        let hs: Vec<Vec<f32>> = (0..19)
+            .map(|i| (0..3).map(|j| ((i * 3 + j) as f32 * 0.61).cos()).collect())
+            .collect();
+        let batch = s.score_batch(&hs);
+        assert_eq!(batch.len(), 19);
+        for (h, &b) in hs.iter().zip(&batch) {
+            assert_eq!(s.score(h), b, "batched path must be bit-exact");
         }
     }
 

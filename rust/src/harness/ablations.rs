@@ -12,10 +12,11 @@ use anyhow::Result;
 use super::HarnessOpts;
 use crate::coordinator::method::Method;
 use crate::coordinator::scorer::StepScorer;
-use crate::sim::des::{DesEngine, ScoreAgg, SimConfig, VictimPolicy};
+use crate::sim::des::{DesEngine, ScoreAgg, Scratch, SimConfig, VictimPolicy};
 use crate::sim::profiles::{BenchId, ModelId};
 use crate::sim::tracegen::{GenParams, TraceGen};
 use crate::util::json::Json;
+use crate::util::pool;
 
 #[derive(Debug, Clone)]
 pub struct AblationRow {
@@ -39,9 +40,12 @@ fn run_variant(
     let gen = TraceGen::new(cfg.model, cfg.bench, gen_params.clone(), opts.seed ^ 0x5EED);
     let engine = DesEngine::new(&cfg, &gen, scorer);
     let n_questions = opts.max_questions.unwrap_or(30).min(60);
+    let threads = opts.threads; // parallel_map clamps to n_questions internally
+    let results = pool::parallel_map_with(threads, n_questions, Scratch::new, |scratch, qid| {
+        engine.run_question_with(qid, scratch)
+    });
     let (mut acc, mut tok, mut lat) = (0.0, 0.0, 0.0);
-    for qid in 0..n_questions {
-        let r = engine.run_question(qid);
+    for r in &results {
         acc += r.correct as usize as f64;
         tok += r.gen_tokens as f64;
         lat += r.latency_s;

@@ -4,10 +4,11 @@
 
 use crate::coordinator::method::Method;
 use crate::coordinator::scorer::StepScorer;
-use crate::sim::des::{DesEngine, QuestionResult, SimConfig};
+use crate::sim::des::{DesEngine, QuestionResult, Scratch, SimConfig};
 use crate::sim::profiles::{BenchId, BenchProfile, ModelId};
 use crate::sim::tracegen::{GenParams, TraceGen};
 use crate::util::json::Json;
+use crate::util::pool;
 
 /// Aggregated metrics of one cell.
 #[derive(Debug, Clone)]
@@ -66,6 +67,10 @@ pub struct CellOpts {
     pub seed: u64,
     pub score_all: bool,
     pub record_dynamics: bool,
+    /// Worker threads sharding the cell's questions (0 = all cores).
+    /// Every question derives its RNG streams from `(seed, qid)` alone,
+    /// so results are bit-identical for any thread count.
+    pub threads: usize,
 }
 
 impl Default for CellOpts {
@@ -77,6 +82,7 @@ impl Default for CellOpts {
             seed: 0,
             score_all: false,
             record_dynamics: false,
+            threads: 1,
         }
     }
 }
@@ -120,30 +126,56 @@ pub fn run_cell_with(
     let mut stage_wd_acc = ((0.0, 0.0), (0.0, 0.0));
     let mut stage_count = 0usize;
 
-    for qid in 0..n_questions {
-        let r = engine.run_question(qid);
-        correct += r.correct as usize;
-        tok += r.gen_tokens as f64;
-        lat += r.latency_s;
-        wait += r.mean_wait_s;
-        decode += r.mean_decode_s;
-        ewait += r.engine_wait_s;
-        edecode += r.engine_decode_s;
-        preempt += r.n_preemptions as f64;
-        pruned += r.n_pruned as f64;
-        if let Some((w, p)) = r.stage_latency {
-            stage_lat_acc.0 += w;
-            stage_lat_acc.1 += p;
-            stage_count += 1;
-        }
-        if let Some(((ww, wd), (pw, pd))) = r.stage_wait_decode {
-            stage_wd_acc.0 .0 += ww;
-            stage_wd_acc.0 .1 += wd;
-            stage_wd_acc.1 .0 += pw;
-            stage_wd_acc.1 .1 += pd;
-        }
-        if let Some(cb) = per_question.as_deref_mut() {
-            cb(&r);
+    {
+        let mut fold = |r: &QuestionResult| {
+            correct += r.correct as usize;
+            tok += r.gen_tokens as f64;
+            lat += r.latency_s;
+            wait += r.mean_wait_s;
+            decode += r.mean_decode_s;
+            ewait += r.engine_wait_s;
+            edecode += r.engine_decode_s;
+            preempt += r.n_preemptions as f64;
+            pruned += r.n_pruned as f64;
+            if let Some((w, p)) = r.stage_latency {
+                stage_lat_acc.0 += w;
+                stage_lat_acc.1 += p;
+                stage_count += 1;
+            }
+            if let Some(((ww, wd), (pw, pd))) = r.stage_wait_decode {
+                stage_wd_acc.0 .0 += ww;
+                stage_wd_acc.0 .1 += wd;
+                stage_wd_acc.1 .0 += pw;
+                stage_wd_acc.1 .1 += pd;
+            }
+            if let Some(cb) = per_question.as_deref_mut() {
+                cb(r);
+            }
+        };
+
+        // Questions are independent simulations whose RNG streams derive
+        // from (seed, qid), so they shard freely across workers. The
+        // parallel path collects into qid order before folding, which
+        // keeps the aggregate float sums and the per_question callback
+        // order bit-identical to the streaming serial path; each worker
+        // reuses one Scratch across its questions.
+        let threads = pool::resolve_threads(opts.threads).min(n_questions.max(1));
+        if threads <= 1 {
+            let mut scratch = Scratch::new();
+            for qid in 0..n_questions {
+                let r = engine.run_question_with(qid, &mut scratch);
+                fold(&r);
+            }
+        } else {
+            let results: Vec<QuestionResult> = pool::parallel_map_with(
+                threads,
+                n_questions,
+                Scratch::new,
+                |scratch, qid| engine.run_question_with(qid, scratch),
+            );
+            for r in &results {
+                fold(r);
+            }
         }
     }
 
@@ -188,20 +220,66 @@ pub fn run_cell(
     run_cell_with(model, bench, method, gen_params, scorer, opts, None)
 }
 
+/// Projection scorer onto the generator's signal direction — the
+/// artifact-free stand-in for the trained MLP that tests and the
+/// self-contained benches share (real runs load the trained weights
+/// via `harness::load_sim_bundle`).
+pub fn projection_scorer(gp: &GenParams) -> StepScorer {
+    let d = gp.d;
+    let mut w1 = vec![0.0f32; d * 2];
+    for i in 0..d {
+        w1[i * 2] = gp.signal_dir[i];
+        w1[i * 2 + 1] = -gp.signal_dir[i];
+    }
+    StepScorer::new(d, 2, w1, vec![0.0; 2], vec![1.0, -1.0], 0.0)
+        .expect("projection scorer shapes are consistent by construction")
+}
+
+/// One cell of a table grid, for batched execution via [`run_cells`].
+#[derive(Debug, Clone)]
+pub struct CellJob {
+    pub model: ModelId,
+    pub bench: BenchId,
+    pub method: Method,
+    pub opts: CellOpts,
+}
+
+/// Run a whole table's cells with two-level sharding (0 threads = all
+/// cores): with at least as many cells as workers, the grid shards
+/// across cells (questions serial inside each); otherwise cells run
+/// serially and each shards its questions. Results come back in job
+/// order and are identical for any thread count.
+pub fn run_cells(
+    jobs: &[CellJob],
+    gen_params: &GenParams,
+    scorer: &StepScorer,
+    threads: usize,
+) -> Vec<CellResult> {
+    let threads = pool::resolve_threads(threads);
+    if threads > 1 && jobs.len() >= threads {
+        pool::parallel_map(threads, jobs.len(), |i| {
+            let j = &jobs[i];
+            let mut opts = j.opts.clone();
+            opts.threads = 1;
+            run_cell(j.model, j.bench, j.method, gen_params, scorer, &opts)
+        })
+    } else {
+        jobs.iter()
+            .map(|j| {
+                let mut opts = j.opts.clone();
+                opts.threads = threads;
+                run_cell(j.model, j.bench, j.method, gen_params, scorer, &opts)
+            })
+            .collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     fn scorer_for(gp: &GenParams) -> StepScorer {
-        // Projection scorer onto the signal direction (tests run without
-        // artifacts; real runs load the trained MLP).
-        let d = gp.d;
-        let mut w1 = vec![0.0f32; d * 2];
-        for i in 0..d {
-            w1[i * 2] = gp.signal_dir[i];
-            w1[i * 2 + 1] = -gp.signal_dir[i];
-        }
-        StepScorer::new(d, 2, w1, vec![0.0; 2], vec![1.0, -1.0], 0.0).unwrap()
+        projection_scorer(gp)
     }
 
     #[test]
@@ -214,6 +292,26 @@ mod tests {
         assert!(r.tok_k > 0.0);
         assert!(r.lat_s > 0.0);
         assert!((0.0..=100.0).contains(&r.acc));
+    }
+
+    #[test]
+    fn cell_and_grid_sharding_match_serial() {
+        let gp = GenParams::default_d64();
+        let sc = scorer_for(&gp);
+        let jobs: Vec<CellJob> = [Method::Sc, Method::Step]
+            .into_iter()
+            .map(|method| CellJob {
+                model: ModelId::Qwen3_4B,
+                bench: BenchId::Aime25,
+                method,
+                opts: CellOpts { n_traces: 8, max_questions: Some(4), ..Default::default() },
+            })
+            .collect();
+        let serial = run_cells(&jobs, &gp, &sc, 1);
+        let sharded = run_cells(&jobs, &gp, &sc, 2); // cells-level split
+        for (a, b) in serial.iter().zip(&sharded) {
+            assert_eq!(a.to_json().to_string_compact(), b.to_json().to_string_compact());
+        }
     }
 
     #[test]

@@ -7,7 +7,7 @@
 
 use anyhow::Result;
 
-use super::cells::{run_cell, CellOpts};
+use super::cells::{run_cells, CellJob, CellOpts};
 use super::HarnessOpts;
 use crate::coordinator::method::Method;
 use crate::sim::profiles::{BenchId, ModelId};
@@ -26,40 +26,67 @@ pub struct ScalingPoint {
 pub fn run_fig4(opts: &HarnessOpts) -> Result<Vec<ScalingPoint>> {
     let (gen, scorer) = super::load_sim_bundle(&super::artifact_dir())?;
     let budgets = [1usize, 16, 32, 64];
-    let mut points = Vec::new();
-    println!("## Fig 4: latency scaling (N = 1, 16, 32, 64)");
+    // Build the full 64-point grid, shard it across workers, then print.
+    // N=1 degenerates to plain CoT for every method, so the four method
+    // rows of each (model, bench) share one simulated Cot cell instead
+    // of recomputing it per method.
+    let mut meta = Vec::new();
+    let mut jobs = Vec::new();
+    let mut job_of = Vec::new(); // meta index -> job index
+    let mut cot_job: std::collections::HashMap<(ModelId, BenchId), usize> =
+        std::collections::HashMap::new();
     for model in [ModelId::Qwen3_4B, ModelId::DeepSeek8B] {
         for bench in [BenchId::Aime25, BenchId::Hmmt2425] {
-            println!("\n### {:?} / {}", model, bench.name());
-            println!("{:<10} {:>4} | {:>6} {:>8}", "method", "N", "acc%", "lat(s)");
             for method in [Method::Sc, Method::SlimSc, Method::DeepConf, Method::Step] {
                 for &n in &budgets {
-                    let m = if n == 1 { Method::Cot } else { method };
+                    meta.push((model, bench, method, n));
                     let cell_opts = CellOpts {
                         n_traces: n,
                         max_questions: opts.max_questions,
                         seed: opts.seed,
                         ..Default::default()
                     };
-                    let r = run_cell(model, bench, m, &gen, &scorer, &cell_opts);
-                    println!(
-                        "{:<10} {:>4} | {:>6.1} {:>8.0}",
-                        method.name(),
-                        n,
-                        r.acc,
-                        r.lat_s
-                    );
-                    points.push(ScalingPoint {
-                        model,
-                        bench,
-                        method,
-                        n,
-                        acc: r.acc,
-                        lat_s: r.lat_s,
-                    });
+                    if n == 1 {
+                        let idx = *cot_job.entry((model, bench)).or_insert_with(|| {
+                            jobs.push(CellJob { model, bench, method: Method::Cot, opts: cell_opts });
+                            jobs.len() - 1
+                        });
+                        job_of.push(idx);
+                    } else {
+                        jobs.push(CellJob { model, bench, method, opts: cell_opts });
+                        job_of.push(jobs.len() - 1);
+                    }
                 }
             }
         }
+    }
+    let cells = run_cells(&jobs, &gen, &scorer, opts.threads);
+
+    let mut points = Vec::new();
+    println!("## Fig 4: latency scaling (N = 1, 16, 32, 64)");
+    let mut last_group = None;
+    for (mi, (model, bench, method, n)) in meta.into_iter().enumerate() {
+        let r = &cells[job_of[mi]];
+        if last_group != Some((model, bench)) {
+            last_group = Some((model, bench));
+            println!("\n### {:?} / {}", model, bench.name());
+            println!("{:<10} {:>4} | {:>6} {:>8}", "method", "N", "acc%", "lat(s)");
+        }
+        println!(
+            "{:<10} {:>4} | {:>6.1} {:>8.0}",
+            method.name(),
+            n,
+            r.acc,
+            r.lat_s
+        );
+        points.push(ScalingPoint {
+            model,
+            bench,
+            method,
+            n,
+            acc: r.acc,
+            lat_s: r.lat_s,
+        });
     }
     let json = Json::Arr(
         points
@@ -83,24 +110,31 @@ pub fn run_fig4(opts: &HarnessOpts) -> Result<Vec<ScalingPoint>> {
 pub fn run_fig1(opts: &HarnessOpts) -> Result<Vec<(Method, f64, f64)>> {
     let (gen, scorer) = super::load_sim_bundle(&super::artifact_dir())?;
     let benches = [BenchId::Aime25, BenchId::Hmmt2425, BenchId::GpqaDiamond];
+    let mut jobs = Vec::new();
+    for method in Method::ALL {
+        for bench in benches {
+            jobs.push(CellJob {
+                model: ModelId::DeepSeek8B,
+                bench,
+                method,
+                opts: CellOpts {
+                    n_traces: opts.n_traces,
+                    max_questions: opts.max_questions,
+                    seed: opts.seed,
+                    ..Default::default()
+                },
+            });
+        }
+    }
+    let cells = run_cells(&jobs, &gen, &scorer, opts.threads);
+
     let mut points = Vec::new();
     println!("## Fig 1: accuracy vs latency scatter (DeepSeek-8B, N=64, avg of AIME/HMMT/GPQA)");
     println!("{:<10} | {:>6} {:>8}", "method", "acc%", "lat(s)");
-    for method in Method::ALL {
-        let (mut acc, mut lat) = (0.0, 0.0);
-        for bench in benches {
-            let cell_opts = CellOpts {
-                n_traces: opts.n_traces,
-                max_questions: opts.max_questions,
-                seed: opts.seed,
-                ..Default::default()
-            };
-            let r = run_cell(ModelId::DeepSeek8B, bench, method, &gen, &scorer, &cell_opts);
-            acc += r.acc;
-            lat += r.lat_s;
-        }
-        acc /= benches.len() as f64;
-        lat /= benches.len() as f64;
+    for (mi, method) in Method::ALL.into_iter().enumerate() {
+        let group = &cells[mi * benches.len()..(mi + 1) * benches.len()];
+        let acc = group.iter().map(|r| r.acc).sum::<f64>() / benches.len() as f64;
+        let lat = group.iter().map(|r| r.lat_s).sum::<f64>() / benches.len() as f64;
         println!("{:<10} | {:>6.1} {:>8.0}", method.name(), acc, lat);
         points.push((method, acc, lat));
     }

@@ -14,6 +14,7 @@ use crate::coordinator::method::Method;
 use crate::sim::profiles::{BenchId, ModelId};
 use crate::sim::tracegen::TraceGen;
 use crate::util::json::Json;
+use crate::util::pool;
 use crate::util::stats::{auc, mean, stddev};
 
 pub struct Fig2a {
@@ -32,22 +33,32 @@ pub fn run_fig2a(opts: &HarnessOpts) -> Result<Fig2a> {
         "{:>7} | {:>8} {:>8} | {:>8} {:>8} | {:>6}",
         "prefix", "mu_corr", "sd_corr", "mu_inc", "sd_inc", "AUC"
     );
+    let threads = opts.threads; // parallel_map clamps to n_questions internally
     let mut rows = Vec::new();
     for frac in [0.25, 0.50, 0.75] {
-        let mut scores = Vec::new();
-        let mut labels = Vec::new();
-        for qid in 0..n_questions {
+        // Questions shard across workers; per-question score/label runs
+        // are concatenated in qid order (identical to a serial loop).
+        let per_q: Vec<(Vec<f64>, Vec<bool>)> = pool::parallel_map(threads, n_questions, |qid| {
             let q = gen.question(qid);
+            let mut q_scores = Vec::with_capacity(traces_per_q);
+            let mut q_labels = Vec::with_capacity(traces_per_q);
             for i in 0..traces_per_q {
                 let t = gen.trace(&q, i);
                 let k = ((t.n_steps() as f64 * frac).ceil() as usize).max(1);
-                let mut s = 0.0;
-                for n in 1..=k {
-                    s += scorer.score(&gen.hidden_state(&q, &t, n)) as f64;
-                }
-                scores.push(s / k as f64);
-                labels.push(t.label);
+                let hs: Vec<Vec<f32>> =
+                    (1..=k).map(|n| gen.hidden_state(&q, &t, n)).collect();
+                // Fused batch path, bit-exact with summing score() calls.
+                let s: f64 = scorer.score_batch(&hs).iter().map(|&x| x as f64).sum();
+                q_scores.push(s / k as f64);
+                q_labels.push(t.label);
             }
+            (q_scores, q_labels)
+        });
+        let mut scores = Vec::new();
+        let mut labels = Vec::new();
+        for (s, l) in per_q {
+            scores.extend(s);
+            labels.extend(l);
         }
         let corr: Vec<f64> = scores
             .iter()
@@ -117,6 +128,7 @@ pub fn run_fig2c(opts: &HarnessOpts) -> Result<(f64, f64)> {
         n_traces: opts.n_traces,
         max_questions: opts.max_questions.or(Some(10)),
         seed: opts.seed,
+        threads: opts.threads,
         ..Default::default()
     };
     let r = run_cell(

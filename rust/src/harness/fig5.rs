@@ -9,6 +9,7 @@ use super::HarnessOpts;
 use crate::sim::profiles::{BenchId, ModelId};
 use crate::sim::tracegen::TraceGen;
 use crate::util::json::Json;
+use crate::util::pool;
 use crate::util::stats::rank_acc;
 
 pub struct Fig5 {
@@ -28,48 +29,65 @@ pub fn run(opts: &HarnessOpts) -> Result<Fig5> {
     for bench in [BenchId::Aime25, BenchId::Hmmt2425] {
         let gen = TraceGen::new(ModelId::Qwen3_4B, bench, gen_params.clone(), opts.seed);
         let n_questions = opts.max_questions.unwrap_or(15).min(30);
-        for qid in 0..n_questions {
-            let q = gen.question(qid);
-            // Pre-sample traces + full per-step signals once.
-            let traces: Vec<_> = (0..traces_per_q).map(|i| gen.trace(&q, i)).collect();
-            if !traces.iter().any(|t| t.label) || traces.iter().all(|t| t.label) {
-                continue; // RankAcc undefined without both classes
-            }
-            let step_scores: Vec<Vec<f64>> = traces
-                .iter()
-                .map(|t| {
-                    (1..=t.n_steps())
-                        .map(|n| scorer.score(&gen.hidden_state(&q, t, n)) as f64)
-                        .collect()
-                })
-                .collect();
-            let step_confs: Vec<Vec<f64>> = traces
-                .iter()
-                .map(|t| (1..=t.n_steps()).map(|n| gen.step_confidence(t, n)).collect())
-                .collect();
-
-            for (fi, &frac) in fractions.iter().enumerate() {
-                let prefix_mean = |xs: &Vec<f64>| {
-                    let k = ((xs.len() as f64 * frac).ceil() as usize).clamp(1, xs.len());
-                    xs[..k].iter().sum::<f64>() / k as f64
-                };
-                let (mut ps, mut ns, mut pc, mut nc) =
-                    (Vec::new(), Vec::new(), Vec::new(), Vec::new());
-                for (t, (ss, cs)) in
-                    traces.iter().zip(step_scores.iter().zip(&step_confs))
-                {
-                    if t.label {
-                        ps.push(prefix_mean(ss));
-                        pc.push(prefix_mean(cs));
-                    } else {
-                        ns.push(prefix_mean(ss));
-                        nc.push(prefix_mean(cs));
-                    }
+        let threads = opts.threads; // parallel_map clamps to n_questions internally
+        // Questions shard across workers; each returns its RankAcc pair
+        // per prefix fraction, folded below in qid order so the output
+        // is identical for any thread count.
+        let per_q: Vec<Vec<(Option<f64>, Option<f64>)>> =
+            pool::parallel_map(threads, n_questions, |qid| {
+                let q = gen.question(qid);
+                // Pre-sample traces + full per-step signals once.
+                let traces: Vec<_> = (0..traces_per_q).map(|i| gen.trace(&q, i)).collect();
+                if !traces.iter().any(|t| t.label) || traces.iter().all(|t| t.label) {
+                    return vec![(None, None); fractions.len()]; // RankAcc undefined
                 }
-                if let Some(a) = rank_acc(&ps, &ns) {
+                let step_scores: Vec<Vec<f64>> = traces
+                    .iter()
+                    .map(|t| {
+                        // Fused batch path: all of a trace's step hidden
+                        // states scored in one tiled pass (bit-exact with
+                        // per-step score()).
+                        let hs: Vec<Vec<f32>> = (1..=t.n_steps())
+                            .map(|n| gen.hidden_state(&q, t, n))
+                            .collect();
+                        scorer.score_batch(&hs).into_iter().map(|s| s as f64).collect()
+                    })
+                    .collect();
+                let step_confs: Vec<Vec<f64>> = traces
+                    .iter()
+                    .map(|t| (1..=t.n_steps()).map(|n| gen.step_confidence(t, n)).collect())
+                    .collect();
+
+                fractions
+                    .iter()
+                    .map(|&frac| {
+                        let prefix_mean = |xs: &[f64]| {
+                            let k = ((xs.len() as f64 * frac).ceil() as usize).clamp(1, xs.len());
+                            xs[..k].iter().sum::<f64>() / k as f64
+                        };
+                        let (mut ps, mut ns, mut pc, mut nc) =
+                            (Vec::new(), Vec::new(), Vec::new(), Vec::new());
+                        for (t, (ss, cs)) in
+                            traces.iter().zip(step_scores.iter().zip(&step_confs))
+                        {
+                            if t.label {
+                                ps.push(prefix_mean(ss));
+                                pc.push(prefix_mean(cs));
+                            } else {
+                                ns.push(prefix_mean(ss));
+                                nc.push(prefix_mean(cs));
+                            }
+                        }
+                        (rank_acc(&ps, &ns), rank_acc(&pc, &nc))
+                    })
+                    .collect()
+            });
+        for row in per_q {
+            for (fi, (s, c)) in row.into_iter().enumerate() {
+                if let Some(a) = s {
                     sc_acc[fi].push(a);
                 }
-                if let Some(a) = rank_acc(&pc, &nc) {
+                if let Some(a) = c {
                     cf_acc[fi].push(a);
                 }
             }

@@ -8,6 +8,7 @@ use super::HarnessOpts;
 use crate::sim::profiles::{BenchId, ModelId};
 use crate::sim::tracegen::TraceGen;
 use crate::util::json::Json;
+use crate::util::pool;
 
 pub struct Dynamics {
     pub model: ModelId,
@@ -22,28 +23,53 @@ pub fn run_model(opts: &HarnessOpts, model: ModelId) -> Result<Dynamics> {
     let gen = TraceGen::new(model, BenchId::Aime25, gen_params, opts.seed);
     let n_questions = opts.max_questions.unwrap_or(8).min(30);
 
-    let mut acc: Vec<(f64, f64, usize, usize)> = Vec::new();
-    for qid in 0..n_questions {
-        let q = gen.question(qid);
-        for i in 0..opts.n_traces {
-            let t = gen.trace(&q, i);
-            let mut sum = 0.0;
-            for n in 1..=t.n_steps() {
-                sum += scorer.score(&gen.hidden_state(&q, &t, n)) as f64;
-                let prefix_mean = sum / n as f64;
-                let bin = (t.step_ends[n - 1] / BIN) as usize;
-                if acc.len() <= bin {
-                    acc.resize(bin + 1, (0.0, 0.0, 0, 0));
-                }
-                let e = &mut acc[bin];
-                if t.label {
-                    e.0 += prefix_mean;
-                    e.2 += 1;
-                } else {
-                    e.1 += prefix_mean;
-                    e.3 += 1;
+    // Questions shard across workers, each returning its own bin
+    // partial; partials merge in qid order, so the output is identical
+    // for any thread count (though the float-summation tree differs
+    // from the old fully-serial fold by design).
+    let threads = opts.threads; // parallel_map clamps to n_questions internally
+    let partials: Vec<Vec<(f64, f64, usize, usize)>> =
+        pool::parallel_map(threads, n_questions, |qid| {
+            let q = gen.question(qid);
+            let mut acc: Vec<(f64, f64, usize, usize)> = Vec::new();
+            for i in 0..opts.n_traces {
+                let t = gen.trace(&q, i);
+                // Fused batch path over the trace's step hidden states
+                // (bit-exact with per-step score()).
+                let hs: Vec<Vec<f32>> = (1..=t.n_steps())
+                    .map(|n| gen.hidden_state(&q, &t, n))
+                    .collect();
+                let scores = scorer.score_batch(&hs);
+                let mut sum = 0.0;
+                for (j, &s) in scores.iter().enumerate() {
+                    sum += s as f64;
+                    let prefix_mean = sum / (j + 1) as f64;
+                    let bin = (t.step_ends[j] / BIN) as usize;
+                    if acc.len() <= bin {
+                        acc.resize(bin + 1, (0.0, 0.0, 0, 0));
+                    }
+                    let e = &mut acc[bin];
+                    if t.label {
+                        e.0 += prefix_mean;
+                        e.2 += 1;
+                    } else {
+                        e.1 += prefix_mean;
+                        e.3 += 1;
+                    }
                 }
             }
+            acc
+        });
+    let mut acc: Vec<(f64, f64, usize, usize)> = Vec::new();
+    for part in partials {
+        if acc.len() < part.len() {
+            acc.resize(part.len(), (0.0, 0.0, 0, 0));
+        }
+        for (e, p) in acc.iter_mut().zip(part) {
+            e.0 += p.0;
+            e.1 += p.1;
+            e.2 += p.2;
+            e.3 += p.3;
         }
     }
     let bins: Vec<(f64, f64, usize, usize)> = acc

@@ -65,17 +65,20 @@ pub struct HarnessOpts {
     pub max_questions: Option<usize>,
     pub n_traces: usize,
     pub seed: u64,
+    /// Worker threads for the question/cell sharding (0 = all cores,
+    /// 1 = serial). Results are bit-identical for any value.
+    pub threads: usize,
 }
 
 impl Default for HarnessOpts {
     fn default() -> Self {
-        HarnessOpts { max_questions: None, n_traces: 64, seed: 0 }
+        HarnessOpts { max_questions: None, n_traces: 64, seed: 0, threads: 0 }
     }
 }
 
 impl HarnessOpts {
     /// Quick mode for benches / smoke runs.
     pub fn quick() -> Self {
-        HarnessOpts { max_questions: Some(8), n_traces: 32, seed: 0 }
+        HarnessOpts { max_questions: Some(8), n_traces: 32, ..Default::default() }
     }
 }

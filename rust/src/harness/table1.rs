@@ -3,7 +3,7 @@
 
 use anyhow::Result;
 
-use super::cells::{run_cell, CellOpts, CellResult};
+use super::cells::{run_cells, CellJob, CellOpts, CellResult};
 use super::paper_ref;
 use super::HarnessOpts;
 use crate::coordinator::method::Method;
@@ -12,7 +12,29 @@ use crate::util::json::Json;
 
 pub fn run(opts: &HarnessOpts) -> Result<Vec<CellResult>> {
     let (gen, scorer) = super::load_sim_bundle(&super::artifact_dir())?;
-    let mut all = Vec::new();
+    // The full 75-cell grid is computed first (sharded across workers),
+    // then printed in table order.
+    let mut jobs = Vec::new();
+    for model in ModelId::ALL {
+        for bench in BenchId::ALL {
+            for method in Method::ALL {
+                jobs.push(CellJob {
+                    model,
+                    bench,
+                    method,
+                    opts: CellOpts {
+                        n_traces: opts.n_traces,
+                        max_questions: opts.max_questions,
+                        seed: opts.seed,
+                        ..Default::default()
+                    },
+                });
+            }
+        }
+    }
+    let all = run_cells(&jobs, &gen, &scorer, opts.threads);
+
+    let mut rows = all.iter();
     for model in ModelId::ALL {
         println!("\n## {:?}", model);
         println!(
@@ -21,13 +43,7 @@ pub fn run(opts: &HarnessOpts) -> Result<Vec<CellResult>> {
         );
         for bench in BenchId::ALL {
             for method in Method::ALL {
-                let cell_opts = CellOpts {
-                    n_traces: opts.n_traces,
-                    max_questions: opts.max_questions,
-                    seed: opts.seed,
-                    ..Default::default()
-                };
-                let r = run_cell(model, bench, method, &gen, &scorer, &cell_opts);
+                let r = rows.next().expect("one result per job");
                 let (pa, pt, pl) = paper_ref::table1(model, bench, method);
                 println!(
                     "{:<10} {:<13} | {:>6.1} {:>8.1} {:>7.0} | paper: {:>6.1} {:>8.1} {:>7.0}",
@@ -40,7 +56,6 @@ pub fn run(opts: &HarnessOpts) -> Result<Vec<CellResult>> {
                     pt,
                     pl
                 );
-                all.push(r);
             }
         }
     }

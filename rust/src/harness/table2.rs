@@ -9,6 +9,7 @@ use crate::coordinator::voting::{weighted_vote, Vote};
 use crate::sim::profiles::{BenchId, ModelId};
 use crate::sim::tracegen::TraceGen;
 use crate::util::json::Json;
+use crate::util::pool;
 
 #[derive(Debug, Clone)]
 pub struct Table2Row {
@@ -55,31 +56,45 @@ pub fn run(opts: &HarnessOpts) -> Result<Vec<Table2Row>> {
                     opts.seed ^ (run as u64) << 8,
                 );
                 let n_questions = opts.max_questions.unwrap_or(30).min(60);
-                let (mut cm, mut cp, mut cs) = (0, 0, 0);
-                for qid in 0..n_questions {
-                    let q = gen.question(qid);
-                    // The same completed trace set for all three strategies.
-                    let traces: Vec<_> =
-                        (0..opts.n_traces).map(|i| gen.trace(&q, i)).collect();
-                    let mut votes_m = Vec::new();
-                    let mut votes_p = Vec::new();
-                    let mut votes_s = Vec::new();
-                    for t in &traces {
-                        let Some(ans) = t.answer else { continue };
-                        // STEP weight: mean step score over the full trace.
-                        let k = t.n_steps();
-                        let mut s = 0.0;
-                        for n in 1..=k {
-                            s += scorer.score(&gen.hidden_state(&q, t, n)) as f64;
+                // Questions shard across workers; the three per-question
+                // verdicts fold in qid order (integer counts, identical
+                // for any thread count).
+                let threads = opts.threads; // parallel_map clamps to n_questions internally
+                let verdicts: Vec<(bool, bool, bool)> =
+                    pool::parallel_map(threads, n_questions, |qid| {
+                        let q = gen.question(qid);
+                        // The same completed trace set for all three strategies.
+                        let traces: Vec<_> =
+                            (0..opts.n_traces).map(|i| gen.trace(&q, i)).collect();
+                        let mut votes_m = Vec::new();
+                        let mut votes_p = Vec::new();
+                        let mut votes_s = Vec::new();
+                        for t in &traces {
+                            let Some(ans) = t.answer else { continue };
+                            // STEP weight: mean step score over the full
+                            // trace, via the fused batch path (bit-exact
+                            // with summing per-step score()).
+                            let k = t.n_steps();
+                            let hs: Vec<Vec<f32>> =
+                                (1..=k).map(|n| gen.hidden_state(&q, t, n)).collect();
+                            let s: f64 =
+                                scorer.score_batch(&hs).iter().map(|&x| x as f64).sum();
+                            let step_w = s / k as f64;
+                            votes_m.push(Vote { answer: Some(ans), weight: 1.0 });
+                            votes_p.push(Vote { answer: Some(ans), weight: gen.prm_score(t) });
+                            votes_s.push(Vote { answer: Some(ans), weight: step_w });
                         }
-                        let step_w = s / k as f64;
-                        votes_m.push(Vote { answer: Some(ans), weight: 1.0 });
-                        votes_p.push(Vote { answer: Some(ans), weight: gen.prm_score(t) });
-                        votes_s.push(Vote { answer: Some(ans), weight: step_w });
-                    }
-                    cm += (weighted_vote(&votes_m) == Some(0)) as usize;
-                    cp += (weighted_vote(&votes_p) == Some(0)) as usize;
-                    cs += (weighted_vote(&votes_s) == Some(0)) as usize;
+                        (
+                            weighted_vote(&votes_m) == Some(0),
+                            weighted_vote(&votes_p) == Some(0),
+                            weighted_vote(&votes_s) == Some(0),
+                        )
+                    });
+                let (mut cm, mut cp, mut cs) = (0, 0, 0);
+                for (m_ok, p_ok, s_ok) in verdicts {
+                    cm += m_ok as usize;
+                    cp += p_ok as usize;
+                    cs += s_ok as usize;
                 }
                 let nq = n_questions as f64;
                 acc_m += 100.0 * cm as f64 / nq;

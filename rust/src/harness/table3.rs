@@ -5,7 +5,7 @@
 
 use anyhow::Result;
 
-use super::cells::{run_cell, CellOpts};
+use super::cells::{run_cells, CellJob, CellOpts};
 use super::{paper_ref, HarnessOpts};
 use crate::coordinator::method::Method;
 use crate::sim::profiles::{BenchId, ModelId};
@@ -22,20 +22,30 @@ pub struct Table3Row {
 
 pub fn run(opts: &HarnessOpts) -> Result<Vec<Table3Row>> {
     let (gen, scorer) = super::load_sim_bundle(&super::artifact_dir())?;
+    let methods = [Method::Sc, Method::DeepConf, Method::SlimSc, Method::Step];
+    let jobs: Vec<CellJob> = methods
+        .iter()
+        .map(|&method| CellJob {
+            model: ModelId::DeepSeek8B,
+            bench: BenchId::Hmmt2425,
+            method,
+            opts: CellOpts {
+                n_traces: opts.n_traces,
+                max_questions: opts.max_questions,
+                seed: opts.seed,
+                ..Default::default()
+            },
+        })
+        .collect();
+    let cells = run_cells(&jobs, &gen, &scorer, opts.threads);
+
     let mut rows = Vec::new();
     println!("## Table 3: wait/decode seconds (DeepSeek-8B, HMMT-25, N={})", opts.n_traces);
     println!(
         "{:<10} | {:>8} {:>8} | paper: {:>7} {:>7}",
         "method", "wait", "decode", "wait", "decode"
     );
-    for method in [Method::Sc, Method::DeepConf, Method::SlimSc, Method::Step] {
-        let cell_opts = CellOpts {
-            n_traces: opts.n_traces,
-            max_questions: opts.max_questions,
-            seed: opts.seed,
-            ..Default::default()
-        };
-        let r = run_cell(ModelId::DeepSeek8B, BenchId::Hmmt2425, method, &gen, &scorer, &cell_opts);
+    for (method, r) in methods.into_iter().zip(&cells) {
         let (pw, pd) = paper_ref::table3(method);
         println!(
             "{:<10} | {:>8.0} {:>8.0} | paper: {:>7.0} {:>7.0}",

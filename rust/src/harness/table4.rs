@@ -6,7 +6,7 @@
 
 use anyhow::Result;
 
-use super::cells::{run_cell, CellOpts};
+use super::cells::{run_cells, CellJob, CellOpts};
 use super::{paper_ref, HarnessOpts};
 use crate::coordinator::method::Method;
 use crate::sim::profiles::{BenchId, ModelId};
@@ -16,18 +16,27 @@ use crate::util::stats::{mean, stddev};
 pub fn run(opts: &HarnessOpts) -> Result<Vec<(f64, f64)>> {
     let (gen, scorer) = super::load_sim_bundle(&super::artifact_dir())?;
     let n_traces = 32.min(opts.n_traces);
+    let jobs: Vec<CellJob> = paper_ref::TABLE4_UTILS
+        .iter()
+        .map(|&util| CellJob {
+            model: ModelId::DeepSeek8B,
+            bench: BenchId::Hmmt2425,
+            method: Method::Step,
+            opts: CellOpts {
+                n_traces,
+                max_questions: opts.max_questions,
+                mem_util: util,
+                seed: opts.seed,
+                ..Default::default()
+            },
+        })
+        .collect();
+    let cells = run_cells(&jobs, &gen, &scorer, opts.threads);
+
     let mut rows = Vec::new();
     println!("## Table 4: STEP accuracy vs gpu_memory_utilization (DeepSeek-8B, HMMT-25, N={n_traces})");
     println!("{:>6} | {:>8} | paper: {:>6}", "util", "acc%", "acc%");
-    for (i, &util) in paper_ref::TABLE4_UTILS.iter().enumerate() {
-        let cell_opts = CellOpts {
-            n_traces,
-            max_questions: opts.max_questions,
-            mem_util: util,
-            seed: opts.seed,
-            ..Default::default()
-        };
-        let r = run_cell(ModelId::DeepSeek8B, BenchId::Hmmt2425, Method::Step, &gen, &scorer, &cell_opts);
+    for (i, (&util, r)) in paper_ref::TABLE4_UTILS.iter().zip(&cells).enumerate() {
         println!("{:>6.1} | {:>8.1} | paper: {:>6.1}", util, r.acc, paper_ref::TABLE4_ACC[i]);
         rows.push((util, r.acc));
     }

@@ -45,10 +45,25 @@ impl BlockAllocator {
 
     /// Allocate `n` blocks atomically: all or nothing.
     pub fn alloc_n(&mut self, n: usize) -> Option<Vec<BlockId>> {
+        let mut out = Vec::new();
+        self.alloc_n_into(n, &mut out).then_some(out)
+    }
+
+    /// Allocate `n` blocks atomically, appending them to `out` — the
+    /// decode hot path grows a sequence's existing block table in place
+    /// instead of collecting a temporary Vec per boundary crossing.
+    /// Returns false (leaving `out` untouched) if the pool is short.
+    pub fn alloc_n_into(&mut self, n: usize, out: &mut Vec<BlockId>) -> bool {
         if self.free_list.len() < n {
-            return None;
+            return false;
         }
-        Some((0..n).map(|_| self.alloc().unwrap()).collect())
+        out.reserve(n);
+        for _ in 0..n {
+            let id = self.free_list.pop().unwrap();
+            self.allocated[id as usize] = true;
+            out.push(id);
+        }
+        true
     }
 
     pub fn free(&mut self, id: BlockId) {
@@ -107,6 +122,22 @@ mod tests {
         assert_eq!(a.num_free(), 0);
         a.free_all(&blocks);
         assert_eq!(a.num_free(), 3);
+    }
+
+    #[test]
+    fn alloc_n_into_extends_in_place() {
+        let mut a = BlockAllocator::new(4);
+        let mut blocks = Vec::new();
+        assert!(a.alloc_n_into(2, &mut blocks));
+        assert_eq!(blocks.len(), 2);
+        assert!(!a.alloc_n_into(3, &mut blocks), "short pool must refuse");
+        assert_eq!(blocks.len(), 2, "failed alloc must not touch out");
+        assert!(a.alloc_n_into(2, &mut blocks));
+        assert_eq!(blocks.len(), 4);
+        assert_eq!(a.num_free(), 0);
+        for &b in &blocks {
+            assert!(a.is_allocated(b));
+        }
     }
 
     #[test]

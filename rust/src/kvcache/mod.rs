@@ -37,6 +37,11 @@ pub struct KvCacheManager {
     num_seqs: usize,
     /// Peak block usage observed (for reports).
     pub peak_used_blocks: usize,
+    /// Retired block-table Vecs recycled on the next admission. The DES
+    /// engine churns one table per trace lifecycle (admit -> grow ->
+    /// finish/prune); reusing the capacity keeps the steady-state hot
+    /// path free of heap traffic.
+    spare_tables: Vec<Vec<BlockId>>,
 }
 
 impl KvCacheManager {
@@ -48,6 +53,7 @@ impl KvCacheManager {
             tables: Vec::new(),
             num_seqs: 0,
             peak_used_blocks: 0,
+            spare_tables: Vec::new(),
         }
     }
 
@@ -110,32 +116,34 @@ impl KvCacheManager {
     pub fn allocate_seq(&mut self, seq: SeqId, tokens: usize) -> bool {
         assert!(self.slot(seq).is_none(), "seq {seq} already allocated");
         let need = self.blocks_for(tokens);
-        match self.alloc.alloc_n(need) {
-            Some(blocks) => {
-                let idx = seq as usize;
-                if self.tables.len() <= idx {
-                    self.tables.resize(idx + 1, None);
-                }
-                self.tables[idx] = Some(BlockTable { blocks, num_tokens: tokens });
-                self.num_seqs += 1;
-                self.peak_used_blocks = self.peak_used_blocks.max(self.alloc.num_used());
-                true
-            }
-            None => false,
+        let mut blocks = self.spare_tables.pop().unwrap_or_default();
+        if !self.alloc.alloc_n_into(need, &mut blocks) {
+            self.spare_tables.push(blocks);
+            return false;
         }
+        let idx = seq as usize;
+        if self.tables.len() <= idx {
+            self.tables.resize(idx + 1, None);
+        }
+        self.tables[idx] = Some(BlockTable { blocks, num_tokens: tokens });
+        self.num_seqs += 1;
+        self.peak_used_blocks = self.peak_used_blocks.max(self.alloc.num_used());
+        true
     }
 
-    /// Append `n` tokens; allocates new blocks at block boundaries.
+    /// Append `n` tokens; allocates new blocks at block boundaries,
+    /// directly into the sequence's table (no temporary Vec).
     /// Returns false (and changes nothing) if the pool is short.
     pub fn append_tokens(&mut self, seq: SeqId, n: usize) -> bool {
         let need = self.blocks_needed_for_append(seq, n);
         if need > 0 {
-            match self.alloc.alloc_n(need) {
-                Some(blocks) => {
-                    let t = self.slot_mut(seq).unwrap();
-                    t.blocks.extend(blocks);
-                }
-                None => return false,
+            let (alloc, tables) = (&mut self.alloc, &mut self.tables);
+            let t = tables
+                .get_mut(seq as usize)
+                .and_then(|t| t.as_mut())
+                .expect("unknown seq");
+            if !alloc.alloc_n_into(need, &mut t.blocks) {
+                return false;
             }
             self.peak_used_blocks = self.peak_used_blocks.max(self.alloc.num_used());
         }
@@ -147,7 +155,7 @@ impl KvCacheManager {
     /// Release a sequence entirely (finish / prune / preempt-with-recompute).
     /// Returns the number of blocks released.
     pub fn free_seq(&mut self, seq: SeqId) -> usize {
-        let t = self
+        let mut t = self
             .tables
             .get_mut(seq as usize)
             .and_then(|t| t.take())
@@ -155,6 +163,8 @@ impl KvCacheManager {
         self.num_seqs -= 1;
         let n = t.blocks.len();
         self.alloc.free_all(&t.blocks);
+        t.blocks.clear();
+        self.spare_tables.push(t.blocks);
         n
     }
 
@@ -262,6 +272,31 @@ mod tests {
         m.free_seq(1);
         m.allocate_seq(2, 16);
         assert_eq!(m.peak_used_blocks, 4);
+    }
+
+    #[test]
+    fn table_vecs_recycle_across_lifecycles() {
+        let mut m = mgr(8);
+        assert!(m.allocate_seq(1, 64)); // 4 blocks
+        let cap_before = m.block_table(1).unwrap().blocks.capacity();
+        m.free_seq(1);
+        // The next admission reuses the retired table's capacity.
+        assert!(m.allocate_seq(2, 16));
+        assert!(m.block_table(2).unwrap().blocks.capacity() >= cap_before);
+        assert_eq!(m.seq_tokens(2), 16);
+        m.check_invariants();
+    }
+
+    #[test]
+    fn failed_admission_keeps_spare_table() {
+        let mut m = mgr(2);
+        assert!(m.allocate_seq(1, 32));
+        m.free_seq(1);
+        assert!(!m.allocate_seq(2, 48), "needs 3 of 2 blocks");
+        assert_eq!(m.used_blocks(), 0);
+        // The recycled Vec must not leak into a half-allocated state.
+        assert!(m.allocate_seq(3, 32));
+        m.check_invariants();
     }
 
     #[test]

@@ -30,6 +30,9 @@ OPTIONS:
     --questions N    cap questions per benchmark (default: paper-faithful)
     --traces N       trace budget (default 64)
     --seed S         RNG seed (default 0)
+    --threads N      worker threads for the evaluation grid (default: all
+                     cores; 1 = serial). Results are bit-identical for
+                     any thread count.
     --quick          shorthand for --questions 8 --traces 32
 
 Artifacts are read from $STEP_ARTIFACTS_DIR (default ./artifacts); run
@@ -42,7 +45,9 @@ fn parse_opts(args: &[String]) -> Result<HarnessOpts> {
     while i < args.len() {
         match args[i].as_str() {
             "--quick" => {
-                opts = HarnessOpts::quick();
+                // Only the quick knobs; earlier --seed/--threads survive.
+                opts.max_questions = Some(8);
+                opts.n_traces = 32;
                 i += 1;
             }
             "--questions" => {
@@ -55,6 +60,10 @@ fn parse_opts(args: &[String]) -> Result<HarnessOpts> {
             }
             "--seed" => {
                 opts.seed = need_val(args, i)?.parse()?;
+                i += 2;
+            }
+            "--threads" => {
+                opts.threads = need_val(args, i)?.parse()?;
                 i += 2;
             }
             other => bail!("unknown option '{other}'\n\n{USAGE}"),

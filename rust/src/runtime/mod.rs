@@ -6,25 +6,37 @@
 //! Interchange is HLO *text*: jax >= 0.5 emits HloModuleProto with 64-bit
 //! instruction ids that xla_extension 0.5.1 rejects; the text parser
 //! reassigns ids (see /opt/xla-example/README.md and aot.py).
+//!
+//! Everything that touches the `xla` crate is behind the `pjrt` cargo
+//! feature: the default offline dependency set does not carry the crate,
+//! and the experiment grid (DES engine + harness) never needs it. The
+//! artifact registry stays available unconditionally.
 
 pub mod artifacts;
+#[cfg(feature = "pjrt")]
 pub mod exec;
 
 pub use artifacts::{Artifacts, GraphSpec, Manifest, ParamEntry};
+#[cfg(feature = "pjrt")]
 pub use exec::{DecodeExec, PrefillExec, ScorerExec};
 
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
+#[cfg(feature = "pjrt")]
 use std::rc::Rc;
 
+#[cfg(feature = "pjrt")]
 use anyhow::{anyhow, bail, Context, Result};
 
 /// A PJRT client plus an executable cache keyed by graph name.
+#[cfg(feature = "pjrt")]
 pub struct Runtime {
     pub client: xla::PjRtClient,
     pub artifacts: Artifacts,
     cache: HashMap<String, Rc<xla::PjRtLoadedExecutable>>,
 }
 
+#[cfg(feature = "pjrt")]
 impl Runtime {
     /// CPU PJRT client over an artifact directory.
     pub fn new(artifact_dir: impl Into<std::path::PathBuf>) -> Result<Runtime> {
@@ -92,6 +104,7 @@ impl Runtime {
 }
 
 /// Helper: f32 literal of the given shape from a flat slice.
+#[cfg(feature = "pjrt")]
 pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
     let n: i64 = dims.iter().product();
     if n as usize != data.len() {
@@ -103,6 +116,7 @@ pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
 }
 
 /// Helper: i32 literal of the given shape.
+#[cfg(feature = "pjrt")]
 pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
     let n: i64 = dims.iter().product();
     if n as usize != data.len() {

@@ -144,6 +144,31 @@ struct SimTrace {
     dynamics: Vec<(u64, f64)>,
 }
 
+/// Reusable hot-path buffers for [`DesEngine::run_question_with`]: the
+/// per-event running set, cached next-boundary lookups, memory-horizon
+/// block demands, and scorer activations. The event loop allocates
+/// nothing once these are warm; keep one `Scratch` per worker thread and
+/// reuse it across questions (`util::pool::parallel_map_with`).
+#[derive(Debug, Default)]
+pub struct Scratch {
+    /// Indices (into the trace vector) of currently running traces.
+    running: Vec<usize>,
+    /// Next step boundary per trace index (mirror of
+    /// `spec.step_ends[st.next_step]`, updated at crossings).
+    next_end: Vec<u64>,
+    /// Resident tokens per running trace for the memory-horizon search.
+    cur_tokens: Vec<u64>,
+    /// Hidden state / MLP activation buffers for the scorer.
+    h: Vec<f32>,
+    z: Vec<f32>,
+}
+
+impl Scratch {
+    pub fn new() -> Scratch {
+        Scratch::default()
+    }
+}
+
 /// The engine.
 pub struct DesEngine<'a> {
     cfg: &'a SimConfig,
@@ -173,6 +198,14 @@ impl<'a> DesEngine<'a> {
 
     /// Simulate one question end to end.
     pub fn run_question(&self, qid: usize) -> QuestionResult {
+        let mut scratch = Scratch::new();
+        self.run_question_with(qid, &mut scratch)
+    }
+
+    /// Like [`run_question`](Self::run_question) with caller-owned
+    /// scratch, so batch drivers reuse the hot-path buffers across
+    /// questions. Results are identical either way.
+    pub fn run_question_with(&self, qid: usize, scratch: &mut Scratch) -> QuestionResult {
         let q = self.gen.question(qid);
         let n = if self.cfg.method == Method::Cot { 1 } else { self.cfg.n_traces };
         let mut rng = Rng::new(self.cfg.seed ^ (qid as u64).wrapping_mul(0x2545F4914F6CDD1D));
@@ -197,7 +230,7 @@ impl<'a> DesEngine<'a> {
             // Stage 1: warmup traces to completion (SC mechanics).
             let warm: Vec<usize> = (0..n_init).collect();
             let mut warm_split = (0.0, 0.0);
-            self.run_phase(&q, &mut traces, &warm, &mut kv, &mut clock, None, &mut rng, &mut warm_split);
+            self.run_phase(&q, &mut traces, &warm, &mut kv, &mut clock, None, &mut rng, &mut warm_split, scratch);
             let warm_latency = clock;
             let (w_wait, w_dec) = warm_split;
             // Threshold from the warmup set's *lowest group confidence*
@@ -218,14 +251,14 @@ impl<'a> DesEngine<'a> {
             }
             let t0 = clock;
             let mut prune_split = (0.0, 0.0);
-            self.run_phase(&q, &mut traces, &online, &mut kv, &mut clock, Some(threshold), &mut rng, &mut prune_split);
+            self.run_phase(&q, &mut traces, &online, &mut kv, &mut clock, Some(threshold), &mut rng, &mut prune_split, scratch);
             stage_latency = Some((warm_latency, clock - t0));
             let (p_wait, p_dec) = prune_split;
             stage_wait_decode = Some(((w_wait, w_dec), (p_wait, p_dec)));
             engine_split = (warm_split.0 + prune_split.0, warm_split.1 + prune_split.1);
         } else {
             let all: Vec<usize> = (0..n).collect();
-            self.run_phase(&q, &mut traces, &all, &mut kv, &mut clock, None, &mut rng, &mut engine_split);
+            self.run_phase(&q, &mut traces, &all, &mut kv, &mut clock, None, &mut rng, &mut engine_split, scratch);
         }
 
         self.finish(qid, &q, traces, clock, engine_split, stage_latency, stage_wait_decode)
@@ -262,6 +295,7 @@ impl<'a> DesEngine<'a> {
         conf_threshold: Option<f64>,
         rng: &mut Rng,
         engine_split: &mut (f64, f64),
+        scratch: &mut Scratch,
     ) {
         let tm = self.profile.timing;
         let params = &self.cfg.params;
@@ -295,56 +329,62 @@ impl<'a> DesEngine<'a> {
         // Waiting queue of preempted traces (FIFO resume).
         let mut wait_q: std::collections::VecDeque<usize> = pending.into();
         engine_accrue!(wait_q, prefill_dt);
-        // Scratch buffers for the scoring hot path (no per-step allocs).
-        let mut h_buf = vec![0.0f32; self.gen.gen.d];
-        let mut z_buf = vec![0.0f32; self.scorer.hidden];
+        // Warm the reusable hot-path buffers (no per-event allocations).
+        scratch.h.resize(self.gen.gen.d, 0.0);
+        scratch.z.resize(self.scorer.hidden, 0.0);
+        scratch.next_end.resize(traces.len(), 0);
+        for &i in phase {
+            scratch.next_end[i] = traces[i].spec.step_ends[traces[i].st.next_step];
+        }
         let mut boundaries_crossed: usize = 0;
         let mut next_slim_check: usize = params.slim_check_interval_steps * phase.len().max(1);
 
         loop {
-            let running: Vec<usize> = phase
-                .iter()
-                .copied()
-                .filter(|&i| traces[i].st.status == TraceStatus::Running)
-                .collect();
+            scratch.running.clear();
+            for &i in phase {
+                if traces[i].st.status == TraceStatus::Running {
+                    scratch.running.push(i);
+                }
+            }
 
-            if running.is_empty() {
+            if scratch.running.is_empty() {
                 if wait_q.is_empty() {
                     break;
                 }
-                // Try to resume the head of the queue; if impossible the
-                // trace cannot ever fit -> drop it (counts as pruned).
-                let head = *wait_q.front().unwrap();
-                if !self.try_resume(q, traces, kv, clock, &mut wait_q, phase, engine_split) {
+                // Everything is parked: resume the first queued trace (in
+                // FIFO order) whose prefix fits. Only when *no* queued
+                // trace can ever fit again is the head dropped — it
+                // counts as pruned like any other non-voluntary removal.
+                if !self.resume_first_fit(q, traces, kv, clock, &mut wait_q, phase, engine_split) {
+                    let head = wait_q.pop_front().unwrap();
                     let t = &mut traces[head];
                     t.st.status = TraceStatus::Pruned;
                     t.st.finish_clock = *clock;
-                    wait_q.pop_front();
                 }
                 continue;
             }
 
-            let b = running.len();
+            let b = scratch.running.len();
 
             // ---- event horizon (iterations until next boundary/finish).
             let mut d_event = u64::MAX;
-            for &i in &running {
-                let t = &traces[i];
-                let next = t.spec.step_ends[t.st.next_step];
-                d_event = d_event.min(next - t.st.generated);
+            for &i in &scratch.running {
+                d_event = d_event.min(scratch.next_end[i] - traces[i].st.generated);
             }
             debug_assert!(d_event >= 1);
 
             // ---- memory horizon: largest d with block demand <= free.
-            let d_mem = self.memory_horizon(traces, &running, kv, d_event);
+            let d_mem =
+                self.memory_horizon(traces, &scratch.running, kv, d_event, &mut scratch.cur_tokens);
             if d_mem == 0 {
-                self.memory_event(traces, &running, kv, clock, &mut wait_q, rng);
+                self.memory_event(traces, &scratch.running, kv, clock, &mut wait_q, rng);
                 continue;
             }
             let d = d_event.min(d_mem);
 
             // ---- advance time + tokens.
-            let k0: usize = running
+            let k0: usize = scratch
+                .running
                 .iter()
                 .map(|&i| q.prompt_tokens + traces[i].st.generated as usize)
                 .sum();
@@ -359,7 +399,7 @@ impl<'a> DesEngine<'a> {
                     _ => {}
                 }
             }
-            for &i in &running {
+            for &i in &scratch.running {
                 let t = &mut traces[i];
                 t.st.generated += d;
                 let ok = kv.append_tokens(t.st.id, d as usize);
@@ -368,18 +408,21 @@ impl<'a> DesEngine<'a> {
 
             // ---- boundary / completion events.
             let mut freed_any = false;
-            for &i in &running {
+            for &i in &scratch.running {
                 let t = &mut traces[i];
-                if t.st.generated != t.spec.step_ends[t.st.next_step] {
+                if t.st.generated != scratch.next_end[i] {
                     continue;
                 }
                 let step_n = t.st.next_step + 1;
                 t.st.next_step += 1;
                 boundaries_crossed += 1;
+                if t.st.generated < t.spec.total_tokens {
+                    scratch.next_end[i] = t.spec.step_ends[t.st.next_step];
+                }
 
                 if self.needs_scores() {
-                    self.gen.hidden_state_into(q, &t.spec, step_n, &mut h_buf);
-                    let s = self.scorer.score_into(&h_buf, &mut z_buf) as f64;
+                    self.gen.hidden_state_into(q, &t.spec, step_n, &mut scratch.h);
+                    let s = self.scorer.score_into(&scratch.h, &mut scratch.z) as f64;
                     t.st.push_score(s);
                     if self.cfg.record_dynamics {
                         t.dynamics.push((t.st.generated, t.st.mean_score(params.default_score)));
@@ -425,32 +468,32 @@ impl<'a> DesEngine<'a> {
 
     /// Largest d (capped at `cap`) such that advancing every running
     /// trace d tokens fits in the free blocks. Binary search over the
-    /// monotone block-demand function.
+    /// monotone block-demand function; the per-trace resident token
+    /// counts are gathered once into `cur` instead of re-queried on every
+    /// probe of the search.
     fn memory_horizon(
         &self,
         traces: &[SimTrace],
         running: &[usize],
         kv: &KvCacheManager,
         cap: u64,
+        cur: &mut Vec<u64>,
     ) -> u64 {
-        let free = kv.free_blocks();
+        let free = kv.free_blocks() as u64;
         let bs = self.cfg.block_size as u64;
+        cur.clear();
+        cur.extend(running.iter().map(|&i| kv.seq_tokens(traces[i].st.id) as u64));
+        let cur: &[u64] = cur;
         let demand = |d: u64| -> u64 {
-            running
-                .iter()
-                .map(|&i| {
-                    let cur = kv.seq_tokens(traces[i].st.id) as u64;
-                    (cur + d).div_ceil(bs) - cur.div_ceil(bs)
-                })
-                .sum()
+            cur.iter().map(|&c| (c + d).div_ceil(bs) - c.div_ceil(bs)).sum()
         };
-        if demand(cap) <= free as u64 {
+        if demand(cap) <= free {
             return cap;
         }
         let (mut lo, mut hi) = (0u64, cap); // demand(lo) fits, demand(hi) doesn't
         while lo + 1 < hi {
             let mid = (lo + hi) / 2;
-            if demand(mid) <= free as u64 {
+            if demand(mid) <= free {
                 lo = mid;
             } else {
                 hi = mid;
@@ -521,8 +564,8 @@ impl<'a> DesEngine<'a> {
     }
 
     /// Resume the waiting-queue head if its whole prefix fits (plus one
-    /// block of headroom). Recompute-on-resume: the prefix KV is rebuilt
-    /// by a prefill pass that stalls the engine.
+    /// block of headroom) — vLLM's FCFS resume rule for the normal path
+    /// where running traces free memory as they finish.
     #[allow(clippy::too_many_arguments)]
     fn try_resume(
         &self,
@@ -535,14 +578,62 @@ impl<'a> DesEngine<'a> {
         engine_split: &mut (f64, f64),
     ) -> bool {
         let Some(&head) = wait_q.front() else { return false };
-        let prefix = q.prompt_tokens + traces[head].st.generated as usize;
-        let need = kv.blocks_needed_for_new(prefix) + 1; // +1 headroom
-        if !kv.can_allocate(need) {
+        if !self.resume_fits(q, traces, kv, head) {
             return false;
         }
         wait_q.pop_front();
-        kv.allocate_seq(traces[head].st.id, prefix);
-        traces[head].st.status = TraceStatus::Running;
+        self.admit_resumed(q, traces, kv, clock, wait_q, phase, engine_split, head);
+        true
+    }
+
+    /// Stalled-engine resume: nothing is running, so strict head-of-line
+    /// FCFS would wedge on an oversized head while shorter queued traces
+    /// could still make progress. Resume the *first queued trace in FIFO
+    /// order* whose prefix fits; false only when none fits (the caller
+    /// then drops the head as pruned).
+    #[allow(clippy::too_many_arguments)]
+    fn resume_first_fit(
+        &self,
+        q: &Question,
+        traces: &mut [SimTrace],
+        kv: &mut KvCacheManager,
+        clock: &mut f64,
+        wait_q: &mut std::collections::VecDeque<usize>,
+        phase: &[usize],
+        engine_split: &mut (f64, f64),
+    ) -> bool {
+        let Some(pos) = (0..wait_q.len()).find(|&p| self.resume_fits(q, traces, kv, wait_q[p]))
+        else {
+            return false;
+        };
+        let idx = wait_q.remove(pos).expect("position came from the queue");
+        self.admit_resumed(q, traces, kv, clock, wait_q, phase, engine_split, idx);
+        true
+    }
+
+    /// Would resuming trace `idx` fit right now (+1 block of headroom)?
+    fn resume_fits(&self, q: &Question, traces: &[SimTrace], kv: &KvCacheManager, idx: usize) -> bool {
+        let prefix = q.prompt_tokens + traces[idx].st.generated as usize;
+        kv.can_allocate(kv.blocks_needed_for_new(prefix) + 1)
+    }
+
+    /// Re-admit a dequeued trace. Recompute-on-resume: the prefix KV is
+    /// rebuilt by a prefill pass that stalls the engine.
+    #[allow(clippy::too_many_arguments)]
+    fn admit_resumed(
+        &self,
+        q: &Question,
+        traces: &mut [SimTrace],
+        kv: &mut KvCacheManager,
+        clock: &mut f64,
+        wait_q: &std::collections::VecDeque<usize>,
+        phase: &[usize],
+        engine_split: &mut (f64, f64),
+        idx: usize,
+    ) {
+        let prefix = q.prompt_tokens + traces[idx].st.generated as usize;
+        kv.allocate_seq(traces[idx].st.id, prefix);
+        traces[idx].st.status = TraceStatus::Running;
         // Recompute cost: a prefill over the generated prefix. The engine
         // is busy prefilling: running traces accrue decode, waiting wait.
         let dt = self.profile.timing.prefill(prefix);
@@ -563,10 +654,9 @@ impl<'a> DesEngine<'a> {
         }
         // The resumed trace itself: reconstruction counts as waiting
         // (paper: resumed with KV cache reconstructed).
-        let t = &mut traces[head].st;
+        let t = &mut traces[idx].st;
         t.decode_time -= dt;
         t.wait_time += dt;
-        true
     }
 
     /// Slim-SC similarity check (thought level): pair up the active
@@ -837,5 +927,43 @@ mod tests {
         let r = run(Method::Sc);
         let sum: u64 = r.traces.iter().map(|t| t.generated).sum();
         assert_eq!(sum, r.gen_tokens);
+    }
+
+    /// The stalled-resume path must never wedge or leave traces parked:
+    /// every trace ends in a terminal state even when the queue's head
+    /// cannot fit (the pre-fix code dropped fittable traces instead of
+    /// scanning the rest of the queue).
+    #[test]
+    fn all_traces_reach_terminal_states_under_pressure() {
+        for m in [Method::Sc, Method::SlimSc, Method::DeepConf, Method::Step] {
+            let r = pressured(m);
+            for t in &r.traces {
+                assert!(
+                    !matches!(t.status, TraceStatus::Running | TraceStatus::Preempted),
+                    "{m:?}: trace left non-terminal ({:?})",
+                    t.status
+                );
+            }
+        }
+    }
+
+    /// Reusing one Scratch across questions must not change any result.
+    #[test]
+    fn scratch_reuse_is_bit_identical() {
+        for method in [Method::Sc, Method::Step, Method::DeepConf] {
+            let cfg = engine_cfg(method);
+            let gen = TraceGen::new(cfg.model, cfg.bench, GenParams::default_d64(), 3);
+            let scorer = dummy_scorer();
+            let engine = DesEngine::new(&cfg, &gen, &scorer);
+            let mut scratch = Scratch::new();
+            for qid in 0..3 {
+                let fresh = engine.run_question(qid);
+                let reused = engine.run_question_with(qid, &mut scratch);
+                assert_eq!(fresh.latency_s, reused.latency_s);
+                assert_eq!(fresh.gen_tokens, reused.gen_tokens);
+                assert_eq!(fresh.chosen, reused.chosen);
+                assert_eq!(fresh.n_pruned, reused.n_pruned);
+            }
+        }
     }
 }

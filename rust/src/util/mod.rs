@@ -3,5 +3,6 @@
 
 pub mod bench;
 pub mod json;
+pub mod pool;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,203 @@
+//! In-tree work-stealing parallel runner (no rayon in the offline vendor
+//! set; std::thread only).
+//!
+//! [`parallel_map`] executes `f(0) .. f(n_items - 1)` on a fixed set of
+//! worker threads and returns the results **in index order**, so output
+//! is independent of scheduling. Each worker owns a contiguous slice of
+//! the index space and pops from its front; an idle worker steals single
+//! indices from the *back* of the busiest remaining queue, which keeps
+//! owners and thieves off each other's cache lines for coarse-grained
+//! jobs (a DES question costs milliseconds, so per-index locking is
+//! noise).
+//!
+//! Determinism contract: as long as `f` is a pure function of its index
+//! (the harness derives every RNG stream from `(seed, qid)`), the result
+//! vector is bit-identical for any thread count — the property
+//! `tests/parallel_determinism.rs` locks in.
+
+use std::sync::Mutex;
+
+/// Half-open index range owned by one worker.
+struct Span {
+    lo: usize,
+    hi: usize,
+}
+
+/// Hardware parallelism (>= 1).
+pub fn available_parallelism() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Resolve a requested worker count: 0 means "auto" (all cores).
+pub fn resolve_threads(requested: usize) -> usize {
+    if requested == 0 {
+        available_parallelism()
+    } else {
+        requested
+    }
+}
+
+/// Pop the next index for worker `w`: own queue front first, then steal
+/// one index from the back of the victim with the most remaining work.
+fn next_index(queues: &[Mutex<Span>], w: usize) -> Option<usize> {
+    {
+        let mut q = queues[w].lock().unwrap();
+        if q.lo < q.hi {
+            let i = q.lo;
+            q.lo += 1;
+            return Some(i);
+        }
+    }
+    loop {
+        let mut best: Option<(usize, usize)> = None; // (victim, remaining)
+        for (v, m) in queues.iter().enumerate() {
+            if v == w {
+                continue;
+            }
+            let q = m.lock().unwrap();
+            let rem = q.hi - q.lo;
+            let better = match best {
+                None => rem > 0,
+                Some((_, b)) => rem > b,
+            };
+            if better {
+                best = Some((v, rem));
+            }
+        }
+        let (v, _) = best?;
+        let mut q = queues[v].lock().unwrap();
+        if q.lo < q.hi {
+            q.hi -= 1;
+            return Some(q.hi);
+        }
+        // Lost the race to the owner; rescan for another victim.
+    }
+}
+
+/// Map `f` over `0..n_items` on up to `threads` workers (0 = auto).
+/// Results are returned in index order.
+pub fn parallel_map<T, F>(threads: usize, n_items: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    parallel_map_with(threads, n_items, || (), |(), i| f(i))
+}
+
+/// Like [`parallel_map`], with a per-worker scratch state created by
+/// `init` once per worker and threaded through every call that worker
+/// executes — the hook that lets hot paths reuse allocation-heavy
+/// buffers (e.g. `sim::des::Scratch`) across work items.
+pub fn parallel_map_with<S, T, FS, F>(threads: usize, n_items: usize, init: FS, f: F) -> Vec<T>
+where
+    T: Send,
+    FS: Fn() -> S + Sync,
+    F: Fn(&mut S, usize) -> T + Sync,
+{
+    let threads = resolve_threads(threads).min(n_items.max(1));
+    if threads <= 1 || n_items <= 1 {
+        let mut state = init();
+        return (0..n_items).map(|i| f(&mut state, i)).collect();
+    }
+
+    let queues: Vec<Mutex<Span>> = (0..threads)
+        .map(|w| {
+            Mutex::new(Span {
+                lo: w * n_items / threads,
+                hi: (w + 1) * n_items / threads,
+            })
+        })
+        .collect();
+
+    let mut slots: Vec<Option<T>> = Vec::with_capacity(n_items);
+    slots.resize_with(n_items, || None);
+
+    std::thread::scope(|scope| {
+        let queues = &queues;
+        let init = &init;
+        let f = &f;
+        let handles: Vec<_> = (0..threads)
+            .map(|w| {
+                scope.spawn(move || {
+                    let mut state = init();
+                    let mut out: Vec<(usize, T)> = Vec::new();
+                    while let Some(i) = next_index(queues, w) {
+                        out.push((i, f(&mut state, i)));
+                    }
+                    out
+                })
+            })
+            .collect();
+        for h in handles {
+            for (i, v) in h.join().expect("pool worker panicked") {
+                slots[i] = Some(v);
+            }
+        }
+    });
+
+    slots
+        .into_iter()
+        .map(|s| s.expect("pool lost a work item"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_serial_map() {
+        let expect: Vec<usize> = (0..100).map(|i| i * i).collect();
+        for threads in [1, 2, 4, 7] {
+            assert_eq!(parallel_map(threads, 100, |i| i * i), expect);
+        }
+    }
+
+    #[test]
+    fn edge_sizes() {
+        assert!(parallel_map(8, 0, |i| i).is_empty());
+        assert_eq!(parallel_map(8, 1, |i| i + 1), vec![1]);
+        assert_eq!(parallel_map(8, 3, |i| i), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn skewed_workloads_still_complete_in_order() {
+        // Front-loaded work forces the later workers to steal.
+        let out = parallel_map(4, 64, |i| {
+            let spins = if i < 4 { 200_000u64 } else { 10 };
+            let mut acc = i as u64;
+            for k in 0..spins {
+                acc = acc.wrapping_mul(6364136223846793005).wrapping_add(k);
+            }
+            (i, acc)
+        });
+        for (idx, (i, _)) in out.iter().enumerate() {
+            assert_eq!(idx, *i);
+        }
+    }
+
+    #[test]
+    fn worker_state_is_reused() {
+        // Each worker's counter only grows; every item sees a state that
+        // was initialized exactly once per worker.
+        let out = parallel_map_with(3, 24, || 0usize, |calls, _i| {
+            *calls += 1;
+            *calls
+        });
+        assert_eq!(out.len(), 24);
+        assert!(out.iter().all(|&c| (1..=24).contains(&c)));
+        // Exactly one "first call" per worker that ran, and at most
+        // `threads` workers exist.
+        let fresh = out.iter().filter(|&&c| c == 1).count();
+        assert!((1..=3).contains(&fresh), "fresh states: {fresh}");
+    }
+
+    #[test]
+    fn resolve_thread_counts() {
+        assert!(resolve_threads(0) >= 1);
+        assert_eq!(resolve_threads(1), 1);
+        assert_eq!(resolve_threads(6), 6);
+    }
+}

@@ -6,7 +6,7 @@ use step::coordinator::method::Method;
 use step::coordinator::trace::TraceStatus;
 use step::harness::cells::{run_cell, CellOpts};
 use step::harness::load_sim_bundle;
-use step::runtime::{Artifacts, Runtime};
+use step::runtime::Artifacts;
 use step::sim::des::{DesEngine, SimConfig};
 use step::sim::profiles::{BenchId, ModelId};
 use step::sim::tracegen::TraceGen;
@@ -98,9 +98,11 @@ fn deepconf_early_stops_and_two_phase_latency() {
     assert!(r.tok_k < 1600.0, "deepconf must save tokens vs SC's ~2000k");
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn e2e_serve_smoke_over_pjrt() {
     use step::coordinator::engine::{ServeConfig, ServeEngine};
+    use step::runtime::Runtime;
     let dir = Artifacts::default_dir();
     if !dir.join("manifest.json").exists() {
         eprintln!("skipping: artifacts not built");

@@ -1,0 +1,90 @@
+//! The parallel harness contract: sharding questions (or whole cells)
+//! across worker threads produces *byte-identical* results to a serial
+//! run. Every RNG stream in the simulator derives from (seed, qid), the
+//! pool returns results in index order, and the aggregation fold is
+//! serial — so JSON output must not differ in a single byte.
+
+use step::coordinator::method::Method;
+use step::harness::cells::{
+    projection_scorer, run_cell, run_cell_with, run_cells, CellJob, CellOpts,
+};
+use step::sim::profiles::{BenchId, ModelId};
+use step::sim::tracegen::GenParams;
+
+fn opts(threads: usize) -> CellOpts {
+    CellOpts {
+        n_traces: 8,
+        max_questions: Some(3),
+        threads,
+        ..Default::default()
+    }
+}
+
+/// 2 methods x 3 questions x 8 traces under 1 vs 4 threads: the
+/// CellResult JSON must be byte-identical.
+#[test]
+fn question_sharding_is_byte_identical() {
+    let gp = GenParams::default_d64();
+    let sc = projection_scorer(&gp);
+    for method in [Method::Sc, Method::Step] {
+        let one = run_cell(ModelId::Qwen3_4B, BenchId::Aime25, method, &gp, &sc, &opts(1))
+            .to_json()
+            .to_string_pretty();
+        let four = run_cell(ModelId::Qwen3_4B, BenchId::Aime25, method, &gp, &sc, &opts(4))
+            .to_json()
+            .to_string_pretty();
+        assert_eq!(one, four, "{method:?}: parallel cell differs from serial");
+    }
+}
+
+/// The per-question callback fires in qid order regardless of which
+/// worker computed each question.
+#[test]
+fn callback_order_is_qid_order_under_parallelism() {
+    let gp = GenParams::default_d64();
+    let sc = projection_scorer(&gp);
+    let mut seen = Vec::new();
+    let mut cb = |r: &step::sim::des::QuestionResult| seen.push(r.qid);
+    run_cell_with(
+        ModelId::Qwen3_4B,
+        BenchId::Aime25,
+        Method::Step,
+        &gp,
+        &sc,
+        &opts(4),
+        Some(&mut cb),
+    );
+    assert_eq!(seen, vec![0, 1, 2]);
+}
+
+/// Cell-level sharding (the table path) is deterministic too, including
+/// a thread count that does not divide the job count.
+#[test]
+fn cell_sharding_is_byte_identical() {
+    let gp = GenParams::default_d64();
+    let sc = projection_scorer(&gp);
+    let jobs: Vec<CellJob> = [Method::Cot, Method::Sc, Method::SlimSc, Method::Step]
+        .into_iter()
+        .map(|method| CellJob {
+            model: ModelId::DeepSeek8B,
+            bench: BenchId::Aime25,
+            method,
+            opts: opts(1),
+        })
+        .collect();
+    let render = |cells: &[step::harness::cells::CellResult]| -> String {
+        cells
+            .iter()
+            .map(|c| c.to_json().to_string_pretty())
+            .collect::<Vec<_>>()
+            .join("\n")
+    };
+    let serial = render(&run_cells(&jobs, &gp, &sc, 1));
+    for threads in [2, 3, 4] {
+        assert_eq!(
+            serial,
+            render(&run_cells(&jobs, &gp, &sc, threads)),
+            "{threads}-thread grid differs from serial"
+        );
+    }
+}

@@ -188,14 +188,7 @@ fn prop_percentile_monotone() {
 // ----------------------------------------------------- engine invariants
 
 fn proj_scorer(gp: &GenParams) -> step::coordinator::scorer::StepScorer {
-    let d = gp.d;
-    let mut w1 = vec![0.0f32; d * 2];
-    for i in 0..d {
-        w1[i * 2] = gp.signal_dir[i];
-        w1[i * 2 + 1] = -gp.signal_dir[i];
-    }
-    step::coordinator::scorer::StepScorer::new(d, 2, w1, vec![0.0; 2], vec![1.0, -1.0], 0.0)
-        .unwrap()
+    step::harness::cells::projection_scorer(gp)
 }
 
 #[test]

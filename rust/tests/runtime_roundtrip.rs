@@ -3,7 +3,10 @@
 //! scorer paths (HLO graph vs native rust MLP).
 //!
 //! Requires `make artifacts`; tests no-op (with a note) when absent so
-//! `cargo test` stays runnable on a fresh checkout.
+//! `cargo test` stays runnable on a fresh checkout. The whole file needs
+//! the `pjrt` feature (vendored `xla` crate).
+
+#![cfg(feature = "pjrt")]
 
 use step::coordinator::scorer::StepScorer;
 use step::runtime::{Artifacts, DecodeExec, PrefillExec, Runtime, ScorerExec};
