@@ -8,6 +8,14 @@
 //! No simulation on this path: every token comes out of XLA. Results are
 //! recorded in EXPERIMENTS.md §E2E.
 //!
+//! This driver serves requests one at a time through the real model; its
+//! simulated sibling is `step serve-sim` (rust/src/sim/serve.rs), which
+//! runs *concurrent* requests with continuous batching against one
+//! shared KV pool and reports throughput + p50/p95/p99 SLOs. Porting
+//! that multi-request scheduler (and its coordinator::request
+//! lifecycle) onto this PJRT backend is the natural next step for the
+//! e2e path.
+//!
 //!     make artifacts && cargo run --release --example e2e_serve
 
 use step::coordinator::engine::{ServeConfig, ServeEngine};

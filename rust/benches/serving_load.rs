@@ -1,0 +1,87 @@
+//! cargo bench --bench serving_load — wall-clock of the multi-request
+//! serving simulator plus its SLO metric blocks, asserting (a) the
+//! metric blocks are byte-identical for any thread count and (b) STEP's
+//! p99 end-to-end latency lands below self-consistency's at the same
+//! arrival rate (the serving-scale rendering of the paper's claim).
+//! Writes `results/BENCH_serving.json`.
+//!
+//! Runs self-contained on the built-in generator defaults (no artifacts
+//! needed), so CI and fresh checkouts can benchmark the serving layer.
+
+use std::time::Instant;
+
+use step::coordinator::method::Method;
+use step::harness::cells::projection_scorer;
+use step::harness::table5::{metrics_json, run_methods, ServingOpts};
+use step::harness::write_results;
+use step::sim::tracegen::GenParams;
+use step::util::json::Json;
+use step::util::pool;
+
+fn main() {
+    let gp = GenParams::default_d64();
+    let scorer = projection_scorer(&gp);
+    let opts = ServingOpts { seed: 7, threads: 1, ..ServingOpts::quick() };
+    let threads = pool::available_parallelism();
+    println!(
+        "serving grid: {} requests @ {} rps, N={} traces, {:?} on {}; {} hardware threads",
+        opts.n_requests,
+        opts.rate_rps,
+        opts.n_traces,
+        opts.model,
+        opts.bench.name(),
+        threads
+    );
+
+    let t0 = Instant::now();
+    let serial = run_methods(&opts, &gp, &scorer);
+    let serial_s = t0.elapsed().as_secs_f64();
+    println!("serial:   {serial_s:.2}s");
+
+    let par_opts = ServingOpts { threads, ..opts.clone() };
+    let t1 = Instant::now();
+    let parallel = run_methods(&par_opts, &gp, &scorer);
+    let parallel_s = t1.elapsed().as_secs_f64();
+    println!("parallel: {parallel_s:.2}s  ({threads} threads)");
+
+    let ser_json = metrics_json(&opts, &serial).to_string_pretty();
+    let par_json = metrics_json(&par_opts, &parallel).to_string_pretty();
+    assert_eq!(ser_json, par_json, "serving metric blocks must be thread-invariant");
+
+    for c in &serial {
+        println!(
+            "  {:>8}: {:.4} req/s  p50={:.1}s p95={:.1}s p99={:.1}s  acc={:.1}%  \
+             preempt={} pruned={}",
+            c.method.name(),
+            c.throughput_rps,
+            c.p50_s,
+            c.p95_s,
+            c.p99_s,
+            c.acc,
+            c.preemptions,
+            c.pruned,
+        );
+    }
+    let p99 = |m: Method| serial.iter().find(|c| c.method == m).unwrap().p99_s;
+    assert!(
+        p99(Method::Step) < p99(Method::Sc),
+        "STEP p99 {} must undercut SC p99 {} under load",
+        p99(Method::Step),
+        p99(Method::Sc)
+    );
+    println!(
+        "p99: STEP {:.1}s < SC {:.1}s (serving claim holds; metrics thread-invariant)",
+        p99(Method::Step),
+        p99(Method::Sc)
+    );
+
+    let mut report = metrics_json(&opts, &serial);
+    if let Json::Obj(map) = &mut report {
+        map.insert("bench_serial_s".to_string(), Json::Num(serial_s));
+        map.insert("bench_parallel_s".to_string(), Json::Num(parallel_s));
+        map.insert("bench_threads".to_string(), Json::Num(threads as f64));
+        map.insert("identical_across_threads".to_string(), Json::Bool(true));
+    }
+    let path = write_results("BENCH_serving", &report).expect("writing BENCH_serving.json");
+    println!("wrote {path:?}");
+}

@@ -22,9 +22,13 @@ pub struct StepConfig {
     pub mem_util: f64,
     /// PagedAttention block size in tokens.
     pub block_size: usize,
+    /// Test-time-scaling method to serve with.
     pub method: Method,
+    /// Method hyper-parameters (paper Appendix B.3).
     pub method_params: MethodParams,
+    /// Appendix-B sampling parameters for the e2e engine.
     pub sampler: SamplerConfig,
+    /// Master RNG seed.
     pub seed: u64,
     /// Artifact directory override.
     pub artifacts_dir: Option<String>,
@@ -46,6 +50,8 @@ impl Default for StepConfig {
 }
 
 impl StepConfig {
+    /// Parse a config object, validating ranges and rejecting unknown
+    /// keys.
     pub fn from_json(j: &Json) -> Result<StepConfig> {
         let mut c = StepConfig::default();
         let obj = j.as_obj().context("config root must be an object")?;
@@ -117,6 +123,7 @@ impl StepConfig {
         Ok(c)
     }
 
+    /// Parse a config file from disk.
     pub fn from_file(path: &Path) -> Result<StepConfig> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading config {path:?}"))?;

@@ -10,6 +10,13 @@
 //! masked (their outputs ignored, their cache slot frozen). The KV block
 //! budget is virtual — small enough to exercise the paper's §4.2 memory
 //! trigger at demo scale.
+//!
+//! This engine serves one request at a time (the lifecycle of
+//! `coordinator::request` collapses to Queued -> Running -> Complete
+//! per call). The multi-request regime — concurrent requests, shared
+//! KV pool, cross-request pruning, SLO metrics — lives in
+//! `sim::serve` (`step serve-sim`); porting its scheduler onto this
+//! PJRT backend is the natural next step for the e2e path.
 
 use std::time::Instant;
 

@@ -22,9 +22,11 @@ pub enum Method {
 }
 
 impl Method {
+    /// Every method, in the paper's Table-1 row order.
     pub const ALL: [Method; 5] =
         [Method::Cot, Method::Sc, Method::SlimSc, Method::DeepConf, Method::Step];
 
+    /// Display name (the paper's row label).
     pub fn name(&self) -> &'static str {
         match self {
             Method::Cot => "CoT",
@@ -35,6 +37,7 @@ impl Method {
         }
     }
 
+    /// Parse a CLI/config method name (case-insensitive).
     pub fn parse(s: &str) -> Option<Method> {
         match s.to_ascii_lowercase().as_str() {
             "cot" => Some(Method::Cot),

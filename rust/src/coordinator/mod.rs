@@ -8,6 +8,7 @@
 #[cfg(feature = "pjrt")]
 pub mod engine;
 pub mod method;
+pub mod request;
 pub mod scorer;
 pub mod trace;
 pub mod voting;

@@ -1,0 +1,148 @@
+//! Request-level lifecycle: the unit the serving layer schedules.
+//!
+//! A *request* is one user question plus its N-trace STEP /
+//! self-consistency job. The single-question engines (`sim::des` and the
+//! PJRT-backed `coordinator::engine`) implicitly serve exactly one
+//! request; the multi-request simulator (`sim::serve`) runs many
+//! concurrently, and this module holds the shared lifecycle bookkeeping:
+//!
+//! ```text
+//! Queued ──admit──▶ Running ──all traces terminal──▶ Complete
+//! ```
+//!
+//! plus the three latency marks every serving metric derives from:
+//! admission (queue delay), first vote (earliest usable answer), and
+//! completion (end-to-end latency).
+
+/// Dense request identifier (arrival order).
+pub type RequestId = usize;
+
+/// Lifecycle phase of a serving request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RequestStatus {
+    /// Arrived; no trace admitted yet (waiting on KV memory).
+    Queued,
+    /// At least one trace admitted; decoding (possibly with some traces
+    /// preempted).
+    Running,
+    /// Every trace reached a terminal state; the answer is voted.
+    Complete,
+}
+
+/// Timestamps and lifecycle state of one request.
+///
+/// # Examples
+///
+/// ```
+/// use step::coordinator::request::{RequestState, RequestStatus};
+///
+/// let mut r = RequestState::new(0, 3, 10.0);
+/// assert_eq!(r.status, RequestStatus::Queued);
+/// r.admitted(10.5);
+/// r.first_vote(12.0);
+/// r.completed(13.0);
+/// assert_eq!(r.status, RequestStatus::Complete);
+/// assert_eq!(r.queue_s(), Some(0.5));
+/// assert_eq!(r.ttfv_s(), Some(2.0));
+/// assert_eq!(r.latency_s(), Some(3.0));
+/// ```
+#[derive(Debug, Clone)]
+pub struct RequestState {
+    /// Request id (dense, arrival order).
+    pub rid: RequestId,
+    /// Question index into the benchmark pool.
+    pub qid: usize,
+    /// Current lifecycle phase.
+    pub status: RequestStatus,
+    /// Arrival wall-clock, seconds.
+    pub t_arrive: f64,
+    /// Clock when the first trace was admitted (prefill started).
+    pub t_admit: Option<f64>,
+    /// Clock when the first trace finished and cast a vote.
+    pub t_first_vote: Option<f64>,
+    /// Clock when the last trace reached a terminal state.
+    pub t_done: Option<f64>,
+}
+
+impl RequestState {
+    /// A freshly arrived (queued) request.
+    pub fn new(rid: RequestId, qid: usize, t_arrive: f64) -> RequestState {
+        RequestState {
+            rid,
+            qid,
+            status: RequestStatus::Queued,
+            t_arrive,
+            t_admit: None,
+            t_first_vote: None,
+            t_done: None,
+        }
+    }
+
+    /// Record first admission (idempotent: only the first call sticks).
+    pub fn admitted(&mut self, clock: f64) {
+        if self.t_admit.is_none() {
+            self.t_admit = Some(clock);
+            self.status = RequestStatus::Running;
+        }
+    }
+
+    /// Record the first finished trace (idempotent).
+    pub fn first_vote(&mut self, clock: f64) {
+        if self.t_first_vote.is_none() {
+            self.t_first_vote = Some(clock);
+        }
+    }
+
+    /// Record completion: every trace terminal, answer voted.
+    pub fn completed(&mut self, clock: f64) {
+        self.t_done = Some(clock);
+        self.status = RequestStatus::Complete;
+    }
+
+    /// Queue delay: arrival to first admission. `None` until admitted.
+    pub fn queue_s(&self) -> Option<f64> {
+        self.t_admit.map(|t| t - self.t_arrive)
+    }
+
+    /// Time-to-first-vote: arrival until the first trace finished (or
+    /// completion, when no trace finished at all). `None` while running.
+    pub fn ttfv_s(&self) -> Option<f64> {
+        self.t_first_vote.or(self.t_done).map(|t| t - self.t_arrive)
+    }
+
+    /// End-to-end latency: arrival to completion. `None` while running.
+    pub fn latency_s(&self) -> Option<f64> {
+        self.t_done.map(|t| t - self.t_arrive)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle_transitions() {
+        let mut r = RequestState::new(3, 9, 5.0);
+        assert_eq!(r.status, RequestStatus::Queued);
+        assert_eq!(r.queue_s(), None);
+        assert_eq!(r.latency_s(), None);
+        r.admitted(6.0);
+        assert_eq!(r.status, RequestStatus::Running);
+        r.admitted(7.0); // idempotent
+        assert_eq!(r.queue_s(), Some(1.0));
+        r.first_vote(8.0);
+        r.first_vote(9.0); // idempotent
+        r.completed(10.0);
+        assert_eq!(r.status, RequestStatus::Complete);
+        assert_eq!(r.ttfv_s(), Some(3.0));
+        assert_eq!(r.latency_s(), Some(5.0));
+    }
+
+    #[test]
+    fn ttfv_falls_back_to_completion_when_nothing_finished() {
+        let mut r = RequestState::new(0, 0, 1.0);
+        r.admitted(1.0);
+        r.completed(4.0);
+        assert_eq!(r.ttfv_s(), Some(3.0));
+    }
+}

@@ -15,7 +15,9 @@ use crate::util::json::Json;
 /// Native MLP: sigmoid(w2 . relu(W1 h + b1) + b2).
 #[derive(Debug, Clone)]
 pub struct StepScorer {
+    /// Input dimension (the model's last-layer hidden size).
     pub d: usize,
+    /// Hidden width of the MLP.
     pub hidden: usize,
     /// Row-major [d][hidden] — laid out so the inner loop walks
     /// contiguous memory per input feature (h-stationary accumulation).
@@ -26,6 +28,7 @@ pub struct StepScorer {
 }
 
 impl StepScorer {
+    /// Build from raw weights; validates the shapes.
     pub fn new(d: usize, hidden: usize, w1: Vec<f32>, b1: Vec<f32>, w2: Vec<f32>, b2: f32) -> Result<Self> {
         if w1.len() != d * hidden || b1.len() != hidden || w2.len() != hidden {
             bail!(
@@ -49,6 +52,7 @@ impl StepScorer {
         StepScorer::new(d, hidden, w1, b1, w2, *b2.first().context("b2 empty")?)
     }
 
+    /// Load a scorer bundle from a JSON file on disk.
     pub fn from_json_file(path: &std::path::Path) -> Result<Self> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading scorer bundle {path:?}"))?;
@@ -167,6 +171,7 @@ impl StepScorer {
     }
 }
 
+/// Logistic sigmoid (the scorer's output squash).
 #[inline]
 pub fn sigmoid(x: f32) -> f32 {
     1.0 / (1.0 + (-x).exp())

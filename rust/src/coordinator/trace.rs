@@ -21,6 +21,7 @@ pub enum TraceStatus {
 }
 
 impl TraceStatus {
+    /// Still consuming scheduler attention (running or waiting to run)?
     pub fn is_active(&self) -> bool {
         matches!(self, TraceStatus::Running | TraceStatus::Preempted)
     }
@@ -29,7 +30,9 @@ impl TraceStatus {
 /// Running-mean score accumulator + bookkeeping for one trace.
 #[derive(Debug, Clone)]
 pub struct TraceState {
+    /// Sequence id in the KV manager.
     pub id: u64,
+    /// Lifecycle state.
     pub status: TraceStatus,
     /// Tokens generated so far (excludes prompt).
     pub generated: u64,
@@ -55,8 +58,9 @@ pub struct TraceState {
     /// Lowest completed group confidence (DeepConf's per-trace "lowest
     /// group confidence" statistic).
     min_window_conf: f64,
-    /// Seconds spent decoding (running) / waiting (preempted).
+    /// Seconds spent decoding (running).
     pub decode_time: f64,
+    /// Seconds spent waiting (preempted / resume recompute).
     pub wait_time: f64,
     /// Engine clock when the trace left the active set.
     pub finish_clock: f64,
@@ -65,6 +69,8 @@ pub struct TraceState {
 }
 
 impl TraceState {
+    /// Fresh running trace; `conf_window_cap` is DeepConf's group size
+    /// in steps.
     pub fn new(id: u64, conf_window_cap: usize) -> TraceState {
         TraceState {
             id,
@@ -120,6 +126,7 @@ impl TraceState {
         }
     }
 
+    /// Number of step boundaries scored so far.
     pub fn scored_steps(&self) -> usize {
         self.score_cnt
     }

@@ -10,6 +10,7 @@ pub struct Vote {
     /// None = trace produced no parseable answer (truncated / early
     /// stopped) — abstains.
     pub answer: Option<u32>,
+    /// Aggregation weight (1.0 for plain majority voting).
     pub weight: f64,
 }
 

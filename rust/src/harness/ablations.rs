@@ -18,11 +18,16 @@ use crate::sim::tracegen::{GenParams, TraceGen};
 use crate::util::json::Json;
 use crate::util::pool;
 
+/// One ablation row: a design variant's accuracy / tokens / latency.
 #[derive(Debug, Clone)]
 pub struct AblationRow {
+    /// Variant label.
     pub name: String,
+    /// Accuracy, percent.
     pub acc: f64,
+    /// Mean generated tokens per question, thousands.
     pub tok_k: f64,
+    /// Mean end-to-end latency, seconds.
     pub lat_s: f64,
 }
 
@@ -54,6 +59,7 @@ fn run_variant(
     (100.0 * acc / nq, tok / nq / 1000.0, lat / nq)
 }
 
+/// Regenerate the design-choice ablation grid.
 pub fn run(opts: &HarnessOpts) -> Result<Vec<AblationRow>> {
     let (gen_params, scorer) = super::load_sim_bundle(&super::artifact_dir())?;
     let mut rows = Vec::new();

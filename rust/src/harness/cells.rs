@@ -13,10 +13,15 @@ use crate::util::pool;
 /// Aggregated metrics of one cell.
 #[derive(Debug, Clone)]
 pub struct CellResult {
+    /// Model of the cell.
     pub model: ModelId,
+    /// Benchmark of the cell.
     pub bench: BenchId,
+    /// Method of the cell.
     pub method: Method,
+    /// Trace budget N the cell ran with.
     pub n_traces: usize,
+    /// Questions simulated.
     pub n_questions: usize,
     /// Accuracy in percent.
     pub acc: f64,
@@ -24,20 +29,26 @@ pub struct CellResult {
     pub tok_k: f64,
     /// Mean end-to-end latency per question, seconds (Table 1 Lat.).
     pub lat_s: f64,
-    /// Mean per-trace wait / decode seconds (Fig 2c's per-trace view).
+    /// Mean per-trace wait seconds (Fig 2c's per-trace view).
     pub wait_s: f64,
+    /// Mean per-trace decode seconds.
     pub decode_s: f64,
-    /// Engine-timeline wait / decode (Table 3's view).
+    /// Engine-timeline wait seconds (Table 3's view).
     pub engine_wait_s: f64,
+    /// Engine-timeline decode seconds.
     pub engine_decode_s: f64,
     /// DeepConf stage split, averaged: (warmup lat, prune lat).
     pub stage_lat: Option<(f64, f64)>,
+    /// DeepConf stage wait/decode means ((w_wait, w_dec), (p_wait, p_dec)).
     pub stage_wait_decode: Option<((f64, f64), (f64, f64))>,
+    /// Mean preemption events per question.
     pub n_preemptions: f64,
+    /// Mean pruned traces per question.
     pub n_pruned: f64,
 }
 
 impl CellResult {
+    /// Serialize as one row of a `results/*.json` table.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("model", Json::Str(format!("{:?}", self.model))),
@@ -61,11 +72,17 @@ impl CellResult {
 /// Configuration for one cell run.
 #[derive(Debug, Clone)]
 pub struct CellOpts {
+    /// Trace budget N per question.
     pub n_traces: usize,
+    /// Cap on questions (None = the benchmark's full pool).
     pub max_questions: Option<usize>,
+    /// vLLM-style gpu_memory_utilization.
     pub mem_util: f64,
+    /// Master RNG seed.
     pub seed: u64,
+    /// Score every trace regardless of method (figure harnesses).
     pub score_all: bool,
+    /// Record (token, score) trajectories (Fig 6-7).
     pub record_dynamics: bool,
     /// Worker threads sharding the cell's questions (0 = all cores).
     /// Every question derives its RNG streams from `(seed, qid)` alone,
@@ -238,9 +255,13 @@ pub fn projection_scorer(gp: &GenParams) -> StepScorer {
 /// One cell of a table grid, for batched execution via [`run_cells`].
 #[derive(Debug, Clone)]
 pub struct CellJob {
+    /// Model of the cell.
     pub model: ModelId,
+    /// Benchmark of the cell.
     pub bench: BenchId,
+    /// Method of the cell.
     pub method: Method,
+    /// Per-cell options.
     pub opts: CellOpts,
 }
 

@@ -13,16 +13,24 @@ use crate::coordinator::method::Method;
 use crate::sim::profiles::{BenchId, ModelId};
 use crate::util::json::Json;
 
+/// One point of the Fig-1/Fig-4 accuracy-latency scaling curves.
 #[derive(Debug, Clone)]
 pub struct ScalingPoint {
+    /// Model of the point.
     pub model: ModelId,
+    /// Benchmark of the point.
     pub bench: BenchId,
+    /// Method of the point.
     pub method: Method,
+    /// Trace budget N.
     pub n: usize,
+    /// Accuracy, percent.
     pub acc: f64,
+    /// Mean end-to-end latency, seconds.
     pub lat_s: f64,
 }
 
+/// Regenerate Fig 4: latency scaling across trace budgets.
 pub fn run_fig4(opts: &HarnessOpts) -> Result<Vec<ScalingPoint>> {
     let (gen, scorer) = super::load_sim_bundle(&super::artifact_dir())?;
     let budgets = [1usize, 16, 32, 64];
@@ -107,6 +115,7 @@ pub fn run_fig4(opts: &HarnessOpts) -> Result<Vec<ScalingPoint>> {
     Ok(points)
 }
 
+/// Regenerate Fig 1: accuracy-vs-latency scatter per method.
 pub fn run_fig1(opts: &HarnessOpts) -> Result<Vec<(Method, f64, f64)>> {
     let (gen, scorer) = super::load_sim_bundle(&super::artifact_dir())?;
     let benches = [BenchId::Aime25, BenchId::Hmmt2425, BenchId::GpqaDiamond];

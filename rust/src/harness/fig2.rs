@@ -17,11 +17,13 @@ use crate::util::json::Json;
 use crate::util::pool;
 use crate::util::stats::{auc, mean, stddev};
 
+/// Fig-2a data: step-score separation across prefix fractions.
 pub struct Fig2a {
     /// (prefix fraction, mean/std correct, mean/std incorrect, auc).
     pub rows: Vec<(f64, f64, f64, f64, f64, f64)>,
 }
 
+/// Regenerate Fig 2a: score distributions of correct vs incorrect.
 pub fn run_fig2a(opts: &HarnessOpts) -> Result<Fig2a> {
     let (gen_params, scorer) = super::load_sim_bundle(&super::artifact_dir())?;
     let gen = TraceGen::new(ModelId::DeepSeek8B, BenchId::Hmmt2425, gen_params, opts.seed);
@@ -93,6 +95,7 @@ pub fn run_fig2a(opts: &HarnessOpts) -> Result<Fig2a> {
     Ok(Fig2a { rows })
 }
 
+/// Regenerate Fig 2b: token skew of correct vs incorrect traces.
 pub fn run_fig2b(opts: &HarnessOpts) -> Result<(f64, f64)> {
     let (gen_params, _) = super::load_sim_bundle(&super::artifact_dir())?;
     let gen = TraceGen::new(ModelId::Qwen3_4B, BenchId::Aime25, gen_params, opts.seed);
@@ -122,6 +125,7 @@ pub fn run_fig2b(opts: &HarnessOpts) -> Result<(f64, f64)> {
     Ok((mc, mi))
 }
 
+/// Regenerate Fig 2c: wait vs decode share of SC latency.
 pub fn run_fig2c(opts: &HarnessOpts) -> Result<(f64, f64)> {
     let (gen_params, scorer) = super::load_sim_bundle(&super::artifact_dir())?;
     let cell_opts = CellOpts {
@@ -149,6 +153,7 @@ pub fn run_fig2c(opts: &HarnessOpts) -> Result<(f64, f64)> {
     Ok((wait_pct, dec_pct))
 }
 
+/// Regenerate all three Fig-2 panels.
 pub fn run(opts: &HarnessOpts) -> Result<()> {
     run_fig2a(opts)?;
     run_fig2b(opts)?;

@@ -12,12 +12,17 @@ use crate::util::json::Json;
 use crate::util::pool;
 use crate::util::stats::rank_acc;
 
+/// Fig-5 data: ranking accuracy across prefix fractions.
 pub struct Fig5 {
+    /// Prefix fractions evaluated (0.1 .. 1.0).
     pub fractions: Vec<f64>,
+    /// RankAcc of the hidden-state step scorer per fraction.
     pub scorer_rankacc: Vec<f64>,
+    /// RankAcc of mean token confidence per fraction.
     pub confidence_rankacc: Vec<f64>,
 }
 
+/// Regenerate Fig 5: scorer vs confidence ranking accuracy.
 pub fn run(opts: &HarnessOpts) -> Result<Fig5> {
     let (gen_params, scorer) = super::load_sim_bundle(&super::artifact_dir())?;
     let traces_per_q = 256;

@@ -10,7 +10,9 @@ use crate::sim::tracegen::TraceGen;
 use crate::util::json::Json;
 use crate::util::pool;
 
+/// Fig-6/7 data: prefix-score dynamics over token position.
 pub struct Dynamics {
+    /// Model the dynamics were collected on.
     pub model: ModelId,
     /// Bin index -> (mean prefix score of correct, of incorrect, counts).
     pub bins: Vec<(f64, f64, usize, usize)>,
@@ -18,6 +20,7 @@ pub struct Dynamics {
 
 const BIN: u64 = 1024;
 
+/// Collect score dynamics for one model (AIME-25).
 pub fn run_model(opts: &HarnessOpts, model: ModelId) -> Result<Dynamics> {
     let (gen_params, scorer) = super::load_sim_bundle(&super::artifact_dir())?;
     let gen = TraceGen::new(model, BenchId::Aime25, gen_params, opts.seed);
@@ -79,6 +82,7 @@ pub fn run_model(opts: &HarnessOpts, model: ModelId) -> Result<Dynamics> {
     Ok(Dynamics { model, bins })
 }
 
+/// Regenerate Fig 6/7: trace-level score dynamics per model.
 pub fn run(opts: &HarnessOpts) -> Result<Vec<Dynamics>> {
     let mut out = Vec::new();
     for model in [ModelId::Qwen3_4B, ModelId::DeepSeek8B] {

@@ -1,4 +1,5 @@
-//! Experiment harness: one module per paper table/figure (DESIGN.md §6).
+//! Experiment harness: one module per paper table/figure (DESIGN.md §6),
+//! plus the beyond-the-paper serving cell ([`table5`], `step serve-sim`).
 //!
 //! Every runner prints the regenerated rows next to the paper's published
 //! numbers (from [`paper_ref`]) and returns structured results the bench
@@ -16,6 +17,7 @@ pub mod table1;
 pub mod table2;
 pub mod table3;
 pub mod table4;
+pub mod table5;
 
 use std::path::Path;
 
@@ -63,7 +65,9 @@ pub fn write_results(name: &str, value: &Json) -> Result<std::path::PathBuf> {
 pub struct HarnessOpts {
     /// Cap on questions per benchmark (None = paper-faithful counts).
     pub max_questions: Option<usize>,
+    /// Trace budget N per question.
     pub n_traces: usize,
+    /// Master RNG seed.
     pub seed: u64,
     /// Worker threads for the question/cell sharding (0 = all cores,
     /// 1 = serial). Results are bit-identical for any value.

@@ -5,11 +5,16 @@
 
 use crate::sim::profiles::{BenchId, BenchProfile, ModelId, ModelProfile};
 
+/// One Appendix-D row: scorer FLOPs vs LLM FLOPs per step.
 #[derive(Debug, Clone)]
 pub struct OverheadRow {
+    /// Model of the row.
     pub model: ModelId,
+    /// Step-scorer FLOPs per reasoning step.
     pub scorer_flops_per_step: f64,
+    /// LLM decode FLOPs per reasoning step.
     pub llm_flops_per_step: f64,
+    /// scorer / LLM FLOP ratio.
     pub relative: f64,
 }
 
@@ -22,6 +27,7 @@ fn non_embedding_params(model: ModelId) -> f64 {
     }
 }
 
+/// Regenerate Appendix D: the scorer's relative FLOPs overhead.
 pub fn run() -> Vec<OverheadRow> {
     const M: f64 = 512.0;
     println!("## Appendix D: scorer overhead per reasoning step");

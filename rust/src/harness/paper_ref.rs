@@ -107,8 +107,9 @@ pub fn table3(method: Method) -> (f64, f64) {
     }
 }
 
-/// Table 4: accuracy vs gpu_memory_utilization (DeepSeek-8B, HMMT-25, N=32).
+/// Table 4 sweep: gpu_memory_utilization settings (DeepSeek-8B, HMMT-25, N=32).
 pub const TABLE4_UTILS: [f64; 5] = [0.5, 0.6, 0.7, 0.8, 0.9];
+/// Table 4 reference: STEP accuracy at each utilization setting.
 pub const TABLE4_ACC: [f64; 5] = [70.0, 69.1, 70.0, 68.3, 73.3];
 
 #[cfg(test)]

@@ -10,6 +10,7 @@ use crate::coordinator::method::Method;
 use crate::sim::profiles::{BenchId, ModelId};
 use crate::util::json::Json;
 
+/// Regenerate Table 1: the full (method x model x benchmark) grid.
 pub fn run(opts: &HarnessOpts) -> Result<Vec<CellResult>> {
     let (gen, scorer) = super::load_sim_bundle(&super::artifact_dir())?;
     // The full 75-cell grid is computed first (sharded across workers),

@@ -11,12 +11,18 @@ use crate::sim::tracegen::TraceGen;
 use crate::util::json::Json;
 use crate::util::pool;
 
+/// One Table-2 row: accuracy under three voting strategies.
 #[derive(Debug, Clone)]
 pub struct Table2Row {
+    /// Model of the row.
     pub model: ModelId,
+    /// Benchmark of the row.
     pub bench: BenchId,
+    /// Plain majority-vote accuracy, percent.
     pub majority: f64,
+    /// PRM-weighted voting accuracy, percent.
     pub prm_weighted: f64,
+    /// STEP score-weighted voting accuracy, percent.
     pub step_weighted: f64,
 }
 
@@ -35,6 +41,7 @@ pub fn paper_row(model: ModelId, bench: BenchId) -> (f64, f64, f64) {
     }
 }
 
+/// Regenerate Table 2: voting-strategy comparison.
 pub fn run(opts: &HarnessOpts) -> Result<Vec<Table2Row>> {
     let (gen_params, scorer) = super::load_sim_bundle(&super::artifact_dir())?;
     let n_runs = 4;

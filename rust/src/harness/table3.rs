@@ -11,15 +11,20 @@ use crate::coordinator::method::Method;
 use crate::sim::profiles::{BenchId, ModelId};
 use crate::util::json::Json;
 
+/// One Table-3 row: the engine-timeline wait/decode split.
 #[derive(Debug, Clone)]
 pub struct Table3Row {
+    /// Method of the row.
     pub method: Method,
+    /// Mean engine wall-clock with a non-empty waiting queue, seconds.
     pub wait_s: f64,
+    /// Mean engine wall-clock with an empty waiting queue, seconds.
     pub decode_s: f64,
     /// DeepConf stage split ((warmup wait, warmup decode), (prune ...)).
     pub stages: Option<((f64, f64), (f64, f64))>,
 }
 
+/// Regenerate Table 3: wait/decode latency decomposition.
 pub fn run(opts: &HarnessOpts) -> Result<Vec<Table3Row>> {
     let (gen, scorer) = super::load_sim_bundle(&super::artifact_dir())?;
     let methods = [Method::Sc, Method::DeepConf, Method::SlimSc, Method::Step];

@@ -13,6 +13,7 @@ use crate::sim::profiles::{BenchId, ModelId};
 use crate::util::json::Json;
 use crate::util::stats::{mean, stddev};
 
+/// Regenerate Table 4: STEP accuracy across the memory-utilization sweep.
 pub fn run(opts: &HarnessOpts) -> Result<Vec<(f64, f64)>> {
     let (gen, scorer) = super::load_sim_bundle(&super::artifact_dir())?;
     let n_traces = 32.min(opts.n_traces);

@@ -1,0 +1,349 @@
+//! Table 5 (beyond the paper) — multi-request serving under load:
+//! throughput, p50/p95/p99 end-to-end latency, time-to-first-vote, and
+//! accuracy for each method against the same open-loop workload.
+//!
+//! The paper evaluates one question's trace set at a time; this cell is
+//! the ROADMAP's serving-scale rendering of the same claim: under GPU
+//! memory pressure from *concurrent* requests, STEP's cross-request
+//! pruning keeps the engine decoding while the SC family thrashes in
+//! preempt/recompute cycles — so STEP's tail latency (p99) lands below
+//! self-consistency's at the same arrival rate.
+//!
+//! Runs self-contained (built-in generator defaults) when artifacts are
+//! absent, so `step serve-sim` works on a fresh checkout. Metric blocks
+//! are bit-identical for any `--threads` value: each method's simulation
+//! is single-threaded and deterministic in the seed; threads only shard
+//! the methods across workers.
+
+use anyhow::Result;
+
+use super::cells::projection_scorer;
+use crate::coordinator::method::Method;
+use crate::coordinator::scorer::StepScorer;
+use crate::metrics::LatencySketch;
+use crate::sim::profiles::{BenchId, ModelId};
+use crate::sim::serve::{ServeSim, ServeSimConfig};
+use crate::sim::tracegen::{GenParams, TraceGen};
+use crate::sim::workload::WorkloadSpec;
+use crate::util::json::Json;
+use crate::util::pool;
+
+/// The methods the serving cell compares (DeepConf's two-stage warmup
+/// has no continuous-batching rendering; see `sim::serve`).
+pub const METHODS: [Method; 4] = [Method::Cot, Method::Sc, Method::SlimSc, Method::Step];
+
+/// Options of one serving-load run (`step serve-sim`).
+#[derive(Debug, Clone)]
+pub struct ServingOpts {
+    /// Served model.
+    pub model: ModelId,
+    /// Benchmark whose question pool the workload draws from.
+    pub bench: BenchId,
+    /// Number of requests in the workload.
+    pub n_requests: usize,
+    /// Mean arrival rate, requests/second.
+    pub rate_rps: f64,
+    /// Requests per burst (`None` = Poisson arrivals).
+    pub burst: Option<usize>,
+    /// Traces per request (N).
+    pub n_traces: usize,
+    /// vLLM-style gpu_memory_utilization of the shared pool.
+    pub mem_util: f64,
+    /// Optional per-request KV quota as a fraction of the pool.
+    pub quota_frac: Option<f64>,
+    /// Master seed.
+    pub seed: u64,
+    /// Worker threads sharding the methods (0 = all cores). Metric
+    /// output is bit-identical for any value.
+    pub threads: usize,
+}
+
+impl Default for ServingOpts {
+    fn default() -> Self {
+        ServingOpts {
+            model: ModelId::DeepSeek8B,
+            bench: BenchId::Aime25,
+            n_requests: 32,
+            rate_rps: 0.05,
+            burst: None,
+            n_traces: 16,
+            mem_util: 0.9,
+            quota_frac: None,
+            seed: 0,
+            threads: 0,
+        }
+    }
+}
+
+impl ServingOpts {
+    /// Quick scale for benches / smoke tests.
+    pub fn quick() -> Self {
+        ServingOpts { n_requests: 12, n_traces: 8, ..Default::default() }
+    }
+
+    fn workload(&self) -> WorkloadSpec {
+        match self.burst {
+            Some(b) => WorkloadSpec::bursty(self.rate_rps, b, self.n_requests),
+            None => WorkloadSpec::poisson(self.rate_rps, self.n_requests),
+        }
+    }
+}
+
+/// Aggregated SLO metrics of one (method, workload) serving cell.
+#[derive(Debug, Clone)]
+pub struct ServingCell {
+    /// The method this row measures.
+    pub method: Method,
+    /// Completed requests per second of simulated wall-clock.
+    pub throughput_rps: f64,
+    /// Median end-to-end latency, seconds.
+    pub p50_s: f64,
+    /// 95th-percentile end-to-end latency, seconds.
+    pub p95_s: f64,
+    /// 99th-percentile end-to-end latency, seconds.
+    pub p99_s: f64,
+    /// Mean end-to-end latency, seconds.
+    pub mean_latency_s: f64,
+    /// Median time-to-first-vote, seconds.
+    pub ttfv_p50_s: f64,
+    /// Mean queue (admission) delay, seconds.
+    pub mean_queue_s: f64,
+    /// Accuracy over the workload's requests, percent.
+    pub acc: f64,
+    /// Mean generated tokens per request, thousands.
+    pub tok_k: f64,
+    /// Total preemption events.
+    pub preemptions: u64,
+    /// Total pruned traces.
+    pub pruned: u64,
+    /// Peak KV blocks in use / pool blocks.
+    pub peak_block_frac: f64,
+}
+
+impl ServingCell {
+    /// Serialize as one metric block of `BENCH_serving.json`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("method", Json::Str(self.method.name().to_string())),
+            ("throughput_rps", Json::Num(self.throughput_rps)),
+            ("p50_s", Json::Num(self.p50_s)),
+            ("p95_s", Json::Num(self.p95_s)),
+            ("p99_s", Json::Num(self.p99_s)),
+            ("mean_latency_s", Json::Num(self.mean_latency_s)),
+            ("ttfv_p50_s", Json::Num(self.ttfv_p50_s)),
+            ("mean_queue_s", Json::Num(self.mean_queue_s)),
+            ("acc", Json::Num(self.acc)),
+            ("tok_k", Json::Num(self.tok_k)),
+            ("preemptions", Json::Num(self.preemptions as f64)),
+            ("pruned", Json::Num(self.pruned as f64)),
+            ("peak_block_frac", Json::Num(self.peak_block_frac)),
+        ])
+    }
+}
+
+/// Run one method against the workload and aggregate its SLO metrics.
+pub fn run_cell(
+    method: Method,
+    gen_params: &GenParams,
+    scorer: &StepScorer,
+    opts: &ServingOpts,
+) -> ServingCell {
+    let mut cfg =
+        ServeSimConfig::new(opts.model, opts.bench, method, opts.n_traces, opts.workload());
+    cfg.mem_util = opts.mem_util;
+    cfg.seed = opts.seed;
+    cfg.quota_frac = opts.quota_frac;
+    let gen = TraceGen::new(opts.model, opts.bench, gen_params.clone(), opts.seed ^ 0x5EED);
+    let r = ServeSim::new(&cfg, &gen, scorer).run();
+
+    let mut lat = LatencySketch::new();
+    let mut ttfv = LatencySketch::new();
+    let mut queue_sum = 0.0;
+    let mut tok_sum = 0.0;
+    let mut correct = 0usize;
+    for o in &r.outcomes {
+        lat.record(o.latency_s);
+        ttfv.record(o.ttfv_s);
+        queue_sum += o.queue_s;
+        tok_sum += o.gen_tokens as f64;
+        correct += o.correct as usize;
+    }
+    let n = r.outcomes.len().max(1) as f64;
+    ServingCell {
+        method,
+        throughput_rps: r.throughput_rps(),
+        p50_s: lat.percentile_s(50.0),
+        p95_s: lat.percentile_s(95.0),
+        p99_s: lat.percentile_s(99.0),
+        mean_latency_s: lat.mean_s(),
+        ttfv_p50_s: ttfv.percentile_s(50.0),
+        mean_queue_s: queue_sum / n,
+        acc: 100.0 * correct as f64 / n,
+        tok_k: tok_sum / n / 1000.0,
+        preemptions: r.counters.preemptions,
+        pruned: r.counters.pruned,
+        peak_block_frac: r.peak_used_blocks as f64 / r.pool_blocks.max(1) as f64,
+    }
+}
+
+/// Run every method of [`METHODS`] against the same workload. Methods
+/// shard across up to `opts.threads` workers; each simulation is
+/// deterministic in the seed and results return in method order, so the
+/// output is bit-identical for any thread count.
+pub fn run_methods(
+    opts: &ServingOpts,
+    gen_params: &GenParams,
+    scorer: &StepScorer,
+) -> Vec<ServingCell> {
+    let threads = pool::resolve_threads(opts.threads).min(METHODS.len());
+    if threads <= 1 {
+        METHODS.iter().map(|&m| run_cell(m, gen_params, scorer, opts)).collect()
+    } else {
+        pool::parallel_map(threads, METHODS.len(), |i| {
+            run_cell(METHODS[i], gen_params, scorer, opts)
+        })
+    }
+}
+
+/// Assemble the `BENCH_serving.json` payload: the workload config plus
+/// one metric block per method. Pure function of the cells and options —
+/// no timestamps, no thread counts — so reruns compare byte-for-byte.
+pub fn metrics_json(opts: &ServingOpts, cells: &[ServingCell]) -> Json {
+    let burst = match opts.burst {
+        Some(b) => Json::Num(b as f64),
+        None => Json::Null,
+    };
+    let quota = match opts.quota_frac {
+        Some(f) => Json::Num(f),
+        None => Json::Null,
+    };
+    Json::obj(vec![
+        (
+            "config",
+            Json::obj(vec![
+                ("model", Json::Str(format!("{:?}", opts.model))),
+                ("bench", Json::Str(opts.bench.name().to_string())),
+                ("n_requests", Json::Num(opts.n_requests as f64)),
+                ("rate_rps", Json::Num(opts.rate_rps)),
+                ("burst", burst),
+                ("n_traces", Json::Num(opts.n_traces as f64)),
+                ("mem_util", Json::Num(opts.mem_util)),
+                ("quota_frac", quota),
+                ("seed", Json::Num(opts.seed as f64)),
+            ]),
+        ),
+        ("methods", Json::Arr(cells.iter().map(|c| c.to_json()).collect())),
+    ])
+}
+
+/// `step serve-sim`: run the serving grid, print the table, write
+/// `results/BENCH_serving.json`. Uses the trained scorer bundle when
+/// artifacts exist and falls back to the built-in generator defaults on
+/// a fresh checkout.
+pub fn run(opts: &ServingOpts) -> Result<Vec<ServingCell>> {
+    let (gen_params, scorer) = match super::load_sim_bundle(&super::artifact_dir()) {
+        Ok(bundle) => bundle,
+        Err(_) => {
+            println!("(no artifacts found — using built-in generator defaults)");
+            let gp = GenParams::default_d64();
+            let sc = projection_scorer(&gp);
+            (gp, sc)
+        }
+    };
+    let cells = run_methods(opts, &gen_params, &scorer);
+
+    println!(
+        "## Table 5: serving under load ({:?}, {}, N={}, {} req @ {} rps{})",
+        opts.model,
+        opts.bench.name(),
+        opts.n_traces,
+        opts.n_requests,
+        opts.rate_rps,
+        match opts.burst {
+            Some(b) => format!(", bursts of {b}"),
+            None => ", poisson".to_string(),
+        }
+    );
+    println!(
+        "{:>8} | {:>7} | {:>8} {:>8} {:>8} | {:>8} | {:>7} | {:>6} | {:>8} {:>7}",
+        "method", "req/s", "p50(s)", "p95(s)", "p99(s)", "ttfv50", "queue", "acc%", "preempt", "pruned"
+    );
+    for c in &cells {
+        println!(
+            "{:>8} | {:>7.4} | {:>8.1} {:>8.1} {:>8.1} | {:>8.1} | {:>7.1} | {:>6.1} | {:>8} {:>7}",
+            c.method.name(),
+            c.throughput_rps,
+            c.p50_s,
+            c.p95_s,
+            c.p99_s,
+            c.ttfv_p50_s,
+            c.mean_queue_s,
+            c.acc,
+            c.preemptions,
+            c.pruned,
+        );
+    }
+    let sc_p99 = cells.iter().find(|c| c.method == Method::Sc).map(|c| c.p99_s);
+    let step_p99 = cells.iter().find(|c| c.method == Method::Step).map(|c| c.p99_s);
+    if let (Some(sc), Some(step)) = (sc_p99, step_p99) {
+        println!(
+            "  p99 STEP {step:.1}s vs SC {sc:.1}s — {}",
+            if step < sc {
+                "STEP holds the tail under load (the serving-scale claim)"
+            } else {
+                "WARNING: STEP tail not below SC at this load"
+            }
+        );
+    }
+    let json = metrics_json(opts, &cells);
+    // Harness-convention artifact for this cell, plus the canonical
+    // BENCH_serving.json metric blocks (also written by the
+    // serving_load bench at its own quick config — last writer wins;
+    // the embedded config block records which).
+    super::write_results("table5_serving", &json)?;
+    let path = super::write_results("BENCH_serving", &json)?;
+    println!("wrote {path:?} (and results/table5_serving.json)");
+    Ok(cells)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> ServingOpts {
+        ServingOpts {
+            model: ModelId::Qwen3_4B,
+            bench: BenchId::GpqaDiamond,
+            n_requests: 4,
+            rate_rps: 0.05,
+            n_traces: 4,
+            seed: 3,
+            threads: 1,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn cells_cover_all_methods_in_order() {
+        let gp = GenParams::default_d64();
+        let sc = projection_scorer(&gp);
+        let cells = run_methods(&tiny(), &gp, &sc);
+        assert_eq!(cells.len(), METHODS.len());
+        for (c, &m) in cells.iter().zip(&METHODS) {
+            assert_eq!(c.method, m);
+            assert!(c.throughput_rps > 0.0, "{m:?}");
+            assert!(c.p50_s <= c.p95_s && c.p95_s <= c.p99_s, "{m:?}");
+            assert!((0.0..=100.0).contains(&c.acc), "{m:?}");
+        }
+    }
+
+    #[test]
+    fn metric_block_is_deterministic() {
+        let gp = GenParams::default_d64();
+        let sc = projection_scorer(&gp);
+        let opts = tiny();
+        let a = metrics_json(&opts, &run_methods(&opts, &gp, &sc));
+        let b = metrics_json(&opts, &run_methods(&opts, &gp, &sc));
+        assert_eq!(a.to_string_pretty(), b.to_string_pretty());
+    }
+}

@@ -16,6 +16,7 @@ pub struct BlockAllocator {
 }
 
 impl BlockAllocator {
+    /// A pool of `num_blocks` physical blocks, all free.
     pub fn new(num_blocks: usize) -> Self {
         BlockAllocator {
             num_blocks,
@@ -25,18 +26,22 @@ impl BlockAllocator {
         }
     }
 
+    /// Total blocks in the pool.
     pub fn num_blocks(&self) -> usize {
         self.num_blocks
     }
 
+    /// Currently free blocks.
     pub fn num_free(&self) -> usize {
         self.free_list.len()
     }
 
+    /// Currently allocated blocks.
     pub fn num_used(&self) -> usize {
         self.num_blocks - self.free_list.len()
     }
 
+    /// Allocate one block; `None` when the pool is exhausted.
     pub fn alloc(&mut self) -> Option<BlockId> {
         let id = self.free_list.pop()?;
         self.allocated[id as usize] = true;
@@ -66,6 +71,7 @@ impl BlockAllocator {
         true
     }
 
+    /// Return one block to the pool. Panics on double free.
     pub fn free(&mut self, id: BlockId) {
         assert!(
             self.allocated[id as usize],
@@ -75,12 +81,14 @@ impl BlockAllocator {
         self.free_list.push(id);
     }
 
+    /// Return a batch of blocks to the pool.
     pub fn free_all(&mut self, ids: &[BlockId]) {
         for &id in ids {
             self.free(id);
         }
     }
 
+    /// Is this block currently allocated?
     pub fn is_allocated(&self, id: BlockId) -> bool {
         self.allocated[id as usize]
     }

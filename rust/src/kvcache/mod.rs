@@ -11,8 +11,10 @@
 //! while STEP *prunes* the lowest-scored trace and releases its blocks.
 
 pub mod allocator;
+pub mod shared;
 
 pub use allocator::{BlockAllocator, BlockId};
+pub use shared::{OwnerId, SharedKvPool};
 
 /// Sequence identifier (one reasoning trace = one sequence).
 pub type SeqId = u64;
@@ -20,7 +22,9 @@ pub type SeqId = u64;
 /// Per-sequence block table.
 #[derive(Debug, Clone, Default)]
 pub struct BlockTable {
+    /// Physical block ids backing the sequence, in position order.
     pub blocks: Vec<BlockId>,
+    /// Resident tokens (prompt + generated).
     pub num_tokens: usize,
 }
 
@@ -45,6 +49,7 @@ pub struct KvCacheManager {
 }
 
 impl KvCacheManager {
+    /// A pool of `num_blocks` blocks of `block_size` token slots.
     pub fn new(num_blocks: usize, block_size: usize) -> Self {
         assert!(block_size > 0);
         KvCacheManager {
@@ -67,26 +72,32 @@ impl KvCacheManager {
         self.tables.get_mut(seq as usize).and_then(|t| t.as_mut())
     }
 
+    /// Tokens per block.
     pub fn block_size(&self) -> usize {
         self.block_size
     }
 
+    /// Total token capacity of the pool.
     pub fn capacity_tokens(&self) -> usize {
         self.alloc.num_blocks() * self.block_size
     }
 
+    /// Currently free blocks.
     pub fn free_blocks(&self) -> usize {
         self.alloc.num_free()
     }
 
+    /// Currently allocated blocks.
     pub fn used_blocks(&self) -> usize {
         self.alloc.num_used()
     }
 
+    /// Number of live sequences.
     pub fn num_seqs(&self) -> usize {
         self.num_seqs
     }
 
+    /// Resident tokens of a sequence (0 if unknown).
     #[inline]
     pub fn seq_tokens(&self, seq: SeqId) -> usize {
         self.slot(seq).map(|t| t.num_tokens).unwrap_or(0)
@@ -108,6 +119,7 @@ impl KvCacheManager {
         self.blocks_for(t.num_tokens + n) - t.blocks.len()
     }
 
+    /// Does the pool have `blocks` free blocks right now?
     pub fn can_allocate(&self, blocks: usize) -> bool {
         self.alloc.num_free() >= blocks
     }

@@ -1,0 +1,268 @@
+//! Shared KV pool: per-owner accounting and quotas over one
+//! [`KvCacheManager`].
+//!
+//! The multi-request serving simulator ([`crate::sim::serve`]) admits
+//! many requests against a *single* physical block pool — the regime
+//! where one tenant's growth can starve every other. [`SharedKvPool`]
+//! wraps the block-table manager with two additions:
+//!
+//! * **ownership** — every sequence is registered to an [`OwnerId`]
+//!   (one owner per request), and the pool tracks blocks held per owner;
+//! * **quotas** — an optional per-owner block cap. With a quota set, an
+//!   owner saturating its share triggers a memory event *for that owner*
+//!   even while the pool has free blocks, bounding cross-tenant
+//!   interference; without one, only pool exhaustion triggers events and
+//!   STEP's cross-request pruning picks the globally weakest trace.
+
+use super::{KvCacheManager, SeqId};
+
+/// Owner (request / tenant) identifier within a [`SharedKvPool`].
+pub type OwnerId = u32;
+
+/// A [`KvCacheManager`] with per-owner block accounting and optional
+/// per-owner quotas.
+#[derive(Debug, Clone)]
+pub struct SharedKvPool {
+    mgr: KvCacheManager,
+    /// Sequence id -> owning request (dense, like the manager's tables).
+    owner_of: Vec<Option<OwnerId>>,
+    /// Blocks currently held per owner (dense by owner id).
+    used_by: Vec<usize>,
+    /// Per-owner block cap; `None` = pool-bound only.
+    quota_blocks: Option<usize>,
+}
+
+impl SharedKvPool {
+    /// A pool of `num_blocks` blocks of `block_size` token slots, with
+    /// an optional per-owner quota in blocks.
+    pub fn new(num_blocks: usize, block_size: usize, quota_blocks: Option<usize>) -> Self {
+        SharedKvPool {
+            mgr: KvCacheManager::new(num_blocks, block_size),
+            owner_of: Vec::new(),
+            used_by: Vec::new(),
+            quota_blocks,
+        }
+    }
+
+    /// Tokens per block.
+    pub fn block_size(&self) -> usize {
+        self.mgr.block_size()
+    }
+
+    /// Total physical blocks in the pool.
+    pub fn num_blocks(&self) -> usize {
+        self.mgr.capacity_tokens() / self.mgr.block_size()
+    }
+
+    /// Currently free blocks.
+    pub fn free_blocks(&self) -> usize {
+        self.mgr.free_blocks()
+    }
+
+    /// Currently allocated blocks.
+    pub fn used_blocks(&self) -> usize {
+        self.mgr.used_blocks()
+    }
+
+    /// Peak allocated blocks observed over the pool's lifetime.
+    pub fn peak_used_blocks(&self) -> usize {
+        self.mgr.peak_used_blocks
+    }
+
+    /// Number of live sequences.
+    pub fn num_seqs(&self) -> usize {
+        self.mgr.num_seqs()
+    }
+
+    /// The configured per-owner quota, if any.
+    pub fn quota_blocks(&self) -> Option<usize> {
+        self.quota_blocks
+    }
+
+    /// Blocks currently held by `owner`.
+    pub fn owner_used(&self, owner: OwnerId) -> usize {
+        self.used_by.get(owner as usize).copied().unwrap_or(0)
+    }
+
+    /// Blocks `owner` may still allocate before hitting its quota;
+    /// `None` when no quota is configured (pool-bound only).
+    pub fn owner_headroom(&self, owner: OwnerId) -> Option<usize> {
+        self.quota_blocks.map(|q| q.saturating_sub(self.owner_used(owner)))
+    }
+
+    /// The owner a live sequence is registered to.
+    pub fn owner_of(&self, seq: SeqId) -> Option<OwnerId> {
+        self.owner_of.get(seq as usize).copied().flatten()
+    }
+
+    /// Resident tokens of a sequence (0 if unknown).
+    pub fn seq_tokens(&self, seq: SeqId) -> usize {
+        self.mgr.seq_tokens(seq)
+    }
+
+    /// Blocks required to admit a new sequence of `tokens` tokens.
+    pub fn blocks_needed_for_new(&self, tokens: usize) -> usize {
+        self.mgr.blocks_needed_for_new(tokens)
+    }
+
+    /// Blocks required to append `n` tokens to a live sequence.
+    pub fn blocks_needed_for_append(&self, seq: SeqId, n: usize) -> usize {
+        self.mgr.blocks_needed_for_append(seq, n)
+    }
+
+    /// Would allocating `blocks` for `owner` satisfy both the pool and
+    /// the owner's quota right now?
+    pub fn can_admit(&self, owner: OwnerId, blocks: usize) -> bool {
+        self.mgr.can_allocate(blocks)
+            && match self.owner_headroom(owner) {
+                Some(h) => blocks <= h,
+                None => true,
+            }
+    }
+
+    /// Admit a sequence of `tokens` prefilled tokens for `owner`.
+    /// All-or-nothing: returns false (changing nothing) when either the
+    /// pool or the owner's quota cannot take the allocation.
+    pub fn allocate_seq(&mut self, owner: OwnerId, seq: SeqId, tokens: usize) -> bool {
+        let need = self.mgr.blocks_needed_for_new(tokens);
+        if !self.can_admit(owner, need) {
+            return false;
+        }
+        let ok = self.mgr.allocate_seq(seq, tokens);
+        debug_assert!(ok, "can_admit guaranteed the allocation");
+        let idx = seq as usize;
+        if self.owner_of.len() <= idx {
+            self.owner_of.resize(idx + 1, None);
+        }
+        self.owner_of[idx] = Some(owner);
+        let oidx = owner as usize;
+        if self.used_by.len() <= oidx {
+            self.used_by.resize(oidx + 1, 0);
+        }
+        self.used_by[oidx] += need;
+        true
+    }
+
+    /// Append `n` tokens to a live sequence, charging any new blocks to
+    /// its owner. Returns false (changing nothing) if the pool or the
+    /// owner's quota is short.
+    pub fn append_tokens(&mut self, seq: SeqId, n: usize) -> bool {
+        let owner = self.owner_of(seq).expect("appending to unknown seq");
+        let need = self.mgr.blocks_needed_for_append(seq, n);
+        if need > 0 && !self.can_admit(owner, need) {
+            return false;
+        }
+        let ok = self.mgr.append_tokens(seq, n);
+        debug_assert!(ok, "can_admit guaranteed the append");
+        self.used_by[owner as usize] += need;
+        true
+    }
+
+    /// Release a sequence entirely, crediting its blocks back to the
+    /// owner. Returns the number of blocks released.
+    pub fn free_seq(&mut self, seq: SeqId) -> usize {
+        let owner = self.owner_of[seq as usize].take().expect("freeing unknown seq");
+        let freed = self.mgr.free_seq(seq);
+        self.used_by[owner as usize] -= freed;
+        freed
+    }
+
+    /// Invariant check for tests: per-owner charges reconcile with the
+    /// manager's block tables.
+    pub fn check_invariants(&self) {
+        self.mgr.check_invariants();
+        let charged: usize = self.used_by.iter().sum();
+        assert_eq!(charged, self.mgr.used_blocks(), "owner charge leak");
+        let mut recomputed = vec![0usize; self.used_by.len()];
+        for (seq, owner) in self.owner_of.iter().enumerate() {
+            if let Some(o) = owner {
+                let table =
+                    self.mgr.block_table(seq as SeqId).expect("owned seq has a table");
+                recomputed[*o as usize] += table.blocks.len();
+            }
+        }
+        assert_eq!(recomputed, self.used_by, "per-owner accounting drift");
+        if let Some(q) = self.quota_blocks {
+            for (o, &u) in self.used_by.iter().enumerate() {
+                assert!(u <= q, "owner {o} over quota: {u} > {q}");
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool(blocks: usize, quota: Option<usize>) -> SharedKvPool {
+        SharedKvPool::new(blocks, 16, quota)
+    }
+
+    #[test]
+    fn tracks_usage_per_owner() {
+        let mut p = pool(8, None);
+        assert!(p.allocate_seq(0, 0, 32)); // owner 0: 2 blocks
+        assert!(p.allocate_seq(1, 1, 16)); // owner 1: 1 block
+        assert!(p.append_tokens(1, 16)); // owner 1: +1 block
+        assert_eq!(p.owner_used(0), 2);
+        assert_eq!(p.owner_used(1), 2);
+        assert_eq!(p.used_blocks(), 4);
+        p.check_invariants();
+        assert_eq!(p.free_seq(0), 2);
+        assert_eq!(p.owner_used(0), 0);
+        p.check_invariants();
+    }
+
+    #[test]
+    fn quota_caps_an_owner_while_pool_has_room() {
+        let mut p = pool(8, Some(2));
+        assert!(p.allocate_seq(0, 0, 32)); // exactly at quota
+        assert!(!p.append_tokens(0, 1), "quota must refuse the 3rd block");
+        assert_eq!(p.seq_tokens(0), 32, "refused append must not change state");
+        assert!(p.free_blocks() >= 6, "pool itself still has room");
+        // A different owner is unaffected.
+        assert!(p.allocate_seq(1, 1, 32));
+        // Refusing admission over quota is all-or-nothing too.
+        assert!(!p.allocate_seq(2, 2, 48));
+        assert_eq!(p.owner_used(2), 0);
+        p.check_invariants();
+    }
+
+    #[test]
+    fn quota_headroom_reporting() {
+        let mut p = pool(8, Some(3));
+        assert_eq!(p.owner_headroom(0), Some(3));
+        assert!(p.allocate_seq(0, 0, 17)); // 2 blocks
+        assert_eq!(p.owner_headroom(0), Some(1));
+        assert_eq!(pool(8, None).owner_headroom(0), None);
+        p.check_invariants();
+    }
+
+    #[test]
+    fn pool_exhaustion_still_refuses_without_quota() {
+        let mut p = pool(2, None);
+        assert!(p.allocate_seq(0, 0, 32));
+        assert!(!p.allocate_seq(1, 1, 16));
+        assert!(!p.append_tokens(0, 1));
+        p.check_invariants();
+    }
+
+    #[test]
+    fn freed_quota_is_reusable() {
+        let mut p = pool(4, Some(2));
+        assert!(p.allocate_seq(0, 0, 32));
+        assert!(!p.allocate_seq(0, 1, 16), "owner 0 at quota");
+        p.free_seq(0);
+        assert!(p.allocate_seq(0, 1, 16), "credit restored after free");
+        p.check_invariants();
+    }
+
+    #[test]
+    #[should_panic(expected = "freeing unknown seq")]
+    fn double_free_panics() {
+        let mut p = pool(4, None);
+        p.allocate_seq(0, 0, 16);
+        p.free_seq(0);
+        p.free_seq(0);
+    }
+}

@@ -1,8 +1,28 @@
 //! STEP: Step-level Trace Evaluation and Pruning for efficient test-time
-//! scaling — a rust + JAX + Pallas reproduction of Liang et al. (2026).
+//! scaling — a rust + JAX + Pallas reproduction of Liang et al. (2026),
+//! grown into a serving-system testbed.
 //!
-//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
-//! reproduced tables/figures.
+//! Layer map (see ARCHITECTURE.md for the full tour):
+//!
+//! * [`sim`] — discrete-event engines: the single-question engine behind
+//!   every paper table/figure, and the multi-request serving simulator
+//!   (`step serve-sim`) with open-loop workloads and continuous batching.
+//! * [`kvcache`] — PagedAttention block accounting: allocator, per-
+//!   sequence block tables, and the shared pool with per-request quotas.
+//! * [`coordinator`] — the paper's contribution: step scoring, trace and
+//!   request lifecycle, pruning/method policies, answer voting.
+//! * [`harness`] — one module per reproduced table/figure plus the
+//!   serving cell; each writes `results/*.json`.
+//! * [`metrics`] — latency histograms/sketches and engine counters.
+//! * [`model`] / [`runtime`] — the e2e path: tokenizer, sampler, and the
+//!   PJRT artifact registry (execution gated behind the `pjrt` feature).
+//! * [`util`] — in-tree substrates forced by the offline vendor set:
+//!   JSON, PRNG, stats, thread pool, bench harness.
+//!
+//! See DESIGN.md for the system inventory, EXPERIMENTS.md for the
+//! reproduced tables/figures, and README.md for the quickstart.
+
+#![warn(missing_docs)]
 
 pub mod config;
 pub mod coordinator;

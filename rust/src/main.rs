@@ -5,7 +5,8 @@
 //! (no clap in the offline vendor set).
 
 use anyhow::{bail, Result};
-use step::harness::{self, HarnessOpts};
+use step::harness::{self, table5::ServingOpts, HarnessOpts};
+use step::sim::profiles::{BenchId, ModelId};
 
 const USAGE: &str = "step — Step-level Trace Evaluation and Pruning (paper reproduction)
 
@@ -24,7 +25,11 @@ COMMANDS (experiments; see DESIGN.md §6):
     fig67       Trace-level score dynamics
     overhead    Appendix-D scorer FLOPs overhead
     ablations   Design-choice ablations (victim policy, score aggregation)
-    all         Everything above at full scale
+    serve-sim   Multi-request serving under load (beyond the paper):
+                continuous batching of concurrent requests against one
+                shared KV pool; reports throughput, p50/p95/p99 latency,
+                time-to-first-vote, accuracy per method
+    all         Everything above at full scale (except serve-sim)
 
 OPTIONS:
     --questions N    cap questions per benchmark (default: paper-faithful)
@@ -35,9 +40,21 @@ OPTIONS:
                      any thread count.
     --quick          shorthand for --questions 8 --traces 32
 
+SERVE-SIM OPTIONS (plus --seed/--threads/--traces above):
+    --requests N     workload size in requests (default 32)
+    --rate R         mean arrival rate, requests/second (default 0.05)
+    --burst B        bursty arrivals: B requests per burst (default: poisson)
+    --model M        qwen3-4b | deepseek-8b | phi-4 (default deepseek-8b)
+    --bench B        aime-25 | hmmt | gpqa | equibench | divlogiceval
+                     (default aime-25)
+    --mem-util U     gpu_memory_utilization of the shared pool (default 0.9)
+    --quota-frac F   per-request KV quota as a fraction of the pool
+                     (default: none — pool-bound, cross-request pruning)
+
 Artifacts are read from $STEP_ARTIFACTS_DIR (default ./artifacts); run
 `make artifacts` first. Results are written to $STEP_RESULTS_DIR
-(default ./results).";
+(default ./results). serve-sim falls back to built-in generator defaults
+when artifacts are absent and writes results/BENCH_serving.json.";
 
 fn parse_opts(args: &[String]) -> Result<HarnessOpts> {
     let mut opts = HarnessOpts::default();
@@ -77,12 +94,72 @@ fn need_val(args: &[String], i: usize) -> Result<&String> {
         .ok_or_else(|| anyhow::anyhow!("option {} needs a value", args[i]))
 }
 
+fn parse_serving_opts(args: &[String]) -> Result<ServingOpts> {
+    let mut opts = ServingOpts::default();
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--requests" => {
+                opts.n_requests = need_val(args, i)?.parse()?;
+                i += 2;
+            }
+            "--rate" => {
+                opts.rate_rps = need_val(args, i)?.parse()?;
+                i += 2;
+            }
+            "--burst" => {
+                opts.burst = Some(need_val(args, i)?.parse()?);
+                i += 2;
+            }
+            "--traces" => {
+                opts.n_traces = need_val(args, i)?.parse()?;
+                i += 2;
+            }
+            "--seed" => {
+                opts.seed = need_val(args, i)?.parse()?;
+                i += 2;
+            }
+            "--threads" => {
+                opts.threads = need_val(args, i)?.parse()?;
+                i += 2;
+            }
+            "--model" => {
+                let name = need_val(args, i)?;
+                opts.model = ModelId::parse(name)
+                    .ok_or_else(|| anyhow::anyhow!("unknown model '{name}'"))?;
+                i += 2;
+            }
+            "--bench" => {
+                let name = need_val(args, i)?;
+                opts.bench = BenchId::parse(name)
+                    .ok_or_else(|| anyhow::anyhow!("unknown bench '{name}'"))?;
+                i += 2;
+            }
+            "--mem-util" => {
+                opts.mem_util = need_val(args, i)?.parse()?;
+                i += 2;
+            }
+            "--quota-frac" => {
+                opts.quota_frac = Some(need_val(args, i)?.parse()?);
+                i += 2;
+            }
+            other => bail!("unknown serve-sim option '{other}'\n\n{USAGE}"),
+        }
+    }
+    Ok(opts)
+}
+
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = args.first() else {
         println!("{USAGE}");
         return Ok(());
     };
+    if cmd == "serve-sim" {
+        let sopts = parse_serving_opts(&args[1..])?;
+        harness::table5::run(&sopts)?;
+        return Ok(());
+    }
     let opts = parse_opts(&args[1..])?;
 
     match cmd.as_str() {

@@ -1,5 +1,10 @@
-//! Serving metrics: latency histograms, counters, and the wait/decode
-//! timeline recorder behind Table 3 / Fig 2c-style reports.
+//! Serving metrics: latency histograms, streaming percentile sketches,
+//! counters, and the wait/decode timeline recorder behind Table 3 /
+//! Fig 2c-style reports and the `table5_serving` SLO report.
+
+pub mod sketch;
+
+pub use sketch::LatencySketch;
 
 use crate::util::stats::{mean, percentile};
 
@@ -19,6 +24,7 @@ impl Default for LatencyHistogram {
 }
 
 impl LatencyHistogram {
+    /// An empty histogram over the fixed log-spaced grid.
     pub fn new() -> Self {
         // 1us .. ~3h in x2 steps.
         let mut bounds = Vec::new();
@@ -31,6 +37,7 @@ impl LatencyHistogram {
         LatencyHistogram { bounds, counts: vec![0; n + 1], samples: Vec::new() }
     }
 
+    /// Record one latency sample (seconds).
     pub fn record(&mut self, seconds: f64) {
         let idx = self
             .bounds
@@ -41,18 +48,22 @@ impl LatencyHistogram {
         self.samples.push(seconds);
     }
 
+    /// Number of recorded samples.
     pub fn count(&self) -> u64 {
         self.counts.iter().sum()
     }
 
+    /// Arithmetic mean of the samples.
     pub fn mean_s(&self) -> f64 {
         mean(&self.samples)
     }
 
+    /// Exact sample percentile (`q` in [0, 100]; sorts the samples).
     pub fn percentile_s(&self, q: f64) -> f64 {
         percentile(&self.samples, q)
     }
 
+    /// One-line report: `name: n=… mean=… p50=… p95=… p99=… max=…`.
     pub fn summary(&self, name: &str) -> String {
         format!(
             "{name}: n={} mean={:.3}s p50={:.3}s p95={:.3}s p99={:.3}s max={:.3}s",
@@ -69,17 +80,26 @@ impl LatencyHistogram {
 /// Engine-level counters for one run (requests, tokens, policy events).
 #[derive(Debug, Clone, Default)]
 pub struct EngineCounters {
+    /// Requests served (1 for the single-question engines).
     pub requests: u64,
+    /// Tokens generated across all traces.
     pub generated_tokens: u64,
+    /// Continuous-batching decode iterations executed.
     pub decode_iterations: u64,
+    /// Preemption events (SC-family memory events).
     pub preemptions: u64,
+    /// Waiting-queue resumes (recompute-on-resume prefills).
     pub resumes: u64,
+    /// Traces removed by pruning policies.
     pub pruned: u64,
+    /// Traces stopped early by DeepConf's confidence check.
     pub early_stopped: u64,
+    /// Step-scorer invocations.
     pub step_scores: u64,
 }
 
 impl EngineCounters {
+    /// One-line `key=value` report of every counter.
     pub fn report(&self) -> String {
         format!(
             "requests={} tokens={} iters={} preemptions={} resumes={} \
@@ -100,11 +120,14 @@ impl EngineCounters {
 /// (wait) engine phases — Table 3's decomposition.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct TimelineSplit {
+    /// Wall-clock with a non-empty waiting queue.
     pub wait_s: f64,
+    /// Wall-clock with an empty waiting queue.
     pub decode_s: f64,
 }
 
 impl TimelineSplit {
+    /// Accrue `dt` seconds into the wait or decode bucket.
     pub fn accrue(&mut self, dt: f64, queue_non_empty: bool) {
         if queue_non_empty {
             self.wait_s += dt;
@@ -113,10 +136,12 @@ impl TimelineSplit {
         }
     }
 
+    /// Total accrued wall-clock.
     pub fn total(&self) -> f64 {
         self.wait_s + self.decode_s
     }
 
+    /// Fraction of wall-clock spent with a non-empty waiting queue.
     pub fn wait_fraction(&self) -> f64 {
         if self.total() == 0.0 {
             0.0

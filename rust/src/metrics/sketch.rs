@@ -1,0 +1,256 @@
+//! Streaming latency percentile sketch: fixed log-spaced buckets,
+//! O(1) memory, deterministic, mergeable.
+//!
+//! [`super::LatencyHistogram`] stores every sample, which is fine for a
+//! few hundred questions but wrong for a serving harness meant to scale
+//! to millions of requests. [`LatencySketch`] keeps only bucket counts
+//! over a geometric grid (2% resolution from 0.1 ms to weeks), so:
+//!
+//! * `record` is O(1) and allocation-free,
+//! * quantiles have bounded *relative* error (at most one bucket, ~2%,
+//!   always on the high side),
+//! * sketches from independent shards [`merge`](LatencySketch::merge)
+//!   exactly (bucket-wise addition), and
+//! * results are bit-deterministic: counts are integers and the reported
+//!   quantile is a pure function of the counts.
+//!
+//! The `table5_serving` harness reports its p50/p95/p99 figures from
+//! this sketch.
+
+/// Smallest resolvable latency (lower bound of bucket 0), seconds.
+const LO: f64 = 1e-4;
+/// Geometric bucket growth factor (2% relative resolution).
+const GAMMA: f64 = 1.02;
+/// Bucket count: covers up to `LO * GAMMA^(N-1)` ≈ 2e6 s (~3 weeks).
+const N_BUCKETS: usize = 1200;
+
+/// Mergeable log-bucket quantile sketch over non-negative latencies.
+///
+/// # Examples
+///
+/// ```
+/// use step::metrics::LatencySketch;
+///
+/// let mut s = LatencySketch::new();
+/// for v in 1..=100 {
+///     s.record(v as f64);
+/// }
+/// assert_eq!(s.count(), 100);
+/// let p50 = s.percentile_s(50.0);
+/// assert!((p50 - 50.0).abs() / 50.0 < 0.03, "p50 = {p50}");
+/// assert_eq!(s.percentile_s(100.0), 100.0);
+/// ```
+#[derive(Debug, Clone)]
+pub struct LatencySketch {
+    counts: Vec<u64>,
+    total: u64,
+    min_s: f64,
+    max_s: f64,
+    sum_s: f64,
+}
+
+impl Default for LatencySketch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Bucket index of a value: bucket 0 is `(-inf, LO]`, bucket i > 0 is
+/// `(LO * GAMMA^(i-1), LO * GAMMA^i]`.
+fn bucket_of(v: f64) -> usize {
+    if v.is_nan() || v <= LO {
+        return 0;
+    }
+    let i = ((v / LO).ln() / GAMMA.ln()).ceil();
+    (i as usize).min(N_BUCKETS - 1)
+}
+
+/// Representative value of a bucket: its upper bound, so quantile
+/// estimates are biased at most one bucket (2%) high and never low.
+fn bucket_value(i: usize) -> f64 {
+    LO * GAMMA.powf(i as f64)
+}
+
+impl LatencySketch {
+    /// An empty sketch.
+    pub fn new() -> LatencySketch {
+        LatencySketch {
+            counts: vec![0; N_BUCKETS],
+            total: 0,
+            min_s: f64::INFINITY,
+            max_s: 0.0,
+            sum_s: 0.0,
+        }
+    }
+
+    /// Record one latency sample (seconds).
+    pub fn record(&mut self, seconds: f64) {
+        self.counts[bucket_of(seconds)] += 1;
+        self.total += 1;
+        self.min_s = self.min_s.min(seconds);
+        self.max_s = self.max_s.max(seconds);
+        self.sum_s += seconds;
+    }
+
+    /// Number of recorded samples.
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// Arithmetic mean of the samples (exact; tracked outside buckets).
+    pub fn mean_s(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum_s / self.total as f64
+        }
+    }
+
+    /// Smallest recorded sample (exact). 0.0 when empty.
+    pub fn min_s(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.min_s
+        }
+    }
+
+    /// Largest recorded sample (exact). 0.0 when empty.
+    pub fn max_s(&self) -> f64 {
+        self.max_s
+    }
+
+    /// Quantile estimate for `q` in [0, 100]: the upper bound of the
+    /// bucket holding the ceil(q% * n)-th order statistic, clamped to the
+    /// exact observed [min, max]. The estimate is biased at most one
+    /// bucket (~2%) high and never low; p100 is exact.
+    pub fn percentile_s(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let rank = ((q / 100.0) * self.total as f64).ceil().max(1.0) as u64;
+        let rank = rank.min(self.total);
+        if rank == self.total {
+            return self.max_s; // p100 (and tiny n) are exact
+        }
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return bucket_value(i).clamp(self.min_s, self.max_s);
+            }
+        }
+        self.max_s
+    }
+
+    /// Fold another sketch into this one (exact bucket-wise addition).
+    pub fn merge(&mut self, other: &LatencySketch) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.min_s = self.min_s.min(other.min_s);
+        self.max_s = self.max_s.max(other.max_s);
+        self.sum_s += other.sum_s;
+    }
+
+    /// One-line report: `name: n=… mean=… p50=… p95=… p99=… max=…`.
+    pub fn summary(&self, name: &str) -> String {
+        format!(
+            "{name}: n={} mean={:.3}s p50={:.3}s p95={:.3}s p99={:.3}s max={:.3}s",
+            self.count(),
+            self.mean_s(),
+            self.percentile_s(50.0),
+            self.percentile_s(95.0),
+            self.percentile_s(99.0),
+            self.max_s(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantiles_track_exact_within_resolution() {
+        let mut s = LatencySketch::new();
+        for v in 1..=1000u32 {
+            s.record(v as f64 / 10.0); // 0.1 .. 100.0 s
+        }
+        assert_eq!(s.count(), 1000);
+        for (q, exact) in [(50.0, 50.0), (95.0, 95.0), (99.0, 99.0)] {
+            let est = s.percentile_s(q);
+            assert!(
+                (est - exact).abs() / exact < 0.03,
+                "p{q}: {est} vs {exact}"
+            );
+        }
+        assert_eq!(s.percentile_s(100.0), 100.0);
+        assert!((s.mean_s() - 50.05).abs() < 1e-9);
+    }
+
+    #[test]
+    fn extremes_clamp_to_observed_range() {
+        let mut s = LatencySketch::new();
+        s.record(1e-9); // below the grid
+        s.record(1e9); // above the grid
+        assert_eq!(s.count(), 2);
+        assert_eq!(s.min_s(), 1e-9);
+        assert_eq!(s.max_s(), 1e9);
+        assert!(s.percentile_s(0.0) >= 1e-9);
+        assert_eq!(s.percentile_s(100.0), 1e9);
+    }
+
+    #[test]
+    fn empty_sketch_reports_zeros() {
+        let s = LatencySketch::new();
+        assert_eq!(s.count(), 0);
+        assert_eq!(s.mean_s(), 0.0);
+        assert_eq!(s.percentile_s(99.0), 0.0);
+        assert_eq!(s.min_s(), 0.0);
+    }
+
+    #[test]
+    fn merge_equals_union() {
+        let mut a = LatencySketch::new();
+        let mut b = LatencySketch::new();
+        let mut whole = LatencySketch::new();
+        for v in 1..=200u32 {
+            let x = v as f64 / 7.0;
+            whole.record(x);
+            if v % 2 == 0 {
+                a.record(x);
+            } else {
+                b.record(x);
+            }
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        for q in [10.0, 50.0, 90.0, 99.0] {
+            assert_eq!(a.percentile_s(q), whole.percentile_s(q));
+        }
+        assert_eq!(a.max_s(), whole.max_s());
+    }
+
+    #[test]
+    fn deterministic_summary() {
+        let mut s = LatencySketch::new();
+        for v in [0.5, 1.5, 2.5] {
+            s.record(v);
+        }
+        assert_eq!(s.summary("x"), s.clone().summary("x"));
+        assert!(s.summary("x").contains("n=3"));
+    }
+
+    #[test]
+    fn bucket_monotone() {
+        let mut last = 0;
+        for v in [1e-5, 1e-4, 1e-3, 0.1, 1.0, 60.0, 3600.0, 1e5] {
+            let b = bucket_of(v);
+            assert!(b >= last, "bucket_of not monotone at {v}");
+            last = b;
+        }
+        assert!(bucket_of(f64::INFINITY) == N_BUCKETS - 1);
+    }
+}

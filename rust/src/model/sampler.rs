@@ -4,10 +4,14 @@
 
 use crate::util::rng::Rng;
 
+/// Sampling parameters (paper Appendix B): temperature, top-k, top-p.
 #[derive(Debug, Clone, Copy)]
 pub struct SamplerConfig {
+    /// Softmax temperature; <= 0 means greedy argmax.
     pub temperature: f64,
+    /// Keep only the k highest-logit candidates.
     pub top_k: usize,
+    /// Nucleus threshold: smallest prefix with cumulative mass >= top_p.
     pub top_p: f64,
 }
 
@@ -57,6 +61,7 @@ pub fn sample(logits: &[f32], cfg: &SamplerConfig, rng: &mut Rng) -> usize {
     idx[rng.categorical(&probs)]
 }
 
+/// Index of the largest logit (greedy decoding).
 pub fn argmax(logits: &[f32]) -> usize {
     logits
         .iter()

@@ -1,24 +1,33 @@
 //! Minimal tokenizer for the e2e tiny reasoning LM. Token-id conventions
 //! are shared with `python/compile/model.py` (ModelConfig):
-//! 0 = PAD, 1 = BOS, 2 = EOS ("</think>"), 3 = STEP ("\n\n"),
+//! 0 = PAD, 1 = BOS, 2 = EOS (`</think>`), 3 = STEP (`\n\n`),
 //! 4..=13 = digits 0-9, 14 = '+', 15 = '=', 16.. = hashed word ids.
 
+/// Padding token id.
 pub const PAD: i32 = 0;
+/// Beginning-of-sequence token id.
 pub const BOS: i32 = 1;
+/// End-of-sequence token id (`</think>`).
 pub const EOS: i32 = 2;
+/// Step-boundary token id ("\n\n").
 pub const STEP: i32 = 3;
+/// First digit token id; digits 0-9 are `DIGIT_BASE..DIGIT_BASE + 10`.
 pub const DIGIT_BASE: i32 = 4;
+/// '+' token id.
 pub const PLUS: i32 = 14;
+/// '=' token id.
 pub const EQUALS: i32 = 15;
 const WORD_BASE: i32 = 16;
 
 /// Tokenizer over a fixed vocab size (the LM's `vocab`).
 #[derive(Debug, Clone, Copy)]
 pub struct Tokenizer {
+    /// Vocabulary size of the served LM.
     pub vocab: usize,
 }
 
 impl Tokenizer {
+    /// Tokenizer for a vocab of the given size (> 16 for the word region).
     pub fn new(vocab: usize) -> Self {
         assert!(vocab > WORD_BASE as usize);
         Tokenizer { vocab }
@@ -78,10 +87,12 @@ impl Tokenizer {
         runs.pop()
     }
 
+    /// Is this the step-boundary token?
     pub fn is_step(&self, t: i32) -> bool {
         t == STEP
     }
 
+    /// Is this the end-of-sequence token?
     pub fn is_eos(&self, t: i32) -> bool {
         t == EOS
     }

@@ -11,56 +11,82 @@ use crate::util::json::Json;
 /// One input argument of a graph.
 #[derive(Debug, Clone)]
 pub struct ArgSpec {
+    /// Argument name as lowered.
     pub name: String,
+    /// Tensor shape.
     pub shape: Vec<usize>,
+    /// Element dtype name (e.g. "float32").
     pub dtype: String,
 }
 
 /// One AOT-lowered graph.
 #[derive(Debug, Clone)]
 pub struct GraphSpec {
+    /// HLO text file name within the artifact dir.
     pub file: String,
+    /// Input arguments, in call order (after the parameters).
     pub inputs: Vec<ArgSpec>,
+    /// Number of outputs in the result tuple.
     pub outputs: usize,
 }
 
 /// One parameter tensor inside params.bin.
 #[derive(Debug, Clone)]
 pub struct ParamEntry {
+    /// Parameter name.
     pub name: String,
+    /// Tensor shape.
     pub shape: Vec<usize>,
-    /// Offset/length in f32 elements.
+    /// Offset into the slab, in f32 elements.
     pub offset: usize,
+    /// Element count.
     pub len: usize,
 }
 
 /// The served model's architecture constants.
 #[derive(Debug, Clone, Copy)]
 pub struct ModelConfig {
+    /// Vocabulary size.
     pub vocab: usize,
+    /// Embedding / residual width.
     pub d_model: usize,
+    /// Transformer layer count.
     pub n_layers: usize,
+    /// Attention head count.
     pub n_heads: usize,
+    /// MLP hidden width.
     pub d_ff: usize,
+    /// Maximum sequence length the graphs were lowered for.
     pub max_len: usize,
+    /// Fixed prompt length of the prefill graphs.
     pub prompt_len: usize,
 }
 
 /// Parsed manifest.json.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Build fingerprint of the artifact set.
     pub fingerprint: String,
+    /// Served model architecture.
     pub model: ModelConfig,
+    /// Graph name -> spec.
     pub graphs: BTreeMap<String, GraphSpec>,
+    /// File name of the raw parameter slab.
     pub params_bin: String,
+    /// Parameter layout within the slab.
     pub params: Vec<ParamEntry>,
+    /// Scorer bundle name ("sim" / "e2e") -> file name.
     pub scorers: BTreeMap<String, String>,
+    /// Prefill graph batch-size variants.
     pub prefill_batches: Vec<usize>,
+    /// Decode graph batch-size variants.
     pub decode_batches: Vec<usize>,
+    /// Scorer graph batch-size variants.
     pub scorer_batches: Vec<usize>,
 }
 
 impl Manifest {
+    /// Parse manifest.json text.
     pub fn parse(text: &str) -> Result<Manifest> {
         let j = Json::parse(text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
         let mc = j.get("model_config");
@@ -137,11 +163,14 @@ impl Manifest {
 /// An artifact directory + its manifest.
 #[derive(Debug, Clone)]
 pub struct Artifacts {
+    /// The artifact directory.
     pub dir: PathBuf,
+    /// Its parsed manifest.
     pub manifest: Manifest,
 }
 
 impl Artifacts {
+    /// Load the manifest from an artifact directory.
     pub fn load(dir: impl Into<PathBuf>) -> Result<Artifacts> {
         let dir = dir.into();
         let text = std::fs::read_to_string(dir.join("manifest.json"))

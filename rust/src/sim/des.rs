@@ -55,26 +55,35 @@ pub enum ScoreAgg {
 /// Simulation configuration for one (model, bench, method) cell.
 #[derive(Debug, Clone)]
 pub struct SimConfig {
+    /// Simulated model (KV geometry + timing coefficients).
     pub model: ModelId,
+    /// Benchmark the questions come from.
     pub bench: BenchId,
+    /// Test-time-scaling method driving the scheduler.
     pub method: Method,
+    /// Trace budget N per question.
     pub n_traces: usize,
+    /// Method hyper-parameters (paper Appendix B.3).
     pub params: MethodParams,
     /// vLLM gpu_memory_utilization (paper default 0.9; Table 4 sweeps).
     pub mem_util: f64,
+    /// PagedAttention block size in tokens.
     pub block_size: usize,
+    /// Master seed; every RNG stream derives from `(seed, qid)`.
     pub seed: u64,
     /// Score every trace regardless of method (Table 2 / Fig 6-7 need
     /// scores on SC traces).
     pub score_all: bool,
     /// Record (token, score) trajectories (Fig 6-7).
     pub record_dynamics: bool,
-    /// Ablation knobs (paper defaults).
+    /// Ablation knob: which trace the memory event removes.
     pub victim: VictimPolicy,
+    /// Ablation knob: how step scores aggregate into score_t.
     pub score_agg: ScoreAgg,
 }
 
 impl SimConfig {
+    /// Paper-default configuration for one cell.
     pub fn new(model: ModelId, bench: BenchId, method: Method, n_traces: usize) -> Self {
         SimConfig {
             model,
@@ -96,14 +105,23 @@ impl SimConfig {
 /// Outcome of one trace.
 #[derive(Debug, Clone)]
 pub struct TraceOutcome {
+    /// Ground-truth correctness of the trace's reasoning.
     pub label: bool,
+    /// Final answer (None = truncated / no parseable answer).
     pub answer: Option<u32>,
+    /// Terminal lifecycle state.
     pub status: TraceStatus,
+    /// Mean step score at termination.
     pub final_score: f64,
+    /// Whole-trace mean token confidence.
     pub mean_confidence: f64,
+    /// Tokens generated (excludes prompt).
     pub generated: u64,
+    /// Seconds spent waiting (preempted / recompute).
     pub wait_s: f64,
+    /// Seconds spent decoding.
     pub decode_s: f64,
+    /// Times this trace was preempted.
     pub preemptions: usize,
     /// (token index, running mean score) at each scored boundary.
     pub dynamics: Vec<(u64, f64)>,
@@ -112,27 +130,38 @@ pub struct TraceOutcome {
 /// Outcome of one question (the row unit of every table).
 #[derive(Debug, Clone)]
 pub struct QuestionResult {
+    /// Question index within the benchmark.
     pub qid: usize,
+    /// Did the voted answer match ground truth?
     pub correct: bool,
+    /// Voted answer (None = every trace abstained).
     pub chosen: Option<u32>,
+    /// End-to-end latency of the question, seconds.
     pub latency_s: f64,
+    /// Initial prefill time, seconds (folded into `latency_s`).
     pub prefill_s: f64,
     /// Total generated tokens across all traces (Table 1's Tok column).
     pub gen_tokens: u64,
-    /// Mean per-trace wait / decode seconds (Fig 2c's per-trace view).
+    /// Mean per-trace wait seconds (Fig 2c's per-trace view).
     pub mean_wait_s: f64,
+    /// Mean per-trace decode seconds.
     pub mean_decode_s: f64,
     /// Engine-timeline decomposition (Table 3's view): wall-clock during
     /// which the waiting queue was non-empty vs empty.
     pub engine_wait_s: f64,
+    /// Wall-clock with an empty waiting queue (see `engine_wait_s`).
     pub engine_decode_s: f64,
+    /// Total preemption events.
     pub n_preemptions: usize,
+    /// Traces removed by pruning policies.
     pub n_pruned: usize,
+    /// Traces stopped early by DeepConf's confidence check.
     pub n_early_stopped: usize,
     /// DeepConf stage split: (warmup latency, prune-stage latency).
     pub stage_latency: Option<(f64, f64)>,
     /// DeepConf stage wait/decode means: ((w_wait, w_dec), (p_wait, p_dec)).
     pub stage_wait_decode: Option<((f64, f64), (f64, f64))>,
+    /// Per-trace outcomes, in trace-index order.
     pub traces: Vec<TraceOutcome>,
 }
 
@@ -164,6 +193,7 @@ pub struct Scratch {
 }
 
 impl Scratch {
+    /// Empty scratch; buffers warm up on first use.
     pub fn new() -> Scratch {
         Scratch::default()
     }
@@ -178,6 +208,7 @@ pub struct DesEngine<'a> {
 }
 
 impl<'a> DesEngine<'a> {
+    /// Bind a configuration to a trace generator and step scorer.
     pub fn new(cfg: &'a SimConfig, gen: &'a TraceGen, scorer: &'a StepScorer) -> Self {
         DesEngine { cfg, gen, scorer, profile: ModelProfile::get(cfg.model) }
     }

@@ -9,6 +9,7 @@
 /// Physical GPU description.
 #[derive(Debug, Clone, Copy)]
 pub struct GpuSpec {
+    /// Total HBM in bytes.
     pub total_bytes: u64,
     /// vLLM-style `gpu_memory_utilization` (fraction of HBM usable).
     pub mem_util: f64,

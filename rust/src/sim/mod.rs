@@ -1,11 +1,16 @@
 //! Simulation substrates: the GPU memory model, serving latency model,
 //! synthetic trace generator, benchmark/model profiles, the rule-based
-//! verifier, and the discrete-event serving engine that drives every
-//! paper-scale experiment.
+//! verifier, and two discrete-event serving engines — the
+//! single-question engine ([`des`]) that drives every paper table/figure,
+//! and the multi-request serving simulator ([`serve`]) that runs an
+//! open-loop workload ([`workload`]) with continuous batching against one
+//! shared KV pool (`step serve-sim`).
 
 pub mod des;
 pub mod gpu;
 pub mod profiles;
+pub mod serve;
 pub mod timing;
 pub mod tracegen;
 pub mod verifier;
+pub mod workload;

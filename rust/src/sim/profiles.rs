@@ -14,14 +14,19 @@ use super::timing::TimingModel;
 /// The three reasoning models of §5.1.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum ModelId {
+    /// Qwen3-4B-Thinking-2507.
     Qwen3_4B,
+    /// DeepSeek-R1-0528-Qwen3-8B.
     DeepSeek8B,
+    /// Phi-4-reasoning-plus (14B).
     Phi4_14B,
 }
 
 impl ModelId {
+    /// Every model, in the paper's column order.
     pub const ALL: [ModelId; 3] = [ModelId::Qwen3_4B, ModelId::DeepSeek8B, ModelId::Phi4_14B];
 
+    /// Parse a CLI/config model name (case-insensitive, with aliases).
     pub fn parse(s: &str) -> Option<ModelId> {
         match s.to_ascii_lowercase().as_str() {
             "qwen3-4b" | "qwen" | "qwen3-4b-thinking-2507" => Some(ModelId::Qwen3_4B),
@@ -35,10 +40,13 @@ impl ModelId {
 /// Serving-relevant description of a reasoning LLM.
 #[derive(Debug, Clone)]
 pub struct ModelProfile {
+    /// Which model this profile describes.
     pub id: ModelId,
+    /// Full model name as published.
     pub name: &'static str,
     /// Last-layer hidden size (the step scorer's input dim in the paper).
     pub hidden_dim: usize,
+    /// Transformer layer count.
     pub n_layers: usize,
     /// bf16 weights resident in HBM.
     pub weight_bytes: u64,
@@ -46,17 +54,21 @@ pub struct ModelProfile {
     pub kv_bytes_per_token: u64,
     /// Activation/workspace slack subtracted from the KV budget.
     pub activation_bytes: u64,
+    /// Calibrated serving-latency coefficients.
     pub timing: TimingModel,
     /// Generation cap (Appendix B: 64k Qwen/DeepSeek, 32k Phi).
     pub max_gen_tokens: usize,
-    /// Appendix-B sampling parameters (metadata; sampling itself happens
+    /// Appendix-B sampling temperature (metadata; sampling itself happens
     /// in the e2e backend, the simulator consumes outcome distributions).
     pub temperature: f64,
+    /// Appendix-B nucleus (top-p) threshold.
     pub top_p: f64,
+    /// Appendix-B top-k cutoff.
     pub top_k: usize,
 }
 
 impl ModelProfile {
+    /// The calibrated profile of a model.
     pub fn get(id: ModelId) -> ModelProfile {
         match id {
             // Qwen3-4B-Thinking-2507: 36 layers, GQA 8 kv-heads x 128.
@@ -129,14 +141,20 @@ impl ModelProfile {
 /// The six evaluation benchmarks of §5.1 (HMMT-24/25 reported jointly).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum BenchId {
+    /// AIME 2025 (30 competition-math questions).
     Aime25,
+    /// HMMT February 2024 + 2025 (60 questions, reported jointly).
     Hmmt2425,
+    /// GPQA-Diamond (198 graduate-level MCQs).
     GpqaDiamond,
+    /// EquiBench (program-equivalence, binary choice).
     EquiBench,
+    /// DivLogicEval (diverse logic MCQs).
     DivLogicEval,
 }
 
 impl BenchId {
+    /// Every benchmark, in the paper's column order.
     pub const ALL: [BenchId; 5] = [
         BenchId::Aime25,
         BenchId::Hmmt2425,
@@ -145,6 +163,7 @@ impl BenchId {
         BenchId::DivLogicEval,
     ];
 
+    /// Parse a CLI/config benchmark name (case-insensitive, aliases).
     pub fn parse(s: &str) -> Option<BenchId> {
         match s.to_ascii_lowercase().as_str() {
             "aime-25" | "aime25" | "aime" => Some(BenchId::Aime25),
@@ -156,6 +175,7 @@ impl BenchId {
         }
     }
 
+    /// Display name (the paper's column label).
     pub fn name(&self) -> &'static str {
         match self {
             BenchId::Aime25 => "AIME-25",
@@ -170,7 +190,9 @@ impl BenchId {
 /// Benchmark-level workload description.
 #[derive(Debug, Clone)]
 pub struct BenchProfile {
+    /// Which benchmark this profile describes.
     pub id: BenchId,
+    /// Question pool size.
     pub n_questions: usize,
     /// 0 = open numeric answer (competition math); else MCQ choice count.
     pub n_choices: usize,
@@ -179,6 +201,7 @@ pub struct BenchProfile {
     pub wrong_answer_zipf: f64,
     /// Number of distinct wrong-answer candidates.
     pub wrong_answer_pool: usize,
+    /// Mean prompt length in tokens.
     pub prompt_tokens: usize,
     /// Beta concentration for per-question solve rates. Lower = more
     /// bimodal question difficulty = larger SC-over-CoT gains.
@@ -195,6 +218,7 @@ pub struct BenchProfile {
 }
 
 impl BenchProfile {
+    /// The calibrated profile of a benchmark.
     pub fn get(id: BenchId) -> BenchProfile {
         match id {
             BenchId::Aime25 => BenchProfile {

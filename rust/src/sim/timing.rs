@@ -23,10 +23,15 @@
 /// Per-model latency coefficients (seconds).
 #[derive(Debug, Clone, Copy)]
 pub struct TimingModel {
+    /// Fixed per-iteration overhead (kernel launches, sampler).
     pub c0: f64,
+    /// Per-sequence compute term (MLP/QKV GEMM rows).
     pub c1: f64,
+    /// KV-bandwidth term per resident token.
     pub c2: f64,
+    /// Fixed prefill overhead.
     pub p0: f64,
+    /// Per-token prefill cost.
     pub p1: f64,
 }
 

@@ -28,17 +28,24 @@ use super::profiles::{
 /// from artifacts/scorer_sim.json `gen` + `signal_dir`).
 #[derive(Debug, Clone)]
 pub struct GenParams {
+    /// Hidden-state dimension.
     pub d: usize,
+    /// Signal amplitude along the signal direction.
     pub s0: f64,
+    /// Progress-ramp half-saturation step (rho(n) = n / (n + n0)).
     pub n0: f64,
+    /// Per-step isotropic noise sigma.
     pub sigma_h: f64,
+    /// Per-trace latent-quality noise sigma.
     pub sigma_t: f64,
+    /// Per-question nuisance-direction magnitude.
     pub c_q: f64,
     /// Transient early-trace offset along the signal direction (the
     /// model's "exploration" phase before committing): amplitude ~
     /// N(0, sigma_a) per trace, decaying as exp(-n/tau). This is what
     /// keeps early-prefix ranking below the late-prefix plateau (Fig 5).
     pub sigma_a: f64,
+    /// Decay constant (in steps) of the early-trace transient.
     pub tau: f64,
     /// Unit signal direction (length d).
     pub signal_dir: Vec<f32>,
@@ -92,7 +99,9 @@ impl GenParams {
 /// state (the paper's miscalibration argument, §2.1/Fig. 5).
 #[derive(Debug, Clone, Copy)]
 pub struct ConfidenceParams {
+    /// Baseline mean token confidence.
     pub base: f64,
+    /// Quality-to-confidence coupling strength.
     pub signal: f64,
     /// Per-step noise (averages out over a long trace).
     pub noise: f64,
@@ -112,6 +121,7 @@ impl Default for ConfidenceParams {
 /// One benchmark question instance.
 #[derive(Debug, Clone)]
 pub struct Question {
+    /// Question index within the benchmark.
     pub qid: usize,
     /// Per-question solve probability (difficulty).
     pub p_solve: f64,
@@ -121,6 +131,7 @@ pub struct Question {
     pub len_mult: f64,
     /// Nuisance direction added to every hidden state of this question.
     pub w_q: Vec<f32>,
+    /// Prompt length in tokens.
     pub prompt_tokens: usize,
     seed: u64,
 }
@@ -129,6 +140,7 @@ pub struct Question {
 /// are generated lazily and deterministically per step).
 #[derive(Debug, Clone)]
 pub struct TraceSpec {
+    /// Ground-truth correctness of the trace's reasoning.
     pub label: bool,
     /// Final answer: 0 = ground truth; >0 = specific wrong answer;
     /// None = truncated at the generation cap (no parseable answer).
@@ -138,12 +150,15 @@ pub struct TraceSpec {
     /// Cumulative token index (within the generation) of each step
     /// boundary; last entry == total generated tokens.
     pub step_ends: Vec<u64>,
+    /// Total tokens the trace generates.
     pub total_tokens: u64,
+    /// Hit the model's generation cap (answer unparseable).
     pub truncated: bool,
     seed: u64,
 }
 
 impl TraceSpec {
+    /// Number of reasoning steps (= step boundaries).
     pub fn n_steps(&self) -> usize {
         self.step_ends.len()
     }
@@ -152,18 +167,25 @@ impl TraceSpec {
 /// Generator bound to one (model, benchmark) pair.
 #[derive(Debug, Clone)]
 pub struct TraceGen {
+    /// The simulated model's profile.
     pub model: ModelProfile,
+    /// The benchmark's workload profile.
     pub bench: BenchProfile,
+    /// Hidden-state generator parameters.
     pub gen: GenParams,
+    /// Token-confidence model parameters.
     pub conf: ConfidenceParams,
-    /// Mean total tokens for correct / incorrect traces.
+    /// Mean total tokens of correct traces.
     pub mean_len_correct: f64,
+    /// Mean total tokens of incorrect traces (Fig-2b skew).
     pub mean_len_incorrect: f64,
+    /// Benchmark-mean solve rate (Table 1 CoT calibration).
     pub mean_solve: f64,
     base_seed: u64,
 }
 
 impl TraceGen {
+    /// Bind a generator to one (model, benchmark) pair and a seed.
     pub fn new(model: ModelId, bench: BenchId, gen: GenParams, seed: u64) -> TraceGen {
         let mp = ModelProfile::get(model);
         let bp = BenchProfile::get(bench);

@@ -23,6 +23,7 @@ fn gcd(a: i64, b: i64) -> i64 {
 }
 
 impl AnswerValue {
+    /// Normalize p/q to lowest terms; `None` when q == 0.
     pub fn rational(p: i64, q: i64) -> Option<AnswerValue> {
         if q == 0 {
             return None;

@@ -1,0 +1,197 @@
+//! Open-loop workload generator for the multi-request serving simulator
+//! ([`crate::sim::serve`]).
+//!
+//! A workload is a deterministic sequence of request arrivals over a
+//! benchmark's question pool: each arrival carries a request id, the
+//! question it asks, and its wall-clock arrival time. Arrival times come
+//! from an open-loop process (the client does not wait for responses —
+//! the regime where continuous batching and the paper's §4.2
+//! memory-triggered pruning actually matter):
+//!
+//! * [`ArrivalProcess::Poisson`] — i.i.d. exponential inter-arrival gaps
+//!   at a target request rate, the standard serving-benchmark model.
+//! * [`ArrivalProcess::Bursty`] — bursts of back-to-back arrivals with
+//!   exponential gaps *between* bursts, preserving the same long-run
+//!   rate; stresses admission and the shared KV pool much harder.
+//!
+//! Generation is a pure function of `(spec, seed)` — no global state, no
+//! threading — so arrival sequences are bit-identical across runs and
+//! trivially invariant to the harness `--threads` setting
+//! (`tests/parallel_determinism.rs` locks this in).
+
+use crate::util::rng::Rng;
+
+/// Shape of the request inter-arrival process.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalProcess {
+    /// Poisson arrivals: exponential gaps with mean `1 / rate_rps`.
+    Poisson {
+        /// Mean request rate in requests per second.
+        rate_rps: f64,
+    },
+    /// Bursts of `burst` simultaneous requests; exponential gaps between
+    /// bursts sized so the long-run mean rate is still `rate_rps`.
+    Bursty {
+        /// Long-run mean request rate in requests per second.
+        rate_rps: f64,
+        /// Requests per burst (>= 1).
+        burst: usize,
+    },
+}
+
+/// One request arrival produced by [`WorkloadSpec::generate`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Arrival {
+    /// Dense request id in arrival order (0, 1, 2, ...).
+    pub rid: usize,
+    /// Question index into the benchmark's question pool.
+    pub qid: usize,
+    /// Arrival wall-clock time in seconds from simulation start.
+    pub t_arrive: f64,
+}
+
+/// A complete open-loop workload description.
+///
+/// # Examples
+///
+/// Generation is deterministic per seed:
+///
+/// ```
+/// use step::sim::workload::WorkloadSpec;
+///
+/// let spec = WorkloadSpec::poisson(2.0, 8);
+/// let a = spec.generate(30, 7);
+/// let b = spec.generate(30, 7);
+/// assert_eq!(a.len(), 8);
+/// assert_eq!(a, b);
+/// assert!(a.windows(2).all(|w| w[0].t_arrive <= w[1].t_arrive));
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WorkloadSpec {
+    /// The inter-arrival process.
+    pub arrivals: ArrivalProcess,
+    /// Total number of requests to generate.
+    pub n_requests: usize,
+}
+
+impl WorkloadSpec {
+    /// Poisson workload at `rate_rps` requests/second.
+    pub fn poisson(rate_rps: f64, n_requests: usize) -> WorkloadSpec {
+        WorkloadSpec { arrivals: ArrivalProcess::Poisson { rate_rps }, n_requests }
+    }
+
+    /// Bursty workload: bursts of `burst` requests, long-run `rate_rps`.
+    pub fn bursty(rate_rps: f64, burst: usize, n_requests: usize) -> WorkloadSpec {
+        WorkloadSpec {
+            arrivals: ArrivalProcess::Bursty { rate_rps, burst: burst.max(1) },
+            n_requests,
+        }
+    }
+
+    /// Long-run mean request rate of the process, requests/second.
+    pub fn rate_rps(&self) -> f64 {
+        match self.arrivals {
+            ArrivalProcess::Poisson { rate_rps } => rate_rps,
+            ArrivalProcess::Bursty { rate_rps, .. } => rate_rps,
+        }
+    }
+
+    /// Generate the arrival sequence over a pool of `n_questions`
+    /// benchmark questions. Deterministic in `(self, seed)`: the whole
+    /// sequence derives from one seeded RNG stream, arrival times are
+    /// non-decreasing, and question ids are drawn uniformly from the
+    /// pool (so heavy pools repeat questions, like real traffic).
+    pub fn generate(&self, n_questions: usize, seed: u64) -> Vec<Arrival> {
+        let rate = self.rate_rps();
+        assert!(rate > 0.0, "workload rate must be positive");
+        let n_questions = n_questions.max(1);
+        let mut rng = Rng::new(seed ^ 0x57A3_10AD_0A61_77E5);
+        let mut out = Vec::with_capacity(self.n_requests);
+        let mut clock = 0.0f64;
+        match self.arrivals {
+            ArrivalProcess::Poisson { .. } => {
+                for rid in 0..self.n_requests {
+                    clock += exp_gap(&mut rng, rate);
+                    out.push(Arrival { rid, qid: rng.below(n_questions), t_arrive: clock });
+                }
+            }
+            ArrivalProcess::Bursty { burst, .. } => {
+                // Gap between bursts carries `burst` requests' worth of
+                // inter-arrival budget, keeping the long-run rate fixed.
+                let mut rid = 0;
+                while rid < self.n_requests {
+                    clock += exp_gap(&mut rng, rate / burst as f64);
+                    let k = burst.min(self.n_requests - rid);
+                    for _ in 0..k {
+                        out.push(Arrival { rid, qid: rng.below(n_questions), t_arrive: clock });
+                        rid += 1;
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// One exponential inter-arrival gap at `rate` events/second.
+fn exp_gap(rng: &mut Rng, rate: f64) -> f64 {
+    // f64() is in [0, 1), so 1 - u is in (0, 1] and ln() is finite.
+    -(1.0 - rng.f64()).ln() / rate
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let spec = WorkloadSpec::poisson(1.5, 32);
+        assert_eq!(spec.generate(30, 7), spec.generate(30, 7));
+        assert_ne!(spec.generate(30, 7), spec.generate(30, 8));
+    }
+
+    #[test]
+    fn times_non_decreasing_and_ids_dense() {
+        for spec in [WorkloadSpec::poisson(2.0, 50), WorkloadSpec::bursty(2.0, 4, 50)] {
+            let arr = spec.generate(10, 3);
+            assert_eq!(arr.len(), 50);
+            for (i, a) in arr.iter().enumerate() {
+                assert_eq!(a.rid, i);
+                assert!(a.qid < 10);
+                assert!(a.t_arrive > 0.0);
+            }
+            assert!(arr.windows(2).all(|w| w[0].t_arrive <= w[1].t_arrive));
+        }
+    }
+
+    #[test]
+    fn poisson_rate_approximately_matches() {
+        let spec = WorkloadSpec::poisson(4.0, 4000);
+        let arr = spec.generate(30, 11);
+        let span = arr.last().unwrap().t_arrive;
+        let rate = arr.len() as f64 / span;
+        assert!((rate - 4.0).abs() < 0.4, "empirical rate {rate}");
+    }
+
+    #[test]
+    fn bursty_matches_long_run_rate_and_groups() {
+        let spec = WorkloadSpec::bursty(4.0, 8, 4000);
+        let arr = spec.generate(30, 11);
+        let span = arr.last().unwrap().t_arrive;
+        let rate = arr.len() as f64 / span;
+        assert!((rate - 4.0).abs() < 0.5, "empirical rate {rate}");
+        // All members of a burst share one arrival instant.
+        assert_eq!(arr[0].t_arrive, arr[7].t_arrive);
+        assert!(arr[8].t_arrive > arr[7].t_arrive);
+    }
+
+    #[test]
+    fn questions_cover_the_pool() {
+        let arr = WorkloadSpec::poisson(1.0, 400).generate(5, 1);
+        let mut seen = [false; 5];
+        for a in &arr {
+            seen[a.qid] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+}

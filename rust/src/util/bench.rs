@@ -8,17 +8,24 @@ use std::time::Instant;
 /// One timed case.
 #[derive(Debug, Clone)]
 pub struct CaseResult {
+    /// Case label.
     pub name: String,
+    /// Samples collected.
     pub iters: u64,
+    /// Mean per-iteration time, nanoseconds.
     pub mean_ns: f64,
+    /// Population standard deviation, nanoseconds.
     pub stddev_ns: f64,
+    /// Fastest sample, nanoseconds.
     pub min_ns: f64,
+    /// Slowest sample, nanoseconds.
     pub max_ns: f64,
     /// Optional throughput annotation (items per iteration).
     pub items_per_iter: Option<f64>,
 }
 
 impl CaseResult {
+    /// Print the criterion-style one-line report.
     pub fn print(&self) {
         let (mean, unit) = humanize(self.mean_ns);
         let (sd, sd_unit) = humanize(self.stddev_ns);
@@ -49,9 +56,13 @@ fn humanize(ns: f64) -> (f64, &'static str) {
 /// Bench runner: warms up, then samples until `target_time_s` or
 /// `max_iters`, whichever first.
 pub struct Bench {
+    /// Untimed warmup iterations before sampling.
     pub warmup_iters: u64,
+    /// Sampling budget per case, seconds.
     pub target_time_s: f64,
+    /// Hard cap on samples per case.
     pub max_iters: u64,
+    /// Results of every case run so far.
     pub results: Vec<CaseResult>,
 }
 
@@ -67,6 +78,7 @@ impl Default for Bench {
 }
 
 impl Bench {
+    /// Short sampling budget for smoke runs.
     pub fn quick() -> Self {
         Bench { warmup_iters: 1, target_time_s: 0.5, max_iters: 1000, ..Default::default() }
     }
@@ -77,7 +89,7 @@ impl Bench {
         self.run_items(name, None, &mut f)
     }
 
-    /// Like [`run`], annotating throughput as `items` per iteration.
+    /// Like [`Bench::run`], annotating throughput as `items` per iteration.
     pub fn run_with_items<T>(
         &mut self,
         name: &str,

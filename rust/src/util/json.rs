@@ -13,18 +13,26 @@ use std::fmt;
 /// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (always held as f64).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted keys — serialization is deterministic).
     Obj(BTreeMap<String, Json>),
 }
 
 /// Parse error with byte offset context.
 #[derive(Debug)]
 pub struct JsonError {
+    /// What went wrong.
     pub msg: String,
+    /// Byte offset into the input where parsing failed.
     pub offset: usize,
 }
 
@@ -37,6 +45,7 @@ impl fmt::Display for JsonError {
 impl std::error::Error for JsonError {}
 
 impl Json {
+    /// Parse a complete JSON document (rejects trailing data).
     pub fn parse(text: &str) -> Result<Json, JsonError> {
         let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
         p.skip_ws();
@@ -50,6 +59,7 @@ impl Json {
 
     // ------------------------------------------------------ typed accessors
 
+    /// Numeric value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -57,10 +67,12 @@ impl Json {
         }
     }
 
+    /// Numeric value truncated to usize, if this is a number.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|n| n as usize)
     }
 
+    /// Borrowed string value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -68,6 +80,7 @@ impl Json {
         }
     }
 
+    /// Boolean value, if this is a bool.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -75,6 +88,7 @@ impl Json {
         }
     }
 
+    /// Borrowed element slice, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -82,6 +96,7 @@ impl Json {
         }
     }
 
+    /// Borrowed key/value map, if this is an object.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(o) => Some(o),
@@ -108,6 +123,7 @@ impl Json {
         Some(out)
     }
 
+    /// `Vec<usize>` view of a numeric array (shapes, batch lists).
     pub fn as_usize_vec(&self) -> Option<Vec<usize>> {
         let arr = self.as_arr()?;
         let mut out = Vec::with_capacity(arr.len());
@@ -119,22 +135,26 @@ impl Json {
 
     // --------------------------------------------------------- construction
 
+    /// Build an object from `(key, value)` pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// Build a numeric array from an `f64` slice.
     pub fn arr_f64(vals: &[f64]) -> Json {
         Json::Arr(vals.iter().map(|v| Json::Num(*v)).collect())
     }
 
     // -------------------------------------------------------- serialization
 
+    /// Serialize without whitespace (one line).
     pub fn to_string_compact(&self) -> String {
         let mut s = String::new();
         self.write(&mut s, None, 0);
         s
     }
 
+    /// Serialize with 2-space indentation (the `results/*.json` format).
     pub fn to_string_pretty(&self) -> String {
         let mut s = String::new();
         self.write(&mut s, Some(2), 0);

@@ -24,6 +24,7 @@ fn splitmix64(state: &mut u64) -> u64 {
 }
 
 impl Rng {
+    /// Seed a new stream (SplitMix64 state expansion).
     pub fn new(seed: u64) -> Self {
         let mut sm = seed;
         Rng {
@@ -42,6 +43,7 @@ impl Rng {
         Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
     }
 
+    /// Next raw 64-bit output of the generator.
     pub fn next_u64(&mut self) -> u64 {
         let s = &mut self.s;
         let result = s[0]
@@ -75,6 +77,7 @@ impl Rng {
         lo + (hi - lo) * self.f64()
     }
 
+    /// Coin flip with success probability `p`.
     pub fn bernoulli(&mut self, p: f64) -> bool {
         self.f64() < p
     }
@@ -99,6 +102,7 @@ impl Rng {
         }
     }
 
+    /// Normal with the given mean and standard deviation.
     pub fn normal_with(&mut self, mean: f64, std: f64) -> f64 {
         mean + std * self.normal()
     }

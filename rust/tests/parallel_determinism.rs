@@ -3,13 +3,19 @@
 //! run. Every RNG stream in the simulator derives from (seed, qid), the
 //! pool returns results in index order, and the aggregation fold is
 //! serial — so JSON output must not differ in a single byte.
+//!
+//! The same contract covers the serving layer: workload arrival
+//! sequences are pure functions of (spec, seed), and the serve-sim
+//! metric blocks are byte-identical for any `--threads` value.
 
 use step::coordinator::method::Method;
 use step::harness::cells::{
     projection_scorer, run_cell, run_cell_with, run_cells, CellJob, CellOpts,
 };
+use step::harness::table5::{metrics_json, run_methods, ServingOpts};
 use step::sim::profiles::{BenchId, ModelId};
 use step::sim::tracegen::GenParams;
+use step::sim::workload::WorkloadSpec;
 
 fn opts(threads: usize) -> CellOpts {
     CellOpts {
@@ -86,5 +92,56 @@ fn cell_sharding_is_byte_identical() {
             render(&run_cells(&jobs, &gp, &sc, threads)),
             "{threads}-thread grid differs from serial"
         );
+    }
+}
+
+/// Property: workload arrival sequences are a pure function of
+/// (spec, seed) — identical across calls, sensitive to the seed, and
+/// (trivially) invariant to any thread count, since generation happens
+/// before any sharding.
+#[test]
+fn workload_generation_is_deterministic_per_seed() {
+    for spec in [
+        WorkloadSpec::poisson(0.5, 64),
+        WorkloadSpec::poisson(8.0, 64),
+        WorkloadSpec::bursty(2.0, 4, 64),
+    ] {
+        for seed in [0u64, 7, 0xDEAD_BEEF] {
+            let a = spec.generate(30, seed);
+            let b = spec.generate(30, seed);
+            assert_eq!(a, b, "same (spec, seed) must reproduce byte-identically");
+            assert_eq!(a.len(), 64);
+            assert!(a.windows(2).all(|w| w[0].t_arrive <= w[1].t_arrive));
+        }
+        assert_ne!(
+            spec.generate(30, 1),
+            spec.generate(30, 2),
+            "different seeds must give different workloads"
+        );
+    }
+}
+
+/// The serve-sim acceptance contract: `--threads 1` and `--threads 8`
+/// produce byte-identical BENCH_serving.json metric blocks. Threads only
+/// shard the (deterministic, single-threaded) per-method simulations.
+#[test]
+fn serving_metric_blocks_are_thread_invariant() {
+    let gp = GenParams::default_d64();
+    let sc = projection_scorer(&gp);
+    let base = ServingOpts {
+        model: ModelId::Qwen3_4B,
+        bench: BenchId::GpqaDiamond,
+        n_requests: 4,
+        rate_rps: 0.05,
+        n_traces: 4,
+        seed: 7,
+        threads: 1,
+        ..Default::default()
+    };
+    let serial = metrics_json(&base, &run_methods(&base, &gp, &sc)).to_string_pretty();
+    for threads in [2, 8] {
+        let opts = ServingOpts { threads, ..base.clone() };
+        let sharded = metrics_json(&opts, &run_methods(&opts, &gp, &sc)).to_string_pretty();
+        assert_eq!(serial, sharded, "{threads}-thread serving metrics differ from serial");
     }
 }
