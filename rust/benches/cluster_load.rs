@@ -1,0 +1,104 @@
+//! cargo bench --bench cluster_load — wall-clock of the multi-GPU
+//! cluster simulator plus its metric blocks, asserting (a) the metric
+//! blocks are byte-identical for any thread count and (b) the
+//! KV-pressure-aware router beats round-robin on p99 end-to-end latency
+//! for STEP under a skewed closed-loop workload at R >= 4 GPUs — the
+//! cluster-scale rendering of the paper's claim (step scores are a
+//! schedulable signal; per-trace confidence is not). Writes
+//! `results/BENCH_cluster.json`.
+//!
+//! Runs self-contained on the built-in generator defaults (no artifacts
+//! needed), so CI and fresh checkouts can benchmark the cluster layer.
+
+use std::time::Instant;
+
+use step::harness::cells::projection_scorer;
+use step::harness::table6::{metrics_json, run_grids, ClusterOpts};
+use step::harness::write_results;
+use step::sim::router::RouterKind;
+use step::sim::tracegen::GenParams;
+use step::util::json::Json;
+use step::util::pool;
+
+fn main() {
+    let gp = GenParams::default_d64();
+    let scorer = projection_scorer(&gp);
+    let opts = ClusterOpts { seed: 7, threads: 1, ..ClusterOpts::quick() };
+    assert!(opts.gpus >= 4, "the router claim is asserted at R >= 4");
+    let threads = pool::available_parallelism();
+    println!(
+        "cluster grid: {} GPUs, {} requests from {} closed-loop clients \
+         (think {}s, heavy {:.0}%), N={} traces, {:?} on {}; {} hardware threads",
+        opts.gpus,
+        opts.n_requests,
+        opts.clients,
+        opts.think_s,
+        100.0 * opts.heavy_frac,
+        opts.n_traces,
+        opts.model,
+        opts.bench.name(),
+        threads
+    );
+
+    let t0 = Instant::now();
+    let (m_serial, r_serial) = run_grids(&opts, &gp, &scorer);
+    let serial_s = t0.elapsed().as_secs_f64();
+    println!("serial:   {serial_s:.2}s");
+
+    let par_opts = ClusterOpts { threads, ..opts.clone() };
+    let t1 = Instant::now();
+    let (m_par, r_par) = run_grids(&par_opts, &gp, &scorer);
+    let parallel_s = t1.elapsed().as_secs_f64();
+    println!("parallel: {parallel_s:.2}s  ({threads} threads)");
+
+    let ser_json = metrics_json(&opts, &m_serial, &r_serial).to_string_pretty();
+    let par_json = metrics_json(&par_opts, &m_par, &r_par).to_string_pretty();
+    assert_eq!(ser_json, par_json, "cluster metric blocks must be thread-invariant");
+
+    for c in m_serial.iter().chain(&r_serial) {
+        println!(
+            "  {:>18}: {:.4} good/s  shed={:.1}%  p50={:.1}s p95={:.1}s p99={:.1}s  \
+             acc={:.1}%  preempt={} pruned={} bal={:.2}",
+            c.label,
+            c.goodput_rps,
+            100.0 * c.shed_rate,
+            c.p50_s,
+            c.p95_s,
+            c.p99_s,
+            c.acc,
+            c.preemptions,
+            c.pruned,
+            c.max_gpu_share,
+        );
+    }
+
+    let p99 = |label: &str| {
+        r_serial
+            .iter()
+            .find(|c| c.label == label)
+            .unwrap_or_else(|| panic!("router row '{label}' missing"))
+            .p99_s
+    };
+    let kv = p99(RouterKind::KvPressure.name());
+    let rr = p99(RouterKind::RoundRobin.name());
+    assert!(
+        kv < rr,
+        "kv-pressure p99 {kv} must undercut round-robin p99 {rr} under skewed \
+         closed-loop load at {} GPUs",
+        opts.gpus
+    );
+    println!(
+        "p99: kv-pressure {kv:.1}s < round-robin {rr:.1}s \
+         (cluster claim holds; metrics thread-invariant)"
+    );
+
+    let mut report = metrics_json(&opts, &m_serial, &r_serial);
+    if let Json::Obj(map) = &mut report {
+        map.insert("bench_serial_s".to_string(), Json::Num(serial_s));
+        map.insert("bench_parallel_s".to_string(), Json::Num(parallel_s));
+        map.insert("bench_threads".to_string(), Json::Num(threads as f64));
+        map.insert("identical_across_threads".to_string(), Json::Bool(true));
+    }
+    let path = write_results("BENCH_cluster", &report).expect("writing BENCH_cluster.json");
+    println!("wrote {path:?}");
+}

@@ -1,5 +1,6 @@
 //! Experiment harness: one module per paper table/figure (DESIGN.md §6),
-//! plus the beyond-the-paper serving cell ([`table5`], `step serve-sim`).
+//! plus the beyond-the-paper serving cell ([`table5`], `step serve-sim`)
+//! and the multi-GPU cluster cell ([`table6`], `step cluster-sim`).
 //!
 //! Every runner prints the regenerated rows next to the paper's published
 //! numbers (from [`paper_ref`]) and returns structured results the bench
@@ -18,6 +19,7 @@ pub mod table2;
 pub mod table3;
 pub mod table4;
 pub mod table5;
+pub mod table6;
 
 use std::path::Path;
 

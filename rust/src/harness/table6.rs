@@ -1,0 +1,512 @@
+//! Table 6 (beyond the paper) — multi-GPU cluster serving: goodput,
+//! shed rate, and cluster-wide p50/p95/p99 latency per method, plus a
+//! router-policy comparison for STEP.
+//!
+//! The serving cell ([`super::table5`]) measures one GPU; this cell is
+//! the ROADMAP's cluster-scale rendering: R per-GPU engines behind a
+//! router and admission control, driven by a closed-loop client
+//! population (saturation self-throttles, so the knee is observable).
+//! Two grids share one workload:
+//!
+//! * **methods** — CoT / SC / Slim-SC / STEP under the configured
+//!   router, the serving claim at cluster scale;
+//! * **routers** — round-robin vs least-outstanding vs kv-pressure with
+//!   STEP, the claim this layer adds: a router that can see per-GPU KV
+//!   pressure (resident blocks + score-weighted survivor demand) beats
+//!   count-based and oblivious placement on tail latency under skewed
+//!   load, because step scores are a *schedulable* signal while
+//!   per-trace confidence is not.
+//!
+//! Runs self-contained (built-in generator defaults) when artifacts are
+//! absent. Metric blocks are bit-identical for any `--threads` value:
+//! each cell's simulation is single-threaded and deterministic in the
+//! seed; threads only shard the cells.
+
+use anyhow::Result;
+
+use super::cells::projection_scorer;
+use crate::coordinator::method::Method;
+use crate::coordinator::scorer::StepScorer;
+use crate::sim::cluster::{
+    AdmissionConfig, ClusterConfig, ClusterResult, ClusterSim, ClusterWorkload,
+};
+use crate::sim::profiles::{BenchId, ModelId};
+use crate::sim::router::RouterKind;
+use crate::sim::tracegen::{GenParams, TraceGen};
+use crate::sim::workload::{ClosedLoopSpec, WorkloadSpec};
+use crate::util::json::Json;
+use crate::util::pool;
+
+/// The methods the cluster cell compares (DeepConf is unsupported by
+/// the serving engines; see `sim::serve`).
+pub const METHODS: [Method; 4] = [Method::Cot, Method::Sc, Method::SlimSc, Method::Step];
+
+/// Options of one cluster-serving run (`step cluster-sim`).
+#[derive(Debug, Clone)]
+pub struct ClusterOpts {
+    /// Number of per-GPU engines (R).
+    pub gpus: usize,
+    /// Served model.
+    pub model: ModelId,
+    /// Benchmark whose question pool the workload draws from.
+    pub bench: BenchId,
+    /// Total requests the workload offers.
+    pub n_requests: usize,
+    /// Closed-loop client population (0 = open loop at `rate_rps`).
+    pub clients: usize,
+    /// Mean closed-loop think time, seconds.
+    pub think_s: f64,
+    /// Fraction of clients pinned to the longest-trace questions.
+    pub heavy_frac: f64,
+    /// Open-loop arrival rate, requests/second (used when `clients` is
+    /// 0).
+    pub rate_rps: f64,
+    /// Open-loop burst size (`None` = Poisson arrivals).
+    pub burst: Option<usize>,
+    /// Traces per request (N).
+    pub n_traces: usize,
+    /// vLLM-style gpu_memory_utilization of each GPU's pool.
+    pub mem_util: f64,
+    /// Optional per-request KV quota as a fraction of each pool.
+    pub quota_frac: Option<f64>,
+    /// Placement policy for the methods grid.
+    pub router: RouterKind,
+    /// Bound on the cluster admission queue.
+    pub queue_cap: usize,
+    /// Per-GPU cap on outstanding requests.
+    pub max_outstanding: usize,
+    /// SLO budget for admission's early reject (`None` = off).
+    pub slo_s: Option<f64>,
+    /// Master seed.
+    pub seed: u64,
+    /// Worker threads sharding the cells (0 = all cores). Metric
+    /// output is bit-identical for any value.
+    pub threads: usize,
+}
+
+impl Default for ClusterOpts {
+    fn default() -> Self {
+        ClusterOpts {
+            gpus: 4,
+            model: ModelId::DeepSeek8B,
+            bench: BenchId::Aime25,
+            n_requests: 48,
+            clients: 12,
+            think_s: 60.0,
+            heavy_frac: 0.5,
+            rate_rps: 0.05,
+            burst: None,
+            n_traces: 16,
+            mem_util: 0.9,
+            quota_frac: None,
+            router: RouterKind::KvPressure,
+            queue_cap: 64,
+            max_outstanding: 8,
+            slo_s: None,
+            seed: 0,
+            threads: 0,
+        }
+    }
+}
+
+impl ClusterOpts {
+    /// Quick scale for benches / smoke tests: 4 GPUs under a skewed
+    /// closed loop with real memory pressure.
+    pub fn quick() -> Self {
+        ClusterOpts {
+            model: ModelId::Phi4_14B,
+            bench: BenchId::Hmmt2425,
+            n_requests: 24,
+            clients: 10,
+            think_s: 45.0,
+            n_traces: 8,
+            mem_util: 0.5,
+            max_outstanding: 4,
+            ..Default::default()
+        }
+    }
+
+    /// The workload this option set describes.
+    pub fn workload(&self) -> ClusterWorkload {
+        if self.clients > 0 {
+            ClusterWorkload::Closed(ClosedLoopSpec::skewed(
+                self.clients,
+                self.think_s,
+                self.n_requests,
+                self.heavy_frac,
+            ))
+        } else {
+            ClusterWorkload::Open(match self.burst {
+                Some(b) => WorkloadSpec::bursty(self.rate_rps, b, self.n_requests),
+                None => WorkloadSpec::poisson(self.rate_rps, self.n_requests),
+            })
+        }
+    }
+
+    /// The cluster configuration for one (method, router) cell.
+    pub fn config(&self, method: Method, router: RouterKind) -> ClusterConfig {
+        let mut c = ClusterConfig::new(
+            self.gpus,
+            self.model,
+            self.bench,
+            method,
+            self.n_traces,
+            self.workload(),
+        );
+        c.mem_util = self.mem_util;
+        c.seed = self.seed;
+        c.quota_frac = self.quota_frac;
+        c.router = router;
+        c.admission = AdmissionConfig {
+            queue_cap: self.queue_cap,
+            max_outstanding_per_gpu: self.max_outstanding.max(1),
+            slo_s: self.slo_s,
+        };
+        c
+    }
+}
+
+/// Aggregated metrics of one cluster cell (a method or router row).
+#[derive(Debug, Clone)]
+pub struct ClusterCell {
+    /// Row label: the method's name in the methods grid, the router's
+    /// in the routers grid.
+    pub label: String,
+    /// Completed requests per second of cluster makespan.
+    pub goodput_rps: f64,
+    /// Fraction of offered requests shed by admission.
+    pub shed_rate: f64,
+    /// Cluster-wide median end-to-end latency, seconds.
+    pub p50_s: f64,
+    /// Cluster-wide 95th-percentile latency, seconds.
+    pub p95_s: f64,
+    /// Cluster-wide 99th-percentile latency, seconds.
+    pub p99_s: f64,
+    /// Cluster-wide median time-to-first-vote, seconds.
+    pub ttfv_p50_s: f64,
+    /// Accuracy over completed requests, percent.
+    pub acc: f64,
+    /// Mean generated tokens per completed request, thousands.
+    pub tok_k: f64,
+    /// Total preemption events across GPUs.
+    pub preemptions: u64,
+    /// Total pruned traces across GPUs.
+    pub pruned: u64,
+    /// Requests shed by admission.
+    pub shed: u64,
+    /// Peak admission-queue depth.
+    pub queue_peak: u64,
+    /// Largest share of completions a single GPU took (placement
+    /// balance: 1/R is perfect, 1.0 is a single hot GPU).
+    pub max_gpu_share: f64,
+    /// Largest per-GPU peak KV-block usage fraction.
+    pub peak_block_frac: f64,
+}
+
+impl ClusterCell {
+    /// Condense one cluster run into a report row.
+    pub fn from_result(label: &str, r: &ClusterResult) -> ClusterCell {
+        let n = r.outcomes.len().max(1) as f64;
+        let correct = r.outcomes.iter().filter(|o| o.correct).count() as f64;
+        let tok: f64 = r.outcomes.iter().map(|o| o.gen_tokens as f64).sum();
+        let total: usize = r.per_gpu_requests.iter().sum();
+        let max_share = if total == 0 {
+            0.0
+        } else {
+            r.per_gpu_requests.iter().copied().max().unwrap_or(0) as f64 / total as f64
+        };
+        ClusterCell {
+            label: label.to_string(),
+            goodput_rps: r.goodput_rps(),
+            shed_rate: r.counters.shed_rate(),
+            p50_s: r.latency.percentile_s(50.0),
+            p95_s: r.latency.percentile_s(95.0),
+            p99_s: r.latency.percentile_s(99.0),
+            ttfv_p50_s: r.ttfv.percentile_s(50.0),
+            acc: 100.0 * correct / n,
+            tok_k: tok / n / 1000.0,
+            preemptions: r.engine_counters.preemptions,
+            pruned: r.engine_counters.pruned,
+            shed: r.counters.shed,
+            queue_peak: r.counters.queue_peak,
+            max_gpu_share: max_share,
+            peak_block_frac: r
+                .per_gpu_peak_block_frac
+                .iter()
+                .copied()
+                .fold(0.0f64, f64::max),
+        }
+    }
+
+    /// Serialize as one metric block of `BENCH_cluster.json`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("label", Json::Str(self.label.clone())),
+            ("goodput_rps", Json::Num(self.goodput_rps)),
+            ("shed_rate", Json::Num(self.shed_rate)),
+            ("p50_s", Json::Num(self.p50_s)),
+            ("p95_s", Json::Num(self.p95_s)),
+            ("p99_s", Json::Num(self.p99_s)),
+            ("ttfv_p50_s", Json::Num(self.ttfv_p50_s)),
+            ("acc", Json::Num(self.acc)),
+            ("tok_k", Json::Num(self.tok_k)),
+            ("preemptions", Json::Num(self.preemptions as f64)),
+            ("pruned", Json::Num(self.pruned as f64)),
+            ("shed", Json::Num(self.shed as f64)),
+            ("queue_peak", Json::Num(self.queue_peak as f64)),
+            ("max_gpu_share", Json::Num(self.max_gpu_share)),
+            ("peak_block_frac", Json::Num(self.peak_block_frac)),
+        ])
+    }
+}
+
+/// Run one (method, router) cluster cell.
+pub fn run_cell(
+    method: Method,
+    router: RouterKind,
+    label: &str,
+    gen_params: &GenParams,
+    scorer: &StepScorer,
+    opts: &ClusterOpts,
+) -> ClusterCell {
+    let cfg = opts.config(method, router);
+    let gen = TraceGen::new(opts.model, opts.bench, gen_params.clone(), opts.seed ^ 0x5EED);
+    let r = ClusterSim::new(&cfg, &gen, scorer).run();
+    ClusterCell::from_result(label, &r)
+}
+
+/// Run both grids — methods under `opts.router`, then every router with
+/// STEP — as one job list sharded across up to `opts.threads` workers.
+/// Each cell is deterministic and single-threaded, and results return
+/// in job order, so the output is bit-identical for any thread count.
+pub fn run_grids(
+    opts: &ClusterOpts,
+    gen_params: &GenParams,
+    scorer: &StepScorer,
+) -> (Vec<ClusterCell>, Vec<ClusterCell>) {
+    let jobs: Vec<(Method, RouterKind, String)> = METHODS
+        .iter()
+        .map(|&m| (m, opts.router, m.name().to_string()))
+        .chain(
+            RouterKind::ALL
+                .iter()
+                .map(|&r| (Method::Step, r, r.name().to_string())),
+        )
+        .collect();
+    let threads = pool::resolve_threads(opts.threads).min(jobs.len());
+    let cells: Vec<ClusterCell> = if threads <= 1 {
+        jobs.iter()
+            .map(|(m, r, label)| run_cell(*m, *r, label, gen_params, scorer, opts))
+            .collect()
+    } else {
+        pool::parallel_map(threads, jobs.len(), |i| {
+            let (m, r, label) = &jobs[i];
+            run_cell(*m, *r, label, gen_params, scorer, opts)
+        })
+    };
+    let mut cells = cells;
+    let routers = cells.split_off(METHODS.len());
+    (cells, routers)
+}
+
+/// Assemble the `BENCH_cluster.json` payload: the workload config plus
+/// the two metric-block grids. Pure function of the cells and options —
+/// no timestamps, no thread counts — so reruns compare byte-for-byte.
+pub fn metrics_json(
+    opts: &ClusterOpts,
+    methods: &[ClusterCell],
+    routers: &[ClusterCell],
+) -> Json {
+    let opt_num = |v: Option<f64>| match v {
+        Some(x) => Json::Num(x),
+        None => Json::Null,
+    };
+    let burst = match opts.burst {
+        Some(b) => Json::Num(b as f64),
+        None => Json::Null,
+    };
+    Json::obj(vec![
+        (
+            "config",
+            Json::obj(vec![
+                ("gpus", Json::Num(opts.gpus as f64)),
+                ("model", Json::Str(format!("{:?}", opts.model))),
+                ("bench", Json::Str(opts.bench.name().to_string())),
+                ("n_requests", Json::Num(opts.n_requests as f64)),
+                ("clients", Json::Num(opts.clients as f64)),
+                ("think_s", Json::Num(opts.think_s)),
+                ("heavy_frac", Json::Num(opts.heavy_frac)),
+                ("rate_rps", Json::Num(opts.rate_rps)),
+                ("burst", burst),
+                ("n_traces", Json::Num(opts.n_traces as f64)),
+                ("mem_util", Json::Num(opts.mem_util)),
+                ("quota_frac", opt_num(opts.quota_frac)),
+                ("router", Json::Str(opts.router.name().to_string())),
+                ("queue_cap", Json::Num(opts.queue_cap as f64)),
+                ("max_outstanding", Json::Num(opts.max_outstanding as f64)),
+                ("slo_s", opt_num(opts.slo_s)),
+                ("seed", Json::Num(opts.seed as f64)),
+            ]),
+        ),
+        ("methods", Json::Arr(methods.iter().map(|c| c.to_json()).collect())),
+        ("routers", Json::Arr(routers.iter().map(|c| c.to_json()).collect())),
+    ])
+}
+
+fn print_grid(title: &str, cells: &[ClusterCell]) {
+    println!("{title}");
+    println!(
+        "{:>18} | {:>7} | {:>6} | {:>8} {:>8} {:>8} | {:>8} | {:>6} | {:>8} {:>7} | {:>5}",
+        "row", "good/s", "shed%", "p50(s)", "p95(s)", "p99(s)", "ttfv50", "acc%", "preempt",
+        "pruned", "bal"
+    );
+    for c in cells {
+        println!(
+            "{:>18} | {:>7.4} | {:>6.1} | {:>8.1} {:>8.1} {:>8.1} | {:>8.1} | {:>6.1} | \
+             {:>8} {:>7} | {:>5.2}",
+            c.label,
+            c.goodput_rps,
+            100.0 * c.shed_rate,
+            c.p50_s,
+            c.p95_s,
+            c.p99_s,
+            c.ttfv_p50_s,
+            c.acc,
+            c.preemptions,
+            c.pruned,
+            c.max_gpu_share,
+        );
+    }
+}
+
+/// `step cluster-sim`: run both grids, print the tables, write
+/// `results/BENCH_cluster.json`. Uses the trained scorer bundle when
+/// artifacts exist and falls back to the built-in generator defaults on
+/// a fresh checkout.
+pub fn run(opts: &ClusterOpts) -> Result<(Vec<ClusterCell>, Vec<ClusterCell>)> {
+    let (gen_params, scorer) = match super::load_sim_bundle(&super::artifact_dir()) {
+        Ok(bundle) => bundle,
+        Err(_) => {
+            println!("(no artifacts found — using built-in generator defaults)");
+            let gp = GenParams::default_d64();
+            let sc = projection_scorer(&gp);
+            (gp, sc)
+        }
+    };
+    let (methods, routers) = run_grids(opts, &gen_params, &scorer);
+
+    let loop_desc = if opts.clients > 0 {
+        format!(
+            "closed loop: {} clients, think {}s, heavy {:.0}%",
+            opts.clients,
+            opts.think_s,
+            100.0 * opts.heavy_frac
+        )
+    } else {
+        format!("open loop @ {} rps", opts.rate_rps)
+    };
+    println!(
+        "## Table 6: cluster serving ({} GPUs, {:?}, {}, N={}, {} req, {})",
+        opts.gpus,
+        opts.model,
+        opts.bench.name(),
+        opts.n_traces,
+        opts.n_requests,
+        loop_desc,
+    );
+    print_grid(
+        &format!("-- methods ({} router)", opts.router.name()),
+        &methods,
+    );
+    print_grid("-- routers (STEP)", &routers);
+
+    let p99 = |cells: &[ClusterCell], label: &str| {
+        cells.iter().find(|c| c.label == label).map(|c| c.p99_s)
+    };
+    if let (Some(kv), Some(rr)) = (
+        p99(&routers, RouterKind::KvPressure.name()),
+        p99(&routers, RouterKind::RoundRobin.name()),
+    ) {
+        println!(
+            "  p99 kv-pressure {kv:.1}s vs round-robin {rr:.1}s — {}",
+            if kv < rr {
+                "KV-aware placement holds the tail (the cluster-scale claim)"
+            } else {
+                "WARNING: kv-pressure tail not below round-robin at this load"
+            }
+        );
+    }
+    let json = metrics_json(opts, &methods, &routers);
+    // Harness-convention artifact plus the canonical BENCH_cluster.json
+    // metric blocks (also written by the cluster_load bench at its own
+    // quick config — last writer wins; the embedded config block
+    // records which).
+    super::write_results("table6_cluster", &json)?;
+    let path = super::write_results("BENCH_cluster", &json)?;
+    println!("wrote {path:?} (and results/table6_cluster.json)");
+    Ok((methods, routers))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> ClusterOpts {
+        ClusterOpts {
+            gpus: 2,
+            model: ModelId::Qwen3_4B,
+            bench: BenchId::GpqaDiamond,
+            n_requests: 4,
+            clients: 2,
+            think_s: 20.0,
+            heavy_frac: 0.5,
+            n_traces: 4,
+            seed: 3,
+            threads: 1,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn grids_cover_methods_and_routers_in_order() {
+        let gp = GenParams::default_d64();
+        let sc = projection_scorer(&gp);
+        let (methods, routers) = run_grids(&tiny(), &gp, &sc);
+        assert_eq!(methods.len(), METHODS.len());
+        for (c, &m) in methods.iter().zip(&METHODS) {
+            assert_eq!(c.label, m.name());
+            assert!(c.goodput_rps > 0.0, "{m:?}");
+            assert!(c.p50_s <= c.p95_s && c.p95_s <= c.p99_s, "{m:?}");
+            assert!((0.0..=100.0).contains(&c.acc), "{m:?}");
+            assert!((0.0..=1.0).contains(&c.max_gpu_share), "{m:?}");
+        }
+        assert_eq!(routers.len(), RouterKind::ALL.len());
+        for (c, &r) in routers.iter().zip(&RouterKind::ALL) {
+            assert_eq!(c.label, r.name());
+            assert!(c.goodput_rps > 0.0, "{r:?}");
+        }
+    }
+
+    #[test]
+    fn metric_block_is_deterministic() {
+        let gp = GenParams::default_d64();
+        let sc = projection_scorer(&gp);
+        let opts = tiny();
+        let (m1, r1) = run_grids(&opts, &gp, &sc);
+        let (m2, r2) = run_grids(&opts, &gp, &sc);
+        assert_eq!(
+            metrics_json(&opts, &m1, &r1).to_string_pretty(),
+            metrics_json(&opts, &m2, &r2).to_string_pretty()
+        );
+    }
+
+    #[test]
+    fn open_loop_opts_build_open_workload() {
+        let mut opts = tiny();
+        opts.clients = 0;
+        match opts.workload() {
+            ClusterWorkload::Open(w) => assert_eq!(w.n_requests, 4),
+            ClusterWorkload::Closed(_) => panic!("clients=0 must mean open loop"),
+        }
+    }
+}

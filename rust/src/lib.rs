@@ -5,8 +5,11 @@
 //! Layer map (see ARCHITECTURE.md for the full tour):
 //!
 //! * [`sim`] — discrete-event engines: the single-question engine behind
-//!   every paper table/figure, and the multi-request serving simulator
-//!   (`step serve-sim`) with open-loop workloads and continuous batching.
+//!   every paper table/figure, the multi-request serving simulator
+//!   (`step serve-sim`) with open-loop workloads and continuous batching,
+//!   and the multi-GPU cluster simulator (`step cluster-sim`) with
+//!   routing policies, admission control, and closed-loop workloads —
+//!   all sharing one scheduler core (`sim::sched`).
 //! * [`kvcache`] — PagedAttention block accounting: allocator, per-
 //!   sequence block tables, and the shared pool with per-request quotas.
 //! * [`coordinator`] — the paper's contribution: step scoring, trace and

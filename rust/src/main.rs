@@ -5,8 +5,9 @@
 //! (no clap in the offline vendor set).
 
 use anyhow::{bail, Result};
-use step::harness::{self, table5::ServingOpts, HarnessOpts};
+use step::harness::{self, table5::ServingOpts, table6::ClusterOpts, HarnessOpts};
 use step::sim::profiles::{BenchId, ModelId};
+use step::sim::router::RouterKind;
 
 const USAGE: &str = "step — Step-level Trace Evaluation and Pruning (paper reproduction)
 
@@ -29,7 +30,13 @@ COMMANDS (experiments; see DESIGN.md §6):
                 continuous batching of concurrent requests against one
                 shared KV pool; reports throughput, p50/p95/p99 latency,
                 time-to-first-vote, accuracy per method
-    all         Everything above at full scale (except serve-sim)
+    cluster-sim Multi-GPU cluster serving (beyond the paper): R per-GPU
+                engines behind a router (round-robin / least-outstanding
+                / kv-pressure) with admission control and closed-loop
+                workloads; reports goodput, shed rate, cluster-wide
+                p50/p95/p99 per method and per router
+    all         Everything above at full scale (except serve-sim and
+                cluster-sim)
 
 OPTIONS:
     --questions N    cap questions per benchmark (default: paper-faithful)
@@ -51,10 +58,26 @@ SERVE-SIM OPTIONS (plus --seed/--threads/--traces above):
     --quota-frac F   per-request KV quota as a fraction of the pool
                      (default: none — pool-bound, cross-request pruning)
 
+CLUSTER-SIM OPTIONS (plus the serve-sim options above):
+    --gpus R             per-GPU engines in the cluster (default 4)
+    --clients C          closed-loop client population; 0 = open loop at
+                         --rate (default 12)
+    --think S            mean closed-loop think time, seconds (default 60)
+    --heavy-frac F       fraction of clients pinned to the longest-trace
+                         questions (default 0.5)
+    --router P           round-robin | least-outstanding | kv-pressure
+                         (default kv-pressure; the routers grid always
+                         compares all three under STEP)
+    --queue-cap N        cluster admission-queue bound (default 64)
+    --max-outstanding N  per-GPU cap on live requests (default 8)
+    --slo S              SLO-aware early-reject budget, seconds
+                         (default: off)
+
 Artifacts are read from $STEP_ARTIFACTS_DIR (default ./artifacts); run
 `make artifacts` first. Results are written to $STEP_RESULTS_DIR
-(default ./results). serve-sim falls back to built-in generator defaults
-when artifacts are absent and writes results/BENCH_serving.json.";
+(default ./results). serve-sim and cluster-sim fall back to built-in
+generator defaults when artifacts are absent and write
+results/BENCH_serving.json / results/BENCH_cluster.json.";
 
 fn parse_opts(args: &[String]) -> Result<HarnessOpts> {
     let mut opts = HarnessOpts::default();
@@ -149,6 +172,95 @@ fn parse_serving_opts(args: &[String]) -> Result<ServingOpts> {
     Ok(opts)
 }
 
+fn parse_cluster_opts(args: &[String]) -> Result<ClusterOpts> {
+    let mut opts = ClusterOpts::default();
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--gpus" => {
+                opts.gpus = need_val(args, i)?.parse()?;
+                i += 2;
+            }
+            "--clients" => {
+                opts.clients = need_val(args, i)?.parse()?;
+                i += 2;
+            }
+            "--think" => {
+                opts.think_s = need_val(args, i)?.parse()?;
+                i += 2;
+            }
+            "--heavy-frac" => {
+                opts.heavy_frac = need_val(args, i)?.parse()?;
+                i += 2;
+            }
+            "--router" => {
+                let name = need_val(args, i)?;
+                opts.router = RouterKind::parse(name)
+                    .ok_or_else(|| anyhow::anyhow!("unknown router '{name}'"))?;
+                i += 2;
+            }
+            "--queue-cap" => {
+                opts.queue_cap = need_val(args, i)?.parse()?;
+                i += 2;
+            }
+            "--max-outstanding" => {
+                opts.max_outstanding = need_val(args, i)?.parse()?;
+                i += 2;
+            }
+            "--slo" => {
+                opts.slo_s = Some(need_val(args, i)?.parse()?);
+                i += 2;
+            }
+            "--requests" => {
+                opts.n_requests = need_val(args, i)?.parse()?;
+                i += 2;
+            }
+            "--rate" => {
+                opts.rate_rps = need_val(args, i)?.parse()?;
+                i += 2;
+            }
+            "--burst" => {
+                opts.burst = Some(need_val(args, i)?.parse()?);
+                i += 2;
+            }
+            "--traces" => {
+                opts.n_traces = need_val(args, i)?.parse()?;
+                i += 2;
+            }
+            "--seed" => {
+                opts.seed = need_val(args, i)?.parse()?;
+                i += 2;
+            }
+            "--threads" => {
+                opts.threads = need_val(args, i)?.parse()?;
+                i += 2;
+            }
+            "--model" => {
+                let name = need_val(args, i)?;
+                opts.model = ModelId::parse(name)
+                    .ok_or_else(|| anyhow::anyhow!("unknown model '{name}'"))?;
+                i += 2;
+            }
+            "--bench" => {
+                let name = need_val(args, i)?;
+                opts.bench = BenchId::parse(name)
+                    .ok_or_else(|| anyhow::anyhow!("unknown bench '{name}'"))?;
+                i += 2;
+            }
+            "--mem-util" => {
+                opts.mem_util = need_val(args, i)?.parse()?;
+                i += 2;
+            }
+            "--quota-frac" => {
+                opts.quota_frac = Some(need_val(args, i)?.parse()?);
+                i += 2;
+            }
+            other => bail!("unknown cluster-sim option '{other}'\n\n{USAGE}"),
+        }
+    }
+    Ok(opts)
+}
+
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = args.first() else {
@@ -158,6 +270,11 @@ fn main() -> Result<()> {
     if cmd == "serve-sim" {
         let sopts = parse_serving_opts(&args[1..])?;
         harness::table5::run(&sopts)?;
+        return Ok(());
+    }
+    if cmd == "cluster-sim" {
+        let copts = parse_cluster_opts(&args[1..])?;
+        harness::table6::run(&copts)?;
         return Ok(());
     }
     let opts = parse_opts(&args[1..])?;

@@ -1,6 +1,9 @@
 //! Serving metrics: latency histograms, streaming percentile sketches,
-//! counters, and the wait/decode timeline recorder behind Table 3 /
-//! Fig 2c-style reports and the `table5_serving` SLO report.
+//! engine and cluster counters, and the wait/decode timeline recorder
+//! behind Table 3 / Fig 2c-style reports, the `table5_serving` SLO
+//! report, and the `table6_cluster` goodput/shed-rate report (the
+//! cluster merges its per-GPU [`LatencySketch`]es bucket-wise into the
+//! cluster-wide percentiles).
 
 pub mod sketch;
 
@@ -99,6 +102,19 @@ pub struct EngineCounters {
 }
 
 impl EngineCounters {
+    /// Fold another engine's counters into this one (the cluster
+    /// simulator aggregates its per-GPU engines this way).
+    pub fn add(&mut self, other: &EngineCounters) {
+        self.requests += other.requests;
+        self.generated_tokens += other.generated_tokens;
+        self.decode_iterations += other.decode_iterations;
+        self.preemptions += other.preemptions;
+        self.resumes += other.resumes;
+        self.pruned += other.pruned;
+        self.early_stopped += other.early_stopped;
+        self.step_scores += other.step_scores;
+    }
+
     /// One-line `key=value` report of every counter.
     pub fn report(&self) -> String {
         format!(
@@ -112,6 +128,54 @@ impl EngineCounters {
             self.pruned,
             self.early_stopped,
             self.step_scores,
+        )
+    }
+}
+
+/// Cluster-level request accounting: what the admission layer did with
+/// every offered request. Conservation law (asserted by
+/// `tests/prop_invariants.rs`): `offered == placed + shed`, and at the
+/// end of a run `completed == placed`.
+#[derive(Debug, Clone, Default)]
+pub struct ClusterCounters {
+    /// Arrivals presented to admission control.
+    pub offered: u64,
+    /// Requests routed onto some GPU (directly or after queueing).
+    pub placed: u64,
+    /// Requests rejected by admission control (bounded queue overflow
+    /// or SLO-aware early reject).
+    pub shed: u64,
+    /// Requests that ran to completion.
+    pub completed: u64,
+    /// Peak depth of the cluster-wide admission queue.
+    pub queue_peak: u64,
+}
+
+impl ClusterCounters {
+    /// Fraction of offered requests shed (0 when nothing was offered).
+    pub fn shed_rate(&self) -> f64 {
+        if self.offered == 0 {
+            0.0
+        } else {
+            self.shed as f64 / self.offered as f64
+        }
+    }
+
+    /// Completed requests per second of cluster makespan — the serving
+    /// goodput (sheds do not count).
+    pub fn goodput_rps(&self, makespan_s: f64) -> f64 {
+        if makespan_s <= 0.0 {
+            0.0
+        } else {
+            self.completed as f64 / makespan_s
+        }
+    }
+
+    /// One-line `key=value` report of every counter.
+    pub fn report(&self) -> String {
+        format!(
+            "offered={} placed={} shed={} completed={} queue_peak={}",
+            self.offered, self.placed, self.shed, self.completed, self.queue_peak,
         )
     }
 }
@@ -192,5 +256,25 @@ mod tests {
         c.pruned = 5;
         let r = c.report();
         assert!(r.contains("requests=2") && r.contains("pruned=5"));
+    }
+
+    #[test]
+    fn engine_counters_add_is_fieldwise() {
+        let mut a = EngineCounters { requests: 1, pruned: 2, ..Default::default() };
+        let b = EngineCounters { requests: 3, preemptions: 7, ..Default::default() };
+        a.add(&b);
+        assert_eq!(a.requests, 4);
+        assert_eq!(a.pruned, 2);
+        assert_eq!(a.preemptions, 7);
+    }
+
+    #[test]
+    fn cluster_counters_rates() {
+        let c = ClusterCounters { offered: 10, placed: 8, shed: 2, completed: 8, queue_peak: 3 };
+        assert!((c.shed_rate() - 0.2).abs() < 1e-12);
+        assert!((c.goodput_rps(4.0) - 2.0).abs() < 1e-12);
+        assert_eq!(ClusterCounters::default().shed_rate(), 0.0);
+        assert_eq!(c.goodput_rps(0.0), 0.0);
+        assert!(c.report().contains("shed=2"));
     }
 }

@@ -1,0 +1,821 @@
+//! Multi-GPU cluster serving simulator: R per-GPU engines, a routing
+//! layer, and admission control under one global clock.
+//!
+//! The serving layer ([`crate::sim::serve`]) models one GPU; this
+//! module scales it out. A [`ClusterSim`] drives `R` independent
+//! [`ServeEngine`]s — each with its own [`crate::kvcache::SharedKvPool`]
+//! — and a cluster front door:
+//!
+//! ```text
+//!  arrivals ──▶ admission ──▶ router ──▶ engine[g].submit(...)
+//!  (open /      (bounded      (round-robin /
+//!   closed       queue, SLO    least-outstanding /
+//!   loop)        early-       kv-pressure)
+//!                reject)
+//! ```
+//!
+//! **Event order.** Arrivals (open-loop pregenerated, or closed-loop
+//! completion-driven) live in one global min-heap keyed by
+//! `(time, issue sequence)`. Before each arrival is offered, every
+//! engine runs forward to the arrival instant; completions harvested on
+//! the way spawn the closed-loop clients' next requests and unblock the
+//! admission queue. Between interaction points the engines are
+//! *independent* — that is what makes R of them cheap — and the same
+//! quantization the single-GPU driver applies to arrivals holds here: a
+//! request is admitted at the first engine event at-or-after its
+//! arrival instant. After the last scheduled arrival the loop steps the
+//! busy engine with the smallest local clock one event at a time, so
+//! completion-driven interactions (queue drains, closed-loop spawns)
+//! stay in near-global time order.
+//!
+//! **Admission control.** A bounded cluster-wide FIFO queue holds
+//! requests no eligible GPU can take (every GPU at its
+//! outstanding-request quota). Arrivals beyond the queue bound are shed;
+//! with an SLO configured, an arrival that would queue is shed early
+//! when the queued-ahead KV footprint over the cluster's measured drain
+//! rate already exceeds the SLO — the *expected trace footprint* of a
+//! request (N × the benchmark's expected trace length, scaled by the
+//! question's difficulty multiplier) is what both the estimate and the
+//! kv-pressure router consult. A shed closed-loop client re-enters its
+//! think state and issues fresh work later, so the configured request
+//! budget is always fully offered.
+//!
+//! Determinism: engines are advanced and harvested in fixed GPU order,
+//! the heap's tie-break is the issue sequence, and every random draw
+//! derives from the config seed — one run is bit-identical across
+//! processes and `--threads` values (threads only shard whole cluster
+//! cells in the harness).
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+
+use crate::coordinator::method::{Method, MethodParams};
+use crate::coordinator::scorer::StepScorer;
+use crate::metrics::{ClusterCounters, EngineCounters, LatencySketch};
+use crate::sim::des::ScoreAgg;
+use crate::sim::profiles::{BenchId, ModelId};
+use crate::sim::router::{GpuView, RouteRequest, RouterKind, RouterPolicy};
+use crate::sim::serve::{RequestOutcome, ServeEngine, ServeSimConfig};
+use crate::sim::tracegen::TraceGen;
+use crate::sim::workload::{Arrival, ClosedLoopClients, ClosedLoopSpec, WorkloadSpec};
+
+/// The arrival regime driving a cluster run.
+#[derive(Debug, Clone)]
+pub enum ClusterWorkload {
+    /// Open loop: rate-driven arrivals, pregenerated from the spec.
+    Open(WorkloadSpec),
+    /// Closed loop: a fixed client population whose next arrivals are
+    /// completion-driven (saturation self-throttles).
+    Closed(ClosedLoopSpec),
+}
+
+impl ClusterWorkload {
+    /// Total requests the workload will offer.
+    pub fn n_requests(&self) -> usize {
+        match self {
+            ClusterWorkload::Open(w) => w.n_requests,
+            ClusterWorkload::Closed(c) => c.n_requests,
+        }
+    }
+}
+
+/// Admission-control policy of the cluster front door.
+#[derive(Debug, Clone, Copy)]
+pub struct AdmissionConfig {
+    /// Bound on the cluster-wide admission queue; arrivals that would
+    /// push past it are shed.
+    pub queue_cap: usize,
+    /// Per-GPU cap on outstanding (incomplete) requests; a GPU at the
+    /// cap is ineligible for placement until a request completes.
+    pub max_outstanding_per_gpu: usize,
+    /// SLO-aware early reject: an arrival that would queue is shed when
+    /// the queued-ahead footprint over the measured drain rate exceeds
+    /// this budget (seconds). `None` disables the early reject.
+    pub slo_s: Option<f64>,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig { queue_cap: 64, max_outstanding_per_gpu: 8, slo_s: None }
+    }
+}
+
+/// Configuration of one cluster serving simulation.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// Number of per-GPU engines (R).
+    pub gpus: usize,
+    /// Served model (every GPU runs the same model).
+    pub model: ModelId,
+    /// Benchmark whose question pool the workload draws from.
+    pub bench: BenchId,
+    /// Test-time-scaling method driving every engine's scheduler.
+    pub method: Method,
+    /// Traces per request (N); CoT forces 1.
+    pub n_traces: usize,
+    /// Method hyper-parameters (paper Appendix B.3).
+    pub params: MethodParams,
+    /// vLLM-style gpu_memory_utilization of each GPU's pool.
+    pub mem_util: f64,
+    /// PagedAttention block size in tokens.
+    pub block_size: usize,
+    /// Master seed; every stream derives from it.
+    pub seed: u64,
+    /// Step-score aggregation for pruning/voting (paper: running mean).
+    pub score_agg: ScoreAgg,
+    /// Optional per-request KV quota as a fraction of each GPU's pool.
+    pub quota_frac: Option<f64>,
+    /// The arrival regime.
+    pub workload: ClusterWorkload,
+    /// Placement policy.
+    pub router: RouterKind,
+    /// Admission-control policy.
+    pub admission: AdmissionConfig,
+}
+
+impl ClusterConfig {
+    /// Paper-default cluster configuration for a (model, bench, method)
+    /// under `workload` on `gpus` GPUs with the kv-pressure router.
+    pub fn new(
+        gpus: usize,
+        model: ModelId,
+        bench: BenchId,
+        method: Method,
+        n_traces: usize,
+        workload: ClusterWorkload,
+    ) -> ClusterConfig {
+        ClusterConfig {
+            gpus: gpus.max(1),
+            model,
+            bench,
+            method,
+            n_traces,
+            params: MethodParams::default(),
+            mem_util: 0.9,
+            block_size: 16,
+            seed: 0,
+            score_agg: ScoreAgg::Mean,
+            quota_frac: None,
+            workload,
+            router: RouterKind::KvPressure,
+            admission: AdmissionConfig::default(),
+        }
+    }
+
+    /// The per-GPU engine configuration this cluster instantiates R
+    /// times (the engine ignores the workload field — the cluster
+    /// submits arrivals itself).
+    fn engine_config(&self) -> ServeSimConfig {
+        let mut c = ServeSimConfig::new(
+            self.model,
+            self.bench,
+            self.method,
+            self.n_traces,
+            WorkloadSpec::poisson(1.0, 0),
+        );
+        c.params = self.params.clone();
+        c.mem_util = self.mem_util;
+        c.block_size = self.block_size;
+        c.seed = self.seed;
+        c.score_agg = self.score_agg;
+        c.quota_frac = self.quota_frac;
+        c
+    }
+}
+
+/// What admission ultimately did with one request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ReqDisposition {
+    /// Arrived or waiting in the cluster admission queue.
+    Queued,
+    /// Submitted to a GPU engine (running or complete).
+    Placed,
+    /// Rejected by admission control.
+    Shed,
+}
+
+/// Cluster-side bookkeeping per issued request.
+struct ReqMeta {
+    qid: usize,
+    t_arrive: f64,
+    /// Issuing closed-loop client (`usize::MAX` for open loop).
+    client: usize,
+    disposition: ReqDisposition,
+    expected_blocks: f64,
+}
+
+/// A scheduled arrival in the global heap, min-ordered by
+/// `(time, issue sequence)`. Times are non-negative finite f64s, so
+/// their IEEE-754 bit patterns order identically to the values.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct Pending {
+    t_bits: u64,
+    seq: u64,
+    rid: usize,
+}
+
+impl Ord for Pending {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.t_bits, self.seq).cmp(&(other.t_bits, other.seq))
+    }
+}
+
+impl PartialOrd for Pending {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Aggregate result of one cluster serving simulation.
+#[derive(Debug, Clone)]
+pub struct ClusterResult {
+    /// One outcome per *completed* request, sorted by cluster-global
+    /// request id (shed requests have no outcome).
+    pub outcomes: Vec<RequestOutcome>,
+    /// Request ids admission shed, in arrival order.
+    pub shed_rids: Vec<usize>,
+    /// Wall-clock from the first arrival to the last completion.
+    pub makespan_s: f64,
+    /// Cluster-wide end-to-end latency sketch (the per-GPU sketches
+    /// merged bucket-wise).
+    pub latency: LatencySketch,
+    /// Cluster-wide time-to-first-vote sketch.
+    pub ttfv: LatencySketch,
+    /// Admission/goodput accounting.
+    pub counters: ClusterCounters,
+    /// Per-GPU engine counters summed across the cluster.
+    pub engine_counters: EngineCounters,
+    /// Requests served per GPU.
+    pub per_gpu_requests: Vec<usize>,
+    /// Peak outstanding requests observed per GPU.
+    pub per_gpu_peak_outstanding: Vec<usize>,
+    /// Peak KV-block usage fraction per GPU.
+    pub per_gpu_peak_block_frac: Vec<f64>,
+}
+
+impl ClusterResult {
+    /// Completed requests per second of cluster makespan.
+    pub fn goodput_rps(&self) -> f64 {
+        self.counters.goodput_rps(self.makespan_s)
+    }
+}
+
+/// The cluster simulation: a configuration bound to a trace generator
+/// and step scorer. [`run`](ClusterSim::run) owns the global event
+/// loop.
+pub struct ClusterSim<'a> {
+    cfg: &'a ClusterConfig,
+    gen: &'a TraceGen,
+    scorer: &'a StepScorer,
+}
+
+/// Everything the event loop mutates, bundled so helper methods can
+/// borrow it disjointly from the engines.
+struct FrontDoor {
+    meta: Vec<ReqMeta>,
+    pending: BinaryHeap<Reverse<Pending>>,
+    seq: u64,
+    queue: VecDeque<usize>,
+    clients: Option<ClosedLoopClients>,
+    router: Box<dyn RouterPolicy>,
+    counters: ClusterCounters,
+    shed_rids: Vec<usize>,
+    per_gpu_peak_outstanding: Vec<usize>,
+    /// Expected-footprint drain statistics for the SLO early reject.
+    completed_blocks: f64,
+    epoch: Option<f64>,
+    t_last_done: f64,
+    /// Scratch for harvested completions.
+    done_buf: Vec<(usize, f64)>,
+}
+
+impl FrontDoor {
+    /// Register a newly issued request and schedule its arrival.
+    fn schedule(&mut self, arr: &Arrival, client: usize, expected_blocks: f64) {
+        debug_assert_eq!(arr.rid, self.meta.len(), "request ids are dense in issue order");
+        self.meta.push(ReqMeta {
+            qid: arr.qid,
+            t_arrive: arr.t_arrive,
+            client,
+            disposition: ReqDisposition::Queued,
+            expected_blocks,
+        });
+        self.pending.push(Reverse(Pending {
+            t_bits: arr.t_arrive.to_bits(),
+            seq: self.seq,
+            rid: arr.rid,
+        }));
+        self.seq += 1;
+        self.epoch = Some(self.epoch.map_or(arr.t_arrive, |e| e.min(arr.t_arrive)));
+    }
+
+    /// Sum of expected footprints currently waiting in the queue.
+    fn queued_blocks(&self) -> f64 {
+        self.queue.iter().map(|&rid| self.meta[rid].expected_blocks).sum()
+    }
+}
+
+impl<'a> ClusterSim<'a> {
+    /// Bind a configuration to a trace generator and step scorer.
+    ///
+    /// Panics if `cfg.method` is [`Method::DeepConf`] (unsupported by
+    /// the serving engines; see [`crate::sim::serve::ServeSim::new`]).
+    pub fn new(cfg: &'a ClusterConfig, gen: &'a TraceGen, scorer: &'a StepScorer) -> Self {
+        assert!(
+            cfg.admission.max_outstanding_per_gpu >= 1,
+            "max_outstanding_per_gpu must be >= 1 (a zero quota can never place)"
+        );
+        ClusterSim { cfg, gen, scorer }
+    }
+
+    /// Expected KV-block footprint of a request asking question `qid`:
+    /// N traces, each a prompt copy plus the question's expected trace
+    /// length ([`TraceGen::expected_trace_tokens`]). This is the
+    /// scheduler-visible estimate (sampled lengths stay hidden) that
+    /// both the SLO early reject and the kv-pressure router use.
+    fn expected_blocks(&self, qid: usize) -> f64 {
+        let q = self.gen.question(qid);
+        let n = if self.cfg.method == Method::Cot { 1 } else { self.cfg.n_traces };
+        let tokens =
+            n as f64 * (self.gen.expected_trace_tokens(&q) + q.prompt_tokens as f64);
+        tokens / self.cfg.block_size as f64
+    }
+
+    /// Run the whole workload to completion.
+    pub fn run(&self) -> ClusterResult {
+        let cfg = self.cfg;
+        let ecfg = cfg.engine_config();
+        let mut engines: Vec<ServeEngine<'_>> = (0..cfg.gpus)
+            .map(|_| ServeEngine::new(&ecfg, self.gen, self.scorer))
+            .collect();
+        let nq = self.gen.bench.n_questions;
+
+        let mut fd = FrontDoor {
+            meta: Vec::new(),
+            pending: BinaryHeap::new(),
+            seq: 0,
+            queue: VecDeque::new(),
+            clients: None,
+            router: cfg.router.build(),
+            counters: ClusterCounters::default(),
+            shed_rids: Vec::new(),
+            per_gpu_peak_outstanding: vec![0; cfg.gpus],
+            completed_blocks: 0.0,
+            epoch: None,
+            t_last_done: 0.0,
+            done_buf: Vec::new(),
+        };
+
+        // ---- seed the arrival stream.
+        match &cfg.workload {
+            ClusterWorkload::Open(spec) => {
+                let arrivals = spec.generate(nq, cfg.seed ^ 0xA331_4A11_D00D_FEED);
+                for a in &arrivals {
+                    let eb = self.expected_blocks(a.qid);
+                    fd.schedule(a, usize::MAX, eb);
+                }
+            }
+            ClusterWorkload::Closed(spec) => {
+                let heavy = self.heavy_qids(nq);
+                let mut clients = spec.clients(nq, heavy, cfg.seed ^ 0xC105_ED00);
+                for a in clients.initial_arrivals() {
+                    let eb = self.expected_blocks(a.qid);
+                    fd.schedule(&a, clients.client_of(a.rid), eb);
+                }
+                fd.clients = Some(clients);
+            }
+        }
+
+        // ---- the global event loop.
+        loop {
+            if let Some(&Reverse(head)) = fd.pending.peek() {
+                let ta = f64::from_bits(head.t_bits);
+                // Advance every engine to the arrival instant; harvest
+                // completions (which may spawn earlier closed-loop
+                // arrivals — the heap reorders) and drain the queue.
+                for g in 0..engines.len() {
+                    engines[g].run_until(ta);
+                }
+                self.harvest(&mut engines, &mut fd);
+                self.drain_queue(&mut engines, &mut fd);
+                let Reverse(p) = fd.pending.pop().expect("peeked non-empty");
+                self.offer(&mut engines, &mut fd, p.rid);
+            } else {
+                let busy = (0..engines.len()).filter(|&g| !engines[g].is_idle());
+                let next = busy.fold(None::<usize>, |best, g| match best {
+                    None => Some(g),
+                    Some(b) if engines[g].clock() < engines[b].clock() => Some(g),
+                    Some(b) => Some(b),
+                });
+                match next {
+                    Some(g) => {
+                        // Tail phase: step the laggard one event so
+                        // completion-driven interactions stay in near-
+                        // global order.
+                        engines[g].run_one_event();
+                        self.harvest(&mut engines, &mut fd);
+                        self.drain_queue(&mut engines, &mut fd);
+                    }
+                    None if !fd.queue.is_empty() => {
+                        // Engines idle with requests still queued: quota
+                        // is free again, so placements resume (possibly
+                        // only partially — the next loop pass advances
+                        // the now-busy engines).
+                        self.drain_queue(&mut engines, &mut fd);
+                    }
+                    None => break,
+                }
+            }
+        }
+
+        debug_assert_eq!(
+            fd.counters.offered,
+            fd.counters.placed + fd.counters.shed,
+            "placement conservation"
+        );
+        debug_assert_eq!(fd.counters.completed, fd.counters.placed);
+
+        // ---- aggregate: per-GPU results merge into cluster metrics.
+        let mut outcomes: Vec<RequestOutcome> = Vec::new();
+        let mut latency = LatencySketch::new();
+        let mut ttfv = LatencySketch::new();
+        let mut engine_counters = EngineCounters::default();
+        let mut per_gpu_requests = Vec::with_capacity(engines.len());
+        let mut per_gpu_peak_block_frac = Vec::with_capacity(engines.len());
+        for eng in engines {
+            let r = eng.finish();
+            let mut lat_g = LatencySketch::new();
+            let mut ttfv_g = LatencySketch::new();
+            for o in &r.outcomes {
+                lat_g.record(o.latency_s);
+                ttfv_g.record(o.ttfv_s);
+            }
+            // Exact bucket-wise merge: the cluster percentiles equal a
+            // single sketch over every request.
+            latency.merge(&lat_g);
+            ttfv.merge(&ttfv_g);
+            engine_counters.add(&r.counters);
+            per_gpu_requests.push(r.outcomes.len());
+            per_gpu_peak_block_frac
+                .push(r.peak_used_blocks as f64 / r.pool_blocks.max(1) as f64);
+            outcomes.extend(r.outcomes);
+        }
+        outcomes.sort_by_key(|o| o.rid);
+
+        let epoch = fd.epoch.unwrap_or(0.0);
+        ClusterResult {
+            outcomes,
+            shed_rids: fd.shed_rids,
+            makespan_s: (fd.t_last_done - epoch).max(0.0),
+            latency,
+            ttfv,
+            counters: fd.counters,
+            engine_counters,
+            per_gpu_requests,
+            per_gpu_peak_outstanding: fd.per_gpu_peak_outstanding,
+            per_gpu_peak_block_frac,
+        }
+    }
+
+    /// The benchmark's top trace-length quartile — the question subset
+    /// skewed closed-loop clients hammer.
+    fn heavy_qids(&self, n_questions: usize) -> Vec<usize> {
+        let mut by_len: Vec<(usize, f64)> = (0..n_questions)
+            .map(|qid| (qid, self.gen.question(qid).len_mult))
+            .collect();
+        by_len.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+        by_len.truncate((n_questions / 4).max(1));
+        by_len.into_iter().map(|(qid, _)| qid).collect()
+    }
+
+    /// Drain every engine's completions: record drain statistics, spawn
+    /// the closed-loop clients' next arrivals, and track the last
+    /// completion time. Engines are visited in GPU order.
+    fn harvest(&self, engines: &mut [ServeEngine<'_>], fd: &mut FrontDoor) {
+        for g in 0..engines.len() {
+            let mut done = std::mem::take(&mut fd.done_buf);
+            done.clear();
+            engines[g].drain_completions_into(&mut done);
+            for &(rid, t_done) in &done {
+                fd.counters.completed += 1;
+                fd.completed_blocks += fd.meta[rid].expected_blocks;
+                fd.t_last_done = fd.t_last_done.max(t_done);
+                let client = fd.meta[rid].client;
+                if client != usize::MAX {
+                    let next = fd
+                        .clients
+                        .as_mut()
+                        .expect("closed loop has clients")
+                        .next_arrival(client, t_done);
+                    if let Some(a) = next {
+                        let eb = self.expected_blocks(a.qid);
+                        fd.schedule(&a, client, eb);
+                    }
+                }
+            }
+            fd.done_buf = done;
+        }
+    }
+
+    /// Offer one arrival to admission control: place it if any GPU is
+    /// eligible, otherwise queue (bounded) or shed.
+    fn offer(&self, engines: &mut [ServeEngine<'_>], fd: &mut FrontDoor, rid: usize) {
+        fd.counters.offered += 1;
+        let quota = self.cfg.admission.max_outstanding_per_gpu;
+        let eligible = engines.iter().any(|e| e.outstanding() < quota);
+        if eligible {
+            self.place(engines, fd, rid);
+            return;
+        }
+        // Every GPU is at quota: queue or shed.
+        if let Some(slo) = self.cfg.admission.slo_s {
+            // SLO-aware early reject: expected queue wait from the
+            // queued-ahead footprint over the measured drain rate. No
+            // evidence (no completions yet) means no early reject.
+            let epoch = fd.epoch.unwrap_or(0.0);
+            let elapsed = fd.meta[rid].t_arrive - epoch;
+            if fd.completed_blocks > 0.0 && elapsed > 0.0 {
+                let drain_rate = fd.completed_blocks / elapsed; // blocks/s
+                let ahead = fd.queued_blocks() + fd.meta[rid].expected_blocks;
+                if ahead / drain_rate > slo {
+                    self.shed(fd, rid);
+                    return;
+                }
+            }
+        }
+        if fd.queue.len() >= self.cfg.admission.queue_cap {
+            self.shed(fd, rid);
+            return;
+        }
+        fd.queue.push_back(rid);
+        fd.counters.queue_peak = fd.counters.queue_peak.max(fd.queue.len() as u64);
+    }
+
+    /// Mark a request shed. A shed closed-loop client goes back to
+    /// thinking and issues its next request after a fresh think gap
+    /// (the user walks away and comes back with new work), so the
+    /// request budget is always fully offered and the run terminates.
+    fn shed(&self, fd: &mut FrontDoor, rid: usize) {
+        fd.meta[rid].disposition = ReqDisposition::Shed;
+        fd.counters.shed += 1;
+        fd.shed_rids.push(rid);
+        let client = fd.meta[rid].client;
+        if client != usize::MAX {
+            let t = fd.meta[rid].t_arrive;
+            let next = fd
+                .clients
+                .as_mut()
+                .expect("closed loop has clients")
+                .next_arrival(client, t);
+            if let Some(a) = next {
+                let eb = self.expected_blocks(a.qid);
+                fd.schedule(&a, client, eb);
+            }
+        }
+    }
+
+    /// Route a request onto an eligible GPU and submit it there. The
+    /// caller guarantees at least one GPU is below quota.
+    fn place(&self, engines: &mut [ServeEngine<'_>], fd: &mut FrontDoor, rid: usize) {
+        let quota = self.cfg.admission.max_outstanding_per_gpu;
+        let views: Vec<GpuView> = engines
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| e.outstanding() < quota)
+            .map(|(g, e)| GpuView {
+                gpu: g,
+                outstanding: e.outstanding(),
+                live_traces: e.live_traces(),
+                free_blocks: e.free_blocks(),
+                pool_blocks: e.pool_blocks(),
+                survivor_demand_blocks: e.survivor_demand_blocks(),
+            })
+            .collect();
+        debug_assert!(!views.is_empty(), "place requires an eligible GPU");
+        debug_assert!(
+            matches!(fd.meta[rid].disposition, ReqDisposition::Queued),
+            "a request is placed at most once and never after a shed"
+        );
+        let meta = &fd.meta[rid];
+        let req = RouteRequest {
+            rid,
+            qid: meta.qid,
+            n_traces: self.cfg.n_traces,
+            expected_blocks: meta.expected_blocks,
+        };
+        let g = views[fd.router.place(&req, &views)].gpu;
+        let arr = Arrival { rid, qid: meta.qid, t_arrive: meta.t_arrive };
+        // A lagging busy engine first catches up to the arrival instant
+        // (service cannot start before the request exists); idle engines
+        // jump inside submit.
+        if engines[g].clock() < arr.t_arrive {
+            engines[g].run_until(arr.t_arrive);
+        }
+        engines[g].submit(&arr);
+        fd.meta[rid].disposition = ReqDisposition::Placed;
+        fd.counters.placed += 1;
+        let out = engines[g].outstanding();
+        debug_assert!(out <= quota, "placement must respect the per-GPU quota");
+        fd.per_gpu_peak_outstanding[g] = fd.per_gpu_peak_outstanding[g].max(out);
+    }
+
+    /// Place queued requests (FIFO) while some GPU is below quota.
+    fn drain_queue(&self, engines: &mut [ServeEngine<'_>], fd: &mut FrontDoor) {
+        let quota = self.cfg.admission.max_outstanding_per_gpu;
+        while !fd.queue.is_empty() {
+            if !engines.iter().any(|e| e.outstanding() < quota) {
+                return;
+            }
+            let rid = fd.queue.pop_front().expect("checked non-empty");
+            self.place(engines, fd, rid);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::harness::cells::projection_scorer;
+    use crate::sim::tracegen::GenParams;
+
+    fn light_cfg(method: Method, workload: ClusterWorkload) -> ClusterConfig {
+        let mut c = ClusterConfig::new(
+            2,
+            ModelId::Qwen3_4B,
+            BenchId::GpqaDiamond,
+            method,
+            4,
+            workload,
+        );
+        c.seed = 11;
+        c
+    }
+
+    fn pressured_cfg(method: Method, gpus: usize) -> ClusterConfig {
+        let mut c = ClusterConfig::new(
+            gpus,
+            ModelId::Phi4_14B,
+            BenchId::Hmmt2425,
+            method,
+            6,
+            ClusterWorkload::Closed(ClosedLoopSpec::skewed(4, 60.0, 8, 0.5)),
+        );
+        c.mem_util = 0.45;
+        c.seed = 13;
+        c
+    }
+
+    fn run(cfg: &ClusterConfig) -> ClusterResult {
+        let gp = GenParams::default_d64();
+        let scorer = projection_scorer(&gp);
+        let gen = TraceGen::new(cfg.model, cfg.bench, gp, cfg.seed ^ 0x5EED);
+        ClusterSim::new(cfg, &gen, &scorer).run()
+    }
+
+    #[test]
+    fn open_loop_completes_every_request() {
+        for method in [Method::Sc, Method::Step] {
+            let cfg = light_cfg(
+                method,
+                ClusterWorkload::Open(WorkloadSpec::poisson(0.02, 6)),
+            );
+            let r = run(&cfg);
+            assert_eq!(r.outcomes.len(), 6, "{method:?}");
+            assert!(r.shed_rids.is_empty());
+            assert_eq!(r.counters.offered, 6);
+            assert_eq!(r.counters.placed, 6);
+            assert_eq!(r.counters.completed, 6);
+            assert_eq!(r.latency.count(), 6);
+            assert!(r.makespan_s > 0.0);
+            assert!(r.goodput_rps() > 0.0);
+            // Outcomes come back sorted by global rid, exactly once.
+            for (i, o) in r.outcomes.iter().enumerate() {
+                assert_eq!(o.rid, i);
+                assert!(o.latency_s > 0.0);
+            }
+            // Every completion is attributed to exactly one GPU.
+            assert_eq!(r.per_gpu_requests.iter().sum::<usize>(), 6);
+        }
+    }
+
+    #[test]
+    fn closed_loop_completes_budget() {
+        let cfg = light_cfg(
+            Method::Step,
+            ClusterWorkload::Closed(ClosedLoopSpec::new(3, 30.0, 9)),
+        );
+        let r = run(&cfg);
+        assert_eq!(r.outcomes.len(), 9);
+        assert_eq!(r.counters.completed, 9);
+        assert!(r.shed_rids.is_empty(), "light closed loop must not shed");
+        for (i, o) in r.outcomes.iter().enumerate() {
+            assert_eq!(o.rid, i);
+        }
+    }
+
+    #[test]
+    fn pressured_closed_loop_conserves_and_respects_quota() {
+        for method in [Method::Sc, Method::Step] {
+            let mut cfg = pressured_cfg(method, 2);
+            cfg.admission.max_outstanding_per_gpu = 2;
+            cfg.admission.queue_cap = 2;
+            let r = run(&cfg);
+            assert_eq!(
+                r.counters.offered,
+                r.counters.placed + r.counters.shed,
+                "{method:?}: conservation"
+            );
+            assert_eq!(r.counters.completed, r.counters.placed, "{method:?}");
+            assert_eq!(r.outcomes.len() as u64, r.counters.completed, "{method:?}");
+            assert_eq!(r.shed_rids.len() as u64, r.counters.shed, "{method:?}");
+            for &g in &r.per_gpu_peak_outstanding {
+                assert!(g <= 2, "{method:?}: quota exceeded ({g})");
+            }
+            // A shed request never produces an outcome.
+            for rid in &r.shed_rids {
+                assert!(r.outcomes.iter().all(|o| o.rid != *rid), "{method:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn tiny_queue_cap_sheds_under_pressure() {
+        let mut cfg = pressured_cfg(Method::Sc, 1);
+        cfg.admission.max_outstanding_per_gpu = 1;
+        cfg.admission.queue_cap = 0;
+        let r = run(&cfg);
+        assert!(r.counters.shed > 0, "queue_cap 0 must shed under load");
+        assert!(r.counters.shed_rate() > 0.0);
+        assert_eq!(r.counters.offered, r.counters.placed + r.counters.shed);
+    }
+
+    #[test]
+    fn slo_early_reject_sheds_more_than_plain_bound() {
+        let mut base = pressured_cfg(Method::Sc, 1);
+        base.admission.max_outstanding_per_gpu = 1;
+        base.admission.queue_cap = 8;
+        let plain = run(&base);
+        let mut slo = base.clone();
+        slo.admission.slo_s = Some(1.0); // far tighter than service time
+        let tight = run(&slo);
+        assert!(
+            tight.counters.shed >= plain.counters.shed,
+            "an SLO bound can only shed more ({} < {})",
+            tight.counters.shed,
+            plain.counters.shed
+        );
+        assert_eq!(tight.counters.offered, tight.counters.placed + tight.counters.shed);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        for router in RouterKind::ALL {
+            let mut a_cfg = pressured_cfg(Method::Step, 2);
+            a_cfg.router = router;
+            let a = run(&a_cfg);
+            let b = run(&a_cfg);
+            assert_eq!(a.makespan_s, b.makespan_s, "{router:?}");
+            assert_eq!(a.counters.report(), b.counters.report(), "{router:?}");
+            assert_eq!(a.outcomes.len(), b.outcomes.len());
+            for (x, y) in a.outcomes.iter().zip(&b.outcomes) {
+                assert_eq!(x.rid, y.rid);
+                assert_eq!(x.latency_s, y.latency_s, "{router:?}");
+                assert_eq!(x.chosen, y.chosen);
+            }
+        }
+    }
+
+    #[test]
+    fn merged_sketch_covers_all_completions() {
+        let cfg = light_cfg(
+            Method::Sc,
+            ClusterWorkload::Open(WorkloadSpec::bursty(0.05, 3, 6)),
+        );
+        let r = run(&cfg);
+        assert_eq!(r.latency.count(), r.counters.completed);
+        assert_eq!(r.ttfv.count(), r.counters.completed);
+        // The merged sketch's extremes bound every outcome.
+        for o in &r.outcomes {
+            assert!(o.latency_s <= r.latency.max_s() + 1e-9);
+            assert!(o.latency_s >= r.latency.min_s() - 1e-9);
+        }
+    }
+
+    #[test]
+    fn routers_spread_load_across_gpus() {
+        for router in RouterKind::ALL {
+            let mut cfg = light_cfg(
+                Method::Sc,
+                // Near-zero think time: the population overlaps, so any
+                // load-aware policy must fan out past GPU 0.
+                ClusterWorkload::Closed(ClosedLoopSpec::new(4, 0.5, 12)),
+            );
+            cfg.gpus = 4;
+            cfg.router = router;
+            let r = run(&cfg);
+            assert_eq!(r.outcomes.len(), 12, "{router:?}");
+            let served = r.per_gpu_requests.iter().filter(|&&n| n > 0).count();
+            assert!(served >= 2, "{router:?}: load never spread ({:?})", r.per_gpu_requests);
+        }
+    }
+}

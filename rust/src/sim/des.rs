@@ -21,6 +21,7 @@ use crate::coordinator::trace::{TraceState, TraceStatus};
 use crate::coordinator::voting::{weighted_vote, Vote};
 use crate::kvcache::KvCacheManager;
 use crate::sim::gpu::GpuSpec;
+use crate::sim::sched::{self, WaitQueue};
 use crate::sim::profiles::{BenchId, ModelId, ModelProfile};
 use crate::sim::tracegen::{Question, TraceGen, TraceSpec};
 use crate::util::rng::Rng;
@@ -340,8 +341,9 @@ impl<'a> DesEngine<'a> {
             };
         }
 
-        // --- admission: prefill prompts (pending queue if memory-bound).
-        let mut pending: Vec<usize> = Vec::new();
+        // --- admission: prefill prompts (waiting queue if memory-bound;
+        // FIFO resume via the shared scheduler core).
+        let mut wait_q = WaitQueue::new();
         let mut admitted = 0usize;
         for &i in phase {
             let need = kv.blocks_needed_for_new(q.prompt_tokens);
@@ -351,14 +353,11 @@ impl<'a> DesEngine<'a> {
                 admitted += 1;
             } else {
                 traces[i].st.status = TraceStatus::Preempted;
-                pending.push(i);
+                wait_q.push_back(i);
             }
         }
         let prefill_dt = tm.prefill(q.prompt_tokens * admitted.max(1));
         *clock += prefill_dt;
-
-        // Waiting queue of preempted traces (FIFO resume).
-        let mut wait_q: std::collections::VecDeque<usize> = pending.into();
         engine_accrue!(wait_q, prefill_dt);
         // Warm the reusable hot-path buffers (no per-event allocations).
         scratch.h.resize(self.gen.gen.d, 0.0);
@@ -423,12 +422,7 @@ impl<'a> DesEngine<'a> {
             *clock += dt;
             engine_accrue!(wait_q, dt);
             for &i in phase {
-                let t = &mut traces[i];
-                match t.st.status {
-                    TraceStatus::Running => t.st.decode_time += dt,
-                    TraceStatus::Preempted => t.st.wait_time += dt,
-                    _ => {}
-                }
+                sched::accrue(&mut traces[i].st, dt);
             }
             for &i in &scratch.running {
                 let t = &mut traces[i];
@@ -518,59 +512,46 @@ impl<'a> DesEngine<'a> {
         let demand = |d: u64| -> u64 {
             cur.iter().map(|&c| (c + d).div_ceil(bs) - c.div_ceil(bs)).sum()
         };
-        if demand(cap) <= free {
-            return cap;
-        }
-        let (mut lo, mut hi) = (0u64, cap); // demand(lo) fits, demand(hi) doesn't
-        while lo + 1 < hi {
-            let mid = (lo + hi) / 2;
-            if demand(mid) <= free {
-                lo = mid;
-            } else {
-                hi = mid;
-            }
-        }
-        lo
+        sched::max_fitting(cap, |d| demand(d) <= free)
     }
 
-    /// Memory saturated: prune (STEP) or preempt (vLLM default).
+    /// Memory saturated: prune (STEP) or preempt (vLLM default). Victim
+    /// selection goes through the shared scheduler core so the serving
+    /// engines apply the identical rules.
     fn memory_event(
         &self,
         traces: &mut [SimTrace],
         running: &[usize],
         kv: &mut KvCacheManager,
         clock: &mut f64,
-        wait_q: &mut std::collections::VecDeque<usize>,
+        wait_q: &mut WaitQueue,
         _rng: &mut Rng,
     ) {
         match self.cfg.method {
             Method::Step => {
                 // Algorithm 1: prune argmin score_t, release KV at once.
                 // (VictimPolicy ablates the argmin choice.)
-                let &victim = match self.cfg.victim {
-                    VictimPolicy::LowestScore => running
-                        .iter()
-                        .min_by(|&&a, &&b| {
-                            self.agg_score(&traces[a].st)
-                                .partial_cmp(&self.agg_score(&traces[b].st))
-                                .unwrap()
-                        })
-                        .expect("memory event with empty running set"),
-                    VictimPolicy::Random => {
-                        &running[_rng.below(running.len())]
+                let victim = match self.cfg.victim {
+                    VictimPolicy::LowestScore => sched::lowest_score_victim(
+                        running,
+                        |_| true,
+                        |i| self.agg_score(&traces[i].st),
+                    )
+                    .expect("memory event with empty running set"),
+                    VictimPolicy::Random => running[_rng.below(running.len())],
+                    VictimPolicy::Youngest => {
+                        sched::youngest_victim(running, |_| true, |i| traces[i].st.generated)
+                            .expect("memory event with empty running set")
                     }
-                    VictimPolicy::Youngest => running
-                        .iter()
-                        .min_by_key(|&&i| traces[i].st.generated)
-                        .unwrap(),
                     VictimPolicy::OracleIncorrect => running
                         .iter()
-                        .find(|&&i| !traces[i].spec.label)
+                        .copied()
+                        .find(|&i| !traces[i].spec.label)
                         .unwrap_or_else(|| {
-                            running
-                                .iter()
-                                .min_by_key(|&&i| traces[i].st.generated)
-                                .unwrap()
+                            sched::youngest_victim(running, |_| true, |i| {
+                                traces[i].st.generated
+                            })
+                            .unwrap()
                         }),
                 };
                 let t = &mut traces[victim];
@@ -581,10 +562,9 @@ impl<'a> DesEngine<'a> {
             _ => {
                 // vLLM preemption: evict the youngest running trace
                 // (cheapest recompute), FIFO resume.
-                let &victim = running
-                    .iter()
-                    .min_by_key(|&&i| traces[i].st.generated)
-                    .expect("memory event with empty running set");
+                let victim =
+                    sched::youngest_victim(running, |_| true, |i| traces[i].st.generated)
+                        .expect("memory event with empty running set");
                 let t = &mut traces[victim];
                 t.st.status = TraceStatus::Preempted;
                 t.st.preemptions += 1;
@@ -596,7 +576,8 @@ impl<'a> DesEngine<'a> {
 
     /// Resume the waiting-queue head if its whole prefix fits (plus one
     /// block of headroom) — vLLM's FCFS resume rule for the normal path
-    /// where running traces free memory as they finish.
+    /// where running traces free memory as they finish
+    /// ([`WaitQueue::pop_head_if`]).
     #[allow(clippy::too_many_arguments)]
     fn try_resume(
         &self,
@@ -604,15 +585,14 @@ impl<'a> DesEngine<'a> {
         traces: &mut [SimTrace],
         kv: &mut KvCacheManager,
         clock: &mut f64,
-        wait_q: &mut std::collections::VecDeque<usize>,
+        wait_q: &mut WaitQueue,
         phase: &[usize],
         engine_split: &mut (f64, f64),
     ) -> bool {
-        let Some(&head) = wait_q.front() else { return false };
-        if !self.resume_fits(q, traces, kv, head) {
+        let Some(head) = wait_q.pop_head_if(|idx| self.resume_fits(q, traces, kv, idx))
+        else {
             return false;
-        }
-        wait_q.pop_front();
+        };
         self.admit_resumed(q, traces, kv, clock, wait_q, phase, engine_split, head);
         true
     }
@@ -620,8 +600,8 @@ impl<'a> DesEngine<'a> {
     /// Stalled-engine resume: nothing is running, so strict head-of-line
     /// FCFS would wedge on an oversized head while shorter queued traces
     /// could still make progress. Resume the *first queued trace in FIFO
-    /// order* whose prefix fits; false only when none fits (the caller
-    /// then drops the head as pruned).
+    /// order* whose prefix fits ([`WaitQueue::pop_first_fit`]); false
+    /// only when none fits (the caller then drops the head as pruned).
     #[allow(clippy::too_many_arguments)]
     fn resume_first_fit(
         &self,
@@ -629,15 +609,14 @@ impl<'a> DesEngine<'a> {
         traces: &mut [SimTrace],
         kv: &mut KvCacheManager,
         clock: &mut f64,
-        wait_q: &mut std::collections::VecDeque<usize>,
+        wait_q: &mut WaitQueue,
         phase: &[usize],
         engine_split: &mut (f64, f64),
     ) -> bool {
-        let Some(pos) = (0..wait_q.len()).find(|&p| self.resume_fits(q, traces, kv, wait_q[p]))
+        let Some(idx) = wait_q.pop_first_fit(|idx| self.resume_fits(q, traces, kv, idx))
         else {
             return false;
         };
-        let idx = wait_q.remove(pos).expect("position came from the queue");
         self.admit_resumed(q, traces, kv, clock, wait_q, phase, engine_split, idx);
         true
     }
@@ -649,7 +628,8 @@ impl<'a> DesEngine<'a> {
     }
 
     /// Re-admit a dequeued trace. Recompute-on-resume: the prefix KV is
-    /// rebuilt by a prefill pass that stalls the engine.
+    /// rebuilt by a prefill pass that stalls the engine (shared
+    /// accounting: [`sched::accrue`] + [`sched::charge_resume`]).
     #[allow(clippy::too_many_arguments)]
     fn admit_resumed(
         &self,
@@ -657,7 +637,7 @@ impl<'a> DesEngine<'a> {
         traces: &mut [SimTrace],
         kv: &mut KvCacheManager,
         clock: &mut f64,
-        wait_q: &std::collections::VecDeque<usize>,
+        wait_q: &WaitQueue,
         phase: &[usize],
         engine_split: &mut (f64, f64),
         idx: usize,
@@ -676,18 +656,9 @@ impl<'a> DesEngine<'a> {
             engine_split.0 += dt;
         }
         for &i in phase {
-            let t = &mut traces[i];
-            match t.st.status {
-                TraceStatus::Running => t.st.decode_time += dt,
-                TraceStatus::Preempted => t.st.wait_time += dt,
-                _ => {}
-            }
+            sched::accrue(&mut traces[i].st, dt);
         }
-        // The resumed trace itself: reconstruction counts as waiting
-        // (paper: resumed with KV cache reconstructed).
-        let t = &mut traces[idx].st;
-        t.decode_time -= dt;
-        t.wait_time += dt;
+        sched::charge_resume(&mut traces[idx].st, dt);
     }
 
     /// Slim-SC similarity check (thought level): pair up the active

@@ -1,14 +1,21 @@
 //! Simulation substrates: the GPU memory model, serving latency model,
 //! synthetic trace generator, benchmark/model profiles, the rule-based
-//! verifier, and two discrete-event serving engines — the
+//! verifier, and three discrete-event serving engines — the
 //! single-question engine ([`des`]) that drives every paper table/figure,
-//! and the multi-request serving simulator ([`serve`]) that runs an
+//! the multi-request serving simulator ([`serve`]) that runs an
 //! open-loop workload ([`workload`]) with continuous batching against one
-//! shared KV pool (`step serve-sim`).
+//! shared KV pool (`step serve-sim`), and the multi-GPU cluster
+//! simulator ([`cluster`]) that routes open- or closed-loop traffic
+//! across R per-GPU engines through pluggable placement policies
+//! ([`router`]) and admission control (`step cluster-sim`). The
+//! scheduler machinery all engines share lives in [`sched`].
 
+pub mod cluster;
 pub mod des;
 pub mod gpu;
 pub mod profiles;
+pub mod router;
+pub mod sched;
 pub mod serve;
 pub mod timing;
 pub mod tracegen;

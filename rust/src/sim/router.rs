@@ -1,0 +1,304 @@
+//! Request routing policies for the cluster serving simulator
+//! ([`crate::sim::cluster`]).
+//!
+//! The router decides which GPU's engine serves an arriving request.
+//! Its leverage at cluster scale is exactly the source paper's thesis
+//! in scheduling form: a router that can see *per-GPU KV pressure* —
+//! resident blocks plus the score-weighted demand of the traces that
+//! will survive STEP's pruning — can place requests so that pruning is
+//! never needed, while per-trace signals (token confidence, probes)
+//! say nothing about where a request should go. Three policies:
+//!
+//! * [`RoundRobin`] — the load-oblivious baseline: GPUs in cyclic
+//!   order, regardless of state.
+//! * [`LeastOutstanding`] — classic load balancing on request *count*;
+//!   blind to the skew in per-request KV footprints.
+//! * [`KvPressure`] — pick the GPU whose free pool the projected
+//!   demand — its surviving traces' score-weighted needs
+//!   ([`GpuView::survivor_demand_blocks`]) plus the request's own
+//!   expected footprint — would consume the smallest *fraction* of.
+//!   Memory-aware the way STEP's step scores make possible.
+//!
+//! Policies are pure functions of their inputs (the round-robin cursor
+//! is the only state), so cluster runs stay bit-deterministic.
+
+/// Read-only scheduling view of one per-GPU engine at routing time.
+#[derive(Debug, Clone, Copy)]
+pub struct GpuView {
+    /// The GPU's index in the cluster.
+    pub gpu: usize,
+    /// Requests submitted to this GPU and not yet complete.
+    pub outstanding: usize,
+    /// Live sequences resident in the GPU's KV pool.
+    pub live_traces: usize,
+    /// Free blocks in the GPU's KV pool.
+    pub free_blocks: usize,
+    /// Physical blocks in the GPU's KV pool.
+    pub pool_blocks: usize,
+    /// Estimated blocks the GPU's surviving traces still need (see
+    /// [`crate::sim::serve::ServeEngine::survivor_demand_blocks`]).
+    pub survivor_demand_blocks: f64,
+}
+
+/// What the router knows about an arriving request.
+#[derive(Debug, Clone, Copy)]
+pub struct RouteRequest {
+    /// Cluster-global request id.
+    pub rid: usize,
+    /// Question the request asks.
+    pub qid: usize,
+    /// Traces the request will decode (N).
+    pub n_traces: usize,
+    /// Expected KV blocks the request (prompt + N traces) will occupy
+    /// at its expected full length (benchmark-profile mean — the router
+    /// cannot see the sampled trace lengths).
+    pub expected_blocks: f64,
+}
+
+/// A placement policy: pick one GPU for each arriving request.
+///
+/// The cluster's admission layer pre-filters the views to the GPUs
+/// currently eligible (below their outstanding-request quota) and calls
+/// [`place`](RouterPolicy::place) with a non-empty slice; the return
+/// value is an *index into that slice* (map back to a GPU id through
+/// [`GpuView::gpu`]).
+///
+/// # Examples
+///
+/// ```
+/// use step::sim::router::{GpuView, RouteRequest, RouterPolicy, RoundRobin};
+///
+/// let view = |gpu: usize| GpuView {
+///     gpu,
+///     outstanding: 0,
+///     live_traces: 0,
+///     free_blocks: 100,
+///     pool_blocks: 100,
+///     survivor_demand_blocks: 0.0,
+/// };
+/// let req = RouteRequest { rid: 0, qid: 0, n_traces: 4, expected_blocks: 12.0 };
+/// let gpus = [view(0), view(1), view(2)];
+/// let mut rr = RoundRobin::new();
+/// assert_eq!(rr.place(&req, &gpus), 0);
+/// assert_eq!(rr.place(&req, &gpus), 1);
+/// assert_eq!(rr.place(&req, &gpus), 2);
+/// assert_eq!(rr.place(&req, &gpus), 0); // wraps
+/// ```
+pub trait RouterPolicy {
+    /// The policy's display name.
+    fn name(&self) -> &'static str;
+
+    /// Choose a GPU for `req` among the eligible `gpus` (non-empty);
+    /// returns an index into `gpus`.
+    fn place(&mut self, req: &RouteRequest, gpus: &[GpuView]) -> usize;
+}
+
+/// Load-oblivious cyclic placement (the baseline every load balancer is
+/// measured against).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RoundRobin {
+    /// Next GPU id the cursor wants to serve.
+    next: usize,
+}
+
+impl RoundRobin {
+    /// A cursor starting at GPU 0.
+    pub fn new() -> RoundRobin {
+        RoundRobin::default()
+    }
+}
+
+impl RouterPolicy for RoundRobin {
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+
+    fn place(&mut self, _req: &RouteRequest, gpus: &[GpuView]) -> usize {
+        // The eligible set may have holes (GPUs at quota), so advance
+        // the cursor to the first eligible GPU at-or-after it, wrapping.
+        let max_gpu = gpus.iter().map(|g| g.gpu).max().unwrap_or(0);
+        let pick = gpus
+            .iter()
+            .enumerate()
+            .filter(|(_, g)| g.gpu >= self.next)
+            .min_by_key(|(_, g)| g.gpu)
+            .or_else(|| gpus.iter().enumerate().min_by_key(|(_, g)| g.gpu));
+        let (idx, g) = pick.expect("place called with a non-empty view set");
+        self.next = if g.gpu >= max_gpu { 0 } else { g.gpu + 1 };
+        idx
+    }
+}
+
+/// Place on the GPU with the fewest outstanding requests (ties: fewer
+/// live traces, then lower GPU id).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LeastOutstanding;
+
+impl RouterPolicy for LeastOutstanding {
+    fn name(&self) -> &'static str {
+        "least-outstanding"
+    }
+
+    fn place(&mut self, _req: &RouteRequest, gpus: &[GpuView]) -> usize {
+        gpus.iter()
+            .enumerate()
+            .min_by_key(|(_, g)| (g.outstanding, g.live_traces, g.gpu))
+            .map(|(idx, _)| idx)
+            .expect("place called with a non-empty view set")
+    }
+}
+
+/// Place on the GPU whose free pool the projected demand would consume
+/// the least, *relatively*: score = (survivor demand + the request's
+/// expected footprint) / free blocks. The ratio is what makes the
+/// request's own footprint a real input — a heavy request tolerates a
+/// loaded-but-large free pool better than a clean-but-small one, which
+/// an absolute `demand − free` difference cannot express (any per-GPU
+/// constant cancels out of an argmin). Deterministic first-minimum
+/// tie-breaking in view order.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct KvPressure;
+
+impl RouterPolicy for KvPressure {
+    fn name(&self) -> &'static str {
+        "kv-pressure"
+    }
+
+    fn place(&mut self, req: &RouteRequest, gpus: &[GpuView]) -> usize {
+        debug_assert!(!gpus.is_empty(), "place called with a non-empty view set");
+        let score = |g: &GpuView| {
+            (g.survivor_demand_blocks + req.expected_blocks) / g.free_blocks.max(1) as f64
+        };
+        let mut best = 0usize;
+        for (idx, g) in gpus.iter().enumerate().skip(1) {
+            if score(g) < score(&gpus[best]) {
+                best = idx;
+            }
+        }
+        best
+    }
+}
+
+/// Selectable router policy (CLI / config surface).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouterKind {
+    /// [`RoundRobin`].
+    RoundRobin,
+    /// [`LeastOutstanding`].
+    LeastOutstanding,
+    /// [`KvPressure`].
+    KvPressure,
+}
+
+impl RouterKind {
+    /// Every policy, baseline first.
+    pub const ALL: [RouterKind; 3] =
+        [RouterKind::RoundRobin, RouterKind::LeastOutstanding, RouterKind::KvPressure];
+
+    /// Display name (also the CLI spelling).
+    pub fn name(&self) -> &'static str {
+        match self {
+            RouterKind::RoundRobin => "round-robin",
+            RouterKind::LeastOutstanding => "least-outstanding",
+            RouterKind::KvPressure => "kv-pressure",
+        }
+    }
+
+    /// Parse a CLI router name (case-insensitive).
+    pub fn parse(s: &str) -> Option<RouterKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "round-robin" | "roundrobin" | "rr" => Some(RouterKind::RoundRobin),
+            "least-outstanding" | "leastoutstanding" | "lor" => {
+                Some(RouterKind::LeastOutstanding)
+            }
+            "kv-pressure" | "kvpressure" | "kv" => Some(RouterKind::KvPressure),
+            _ => None,
+        }
+    }
+
+    /// Instantiate the policy.
+    pub fn build(&self) -> Box<dyn RouterPolicy> {
+        match self {
+            RouterKind::RoundRobin => Box::new(RoundRobin::new()),
+            RouterKind::LeastOutstanding => Box::new(LeastOutstanding),
+            RouterKind::KvPressure => Box::new(KvPressure),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn view(gpu: usize, outstanding: usize, free: usize, demand: f64) -> GpuView {
+        GpuView {
+            gpu,
+            outstanding,
+            live_traces: outstanding * 4,
+            free_blocks: free,
+            pool_blocks: 1000,
+            survivor_demand_blocks: demand,
+        }
+    }
+
+    fn req() -> RouteRequest {
+        RouteRequest { rid: 0, qid: 0, n_traces: 4, expected_blocks: 50.0 }
+    }
+
+    #[test]
+    fn round_robin_cycles_and_skips_holes() {
+        let mut rr = RoundRobin::new();
+        let all = [view(0, 0, 10, 0.0), view(1, 0, 10, 0.0), view(2, 0, 10, 0.0)];
+        let seq: Vec<usize> = (0..6).map(|_| all[rr.place(&req(), &all)].gpu).collect();
+        assert_eq!(seq, vec![0, 1, 2, 0, 1, 2]);
+        // GPU 1 drops out (quota): the cursor skips it without stalling.
+        let holed = [view(0, 0, 10, 0.0), view(2, 0, 10, 0.0)];
+        let seq: Vec<usize> = (0..4).map(|_| holed[rr.place(&req(), &holed)].gpu).collect();
+        assert_eq!(seq, vec![0, 2, 0, 2]);
+    }
+
+    #[test]
+    fn least_outstanding_picks_min_with_stable_ties() {
+        let mut lo = LeastOutstanding;
+        let gpus = [view(0, 3, 10, 0.0), view(1, 1, 10, 0.0), view(2, 1, 10, 0.0)];
+        // 1 and 2 tie on outstanding and live traces: lower gpu id wins.
+        assert_eq!(gpus[lo.place(&req(), &gpus)].gpu, 1);
+        let gpus = [view(0, 0, 10, 0.0), view(1, 1, 10, 0.0)];
+        assert_eq!(gpus[lo.place(&req(), &gpus)].gpu, 0);
+    }
+
+    #[test]
+    fn kv_pressure_prefers_headroom_not_count() {
+        let mut kv = KvPressure;
+        // GPU 0 has fewer requests but its survivors want the memory;
+        // GPU 1 is busier by count yet has real block headroom.
+        let gpus = [view(0, 1, 100, 400.0), view(1, 3, 300, 50.0)];
+        assert_eq!(gpus[kv.place(&req(), &gpus)].gpu, 1);
+        // All else equal, more free blocks wins.
+        let gpus = [view(0, 1, 100, 0.0), view(1, 1, 200, 0.0)];
+        assert_eq!(gpus[kv.place(&req(), &gpus)].gpu, 1);
+    }
+
+    #[test]
+    fn kv_pressure_footprint_drives_the_placement() {
+        let mut kv = KvPressure;
+        // A heavy request prefers the loaded-but-large free pool
+        // (300 free absorbs 100 + 200 at ratio 1.0; 100 free would sit
+        // at 2.0); a light request flips to the cleaner small pool
+        // (0.1 vs 0.37).
+        let big = RouteRequest { rid: 0, qid: 0, n_traces: 8, expected_blocks: 200.0 };
+        let gpus = [view(0, 1, 100, 0.0), view(1, 1, 300, 100.0)];
+        assert_eq!(gpus[kv.place(&big, &gpus)].gpu, 1);
+        let small = RouteRequest { expected_blocks: 10.0, ..big };
+        assert_eq!(gpus[kv.place(&small, &gpus)].gpu, 0);
+    }
+
+    #[test]
+    fn kind_parse_build_roundtrip() {
+        for k in RouterKind::ALL {
+            assert_eq!(RouterKind::parse(k.name()), Some(k));
+            assert_eq!(k.build().name(), k.name());
+        }
+        assert_eq!(RouterKind::parse("nope"), None);
+    }
+}

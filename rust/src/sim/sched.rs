@@ -1,0 +1,230 @@
+//! Shared scheduler core of the discrete-event serving engines.
+//!
+//! The single-question engine ([`crate::sim::des`]), the multi-request
+//! serving engine ([`crate::sim::serve`]), and the cluster simulator's
+//! per-GPU engines ([`crate::sim::cluster`]) all implement the same
+//! vLLM-V1 scheduling mechanics. This module holds the pieces they
+//! share, so §4.2 policy fixes land once (the PR-2 debt the ROADMAP
+//! records):
+//!
+//! * [`WaitQueue`] — the FIFO queue of preempted traces with both
+//!   resume disciplines: head-of-line FCFS resume for the normal path
+//!   where finishing traces free memory, and a first-fit scan for the
+//!   stalled-engine path (strict FCFS would wedge on an oversized head
+//!   while shorter queued traces could still make progress);
+//! * victim selection for memory events — [`lowest_score_victim`]
+//!   (STEP, Algorithm 1: argmin aggregated step score) and
+//!   [`youngest_victim`] (vLLM preemption: cheapest recompute), both
+//!   preserving first-minimum tie-breaking so results are deterministic;
+//! * [`max_fitting`] — the monotone binary search behind every memory
+//!   and arrival horizon ("largest d that still fits");
+//! * recompute accounting — [`accrue`] (engine busy time lands as
+//!   decode on running traces and as wait on preempted ones) and
+//!   [`charge_resume`] (the resumed trace's own reconstruction counts
+//!   as waiting, paper: "resumed with KV cache reconstructed").
+//!
+//! Everything here is pure bookkeeping over indices and
+//! [`TraceState`]s; the engines keep ownership of their trace vectors,
+//! pools, and clocks.
+
+use std::collections::VecDeque;
+
+use crate::coordinator::trace::{TraceState, TraceStatus};
+
+/// FIFO waiting queue of preempted trace indices with the two resume
+/// disciplines the engines share.
+#[derive(Debug, Clone, Default)]
+pub struct WaitQueue {
+    q: VecDeque<usize>,
+}
+
+impl WaitQueue {
+    /// An empty queue.
+    pub fn new() -> WaitQueue {
+        WaitQueue::default()
+    }
+
+    /// Is the queue empty?
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+
+    /// Queued trace count.
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    /// Enqueue a preempted trace (FIFO order).
+    pub fn push_back(&mut self, tid: usize) {
+        self.q.push_back(tid);
+    }
+
+    /// Dequeue the head unconditionally (the stalled-engine drop path:
+    /// nothing fits, the head is removed as pruned).
+    pub fn pop_front(&mut self) -> Option<usize> {
+        self.q.pop_front()
+    }
+
+    /// Head-of-line FCFS resume: pop the head iff `fits(head)` — vLLM's
+    /// resume rule for the normal path where finishing traces free
+    /// memory. Returns the popped trace index.
+    pub fn pop_head_if(&mut self, mut fits: impl FnMut(usize) -> bool) -> Option<usize> {
+        let &head = self.q.front()?;
+        if fits(head) {
+            self.q.pop_front()
+        } else {
+            None
+        }
+    }
+
+    /// Stalled-engine resume: pop the *first queued trace in FIFO
+    /// order* whose prefix fits. Returns `None` only when nothing fits
+    /// (the caller then drops the head as pruned).
+    pub fn pop_first_fit(&mut self, mut fits: impl FnMut(usize) -> bool) -> Option<usize> {
+        let pos = (0..self.q.len()).find(|&p| fits(self.q[p]))?;
+        self.q.remove(pos)
+    }
+}
+
+/// Largest `d` in `[0, cap]` such that `fits(d)` holds, by binary
+/// search over a monotone predicate (`fits(0)` must hold; if `fits(d)`
+/// then `fits(d')` for all `d' <= d`). This is the search every memory
+/// horizon ("largest token advance whose block demand fits the free
+/// pool") and arrival horizon ("largest iteration count within the
+/// wall-clock gap") reduces to.
+pub fn max_fitting(cap: u64, fits: impl Fn(u64) -> bool) -> u64 {
+    if fits(cap) {
+        return cap;
+    }
+    let (mut lo, mut hi) = (0u64, cap); // fits(lo), !fits(hi)
+    while lo + 1 < hi {
+        let mid = (lo + hi) / 2;
+        if fits(mid) {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
+/// STEP's memory-event victim (Algorithm 1): the candidate in
+/// `running` passing `in_set` with the lowest aggregated step score.
+/// Ties keep the *first* minimum (iteration order), matching the
+/// engines' historical `min_by` semantics, so runs stay deterministic.
+pub fn lowest_score_victim(
+    running: &[usize],
+    in_set: impl Fn(usize) -> bool,
+    score: impl Fn(usize) -> f64,
+) -> Option<usize> {
+    running
+        .iter()
+        .copied()
+        .filter(|&i| in_set(i))
+        .min_by(|&a, &b| score(a).partial_cmp(&score(b)).unwrap())
+}
+
+/// vLLM's preemption victim: the candidate in `running` passing
+/// `in_set` with the fewest generated tokens (cheapest recompute).
+/// First-minimum tie-breaking, as with [`lowest_score_victim`].
+pub fn youngest_victim(
+    running: &[usize],
+    in_set: impl Fn(usize) -> bool,
+    generated: impl Fn(usize) -> u64,
+) -> Option<usize> {
+    running.iter().copied().filter(|&i| in_set(i)).min_by_key(|&i| generated(i))
+}
+
+/// Accrue `dt` seconds of engine busy time (a decode interval, or a
+/// prefill stall from admission / recompute-on-resume) onto one trace:
+/// running traces accrue decode time (the engine is busy on their
+/// behalf), preempted traces accrue wait time, terminal traces nothing.
+/// Engines apply this over every live trace whenever the clock moves.
+pub fn accrue(st: &mut TraceState, dt: f64) {
+    match st.status {
+        TraceStatus::Running => st.decode_time += dt,
+        TraceStatus::Preempted => st.wait_time += dt,
+        _ => {}
+    }
+}
+
+/// Recompute-on-resume accounting for the resumed trace itself: its KV
+/// reconstruction counts as waiting, not decoding (the paper's
+/// "resumed with KV cache reconstructed"). The caller has already run
+/// [`accrue`] over every trace (which charged this one `dt` of decode
+/// as a then-running trace); this moves the charge to waiting.
+pub fn charge_resume(st: &mut TraceState, dt: f64) {
+    st.decode_time -= dt;
+    st.wait_time += dt;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wait_queue_fifo_and_first_fit() {
+        let mut q = WaitQueue::new();
+        assert!(q.is_empty());
+        q.push_back(3);
+        q.push_back(7);
+        q.push_back(5);
+        assert_eq!(q.len(), 3);
+        // Head-of-line resume refuses when the head does not fit.
+        assert_eq!(q.pop_head_if(|t| t != 3), None);
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.pop_head_if(|t| t == 3), Some(3));
+        // First-fit scans past a non-fitting head in FIFO order.
+        assert_eq!(q.pop_first_fit(|t| t == 5), Some(5));
+        assert_eq!(q.pop_first_fit(|_| false), None);
+        assert_eq!(q.pop_front(), Some(7));
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn max_fitting_matches_linear_scan() {
+        for cap in [1u64, 2, 7, 64, 1000] {
+            for cut in 0..=cap {
+                let fits = |d: u64| d <= cut;
+                assert_eq!(max_fitting(cap, fits), cut.min(cap), "cap={cap} cut={cut}");
+            }
+        }
+        assert_eq!(max_fitting(100, |_| true), 100);
+        assert_eq!(max_fitting(100, |d| d == 0), 0);
+    }
+
+    #[test]
+    fn victims_take_first_minimum() {
+        let running = [4usize, 2, 9, 7];
+        let scores = |i: usize| match i {
+            2 | 9 => 0.25,
+            _ => 0.5,
+        };
+        // Both 2 and 9 tie at the minimum; the first in iteration order
+        // wins.
+        assert_eq!(lowest_score_victim(&running, |_| true, scores), Some(2));
+        assert_eq!(lowest_score_victim(&running, |i| i > 2, scores), Some(9));
+        assert_eq!(lowest_score_victim(&running, |_| false, scores), None);
+
+        let gens = |i: usize| if i == 9 || i == 7 { 10 } else { 20 };
+        assert_eq!(youngest_victim(&running, |_| true, gens), Some(9));
+        assert_eq!(youngest_victim(&running, |i| i != 9, gens), Some(7));
+    }
+
+    #[test]
+    fn stall_accrual_splits_by_status() {
+        let mut sts: Vec<TraceState> = (0..3).map(|i| TraceState::new(i, 4)).collect();
+        sts[1].status = TraceStatus::Preempted;
+        sts[2].status = TraceStatus::Finished;
+        for st in sts.iter_mut() {
+            accrue(st, 2.0);
+        }
+        assert_eq!(sts[0].decode_time, 2.0);
+        assert_eq!(sts[1].wait_time, 2.0);
+        assert_eq!(sts[2].decode_time + sts[2].wait_time, 0.0);
+        // Resume charge moves decode to wait for the resumed trace.
+        charge_resume(&mut sts[0], 2.0);
+        assert_eq!(sts[0].decode_time, 0.0);
+        assert_eq!(sts[0].wait_time, 2.0);
+    }
+}

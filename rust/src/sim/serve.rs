@@ -12,7 +12,8 @@
 //! *all* running requests, regardless of which request owns it — exactly
 //! the multi-tenant regime confidence-based baselines never model.
 //!
-//! Mechanics shared with the single-question engine:
+//! Mechanics shared with the single-question engine (via the
+//! [`crate::sim::sched`] scheduler core):
 //! * lockstep continuous batching (one token per running trace per
 //!   iteration) with analytic time jumps between events
 //!   (`TimingModel::decode_interval`), so cost is O(#events) not
@@ -27,10 +28,17 @@
 //! the pool has room), and SLO metrics (queue delay, time-to-first-vote,
 //! end-to-end latency) per request.
 //!
+//! The engine itself is the *steppable* [`ServeEngine`]: callers submit
+//! arrivals and advance it event by event or up to a wall-clock limit,
+//! which is what lets the cluster simulator ([`crate::sim::cluster`])
+//! drive R of them under one global clock. [`ServeSim::run`] is the
+//! single-GPU driver: it feeds one open-loop workload through one engine
+//! to completion.
+//!
 //! Everything derives from `(config, seed)`: one run is bit-identical
 //! across processes and thread counts.
 
-use std::collections::{BTreeMap, VecDeque};
+use std::collections::BTreeMap;
 
 use crate::coordinator::method::{Method, MethodParams};
 use crate::coordinator::request::RequestState;
@@ -42,6 +50,7 @@ use crate::metrics::EngineCounters;
 use crate::sim::des::ScoreAgg;
 use crate::sim::gpu::GpuSpec;
 use crate::sim::profiles::{BenchId, ModelId, ModelProfile};
+use crate::sim::sched::{self, WaitQueue};
 use crate::sim::tracegen::{Question, TraceGen, TraceSpec};
 use crate::sim::workload::{Arrival, WorkloadSpec};
 use crate::util::rng::Rng;
@@ -70,7 +79,8 @@ pub struct ServeSimConfig {
     pub seed: u64,
     /// Step-score aggregation for pruning/voting (paper: running mean).
     pub score_agg: ScoreAgg,
-    /// The open-loop arrival process.
+    /// The open-loop arrival process ([`ServeSim::run`]'s driver; the
+    /// cluster simulator submits arrivals itself and ignores this).
     pub workload: WorkloadSpec,
     /// Optional per-request KV quota as a fraction of the pool. `None`
     /// (default) = pool-bound only: one tenant may fill the pool and
@@ -107,7 +117,8 @@ impl ServeSimConfig {
 /// Per-request outcome and SLO metrics of one serving run.
 #[derive(Debug, Clone)]
 pub struct RequestOutcome {
-    /// Request id (arrival order).
+    /// Request id (the id the arrival carried; engine-local runs use
+    /// arrival order, cluster runs use the cluster-global id).
     pub rid: usize,
     /// Question the request asked.
     pub qid: usize,
@@ -141,7 +152,7 @@ pub struct RequestOutcome {
 /// Aggregate result of one serving simulation.
 #[derive(Debug, Clone)]
 pub struct ServeResult {
-    /// One outcome per request, in arrival order.
+    /// One outcome per request, in submission order.
     pub outcomes: Vec<RequestOutcome>,
     /// Wall-clock from the first arrival's epoch to the last
     /// completion, seconds (the idle lead-in before traffic starts is
@@ -166,7 +177,8 @@ impl ServeResult {
     }
 }
 
-/// One live trace: owning request, synthetic spec, runtime state.
+/// One live trace: owning request (engine-local index), synthetic spec,
+/// runtime state.
 struct ServeTrace {
     rid: usize,
     spec: TraceSpec,
@@ -188,12 +200,70 @@ struct Req {
     slim_rng: Rng,
 }
 
-/// The multi-request serving engine.
+/// Decrement a request's live-trace count; on the transition to zero,
+/// mark it complete and report the completion to the engine's driver.
+fn request_done(rq: &mut Req, clock: f64, completions: &mut Vec<(usize, f64)>) {
+    rq.live -= 1;
+    if rq.live == 0 {
+        rq.st.completed(clock);
+        completions.push((rq.st.rid, clock));
+    }
+}
+
+/// The multi-request serving simulation: a configuration bound to a
+/// trace generator and step scorer, plus the single-GPU workload driver
+/// ([`ServeSim::run`]). The event-loop state lives in [`ServeEngine`].
 pub struct ServeSim<'a> {
     cfg: &'a ServeSimConfig,
     gen: &'a TraceGen,
     scorer: &'a StepScorer,
     profile: ModelProfile,
+}
+
+/// What one engine event accomplished (see [`ServeEngine::run_until`]).
+enum Step {
+    /// State advanced: a decode interval, memory event, or resume/drop.
+    Advanced,
+    /// Nothing to do: no running traces and an empty waiting queue.
+    Idle,
+}
+
+/// The steppable per-GPU serving engine: owns the shared KV pool, the
+/// trace/request tables, and the clock. Drivers ([`ServeSim::run`] for
+/// one GPU, [`crate::sim::cluster::ClusterSim`] for R of them) submit
+/// arrivals with [`submit`](ServeEngine::submit) and advance the engine
+/// with [`run_until`](ServeEngine::run_until) /
+/// [`run_one_event`](ServeEngine::run_one_event), harvesting request
+/// completions via
+/// [`drain_completions_into`](ServeEngine::drain_completions_into).
+pub struct ServeEngine<'a> {
+    sim: ServeSim<'a>,
+    n_per: usize,
+    pool: SharedKvPool,
+    pool_blocks: usize,
+    reqs: Vec<Req>,
+    traces: Vec<ServeTrace>,
+    next_end: Vec<u64>,
+    wait_q: WaitQueue,
+    counters: EngineCounters,
+    clock: f64,
+    /// First submission's arrival time (the makespan epoch).
+    epoch: Option<f64>,
+    /// Terminal-prefix watermark: traces below this index are all
+    /// terminal, so per-event scans skip them. Requests complete
+    /// roughly in arrival order, which keeps the scans proportional
+    /// to the *live* trace count instead of every trace ever created.
+    first_live: usize,
+    submitted: usize,
+    drained: usize,
+    /// Undrained completions: (external request id, completion clock).
+    completions: Vec<(usize, f64)>,
+    // Reusable hot-path buffers.
+    running: Vec<usize>,
+    cur_tokens: Vec<u64>,
+    owner_pairs: Vec<(OwnerId, u64)>,
+    h: Vec<f32>,
+    z: Vec<f32>,
 }
 
 impl<'a> ServeSim<'a> {
@@ -221,391 +291,42 @@ impl<'a> ServeSim<'a> {
         }
     }
 
-    /// Run the whole workload to completion.
+    /// Run the whole open-loop workload to completion on one engine.
     pub fn run(&self) -> ServeResult {
-        let cfg = self.cfg;
-        let n_per = if cfg.method == Method::Cot { 1 } else { cfg.n_traces };
-        let arrivals = cfg
+        let arrivals = self
+            .cfg
             .workload
-            .generate(self.gen.bench.n_questions, cfg.seed ^ 0xA331_4A11_D00D_FEED);
-
-        let gpu = GpuSpec::gh200(cfg.mem_util);
-        let pool_blocks = gpu
-            .kv_capacity_blocks(
-                self.profile.weight_bytes,
-                self.profile.activation_bytes,
-                self.profile.kv_bytes_per_token,
-                cfg.block_size,
-            )
-            .max(1);
-        let quota = cfg.quota_frac.map(|f| ((pool_blocks as f64 * f) as usize).max(1));
-        let mut pool = SharedKvPool::new(pool_blocks, cfg.block_size, quota);
-
-        let tm = self.profile.timing;
-        let needs_scores = cfg.method == Method::Step;
-        let mut reqs: Vec<Req> = Vec::with_capacity(arrivals.len());
-        let mut traces: Vec<ServeTrace> = Vec::new();
-        let mut next_end: Vec<u64> = Vec::new();
-        let mut wait_q: VecDeque<usize> = VecDeque::new();
-        let mut counters =
-            EngineCounters { requests: arrivals.len() as u64, ..Default::default() };
-        let mut clock = 0.0f64;
+            .generate(self.gen.bench.n_questions, self.cfg.seed ^ 0xA331_4A11_D00D_FEED);
+        let mut eng = ServeEngine::new(self.cfg, self.gen, self.scorer);
         let mut next_arr = 0usize;
-        // Makespan is measured from the first arrival's epoch; the idle
-        // lead-in before it is not service time.
-        let epoch = arrivals.first().map(|a| a.t_arrive).unwrap_or(0.0);
-
-        // Terminal-prefix watermark: traces below this index are all
-        // terminal, so per-event scans skip them. Requests complete
-        // roughly in arrival order, which keeps the scans proportional
-        // to the *live* trace count instead of every trace ever created.
-        let mut first_live = 0usize;
-        // Reusable hot-path buffers.
-        let mut running: Vec<usize> = Vec::new();
-        let mut cur_tokens: Vec<u64> = Vec::new();
-        let mut owner_pairs: Vec<(OwnerId, u64)> = Vec::new();
-        let mut h = vec![0.0f32; self.gen.gen.d];
-        let mut z = vec![0.0f32; self.scorer.hidden];
-
         loop {
-            // ---- admit every arrival due by now (admission prefills
-            // advance the clock, which can make more arrivals due).
-            while next_arr < arrivals.len() && arrivals[next_arr].t_arrive <= clock {
-                let arr = arrivals[next_arr];
+            // Admit every arrival due by now (admission prefills advance
+            // the clock, which can make more arrivals due).
+            while next_arr < arrivals.len() && arrivals[next_arr].t_arrive <= eng.clock() {
+                eng.submit(&arrivals[next_arr]);
                 next_arr += 1;
-                self.admit_arrival(
-                    &arr,
-                    n_per,
-                    &mut reqs,
-                    &mut traces,
-                    &mut next_end,
-                    &mut pool,
-                    &mut wait_q,
-                    &mut clock,
-                );
             }
-
-            while first_live < traces.len() && !traces[first_live].st.status.is_active() {
-                first_live += 1;
-            }
-            running.clear();
-            for (i, t) in traces.iter().enumerate().skip(first_live) {
-                if t.st.status == TraceStatus::Running {
-                    running.push(i);
-                }
-            }
-
-            if running.is_empty() {
-                if !wait_q.is_empty() {
-                    // Fully stalled: resume the first queued trace (FIFO)
-                    // whose prefix fits; only when none can ever fit is
-                    // the head dropped (counted as pruned).
-                    if !self.resume_first_fit(
-                        first_live,
-                        &mut traces,
-                        &mut reqs,
-                        &mut pool,
-                        &mut wait_q,
-                        &mut clock,
-                        &mut counters,
-                    ) {
-                        let head = wait_q.pop_front().unwrap();
-                        let t = &mut traces[head];
-                        t.st.status = TraceStatus::Pruned;
-                        t.st.finish_clock = clock;
-                        let rid = t.rid;
-                        counters.pruned += 1;
-                        let rq = &mut reqs[rid];
-                        rq.live -= 1;
-                        if rq.live == 0 {
-                            rq.st.completed(clock);
-                        }
-                    }
-                    continue;
-                }
-                if next_arr < arrivals.len() {
+            if next_arr < arrivals.len() {
+                let t = arrivals[next_arr].t_arrive;
+                if eng.is_idle() {
                     // Idle: jump to the next arrival.
-                    clock = clock.max(arrivals[next_arr].t_arrive);
+                    eng.advance_idle_to(t);
                     continue;
                 }
+                eng.run_until(t);
+            } else {
+                eng.run_to_completion();
                 break;
             }
-
-            let b = running.len();
-
-            // ---- event horizon: iterations until any step boundary.
-            let mut d_event = u64::MAX;
-            for &i in &running {
-                d_event = d_event.min(next_end[i] - traces[i].st.generated);
-            }
-            debug_assert!(d_event >= 1);
-
-            // ---- arrival horizon: do not decode past the next arrival.
-            let k0: usize = running
-                .iter()
-                .map(|&i| reqs[traces[i].rid].q.prompt_tokens + traces[i].st.generated as usize)
-                .sum();
-            let mut d_cap = d_event;
-            if next_arr < arrivals.len() {
-                let gap = arrivals[next_arr].t_arrive - clock;
-                d_cap = d_cap.min(self.iters_within(b, k0, d_event, gap).max(1));
-            }
-
-            // ---- memory horizon over the shared pool (+ quotas).
-            let d_mem = self.memory_horizon(
-                &traces,
-                &pool,
-                &running,
-                d_cap,
-                &mut cur_tokens,
-                &mut owner_pairs,
-            );
-            if d_mem == 0 {
-                self.memory_event(
-                    &running,
-                    &mut traces,
-                    &mut reqs,
-                    &mut pool,
-                    &mut wait_q,
-                    &mut counters,
-                    clock,
-                );
-                continue;
-            }
-            let d = d_cap.min(d_mem);
-
-            // ---- advance time + tokens.
-            let dt = tm.decode_interval(b, k0, d);
-            clock += dt;
-            counters.decode_iterations += d;
-            counters.generated_tokens += d * b as u64;
-            for t in traces[first_live..].iter_mut() {
-                match t.st.status {
-                    TraceStatus::Running => t.st.decode_time += dt,
-                    TraceStatus::Preempted => t.st.wait_time += dt,
-                    _ => {}
-                }
-            }
-            for &i in &running {
-                traces[i].st.generated += d;
-                let ok = pool.append_tokens(i as u64, d as usize);
-                debug_assert!(ok, "memory horizon must guarantee the append");
-            }
-
-            // ---- boundary / completion events.
-            let mut freed_any = false;
-            for &i in &running {
-                let t = &mut traces[i];
-                if t.st.generated != next_end[i] {
-                    continue;
-                }
-                let step_n = t.st.next_step + 1;
-                t.st.next_step += 1;
-                let rid = t.rid;
-                reqs[rid].boundaries += 1;
-                if t.st.generated < t.spec.total_tokens {
-                    next_end[i] = t.spec.step_ends[t.st.next_step];
-                }
-                if needs_scores {
-                    self.gen.hidden_state_into(&reqs[rid].q, &t.spec, step_n, &mut h);
-                    let s = self.scorer.score_into(&h, &mut z) as f64;
-                    t.st.push_score(s);
-                    counters.step_scores += 1;
-                }
-                if t.st.generated == t.spec.total_tokens {
-                    t.st.status = TraceStatus::Finished;
-                    t.st.finish_clock = clock;
-                    pool.free_seq(i as u64);
-                    freed_any = true;
-                    let rq = &mut reqs[rid];
-                    rq.live -= 1;
-                    rq.st.first_vote(clock);
-                    if rq.live == 0 {
-                        rq.st.completed(clock);
-                    }
-                }
-            }
-
-            // ---- Slim-SC periodic similarity pruning (per request).
-            if cfg.method == Method::SlimSc {
-                for rid in 0..reqs.len() {
-                    if reqs[rid].live == 0 || reqs[rid].boundaries < reqs[rid].next_slim {
-                        continue;
-                    }
-                    let (lo, n) = (reqs[rid].lo, reqs[rid].n);
-                    let active = traces[lo..lo + n]
-                        .iter()
-                        .filter(|t| t.st.status == TraceStatus::Running)
-                        .count();
-                    reqs[rid].next_slim += cfg.params.slim_check_interval_steps * active.max(1);
-                    freed_any |= self.slim_check_request(
-                        rid,
-                        &mut reqs,
-                        &mut traces,
-                        &mut pool,
-                        &mut counters,
-                        clock,
-                    );
-                }
-            }
-
-            if freed_any {
-                while self.try_resume(
-                    first_live,
-                    &mut traces,
-                    &mut reqs,
-                    &mut pool,
-                    &mut wait_q,
-                    &mut clock,
-                    &mut counters,
-                ) {}
-            }
         }
-
-        debug_assert!(wait_q.is_empty());
-        let outcomes: Vec<RequestOutcome> = reqs
-            .iter()
-            .map(|rq| {
-                let slice = &traces[rq.lo..rq.lo + rq.n];
-                let votes: Vec<Vote> = slice
-                    .iter()
-                    .filter_map(|t| {
-                        let answer = match t.st.status {
-                            TraceStatus::Finished => t.spec.answer,
-                            _ => None, // pruned / preempted traces abstain
-                        };
-                        answer?;
-                        let weight = if cfg.method == Method::Step {
-                            self.agg_score(&t.st)
-                        } else {
-                            1.0
-                        };
-                        Some(Vote { answer, weight })
-                    })
-                    .collect();
-                let chosen = weighted_vote(&votes);
-                let t_done = rq.st.t_done.unwrap_or(clock);
-                RequestOutcome {
-                    rid: rq.st.rid,
-                    qid: rq.st.qid,
-                    correct: chosen == Some(0),
-                    chosen,
-                    t_arrive: rq.st.t_arrive,
-                    queue_s: rq.st.queue_s().unwrap_or(t_done - rq.st.t_arrive),
-                    latency_s: t_done - rq.st.t_arrive,
-                    ttfv_s: rq.st.ttfv_s().unwrap_or(t_done - rq.st.t_arrive),
-                    gen_tokens: slice.iter().map(|t| t.st.generated).sum(),
-                    mean_wait_s: slice.iter().map(|t| t.st.wait_time).sum::<f64>()
-                        / slice.len().max(1) as f64,
-                    mean_decode_s: slice.iter().map(|t| t.st.decode_time).sum::<f64>()
-                        / slice.len().max(1) as f64,
-                    n_finished: slice
-                        .iter()
-                        .filter(|t| t.st.status == TraceStatus::Finished)
-                        .count(),
-                    n_pruned: slice
-                        .iter()
-                        .filter(|t| t.st.status == TraceStatus::Pruned)
-                        .count(),
-                    n_preemptions: slice.iter().map(|t| t.st.preemptions).sum(),
-                }
-            })
-            .collect();
-
-        ServeResult {
-            outcomes,
-            makespan_s: clock - epoch,
-            counters,
-            pool_blocks,
-            peak_used_blocks: pool.peak_used_blocks(),
-        }
-    }
-
-    /// Create a request's traces and admit whatever fits; the rest joins
-    /// the global FIFO wait queue. One batched prefill covers everything
-    /// admitted here.
-    #[allow(clippy::too_many_arguments)]
-    fn admit_arrival(
-        &self,
-        arr: &Arrival,
-        n_per: usize,
-        reqs: &mut Vec<Req>,
-        traces: &mut Vec<ServeTrace>,
-        next_end: &mut Vec<u64>,
-        pool: &mut SharedKvPool,
-        wait_q: &mut VecDeque<usize>,
-        clock: &mut f64,
-    ) {
-        debug_assert_eq!(arr.rid, reqs.len(), "arrivals admit in rid order");
-        let q = self.gen.question(arr.qid);
-        let lo = traces.len();
-        let mut rq = Req {
-            st: RequestState::new(arr.rid, arr.qid, arr.t_arrive),
-            q,
-            lo,
-            n: n_per,
-            live: n_per,
-            boundaries: 0,
-            next_slim: self.cfg.params.slim_check_interval_steps * n_per,
-            slim_rng: Rng::new(
-                self.cfg.seed
-                    ^ (arr.rid as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
-                    ^ 0x0051_1A5C,
-            ),
-        };
-        let mut admitted = 0usize;
-        for i in 0..n_per {
-            let tid = lo + i;
-            // Trace streams offset by rid so repeated questions still
-            // decode distinct samples.
-            let spec = self.gen.trace(&rq.q, arr.rid * n_per + i);
-            let mut st = TraceState::new(tid as u64, self.cfg.params.deepconf_window);
-            let need = pool.blocks_needed_for_new(rq.q.prompt_tokens);
-            if pool.can_admit(arr.rid as OwnerId, need) {
-                let ok = pool.allocate_seq(arr.rid as OwnerId, tid as u64, rq.q.prompt_tokens);
-                debug_assert!(ok, "can_admit guaranteed the admission");
-                admitted += 1;
-            } else {
-                st.status = TraceStatus::Preempted;
-                wait_q.push_back(tid);
-            }
-            next_end.push(spec.step_ends[0]);
-            traces.push(ServeTrace { rid: arr.rid, spec, st });
-        }
-        if admitted > 0 {
-            rq.st.admitted(*clock);
-            let dt = self.profile.timing.prefill(rq.q.prompt_tokens * admitted);
-            *clock += dt;
-            // The engine stalls for the prefill: earlier requests' traces
-            // accrue decode (running) / wait (preempted) time.
-            for t in traces[..lo].iter_mut() {
-                match t.st.status {
-                    TraceStatus::Running => t.st.decode_time += dt,
-                    TraceStatus::Preempted => t.st.wait_time += dt,
-                    _ => {}
-                }
-            }
-        }
-        reqs.push(rq);
+        eng.finish()
     }
 
     /// Largest iteration count `d <= gap`'s worth of decode time (binary
     /// search over the monotone closed-form interval cost).
     fn iters_within(&self, b: usize, k0: usize, cap: u64, gap: f64) -> u64 {
         let tm = self.profile.timing;
-        if tm.decode_interval(b, k0, cap) <= gap {
-            return cap;
-        }
-        let (mut lo, mut hi) = (0u64, cap); // lo fits, hi doesn't
-        while lo + 1 < hi {
-            let mid = (lo + hi) / 2;
-            if tm.decode_interval(b, k0, mid) <= gap {
-                lo = mid;
-            } else {
-                hi = mid;
-            }
-        }
-        lo
+        sched::max_fitting(cap, |d| tm.decode_interval(b, k0, d) <= gap)
     }
 
     /// Largest d (capped at `cap`) such that advancing every running
@@ -661,19 +382,7 @@ impl<'a> ServeSim<'a> {
             }
             true
         };
-        if fits(cap) {
-            return cap;
-        }
-        let (mut lo, mut hi) = (0u64, cap); // fits(lo), !fits(hi)
-        while lo + 1 < hi {
-            let mid = (lo + hi) / 2;
-            if fits(mid) {
-                lo = mid;
-            } else {
-                hi = mid;
-            }
-        }
-        lo
+        sched::max_fitting(cap, fits)
     }
 
     /// Memory saturated at d = 1: prune (STEP) or preempt (vLLM default).
@@ -687,9 +396,10 @@ impl<'a> ServeSim<'a> {
         traces: &mut [ServeTrace],
         reqs: &mut [Req],
         pool: &mut SharedKvPool,
-        wait_q: &mut VecDeque<usize>,
+        wait_q: &mut WaitQueue,
         counters: &mut EngineCounters,
         clock: f64,
+        completions: &mut Vec<(usize, f64)>,
     ) {
         debug_assert!(!running.is_empty());
         let mut total_need = 0usize;
@@ -710,7 +420,7 @@ impl<'a> ServeSim<'a> {
                 .find(|&(o, need)| matches!(pool.owner_headroom(o), Some(h) if need > h))
                 .map(|(o, _)| o)
         };
-        let in_set = |traces: &[ServeTrace], i: usize| match binding {
+        let in_set = |i: usize| match binding {
             Some(o) => traces[i].rid as OwnerId == o,
             None => true,
         };
@@ -718,14 +428,9 @@ impl<'a> ServeSim<'a> {
             Method::Step => {
                 // Algorithm 1, serving form: argmin aggregated step score
                 // over the victim set, release KV at once.
-                let victim = running
-                    .iter()
-                    .copied()
-                    .filter(|&i| in_set(traces, i))
-                    .min_by(|&a, &b| {
-                        self.agg_score(&traces[a].st)
-                            .partial_cmp(&self.agg_score(&traces[b].st))
-                            .unwrap()
+                let victim =
+                    sched::lowest_score_victim(running, in_set, |i| {
+                        self.agg_score(&traces[i].st)
                     })
                     .expect("memory event with empty victim set");
                 let t = &mut traces[victim];
@@ -734,21 +439,14 @@ impl<'a> ServeSim<'a> {
                 let rid = t.rid;
                 pool.free_seq(victim as u64);
                 counters.pruned += 1;
-                let rq = &mut reqs[rid];
-                rq.live -= 1;
-                if rq.live == 0 {
-                    rq.st.completed(clock);
-                }
+                request_done(&mut reqs[rid], clock, completions);
             }
             _ => {
                 // vLLM preemption: evict the youngest running trace in
                 // the victim set (cheapest recompute), FIFO resume.
-                let victim = running
-                    .iter()
-                    .copied()
-                    .filter(|&i| in_set(traces, i))
-                    .min_by_key(|&i| traces[i].st.generated)
-                    .expect("memory event with empty victim set");
+                let victim =
+                    sched::youngest_victim(running, in_set, |i| traces[i].st.generated)
+                        .expect("memory event with empty victim set");
                 let t = &mut traces[victim];
                 t.st.status = TraceStatus::Preempted;
                 t.st.preemptions += 1;
@@ -773,91 +471,11 @@ impl<'a> ServeSim<'a> {
         pool.can_admit(rid as OwnerId, pool.blocks_needed_for_new(prefix) + 1)
     }
 
-    /// Resume the wait-queue head if its whole prefix fits — vLLM's FCFS
-    /// resume rule for the normal path where finishing traces free memory.
-    #[allow(clippy::too_many_arguments)]
-    fn try_resume(
-        &self,
-        first_live: usize,
-        traces: &mut [ServeTrace],
-        reqs: &mut [Req],
-        pool: &mut SharedKvPool,
-        wait_q: &mut VecDeque<usize>,
-        clock: &mut f64,
-        counters: &mut EngineCounters,
-    ) -> bool {
-        let Some(&head) = wait_q.front() else { return false };
-        if !self.resume_fits(traces, reqs, pool, head) {
-            return false;
-        }
-        wait_q.pop_front();
-        self.admit_resumed(first_live, head, traces, reqs, pool, clock, counters);
-        true
-    }
-
-    /// Stalled-engine resume: first queued trace (FIFO order) whose
-    /// prefix fits; false only when none fits.
-    #[allow(clippy::too_many_arguments)]
-    fn resume_first_fit(
-        &self,
-        first_live: usize,
-        traces: &mut [ServeTrace],
-        reqs: &mut [Req],
-        pool: &mut SharedKvPool,
-        wait_q: &mut VecDeque<usize>,
-        clock: &mut f64,
-        counters: &mut EngineCounters,
-    ) -> bool {
-        let Some(pos) =
-            (0..wait_q.len()).find(|&p| self.resume_fits(traces, reqs, pool, wait_q[p]))
-        else {
-            return false;
-        };
-        let tid = wait_q.remove(pos).expect("position came from the queue");
-        self.admit_resumed(first_live, tid, traces, reqs, pool, clock, counters);
-        true
-    }
-
-    /// Re-admit a dequeued trace: recompute-on-resume rebuilds the prefix
-    /// KV with a prefill pass that stalls the engine. `first_live` is the
-    /// caller's terminal-prefix watermark (accrual skips terminal traces).
-    #[allow(clippy::too_many_arguments)]
-    fn admit_resumed(
-        &self,
-        first_live: usize,
-        tid: usize,
-        traces: &mut [ServeTrace],
-        reqs: &mut [Req],
-        pool: &mut SharedKvPool,
-        clock: &mut f64,
-        counters: &mut EngineCounters,
-    ) {
-        let rid = traces[tid].rid;
-        let prefix = reqs[rid].q.prompt_tokens + traces[tid].st.generated as usize;
-        let ok = pool.allocate_seq(rid as OwnerId, tid as u64, prefix);
-        debug_assert!(ok, "resume_fits guaranteed the admission");
-        traces[tid].st.status = TraceStatus::Running;
-        reqs[rid].st.admitted(*clock);
-        counters.resumes += 1;
-        let dt = self.profile.timing.prefill(prefix);
-        *clock += dt;
-        for t in traces[first_live..].iter_mut() {
-            match t.st.status {
-                TraceStatus::Running => t.st.decode_time += dt,
-                TraceStatus::Preempted => t.st.wait_time += dt,
-                _ => {}
-            }
-        }
-        // The resumed trace itself: reconstruction counts as waiting.
-        let t = &mut traces[tid].st;
-        t.decode_time -= dt;
-        t.wait_time += dt;
-    }
-
     /// Slim-SC similarity check within one request (thought level): pair
     /// up its active traces at random, prune one member of each pair
     /// whose modelled similarity crosses the threshold. Same calibration
     /// as the single-question engine.
+    #[allow(clippy::too_many_arguments)]
     fn slim_check_request(
         &self,
         rid: usize,
@@ -866,6 +484,7 @@ impl<'a> ServeSim<'a> {
         pool: &mut SharedKvPool,
         counters: &mut EngineCounters,
         clock: f64,
+        completions: &mut Vec<(usize, f64)>,
     ) -> bool {
         let threshold = self.cfg.params.slim_similarity_threshold;
         let (lo, n) = (reqs[rid].lo, reqs[rid].n);
@@ -891,14 +510,510 @@ impl<'a> ServeSim<'a> {
                 t.st.finish_clock = clock;
                 pool.free_seq(victim as u64);
                 counters.pruned += 1;
-                rq.live -= 1;
+                request_done(rq, clock, completions);
                 pruned_any = true;
             }
         }
-        if rq.live == 0 {
-            rq.st.completed(clock);
-        }
         pruned_any
+    }
+}
+
+impl<'a> ServeEngine<'a> {
+    /// A fresh engine over its own full-GPU [`SharedKvPool`]. The
+    /// `workload` field of `cfg` is ignored — drivers submit arrivals.
+    ///
+    /// Panics if `cfg.method` is [`Method::DeepConf`] (see
+    /// [`ServeSim::new`]).
+    pub fn new(cfg: &'a ServeSimConfig, gen: &'a TraceGen, scorer: &'a StepScorer) -> Self {
+        let sim = ServeSim::new(cfg, gen, scorer);
+        let n_per = if cfg.method == Method::Cot { 1 } else { cfg.n_traces };
+        let gpu = GpuSpec::gh200(cfg.mem_util);
+        let pool_blocks = gpu
+            .kv_capacity_blocks(
+                sim.profile.weight_bytes,
+                sim.profile.activation_bytes,
+                sim.profile.kv_bytes_per_token,
+                cfg.block_size,
+            )
+            .max(1);
+        let quota = cfg.quota_frac.map(|f| ((pool_blocks as f64 * f) as usize).max(1));
+        let pool = SharedKvPool::new(pool_blocks, cfg.block_size, quota);
+        let h = vec![0.0f32; gen.gen.d];
+        let z = vec![0.0f32; scorer.hidden];
+        ServeEngine {
+            sim,
+            n_per,
+            pool,
+            pool_blocks,
+            reqs: Vec::new(),
+            traces: Vec::new(),
+            next_end: Vec::new(),
+            wait_q: WaitQueue::new(),
+            counters: EngineCounters::default(),
+            clock: 0.0,
+            epoch: None,
+            first_live: 0,
+            submitted: 0,
+            drained: 0,
+            completions: Vec::new(),
+            running: Vec::new(),
+            cur_tokens: Vec::new(),
+            owner_pairs: Vec::new(),
+            h,
+            z,
+        }
+    }
+
+    /// Current engine wall-clock, seconds.
+    pub fn clock(&self) -> f64 {
+        self.clock
+    }
+
+    /// Requests submitted and not yet complete.
+    pub fn outstanding(&self) -> usize {
+        self.submitted - self.drained - self.completions.len()
+    }
+
+    /// No submitted request is still in flight.
+    pub fn is_idle(&self) -> bool {
+        self.outstanding() == 0
+    }
+
+    /// Live sequences resident in the engine's KV pool.
+    pub fn live_traces(&self) -> usize {
+        self.pool.num_seqs()
+    }
+
+    /// Free blocks in the engine's KV pool.
+    pub fn free_blocks(&self) -> usize {
+        self.pool.free_blocks()
+    }
+
+    /// Physical blocks in the engine's KV pool.
+    pub fn pool_blocks(&self) -> usize {
+        self.pool_blocks
+    }
+
+    /// Jump an idle engine's clock forward to `t` (never backward).
+    pub fn advance_idle_to(&mut self, t: f64) {
+        debug_assert!(self.is_idle(), "only an idle engine may jump its clock");
+        self.clock = self.clock.max(t);
+    }
+
+    /// Move all pending request completions `(request id, completion
+    /// clock)` into `out`, in completion order.
+    pub fn drain_completions_into(&mut self, out: &mut Vec<(usize, f64)>) {
+        self.drained += self.completions.len();
+        out.append(&mut self.completions);
+    }
+
+    /// Estimated KV blocks the engine's *surviving* traces still need to
+    /// finish — the KV-pressure signal the cluster router consumes.
+    ///
+    /// Per running trace the expected remaining generation is the
+    /// question's expected trace length
+    /// ([`TraceGen::expected_trace_tokens`] — the scheduler cannot see
+    /// sampled lengths) minus what the trace already generated, floored
+    /// at one step. Under STEP the demand is weighted by the trace's
+    /// survival odds — its score's rank fraction among the running set,
+    /// since the lowest-scored trace is the next prune victim — which is
+    /// exactly the signal per-trace confidence baselines cannot provide.
+    pub fn survivor_demand_blocks(&self) -> f64 {
+        let gen = self.sim.gen;
+        let floor = gen.bench.tokens_per_step;
+        let mut scores: Vec<(usize, f64)> = Vec::new();
+        for (i, t) in self.traces.iter().enumerate().skip(self.first_live) {
+            if t.st.status == TraceStatus::Running {
+                scores.push((i, self.sim.agg_score(&t.st)));
+            }
+        }
+        if scores.is_empty() {
+            return 0.0;
+        }
+        let weighted = self.sim.cfg.method == Method::Step && scores.len() > 1;
+        // Rank by one sort instead of a quadratic scan; `below` (the
+        // count of strictly lower scores) is the first index of the
+        // score's equal-run in the sorted order, so ties keep sharing a
+        // weight.
+        let mut sorted: Vec<f64> = scores.iter().map(|&(_, s)| s).collect();
+        sorted.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = scores.len() as f64;
+        let bs = self.sim.cfg.block_size as f64;
+        let mut demand = 0.0;
+        for &(i, s) in &scores {
+            let t = &self.traces[i];
+            let expected = gen.expected_trace_tokens(&self.reqs[t.rid].q);
+            let remaining = (expected - t.st.generated as f64).max(floor);
+            let w = if weighted {
+                let below = sorted.partition_point(|&x| x < s) as f64;
+                0.5 + 0.5 * below / (n - 1.0)
+            } else {
+                1.0
+            };
+            demand += w * remaining / bs;
+        }
+        demand
+    }
+
+    /// Submit one arrival: create its request's traces and admit
+    /// whatever fits; the rest joins the FIFO wait queue. One batched
+    /// prefill covers everything admitted here. An idle engine's clock
+    /// first jumps to the arrival instant (service cannot start before
+    /// the request exists); a busy engine admits at its current clock.
+    pub fn submit(&mut self, arr: &Arrival) {
+        if self.is_idle() {
+            self.clock = self.clock.max(arr.t_arrive);
+        }
+        if self.epoch.is_none() {
+            self.epoch = Some(arr.t_arrive);
+        }
+        self.submitted += 1;
+        self.counters.requests += 1;
+        let local = self.reqs.len();
+        let n_per = self.n_per;
+        let q = self.sim.gen.question(arr.qid);
+        let lo = self.traces.len();
+        let mut rq = Req {
+            st: RequestState::new(arr.rid, arr.qid, arr.t_arrive),
+            q,
+            lo,
+            n: n_per,
+            live: n_per,
+            boundaries: 0,
+            next_slim: self.sim.cfg.params.slim_check_interval_steps * n_per,
+            slim_rng: Rng::new(
+                self.sim.cfg.seed
+                    ^ (arr.rid as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                    ^ 0x0051_1A5C,
+            ),
+        };
+        let mut admitted = 0usize;
+        for i in 0..n_per {
+            let tid = lo + i;
+            // Trace streams offset by rid so repeated questions still
+            // decode distinct samples (cluster-wide: rid is global).
+            let spec = self.sim.gen.trace(&rq.q, arr.rid * n_per + i);
+            let mut st = TraceState::new(tid as u64, self.sim.cfg.params.deepconf_window);
+            let need = self.pool.blocks_needed_for_new(rq.q.prompt_tokens);
+            if self.pool.can_admit(local as OwnerId, need) {
+                let ok =
+                    self.pool.allocate_seq(local as OwnerId, tid as u64, rq.q.prompt_tokens);
+                debug_assert!(ok, "can_admit guaranteed the admission");
+                admitted += 1;
+            } else {
+                st.status = TraceStatus::Preempted;
+                self.wait_q.push_back(tid);
+            }
+            self.next_end.push(spec.step_ends[0]);
+            self.traces.push(ServeTrace { rid: local, spec, st });
+        }
+        if admitted > 0 {
+            rq.st.admitted(self.clock);
+            let dt = self.sim.profile.timing.prefill(rq.q.prompt_tokens * admitted);
+            self.clock += dt;
+            // The engine stalls for the prefill: earlier requests' live
+            // traces accrue decode (running) / wait (preempted) time
+            // (traces below the terminal-prefix watermark are all
+            // terminal — nothing to accrue).
+            for t in self.traces[self.first_live..lo].iter_mut() {
+                sched::accrue(&mut t.st, dt);
+            }
+        }
+        self.reqs.push(rq);
+    }
+
+    /// Advance until the clock reaches `t_limit` or the engine runs out
+    /// of work. On return either `clock() >= t_limit`, or
+    /// [`is_idle`](Self::is_idle) holds (possibly with undrained
+    /// completions).
+    pub fn run_until(&mut self, t_limit: f64) {
+        while self.clock < t_limit {
+            if matches!(self.step_event(t_limit), Step::Idle) {
+                return;
+            }
+        }
+    }
+
+    /// Advance until no work remains.
+    pub fn run_to_completion(&mut self) {
+        self.run_until(f64::INFINITY);
+    }
+
+    /// Process exactly one event (decode interval, memory event, or
+    /// resume/drop). Returns false when the engine had nothing to do.
+    pub fn run_one_event(&mut self) -> bool {
+        matches!(self.step_event(f64::INFINITY), Step::Advanced)
+    }
+
+    /// One iteration of the event loop, bounded by `t_limit`.
+    fn step_event(&mut self, t_limit: f64) -> Step {
+        while self.first_live < self.traces.len()
+            && !self.traces[self.first_live].st.status.is_active()
+        {
+            self.first_live += 1;
+        }
+        let mut running = std::mem::take(&mut self.running);
+        running.clear();
+        for (i, t) in self.traces.iter().enumerate().skip(self.first_live) {
+            if t.st.status == TraceStatus::Running {
+                running.push(i);
+            }
+        }
+
+        if running.is_empty() {
+            self.running = running;
+            if !self.wait_q.is_empty() {
+                self.resume_or_drop();
+                return Step::Advanced;
+            }
+            return Step::Idle;
+        }
+
+        let b = running.len();
+
+        // ---- event horizon: iterations until any step boundary.
+        let mut d_event = u64::MAX;
+        for &i in &running {
+            d_event = d_event.min(self.next_end[i] - self.traces[i].st.generated);
+        }
+        debug_assert!(d_event >= 1);
+
+        // ---- limit horizon: do not decode past the driver's limit
+        // (the next arrival, for the single-GPU driver).
+        let k0: usize = running
+            .iter()
+            .map(|&i| {
+                self.reqs[self.traces[i].rid].q.prompt_tokens
+                    + self.traces[i].st.generated as usize
+            })
+            .sum();
+        let mut d_cap = d_event;
+        if t_limit.is_finite() {
+            let gap = t_limit - self.clock;
+            d_cap = d_cap.min(self.sim.iters_within(b, k0, d_event, gap).max(1));
+        }
+
+        // ---- memory horizon over the shared pool (+ quotas).
+        let d_mem = self.sim.memory_horizon(
+            &self.traces,
+            &self.pool,
+            &running,
+            d_cap,
+            &mut self.cur_tokens,
+            &mut self.owner_pairs,
+        );
+        if d_mem == 0 {
+            self.sim.memory_event(
+                &running,
+                &mut self.traces,
+                &mut self.reqs,
+                &mut self.pool,
+                &mut self.wait_q,
+                &mut self.counters,
+                self.clock,
+                &mut self.completions,
+            );
+            self.running = running;
+            return Step::Advanced;
+        }
+        let d = d_cap.min(d_mem);
+
+        // ---- advance time + tokens.
+        let dt = self.sim.profile.timing.decode_interval(b, k0, d);
+        self.clock += dt;
+        self.counters.decode_iterations += d;
+        self.counters.generated_tokens += d * b as u64;
+        let fl = self.first_live;
+        for t in self.traces[fl..].iter_mut() {
+            sched::accrue(&mut t.st, dt);
+        }
+        for &i in &running {
+            self.traces[i].st.generated += d;
+            let ok = self.pool.append_tokens(i as u64, d as usize);
+            debug_assert!(ok, "memory horizon must guarantee the append");
+        }
+
+        // ---- boundary / completion events.
+        let mut freed_any = false;
+        let needs_scores = self.sim.cfg.method == Method::Step;
+        let clock = self.clock;
+        for &i in &running {
+            let t = &mut self.traces[i];
+            if t.st.generated != self.next_end[i] {
+                continue;
+            }
+            let step_n = t.st.next_step + 1;
+            t.st.next_step += 1;
+            let rid = t.rid;
+            self.reqs[rid].boundaries += 1;
+            if t.st.generated < t.spec.total_tokens {
+                self.next_end[i] = t.spec.step_ends[t.st.next_step];
+            }
+            if needs_scores {
+                self.sim.gen.hidden_state_into(&self.reqs[rid].q, &t.spec, step_n, &mut self.h);
+                let s = self.sim.scorer.score_into(&self.h, &mut self.z) as f64;
+                t.st.push_score(s);
+                self.counters.step_scores += 1;
+            }
+            if t.st.generated == t.spec.total_tokens {
+                t.st.status = TraceStatus::Finished;
+                t.st.finish_clock = clock;
+                self.pool.free_seq(i as u64);
+                freed_any = true;
+                let rq = &mut self.reqs[rid];
+                rq.st.first_vote(clock);
+                request_done(rq, clock, &mut self.completions);
+            }
+        }
+
+        // ---- Slim-SC periodic similarity pruning (per request).
+        if self.sim.cfg.method == Method::SlimSc {
+            for rid in 0..self.reqs.len() {
+                if self.reqs[rid].live == 0
+                    || self.reqs[rid].boundaries < self.reqs[rid].next_slim
+                {
+                    continue;
+                }
+                let (lo, n) = (self.reqs[rid].lo, self.reqs[rid].n);
+                let active = self.traces[lo..lo + n]
+                    .iter()
+                    .filter(|t| t.st.status == TraceStatus::Running)
+                    .count();
+                self.reqs[rid].next_slim +=
+                    self.sim.cfg.params.slim_check_interval_steps * active.max(1);
+                freed_any |= self.sim.slim_check_request(
+                    rid,
+                    &mut self.reqs,
+                    &mut self.traces,
+                    &mut self.pool,
+                    &mut self.counters,
+                    clock,
+                    &mut self.completions,
+                );
+            }
+        }
+
+        if freed_any {
+            while self.try_resume_head() {}
+        }
+        self.running = running;
+        Step::Advanced
+    }
+
+    /// Fully stalled: resume the first queued trace (FIFO) whose prefix
+    /// fits; only when none can ever fit is the head dropped (counted as
+    /// pruned).
+    fn resume_or_drop(&mut self) {
+        let (sim, traces, reqs, pool) = (&self.sim, &self.traces, &self.reqs, &self.pool);
+        let fitting = self.wait_q.pop_first_fit(|tid| sim.resume_fits(traces, reqs, pool, tid));
+        if let Some(tid) = fitting {
+            self.admit_resumed(tid);
+            return;
+        }
+        let head = self.wait_q.pop_front().expect("caller checked non-empty");
+        let t = &mut self.traces[head];
+        t.st.status = TraceStatus::Pruned;
+        t.st.finish_clock = self.clock;
+        let rid = t.rid;
+        self.counters.pruned += 1;
+        request_done(&mut self.reqs[rid], self.clock, &mut self.completions);
+    }
+
+    /// Resume the wait-queue head if its whole prefix fits — vLLM's FCFS
+    /// resume rule for the normal path where finishing traces free memory.
+    fn try_resume_head(&mut self) -> bool {
+        let (sim, traces, reqs, pool) = (&self.sim, &self.traces, &self.reqs, &self.pool);
+        let head = self.wait_q.pop_head_if(|tid| sim.resume_fits(traces, reqs, pool, tid));
+        let Some(tid) = head else {
+            return false;
+        };
+        self.admit_resumed(tid);
+        true
+    }
+
+    /// Re-admit a dequeued trace: recompute-on-resume rebuilds the prefix
+    /// KV with a prefill pass that stalls the engine.
+    fn admit_resumed(&mut self, tid: usize) {
+        let rid = self.traces[tid].rid;
+        let prefix = self.reqs[rid].q.prompt_tokens + self.traces[tid].st.generated as usize;
+        let ok = self.pool.allocate_seq(rid as OwnerId, tid as u64, prefix);
+        debug_assert!(ok, "resume_fits guaranteed the admission");
+        self.traces[tid].st.status = TraceStatus::Running;
+        self.reqs[rid].st.admitted(self.clock);
+        self.counters.resumes += 1;
+        let dt = self.sim.profile.timing.prefill(prefix);
+        self.clock += dt;
+        let fl = self.first_live;
+        for t in self.traces[fl..].iter_mut() {
+            sched::accrue(&mut t.st, dt);
+        }
+        // The resumed trace itself: reconstruction counts as waiting.
+        sched::charge_resume(&mut self.traces[tid].st, dt);
+    }
+
+    /// Final aggregation: voting + per-request SLO metrics, in
+    /// submission order.
+    pub fn finish(self) -> ServeResult {
+        debug_assert!(self.wait_q.is_empty());
+        let cfg = self.sim.cfg;
+        let clock = self.clock;
+        let outcomes: Vec<RequestOutcome> = self
+            .reqs
+            .iter()
+            .map(|rq| {
+                let slice = &self.traces[rq.lo..rq.lo + rq.n];
+                let votes: Vec<Vote> = slice
+                    .iter()
+                    .filter_map(|t| {
+                        let answer = match t.st.status {
+                            TraceStatus::Finished => t.spec.answer,
+                            _ => None, // pruned / preempted traces abstain
+                        };
+                        answer?;
+                        let weight = if cfg.method == Method::Step {
+                            self.sim.agg_score(&t.st)
+                        } else {
+                            1.0
+                        };
+                        Some(Vote { answer, weight })
+                    })
+                    .collect();
+                let chosen = weighted_vote(&votes);
+                let t_done = rq.st.t_done.unwrap_or(clock);
+                RequestOutcome {
+                    rid: rq.st.rid,
+                    qid: rq.st.qid,
+                    correct: chosen == Some(0),
+                    chosen,
+                    t_arrive: rq.st.t_arrive,
+                    queue_s: rq.st.queue_s().unwrap_or(t_done - rq.st.t_arrive),
+                    latency_s: t_done - rq.st.t_arrive,
+                    ttfv_s: rq.st.ttfv_s().unwrap_or(t_done - rq.st.t_arrive),
+                    gen_tokens: slice.iter().map(|t| t.st.generated).sum(),
+                    mean_wait_s: slice.iter().map(|t| t.st.wait_time).sum::<f64>()
+                        / slice.len().max(1) as f64,
+                    mean_decode_s: slice.iter().map(|t| t.st.decode_time).sum::<f64>()
+                        / slice.len().max(1) as f64,
+                    n_finished: slice
+                        .iter()
+                        .filter(|t| t.st.status == TraceStatus::Finished)
+                        .count(),
+                    n_pruned: slice
+                        .iter()
+                        .filter(|t| t.st.status == TraceStatus::Pruned)
+                        .count(),
+                    n_preemptions: slice.iter().map(|t| t.st.preemptions).sum(),
+                }
+            })
+            .collect();
+
+        ServeResult {
+            outcomes,
+            makespan_s: clock - self.epoch.unwrap_or(clock),
+            counters: self.counters,
+            pool_blocks: self.pool_blocks,
+            peak_used_blocks: self.pool.peak_used_blocks(),
+        }
     }
 }
 
@@ -1082,5 +1197,103 @@ mod tests {
             assert_eq!(o.mean_wait_s, 0.0, "no queueing under light load");
             assert!(o.mean_decode_s > 0.0);
         }
+    }
+
+    /// Driving the engine stepwise (one event at a time after the last
+    /// arrival) reproduces the batch driver exactly — the contract the
+    /// cluster simulator relies on.
+    #[test]
+    fn stepwise_driver_matches_batch_run() {
+        for method in [Method::Sc, Method::Step] {
+            let cfg = pressured_cfg(method);
+            let gp = GenParams::default_d64();
+            let scorer = projection_scorer(&gp);
+            let gen = TraceGen::new(cfg.model, cfg.bench, gp, cfg.seed ^ 0x5EED);
+            let batch = ServeSim::new(&cfg, &gen, &scorer).run();
+
+            let arrivals = cfg
+                .workload
+                .generate(gen.bench.n_questions, cfg.seed ^ 0xA331_4A11_D00D_FEED);
+            let mut eng = ServeEngine::new(&cfg, &gen, &scorer);
+            let mut next = 0usize;
+            let mut done: Vec<(usize, f64)> = Vec::new();
+            loop {
+                while next < arrivals.len() && arrivals[next].t_arrive <= eng.clock() {
+                    eng.submit(&arrivals[next]);
+                    next += 1;
+                }
+                if next < arrivals.len() {
+                    if eng.is_idle() {
+                        eng.advance_idle_to(arrivals[next].t_arrive);
+                        continue;
+                    }
+                    eng.run_until(arrivals[next].t_arrive);
+                } else if !eng.run_one_event() {
+                    break;
+                }
+                eng.drain_completions_into(&mut done);
+            }
+            eng.drain_completions_into(&mut done);
+            assert_eq!(done.len(), arrivals.len(), "{method:?}: all requests complete");
+            assert!(eng.is_idle());
+            let step = eng.finish();
+            assert_eq!(batch.makespan_s, step.makespan_s, "{method:?}");
+            assert_eq!(
+                batch.counters.generated_tokens,
+                step.counters.generated_tokens,
+                "{method:?}"
+            );
+            for (x, y) in batch.outcomes.iter().zip(&step.outcomes) {
+                assert_eq!(x.latency_s, y.latency_s, "{method:?}");
+                assert_eq!(x.chosen, y.chosen, "{method:?}");
+            }
+        }
+    }
+
+    /// Completion notifications carry the external rid and a clock
+    /// consistent with the outcome's latency.
+    #[test]
+    fn completions_match_outcomes() {
+        let cfg = pressured_cfg(Method::Step);
+        let gp = GenParams::default_d64();
+        let scorer = projection_scorer(&gp);
+        let gen = TraceGen::new(cfg.model, cfg.bench, gp.clone(), cfg.seed ^ 0x5EED);
+        let arrivals = cfg
+            .workload
+            .generate(gen.bench.n_questions, cfg.seed ^ 0xA331_4A11_D00D_FEED);
+        let mut eng = ServeEngine::new(&cfg, &gen, &scorer);
+        for a in &arrivals {
+            if eng.is_idle() {
+                eng.advance_idle_to(a.t_arrive);
+            }
+            eng.run_until(a.t_arrive);
+            eng.submit(a);
+        }
+        eng.run_to_completion();
+        let mut done: Vec<(usize, f64)> = Vec::new();
+        eng.drain_completions_into(&mut done);
+        let r = eng.finish();
+        assert_eq!(done.len(), r.outcomes.len());
+        for (rid, t_done) in done {
+            let o = r.outcomes.iter().find(|o| o.rid == rid).expect("rid known");
+            assert!((o.t_arrive + o.latency_s - t_done).abs() < 1e-9);
+        }
+    }
+
+    /// The KV-pressure view is zero when idle and positive under load.
+    #[test]
+    fn survivor_demand_tracks_load() {
+        let cfg = light_cfg(Method::Step);
+        let gp = GenParams::default_d64();
+        let scorer = projection_scorer(&gp);
+        let gen = TraceGen::new(cfg.model, cfg.bench, gp, cfg.seed ^ 0x5EED);
+        let mut eng = ServeEngine::new(&cfg, &gen, &scorer);
+        assert_eq!(eng.survivor_demand_blocks(), 0.0);
+        eng.submit(&Arrival { rid: 0, qid: 0, t_arrive: 0.0 });
+        assert!(eng.survivor_demand_blocks() > 0.0);
+        assert_eq!(eng.outstanding(), 1);
+        eng.run_to_completion();
+        assert_eq!(eng.survivor_demand_blocks(), 0.0);
+        assert!(eng.is_idle());
     }
 }

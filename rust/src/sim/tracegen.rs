@@ -227,6 +227,17 @@ impl TraceGen {
         Question { qid, p_solve, len_mult, w_q, prompt_tokens, seed: rng.next_u64() }
     }
 
+    /// Scheduler-visible expectation of one trace's generated length for
+    /// question `q` (tokens): the benchmark's label-weighted mean scaled
+    /// by the question's difficulty/length multiplier. Routers and
+    /// admission control consume this — sampled lengths stay hidden from
+    /// the scheduler.
+    pub fn expected_trace_tokens(&self, q: &Question) -> f64 {
+        let mean_total = self.mean_solve * self.mean_len_correct
+            + (1.0 - self.mean_solve) * self.mean_len_incorrect;
+        q.len_mult * mean_total
+    }
+
     /// Sample trace `idx` of a question (deterministic).
     pub fn trace(&self, q: &Question, idx: usize) -> TraceSpec {
         let seed = q.seed ^ (idx as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15);

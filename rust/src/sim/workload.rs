@@ -1,12 +1,14 @@
-//! Open-loop workload generator for the multi-request serving simulator
-//! ([`crate::sim::serve`]).
+//! Workload generators for the serving simulators
+//! ([`crate::sim::serve`], [`crate::sim::cluster`]).
 //!
 //! A workload is a deterministic sequence of request arrivals over a
 //! benchmark's question pool: each arrival carries a request id, the
-//! question it asks, and its wall-clock arrival time. Arrival times come
-//! from an open-loop process (the client does not wait for responses —
-//! the regime where continuous batching and the paper's §4.2
-//! memory-triggered pruning actually matter):
+//! question it asks, and its wall-clock arrival time. Two regimes:
+//!
+//! **Open loop** ([`WorkloadSpec`]) — clients do not wait for responses,
+//! so the offered rate is fixed regardless of server state (the regime
+//! where continuous batching and the paper's §4.2 memory-triggered
+//! pruning actually matter):
 //!
 //! * [`ArrivalProcess::Poisson`] — i.i.d. exponential inter-arrival gaps
 //!   at a target request rate, the standard serving-benchmark model.
@@ -14,9 +16,20 @@
 //!   exponential gaps *between* bursts, preserving the same long-run
 //!   rate; stresses admission and the shared KV pool much harder.
 //!
-//! Generation is a pure function of `(spec, seed)` — no global state, no
-//! threading — so arrival sequences are bit-identical across runs and
-//! trivially invariant to the harness `--threads` setting
+//! **Closed loop** ([`ClosedLoopSpec`]) — a fixed client population;
+//! each client issues one request, waits for its completion, thinks for
+//! an exponential time, and issues the next. Offered load self-throttles
+//! with server latency, which is what makes *saturation* observable: an
+//! open loop past capacity just grows its queue without bound, a closed
+//! loop settles at the concurrency the cluster can actually sustain.
+//! The arrival stream is completion-driven, so the generator is
+//! interactive ([`ClosedLoopClients::next_arrival`]) rather than
+//! pregenerated.
+//!
+//! Generation is a pure function of `(spec, seed)` — for the closed
+//! loop, of `(spec, seed, completion history)` — with no global state
+//! and no threading, so arrival sequences are bit-identical across runs
+//! and trivially invariant to the harness `--threads` setting
 //! (`tests/parallel_determinism.rs` locks this in).
 
 use crate::util::rng::Rng;
@@ -135,8 +148,193 @@ impl WorkloadSpec {
 
 /// One exponential inter-arrival gap at `rate` events/second.
 fn exp_gap(rng: &mut Rng, rate: f64) -> f64 {
-    // f64() is in [0, 1), so 1 - u is in (0, 1] and ln() is finite.
-    -(1.0 - rng.f64()).ln() / rate
+    // f64() is in [0, 1), so 1 - u is in (0, 1] and ln() is finite. The
+    // max(0.0) normalizes the u = 0 draw's -0.0 to +0.0: arrival times
+    // must stay non-negative *by bit pattern* too, because the cluster's
+    // event heap orders times by their IEEE-754 bits.
+    (-(1.0 - rng.f64()).ln() / rate).max(0.0)
+}
+
+/// A closed-loop client population: `clients` concurrent users, each
+/// cycling request → wait for completion → think → next request, until
+/// a global budget of `n_requests` has been issued.
+///
+/// The `heavy_frac` knob pins a leading fraction of the clients to a
+/// caller-supplied "heavy" question subset (e.g. the benchmark's
+/// longest-trace questions), producing the skewed per-request KV
+/// footprints that separate load-aware routing from round-robin.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ClosedLoopSpec {
+    /// Concurrent client population size (>= 1).
+    pub clients: usize,
+    /// Mean exponential think time between a completion and the
+    /// client's next request, seconds (> 0).
+    pub think_mean_s: f64,
+    /// Total requests issued across all clients before the run drains.
+    pub n_requests: usize,
+    /// Fraction of the client population pinned to the heavy question
+    /// subset (0.0 = every client draws uniformly).
+    pub heavy_frac: f64,
+}
+
+impl ClosedLoopSpec {
+    /// A uniform closed loop: `clients` users, `think_mean_s` mean think
+    /// time, `n_requests` total budget, no skew.
+    pub fn new(clients: usize, think_mean_s: f64, n_requests: usize) -> ClosedLoopSpec {
+        ClosedLoopSpec {
+            clients: clients.max(1),
+            think_mean_s,
+            n_requests,
+            heavy_frac: 0.0,
+        }
+    }
+
+    /// Same population with the leading `heavy_frac` of clients pinned
+    /// to the heavy question subset.
+    pub fn skewed(
+        clients: usize,
+        think_mean_s: f64,
+        n_requests: usize,
+        heavy_frac: f64,
+    ) -> ClosedLoopSpec {
+        ClosedLoopSpec {
+            clients: clients.max(1),
+            think_mean_s,
+            n_requests,
+            heavy_frac: heavy_frac.clamp(0.0, 1.0),
+        }
+    }
+
+    /// Instantiate the client population. `heavy_qids` is the heavy
+    /// question subset skewed clients draw from (callers typically pass
+    /// the top trace-length quartile; ignored when empty or when
+    /// `heavy_frac` is 0). Deterministic in `(self, seed)`: every
+    /// client owns an independent RNG stream derived from the seed.
+    pub fn clients(
+        &self,
+        n_questions: usize,
+        heavy_qids: Vec<usize>,
+        seed: u64,
+    ) -> ClosedLoopClients {
+        assert!(self.think_mean_s > 0.0, "think time must be positive");
+        let n_heavy = if heavy_qids.is_empty() {
+            0
+        } else {
+            ((self.clients as f64 * self.heavy_frac).round() as usize).min(self.clients)
+        };
+        let streams = (0..self.clients)
+            .map(|c| {
+                Rng::new(
+                    seed ^ 0xC105_ED10_0BAD_C0DE
+                        ^ (c as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                )
+            })
+            .collect();
+        ClosedLoopClients {
+            spec: *self,
+            n_questions: n_questions.max(1),
+            heavy_qids,
+            n_heavy,
+            streams,
+            issued: 0,
+            client_of: Vec::new(),
+        }
+    }
+}
+
+/// Live state of a [`ClosedLoopSpec`] population: per-client RNG
+/// streams and the global request budget.
+///
+/// # Examples
+///
+/// The stream is deterministic given the seed and the completion
+/// history:
+///
+/// ```
+/// use step::sim::workload::ClosedLoopSpec;
+///
+/// let spec = ClosedLoopSpec::new(2, 30.0, 4);
+/// let mut a = spec.clients(10, Vec::new(), 7);
+/// let mut b = spec.clients(10, Vec::new(), 7);
+/// let first_a = a.initial_arrivals();
+/// let first_b = b.initial_arrivals();
+/// assert_eq!(first_a, first_b);
+/// assert_eq!(first_a.len(), 2);
+/// // Client 0's request completes at t = 100: its next arrival is
+/// // reproducible and strictly later.
+/// let next_a = a.next_arrival(0, 100.0).unwrap();
+/// let next_b = b.next_arrival(0, 100.0).unwrap();
+/// assert_eq!(next_a, next_b);
+/// assert!(next_a.t_arrive > 100.0);
+/// ```
+#[derive(Debug, Clone)]
+pub struct ClosedLoopClients {
+    spec: ClosedLoopSpec,
+    n_questions: usize,
+    heavy_qids: Vec<usize>,
+    /// Clients `0..n_heavy` draw from `heavy_qids`; the rest uniform.
+    n_heavy: usize,
+    streams: Vec<Rng>,
+    issued: usize,
+    /// Issuing client per request id (dense, issue order).
+    client_of: Vec<usize>,
+}
+
+impl ClosedLoopClients {
+    /// Total requests issued so far (request ids are `0..issued`).
+    pub fn issued(&self) -> usize {
+        self.issued
+    }
+
+    /// Requests still available under the global budget.
+    pub fn remaining(&self) -> usize {
+        self.spec.n_requests.saturating_sub(self.issued)
+    }
+
+    /// The client that issued request `rid`.
+    pub fn client_of(&self, rid: usize) -> usize {
+        self.client_of[rid]
+    }
+
+    /// Draw one request for `client` arriving at `t`.
+    fn issue(&mut self, client: usize, t: f64) -> Arrival {
+        let rid = self.issued;
+        self.issued += 1;
+        self.client_of.push(client);
+        let rng = &mut self.streams[client];
+        let qid = if client < self.n_heavy {
+            self.heavy_qids[rng.below(self.heavy_qids.len())]
+        } else {
+            rng.below(self.n_questions)
+        };
+        Arrival { rid, qid, t_arrive: t }
+    }
+
+    /// The initial wave: one request per client at an exponential think
+    /// offset from t = 0 (clients do not all arrive at one instant).
+    /// Stops early if the budget is smaller than the population. Call
+    /// exactly once, before any [`next_arrival`](Self::next_arrival).
+    pub fn initial_arrivals(&mut self) -> Vec<Arrival> {
+        assert_eq!(self.issued, 0, "initial_arrivals must be the first issue");
+        let n = self.spec.clients.min(self.spec.n_requests);
+        (0..n)
+            .map(|c| {
+                let gap = exp_gap(&mut self.streams[c], 1.0 / self.spec.think_mean_s);
+                self.issue(c, gap)
+            })
+            .collect()
+    }
+
+    /// The next request of the client whose previous request completed
+    /// at `t_done`: it thinks for an exponential gap, then arrives.
+    /// `None` once the global budget is spent.
+    pub fn next_arrival(&mut self, client: usize, t_done: f64) -> Option<Arrival> {
+        if self.remaining() == 0 {
+            return None;
+        }
+        let gap = exp_gap(&mut self.streams[client], 1.0 / self.spec.think_mean_s);
+        Some(self.issue(client, t_done + gap))
+    }
 }
 
 #[cfg(test)]
@@ -193,5 +391,85 @@ mod tests {
             seen[a.qid] = true;
         }
         assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn closed_loop_budget_and_rid_density() {
+        let spec = ClosedLoopSpec::new(3, 10.0, 7);
+        let mut cl = spec.clients(10, Vec::new(), 5);
+        let first = cl.initial_arrivals();
+        assert_eq!(first.len(), 3);
+        for (i, a) in first.iter().enumerate() {
+            assert_eq!(a.rid, i);
+            assert!(a.t_arrive > 0.0);
+            assert!(a.qid < 10);
+            assert_eq!(cl.client_of(a.rid), i);
+        }
+        // Cycle completions round-robin until the budget runs dry.
+        let mut t = 100.0;
+        let mut client = 0;
+        let mut rids = Vec::new();
+        while let Some(a) = cl.next_arrival(client, t) {
+            assert!(a.t_arrive > t);
+            rids.push(a.rid);
+            t += 50.0;
+            client = (client + 1) % 3;
+        }
+        assert_eq!(cl.issued(), 7);
+        assert_eq!(rids, vec![3, 4, 5, 6]);
+        assert_eq!(cl.remaining(), 0);
+    }
+
+    #[test]
+    fn closed_loop_budget_smaller_than_population() {
+        let spec = ClosedLoopSpec::new(8, 10.0, 3);
+        let mut cl = spec.clients(5, Vec::new(), 1);
+        assert_eq!(cl.initial_arrivals().len(), 3);
+        assert_eq!(cl.next_arrival(0, 1.0), None);
+    }
+
+    #[test]
+    fn closed_loop_heavy_clients_draw_from_heavy_set() {
+        let spec = ClosedLoopSpec::skewed(4, 10.0, 40, 0.5);
+        let heavy = vec![7usize, 9];
+        let mut cl = spec.clients(10, heavy.clone(), 3);
+        let first = cl.initial_arrivals();
+        // Clients 0 and 1 (the leading 50%) are pinned to the heavy set.
+        for a in &first[..2] {
+            assert!(heavy.contains(&a.qid), "heavy client drew {}", a.qid);
+        }
+        let mut t = 0.0;
+        for _ in 0..10 {
+            let a = cl.next_arrival(0, t).unwrap();
+            assert!(heavy.contains(&a.qid));
+            t = a.t_arrive;
+        }
+        // Uniform clients can reach the whole pool.
+        let mut seen = [false; 10];
+        let mut t = 0.0;
+        while let Some(a) = cl.next_arrival(3, t) {
+            seen[a.qid] = true;
+            t = a.t_arrive;
+        }
+        assert!(seen.iter().filter(|&&s| s).count() > 2);
+    }
+
+    #[test]
+    fn closed_loop_deterministic_per_seed() {
+        let spec = ClosedLoopSpec::skewed(3, 20.0, 12, 0.34);
+        let drive = |seed: u64| -> Vec<Arrival> {
+            let mut cl = spec.clients(10, vec![1, 2], seed);
+            let mut out = cl.initial_arrivals();
+            let mut t = 10.0;
+            let mut c = 0;
+            while let Some(a) = cl.next_arrival(c, t) {
+                t = a.t_arrive + 5.0;
+                c = (c + 1) % 3;
+                out.push(a);
+            }
+            out
+        };
+        assert_eq!(drive(11), drive(11));
+        assert_ne!(drive(11), drive(12));
     }
 }

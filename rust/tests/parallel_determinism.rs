@@ -13,9 +13,11 @@ use step::harness::cells::{
     projection_scorer, run_cell, run_cell_with, run_cells, CellJob, CellOpts,
 };
 use step::harness::table5::{metrics_json, run_methods, ServingOpts};
+use step::harness::table6;
+use step::harness::table6::ClusterOpts;
 use step::sim::profiles::{BenchId, ModelId};
 use step::sim::tracegen::GenParams;
-use step::sim::workload::WorkloadSpec;
+use step::sim::workload::{ClosedLoopSpec, WorkloadSpec};
 
 fn opts(threads: usize) -> CellOpts {
     CellOpts {
@@ -119,6 +121,69 @@ fn workload_generation_is_deterministic_per_seed() {
             "different seeds must give different workloads"
         );
     }
+}
+
+/// Property: the closed-loop generator is a pure function of
+/// (spec, seed, completion history) — replaying the same completion
+/// schedule reproduces the arrival stream byte-identically, a different
+/// seed diverges, and the request budget caps the stream.
+#[test]
+fn closed_loop_workload_is_deterministic() {
+    let spec = ClosedLoopSpec::skewed(4, 25.0, 20, 0.5);
+    let drive = |seed: u64| -> Vec<step::sim::workload::Arrival> {
+        let mut cl = spec.clients(12, vec![3, 8, 11], seed);
+        let mut out = cl.initial_arrivals();
+        // A fixed synthetic completion schedule: client c's request
+        // completes 40s after issue, cycling clients.
+        let mut t = 40.0;
+        let mut c = 0usize;
+        while let Some(a) = cl.next_arrival(c, t) {
+            t = a.t_arrive + 40.0;
+            c = (c + 1) % 4;
+            out.push(a);
+        }
+        out
+    };
+    let a = drive(9);
+    assert_eq!(a, drive(9), "same (spec, seed, history) must replay exactly");
+    assert_ne!(a, drive(10), "different seeds must diverge");
+    assert_eq!(a.len(), 20, "the budget caps the stream");
+    for (i, arr) in a.iter().enumerate() {
+        assert_eq!(arr.rid, i, "request ids are dense in issue order");
+    }
+}
+
+/// The cluster-sim acceptance contract: `--threads 1` and `--threads 8`
+/// produce byte-identical BENCH_cluster.json metric blocks, and reruns
+/// reproduce them exactly (the determinism contract extended to the
+/// cluster layer).
+#[test]
+fn cluster_metric_blocks_are_thread_invariant() {
+    let gp = GenParams::default_d64();
+    let sc = projection_scorer(&gp);
+    let base = ClusterOpts {
+        gpus: 2,
+        model: ModelId::Qwen3_4B,
+        bench: BenchId::GpqaDiamond,
+        n_requests: 4,
+        clients: 2,
+        think_s: 20.0,
+        n_traces: 4,
+        seed: 7,
+        threads: 1,
+        ..Default::default()
+    };
+    let (m, r) = table6::run_grids(&base, &gp, &sc);
+    let serial = table6::metrics_json(&base, &m, &r).to_string_pretty();
+    for threads in [2, 8] {
+        let opts = ClusterOpts { threads, ..base.clone() };
+        let (m, r) = table6::run_grids(&opts, &gp, &sc);
+        let sharded = table6::metrics_json(&opts, &m, &r).to_string_pretty();
+        assert_eq!(serial, sharded, "{threads}-thread cluster metrics differ from serial");
+    }
+    // Across runs at the same thread count: byte-identical too.
+    let (m2, r2) = table6::run_grids(&base, &gp, &sc);
+    assert_eq!(serial, table6::metrics_json(&base, &m2, &r2).to_string_pretty());
 }
 
 /// The serve-sim acceptance contract: `--threads 1` and `--threads 8`

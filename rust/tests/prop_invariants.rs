@@ -5,10 +5,13 @@
 
 use step::coordinator::voting::{majority_vote, weighted_vote, Vote};
 use step::kvcache::KvCacheManager;
+use step::sim::cluster::{ClusterConfig, ClusterSim, ClusterWorkload};
 use step::sim::des::{DesEngine, SimConfig};
 use step::sim::profiles::{BenchId, ModelId};
+use step::sim::router::RouterKind;
 use step::sim::tracegen::{GenParams, TraceGen};
 use step::sim::verifier;
+use step::sim::workload::{ClosedLoopSpec, WorkloadSpec};
 use step::util::rng::Rng;
 use step::util::stats::{percentile, rank_acc};
 
@@ -189,6 +192,91 @@ fn prop_percentile_monotone() {
 
 fn proj_scorer(gp: &GenParams) -> step::coordinator::scorer::StepScorer {
     step::harness::cells::projection_scorer(gp)
+}
+
+#[test]
+fn prop_cluster_router_invariants() {
+    // Across random cluster shapes (GPU count, method, router, admission
+    // bounds, open/closed workloads): placement conservation
+    // (offered == placed + shed, completed == placed), no outcome for a
+    // shed request, per-GPU outstanding quota respected, and outcomes
+    // dense/unique by rid.
+    let gp = GenParams::default_d64();
+    let scorer = proj_scorer(&gp);
+    use step::coordinator::method::Method;
+    let methods = [Method::Cot, Method::Sc, Method::SlimSc, Method::Step];
+    forall("cluster-router-invariants", 10, |rng| {
+        let gpus = 1 + rng.below(3);
+        let method = methods[rng.below(4)];
+        let router = RouterKind::ALL[rng.below(3)];
+        let n_requests = 3 + rng.below(4);
+        let workload = if rng.bernoulli(0.5) {
+            ClusterWorkload::Open(WorkloadSpec::poisson(0.02 + rng.f64() * 0.1, n_requests))
+        } else {
+            ClusterWorkload::Closed(ClosedLoopSpec::skewed(
+                1 + rng.below(3),
+                5.0 + rng.f64() * 40.0,
+                n_requests,
+                rng.f64(),
+            ))
+        };
+        let mut cfg = ClusterConfig::new(
+            gpus,
+            ModelId::Qwen3_4B,
+            BenchId::GpqaDiamond,
+            method,
+            2 + rng.below(3),
+            workload,
+        );
+        cfg.router = router;
+        cfg.seed = rng.next_u64();
+        cfg.mem_util = 0.5 + 0.1 * rng.below(5) as f64;
+        cfg.admission.max_outstanding_per_gpu = 1 + rng.below(3);
+        cfg.admission.queue_cap = rng.below(3);
+        if rng.bernoulli(0.3) {
+            cfg.admission.slo_s = Some(10.0 + rng.f64() * 500.0);
+        }
+        let gen = TraceGen::new(cfg.model, cfg.bench, gp.clone(), rng.next_u64());
+        let r = ClusterSim::new(&cfg, &gen, &scorer).run();
+
+        // Placement conservation.
+        assert_eq!(r.counters.offered, n_requests as u64, "every request is offered");
+        assert_eq!(
+            r.counters.offered,
+            r.counters.placed + r.counters.shed,
+            "offered splits into placed + shed"
+        );
+        assert_eq!(r.counters.completed, r.counters.placed, "placed requests complete");
+        assert_eq!(r.outcomes.len() as u64, r.counters.completed);
+        assert_eq!(r.shed_rids.len() as u64, r.counters.shed);
+        assert_eq!(r.latency.count(), r.counters.completed);
+
+        // No placement to a shed request; outcome rids unique.
+        for w in r.outcomes.windows(2) {
+            assert!(w[0].rid < w[1].rid, "outcomes sorted and unique by rid");
+        }
+        for rid in &r.shed_rids {
+            assert!(
+                r.outcomes.iter().all(|o| o.rid != *rid),
+                "shed request {rid} must not complete"
+            );
+        }
+
+        // Quota respected per GPU; attribution sums to completions.
+        for &peak in &r.per_gpu_peak_outstanding {
+            assert!(
+                peak <= cfg.admission.max_outstanding_per_gpu,
+                "peak outstanding {peak} over quota {}",
+                cfg.admission.max_outstanding_per_gpu
+            );
+        }
+        assert_eq!(
+            r.per_gpu_requests.iter().sum::<usize>(),
+            r.outcomes.len(),
+            "every completion is attributed to exactly one GPU"
+        );
+        assert!(r.makespan_s >= 0.0 && r.makespan_s.is_finite());
+    });
 }
 
 #[test]
