@@ -1,11 +1,14 @@
 //! cargo bench --bench cluster_load — wall-clock of the multi-GPU
 //! cluster simulator plus its metric blocks, asserting (a) the metric
-//! blocks are byte-identical for any thread count and (b) the
+//! blocks are byte-identical for any thread count — including the
+//! intra-simulation `step_threads` axis that advances the R per-GPU
+//! engines in parallel between interaction points — and (b) the
 //! KV-pressure-aware router beats round-robin on p99 end-to-end latency
 //! for STEP under a skewed closed-loop workload at R >= 4 GPUs — the
 //! cluster-scale rendering of the paper's claim (step scores are a
-//! schedulable signal; per-trace confidence is not). Writes
-//! `results/BENCH_cluster.json`.
+//! schedulable signal; per-trace confidence is not). Records the
+//! serial-vs-parallel *stepping* wall-clock and speedup alongside the
+//! cell-sharding numbers. Writes `results/BENCH_cluster.json`.
 //!
 //! Runs self-contained on the built-in generator defaults (no artifacts
 //! needed), so CI and fresh checkouts can benchmark the cluster layer.
@@ -51,9 +54,28 @@ fn main() {
     let parallel_s = t1.elapsed().as_secs_f64();
     println!("parallel: {parallel_s:.2}s  ({threads} threads)");
 
+    // Intra-simulation parallelism: keep the cells serial and advance
+    // each cluster's R engines concurrently between interaction points.
+    // The serial run above (threads 1, step_threads 1) is the baseline.
+    let step_opts = ClusterOpts { step_threads: threads, ..opts.clone() };
+    let t2 = Instant::now();
+    let (m_step, r_step) = run_grids(&step_opts, &gp, &scorer);
+    let step_parallel_s = t2.elapsed().as_secs_f64();
+    let step_speedup = serial_s / step_parallel_s.max(1e-9);
+    println!(
+        "parallel engine stepping: {step_parallel_s:.2}s  ({threads} step threads, \
+         {step_speedup:.2}x vs serial stepping{})",
+        if step_speedup > 1.0 { "" } else { " — WARNING: no speedup on this machine" }
+    );
+
     let ser_json = metrics_json(&opts, &m_serial, &r_serial).to_string_pretty();
     let par_json = metrics_json(&par_opts, &m_par, &r_par).to_string_pretty();
     assert_eq!(ser_json, par_json, "cluster metric blocks must be thread-invariant");
+    let step_json = metrics_json(&step_opts, &m_step, &r_step).to_string_pretty();
+    assert_eq!(
+        ser_json, step_json,
+        "parallel-stepped cluster metric blocks must match serial stepping"
+    );
 
     for c in m_serial.iter().chain(&r_serial) {
         println!(
@@ -98,6 +120,12 @@ fn main() {
         map.insert("bench_parallel_s".to_string(), Json::Num(parallel_s));
         map.insert("bench_threads".to_string(), Json::Num(threads as f64));
         map.insert("identical_across_threads".to_string(), Json::Bool(true));
+        // Intra-simulation engine-stepping fields (expected speedup > 1
+        // at R >= 4 GPUs on >= 4 cores; asserted byte-identical above).
+        map.insert("step_parallel_s".to_string(), Json::Num(step_parallel_s));
+        map.insert("step_threads".to_string(), Json::Num(threads as f64));
+        map.insert("step_speedup".to_string(), Json::Num(step_speedup));
+        map.insert("identical_across_step_threads".to_string(), Json::Bool(true));
     }
     let path = write_results("BENCH_cluster", &report).expect("writing BENCH_cluster.json");
     println!("wrote {path:?}");

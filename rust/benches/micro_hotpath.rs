@@ -11,7 +11,10 @@ use step::coordinator::voting::{weighted_vote, Vote};
 use step::kvcache::KvCacheManager;
 use step::sim::des::{DesEngine, Scratch, SimConfig};
 use step::sim::profiles::{BenchId, ModelId};
+use step::sim::sched::{self, EventIndex};
+use step::sim::serve::{ServeEngine, ServeSimConfig};
 use step::sim::tracegen::{GenParams, TraceGen};
+use step::sim::workload::{Arrival, WorkloadSpec};
 use step::util::bench::{black_box, Bench};
 use step::util::rng::Rng;
 
@@ -93,6 +96,45 @@ fn main() {
         .collect();
     b.run_with_items("voting/weighted_vote(64)", 64.0, || weighted_vote(black_box(&votes)));
 
+    // ---- serving event horizons under many live traces: the
+    // incremental EventIndex (O(1) d_event peek + closed-form
+    // histogram demand per probe) vs the retired per-event scan
+    // (min fold + per-probe O(live) block-demand regather).
+    let m = 512usize;
+    let bs = 16u64;
+    let mut resident: Vec<u64> = Vec::with_capacity(m);
+    let mut dist: Vec<u64> = Vec::with_capacity(m);
+    let mut idx = EventIndex::new(bs as usize, false);
+    for i in 0..m {
+        let r = 100 + rng.below(3900) as u64;
+        let dd = 200 + rng.below(200) as u64;
+        resident.push(r);
+        dist.push(dd);
+        idx.insert(i, 0, r, dd);
+    }
+    let free = 3000u64;
+    let scan_event = |resident: &[u64], dist: &[u64]| -> (u64, u64) {
+        let d_event = dist.iter().copied().min().expect("non-empty");
+        let fits = |d: u64| {
+            resident.iter().map(|&c| (c + d).div_ceil(bs) - c.div_ceil(bs)).sum::<u64>()
+                <= free
+        };
+        (d_event, sched::max_fitting(d_event, fits))
+    };
+    let scanned = scan_event(&resident, &dist);
+    let indexed = {
+        let d_event = idx.d_event().expect("non-empty");
+        (d_event, sched::max_fitting(d_event, |d| idx.pool_demand(d) <= free))
+    };
+    assert_eq!(scanned, indexed, "indexed horizons must equal the scan");
+    b.run_with_items("serve/event_scan(512)", m as f64, || {
+        scan_event(black_box(&resident), black_box(&dist))
+    });
+    b.run_with_items("serve/event_indexed(512)", m as f64, || {
+        let d_event = idx.d_event().expect("non-empty");
+        (d_event, sched::max_fitting(d_event, |d| idx.pool_demand(d) <= free))
+    });
+
     // ---- full DES question (the experiment engine's unit of work).
     let gp = GenParams::default_d64();
     let gen = TraceGen::new(ModelId::DeepSeek8B, BenchId::Hmmt2425, gp.clone(), 1);
@@ -113,6 +155,43 @@ fn main() {
             engine.run_question_with(black_box(qid % 30), &mut scratch)
         });
     }
+
+    // ---- router view: the incrementally maintained score multiset vs
+    // the sort-per-call scan, on a mid-run engine holding many live
+    // traces (the state every cluster placement queries per GPU).
+    let rv_cfg = {
+        let mut c = ServeSimConfig::new(
+            ModelId::Qwen3_4B,
+            BenchId::GpqaDiamond,
+            Method::Step,
+            64,
+            WorkloadSpec::poisson(0.05, 4),
+        );
+        c.seed = 7;
+        c.route_views = true;
+        c
+    };
+    let rv_gen = TraceGen::new(rv_cfg.model, rv_cfg.bench, gp.clone(), rv_cfg.seed ^ 0x5EED);
+    let mut eng = ServeEngine::new(&rv_cfg, &rv_gen, &proj_scorer);
+    for rid in 0..4 {
+        eng.submit(&Arrival { rid, qid: rid, t_arrive: 0.0 });
+    }
+    for _ in 0..64 {
+        eng.run_one_event();
+    }
+    let live = eng.live_traces();
+    assert!(live > 32, "mid-run engine should hold many live traces, got {live}");
+    assert_eq!(
+        eng.survivor_demand_blocks(),
+        eng.survivor_demand_blocks_scan(),
+        "incremental router view must equal the scan"
+    );
+    b.run_with_items(&format!("router/pressure_scan(live={live})"), live as f64, || {
+        eng.survivor_demand_blocks_scan()
+    });
+    b.run_with_items(&format!("router/pressure_incremental(live={live})"), live as f64, || {
+        eng.survivor_demand_blocks()
+    });
 
     println!("\n{} cases done.", b.results.len());
 }

@@ -82,6 +82,12 @@ pub struct ClusterOpts {
     /// Worker threads sharding the cells (0 = all cores). Metric
     /// output is bit-identical for any value.
     pub threads: usize,
+    /// Worker threads advancing each cluster's per-GPU engines in
+    /// parallel between interaction points (0 = all cores, 1 =
+    /// serial). Bit-identical output for any value; default 1 because
+    /// the cells themselves shard across `threads`. Not part of the
+    /// metric JSON — it cannot change a single byte of it.
+    pub step_threads: usize,
 }
 
 impl Default for ClusterOpts {
@@ -105,6 +111,7 @@ impl Default for ClusterOpts {
             slo_s: None,
             seed: 0,
             threads: 0,
+            step_threads: 1,
         }
     }
 }
@@ -162,6 +169,7 @@ impl ClusterOpts {
             max_outstanding_per_gpu: self.max_outstanding.max(1),
             slo_s: self.slo_s,
         };
+        c.step_threads = self.step_threads;
         c
     }
 }

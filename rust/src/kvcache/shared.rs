@@ -55,6 +55,7 @@ impl SharedKvPool {
     }
 
     /// Currently free blocks.
+    #[inline]
     pub fn free_blocks(&self) -> usize {
         self.mgr.free_blocks()
     }
@@ -80,12 +81,17 @@ impl SharedKvPool {
     }
 
     /// Blocks currently held by `owner`.
+    #[inline]
     pub fn owner_used(&self, owner: OwnerId) -> usize {
         self.used_by.get(owner as usize).copied().unwrap_or(0)
     }
 
     /// Blocks `owner` may still allocate before hitting its quota;
-    /// `None` when no quota is configured (pool-bound only).
+    /// `None` when no quota is configured (pool-bound only). Called per
+    /// active owner on every probe of the serving engine's quota-bound
+    /// memory-horizon search (the per-owner *demands* come from the
+    /// scheduler's incremental index; this is only the headroom side).
+    #[inline]
     pub fn owner_headroom(&self, owner: OwnerId) -> Option<usize> {
         self.quota_blocks.map(|q| q.saturating_sub(self.owner_used(owner)))
     }
@@ -96,6 +102,7 @@ impl SharedKvPool {
     }
 
     /// Resident tokens of a sequence (0 if unknown).
+    #[inline]
     pub fn seq_tokens(&self, seq: SeqId) -> usize {
         self.mgr.seq_tokens(seq)
     }
@@ -106,12 +113,14 @@ impl SharedKvPool {
     }
 
     /// Blocks required to append `n` tokens to a live sequence.
+    #[inline]
     pub fn blocks_needed_for_append(&self, seq: SeqId, n: usize) -> usize {
         self.mgr.blocks_needed_for_append(seq, n)
     }
 
     /// Would allocating `blocks` for `owner` satisfy both the pool and
     /// the owner's quota right now?
+    #[inline]
     pub fn can_admit(&self, owner: OwnerId, blocks: usize) -> bool {
         self.mgr.can_allocate(blocks)
             && match self.owner_headroom(owner) {

@@ -72,6 +72,9 @@ CLUSTER-SIM OPTIONS (plus the serve-sim options above):
     --max-outstanding N  per-GPU cap on live requests (default 8)
     --slo S              SLO-aware early-reject budget, seconds
                          (default: off)
+    --step-threads N     advance the per-GPU engines in parallel between
+                         arrivals (0 = all cores; default 1 = serial).
+                         Metric output is bit-identical for any value
 
 Artifacts are read from $STEP_ARTIFACTS_DIR (default ./artifacts); run
 `make artifacts` first. Results are written to $STEP_RESULTS_DIR
@@ -209,6 +212,10 @@ fn parse_cluster_opts(args: &[String]) -> Result<ClusterOpts> {
             }
             "--slo" => {
                 opts.slo_s = Some(need_val(args, i)?.parse()?);
+                i += 2;
+            }
+            "--step-threads" => {
+                opts.step_threads = need_val(args, i)?.parse()?;
                 i += 2;
             }
             "--requests" => {

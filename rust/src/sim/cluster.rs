@@ -20,11 +20,15 @@
 //! engine runs forward to the arrival instant; completions harvested on
 //! the way spawn the closed-loop clients' next requests and unblock the
 //! admission queue. Between interaction points the engines are
-//! *independent* — that is what makes R of them cheap — and the same
-//! quantization the single-GPU driver applies to arrivals holds here: a
-//! request is admitted at the first engine event at-or-after its
-//! arrival instant. After the last scheduled arrival the loop steps the
-//! busy engine with the smallest local clock one event at a time, so
+//! *independent* — that is what makes R of them cheap, and what lets
+//! [`ClusterConfig::step_threads`] advance them **in parallel**
+//! (completions are still merged in GPU order, so the parallel-stepped
+//! run is bit-identical to the serial one). The same quantization the
+//! single-GPU driver applies to arrivals holds here: a request is
+//! admitted at the first engine event at-or-after its arrival instant.
+//! After the last scheduled arrival the loop steps the busy engine with
+//! the smallest local clock one event at a time — picked from a lazy
+//! min-heap over engine clocks instead of an O(R) argmin per event — so
 //! completion-driven interactions (queue drains, closed-loop spawns)
 //! stay in near-global time order.
 //!
@@ -58,6 +62,7 @@ use crate::sim::router::{GpuView, RouteRequest, RouterKind, RouterPolicy};
 use crate::sim::serve::{RequestOutcome, ServeEngine, ServeSimConfig};
 use crate::sim::tracegen::TraceGen;
 use crate::sim::workload::{Arrival, ClosedLoopClients, ClosedLoopSpec, WorkloadSpec};
+use crate::util::pool;
 
 /// The arrival regime driving a cluster run.
 #[derive(Debug, Clone)]
@@ -131,6 +136,14 @@ pub struct ClusterConfig {
     pub router: RouterKind,
     /// Admission-control policy.
     pub admission: AdmissionConfig,
+    /// Worker threads advancing the per-GPU engines *in parallel*
+    /// between interaction points (0 = all cores, 1 = serial). The
+    /// engines share no state between arrivals and completions are
+    /// always harvested in GPU order, so results are bit-identical for
+    /// any value — this is intra-simulation parallelism the determinism
+    /// contract already permits. Default 1: the harness shards whole
+    /// cluster cells across threads, and nesting both oversubscribes.
+    pub step_threads: usize,
 }
 
 impl ClusterConfig {
@@ -159,6 +172,7 @@ impl ClusterConfig {
             workload,
             router: RouterKind::KvPressure,
             admission: AdmissionConfig::default(),
+            step_threads: 1,
         }
     }
 
@@ -179,6 +193,9 @@ impl ClusterConfig {
         c.seed = self.seed;
         c.score_agg = self.score_agg;
         c.quota_frac = self.quota_frac;
+        // The router reads every engine's survivor-demand view on each
+        // placement: keep it incrementally maintained.
+        c.route_views = true;
         c
     }
 }
@@ -287,6 +304,17 @@ struct FrontDoor {
     t_last_done: f64,
     /// Scratch for harvested completions.
     done_buf: Vec<(usize, f64)>,
+    /// Scratch for router views (reused across placements).
+    views_buf: Vec<GpuView>,
+    /// Lazy min-heap over busy engines' `(clock bits, gpu)` for the
+    /// drain phase's laggard pick — O(log R) per event instead of the
+    /// O(R) argmin fold. Entries go stale as clocks move; pops validate
+    /// against the engines' current clocks.
+    lag_heap: BinaryHeap<Reverse<(u64, usize)>>,
+    /// Whether `lag_heap` currently covers every busy engine (it is
+    /// rebuilt on entering the drain phase and invalidated whenever the
+    /// arrival phase advances engines wholesale).
+    lag_live: bool,
 }
 
 impl FrontDoor {
@@ -364,6 +392,9 @@ impl<'a> ClusterSim<'a> {
             epoch: None,
             t_last_done: 0.0,
             done_buf: Vec::new(),
+            views_buf: Vec::new(),
+            lag_heap: BinaryHeap::new(),
+            lag_live: false,
         };
 
         // ---- seed the arrival stream.
@@ -386,6 +417,12 @@ impl<'a> ClusterSim<'a> {
             }
         }
 
+        // Between interaction points the R engines share no state, so
+        // they may advance concurrently; completions are still
+        // harvested in GPU order, so the result is bit-identical to the
+        // serial loop for any thread count.
+        let step_threads = pool::resolve_threads(cfg.step_threads).min(engines.len());
+
         // ---- the global event loop.
         loop {
             if let Some(&Reverse(head)) = fd.pending.peek() {
@@ -393,26 +430,69 @@ impl<'a> ClusterSim<'a> {
                 // Advance every engine to the arrival instant; harvest
                 // completions (which may spawn earlier closed-loop
                 // arrivals — the heap reorders) and drain the queue.
-                for g in 0..engines.len() {
-                    engines[g].run_until(ta);
+                // Only engines actually behind `ta` with work in flight
+                // need stepping — fan out only when two or more do, so
+                // sparse intervals don't pay thread-spawn overhead.
+                if step_threads > 1 {
+                    let mut lagging: Vec<&mut ServeEngine<'_>> = engines
+                        .iter_mut()
+                        .filter(|e| !e.is_idle() && e.clock() < ta)
+                        .collect();
+                    if lagging.len() > 1 {
+                        pool::parallel_for_each_mut(step_threads, &mut lagging, |_, e| {
+                            e.run_until(ta)
+                        });
+                    } else if let Some(e) = lagging.first_mut() {
+                        e.run_until(ta);
+                    }
+                } else {
+                    for e in engines.iter_mut() {
+                        e.run_until(ta);
+                    }
                 }
+                // Every clock moved: the laggard heap is stale wholesale.
+                fd.lag_live = false;
                 self.harvest(&mut engines, &mut fd);
                 self.drain_queue(&mut engines, &mut fd);
                 let Reverse(p) = fd.pending.pop().expect("peeked non-empty");
                 self.offer(&mut engines, &mut fd, p.rid);
             } else {
-                let busy = (0..engines.len()).filter(|&g| !engines[g].is_idle());
-                let next = busy.fold(None::<usize>, |best, g| match best {
-                    None => Some(g),
-                    Some(b) if engines[g].clock() < engines[b].clock() => Some(g),
-                    Some(b) => Some(b),
-                });
+                if !fd.lag_live {
+                    fd.lag_heap.clear();
+                    for (g, e) in engines.iter().enumerate() {
+                        if !e.is_idle() {
+                            fd.lag_heap.push(Reverse((e.clock().to_bits(), g)));
+                        }
+                    }
+                    fd.lag_live = true;
+                }
+                // Laggard pick: pop until a live entry surfaces. Clock
+                // bits order like the non-negative finite clocks, and
+                // the `(bits, gpu)` key reproduces the serial fold's
+                // lowest-GPU tie-break.
+                let next = loop {
+                    match fd.lag_heap.peek() {
+                        None => break None,
+                        Some(&Reverse((bits, g)))
+                            if !engines[g].is_idle()
+                                && engines[g].clock().to_bits() == bits =>
+                        {
+                            break Some(g)
+                        }
+                        _ => {
+                            fd.lag_heap.pop();
+                        }
+                    }
+                };
                 match next {
                     Some(g) => {
                         // Tail phase: step the laggard one event so
                         // completion-driven interactions stay in near-
                         // global order.
                         engines[g].run_one_event();
+                        if !engines[g].is_idle() {
+                            fd.lag_heap.push(Reverse((engines[g].clock().to_bits(), g)));
+                        }
                         self.harvest(&mut engines, &mut fd);
                         self.drain_queue(&mut engines, &mut fd);
                     }
@@ -578,19 +658,25 @@ impl<'a> ClusterSim<'a> {
     /// caller guarantees at least one GPU is below quota.
     fn place(&self, engines: &mut [ServeEngine<'_>], fd: &mut FrontDoor, rid: usize) {
         let quota = self.cfg.admission.max_outstanding_per_gpu;
-        let views: Vec<GpuView> = engines
-            .iter()
-            .enumerate()
-            .filter(|(_, e)| e.outstanding() < quota)
-            .map(|(g, e)| GpuView {
-                gpu: g,
-                outstanding: e.outstanding(),
-                live_traces: e.live_traces(),
-                free_blocks: e.free_blocks(),
-                pool_blocks: e.pool_blocks(),
-                survivor_demand_blocks: e.survivor_demand_blocks(),
-            })
-            .collect();
+        // Reused scratch: one view per eligible GPU, each engine's
+        // survivor demand served from its incrementally maintained
+        // router-view aggregates (no per-placement sort or scan).
+        let mut views = std::mem::take(&mut fd.views_buf);
+        views.clear();
+        views.extend(
+            engines
+                .iter()
+                .enumerate()
+                .filter(|(_, e)| e.outstanding() < quota)
+                .map(|(g, e)| GpuView {
+                    gpu: g,
+                    outstanding: e.outstanding(),
+                    live_traces: e.live_traces(),
+                    free_blocks: e.free_blocks(),
+                    pool_blocks: e.pool_blocks(),
+                    survivor_demand_blocks: e.survivor_demand_blocks(),
+                }),
+        );
         debug_assert!(!views.is_empty(), "place requires an eligible GPU");
         debug_assert!(
             matches!(fd.meta[rid].disposition, ReqDisposition::Queued),
@@ -604,6 +690,7 @@ impl<'a> ClusterSim<'a> {
             expected_blocks: meta.expected_blocks,
         };
         let g = views[fd.router.place(&req, &views)].gpu;
+        fd.views_buf = views;
         let arr = Arrival { rid, qid: meta.qid, t_arrive: meta.t_arrive };
         // A lagging busy engine first catches up to the arrival instant
         // (service cannot start before the request exists); idle engines
@@ -612,6 +699,11 @@ impl<'a> ClusterSim<'a> {
             engines[g].run_until(arr.t_arrive);
         }
         engines[g].submit(&arr);
+        // Keep the drain-phase laggard heap covering this engine (its
+        // clock may have moved, and an idle engine just became busy).
+        if fd.lag_live {
+            fd.lag_heap.push(Reverse((engines[g].clock().to_bits(), g)));
+        }
         fd.meta[rid].disposition = ReqDisposition::Placed;
         fd.counters.placed += 1;
         let out = engines[g].outstanding();

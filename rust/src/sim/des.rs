@@ -174,20 +174,27 @@ struct SimTrace {
     dynamics: Vec<(u64, f64)>,
 }
 
-/// Reusable hot-path buffers for [`DesEngine::run_question_with`]: the
-/// per-event running set, cached next-boundary lookups, memory-horizon
-/// block demands, and scorer activations. The event loop allocates
+/// Reusable hot-path state for [`DesEngine::run_question_with`]: the
+/// incremental [`sched::EventIndex`] over the running set, the per-event
+/// running-set snapshot, cached next-boundary lookups, lazy-accrual
+/// settle marks, and scorer activations. The event loop allocates
 /// nothing once these are warm; keep one `Scratch` per worker thread and
 /// reuse it across questions (`util::pool::parallel_map_with`).
 #[derive(Debug, Default)]
 pub struct Scratch {
-    /// Indices (into the trace vector) of currently running traces.
+    /// Incremental index over the running set: O(1) `d_event` /
+    /// context-size peeks and closed-form memory-horizon probes,
+    /// updated only at admissions, crossings, and removals.
+    index: sched::EventIndex,
+    /// Snapshot of the index's running set for the current event (so
+    /// boundary processing can mutate the index while iterating).
     running: Vec<usize>,
     /// Next step boundary per trace index (mirror of
     /// `spec.step_ends[st.next_step]`, updated at crossings).
     next_end: Vec<u64>,
-    /// Resident tokens per running trace for the memory-horizon search.
-    cur_tokens: Vec<u64>,
+    /// Lazy-accrual marks: wall-clock up to which each trace's wait /
+    /// decode time has been settled ([`sched::settle`]).
+    last_settle: Vec<f64>,
     /// Hidden state / MLP activation buffers for the scorer.
     h: Vec<f32>,
     z: Vec<f32>,
@@ -341,6 +348,17 @@ impl<'a> DesEngine<'a> {
             };
         }
 
+        // Warm the reusable hot-path state (no per-event allocations).
+        scratch.h.resize(self.gen.gen.d, 0.0);
+        scratch.z.resize(self.scorer.hidden, 0.0);
+        scratch.next_end.resize(traces.len(), 0);
+        scratch.last_settle.resize(traces.len(), 0.0);
+        for &i in phase {
+            scratch.next_end[i] = traces[i].spec.step_ends[traces[i].st.next_step];
+        }
+        // No quotas in the single-question regime: pool-wide demand only.
+        scratch.index.reset(self.cfg.block_size, false);
+
         // --- admission: prefill prompts (waiting queue if memory-bound;
         // FIFO resume via the shared scheduler core).
         let mut wait_q = WaitQueue::new();
@@ -350,6 +368,12 @@ impl<'a> DesEngine<'a> {
             if kv.can_allocate(need) {
                 kv.allocate_seq(traces[i].st.id, q.prompt_tokens);
                 traces[i].st.status = TraceStatus::Running;
+                scratch.index.insert(
+                    i,
+                    0,
+                    q.prompt_tokens as u64,
+                    scratch.next_end[i] - traces[i].st.generated,
+                );
                 admitted += 1;
             } else {
                 traces[i].st.status = TraceStatus::Preempted;
@@ -359,25 +383,16 @@ impl<'a> DesEngine<'a> {
         let prefill_dt = tm.prefill(q.prompt_tokens * admitted.max(1));
         *clock += prefill_dt;
         engine_accrue!(wait_q, prefill_dt);
-        // Warm the reusable hot-path buffers (no per-event allocations).
-        scratch.h.resize(self.gen.gen.d, 0.0);
-        scratch.z.resize(self.scorer.hidden, 0.0);
-        scratch.next_end.resize(traces.len(), 0);
+        // Lazy accrual: the phase's traces start their settle windows
+        // after the admission prefill (queued ones begin waiting now).
         for &i in phase {
-            scratch.next_end[i] = traces[i].spec.step_ends[traces[i].st.next_step];
+            scratch.last_settle[i] = *clock;
         }
         let mut boundaries_crossed: usize = 0;
         let mut next_slim_check: usize = params.slim_check_interval_steps * phase.len().max(1);
 
         loop {
-            scratch.running.clear();
-            for &i in phase {
-                if traces[i].st.status == TraceStatus::Running {
-                    scratch.running.push(i);
-                }
-            }
-
-            if scratch.running.is_empty() {
+            if scratch.index.running() == 0 {
                 if wait_q.is_empty() {
                     break;
                 }
@@ -385,51 +400,53 @@ impl<'a> DesEngine<'a> {
                 // FIFO order) whose prefix fits. Only when *no* queued
                 // trace can ever fit again is the head dropped — it
                 // counts as pruned like any other non-voluntary removal.
-                if !self.resume_first_fit(q, traces, kv, clock, &mut wait_q, phase, engine_split) {
+                let resumed = self
+                    .resume_first_fit(q, traces, kv, clock, &mut wait_q, scratch, engine_split);
+                if !resumed {
                     let head = wait_q.pop_front().unwrap();
                     let t = &mut traces[head];
+                    sched::settle(&mut t.st, &mut scratch.last_settle[head], *clock);
                     t.st.status = TraceStatus::Pruned;
                     t.st.finish_clock = *clock;
                 }
                 continue;
             }
+            // Snapshot the maintained running set (ascending trace
+            // order, the historical scan order) so boundary processing
+            // can mutate the index while iterating.
+            scratch.running.clear();
+            scratch.running.extend_from_slice(scratch.index.tids());
 
             let b = scratch.running.len();
 
-            // ---- event horizon (iterations until next boundary/finish).
-            let mut d_event = u64::MAX;
-            for &i in &scratch.running {
-                d_event = d_event.min(scratch.next_end[i] - traces[i].st.generated);
-            }
+            // ---- event horizon: O(1) peek at the maintained min.
+            let d_event = scratch.index.d_event().expect("running traces are indexed");
             debug_assert!(d_event >= 1);
 
-            // ---- memory horizon: largest d with block demand <= free.
-            let d_mem =
-                self.memory_horizon(traces, &scratch.running, kv, d_event, &mut scratch.cur_tokens);
+            // ---- memory horizon: largest d with block demand <= free,
+            // every probe a closed-form histogram fold.
+            let free = kv.free_blocks() as u64;
+            let index = &scratch.index;
+            let d_mem = sched::max_fitting(d_event, |d| index.pool_demand(d) <= free);
             if d_mem == 0 {
-                self.memory_event(traces, &scratch.running, kv, clock, &mut wait_q, rng);
+                self.memory_event(traces, kv, clock, &mut wait_q, rng, scratch);
                 continue;
             }
             let d = d_event.min(d_mem);
 
-            // ---- advance time + tokens.
-            let k0: usize = scratch
-                .running
-                .iter()
-                .map(|&i| q.prompt_tokens + traces[i].st.generated as usize)
-                .sum();
+            // ---- advance time + tokens (lazy accrual: the open settle
+            // windows absorb `dt`).
+            let k0 = scratch.index.resident_tokens() as usize;
             let dt = tm.decode_interval(b, k0, d);
             *clock += dt;
             engine_accrue!(wait_q, dt);
-            for &i in phase {
-                sched::accrue(&mut traces[i].st, dt);
-            }
             for &i in &scratch.running {
                 let t = &mut traces[i];
                 t.st.generated += d;
                 let ok = kv.append_tokens(t.st.id, d as usize);
                 debug_assert!(ok, "memory horizon must guarantee the append");
             }
+            scratch.index.advance(d);
 
             // ---- boundary / completion events.
             let mut freed_any = false;
@@ -460,21 +477,32 @@ impl<'a> DesEngine<'a> {
                 }
 
                 if t.st.generated == t.spec.total_tokens {
+                    sched::settle(&mut t.st, &mut scratch.last_settle[i], *clock);
                     t.st.status = TraceStatus::Finished;
                     t.st.finish_clock = *clock;
                     kv.free_seq(t.st.id);
+                    scratch.index.remove(i);
                     freed_any = true;
                 } else if t.monitored {
                     // DeepConf online check fires when a confidence group
                     // completes (the ~2k-token group granularity).
+                    let mut stopped = false;
                     if let (Some(th), Some(wc)) = (conf_threshold, completed_group) {
                         if wc < th {
+                            sched::settle(&mut t.st, &mut scratch.last_settle[i], *clock);
                             t.st.status = TraceStatus::EarlyStopped;
                             t.st.finish_clock = *clock;
                             kv.free_seq(t.st.id);
+                            scratch.index.remove(i);
                             freed_any = true;
+                            stopped = true;
                         }
                     }
+                    if !stopped {
+                        scratch.index.set_boundary(i, scratch.next_end[i] - traces[i].st.generated);
+                    }
+                } else {
+                    scratch.index.set_boundary(i, scratch.next_end[i] - traces[i].st.generated);
                 }
             }
 
@@ -482,51 +510,29 @@ impl<'a> DesEngine<'a> {
             if self.cfg.method == Method::SlimSc && boundaries_crossed >= next_slim_check {
                 next_slim_check += params.slim_check_interval_steps
                     * phase.iter().filter(|&&i| traces[i].st.status == TraceStatus::Running).count().max(1);
-                freed_any |= self.slim_check(traces, phase, kv, clock, rng);
+                freed_any |= self.slim_check(traces, phase, kv, clock, rng, scratch);
             }
 
             if freed_any {
-                while self.try_resume(q, traces, kv, clock, &mut wait_q, phase, engine_split) {}
+                while self.try_resume(q, traces, kv, clock, &mut wait_q, scratch, engine_split) {}
             }
         }
     }
 
-    /// Largest d (capped at `cap`) such that advancing every running
-    /// trace d tokens fits in the free blocks. Binary search over the
-    /// monotone block-demand function; the per-trace resident token
-    /// counts are gathered once into `cur` instead of re-queried on every
-    /// probe of the search.
-    fn memory_horizon(
-        &self,
-        traces: &[SimTrace],
-        running: &[usize],
-        kv: &KvCacheManager,
-        cap: u64,
-        cur: &mut Vec<u64>,
-    ) -> u64 {
-        let free = kv.free_blocks() as u64;
-        let bs = self.cfg.block_size as u64;
-        cur.clear();
-        cur.extend(running.iter().map(|&i| kv.seq_tokens(traces[i].st.id) as u64));
-        let cur: &[u64] = cur;
-        let demand = |d: u64| -> u64 {
-            cur.iter().map(|&c| (c + d).div_ceil(bs) - c.div_ceil(bs)).sum()
-        };
-        sched::max_fitting(cap, |d| demand(d) <= free)
-    }
-
     /// Memory saturated: prune (STEP) or preempt (vLLM default). Victim
     /// selection goes through the shared scheduler core so the serving
-    /// engines apply the identical rules.
+    /// engines apply the identical rules; the victim set is the
+    /// snapshot in `scratch.running`.
     fn memory_event(
         &self,
         traces: &mut [SimTrace],
-        running: &[usize],
         kv: &mut KvCacheManager,
         clock: &mut f64,
         wait_q: &mut WaitQueue,
         _rng: &mut Rng,
+        scratch: &mut Scratch,
     ) {
+        let running: &[usize] = &scratch.running;
         match self.cfg.method {
             Method::Step => {
                 // Algorithm 1: prune argmin score_t, release KV at once.
@@ -555,9 +561,11 @@ impl<'a> DesEngine<'a> {
                         }),
                 };
                 let t = &mut traces[victim];
+                sched::settle(&mut t.st, &mut scratch.last_settle[victim], *clock);
                 t.st.status = TraceStatus::Pruned;
                 t.st.finish_clock = *clock;
                 kv.free_seq(t.st.id);
+                scratch.index.remove(victim);
             }
             _ => {
                 // vLLM preemption: evict the youngest running trace
@@ -566,9 +574,11 @@ impl<'a> DesEngine<'a> {
                     sched::youngest_victim(running, |_| true, |i| traces[i].st.generated)
                         .expect("memory event with empty running set");
                 let t = &mut traces[victim];
+                sched::settle(&mut t.st, &mut scratch.last_settle[victim], *clock);
                 t.st.status = TraceStatus::Preempted;
                 t.st.preemptions += 1;
                 kv.free_seq(t.st.id);
+                scratch.index.remove(victim);
                 wait_q.push_back(victim);
             }
         }
@@ -586,14 +596,14 @@ impl<'a> DesEngine<'a> {
         kv: &mut KvCacheManager,
         clock: &mut f64,
         wait_q: &mut WaitQueue,
-        phase: &[usize],
+        scratch: &mut Scratch,
         engine_split: &mut (f64, f64),
     ) -> bool {
         let Some(head) = wait_q.pop_head_if(|idx| self.resume_fits(q, traces, kv, idx))
         else {
             return false;
         };
-        self.admit_resumed(q, traces, kv, clock, wait_q, phase, engine_split, head);
+        self.admit_resumed(q, traces, kv, clock, wait_q, scratch, engine_split, head);
         true
     }
 
@@ -610,14 +620,14 @@ impl<'a> DesEngine<'a> {
         kv: &mut KvCacheManager,
         clock: &mut f64,
         wait_q: &mut WaitQueue,
-        phase: &[usize],
+        scratch: &mut Scratch,
         engine_split: &mut (f64, f64),
     ) -> bool {
         let Some(idx) = wait_q.pop_first_fit(|idx| self.resume_fits(q, traces, kv, idx))
         else {
             return false;
         };
-        self.admit_resumed(q, traces, kv, clock, wait_q, phase, engine_split, idx);
+        self.admit_resumed(q, traces, kv, clock, wait_q, scratch, engine_split, idx);
         true
     }
 
@@ -628,8 +638,10 @@ impl<'a> DesEngine<'a> {
     }
 
     /// Re-admit a dequeued trace. Recompute-on-resume: the prefix KV is
-    /// rebuilt by a prefill pass that stalls the engine (shared
-    /// accounting: [`sched::accrue`] + [`sched::charge_resume`]).
+    /// rebuilt by a prefill pass that stalls the engine. The resumed
+    /// trace's own reconstruction counts as waiting ([`sched::settle`]
+    /// closes its wait window at the post-prefill clock); other live
+    /// traces' open windows absorb the stall under their statuses.
     #[allow(clippy::too_many_arguments)]
     fn admit_resumed(
         &self,
@@ -638,15 +650,13 @@ impl<'a> DesEngine<'a> {
         kv: &mut KvCacheManager,
         clock: &mut f64,
         wait_q: &WaitQueue,
-        phase: &[usize],
+        scratch: &mut Scratch,
         engine_split: &mut (f64, f64),
         idx: usize,
     ) {
         let prefix = q.prompt_tokens + traces[idx].st.generated as usize;
         kv.allocate_seq(traces[idx].st.id, prefix);
-        traces[idx].st.status = TraceStatus::Running;
-        // Recompute cost: a prefill over the generated prefix. The engine
-        // is busy prefilling: running traces accrue decode, waiting wait.
+        // Recompute cost: a prefill over the generated prefix.
         let dt = self.profile.timing.prefill(prefix);
         *clock += dt;
         // Recompute happens while (other) traces may still be queued.
@@ -655,10 +665,15 @@ impl<'a> DesEngine<'a> {
         } else {
             engine_split.0 += dt;
         }
-        for &i in phase {
-            sched::accrue(&mut traces[i].st, dt);
-        }
-        sched::charge_resume(&mut traces[idx].st, dt);
+        let t = &mut traces[idx];
+        sched::settle(&mut t.st, &mut scratch.last_settle[idx], *clock);
+        t.st.status = TraceStatus::Running;
+        scratch.index.insert(
+            idx,
+            0,
+            prefix as u64,
+            scratch.next_end[idx] - t.st.generated,
+        );
     }
 
     /// Slim-SC similarity check (thought level): pair up the active
@@ -675,6 +690,7 @@ impl<'a> DesEngine<'a> {
         kv: &mut KvCacheManager,
         clock: &mut f64,
         rng: &mut Rng,
+        scratch: &mut Scratch,
     ) -> bool {
         let threshold = self.cfg.params.slim_similarity_threshold;
         let mut active: Vec<usize> = phase
@@ -697,9 +713,11 @@ impl<'a> DesEngine<'a> {
                 // Random-pruning variant: drop one of the pair.
                 let victim = if rng.bernoulli(0.5) { i } else { j };
                 let t = &mut traces[victim];
+                sched::settle(&mut t.st, &mut scratch.last_settle[victim], *clock);
                 t.st.status = TraceStatus::Pruned;
                 t.st.finish_clock = *clock;
                 kv.free_seq(t.st.id);
+                scratch.index.remove(victim);
                 pruned_any = true;
             }
         }

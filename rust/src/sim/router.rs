@@ -23,6 +23,13 @@
 //! is the only state), so cluster runs stay bit-deterministic.
 
 /// Read-only scheduling view of one per-GPU engine at routing time.
+///
+/// Views are cheap to build per placement: every field is either an
+/// O(1) engine counter or, for
+/// [`survivor_demand_blocks`](GpuView::survivor_demand_blocks), served
+/// from the engine's incrementally maintained router-view aggregates
+/// (`ServeSimConfig::route_views`) instead of an O(live) scan-and-sort
+/// over its trace table.
 #[derive(Debug, Clone, Copy)]
 pub struct GpuView {
     /// The GPU's index in the cluster.

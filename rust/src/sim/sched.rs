@@ -18,16 +18,25 @@
 //!   preserving first-minimum tie-breaking so results are deterministic;
 //! * [`max_fitting`] — the monotone binary search behind every memory
 //!   and arrival horizon ("largest d that still fits");
-//! * recompute accounting — [`accrue`] (engine busy time lands as
-//!   decode on running traces and as wait on preempted ones) and
-//!   [`charge_resume`] (the resumed trace's own reconstruction counts
-//!   as waiting, paper: "resumed with KV cache reconstructed").
+//! * [`EventIndex`] — the incremental index over the *running* trace
+//!   set that turns the per-event O(live) scans (running-set rebuild,
+//!   `d_event` min fold, per-probe block-demand regather, per-owner
+//!   resident sort) into O(log) or O(1) maintained aggregates, updated
+//!   only at the points where the state actually changes: boundary
+//!   crossings, prune/preempt/finish, and admit/resume;
+//! * recompute accounting — [`settle`] (lazy accrual: a trace's
+//!   decode/wait time is settled from its `last_settle` timestamp only
+//!   when its status changes, instead of accruing every live trace on
+//!   every event), plus the eager reference pair [`accrue`] /
+//!   [`charge_resume`] that documents the per-event semantics the lazy
+//!   form replaces.
 //!
 //! Everything here is pure bookkeeping over indices and
 //! [`TraceState`]s; the engines keep ownership of their trace vectors,
 //! pools, and clocks.
 
-use std::collections::VecDeque;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
 
 use crate::coordinator::trace::{TraceState, TraceStatus};
 
@@ -98,7 +107,10 @@ pub fn max_fitting(cap: u64, fits: impl Fn(u64) -> bool) -> u64 {
     }
     let (mut lo, mut hi) = (0u64, cap); // fits(lo), !fits(hi)
     while lo + 1 < hi {
-        let mid = (lo + hi) / 2;
+        // Overflow-safe midpoint: `(lo + hi) / 2` wraps once the caller
+        // passes a cap in the top half of u64 (e.g. an "unbounded"
+        // horizon of u64::MAX iterations).
+        let mid = lo + (hi - lo) / 2;
         if fits(mid) {
             lo = mid;
         } else {
@@ -106,6 +118,308 @@ pub fn max_fitting(cap: u64, fits: impl Fn(u64) -> bool) -> u64 {
         }
     }
     lo
+}
+
+/// Incremental index over an engine's *running* trace set.
+///
+/// Every engine event used to pay O(live) scans: rebuild the running
+/// set, fold the `d_event` min over tokens-to-next-boundary, regather
+/// every trace's resident tokens on each probe of the memory-horizon
+/// binary search, and (under quotas) sort an `(owner, resident)` pair
+/// list. All of that state changes only at *crossings* — a boundary is
+/// reached, a trace is admitted/resumed, pruned, preempted, or
+/// finishes — so this index maintains it incrementally:
+///
+/// * the running set itself ([`tids`](EventIndex::tids), kept in
+///   ascending trace order so victim selection and boundary iteration
+///   match the engines' historical scan order);
+/// * a lazy min-heap over *absolute boundary keys* (`iterations at
+///   insert + distance to boundary`), making
+///   [`d_event`](EventIndex::d_event) an O(1) amortized peek — keys
+///   stay valid under [`advance`](EventIndex::advance) because every
+///   running trace advances in lockstep;
+/// * the resident-token sum ([`resident_tokens`](EventIndex::resident_tokens),
+///   the scheduler's `K0` context size) and running count, both O(1);
+/// * a block-offset histogram: traces are binned by the *phase* of
+///   their resident token count modulo the block size, expressed in
+///   advance-invariant coordinates (`free slots + iterations mod bs`),
+///   so the total block demand of advancing every running trace `d`
+///   tokens ([`pool_demand`](EventIndex::pool_demand)) is a
+///   closed-form O(block size) fold instead of an O(live) regather per
+///   binary-search probe;
+/// * the same histogram per owner plus the sorted active-owner list
+///   ([`active_owners`](EventIndex::active_owners)), replacing the
+///   per-event owner-pair sort in the quota path
+///   ([`owner_demand`](EventIndex::owner_demand)); per-owner rows live
+///   in compact recycled slots, so their memory tracks the *peak
+///   concurrently active* owner count, not the monotonically growing
+///   owner-id space.
+///
+/// All aggregates are integer arithmetic over exactly the quantities
+/// the scan-based code folded, so every derived horizon is
+/// bit-identical to the naive reference — the differential property
+/// test in `tests/prop_invariants.rs` locks that in.
+#[derive(Debug, Default)]
+pub struct EventIndex {
+    /// PagedAttention block size in tokens.
+    bs: u64,
+    /// Total decode iterations advanced since [`reset`](Self::reset).
+    iters: u64,
+    /// Running trace ids, ascending.
+    tids: Vec<usize>,
+    /// Per-tid valid absolute boundary key (`u64::MAX` = not running).
+    key_of: Vec<u64>,
+    /// Lazy min-heap of `(absolute boundary key, tid)`.
+    heap: BinaryHeap<Reverse<(u64, usize)>>,
+    /// Per-tid resident tokens at insert, and the iteration counter at
+    /// insert (current residency = base + iters - base_iters).
+    base_resident: Vec<u64>,
+    base_iters: Vec<u64>,
+    /// Σ resident tokens over running traces (the scheduler's K0).
+    resident_sum: u64,
+    /// Histogram over advance-invariant block phases (len = bs).
+    hist: Vec<u64>,
+    /// Whether per-owner aggregates are maintained (quota engines).
+    track_owners: bool,
+    /// External owner id → compact slot + 1 (0 = no slot). Owner ids
+    /// grow monotonically with the request count, so the per-slot
+    /// aggregates below are keyed by *compact slots* recycled through
+    /// `free_slots` — memory stays proportional to the peak number of
+    /// concurrently active owners, not the total ever seen (only this
+    /// 4-byte-per-owner map grows with the run).
+    owner_slot: Vec<u32>,
+    /// Retired compact slots available for reuse (their histogram rows
+    /// are all-zero by construction when freed).
+    free_slots: Vec<u32>,
+    /// Per-slot running-trace count.
+    owner_count: Vec<u64>,
+    /// Flat per-slot block-phase histograms (`slot * bs + phase`).
+    owner_hist: Vec<u64>,
+    /// Owners with at least one running trace, ascending (external
+    /// ids).
+    active_owners: Vec<u32>,
+    /// Per-tid owner (only meaningful while running).
+    owner_of: Vec<u32>,
+}
+
+impl EventIndex {
+    /// A fresh index for `block_size`-token blocks; `track_owners`
+    /// enables the per-owner aggregates the quota path needs.
+    pub fn new(block_size: usize, track_owners: bool) -> EventIndex {
+        let mut idx = EventIndex::default();
+        idx.reset(block_size, track_owners);
+        idx
+    }
+
+    /// Clear the index and rebind it to `block_size` / `track_owners`,
+    /// keeping allocated capacity (the DES engine reuses one index
+    /// across phases and questions via its `Scratch`).
+    pub fn reset(&mut self, block_size: usize, track_owners: bool) {
+        assert!(block_size > 0, "block size must be positive");
+        self.bs = block_size as u64;
+        self.iters = 0;
+        self.tids.clear();
+        self.key_of.clear();
+        self.heap.clear();
+        self.base_resident.clear();
+        self.base_iters.clear();
+        self.resident_sum = 0;
+        self.hist.clear();
+        self.hist.resize(block_size, 0);
+        self.track_owners = track_owners;
+        self.owner_slot.clear();
+        self.free_slots.clear();
+        self.owner_count.clear();
+        self.owner_hist.clear();
+        self.active_owners.clear();
+        self.owner_of.clear();
+    }
+
+    /// Number of running traces.
+    pub fn running(&self) -> usize {
+        self.tids.len()
+    }
+
+    /// The running trace ids in ascending order (the engines' historical
+    /// scan order, so victim selection and boundary iteration are
+    /// unchanged).
+    pub fn tids(&self) -> &[usize] {
+        &self.tids
+    }
+
+    /// Σ resident tokens over the running set — the scheduler's batch
+    /// context size `K0`, previously an O(live) fold per event.
+    pub fn resident_tokens(&self) -> u64 {
+        self.resident_sum
+    }
+
+    /// Owners with at least one running trace, ascending (empty unless
+    /// owner tracking is enabled). Same iteration order as the retired
+    /// sorted owner-pair scan.
+    pub fn active_owners(&self) -> &[u32] {
+        &self.active_owners
+    }
+
+    fn ensure_tid(&mut self, tid: usize) {
+        if self.key_of.len() <= tid {
+            self.key_of.resize(tid + 1, u64::MAX);
+            self.base_resident.resize(tid + 1, 0);
+            self.base_iters.resize(tid + 1, 0);
+            if self.track_owners {
+                self.owner_of.resize(tid + 1, 0);
+            }
+        }
+    }
+
+    /// Advance-invariant block phase of a trace with `resident` tokens
+    /// right now: `(free slots in its last block + iters) mod bs`.
+    /// Advancing d tokens decreases the free-slot count by d (mod bs)
+    /// while `iters` grows by d, so the phase never moves while the
+    /// trace runs — [`advance`](Self::advance) is O(1).
+    fn phase(&self, resident: u64) -> usize {
+        let free = (self.bs - resident % self.bs) % self.bs;
+        ((free + self.iters) % self.bs) as usize
+    }
+
+    /// Register a trace entering the running set with `resident` tokens
+    /// (prompt + generated) and `dist` iterations to its next step
+    /// boundary. Called at admission and resume.
+    pub fn insert(&mut self, tid: usize, owner: u32, resident: u64, dist: u64) {
+        debug_assert!(dist >= 1, "a running trace is strictly before its boundary");
+        self.ensure_tid(tid);
+        debug_assert_eq!(self.key_of[tid], u64::MAX, "trace already running");
+        let pos = self.tids.partition_point(|&t| t < tid);
+        self.tids.insert(pos, tid);
+        let key = self.iters + dist;
+        self.key_of[tid] = key;
+        self.heap.push(Reverse((key, tid)));
+        self.base_resident[tid] = resident;
+        self.base_iters[tid] = self.iters;
+        self.resident_sum += resident;
+        let p = self.phase(resident);
+        self.hist[p] += 1;
+        if self.track_owners {
+            self.owner_of[tid] = owner;
+            let o = owner as usize;
+            if self.owner_slot.len() <= o {
+                self.owner_slot.resize(o + 1, 0);
+            }
+            let slot = if self.owner_slot[o] == 0 {
+                // First running trace of this owner: bind a recycled (or
+                // fresh) compact slot.
+                let slot = self.free_slots.pop().unwrap_or_else(|| {
+                    let s = self.owner_count.len() as u32;
+                    self.owner_count.push(0);
+                    self.owner_hist.resize(self.owner_hist.len() + self.bs as usize, 0);
+                    s
+                }) as usize;
+                self.owner_slot[o] = slot as u32 + 1;
+                let op = self.active_owners.partition_point(|&x| x < owner);
+                self.active_owners.insert(op, owner);
+                slot
+            } else {
+                (self.owner_slot[o] - 1) as usize
+            };
+            self.owner_count[slot] += 1;
+            self.owner_hist[slot * self.bs as usize + p] += 1;
+        }
+    }
+
+    /// Remove a trace from the running set (prune / preempt / finish).
+    pub fn remove(&mut self, tid: usize) {
+        debug_assert_ne!(self.key_of[tid], u64::MAX, "removing a non-running trace");
+        let resident = self.base_resident[tid] + (self.iters - self.base_iters[tid]);
+        let p = self.phase(resident);
+        self.hist[p] -= 1;
+        self.resident_sum -= resident;
+        self.key_of[tid] = u64::MAX;
+        let pos = self.tids.partition_point(|&t| t < tid);
+        debug_assert_eq!(self.tids[pos], tid);
+        self.tids.remove(pos);
+        if self.track_owners {
+            let owner = self.owner_of[tid];
+            let slot = (self.owner_slot[owner as usize] - 1) as usize;
+            self.owner_count[slot] -= 1;
+            self.owner_hist[slot * self.bs as usize + p] -= 1;
+            if self.owner_count[slot] == 0 {
+                // Last running trace of this owner: its histogram row is
+                // all-zero again, so the slot recycles cleanly.
+                self.owner_slot[owner as usize] = 0;
+                self.free_slots.push(slot as u32);
+                let op = self.active_owners.partition_point(|&x| x < owner);
+                debug_assert_eq!(self.active_owners[op], owner);
+                self.active_owners.remove(op);
+            }
+        }
+    }
+
+    /// Advance every running trace by `d` decode iterations (`d` tokens
+    /// each). O(1): the resident sum shifts by `d × running`, and the
+    /// block-phase histograms are advance-invariant by construction.
+    pub fn advance(&mut self, d: u64) {
+        self.iters += d;
+        self.resident_sum += d * self.tids.len() as u64;
+    }
+
+    /// Re-key a trace that just crossed a step boundary: `dist`
+    /// iterations to its next boundary.
+    pub fn set_boundary(&mut self, tid: usize, dist: u64) {
+        debug_assert!(dist >= 1);
+        debug_assert_ne!(self.key_of[tid], u64::MAX, "re-keying a non-running trace");
+        let key = self.iters + dist;
+        self.key_of[tid] = key;
+        self.heap.push(Reverse((key, tid)));
+    }
+
+    /// Iterations until the nearest step boundary of any running trace
+    /// (`None` when nothing runs). Amortized O(1): stale heap entries
+    /// (crossed boundaries, removed traces) are popped lazily.
+    pub fn d_event(&mut self) -> Option<u64> {
+        while let Some(&Reverse((key, tid))) = self.heap.peek() {
+            if self.key_of.get(tid) == Some(&key) {
+                return Some(key - self.iters);
+            }
+            self.heap.pop();
+        }
+        None
+    }
+
+    /// Blocks the whole running set needs to advance `d` tokens each —
+    /// the memory-horizon probe, closed-form over the block-phase
+    /// histogram (O(block size), independent of the live-trace count).
+    /// Bit-identical to folding `(c + d).div_ceil(bs) - c.div_ceil(bs)`
+    /// over every running trace's residency `c`.
+    pub fn pool_demand(&self, d: u64) -> u64 {
+        Self::hist_demand(&self.hist, d, self.bs, self.iters)
+    }
+
+    /// Blocks `owner`'s running traces need to advance `d` tokens each
+    /// (0 for owners with nothing running). Requires owner tracking.
+    pub fn owner_demand(&self, owner: u32, d: u64) -> u64 {
+        debug_assert!(self.track_owners, "owner demand needs owner tracking");
+        let Some(&slot1) = self.owner_slot.get(owner as usize) else {
+            return 0;
+        };
+        if slot1 == 0 {
+            return 0;
+        }
+        let (slot, bs) = ((slot1 - 1) as usize, self.bs as usize);
+        Self::hist_demand(&self.owner_hist[slot * bs..(slot + 1) * bs], d, self.bs, self.iters)
+    }
+
+    fn hist_demand(hist: &[u64], d: u64, bs: u64, iters: u64) -> u64 {
+        let mut demand = 0u64;
+        for (p, &cnt) in hist.iter().enumerate() {
+            if cnt == 0 {
+                continue;
+            }
+            let free = (p as u64 + bs - iters % bs) % bs;
+            if d > free {
+                demand += cnt * (d - free).div_ceil(bs);
+            }
+        }
+        demand
+    }
 }
 
 /// STEP's memory-event victim (Algorithm 1): the candidate in
@@ -135,11 +449,36 @@ pub fn youngest_victim(
     running.iter().copied().filter(|&i| in_set(i)).min_by_key(|&i| generated(i))
 }
 
+/// Lazy time accrual: charge the window since `last_settle` onto one
+/// trace according to its *current* status — running time lands as
+/// decode, preempted time as wait, terminal states nothing — and move
+/// the settle mark to `clock`.
+///
+/// This replaces the eager accrue-every-live-trace-on-every-event loop
+/// ([`accrue`]): because a trace's rate class only changes when its
+/// status changes, engines need to settle only at status transitions
+/// (admit, preempt, resume, prune, finish) instead of on every clock
+/// move. Totals are equal to the eager form's up to floating-point
+/// summation order (one subtraction per status window vs. one addition
+/// per event); neither feeds back into scheduling decisions.
+pub fn settle(st: &mut TraceState, last_settle: &mut f64, clock: f64) {
+    let dt = clock - *last_settle;
+    match st.status {
+        TraceStatus::Running => st.decode_time += dt,
+        TraceStatus::Preempted => st.wait_time += dt,
+        _ => {}
+    }
+    *last_settle = clock;
+}
+
 /// Accrue `dt` seconds of engine busy time (a decode interval, or a
 /// prefill stall from admission / recompute-on-resume) onto one trace:
 /// running traces accrue decode time (the engine is busy on their
 /// behalf), preempted traces accrue wait time, terminal traces nothing.
-/// Engines apply this over every live trace whenever the clock moves.
+///
+/// This is the eager per-event reference semantics; the engines now use
+/// the lazy [`settle`] form, which charges the same windows at status
+/// transitions only.
 pub fn accrue(st: &mut TraceState, dt: f64) {
     match st.status {
         TraceStatus::Running => st.decode_time += dt,
@@ -191,6 +530,119 @@ mod tests {
         }
         assert_eq!(max_fitting(100, |_| true), 100);
         assert_eq!(max_fitting(100, |d| d == 0), 0);
+    }
+
+    /// Regression: `(lo + hi) / 2` overflowed for caps in the top half
+    /// of u64 (an "unbounded" horizon), wrapping the midpoint to ~0 and
+    /// either looping forever or returning garbage.
+    #[test]
+    fn max_fitting_survives_huge_caps() {
+        for cut in [0u64, 1, 5, 1 << 40, u64::MAX - 1] {
+            assert_eq!(max_fitting(u64::MAX, |d| d <= cut), cut, "cut={cut}");
+        }
+        assert_eq!(max_fitting(u64::MAX, |_| true), u64::MAX);
+        assert_eq!(max_fitting(u64::MAX - 1, |d| d <= 3), 3);
+    }
+
+    #[test]
+    fn event_index_tracks_running_set_and_horizons() {
+        let mut idx = EventIndex::new(16, false);
+        assert_eq!(idx.running(), 0);
+        assert_eq!(idx.d_event(), None);
+        // Two traces: residents 20 (12 free slots) and 32 (0 free).
+        idx.insert(3, 0, 20, 5);
+        idx.insert(1, 0, 32, 2);
+        assert_eq!(idx.tids(), &[1, 3], "ascending trace order");
+        assert_eq!(idx.resident_tokens(), 52);
+        assert_eq!(idx.d_event(), Some(2));
+        // demand(d): trace 20 needs ceil((d-12)+/16), trace 32 ceil(d/16).
+        assert_eq!(idx.pool_demand(1), 1);
+        assert_eq!(idx.pool_demand(12), 1);
+        assert_eq!(idx.pool_demand(13), 2);
+        assert_eq!(idx.pool_demand(16), 2);
+        assert_eq!(idx.pool_demand(17), 3);
+        // Advance to trace 1's boundary and re-key it (the engine
+        // protocol: crossings are re-keyed before the next peek).
+        idx.advance(2);
+        assert_eq!(idx.resident_tokens(), 56);
+        idx.set_boundary(1, 10);
+        assert_eq!(idx.d_event(), Some(3), "trace 3's boundary is next");
+        // Residents are now 22 and 34 (10 and 14 free slots): demand
+        // stays 0 through d = 10 and crosses at d = 11.
+        assert_eq!(idx.pool_demand(1), 0);
+        assert_eq!(idx.pool_demand(10), 0);
+        assert_eq!(idx.pool_demand(11), 1);
+        idx.remove(3);
+        assert_eq!(idx.tids(), &[1]);
+        assert_eq!(idx.resident_tokens(), 34);
+        assert_eq!(idx.d_event(), Some(10), "stale heap entries are skipped");
+        idx.remove(1);
+        assert_eq!(idx.d_event(), None);
+        assert_eq!(idx.pool_demand(100), 0);
+    }
+
+    #[test]
+    fn event_index_owner_aggregates() {
+        let mut idx = EventIndex::new(16, true);
+        idx.insert(0, 7, 16, 4);
+        idx.insert(1, 2, 8, 4);
+        idx.insert(2, 7, 24, 4);
+        assert_eq!(idx.active_owners(), &[2, 7], "ascending owners");
+        // Owner 7: residents 16 (0 free) + 24 (8 free).
+        assert_eq!(idx.owner_demand(7, 1), 1);
+        assert_eq!(idx.owner_demand(7, 9), 2);
+        assert_eq!(idx.owner_demand(2, 8), 0);
+        assert_eq!(idx.owner_demand(2, 9), 1);
+        assert_eq!(idx.owner_demand(99, 5), 0, "unknown owner has no demand");
+        assert_eq!(idx.pool_demand(9), idx.owner_demand(7, 9) + idx.owner_demand(2, 9));
+        idx.remove(0);
+        idx.remove(2);
+        assert_eq!(idx.active_owners(), &[2], "owner 7 left the active set");
+        assert_eq!(idx.owner_demand(7, 9), 0, "freed owner has no demand");
+        // A new owner recycles the freed compact slot with clean rows.
+        idx.insert(3, 4, 40, 6);
+        assert_eq!(idx.active_owners(), &[2, 4]);
+        assert_eq!(idx.owner_demand(4, 8), 0, "40 resident → 8 free slots");
+        assert_eq!(idx.owner_demand(4, 9), 1);
+        assert_eq!(idx.owner_demand(2, 9), 1, "other owners unaffected by reuse");
+        // Reset keeps nothing.
+        idx.reset(16, true);
+        assert_eq!(idx.running(), 0);
+        assert_eq!(idx.active_owners(), &[] as &[u32]);
+    }
+
+    #[test]
+    fn event_index_reinsert_after_preemption() {
+        let mut idx = EventIndex::new(16, false);
+        idx.insert(0, 0, 10, 6);
+        idx.advance(3);
+        // Preempt and later resume with the grown residency.
+        idx.remove(0);
+        assert_eq!(idx.resident_tokens(), 0);
+        idx.insert(0, 0, 13, 3);
+        assert_eq!(idx.d_event(), Some(3));
+        assert_eq!(idx.resident_tokens(), 13);
+        // 3 free slots in the last block: demand(4) crosses.
+        assert_eq!(idx.pool_demand(3), 0);
+        assert_eq!(idx.pool_demand(4), 1);
+    }
+
+    #[test]
+    fn lazy_settle_matches_status_windows() {
+        let mut st = TraceState::new(0, 4);
+        let mut ls = 1.5f64;
+        // Running window [1.5, 4.0).
+        settle(&mut st, &mut ls, 4.0);
+        assert_eq!(st.decode_time, 2.5);
+        st.status = TraceStatus::Preempted;
+        // Waiting window [4.0, 9.0).
+        settle(&mut st, &mut ls, 9.0);
+        assert_eq!(st.wait_time, 5.0);
+        st.status = TraceStatus::Finished;
+        settle(&mut st, &mut ls, 12.0);
+        assert_eq!(st.decode_time, 2.5, "terminal traces accrue nothing");
+        assert_eq!(st.wait_time, 5.0);
+        assert_eq!(ls, 12.0);
     }
 
     #[test]

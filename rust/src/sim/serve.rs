@@ -35,10 +35,22 @@
 //! single-GPU driver: it feeds one open-loop workload through one engine
 //! to completion.
 //!
+//! The event loop is O(running + log) per event, not O(live): the
+//! shared [`sched::EventIndex`] maintains the running set, the
+//! `d_event` boundary horizon, the batch context size, and the
+//! block-demand histograms (pool-wide and per-owner) incrementally at
+//! status transitions, so the per-event scans and the per-probe
+//! regather of the memory-horizon search are gone; per-trace wait and
+//! decode time settle lazily from `last_settle` timestamps at status
+//! changes ([`sched::settle`]) instead of accruing every live trace on
+//! every clock move; and the KV-pressure router view
+//! ([`survivor_demand_blocks`](ServeEngine::survivor_demand_blocks)) is
+//! served from an incrementally maintained sorted score multiset when
+//! [`ServeSimConfig::route_views`] is on, instead of sorting the live
+//! set on every placement.
+//!
 //! Everything derives from `(config, seed)`: one run is bit-identical
 //! across processes and thread counts.
-
-use std::collections::BTreeMap;
 
 use crate::coordinator::method::{Method, MethodParams};
 use crate::coordinator::request::RequestState;
@@ -50,7 +62,7 @@ use crate::metrics::EngineCounters;
 use crate::sim::des::ScoreAgg;
 use crate::sim::gpu::GpuSpec;
 use crate::sim::profiles::{BenchId, ModelId, ModelProfile};
-use crate::sim::sched::{self, WaitQueue};
+use crate::sim::sched::{self, EventIndex, WaitQueue};
 use crate::sim::tracegen::{Question, TraceGen, TraceSpec};
 use crate::sim::workload::{Arrival, WorkloadSpec};
 use crate::util::rng::Rng;
@@ -86,6 +98,13 @@ pub struct ServeSimConfig {
     /// (default) = pool-bound only: one tenant may fill the pool and
     /// cross-request pruning arbitrates.
     pub quota_frac: Option<f64>,
+    /// Maintain the incremental router-view aggregates (the sorted
+    /// score multiset behind
+    /// [`ServeEngine::survivor_demand_blocks`]). The cluster simulator
+    /// turns this on — it queries the view on every placement; the
+    /// single-GPU drivers leave it off and the view (if ever asked)
+    /// falls back to an identical-result scan.
+    pub route_views: bool,
 }
 
 impl ServeSimConfig {
@@ -110,6 +129,7 @@ impl ServeSimConfig {
             score_agg: ScoreAgg::Mean,
             workload,
             quota_frac: None,
+            route_views: false,
         }
     }
 }
@@ -183,12 +203,19 @@ struct ServeTrace {
     rid: usize,
     spec: TraceSpec,
     st: TraceState,
+    /// Lazy-accrual mark: wall-clock up to which this trace's wait /
+    /// decode time has been settled ([`sched::settle`]).
+    last_settle: f64,
 }
 
 /// Per-request scheduling bookkeeping.
 struct Req {
     st: RequestState,
     q: Question,
+    /// Cached [`TraceGen::expected_trace_tokens`] of `q` (pure function
+    /// of the question — computed once at submission for the router
+    /// view instead of per trace per placement).
+    expected_tokens: f64,
     /// Trace slot range `[lo, lo + n)` in the global trace vector.
     lo: usize,
     n: usize,
@@ -249,19 +276,21 @@ pub struct ServeEngine<'a> {
     clock: f64,
     /// First submission's arrival time (the makespan epoch).
     epoch: Option<f64>,
-    /// Terminal-prefix watermark: traces below this index are all
-    /// terminal, so per-event scans skip them. Requests complete
-    /// roughly in arrival order, which keeps the scans proportional
-    /// to the *live* trace count instead of every trace ever created.
-    first_live: usize,
     submitted: usize,
     drained: usize,
     /// Undrained completions: (external request id, completion clock).
     completions: Vec<(usize, f64)>,
+    /// Incremental index over the running set: O(1) `d_event` peek and
+    /// batch context size, closed-form block-demand probes (pool-wide
+    /// and per-owner), running-set snapshots without a live scan.
+    index: EventIndex,
+    /// Sorted multiset of the running traces' aggregated step scores,
+    /// maintained at boundary crossings / status changes — the
+    /// incremental backing of the KV-pressure router view (only kept
+    /// when [`ServeSimConfig::route_views`] is on).
+    scores_sorted: Vec<f64>,
     // Reusable hot-path buffers.
     running: Vec<usize>,
-    cur_tokens: Vec<u64>,
-    owner_pairs: Vec<(OwnerId, u64)>,
     h: Vec<f32>,
     z: Vec<f32>,
 }
@@ -329,134 +358,6 @@ impl<'a> ServeSim<'a> {
         sched::max_fitting(cap, |d| tm.decode_interval(b, k0, d) <= gap)
     }
 
-    /// Largest d (capped at `cap`) such that advancing every running
-    /// trace d tokens fits the free pool *and* every owner's quota.
-    /// `cur` and `pairs` are caller-owned scratch buffers reused across
-    /// events (the loop allocates nothing at steady state).
-    fn memory_horizon(
-        &self,
-        traces: &[ServeTrace],
-        pool: &SharedKvPool,
-        running: &[usize],
-        cap: u64,
-        cur: &mut Vec<u64>,
-        pairs: &mut Vec<(OwnerId, u64)>,
-    ) -> u64 {
-        let free = pool.free_blocks() as u64;
-        let bs = self.cfg.block_size as u64;
-        cur.clear();
-        cur.extend(running.iter().map(|&i| pool.seq_tokens(i as u64) as u64));
-        let cur: &[u64] = cur;
-        let quota = pool.quota_blocks();
-        // (owner, resident tokens) sorted by owner, so per-owner demand
-        // is a run scan. Only filled when quotas are in force.
-        pairs.clear();
-        if quota.is_some() {
-            pairs.extend(
-                running.iter().zip(cur).map(|(&i, &c)| (traces[i].rid as OwnerId, c)),
-            );
-            pairs.sort_unstable();
-        }
-        let pairs: &[(OwnerId, u64)] = pairs;
-        let demand = |c: u64, d: u64| (c + d).div_ceil(bs) - c.div_ceil(bs);
-        let fits = |d: u64| -> bool {
-            let total: u64 = cur.iter().map(|&c| demand(c, d)).sum();
-            if total > free {
-                return false;
-            }
-            if quota.is_some() {
-                let mut idx = 0;
-                while idx < pairs.len() {
-                    let owner = pairs[idx].0;
-                    let mut need = 0u64;
-                    while idx < pairs.len() && pairs[idx].0 == owner {
-                        need += demand(pairs[idx].1, d);
-                        idx += 1;
-                    }
-                    if let Some(hr) = pool.owner_headroom(owner) {
-                        if need > hr as u64 {
-                            return false;
-                        }
-                    }
-                }
-            }
-            true
-        };
-        sched::max_fitting(cap, fits)
-    }
-
-    /// Memory saturated at d = 1: prune (STEP) or preempt (vLLM default).
-    /// If the *pool* binds, the victim set is every running trace —
-    /// cross-request. If only one owner's *quota* binds, the victim set
-    /// is that owner's running traces.
-    #[allow(clippy::too_many_arguments)]
-    fn memory_event(
-        &self,
-        running: &[usize],
-        traces: &mut [ServeTrace],
-        reqs: &mut [Req],
-        pool: &mut SharedKvPool,
-        wait_q: &mut WaitQueue,
-        counters: &mut EngineCounters,
-        clock: f64,
-        completions: &mut Vec<(usize, f64)>,
-    ) {
-        debug_assert!(!running.is_empty());
-        let mut total_need = 0usize;
-        for &i in running {
-            total_need += pool.blocks_needed_for_append(i as u64, 1);
-        }
-        let pool_bound = total_need > pool.free_blocks();
-        let binding: Option<OwnerId> = if pool_bound {
-            None
-        } else {
-            let mut need_by: BTreeMap<OwnerId, usize> = BTreeMap::new();
-            for &i in running {
-                *need_by.entry(traces[i].rid as OwnerId).or_insert(0) +=
-                    pool.blocks_needed_for_append(i as u64, 1);
-            }
-            need_by
-                .into_iter()
-                .find(|&(o, need)| matches!(pool.owner_headroom(o), Some(h) if need > h))
-                .map(|(o, _)| o)
-        };
-        let in_set = |i: usize| match binding {
-            Some(o) => traces[i].rid as OwnerId == o,
-            None => true,
-        };
-        match self.cfg.method {
-            Method::Step => {
-                // Algorithm 1, serving form: argmin aggregated step score
-                // over the victim set, release KV at once.
-                let victim =
-                    sched::lowest_score_victim(running, in_set, |i| {
-                        self.agg_score(&traces[i].st)
-                    })
-                    .expect("memory event with empty victim set");
-                let t = &mut traces[victim];
-                t.st.status = TraceStatus::Pruned;
-                t.st.finish_clock = clock;
-                let rid = t.rid;
-                pool.free_seq(victim as u64);
-                counters.pruned += 1;
-                request_done(&mut reqs[rid], clock, completions);
-            }
-            _ => {
-                // vLLM preemption: evict the youngest running trace in
-                // the victim set (cheapest recompute), FIFO resume.
-                let victim =
-                    sched::youngest_victim(running, in_set, |i| traces[i].st.generated)
-                        .expect("memory event with empty victim set");
-                let t = &mut traces[victim];
-                t.st.status = TraceStatus::Preempted;
-                t.st.preemptions += 1;
-                pool.free_seq(victim as u64);
-                counters.preemptions += 1;
-                wait_q.push_back(victim);
-            }
-        }
-    }
-
     /// Would resuming trace `tid` fit right now (+1 block of headroom),
     /// pool and quota included?
     fn resume_fits(
@@ -469,52 +370,6 @@ impl<'a> ServeSim<'a> {
         let rid = traces[tid].rid;
         let prefix = reqs[rid].q.prompt_tokens + traces[tid].st.generated as usize;
         pool.can_admit(rid as OwnerId, pool.blocks_needed_for_new(prefix) + 1)
-    }
-
-    /// Slim-SC similarity check within one request (thought level): pair
-    /// up its active traces at random, prune one member of each pair
-    /// whose modelled similarity crosses the threshold. Same calibration
-    /// as the single-question engine.
-    #[allow(clippy::too_many_arguments)]
-    fn slim_check_request(
-        &self,
-        rid: usize,
-        reqs: &mut [Req],
-        traces: &mut [ServeTrace],
-        pool: &mut SharedKvPool,
-        counters: &mut EngineCounters,
-        clock: f64,
-        completions: &mut Vec<(usize, f64)>,
-    ) -> bool {
-        let threshold = self.cfg.params.slim_similarity_threshold;
-        let (lo, n) = (reqs[rid].lo, reqs[rid].n);
-        let mut active: Vec<usize> = (lo..lo + n)
-            .filter(|&i| traces[i].st.status == TraceStatus::Running)
-            .collect();
-        let rq = &mut reqs[rid];
-        rq.slim_rng.shuffle(&mut active);
-        let mut pruned_any = false;
-        for pair in active.chunks_exact(2) {
-            let (i, j) = (pair[0], pair[1]);
-            let same = traces[i].spec.answer.is_some()
-                && traces[i].spec.answer == traces[j].spec.answer;
-            let sim = if same {
-                rq.slim_rng.normal_with(0.905, 0.025)
-            } else {
-                rq.slim_rng.normal_with(0.80, 0.03)
-            };
-            if sim > threshold {
-                let victim = if rq.slim_rng.bernoulli(0.5) { i } else { j };
-                let t = &mut traces[victim];
-                t.st.status = TraceStatus::Pruned;
-                t.st.finish_clock = clock;
-                pool.free_seq(victim as u64);
-                counters.pruned += 1;
-                request_done(rq, clock, completions);
-                pruned_any = true;
-            }
-        }
-        pruned_any
     }
 }
 
@@ -540,6 +395,9 @@ impl<'a> ServeEngine<'a> {
         let pool = SharedKvPool::new(pool_blocks, cfg.block_size, quota);
         let h = vec![0.0f32; gen.gen.d];
         let z = vec![0.0f32; scorer.hidden];
+        // Per-owner demand aggregates are only needed when quotas can
+        // bind the memory horizon.
+        let index = EventIndex::new(cfg.block_size, quota.is_some());
         ServeEngine {
             sim,
             n_per,
@@ -552,13 +410,12 @@ impl<'a> ServeEngine<'a> {
             counters: EngineCounters::default(),
             clock: 0.0,
             epoch: None,
-            first_live: 0,
             submitted: 0,
             drained: 0,
             completions: Vec::new(),
+            index,
+            scores_sorted: Vec::new(),
             running: Vec::new(),
-            cur_tokens: Vec::new(),
-            owner_pairs: Vec::new(),
             h,
             z,
         }
@@ -618,32 +475,57 @@ impl<'a> ServeEngine<'a> {
     /// survival odds — its score's rank fraction among the running set,
     /// since the lowest-scored trace is the next prune victim — which is
     /// exactly the signal per-trace confidence baselines cannot provide.
+    ///
+    /// With [`ServeSimConfig::route_views`] on, the score ranks come
+    /// from the incrementally maintained sorted multiset (no sort, no
+    /// allocation per placement); otherwise this falls back to
+    /// [`survivor_demand_blocks_scan`](Self::survivor_demand_blocks_scan).
+    /// Both paths produce bit-identical values — the differential
+    /// property suite locks that in.
     pub fn survivor_demand_blocks(&self) -> f64 {
-        let gen = self.sim.gen;
-        let floor = gen.bench.tokens_per_step;
-        let mut scores: Vec<(usize, f64)> = Vec::new();
-        for (i, t) in self.traces.iter().enumerate().skip(self.first_live) {
-            if t.st.status == TraceStatus::Running {
-                scores.push((i, self.sim.agg_score(&t.st)));
-            }
+        if self.sim.cfg.route_views {
+            debug_assert_eq!(self.scores_sorted.len(), self.index.running());
+            self.survivor_fold(&self.scores_sorted)
+        } else {
+            self.survivor_demand_blocks_scan()
         }
-        if scores.is_empty() {
+    }
+
+    /// Scan-based reference for
+    /// [`survivor_demand_blocks`](Self::survivor_demand_blocks): gather
+    /// and sort the running traces' scores on every call. Kept public as
+    /// the differential baseline for the property tests and the
+    /// `router/pressure_*` microbenchmarks.
+    pub fn survivor_demand_blocks_scan(&self) -> f64 {
+        let mut sorted: Vec<f64> = self
+            .index
+            .tids()
+            .iter()
+            .map(|&i| self.sim.agg_score(&self.traces[i].st))
+            .collect();
+        sorted.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+        self.survivor_fold(&sorted)
+    }
+
+    /// The demand fold shared by both router-view paths; `sorted` is
+    /// the ascending multiset of the running traces' aggregated scores.
+    /// `below` (the count of strictly lower scores) is the first index
+    /// of the score's equal-run in the sorted order, so ties share a
+    /// weight.
+    fn survivor_fold(&self, sorted: &[f64]) -> f64 {
+        let n_run = self.index.running();
+        if n_run == 0 {
             return 0.0;
         }
-        let weighted = self.sim.cfg.method == Method::Step && scores.len() > 1;
-        // Rank by one sort instead of a quadratic scan; `below` (the
-        // count of strictly lower scores) is the first index of the
-        // score's equal-run in the sorted order, so ties keep sharing a
-        // weight.
-        let mut sorted: Vec<f64> = scores.iter().map(|&(_, s)| s).collect();
-        sorted.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
-        let n = scores.len() as f64;
+        let floor = self.sim.gen.bench.tokens_per_step;
+        let weighted = self.sim.cfg.method == Method::Step && n_run > 1;
+        let n = n_run as f64;
         let bs = self.sim.cfg.block_size as f64;
         let mut demand = 0.0;
-        for &(i, s) in &scores {
+        for &i in self.index.tids() {
             let t = &self.traces[i];
-            let expected = gen.expected_trace_tokens(&self.reqs[t.rid].q);
-            let remaining = (expected - t.st.generated as f64).max(floor);
+            let s = self.sim.agg_score(&t.st);
+            let remaining = (self.reqs[t.rid].expected_tokens - t.st.generated as f64).max(floor);
             let w = if weighted {
                 let below = sorted.partition_point(|&x| x < s) as f64;
                 0.5 + 0.5 * below / (n - 1.0)
@@ -653,6 +535,43 @@ impl<'a> ServeEngine<'a> {
             demand += w * remaining / bs;
         }
         demand
+    }
+
+    /// Register a trace entering the running set: index it (with its
+    /// `resident` prefix tokens) and, when router views are maintained,
+    /// add its aggregated score to the sorted multiset.
+    fn index_insert(&mut self, tid: usize, resident: usize) {
+        let dist = self.next_end[tid] - self.traces[tid].st.generated;
+        let owner = self.traces[tid].rid as OwnerId;
+        self.index.insert(tid, owner, resident as u64, dist);
+        if self.sim.cfg.route_views {
+            let s = self.sim.agg_score(&self.traces[tid].st);
+            let p = self.scores_sorted.partition_point(|&x| x < s);
+            self.scores_sorted.insert(p, s);
+        }
+    }
+
+    /// Remove a trace from the running set (prune / preempt / finish):
+    /// drop it from the index and (when maintained) its current
+    /// aggregated score from the sorted multiset.
+    fn index_remove(&mut self, tid: usize) {
+        self.index.remove(tid);
+        if self.sim.cfg.route_views {
+            let s = self.sim.agg_score(&self.traces[tid].st);
+            let p = self.scores_sorted.partition_point(|&x| x < s);
+            debug_assert_eq!(self.scores_sorted.get(p), Some(&s), "score multiset drift");
+            self.scores_sorted.remove(p);
+        }
+    }
+
+    /// Replace one score in the sorted multiset (a boundary crossing
+    /// moved a running trace's aggregate from `old` to `new`).
+    fn scores_replace(&mut self, old: f64, new: f64) {
+        let p = self.scores_sorted.partition_point(|&x| x < old);
+        debug_assert_eq!(self.scores_sorted.get(p), Some(&old), "score multiset drift");
+        self.scores_sorted.remove(p);
+        let p = self.scores_sorted.partition_point(|&x| x < new);
+        self.scores_sorted.insert(p, new);
     }
 
     /// Submit one arrival: create its request's traces and admit
@@ -672,10 +591,12 @@ impl<'a> ServeEngine<'a> {
         let local = self.reqs.len();
         let n_per = self.n_per;
         let q = self.sim.gen.question(arr.qid);
+        let expected_tokens = self.sim.gen.expected_trace_tokens(&q);
         let lo = self.traces.len();
         let mut rq = Req {
             st: RequestState::new(arr.rid, arr.qid, arr.t_arrive),
             q,
+            expected_tokens,
             lo,
             n: n_per,
             live: n_per,
@@ -695,7 +616,8 @@ impl<'a> ServeEngine<'a> {
             let spec = self.sim.gen.trace(&rq.q, arr.rid * n_per + i);
             let mut st = TraceState::new(tid as u64, self.sim.cfg.params.deepconf_window);
             let need = self.pool.blocks_needed_for_new(rq.q.prompt_tokens);
-            if self.pool.can_admit(local as OwnerId, need) {
+            let fits = self.pool.can_admit(local as OwnerId, need);
+            if fits {
                 let ok =
                     self.pool.allocate_seq(local as OwnerId, tid as u64, rq.q.prompt_tokens);
                 debug_assert!(ok, "can_admit guaranteed the admission");
@@ -705,19 +627,25 @@ impl<'a> ServeEngine<'a> {
                 self.wait_q.push_back(tid);
             }
             self.next_end.push(spec.step_ends[0]);
-            self.traces.push(ServeTrace { rid: local, spec, st });
+            self.traces.push(ServeTrace { rid: local, spec, st, last_settle: 0.0 });
+            if fits {
+                self.index_insert(tid, rq.q.prompt_tokens);
+            }
         }
         if admitted > 0 {
             rq.st.admitted(self.clock);
             let dt = self.sim.profile.timing.prefill(rq.q.prompt_tokens * admitted);
+            // The engine stalls for the prefill; earlier requests' live
+            // traces need no bookkeeping here — their open settle
+            // windows span the stall and classify it by status when
+            // they next change state ([`sched::settle`]).
             self.clock += dt;
-            // The engine stalls for the prefill: earlier requests' live
-            // traces accrue decode (running) / wait (preempted) time
-            // (traces below the terminal-prefix watermark are all
-            // terminal — nothing to accrue).
-            for t in self.traces[self.first_live..lo].iter_mut() {
-                sched::accrue(&mut t.st, dt);
-            }
+        }
+        // The new request's traces start accruing after their own
+        // admission prefill (queued ones begin waiting now).
+        let clock = self.clock;
+        for t in self.traces[lo..].iter_mut() {
+            t.last_settle = clock;
         }
         self.reqs.push(rq);
     }
@@ -747,46 +675,30 @@ impl<'a> ServeEngine<'a> {
 
     /// One iteration of the event loop, bounded by `t_limit`.
     fn step_event(&mut self, t_limit: f64) -> Step {
-        while self.first_live < self.traces.len()
-            && !self.traces[self.first_live].st.status.is_active()
-        {
-            self.first_live += 1;
-        }
-        let mut running = std::mem::take(&mut self.running);
-        running.clear();
-        for (i, t) in self.traces.iter().enumerate().skip(self.first_live) {
-            if t.st.status == TraceStatus::Running {
-                running.push(i);
-            }
-        }
-
-        if running.is_empty() {
-            self.running = running;
+        if self.index.running() == 0 {
             if !self.wait_q.is_empty() {
                 self.resume_or_drop();
                 return Step::Advanced;
             }
             return Step::Idle;
         }
+        // Snapshot the maintained running set (ascending trace order —
+        // the historical scan order) so boundary processing can mutate
+        // the index while iterating.
+        let mut running = std::mem::take(&mut self.running);
+        running.clear();
+        running.extend_from_slice(self.index.tids());
 
         let b = running.len();
 
-        // ---- event horizon: iterations until any step boundary.
-        let mut d_event = u64::MAX;
-        for &i in &running {
-            d_event = d_event.min(self.next_end[i] - self.traces[i].st.generated);
-        }
+        // ---- event horizon: O(1) peek at the maintained boundary min.
+        let d_event = self.index.d_event().expect("running traces are indexed");
         debug_assert!(d_event >= 1);
 
         // ---- limit horizon: do not decode past the driver's limit
-        // (the next arrival, for the single-GPU driver).
-        let k0: usize = running
-            .iter()
-            .map(|&i| {
-                self.reqs[self.traces[i].rid].q.prompt_tokens
-                    + self.traces[i].st.generated as usize
-            })
-            .sum();
+        // (the next arrival, for the single-GPU driver). K0 is the
+        // index's maintained resident-token sum.
+        let k0 = self.index.resident_tokens() as usize;
         let mut d_cap = d_event;
         if t_limit.is_finite() {
             let gap = t_limit - self.clock;
@@ -794,54 +706,37 @@ impl<'a> ServeEngine<'a> {
         }
 
         // ---- memory horizon over the shared pool (+ quotas).
-        let d_mem = self.sim.memory_horizon(
-            &self.traces,
-            &self.pool,
-            &running,
-            d_cap,
-            &mut self.cur_tokens,
-            &mut self.owner_pairs,
-        );
+        let d_mem = self.memory_horizon(d_cap);
         if d_mem == 0 {
-            self.sim.memory_event(
-                &running,
-                &mut self.traces,
-                &mut self.reqs,
-                &mut self.pool,
-                &mut self.wait_q,
-                &mut self.counters,
-                self.clock,
-                &mut self.completions,
-            );
+            self.memory_event(&running);
             self.running = running;
             return Step::Advanced;
         }
         let d = d_cap.min(d_mem);
 
-        // ---- advance time + tokens.
+        // ---- advance time + tokens (lazy accrual: the open settle
+        // windows absorb `dt`; nothing per-trace to touch here).
         let dt = self.sim.profile.timing.decode_interval(b, k0, d);
         self.clock += dt;
         self.counters.decode_iterations += d;
         self.counters.generated_tokens += d * b as u64;
-        let fl = self.first_live;
-        for t in self.traces[fl..].iter_mut() {
-            sched::accrue(&mut t.st, dt);
-        }
         for &i in &running {
             self.traces[i].st.generated += d;
             let ok = self.pool.append_tokens(i as u64, d as usize);
             debug_assert!(ok, "memory horizon must guarantee the append");
         }
+        self.index.advance(d);
 
         // ---- boundary / completion events.
         let mut freed_any = false;
         let needs_scores = self.sim.cfg.method == Method::Step;
+        let route_views = self.sim.cfg.route_views;
         let clock = self.clock;
         for &i in &running {
-            let t = &mut self.traces[i];
-            if t.st.generated != self.next_end[i] {
+            if self.traces[i].st.generated != self.next_end[i] {
                 continue;
             }
+            let t = &mut self.traces[i];
             let step_n = t.st.next_step + 1;
             t.st.next_step += 1;
             let rid = t.rid;
@@ -850,12 +745,21 @@ impl<'a> ServeEngine<'a> {
                 self.next_end[i] = t.spec.step_ends[t.st.next_step];
             }
             if needs_scores {
+                let old = self.sim.agg_score(&self.traces[i].st);
+                let t = &mut self.traces[i];
                 self.sim.gen.hidden_state_into(&self.reqs[rid].q, &t.spec, step_n, &mut self.h);
                 let s = self.sim.scorer.score_into(&self.h, &mut self.z) as f64;
                 t.st.push_score(s);
                 self.counters.step_scores += 1;
+                if route_views {
+                    let new = self.sim.agg_score(&self.traces[i].st);
+                    self.scores_replace(old, new);
+                }
             }
-            if t.st.generated == t.spec.total_tokens {
+            if self.traces[i].st.generated == self.traces[i].spec.total_tokens {
+                self.index_remove(i);
+                let t = &mut self.traces[i];
+                sched::settle(&mut t.st, &mut t.last_settle, clock);
                 t.st.status = TraceStatus::Finished;
                 t.st.finish_clock = clock;
                 self.pool.free_seq(i as u64);
@@ -863,6 +767,9 @@ impl<'a> ServeEngine<'a> {
                 let rq = &mut self.reqs[rid];
                 rq.st.first_vote(clock);
                 request_done(rq, clock, &mut self.completions);
+            } else {
+                let dist = self.next_end[i] - self.traces[i].st.generated;
+                self.index.set_boundary(i, dist);
             }
         }
 
@@ -881,15 +788,7 @@ impl<'a> ServeEngine<'a> {
                     .count();
                 self.reqs[rid].next_slim +=
                     self.sim.cfg.params.slim_check_interval_steps * active.max(1);
-                freed_any |= self.sim.slim_check_request(
-                    rid,
-                    &mut self.reqs,
-                    &mut self.traces,
-                    &mut self.pool,
-                    &mut self.counters,
-                    clock,
-                    &mut self.completions,
-                );
+                freed_any |= self.slim_check_request(rid, clock);
             }
         }
 
@@ -898,6 +797,130 @@ impl<'a> ServeEngine<'a> {
         }
         self.running = running;
         Step::Advanced
+    }
+
+    /// Largest d (capped at `cap`) such that advancing every running
+    /// trace d tokens fits the free pool *and* every owner's quota.
+    /// Every probe of the binary search is a closed-form fold over the
+    /// index's block-offset histograms — O(block size + active owners)
+    /// instead of an O(live) regather per probe.
+    fn memory_horizon(&self, cap: u64) -> u64 {
+        let free = self.pool.free_blocks() as u64;
+        let quota = self.pool.quota_blocks();
+        let (index, pool) = (&self.index, &self.pool);
+        sched::max_fitting(cap, |d| {
+            if index.pool_demand(d) > free {
+                return false;
+            }
+            if quota.is_some() {
+                for &o in index.active_owners() {
+                    if let Some(hr) = pool.owner_headroom(o) {
+                        if index.owner_demand(o, d) > hr as u64 {
+                            return false;
+                        }
+                    }
+                }
+            }
+            true
+        })
+    }
+
+    /// Memory saturated at d = 1: prune (STEP) or preempt (vLLM default).
+    /// If the *pool* binds, the victim set is every running trace —
+    /// cross-request. If only one owner's *quota* binds, the victim set
+    /// is that owner's running traces (found through the index's
+    /// per-owner demand aggregates, ascending owner order — the same
+    /// first-binding-owner the retired sorted-pair scan produced).
+    fn memory_event(&mut self, running: &[usize]) {
+        debug_assert!(!running.is_empty());
+        let pool_bound = self.index.pool_demand(1) > self.pool.free_blocks() as u64;
+        let binding: Option<OwnerId> = if pool_bound || self.pool.quota_blocks().is_none() {
+            None
+        } else {
+            self.index.active_owners().iter().copied().find(|&o| {
+                matches!(self.pool.owner_headroom(o),
+                         Some(h) if self.index.owner_demand(o, 1) > h as u64)
+            })
+        };
+        let traces = &self.traces;
+        let in_set = |i: usize| match binding {
+            Some(o) => traces[i].rid as OwnerId == o,
+            None => true,
+        };
+        let clock = self.clock;
+        match self.sim.cfg.method {
+            Method::Step => {
+                // Algorithm 1, serving form: argmin aggregated step score
+                // over the victim set, release KV at once.
+                let victim =
+                    sched::lowest_score_victim(running, in_set, |i| {
+                        self.sim.agg_score(&traces[i].st)
+                    })
+                    .expect("memory event with empty victim set");
+                self.index_remove(victim);
+                let t = &mut self.traces[victim];
+                sched::settle(&mut t.st, &mut t.last_settle, clock);
+                t.st.status = TraceStatus::Pruned;
+                t.st.finish_clock = clock;
+                let rid = t.rid;
+                self.pool.free_seq(victim as u64);
+                self.counters.pruned += 1;
+                request_done(&mut self.reqs[rid], clock, &mut self.completions);
+            }
+            _ => {
+                // vLLM preemption: evict the youngest running trace in
+                // the victim set (cheapest recompute), FIFO resume.
+                let victim =
+                    sched::youngest_victim(running, in_set, |i| traces[i].st.generated)
+                        .expect("memory event with empty victim set");
+                self.index_remove(victim);
+                let t = &mut self.traces[victim];
+                sched::settle(&mut t.st, &mut t.last_settle, clock);
+                t.st.status = TraceStatus::Preempted;
+                t.st.preemptions += 1;
+                self.pool.free_seq(victim as u64);
+                self.counters.preemptions += 1;
+                self.wait_q.push_back(victim);
+            }
+        }
+    }
+
+    /// Slim-SC similarity check within one request (thought level): pair
+    /// up its active traces at random, prune one member of each pair
+    /// whose modelled similarity crosses the threshold. Same calibration
+    /// as the single-question engine.
+    fn slim_check_request(&mut self, rid: usize, clock: f64) -> bool {
+        let threshold = self.sim.cfg.params.slim_similarity_threshold;
+        let (lo, n) = (self.reqs[rid].lo, self.reqs[rid].n);
+        let mut active: Vec<usize> = (lo..lo + n)
+            .filter(|&i| self.traces[i].st.status == TraceStatus::Running)
+            .collect();
+        self.reqs[rid].slim_rng.shuffle(&mut active);
+        let mut pruned_any = false;
+        for pair in active.chunks_exact(2) {
+            let (i, j) = (pair[0], pair[1]);
+            let same = self.traces[i].spec.answer.is_some()
+                && self.traces[i].spec.answer == self.traces[j].spec.answer;
+            let rq = &mut self.reqs[rid];
+            let sim = if same {
+                rq.slim_rng.normal_with(0.905, 0.025)
+            } else {
+                rq.slim_rng.normal_with(0.80, 0.03)
+            };
+            if sim > threshold {
+                let victim = if rq.slim_rng.bernoulli(0.5) { i } else { j };
+                self.index_remove(victim);
+                let t = &mut self.traces[victim];
+                sched::settle(&mut t.st, &mut t.last_settle, clock);
+                t.st.status = TraceStatus::Pruned;
+                t.st.finish_clock = clock;
+                self.pool.free_seq(victim as u64);
+                self.counters.pruned += 1;
+                request_done(&mut self.reqs[rid], clock, &mut self.completions);
+                pruned_any = true;
+            }
+        }
+        pruned_any
     }
 
     /// Fully stalled: resume the first queued trace (FIFO) whose prefix
@@ -911,12 +934,14 @@ impl<'a> ServeEngine<'a> {
             return;
         }
         let head = self.wait_q.pop_front().expect("caller checked non-empty");
+        let clock = self.clock;
         let t = &mut self.traces[head];
+        sched::settle(&mut t.st, &mut t.last_settle, clock);
         t.st.status = TraceStatus::Pruned;
-        t.st.finish_clock = self.clock;
+        t.st.finish_clock = clock;
         let rid = t.rid;
         self.counters.pruned += 1;
-        request_done(&mut self.reqs[rid], self.clock, &mut self.completions);
+        request_done(&mut self.reqs[rid], clock, &mut self.completions);
     }
 
     /// Resume the wait-queue head if its whole prefix fits — vLLM's FCFS
@@ -938,25 +963,33 @@ impl<'a> ServeEngine<'a> {
         let prefix = self.reqs[rid].q.prompt_tokens + self.traces[tid].st.generated as usize;
         let ok = self.pool.allocate_seq(rid as OwnerId, tid as u64, prefix);
         debug_assert!(ok, "resume_fits guaranteed the admission");
-        self.traces[tid].st.status = TraceStatus::Running;
         self.reqs[rid].st.admitted(self.clock);
         self.counters.resumes += 1;
         let dt = self.sim.profile.timing.prefill(prefix);
         self.clock += dt;
-        let fl = self.first_live;
-        for t in self.traces[fl..].iter_mut() {
-            sched::accrue(&mut t.st, dt);
-        }
-        // The resumed trace itself: reconstruction counts as waiting.
-        sched::charge_resume(&mut self.traces[tid].st, dt);
+        // The resumed trace's own KV reconstruction counts as waiting
+        // (paper: "resumed with KV cache reconstructed"): settle its
+        // wait through the post-prefill clock, then open its running
+        // window. Other live traces' open windows absorb the stall
+        // under their own statuses.
+        let clock = self.clock;
+        let t = &mut self.traces[tid];
+        sched::settle(&mut t.st, &mut t.last_settle, clock);
+        t.st.status = TraceStatus::Running;
+        self.index_insert(tid, prefix);
     }
 
     /// Final aggregation: voting + per-request SLO metrics, in
     /// submission order.
-    pub fn finish(self) -> ServeResult {
+    pub fn finish(mut self) -> ServeResult {
         debug_assert!(self.wait_q.is_empty());
         let cfg = self.sim.cfg;
         let clock = self.clock;
+        // Settle any still-open accrual windows (a no-op on a fully
+        // drained engine, where every trace is terminal).
+        for t in self.traces.iter_mut() {
+            sched::settle(&mut t.st, &mut t.last_settle, clock);
+        }
         let outcomes: Vec<RequestOutcome> = self
             .reqs
             .iter()
@@ -1277,6 +1310,48 @@ mod tests {
         for (rid, t_done) in done {
             let o = r.outcomes.iter().find(|o| o.rid == rid).expect("rid known");
             assert!((o.t_arrive + o.latency_s - t_done).abs() < 1e-9);
+        }
+    }
+
+    /// The incremental router view (maintained sorted score multiset)
+    /// is bit-identical to the sort-per-call scan at every step of a
+    /// pressured run — the contract the cluster router relies on.
+    #[test]
+    fn survivor_demand_incremental_matches_scan() {
+        for method in [Method::Sc, Method::Step] {
+            let mut cfg = pressured_cfg(method);
+            cfg.route_views = true;
+            cfg.quota_frac = Some(0.4);
+            let gp = GenParams::default_d64();
+            let scorer = projection_scorer(&gp);
+            let gen = TraceGen::new(cfg.model, cfg.bench, gp, cfg.seed ^ 0x5EED);
+            let arrivals = cfg
+                .workload
+                .generate(gen.bench.n_questions, cfg.seed ^ 0xA331_4A11_D00D_FEED);
+            let mut eng = ServeEngine::new(&cfg, &gen, &scorer);
+            for a in &arrivals {
+                if eng.is_idle() {
+                    eng.advance_idle_to(a.t_arrive);
+                }
+                eng.run_until(a.t_arrive);
+                eng.submit(a);
+                assert_eq!(
+                    eng.survivor_demand_blocks(),
+                    eng.survivor_demand_blocks_scan(),
+                    "{method:?}: incremental view diverged after submit"
+                );
+            }
+            let mut steps = 0usize;
+            while eng.run_one_event() {
+                steps += 1;
+                assert_eq!(
+                    eng.survivor_demand_blocks(),
+                    eng.survivor_demand_blocks_scan(),
+                    "{method:?}: incremental view diverged at event {steps}"
+                );
+            }
+            assert!(steps > 10, "{method:?}: the pressured run should do real work");
+            assert_eq!(eng.survivor_demand_blocks(), 0.0);
         }
     }
 

@@ -14,6 +14,10 @@
 //! (the harness derives every RNG stream from `(seed, qid)`), the result
 //! vector is bit-identical for any thread count — the property
 //! `tests/parallel_determinism.rs` locks in.
+//!
+//! [`parallel_for_each_mut`] is the in-place sibling: disjoint `&mut`
+//! items (e.g. the cluster simulator's independent per-GPU engines)
+//! mutated concurrently, one contiguous chunk per worker.
 
 use std::sync::Mutex;
 
@@ -143,6 +147,39 @@ where
         .collect()
 }
 
+/// Run `f(i, &mut items[i])` over every item, partitioning `items` into
+/// one contiguous chunk per worker (0 = auto). The items are disjoint
+/// `&mut` borrows, so there is no result ordering to preserve and no
+/// stealing needed: each worker mutates its chunk in place. This is the
+/// primitive behind the cluster simulator's parallel engine stepping —
+/// R independent engines advanced concurrently between interaction
+/// points, with identical per-item effects for any thread count.
+pub fn parallel_for_each_mut<T, F>(threads: usize, items: &mut [T], f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut T) + Sync,
+{
+    let n = items.len();
+    let threads = resolve_threads(threads).min(n.max(1));
+    if threads <= 1 || n <= 1 {
+        for (i, item) in items.iter_mut().enumerate() {
+            f(i, item);
+        }
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|scope| {
+        let f = &f;
+        for (c, slice) in items.chunks_mut(chunk).enumerate() {
+            scope.spawn(move || {
+                for (k, item) in slice.iter_mut().enumerate() {
+                    f(c * chunk + k, item);
+                }
+            });
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -192,6 +229,23 @@ mod tests {
         // `threads` workers exist.
         let fresh = out.iter().filter(|&&c| c == 1).count();
         assert!((1..=3).contains(&fresh), "fresh states: {fresh}");
+    }
+
+    #[test]
+    fn for_each_mut_touches_every_item_once() {
+        for threads in [1, 2, 3, 8, 64] {
+            let mut items: Vec<usize> = (0..37).collect();
+            parallel_for_each_mut(threads, &mut items, |i, item| {
+                assert_eq!(i, *item, "index must match the item's slot");
+                *item += 100;
+            });
+            assert!(
+                items.iter().enumerate().all(|(i, &v)| v == i + 100),
+                "threads={threads}: every item mutated exactly once"
+            );
+        }
+        let mut empty: Vec<usize> = Vec::new();
+        parallel_for_each_mut(4, &mut empty, |_, _| unreachable!());
     }
 
     #[test]

@@ -186,6 +186,43 @@ fn cluster_metric_blocks_are_thread_invariant() {
     assert_eq!(serial, table6::metrics_json(&base, &m2, &r2).to_string_pretty());
 }
 
+/// Parallel *engine stepping* inside one cluster simulation (advancing
+/// the R per-GPU engines concurrently between interaction points via
+/// `pool::parallel_for_each_mut`) is byte-identical to the serial
+/// engine loop: the engines share no state between arrivals and
+/// completions merge in GPU order either way.
+#[test]
+fn cluster_parallel_engine_stepping_is_byte_identical() {
+    let gp = GenParams::default_d64();
+    let sc = projection_scorer(&gp);
+    let base = ClusterOpts {
+        gpus: 4,
+        model: ModelId::Phi4_14B,
+        bench: BenchId::Hmmt2425,
+        n_requests: 8,
+        clients: 4,
+        think_s: 20.0,
+        heavy_frac: 0.5,
+        n_traces: 4,
+        mem_util: 0.5,
+        seed: 7,
+        threads: 1,
+        step_threads: 1,
+        ..Default::default()
+    };
+    let (m, r) = table6::run_grids(&base, &gp, &sc);
+    let serial = table6::metrics_json(&base, &m, &r).to_string_pretty();
+    for step_threads in [2, 4, 8, 0] {
+        let opts = ClusterOpts { step_threads, ..base.clone() };
+        let (m, r) = table6::run_grids(&opts, &gp, &sc);
+        let stepped = table6::metrics_json(&opts, &m, &r).to_string_pretty();
+        assert_eq!(
+            serial, stepped,
+            "step_threads={step_threads}: parallel-stepped cluster differs from serial"
+        );
+    }
+}
+
 /// The serve-sim acceptance contract: `--threads 1` and `--threads 8`
 /// produce byte-identical BENCH_serving.json metric blocks. Threads only
 /// shard the (deterministic, single-threaded) per-method simulations.

@@ -9,6 +9,8 @@ use step::sim::cluster::{ClusterConfig, ClusterSim, ClusterWorkload};
 use step::sim::des::{DesEngine, SimConfig};
 use step::sim::profiles::{BenchId, ModelId};
 use step::sim::router::RouterKind;
+use step::sim::sched::{self, EventIndex};
+use step::sim::serve::{ServeEngine, ServeSimConfig};
 use step::sim::tracegen::{GenParams, TraceGen};
 use step::sim::verifier;
 use step::sim::workload::{ClosedLoopSpec, WorkloadSpec};
@@ -188,6 +190,221 @@ fn prop_percentile_monotone() {
     });
 }
 
+// ------------------------------------------------- event-index differential
+
+/// Naive mirror of one running trace for the differential test.
+#[derive(Clone, Copy)]
+struct NaiveTrace {
+    owner: u32,
+    resident: u64,
+    dist: u64,
+}
+
+/// Per-trace block demand of advancing `d` tokens — the formula the
+/// scan-based engines folded per probe.
+fn naive_demand(c: u64, d: u64, bs: u64) -> u64 {
+    (c + d).div_ceil(bs) - c.div_ceil(bs)
+}
+
+/// Differential property: under randomized insert / advance / re-key /
+/// remove traffic, every [`EventIndex`] aggregate — the running set,
+/// resident-token sum, `d_event`, closed-form pool and per-owner block
+/// demands, and the pool- and quota-bound memory horizons — exactly
+/// equals a naive per-trace scan kept alongside.
+#[test]
+fn prop_event_index_matches_naive_scan() {
+    forall("event-index-differential", 40, |rng| {
+        let bs = [8u64, 16, 32][rng.below(3)];
+        let mut idx = EventIndex::new(bs as usize, true);
+        let mut model: Vec<Option<NaiveTrace>> = Vec::new();
+
+        let check = |idx: &mut EventIndex, model: &[Option<NaiveTrace>], rng: &mut Rng| {
+            let live: Vec<(usize, NaiveTrace)> = model
+                .iter()
+                .enumerate()
+                .filter_map(|(tid, t)| t.as_ref().map(|&tr| (tid, tr)))
+                .collect();
+            let tids: Vec<usize> = live.iter().map(|&(tid, _)| tid).collect();
+            assert_eq!(idx.tids(), &tids[..], "running set drift");
+            assert_eq!(idx.running(), live.len());
+            let resident: u64 = live.iter().map(|&(_, t)| t.resident).sum();
+            assert_eq!(idx.resident_tokens(), resident, "resident-sum drift");
+            let d_event = live.iter().map(|&(_, t)| t.dist).min();
+            assert_eq!(idx.d_event(), d_event, "d_event drift");
+
+            let mut owners: Vec<u32> = live.iter().map(|&(_, t)| t.owner).collect();
+            owners.sort_unstable();
+            owners.dedup();
+            assert_eq!(idx.active_owners(), &owners[..], "active-owner drift");
+
+            for _ in 0..4 {
+                let d = 1 + rng.below(3 * bs as usize) as u64;
+                let naive: u64 =
+                    live.iter().map(|&(_, t)| naive_demand(t.resident, d, bs)).sum();
+                assert_eq!(idx.pool_demand(d), naive, "pool demand drift at d={d}");
+                for &o in &owners {
+                    let naive_o: u64 = live
+                        .iter()
+                        .filter(|&&(_, t)| t.owner == o)
+                        .map(|&(_, t)| naive_demand(t.resident, d, bs))
+                        .sum();
+                    assert_eq!(idx.owner_demand(o, d), naive_o, "owner {o} demand drift");
+                }
+            }
+
+            // Pool-bound memory horizon: indexed closed form vs scan.
+            if let Some(cap) = d_event {
+                let free = rng.below(200) as u64;
+                let indexed = sched::max_fitting(cap, |d| idx.pool_demand(d) <= free);
+                let scanned = sched::max_fitting(cap, |d| {
+                    live.iter().map(|&(_, t)| naive_demand(t.resident, d, bs)).sum::<u64>()
+                        <= free
+                });
+                assert_eq!(indexed, scanned, "pool-bound horizon drift");
+
+                // Quota-bound horizon: uniform per-owner headroom.
+                let headroom = rng.below(40) as u64;
+                let indexed = sched::max_fitting(cap, |d| {
+                    idx.pool_demand(d) <= free
+                        && idx.active_owners().iter().all(|&o| idx.owner_demand(o, d) <= headroom)
+                });
+                let scanned = sched::max_fitting(cap, |d| {
+                    live.iter().map(|&(_, t)| naive_demand(t.resident, d, bs)).sum::<u64>()
+                        <= free
+                        && owners.iter().all(|&o| {
+                            live.iter()
+                                .filter(|&&(_, t)| t.owner == o)
+                                .map(|&(_, t)| naive_demand(t.resident, d, bs))
+                                .sum::<u64>()
+                                <= headroom
+                        })
+                });
+                assert_eq!(indexed, scanned, "quota-bound horizon drift");
+            }
+        };
+
+        for _ in 0..120 {
+            let live_tids: Vec<usize> = model
+                .iter()
+                .enumerate()
+                .filter_map(|(tid, t)| t.as_ref().map(|_| tid))
+                .collect();
+            let dead_tids: Vec<usize> = model
+                .iter()
+                .enumerate()
+                .filter_map(|(tid, t)| t.is_none().then_some(tid))
+                .collect();
+            match rng.below(5) {
+                // Insert a fresh trace (admission).
+                0 => {
+                    let t = NaiveTrace {
+                        owner: rng.below(5) as u32,
+                        resident: 1 + rng.below(400) as u64,
+                        dist: 1 + rng.below(40) as u64,
+                    };
+                    let tid = model.len();
+                    idx.insert(tid, t.owner, t.resident, t.dist);
+                    model.push(Some(t));
+                }
+                // Reinsert a previously removed tid (preempt → resume:
+                // same slot, grown residency, fresh boundary — the path
+                // the engines take on every recompute-on-resume).
+                3 if !dead_tids.is_empty() => {
+                    let tid = dead_tids[rng.below(dead_tids.len())];
+                    let t = NaiveTrace {
+                        owner: rng.below(5) as u32,
+                        resident: 1 + rng.below(600) as u64,
+                        dist: 1 + rng.below(40) as u64,
+                    };
+                    idx.insert(tid, t.owner, t.resident, t.dist);
+                    model[tid] = Some(t);
+                }
+                // Advance to at most the event horizon, then process
+                // crossings: finish (remove) or re-key, like the engines.
+                1 if !live_tids.is_empty() => {
+                    let d_event =
+                        model.iter().flatten().map(|t| t.dist).min().expect("live traces");
+                    let d = 1 + rng.below(d_event as usize) as u64;
+                    idx.advance(d);
+                    for tid in 0..model.len() {
+                        let Some(t) = &mut model[tid] else { continue };
+                        t.resident += d;
+                        t.dist -= d;
+                        if t.dist == 0 {
+                            if rng.bernoulli(0.4) {
+                                idx.remove(tid);
+                                model[tid] = None;
+                            } else {
+                                let dist = 1 + rng.below(40) as u64;
+                                idx.set_boundary(tid, dist);
+                                model[tid].as_mut().expect("just matched").dist = dist;
+                            }
+                        }
+                    }
+                }
+                // Preempt / prune a random running trace.
+                2 if !live_tids.is_empty() => {
+                    let tid = live_tids[rng.below(live_tids.len())];
+                    idx.remove(tid);
+                    model[tid] = None;
+                }
+                _ => {}
+            }
+            check(&mut idx, model.as_slice(), &mut *rng);
+        }
+    });
+}
+
+/// Differential property: the serving engine's incrementally maintained
+/// router view (`survivor_demand_blocks`) is bit-identical to the
+/// sort-per-call scan reference at every event of randomized pressured
+/// workloads, across methods, quotas, and seeds.
+#[test]
+fn prop_survivor_demand_incremental_matches_scan() {
+    let gp = GenParams::default_d64();
+    let scorer = proj_scorer(&gp);
+    use step::coordinator::method::Method;
+    let methods = [Method::Cot, Method::Sc, Method::SlimSc, Method::Step];
+    forall("survivor-demand-differential", 8, |rng| {
+        let mut cfg = ServeSimConfig::new(
+            ModelId::Phi4_14B,
+            BenchId::Hmmt2425,
+            methods[rng.below(4)],
+            2 + rng.below(5),
+            WorkloadSpec::poisson(0.05 + rng.f64() * 0.1, 3),
+        );
+        cfg.mem_util = 0.45 + 0.1 * rng.below(3) as f64;
+        cfg.seed = rng.next_u64();
+        cfg.route_views = true;
+        if rng.bernoulli(0.5) {
+            cfg.quota_frac = Some(0.3 + rng.f64() * 0.4);
+        }
+        let gen = TraceGen::new(cfg.model, cfg.bench, gp.clone(), cfg.seed ^ 0x5EED);
+        let arrivals = cfg
+            .workload
+            .generate(gen.bench.n_questions, cfg.seed ^ 0xA331_4A11_D00D_FEED);
+        let mut eng = ServeEngine::new(&cfg, &gen, &scorer);
+        for a in &arrivals {
+            if eng.is_idle() {
+                eng.advance_idle_to(a.t_arrive);
+            }
+            eng.run_until(a.t_arrive);
+            eng.submit(a);
+            assert_eq!(eng.survivor_demand_blocks(), eng.survivor_demand_blocks_scan());
+        }
+        let mut events = 0usize;
+        while eng.run_one_event() {
+            events += 1;
+            assert_eq!(
+                eng.survivor_demand_blocks(),
+                eng.survivor_demand_blocks_scan(),
+                "diverged at event {events}"
+            );
+        }
+        assert_eq!(eng.survivor_demand_blocks(), 0.0, "drained engine has no demand");
+    });
+}
+
 // ----------------------------------------------------- engine invariants
 
 fn proj_scorer(gp: &GenParams) -> step::coordinator::scorer::StepScorer {
@@ -233,6 +450,8 @@ fn prop_cluster_router_invariants() {
         cfg.mem_util = 0.5 + 0.1 * rng.below(5) as f64;
         cfg.admission.max_outstanding_per_gpu = 1 + rng.below(3);
         cfg.admission.queue_cap = rng.below(3);
+        // Parallel engine stepping must uphold every invariant too.
+        cfg.step_threads = 1 + rng.below(4);
         if rng.bernoulli(0.3) {
             cfg.admission.slo_s = Some(10.0 + rng.f64() * 500.0);
         }
