@@ -6,9 +6,14 @@
 //! KV-pressure-aware router beats round-robin on p99 end-to-end latency
 //! for STEP under a skewed closed-loop workload at R >= 4 GPUs — the
 //! cluster-scale rendering of the paper's claim (step scores are a
-//! schedulable signal; per-trace confidence is not). Records the
+//! schedulable signal; per-trace confidence is not), and (c) on a
+//! heterogeneous pool squeezed to the shedding point, cross-GPU trace
+//! migration (`migrate=on-shed`) sheds strictly less than
+//! `migrate=never` while staying byte-identical across `step_threads`
+//! — work is preserved, not thrown away. Records the
 //! serial-vs-parallel *stepping* wall-clock and speedup alongside the
-//! cell-sharding numbers. Writes `results/BENCH_cluster.json`.
+//! cell-sharding numbers, plus the migration gate ratios. Writes
+//! `results/BENCH_cluster.json` (to `$STEP_RESULTS_DIR` when set).
 //!
 //! Runs self-contained on the built-in generator defaults (no artifacts
 //! needed), so CI and fresh checkouts can benchmark the cluster layer.
@@ -16,8 +21,13 @@
 use std::time::Instant;
 
 use step::harness::cells::projection_scorer;
-use step::harness::table6::{metrics_json, run_grids, ClusterOpts};
+use step::harness::table6::{
+    attach_migration_grid, cells_fingerprint, metrics_json, run_grids, run_migration_grid,
+    ClusterOpts,
+};
 use step::harness::write_results;
+use step::sim::cluster::{GpuProfile, MigrationPolicy};
+use step::sim::profiles::{BenchId, ModelId};
 use step::sim::router::RouterKind;
 use step::sim::tracegen::GenParams;
 use step::util::json::Json;
@@ -114,7 +124,87 @@ fn main() {
          (cluster claim holds; metrics thread-invariant)"
     );
 
+    // ---- heterogeneous-pool migration grid: never / on-shed /
+    // on-pressure under STEP on a mixed fleet (one baseline GPU, three
+    // small 2.5x-slower ones) squeezed hard enough that admission must
+    // shed when it cannot relocate (per-GPU quota 1, no queue).
+    let mig_opts = ClusterOpts {
+        gpus: 4,
+        model: ModelId::Phi4_14B,
+        bench: BenchId::Hmmt2425,
+        n_requests: 24,
+        clients: 8,
+        think_s: 15.0,
+        heavy_frac: 0.5,
+        n_traces: 6,
+        mem_util: 0.5,
+        queue_cap: 0,
+        max_outstanding: 1,
+        gpu_profiles: GpuProfile::default_hetero(4),
+        seed: 7,
+        threads: 1,
+        ..ClusterOpts::default()
+    };
+    let t3 = Instant::now();
+    let migration = run_migration_grid(&mig_opts, &gp, &scorer);
+    let migration_s = t3.elapsed().as_secs_f64();
+    println!("migration grid: {migration_s:.2}s");
+    for c in &migration {
+        println!(
+            "  {:>12}: shed={:.1}%  good/s={:.4}  p99={:.1}s  migrated={} \
+             saved={} recompute_tok_k={:.1}",
+            c.label,
+            100.0 * c.shed_rate,
+            c.goodput_rps,
+            c.p99_s,
+            c.migrated,
+            c.migration_saved,
+            c.migration_recompute_tok_k,
+        );
+    }
+    // Byte-identity of the grid across engine-stepping parallelism.
+    let mig_step_opts = ClusterOpts { step_threads: threads, ..mig_opts.clone() };
+    let migration_stepped = run_migration_grid(&mig_step_opts, &gp, &scorer);
+    assert_eq!(
+        cells_fingerprint(&migration),
+        cells_fingerprint(&migration_stepped),
+        "migration grid must be byte-identical across step_threads"
+    );
+    let mig_cell = |label: &str| {
+        migration
+            .iter()
+            .find(|c| c.label == label)
+            .unwrap_or_else(|| panic!("migration row '{label}' missing"))
+    };
+    let never = mig_cell(MigrationPolicy::Never.name());
+    let on_shed = mig_cell(MigrationPolicy::OnShed.name());
+    assert_eq!(never.migrated, 0, "the never row must not migrate");
+    assert!(
+        never.shed_rate > 0.0,
+        "the harsh heterogeneous config must shed under never (shed={})",
+        never.shed
+    );
+    assert!(
+        on_shed.shed_rate < never.shed_rate,
+        "on-shed migration must shed less than never ({} vs {})",
+        on_shed.shed_rate,
+        never.shed_rate
+    );
+    assert!(on_shed.migrated > 0, "the on-shed row must actually migrate");
+    let shed_ratio = on_shed.shed_rate / never.shed_rate;
+    let goodput_ratio = on_shed.goodput_rps / never.goodput_rps.max(1e-12);
+    let p99_ratio = on_shed.p99_s / never.p99_s.max(1e-12);
+    println!(
+        "migration: on-shed sheds {:.1}% of never's rate, goodput x{goodput_ratio:.2}, \
+         p99 x{p99_ratio:.2} (work preserved instead of shed)",
+        100.0 * shed_ratio
+    );
+    if goodput_ratio < 1.0 {
+        println!("  WARNING: on-shed goodput below never at this load");
+    }
+
     let mut report = metrics_json(&opts, &m_serial, &r_serial);
+    attach_migration_grid(&mut report, &mig_opts, &migration);
     if let Json::Obj(map) = &mut report {
         map.insert("bench_serial_s".to_string(), Json::Num(serial_s));
         map.insert("bench_parallel_s".to_string(), Json::Num(parallel_s));
@@ -126,6 +216,11 @@ fn main() {
         map.insert("step_threads".to_string(), Json::Num(threads as f64));
         map.insert("step_speedup".to_string(), Json::Num(step_speedup));
         map.insert("identical_across_step_threads".to_string(), Json::Bool(true));
+        // Migration-grid gate ratios (on-shed relative to never):
+        // shed must not grow; goodput should not fall.
+        map.insert("migration_shed_ratio".to_string(), Json::Num(shed_ratio));
+        map.insert("migration_goodput_ratio".to_string(), Json::Num(goodput_ratio));
+        map.insert("migration_p99_ratio".to_string(), Json::Num(p99_ratio));
     }
     let path = write_results("BENCH_cluster", &report).expect("writing BENCH_cluster.json");
     println!("wrote {path:?}");

@@ -1,0 +1,468 @@
+//! `step bench-gate` — the CI bench-regression gate.
+//!
+//! CI regenerates three bench artifacts on every run
+//! (`BENCH_grid.json`, `BENCH_serving.json`, `BENCH_cluster.json`,
+//! written to `$STEP_RESULTS_DIR`). Until this gate existed they were
+//! write-and-upload: a perf or determinism regression only surfaced if
+//! a human opened the artifact. The gate turns them into a pass/fail
+//! signal:
+//!
+//! 1. **Schema key-set match** — each fresh artifact must have exactly
+//!    the key structure of its checked-in schema document under
+//!    `results/` (underscore-prefixed annotation keys like `_note` are
+//!    ignored; schema `null`s are value slots that match anything).
+//!    Catches silently dropped metrics and shape drift between the
+//!    bench binaries and the documented artifacts.
+//! 2. **Perf/determinism gates** — the ratios the benches exist to
+//!    defend must be present (non-null) and hold:
+//!    * grid: parallel speedup ≥ 1 and byte-identity across threads;
+//!    * serving: STEP p99 < SC p99, byte-identity across threads;
+//!    * cluster: kv-pressure p99 < round-robin p99, byte-identity
+//!      across `--threads` *and* `--step-threads`, and (when the
+//!      migration grid is present) on-shed shed-rate ≤ never.
+//!
+//! The verdict is printed as a markdown table, appended to
+//! `$GITHUB_STEP_SUMMARY` when that file is set (the job-summary
+//! surface on GitHub Actions), and any violation fails the process.
+
+use std::path::PathBuf;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// Where the gate reads fresh artifacts and checked-in schemas from.
+#[derive(Debug, Clone)]
+pub struct GateOpts {
+    /// Directory holding the freshly generated `BENCH_*.json` files
+    /// (`--results`; defaults to `$STEP_RESULTS_DIR` or `./results`).
+    pub results_dir: PathBuf,
+    /// Directory holding the checked-in schema documents (`--schemas`;
+    /// defaults to `./results`, the repo-root copies).
+    pub schemas_dir: PathBuf,
+}
+
+impl Default for GateOpts {
+    fn default() -> Self {
+        GateOpts {
+            results_dir: PathBuf::from(
+                std::env::var_os("STEP_RESULTS_DIR").unwrap_or_else(|| "results".into()),
+            ),
+            schemas_dir: PathBuf::from("results"),
+        }
+    }
+}
+
+/// One row of the gate report.
+#[derive(Debug, Clone)]
+pub struct GateRow {
+    /// Artifact the check ran against.
+    pub artifact: &'static str,
+    /// What was checked.
+    pub check: String,
+    /// The observed value (rendered).
+    pub value: String,
+    /// Did the check pass?
+    pub ok: bool,
+}
+
+impl GateRow {
+    fn new(artifact: &'static str, check: &str, value: String, ok: bool) -> GateRow {
+        GateRow { artifact, check: check.to_string(), value, ok }
+    }
+}
+
+/// The three artifacts the gate covers.
+const ARTIFACTS: [&str; 3] = ["BENCH_grid.json", "BENCH_serving.json", "BENCH_cluster.json"];
+
+/// Recursively compare the *shape* of `fresh` against `schema`:
+/// objects must carry identical key sets (annotation keys starting
+/// with `_` are ignored on both sides), arrays must match in length
+/// and element-wise, and leaves must agree on type — except a schema
+/// `null`, which is a value slot matching anything. Returns the list
+/// of mismatch descriptions (empty = shapes match).
+fn shape_mismatches(schema: &Json, fresh: &Json, path: &str, out: &mut Vec<String>) {
+    match (schema, fresh) {
+        (Json::Null, _) => {}
+        (Json::Obj(s), Json::Obj(f)) => {
+            for (k, sv) in s {
+                if k.starts_with('_') {
+                    continue;
+                }
+                match f.get(k) {
+                    Some(fv) => shape_mismatches(sv, fv, &format!("{path}/{k}"), out),
+                    None => out.push(format!("{path}/{k}: missing from fresh artifact")),
+                }
+            }
+            for k in f.keys() {
+                if !k.starts_with('_') && !s.contains_key(k) {
+                    out.push(format!("{path}/{k}: not in schema"));
+                }
+            }
+        }
+        (Json::Arr(s), Json::Arr(f)) => {
+            if s.len() != f.len() {
+                out.push(format!(
+                    "{path}: schema has {} elements, fresh has {}",
+                    s.len(),
+                    f.len()
+                ));
+                return;
+            }
+            for (i, (sv, fv)) in s.iter().zip(f).enumerate() {
+                shape_mismatches(sv, fv, &format!("{path}[{i}]"), out);
+            }
+        }
+        (Json::Num(_), Json::Num(_))
+        | (Json::Str(_), Json::Str(_))
+        | (Json::Bool(_), Json::Bool(_)) => {}
+        // A measured slot may legitimately come back null only if the
+        // schema said null — handled above; anything else is drift.
+        (s, f) => out.push(format!("{path}: schema {} vs fresh {}", kind(s), kind(f))),
+    }
+}
+
+fn kind(j: &Json) -> &'static str {
+    match j {
+        Json::Null => "null",
+        Json::Bool(_) => "bool",
+        Json::Num(_) => "number",
+        Json::Str(_) => "string",
+        Json::Arr(_) => "array",
+        Json::Obj(_) => "object",
+    }
+}
+
+/// A required numeric gate value: `None` (missing or null) fails.
+fn num_at(json: &Json, keys: &[&str]) -> Option<f64> {
+    let mut cur = json;
+    for k in keys {
+        cur = cur.get(k);
+    }
+    cur.as_f64()
+}
+
+fn bool_at(json: &Json, keys: &[&str]) -> Option<bool> {
+    let mut cur = json;
+    for k in keys {
+        cur = cur.get(k);
+    }
+    cur.as_bool()
+}
+
+/// Find the row of `grid` (an array of metric objects) whose
+/// `label_key` equals `label`, and return its `field`.
+fn row_num(json: &Json, grid: &str, label_key: &str, label: &str, field: &str) -> Option<f64> {
+    json.get(grid).as_arr().and_then(|rows| {
+        rows.iter()
+            .find(|r| r.get(label_key).as_str() == Some(label))
+            .and_then(|r| r.get(field).as_f64())
+    })
+}
+
+/// Render a gate over two comparable numbers. `ok` decides the
+/// verdict; missing values fail with a diagnostic.
+fn compare_row(
+    artifact: &'static str,
+    check: &str,
+    a: Option<f64>,
+    b: Option<f64>,
+    ok: impl Fn(f64, f64) -> bool,
+) -> GateRow {
+    match (a, b) {
+        (Some(a), Some(b)) => {
+            GateRow::new(artifact, check, format!("{a:.4} vs {b:.4}"), ok(a, b))
+        }
+        _ => GateRow::new(artifact, check, "missing/null".to_string(), false),
+    }
+}
+
+fn flag_row(artifact: &'static str, check: &str, v: Option<bool>) -> GateRow {
+    match v {
+        Some(b) => GateRow::new(artifact, check, b.to_string(), b),
+        None => GateRow::new(artifact, check, "missing/null".to_string(), false),
+    }
+}
+
+/// Evaluate every check over loaded `(schema, fresh)` pairs, in
+/// [`ARTIFACTS`] order.
+fn evaluate(pairs: &[(Json, Json)]) -> Vec<GateRow> {
+    let mut rows = Vec::new();
+    for (name, (schema, fresh)) in ARTIFACTS.into_iter().zip(pairs) {
+        let mut mismatches = Vec::new();
+        shape_mismatches(schema, fresh, "", &mut mismatches);
+        rows.push(GateRow::new(
+            name,
+            "schema key-set match",
+            if mismatches.is_empty() {
+                "ok".to_string()
+            } else {
+                mismatches.join("; ")
+            },
+            mismatches.is_empty(),
+        ));
+    }
+    let grid = &pairs[0].1;
+    rows.push(compare_row(
+        ARTIFACTS[0],
+        "parallel speedup >= 1",
+        num_at(grid, &["speedup"]),
+        Some(1.0),
+        |s, one| s >= one,
+    ));
+    rows.push(flag_row(ARTIFACTS[0], "identical across threads", bool_at(grid, &["identical"])));
+
+    let serving = &pairs[1].1;
+    rows.push(compare_row(
+        ARTIFACTS[1],
+        "STEP p99 < SC p99",
+        row_num(serving, "methods", "method", "STEP", "p99_s"),
+        row_num(serving, "methods", "method", "SC", "p99_s"),
+        |step, sc| step < sc,
+    ));
+    rows.push(flag_row(
+        ARTIFACTS[1],
+        "identical across threads",
+        bool_at(serving, &["identical_across_threads"]),
+    ));
+
+    let cluster = &pairs[2].1;
+    rows.push(compare_row(
+        ARTIFACTS[2],
+        "kv-pressure p99 < round-robin p99",
+        row_num(cluster, "routers", "label", "kv-pressure", "p99_s"),
+        row_num(cluster, "routers", "label", "round-robin", "p99_s"),
+        |kv, rr| kv < rr,
+    ));
+    rows.push(flag_row(
+        ARTIFACTS[2],
+        "identical across threads",
+        bool_at(cluster, &["identical_across_threads"]),
+    ));
+    rows.push(flag_row(
+        ARTIFACTS[2],
+        "identical across step threads",
+        bool_at(cluster, &["identical_across_step_threads"]),
+    ));
+    // The migration grid gate only applies when the artifact carries
+    // the grid (older artifacts without it skip the row entirely).
+    if cluster.get("migration").as_arr().is_some() {
+        rows.push(compare_row(
+            ARTIFACTS[2],
+            "on-shed shed-rate <= never",
+            row_num(cluster, "migration", "label", "on-shed", "shed_rate"),
+            row_num(cluster, "migration", "label", "never", "shed_rate"),
+            |on_shed, never| on_shed <= never,
+        ));
+    }
+    rows
+}
+
+/// Render the verdict as a GitHub-flavored markdown table.
+fn markdown(rows: &[GateRow]) -> String {
+    let mut md = String::from("## Bench regression gate\n\n");
+    md.push_str("| artifact | check | value | status |\n|---|---|---|---|\n");
+    for r in rows {
+        md.push_str(&format!(
+            "| {} | {} | {} | {} |\n",
+            r.artifact,
+            r.check,
+            r.value,
+            if r.ok { "✅" } else { "❌ FAIL" }
+        ));
+    }
+    md
+}
+
+/// Run the gate: load the three artifact/schema pairs, evaluate every
+/// check, publish the markdown table (stdout + `$GITHUB_STEP_SUMMARY`
+/// when set), and fail on any violation.
+pub fn run(opts: &GateOpts) -> Result<Vec<GateRow>> {
+    let mut pairs = Vec::new();
+    for name in ARTIFACTS {
+        let load = |dir: &std::path::Path, what: &str| -> Result<Json> {
+            let path = dir.join(name);
+            let text = std::fs::read_to_string(&path)
+                .with_context(|| format!("reading {what} {path:?}"))?;
+            Json::parse(&text).map_err(|e| anyhow!("parsing {what} {path:?}: {e}"))
+        };
+        let schema = load(&opts.schemas_dir, "schema")?;
+        let fresh = load(&opts.results_dir, "fresh artifact")?;
+        pairs.push((schema, fresh));
+    }
+    let rows = evaluate(&pairs);
+    let md = markdown(&rows);
+    println!("{md}");
+    if let Some(summary) = std::env::var_os("GITHUB_STEP_SUMMARY") {
+        use std::io::Write;
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&summary)
+            .with_context(|| format!("opening $GITHUB_STEP_SUMMARY {summary:?}"))?;
+        f.write_all(md.as_bytes())?;
+    }
+    let failures: Vec<&GateRow> = rows.iter().filter(|r| !r.ok).collect();
+    if !failures.is_empty() {
+        let list: Vec<String> = failures
+            .iter()
+            .map(|r| format!("{} — {} ({})", r.artifact, r.check, r.value))
+            .collect();
+        anyhow::bail!("bench regression gate failed:\n  {}", list.join("\n  "));
+    }
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grid(speedup: f64, identical: bool) -> Json {
+        Json::obj(vec![
+            ("cells", Json::Num(20.0)),
+            ("speedup", Json::Num(speedup)),
+            ("identical", Json::Bool(identical)),
+        ])
+    }
+
+    fn method_row(label_key: &str, label: &str, p99: f64) -> Json {
+        Json::obj(vec![(label_key, Json::Str(label.to_string())), ("p99_s", Json::Num(p99))])
+    }
+
+    fn serving(step_p99: f64, sc_p99: f64) -> Json {
+        Json::obj(vec![
+            (
+                "methods",
+                Json::Arr(vec![
+                    method_row("method", "SC", sc_p99),
+                    method_row("method", "STEP", step_p99),
+                ]),
+            ),
+            ("identical_across_threads", Json::Bool(true)),
+        ])
+    }
+
+    fn mig_row(label: &str, shed: f64) -> Json {
+        Json::obj(vec![
+            ("label", Json::Str(label.to_string())),
+            ("shed_rate", Json::Num(shed)),
+        ])
+    }
+
+    fn cluster(kv: f64, rr: f64, shed_never: f64, shed_on_shed: f64) -> Json {
+        Json::obj(vec![
+            (
+                "routers",
+                Json::Arr(vec![
+                    method_row("label", "round-robin", rr),
+                    method_row("label", "kv-pressure", kv),
+                ]),
+            ),
+            (
+                "migration",
+                Json::Arr(vec![
+                    mig_row("never", shed_never),
+                    mig_row("on-shed", shed_on_shed),
+                ]),
+            ),
+            ("identical_across_threads", Json::Bool(true)),
+            ("identical_across_step_threads", Json::Bool(true)),
+        ])
+    }
+
+    fn pairs(g: Json, s: Json, c: Json) -> Vec<(Json, Json)> {
+        vec![(g.clone(), g), (s.clone(), s), (c.clone(), c)]
+    }
+
+    #[test]
+    fn healthy_artifacts_pass_every_gate() {
+        let rows = evaluate(&pairs(
+            grid(3.2, true),
+            serving(100.0, 200.0),
+            cluster(50.0, 80.0, 0.4, 0.1),
+        ));
+        assert!(rows.iter().all(|r| r.ok), "{rows:?}");
+        assert!(rows.iter().any(|r| r.check.contains("on-shed")));
+    }
+
+    #[test]
+    fn violated_gates_fail() {
+        // speedup < 1; STEP worse than SC; kv-pressure worse than
+        // round-robin; on-shed sheds more than never.
+        let rows = evaluate(&pairs(
+            grid(0.8, true),
+            serving(300.0, 200.0),
+            cluster(90.0, 80.0, 0.1, 0.4),
+        ));
+        let failed: Vec<&str> = rows
+            .iter()
+            .filter(|r| !r.ok)
+            .map(|r| r.check.as_str())
+            .collect();
+        assert!(failed.iter().any(|c| c.contains("speedup")), "{failed:?}");
+        assert!(failed.iter().any(|c| c.contains("STEP p99")), "{failed:?}");
+        assert!(failed.iter().any(|c| c.contains("kv-pressure")), "{failed:?}");
+        assert!(failed.iter().any(|c| c.contains("on-shed")), "{failed:?}");
+    }
+
+    #[test]
+    fn null_gate_values_fail_loudly() {
+        let mut g = grid(2.0, true);
+        if let Json::Obj(map) = &mut g {
+            map.insert("speedup".to_string(), Json::Null);
+        }
+        // The schema documents nulls, so shape still matches — but the
+        // gate itself must refuse a null measurement.
+        let rows = evaluate(&pairs(g, serving(1.0, 2.0), cluster(1.0, 2.0, 0.2, 0.1)));
+        let speedup = rows.iter().find(|r| r.check.contains("speedup")).unwrap();
+        assert!(!speedup.ok);
+        assert_eq!(speedup.value, "missing/null");
+    }
+
+    #[test]
+    fn shape_mismatch_reports_added_and_missing_keys() {
+        let schema = Json::obj(vec![
+            ("_note", Json::Str("ignored".into())),
+            ("kept", Json::Null),
+            ("dropped", Json::Num(1.0)),
+            ("rows", Json::Arr(vec![Json::obj(vec![("a", Json::Null)])])),
+        ]);
+        let fresh = Json::obj(vec![
+            ("kept", Json::Num(4.0)),
+            ("added", Json::Num(2.0)),
+            ("rows", Json::Arr(vec![Json::obj(vec![("b", Json::Num(0.0))])])),
+        ]);
+        let mut out = Vec::new();
+        shape_mismatches(&schema, &fresh, "", &mut out);
+        let text = out.join("\n");
+        assert!(text.contains("/dropped: missing"), "{text}");
+        assert!(text.contains("/added: not in schema"), "{text}");
+        assert!(text.contains("/rows[0]/a: missing"), "{text}");
+        assert!(text.contains("/rows[0]/b: not in schema"), "{text}");
+        assert!(!text.contains("_note"), "annotation keys are ignored: {text}");
+        // Schema nulls accept any fresh value.
+        assert!(!text.contains("/kept"), "{text}");
+    }
+
+    #[test]
+    fn array_length_drift_is_shape_drift() {
+        let schema = Json::Arr(vec![Json::Null, Json::Null]);
+        let fresh = Json::Arr(vec![Json::Num(1.0)]);
+        let mut out = Vec::new();
+        shape_mismatches(&schema, &fresh, "rows", &mut out);
+        assert_eq!(out.len(), 1);
+        assert!(out[0].contains("2 elements"), "{out:?}");
+    }
+
+    #[test]
+    fn markdown_table_renders_status() {
+        let rows = vec![
+            GateRow::new("BENCH_grid.json", "x", "ok".into(), true),
+            GateRow::new("BENCH_grid.json", "y", "bad".into(), false),
+        ];
+        let md = markdown(&rows);
+        assert!(md.contains("| artifact | check | value | status |"));
+        assert!(md.contains("✅"));
+        assert!(md.contains("❌ FAIL"));
+    }
+}

@@ -7,6 +7,7 @@
 //! binaries and the CLI write into `results/*.json`.
 
 pub mod ablations;
+pub mod bench_gate;
 pub mod cells;
 pub mod fig1_fig4;
 pub mod fig2;

@@ -28,7 +28,8 @@ use super::cells::projection_scorer;
 use crate::coordinator::method::Method;
 use crate::coordinator::scorer::StepScorer;
 use crate::sim::cluster::{
-    AdmissionConfig, ClusterConfig, ClusterResult, ClusterSim, ClusterWorkload,
+    AdmissionConfig, ClusterConfig, ClusterResult, ClusterSim, ClusterWorkload, GpuProfile,
+    MigrationPolicy,
 };
 use crate::sim::profiles::{BenchId, ModelId};
 use crate::sim::router::RouterKind;
@@ -40,6 +41,13 @@ use crate::util::pool;
 /// The methods the cluster cell compares (DeepConf is unsupported by
 /// the serving engines; see `sim::serve`).
 pub const METHODS: [Method; 4] = [Method::Cot, Method::Sc, Method::SlimSc, Method::Step];
+
+/// The policies the migration grid compares, baseline first.
+pub const MIGRATIONS: [MigrationPolicy; 3] = [
+    MigrationPolicy::Never,
+    MigrationPolicy::OnShed,
+    MigrationPolicy::OnPressure { ratio: MigrationPolicy::DEFAULT_PRESSURE_RATIO },
+];
 
 /// Options of one cluster-serving run (`step cluster-sim`).
 #[derive(Debug, Clone)]
@@ -77,6 +85,11 @@ pub struct ClusterOpts {
     pub max_outstanding: usize,
     /// SLO budget for admission's early reject (`None` = off).
     pub slo_s: Option<f64>,
+    /// Per-GPU capacity/speed profiles (`--gpu-profile`, repeatable;
+    /// cycled over the GPUs). Empty = a uniform pool.
+    pub gpu_profiles: Vec<GpuProfile>,
+    /// Cross-GPU migration policy (`--migrate`).
+    pub migrate: MigrationPolicy,
     /// Master seed.
     pub seed: u64,
     /// Worker threads sharding the cells (0 = all cores). Metric
@@ -109,6 +122,8 @@ impl Default for ClusterOpts {
             queue_cap: 64,
             max_outstanding: 8,
             slo_s: None,
+            gpu_profiles: Vec::new(),
+            migrate: MigrationPolicy::Never,
             seed: 0,
             threads: 0,
             step_threads: 1,
@@ -169,8 +184,22 @@ impl ClusterOpts {
             max_outstanding_per_gpu: self.max_outstanding.max(1),
             slo_s: self.slo_s,
         };
+        c.gpu_profiles = self.gpu_profiles.clone();
+        c.migration = self.migrate;
         c.step_threads = self.step_threads;
         c
+    }
+
+    /// The heterogeneous option set the migration grid runs at: the
+    /// caller's options with [`GpuProfile::default_hetero`] substituted
+    /// when no profiles were given (a uniform pool has nothing
+    /// interesting to migrate between).
+    pub fn migration_opts(&self) -> ClusterOpts {
+        let mut o = self.clone();
+        if o.gpu_profiles.is_empty() {
+            o.gpu_profiles = GpuProfile::default_hetero(o.gpus);
+        }
+        o
     }
 }
 
@@ -202,6 +231,12 @@ pub struct ClusterCell {
     pub pruned: u64,
     /// Requests shed by admission.
     pub shed: u64,
+    /// Requests relocated across GPUs by the migration policy.
+    pub migrated: u64,
+    /// Migrations that rescued a request from a last-survivor prune.
+    pub migration_saved: u64,
+    /// Prefix tokens recomputed to resume migrated traces, thousands.
+    pub migration_recompute_tok_k: f64,
     /// Peak admission-queue depth.
     pub queue_peak: u64,
     /// Largest share of completions a single GPU took (placement
@@ -236,6 +271,9 @@ impl ClusterCell {
             preemptions: r.engine_counters.preemptions,
             pruned: r.engine_counters.pruned,
             shed: r.counters.shed,
+            migrated: r.counters.migrated,
+            migration_saved: r.counters.migration_saved,
+            migration_recompute_tok_k: r.counters.migration_recompute_tokens as f64 / 1000.0,
             queue_peak: r.counters.queue_peak,
             max_gpu_share: max_share,
             peak_block_frac: r
@@ -261,6 +299,9 @@ impl ClusterCell {
             ("preemptions", Json::Num(self.preemptions as f64)),
             ("pruned", Json::Num(self.pruned as f64)),
             ("shed", Json::Num(self.shed as f64)),
+            ("migrated", Json::Num(self.migrated as f64)),
+            ("migration_saved", Json::Num(self.migration_saved as f64)),
+            ("migration_recompute_tok_k", Json::Num(self.migration_recompute_tok_k)),
             ("queue_peak", Json::Num(self.queue_peak as f64)),
             ("max_gpu_share", Json::Num(self.max_gpu_share)),
             ("peak_block_frac", Json::Num(self.peak_block_frac)),
@@ -317,14 +358,34 @@ pub fn run_grids(
     (cells, routers)
 }
 
-/// Assemble the `BENCH_cluster.json` payload: the workload config plus
-/// the two metric-block grids. Pure function of the cells and options —
-/// no timestamps, no thread counts — so reruns compare byte-for-byte.
-pub fn metrics_json(
+/// Run the migration grid: STEP under the configured router on the
+/// (heterogeneous) pool described by `opts`, one row per
+/// [`MigrationPolicy`] in [`MIGRATIONS`] — `never` is the baseline the
+/// work-preservation claim is measured against. Callers normally pass
+/// [`ClusterOpts::migration_opts`] so a profile-less option set gets
+/// the default heterogeneous fleet. Cells shard across `opts.threads`
+/// like the other grids; output is bit-identical for any thread count.
+pub fn run_migration_grid(
     opts: &ClusterOpts,
-    methods: &[ClusterCell],
-    routers: &[ClusterCell],
-) -> Json {
+    gen_params: &GenParams,
+    scorer: &StepScorer,
+) -> Vec<ClusterCell> {
+    let run_one = |policy: &MigrationPolicy| {
+        let mut o = opts.clone();
+        o.migrate = *policy;
+        run_cell(Method::Step, o.router, policy.name(), gen_params, scorer, &o)
+    };
+    let threads = pool::resolve_threads(opts.threads).min(MIGRATIONS.len());
+    if threads <= 1 {
+        MIGRATIONS.iter().map(run_one).collect()
+    } else {
+        pool::parallel_map(threads, MIGRATIONS.len(), |i| run_one(&MIGRATIONS[i]))
+    }
+}
+
+/// The option set serialized as the `config` block shared by
+/// `BENCH_cluster.json`'s main payload and its `migration_config`.
+pub fn config_json(opts: &ClusterOpts) -> Json {
     let opt_num = |v: Option<f64>| match v {
         Some(x) => Json::Num(x),
         None => Json::Null,
@@ -333,45 +394,90 @@ pub fn metrics_json(
         Some(b) => Json::Num(b as f64),
         None => Json::Null,
     };
+    let profiles = if opts.gpu_profiles.is_empty() {
+        Json::Null
+    } else {
+        Json::Arr(
+            opts.gpu_profiles
+                .iter()
+                .map(|p| Json::Str(p.spec()))
+                .collect(),
+        )
+    };
     Json::obj(vec![
-        (
-            "config",
-            Json::obj(vec![
-                ("gpus", Json::Num(opts.gpus as f64)),
-                ("model", Json::Str(format!("{:?}", opts.model))),
-                ("bench", Json::Str(opts.bench.name().to_string())),
-                ("n_requests", Json::Num(opts.n_requests as f64)),
-                ("clients", Json::Num(opts.clients as f64)),
-                ("think_s", Json::Num(opts.think_s)),
-                ("heavy_frac", Json::Num(opts.heavy_frac)),
-                ("rate_rps", Json::Num(opts.rate_rps)),
-                ("burst", burst),
-                ("n_traces", Json::Num(opts.n_traces as f64)),
-                ("mem_util", Json::Num(opts.mem_util)),
-                ("quota_frac", opt_num(opts.quota_frac)),
-                ("router", Json::Str(opts.router.name().to_string())),
-                ("queue_cap", Json::Num(opts.queue_cap as f64)),
-                ("max_outstanding", Json::Num(opts.max_outstanding as f64)),
-                ("slo_s", opt_num(opts.slo_s)),
-                ("seed", Json::Num(opts.seed as f64)),
-            ]),
-        ),
+        ("gpus", Json::Num(opts.gpus as f64)),
+        ("model", Json::Str(format!("{:?}", opts.model))),
+        ("bench", Json::Str(opts.bench.name().to_string())),
+        ("n_requests", Json::Num(opts.n_requests as f64)),
+        ("clients", Json::Num(opts.clients as f64)),
+        ("think_s", Json::Num(opts.think_s)),
+        ("heavy_frac", Json::Num(opts.heavy_frac)),
+        ("rate_rps", Json::Num(opts.rate_rps)),
+        ("burst", burst),
+        ("n_traces", Json::Num(opts.n_traces as f64)),
+        ("mem_util", Json::Num(opts.mem_util)),
+        ("quota_frac", opt_num(opts.quota_frac)),
+        ("router", Json::Str(opts.router.name().to_string())),
+        ("queue_cap", Json::Num(opts.queue_cap as f64)),
+        ("max_outstanding", Json::Num(opts.max_outstanding as f64)),
+        ("slo_s", opt_num(opts.slo_s)),
+        ("gpu_profiles", profiles),
+        ("migrate", Json::Str(opts.migrate.spec())),
+        ("seed", Json::Num(opts.seed as f64)),
+    ])
+}
+
+/// Assemble the `BENCH_cluster.json` payload: the workload config plus
+/// the two metric-block grids. Pure function of the cells and options —
+/// no timestamps, no thread counts — so reruns compare byte-for-byte.
+pub fn metrics_json(
+    opts: &ClusterOpts,
+    methods: &[ClusterCell],
+    routers: &[ClusterCell],
+) -> Json {
+    Json::obj(vec![
+        ("config", config_json(opts)),
         ("methods", Json::Arr(methods.iter().map(|c| c.to_json()).collect())),
         ("routers", Json::Arr(routers.iter().map(|c| c.to_json()).collect())),
     ])
 }
 
+/// Canonical byte-comparison rendering of a cell grid: the pretty JSON
+/// of every cell, newline-joined. The thread-/step-thread-invariance
+/// gates (bench and test suite) compare these strings, so both sides
+/// share one definition.
+pub fn cells_fingerprint(cells: &[ClusterCell]) -> String {
+    cells
+        .iter()
+        .map(|c| c.to_json().to_string_pretty())
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+/// Splice the migration grid (rows + the heterogeneous option set that
+/// produced them) into an assembled `BENCH_cluster.json` payload.
+pub fn attach_migration_grid(json: &mut Json, mig_opts: &ClusterOpts, cells: &[ClusterCell]) {
+    if let Json::Obj(map) = json {
+        map.insert(
+            "migration".to_string(),
+            Json::Arr(cells.iter().map(|c| c.to_json()).collect()),
+        );
+        map.insert("migration_config".to_string(), config_json(mig_opts));
+    }
+}
+
 fn print_grid(title: &str, cells: &[ClusterCell]) {
     println!("{title}");
     println!(
-        "{:>18} | {:>7} | {:>6} | {:>8} {:>8} {:>8} | {:>8} | {:>6} | {:>8} {:>7} | {:>5}",
+        "{:>18} | {:>7} | {:>6} | {:>8} {:>8} {:>8} | {:>8} | {:>6} | {:>8} {:>7} {:>5} | \
+         {:>5}",
         "row", "good/s", "shed%", "p50(s)", "p95(s)", "p99(s)", "ttfv50", "acc%", "preempt",
-        "pruned", "bal"
+        "pruned", "migr", "bal"
     );
     for c in cells {
         println!(
             "{:>18} | {:>7.4} | {:>6.1} | {:>8.1} {:>8.1} {:>8.1} | {:>8.1} | {:>6.1} | \
-             {:>8} {:>7} | {:>5.2}",
+             {:>8} {:>7} {:>5} | {:>5.2}",
             c.label,
             c.goodput_rps,
             100.0 * c.shed_rate,
@@ -382,6 +488,7 @@ fn print_grid(title: &str, cells: &[ClusterCell]) {
             c.acc,
             c.preemptions,
             c.pruned,
+            c.migrated,
             c.max_gpu_share,
         );
     }
@@ -428,6 +535,20 @@ pub fn run(opts: &ClusterOpts) -> Result<(Vec<ClusterCell>, Vec<ClusterCell>)> {
     );
     print_grid("-- routers (STEP)", &routers);
 
+    // The migration grid runs on the heterogeneous pool (the user's
+    // profiles, or the default mixed fleet): never / on-shed /
+    // on-pressure under STEP.
+    let mig_opts = opts.migration_opts();
+    let migration = run_migration_grid(&mig_opts, &gen_params, &scorer);
+    let profiles = &mig_opts.gpu_profiles;
+    let profile_desc: Vec<String> = (0..mig_opts.gpus)
+        .map(|g| profiles[g % profiles.len()].spec())
+        .collect();
+    print_grid(
+        &format!("-- migration (STEP, hetero pool [{}])", profile_desc.join(", ")),
+        &migration,
+    );
+
     let p99 = |cells: &[ClusterCell], label: &str| {
         cells.iter().find(|c| c.label == label).map(|c| c.p99_s)
     };
@@ -444,7 +565,26 @@ pub fn run(opts: &ClusterOpts) -> Result<(Vec<ClusterCell>, Vec<ClusterCell>)> {
             }
         );
     }
-    let json = metrics_json(opts, &methods, &routers);
+    let shed_of = |cells: &[ClusterCell], label: &str| {
+        cells.iter().find(|c| c.label == label).map(|c| c.shed_rate)
+    };
+    if let (Some(never), Some(on_shed)) = (
+        shed_of(&migration, MigrationPolicy::Never.name()),
+        shed_of(&migration, MigrationPolicy::OnShed.name()),
+    ) {
+        println!(
+            "  shed-rate on-shed {:.1}% vs never {:.1}% — {}",
+            100.0 * on_shed,
+            100.0 * never,
+            if on_shed <= never {
+                "migration preserves work instead of shedding it"
+            } else {
+                "WARNING: on-shed migration shed more at this load"
+            }
+        );
+    }
+    let mut json = metrics_json(opts, &methods, &routers);
+    attach_migration_grid(&mut json, &mig_opts, &migration);
     // Harness-convention artifact plus the canonical BENCH_cluster.json
     // metric blocks (also written by the cluster_load bench at its own
     // quick config — last writer wins; the embedded config block
@@ -506,6 +646,30 @@ mod tests {
             metrics_json(&opts, &m1, &r1).to_string_pretty(),
             metrics_json(&opts, &m2, &r2).to_string_pretty()
         );
+    }
+
+    #[test]
+    fn migration_grid_covers_every_policy_in_order() {
+        let gp = GenParams::default_d64();
+        let sc = projection_scorer(&gp);
+        let opts = tiny().migration_opts();
+        assert!(!opts.gpu_profiles.is_empty(), "migration grid runs heterogeneous");
+        let cells = run_migration_grid(&opts, &gp, &sc);
+        assert_eq!(cells.len(), MIGRATIONS.len());
+        for (c, p) in cells.iter().zip(&MIGRATIONS) {
+            assert_eq!(c.label, p.name());
+            assert!(c.goodput_rps > 0.0, "{}", p.name());
+        }
+        // The baseline row never migrates by definition.
+        assert_eq!(cells[0].migrated, 0);
+        // Attached to the payload, the grid and its config are present.
+        let (m, r) = run_grids(&tiny(), &gp, &sc);
+        let mut json = metrics_json(&tiny(), &m, &r);
+        attach_migration_grid(&mut json, &opts, &cells);
+        let text = json.to_string_pretty();
+        assert!(text.contains("\"migration\""));
+        assert!(text.contains("\"migration_config\""));
+        assert!(text.contains("\"gpu_profiles\""));
     }
 
     #[test]

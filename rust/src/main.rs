@@ -5,7 +5,9 @@
 //! (no clap in the offline vendor set).
 
 use anyhow::{bail, Result};
+use step::harness::bench_gate::GateOpts;
 use step::harness::{self, table5::ServingOpts, table6::ClusterOpts, HarnessOpts};
+use step::sim::cluster::{GpuProfile, MigrationPolicy};
 use step::sim::profiles::{BenchId, ModelId};
 use step::sim::router::RouterKind;
 
@@ -31,10 +33,16 @@ COMMANDS (experiments; see DESIGN.md §6):
                 shared KV pool; reports throughput, p50/p95/p99 latency,
                 time-to-first-vote, accuracy per method
     cluster-sim Multi-GPU cluster serving (beyond the paper): R per-GPU
-                engines behind a router (round-robin / least-outstanding
-                / kv-pressure) with admission control and closed-loop
-                workloads; reports goodput, shed rate, cluster-wide
-                p50/p95/p99 per method and per router
+                engines — uniform or heterogeneous (--gpu-profile) —
+                behind a router (round-robin / least-outstanding /
+                kv-pressure) with admission control, closed-loop
+                workloads, and cross-GPU trace migration (--migrate);
+                reports goodput, shed rate, cluster-wide p50/p95/p99
+                per method, per router, and per migration policy
+    bench-gate  Compare fresh BENCH_{grid,serving,cluster}.json against
+                the checked-in results/ schemas (key-set match + the
+                non-null perf gates) and fail on regression; writes a
+                markdown table to $GITHUB_STEP_SUMMARY when set
     all         Everything above at full scale (except serve-sim and
                 cluster-sim)
 
@@ -75,6 +83,22 @@ CLUSTER-SIM OPTIONS (plus the serve-sim options above):
     --step-threads N     advance the per-GPU engines in parallel between
                          arrivals (0 = all cores; default 1 = serial).
                          Metric output is bit-identical for any value
+    --gpu-profile U:B:S  heterogeneous pools: one GPU's mem-util, block
+                         size, and timing scale (e.g. 0.9:16:1.0 =
+                         baseline, 0.45:16:2.5 = small 2.5x-slower).
+                         Repeatable; fewer entries than --gpus cycle.
+                         Default: a uniform pool (the migration grid
+                         substitutes a default mixed fleet)
+    --migrate P          cross-GPU trace migration policy: never |
+                         on-shed | on-pressure[:RATIO] (default never).
+                         on-shed relocates work instead of shedding;
+                         on-pressure also rebalances with hysteresis
+                         and rescues last-survivor prunes
+
+BENCH-GATE OPTIONS:
+    --results DIR    fresh bench artifacts to check (default:
+                     $STEP_RESULTS_DIR or ./results)
+    --schemas DIR    checked-in schema documents (default ./results)
 
 Artifacts are read from $STEP_ARTIFACTS_DIR (default ./artifacts); run
 `make artifacts` first. Results are written to $STEP_RESULTS_DIR
@@ -218,6 +242,27 @@ fn parse_cluster_opts(args: &[String]) -> Result<ClusterOpts> {
                 opts.step_threads = need_val(args, i)?.parse()?;
                 i += 2;
             }
+            "--gpu-profile" => {
+                let spec = need_val(args, i)?;
+                let p = GpuProfile::parse(spec).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "bad gpu profile '{spec}' (want MEM_UTIL:BLOCK_SIZE:TIMING_SCALE, \
+                         e.g. 0.9:16:1.0)"
+                    )
+                })?;
+                opts.gpu_profiles.push(p);
+                i += 2;
+            }
+            "--migrate" => {
+                let name = need_val(args, i)?;
+                opts.migrate = MigrationPolicy::parse(name).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "unknown migration policy '{name}' (never | on-shed | \
+                         on-pressure[:RATIO])"
+                    )
+                })?;
+                i += 2;
+            }
             "--requests" => {
                 opts.n_requests = need_val(args, i)?.parse()?;
                 i += 2;
@@ -268,6 +313,25 @@ fn parse_cluster_opts(args: &[String]) -> Result<ClusterOpts> {
     Ok(opts)
 }
 
+fn parse_gate_opts(args: &[String]) -> Result<GateOpts> {
+    let mut opts = GateOpts::default();
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--results" => {
+                opts.results_dir = need_val(args, i)?.into();
+                i += 2;
+            }
+            "--schemas" => {
+                opts.schemas_dir = need_val(args, i)?.into();
+                i += 2;
+            }
+            other => bail!("unknown bench-gate option '{other}'\n\n{USAGE}"),
+        }
+    }
+    Ok(opts)
+}
+
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = args.first() else {
@@ -282,6 +346,11 @@ fn main() -> Result<()> {
     if cmd == "cluster-sim" {
         let copts = parse_cluster_opts(&args[1..])?;
         harness::table6::run(&copts)?;
+        return Ok(());
+    }
+    if cmd == "bench-gate" {
+        let gopts = parse_gate_opts(&args[1..])?;
+        harness::bench_gate::run(&gopts)?;
         return Ok(());
     }
     let opts = parse_opts(&args[1..])?;

@@ -149,6 +149,15 @@ pub struct ClusterCounters {
     pub completed: u64,
     /// Peak depth of the cluster-wide admission queue.
     pub queue_peak: u64,
+    /// Requests relocated to another GPU by the migration policy
+    /// (shed rescues, pressure rebalances, and last-survivor rescues).
+    pub migrated: u64,
+    /// Prefix tokens (prompt + generated) the targets recompute to
+    /// resume migrated traces — the work-preservation bill.
+    pub migration_recompute_tokens: u64,
+    /// Migrations that rescued a request from losing work outright: a
+    /// memory event about to prune its last surviving trace.
+    pub migration_saved: u64,
 }
 
 impl ClusterCounters {
@@ -174,8 +183,16 @@ impl ClusterCounters {
     /// One-line `key=value` report of every counter.
     pub fn report(&self) -> String {
         format!(
-            "offered={} placed={} shed={} completed={} queue_peak={}",
-            self.offered, self.placed, self.shed, self.completed, self.queue_peak,
+            "offered={} placed={} shed={} completed={} queue_peak={} \
+             migrated={} migration_recompute_tok={} migration_saved={}",
+            self.offered,
+            self.placed,
+            self.shed,
+            self.completed,
+            self.queue_peak,
+            self.migrated,
+            self.migration_recompute_tokens,
+            self.migration_saved,
         )
     }
 }
@@ -270,11 +287,23 @@ mod tests {
 
     #[test]
     fn cluster_counters_rates() {
-        let c = ClusterCounters { offered: 10, placed: 8, shed: 2, completed: 8, queue_peak: 3 };
+        let c = ClusterCounters {
+            offered: 10,
+            placed: 8,
+            shed: 2,
+            completed: 8,
+            queue_peak: 3,
+            migrated: 4,
+            migration_recompute_tokens: 1200,
+            migration_saved: 1,
+        };
         assert!((c.shed_rate() - 0.2).abs() < 1e-12);
         assert!((c.goodput_rps(4.0) - 2.0).abs() < 1e-12);
         assert_eq!(ClusterCounters::default().shed_rate(), 0.0);
         assert_eq!(c.goodput_rps(0.0), 0.0);
         assert!(c.report().contains("shed=2"));
+        assert!(c.report().contains("migrated=4"));
+        assert!(c.report().contains("migration_recompute_tok=1200"));
+        assert!(c.report().contains("migration_saved=1"));
     }
 }

@@ -1,10 +1,11 @@
-//! Multi-GPU cluster serving simulator: R per-GPU engines, a routing
-//! layer, and admission control under one global clock.
+//! Multi-GPU cluster serving simulator: R per-GPU engines (uniform or
+//! heterogeneous), a routing layer, admission control, and
+//! work-preserving cross-GPU trace migration under one global clock.
 //!
 //! The serving layer ([`crate::sim::serve`]) models one GPU; this
 //! module scales it out. A [`ClusterSim`] drives `R` independent
 //! [`ServeEngine`]s — each with its own [`crate::kvcache::SharedKvPool`]
-//! — and a cluster front door:
+//! sized and clocked by its [`GpuProfile`] — and a cluster front door:
 //!
 //! ```text
 //!  arrivals ──▶ admission ──▶ router ──▶ engine[g].submit(...)
@@ -12,7 +13,29 @@
 //!   closed       queue, SLO    least-outstanding /
 //!   loop)        early-       kv-pressure)
 //!                reject)
+//!    ▲              │ would shed?
+//!    │              ▼
+//!    │        MIGRATION (policy-gated): relocate one request's
+//!    │        surviving traces hottest → coolest GPU; the freed
+//!    └─◀──    quota slot absorbs the queue head / the arrival
 //! ```
+//!
+//! **Heterogeneous pools.** [`ClusterConfig::gpu_profiles`] gives each
+//! GPU its own memory utilization, block size, and per-token timing
+//! scale; the kv-pressure router normalizes projected demand by each
+//! GPU's free blocks *and* its timing scale, so a slow-but-empty GPU
+//! is not preferred over a fast-but-busy one. An empty profile list is
+//! the uniform pool, bit-identical to the profile-free cluster.
+//!
+//! **Cross-GPU migration.** Under a [`MigrationPolicy`] other than
+//! `Never`, shedding stops being the only relief valve: a request's
+//! surviving traces can relocate to the least-pressured engine —
+//! terminal traces keep their votes, survivors re-enter through the
+//! target's wait queue and pay the standard recompute-on-resume bill
+//! (counted in [`ClusterCounters::migration_recompute_tokens`]). The
+//! on-pressure policy additionally rebalances proactively (with
+//! hysteresis) and rescues requests whose *last* surviving trace a
+//! memory event would prune.
 //!
 //! **Event order.** Arrivals (open-loop pregenerated, or closed-loop
 //! completion-driven) live in one global min-heap keyed by
@@ -59,10 +82,149 @@ use crate::metrics::{ClusterCounters, EngineCounters, LatencySketch};
 use crate::sim::des::ScoreAgg;
 use crate::sim::profiles::{BenchId, ModelId};
 use crate::sim::router::{GpuView, RouteRequest, RouterKind, RouterPolicy};
-use crate::sim::serve::{RequestOutcome, ServeEngine, ServeSimConfig};
+use crate::sim::serve::{MigratedRequest, RequestOutcome, ServeEngine, ServeSimConfig};
 use crate::sim::tracegen::TraceGen;
 use crate::sim::workload::{Arrival, ClosedLoopClients, ClosedLoopSpec, WorkloadSpec};
 use crate::util::pool;
+
+/// Capacity/speed profile of one GPU in a heterogeneous pool.
+///
+/// The uniform cluster clones one engine configuration R times; with
+/// profiles, each engine derives its KV pool size, block size, and
+/// timing from its own entry, so mixed fleets (one big fast GPU next to
+/// small slow ones) are first-class. A profile of
+/// `{mem_util, block_size, timing_scale: 1.0}` matching the cluster
+/// defaults is bit-identical to the profile-free path.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GpuProfile {
+    /// vLLM-style gpu_memory_utilization of this GPU's pool.
+    pub mem_util: f64,
+    /// PagedAttention block size of this GPU's pool, in tokens.
+    pub block_size: usize,
+    /// Per-token timing multiplier vs the calibrated baseline GPU
+    /// (1.0 = baseline, 3.0 = three times slower).
+    pub timing_scale: f64,
+}
+
+impl GpuProfile {
+    /// Parse the CLI spelling `MEM_UTIL:BLOCK_SIZE:TIMING_SCALE`
+    /// (e.g. `0.9:16:1.0`).
+    pub fn parse(s: &str) -> Option<GpuProfile> {
+        let mut it = s.split(':');
+        let mem_util: f64 = it.next()?.trim().parse().ok()?;
+        let block_size: usize = it.next()?.trim().parse().ok()?;
+        let timing_scale: f64 = it.next()?.trim().parse().ok()?;
+        let util_ok = mem_util > 0.0 && mem_util <= 1.0;
+        if it.next().is_some()
+            || !util_ok
+            || block_size == 0
+            || !timing_scale.is_finite()
+            || timing_scale <= 0.0
+        {
+            return None;
+        }
+        Some(GpuProfile { mem_util, block_size, timing_scale })
+    }
+
+    /// The CLI spelling of this profile (round-trips through
+    /// [`parse`](Self::parse)).
+    pub fn spec(&self) -> String {
+        format!("{}:{}:{}", self.mem_util, self.block_size, self.timing_scale)
+    }
+
+    /// A default heterogeneous fleet for demonstrations and the
+    /// migration grid: GPU 0 is the calibrated baseline at 0.9
+    /// utilization; every other GPU is small (0.45 utilization) and
+    /// 2.5× slower. Cycled over `gpus` entries.
+    pub fn default_hetero(gpus: usize) -> Vec<GpuProfile> {
+        (0..gpus.max(1))
+            .map(|g| {
+                if g == 0 {
+                    GpuProfile { mem_util: 0.9, block_size: 16, timing_scale: 1.0 }
+                } else {
+                    GpuProfile { mem_util: 0.45, block_size: 16, timing_scale: 2.5 }
+                }
+            })
+            .collect()
+    }
+}
+
+/// When the cluster may relocate a request's surviving traces to
+/// another GPU instead of losing work.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum MigrationPolicy {
+    /// Never migrate — admission sheds and memory events prune exactly
+    /// as before (byte-identical to the migration-free cluster).
+    Never,
+    /// Migrate only when admission is about to shed an arrival: one
+    /// request moves off the highest-pressure *at-quota* GPU (so an
+    /// admission slot actually opens) onto the lowest-pressure other
+    /// GPU — over quota if need be, since it was already admitted
+    /// once. The freed slot absorbs the queue head or the arrival
+    /// itself, so the shed becomes a deferral instead of lost work.
+    OnShed,
+    /// Everything [`OnShed`](MigrationPolicy::OnShed) does, plus (a)
+    /// proactive rebalancing with hysteresis — before each admission
+    /// decision, if the highest projected pressure exceeds `ratio` ×
+    /// the lowest, one request moves (quota-respecting) — and (b)
+    /// last-survivor rescue: a memory event that would prune the final
+    /// surviving trace of a request evicts the whole request for
+    /// relocation instead ([`crate::sim::serve::ServeSimConfig::migrate_rescue`]).
+    OnPressure {
+        /// Hysteresis threshold: migrate only while max pressure >
+        /// `ratio` × min pressure (ratio > 1 keeps near-balanced pools
+        /// still).
+        ratio: f64,
+    },
+}
+
+impl MigrationPolicy {
+    /// Default hysteresis of the on-pressure policy.
+    pub const DEFAULT_PRESSURE_RATIO: f64 = 2.0;
+
+    /// Parse the CLI spelling: `never`, `on-shed`, `on-pressure`, or
+    /// `on-pressure:RATIO`.
+    pub fn parse(s: &str) -> Option<MigrationPolicy> {
+        let s = s.trim().to_ascii_lowercase();
+        match s.as_str() {
+            "never" | "off" => Some(MigrationPolicy::Never),
+            "on-shed" | "onshed" | "shed" => Some(MigrationPolicy::OnShed),
+            "on-pressure" | "onpressure" | "pressure" => Some(MigrationPolicy::OnPressure {
+                ratio: MigrationPolicy::DEFAULT_PRESSURE_RATIO,
+            }),
+            _ => {
+                let ratio: f64 = s.strip_prefix("on-pressure:")?.parse().ok()?;
+                if ratio.is_finite() && ratio >= 1.0 {
+                    Some(MigrationPolicy::OnPressure { ratio })
+                } else {
+                    None
+                }
+            }
+        }
+    }
+
+    /// Display/row-label name (the CLI spelling without the ratio).
+    pub fn name(&self) -> &'static str {
+        match self {
+            MigrationPolicy::Never => "never",
+            MigrationPolicy::OnShed => "on-shed",
+            MigrationPolicy::OnPressure { .. } => "on-pressure",
+        }
+    }
+
+    /// The full CLI spelling (round-trips through [`parse`](Self::parse)).
+    pub fn spec(&self) -> String {
+        match self {
+            MigrationPolicy::OnPressure { ratio } => format!("on-pressure:{ratio}"),
+            other => other.name().to_string(),
+        }
+    }
+
+    /// Does this policy fire at admission-shed points?
+    fn on_shed(&self) -> bool {
+        !matches!(self, MigrationPolicy::Never)
+    }
+}
 
 /// The arrival regime driving a cluster run.
 #[derive(Debug, Clone)]
@@ -120,9 +282,13 @@ pub struct ClusterConfig {
     pub n_traces: usize,
     /// Method hyper-parameters (paper Appendix B.3).
     pub params: MethodParams,
-    /// vLLM-style gpu_memory_utilization of each GPU's pool.
+    /// vLLM-style gpu_memory_utilization of each GPU's pool (the
+    /// uniform default; per-GPU [`gpu_profiles`](Self::gpu_profiles)
+    /// override it).
     pub mem_util: f64,
-    /// PagedAttention block size in tokens.
+    /// PagedAttention block size in tokens (uniform default; per-GPU
+    /// profiles override it). Also the reference unit for the
+    /// admission layer's expected-footprint accounting.
     pub block_size: usize,
     /// Master seed; every stream derives from it.
     pub seed: u64,
@@ -136,6 +302,14 @@ pub struct ClusterConfig {
     pub router: RouterKind,
     /// Admission-control policy.
     pub admission: AdmissionConfig,
+    /// Per-GPU capacity/speed profiles. Empty (default) = a uniform
+    /// pool of [`mem_util`](Self::mem_util) /
+    /// [`block_size`](Self::block_size) baseline GPUs — bit-identical
+    /// to the pre-profile cluster. Fewer entries than GPUs cycle.
+    pub gpu_profiles: Vec<GpuProfile>,
+    /// Cross-GPU trace-migration policy ([`MigrationPolicy::Never`] by
+    /// default — byte-identical to the migration-free cluster).
+    pub migration: MigrationPolicy,
     /// Worker threads advancing the per-GPU engines *in parallel*
     /// between interaction points (0 = all cores, 1 = serial). The
     /// engines share no state between arrivals and completions are
@@ -172,14 +346,33 @@ impl ClusterConfig {
             workload,
             router: RouterKind::KvPressure,
             admission: AdmissionConfig::default(),
+            gpu_profiles: Vec::new(),
+            migration: MigrationPolicy::Never,
             step_threads: 1,
         }
     }
 
-    /// The per-GPU engine configuration this cluster instantiates R
-    /// times (the engine ignores the workload field — the cluster
-    /// submits arrivals itself).
-    fn engine_config(&self) -> ServeSimConfig {
+    /// The capacity/speed profile of GPU `g`: its
+    /// [`gpu_profiles`](Self::gpu_profiles) entry (cycled), or the
+    /// uniform baseline built from [`mem_util`](Self::mem_util) /
+    /// [`block_size`](Self::block_size) when none are configured.
+    pub fn profile_for(&self, g: usize) -> GpuProfile {
+        if self.gpu_profiles.is_empty() {
+            GpuProfile {
+                mem_util: self.mem_util,
+                block_size: self.block_size,
+                timing_scale: 1.0,
+            }
+        } else {
+            self.gpu_profiles[g % self.gpu_profiles.len()]
+        }
+    }
+
+    /// The engine configuration of GPU `g`, derived from its profile
+    /// (the engine ignores the workload field — the cluster submits
+    /// arrivals itself).
+    fn engine_config_for(&self, g: usize) -> ServeSimConfig {
+        let p = self.profile_for(g);
         let mut c = ServeSimConfig::new(
             self.model,
             self.bench,
@@ -188,14 +381,18 @@ impl ClusterConfig {
             WorkloadSpec::poisson(1.0, 0),
         );
         c.params = self.params.clone();
-        c.mem_util = self.mem_util;
-        c.block_size = self.block_size;
+        c.mem_util = p.mem_util;
+        c.block_size = p.block_size;
+        c.timing_scale = p.timing_scale;
         c.seed = self.seed;
         c.score_agg = self.score_agg;
         c.quota_frac = self.quota_frac;
         // The router reads every engine's survivor-demand view on each
         // placement: keep it incrementally maintained.
         c.route_views = true;
+        // Last-survivor rescue is the on-pressure policy's engine-side
+        // half; the other policies leave memory events untouched.
+        c.migrate_rescue = matches!(self.migration, MigrationPolicy::OnPressure { .. });
         c
     }
 }
@@ -218,6 +415,11 @@ struct ReqMeta {
     /// Issuing closed-loop client (`usize::MAX` for open loop).
     client: usize,
     disposition: ReqDisposition,
+    /// Expected KV tokens (prompt + N expected-length traces) — what
+    /// per-GPU views quantize by their own block size.
+    expected_tokens: f64,
+    /// The same footprint in the cluster's reference block size (the
+    /// admission layer's drain-rate unit).
     expected_blocks: f64,
 }
 
@@ -304,6 +506,8 @@ struct FrontDoor {
     t_last_done: f64,
     /// Scratch for harvested completions.
     done_buf: Vec<(usize, f64)>,
+    /// Scratch for harvested last-survivor rescues awaiting relocation.
+    migrations_buf: Vec<MigratedRequest>,
     /// Scratch for router views (reused across placements).
     views_buf: Vec<GpuView>,
     /// Lazy min-heap over busy engines' `(clock bits, gpu)` for the
@@ -319,13 +523,15 @@ struct FrontDoor {
 
 impl FrontDoor {
     /// Register a newly issued request and schedule its arrival.
-    fn schedule(&mut self, arr: &Arrival, client: usize, expected_blocks: f64) {
+    fn schedule(&mut self, arr: &Arrival, client: usize, expected: (f64, f64)) {
+        let (expected_tokens, expected_blocks) = expected;
         debug_assert_eq!(arr.rid, self.meta.len(), "request ids are dense in issue order");
         self.meta.push(ReqMeta {
             qid: arr.qid,
             t_arrive: arr.t_arrive,
             client,
             disposition: ReqDisposition::Queued,
+            expected_tokens,
             expected_blocks,
         });
         self.pending.push(Reverse(Pending {
@@ -356,25 +562,30 @@ impl<'a> ClusterSim<'a> {
         ClusterSim { cfg, gen, scorer }
     }
 
-    /// Expected KV-block footprint of a request asking question `qid`:
-    /// N traces, each a prompt copy plus the question's expected trace
-    /// length ([`TraceGen::expected_trace_tokens`]). This is the
-    /// scheduler-visible estimate (sampled lengths stay hidden) that
-    /// both the SLO early reject and the kv-pressure router use.
-    fn expected_blocks(&self, qid: usize) -> f64 {
+    /// Expected KV footprint of a request asking question `qid` as
+    /// `(tokens, reference blocks)`: N traces, each a prompt copy plus
+    /// the question's expected trace length
+    /// ([`TraceGen::expected_trace_tokens`]). This is the
+    /// scheduler-visible estimate (sampled lengths stay hidden); the
+    /// SLO early reject consumes the reference-block form, while the
+    /// kv-pressure router quantizes the token form by each GPU's own
+    /// block size.
+    fn expected_footprint(&self, qid: usize) -> (f64, f64) {
         let q = self.gen.question(qid);
         let n = if self.cfg.method == Method::Cot { 1 } else { self.cfg.n_traces };
         let tokens =
             n as f64 * (self.gen.expected_trace_tokens(&q) + q.prompt_tokens as f64);
-        tokens / self.cfg.block_size as f64
+        (tokens, tokens / self.cfg.block_size as f64)
     }
 
     /// Run the whole workload to completion.
     pub fn run(&self) -> ClusterResult {
         let cfg = self.cfg;
-        let ecfg = cfg.engine_config();
-        let mut engines: Vec<ServeEngine<'_>> = (0..cfg.gpus)
-            .map(|_| ServeEngine::new(&ecfg, self.gen, self.scorer))
+        let ecfgs: Vec<ServeSimConfig> =
+            (0..cfg.gpus).map(|g| cfg.engine_config_for(g)).collect();
+        let mut engines: Vec<ServeEngine<'_>> = ecfgs
+            .iter()
+            .map(|ecfg| ServeEngine::new(ecfg, self.gen, self.scorer))
             .collect();
         let nq = self.gen.bench.n_questions;
 
@@ -392,6 +603,7 @@ impl<'a> ClusterSim<'a> {
             epoch: None,
             t_last_done: 0.0,
             done_buf: Vec::new(),
+            migrations_buf: Vec::new(),
             views_buf: Vec::new(),
             lag_heap: BinaryHeap::new(),
             lag_live: false,
@@ -402,7 +614,7 @@ impl<'a> ClusterSim<'a> {
             ClusterWorkload::Open(spec) => {
                 let arrivals = spec.generate(nq, cfg.seed ^ 0xA331_4A11_D00D_FEED);
                 for a in &arrivals {
-                    let eb = self.expected_blocks(a.qid);
+                    let eb = self.expected_footprint(a.qid);
                     fd.schedule(a, usize::MAX, eb);
                 }
             }
@@ -410,7 +622,7 @@ impl<'a> ClusterSim<'a> {
                 let heavy = self.heavy_qids(nq);
                 let mut clients = spec.clients(nq, heavy, cfg.seed ^ 0xC105_ED00);
                 for a in clients.initial_arrivals() {
-                    let eb = self.expected_blocks(a.qid);
+                    let eb = self.expected_footprint(a.qid);
                     fd.schedule(&a, clients.client_of(a.rid), eb);
                 }
                 fd.clients = Some(clients);
@@ -570,7 +782,10 @@ impl<'a> ClusterSim<'a> {
 
     /// Drain every engine's completions: record drain statistics, spawn
     /// the closed-loop clients' next arrivals, and track the last
-    /// completion time. Engines are visited in GPU order.
+    /// completion time. Engines are visited in GPU order. Last-survivor
+    /// rescues (requests the engines evicted instead of pruning, under
+    /// [`MigrationPolicy::OnPressure`]) are harvested the same way and
+    /// relocated to the least-pressured GPU.
     fn harvest(&self, engines: &mut [ServeEngine<'_>], fd: &mut FrontDoor) {
         for g in 0..engines.len() {
             let mut done = std::mem::take(&mut fd.done_buf);
@@ -588,47 +803,238 @@ impl<'a> ClusterSim<'a> {
                         .expect("closed loop has clients")
                         .next_arrival(client, t_done);
                     if let Some(a) = next {
-                        let eb = self.expected_blocks(a.qid);
+                        let eb = self.expected_footprint(a.qid);
                         fd.schedule(&a, client, eb);
                     }
                 }
             }
             fd.done_buf = done;
         }
+        // Rescued requests re-place on whichever GPU projects the least
+        // pressure right now — the source included, whose pool the
+        // eviction just relieved. Quota does not apply: the request was
+        // already admitted once.
+        let mut migs = std::mem::take(&mut fd.migrations_buf);
+        migs.clear();
+        for e in engines.iter_mut() {
+            e.drain_migrations_into(&mut migs);
+        }
+        for m in migs.drain(..) {
+            let mut target = 0usize;
+            let mut best = f64::INFINITY;
+            for g in 0..engines.len() {
+                let p = self.pressure(engines, g);
+                if p < best {
+                    best = p;
+                    target = g;
+                }
+            }
+            fd.counters.migration_saved += 1;
+            self.relocate(engines, fd, m, target);
+        }
+        fd.migrations_buf = migs;
+    }
+
+    /// Projected drain pressure of GPU `g`: its surviving traces' KV
+    /// demand relative to its free pool, weighted by its relative
+    /// slowness — the same signal the kv-pressure router scores, minus
+    /// the candidate request's own footprint.
+    fn pressure(&self, engines: &[ServeEngine<'_>], g: usize) -> f64 {
+        let p = self.cfg.profile_for(g);
+        p.timing_scale * engines[g].survivor_demand_blocks()
+            / engines[g].free_blocks().max(1) as f64
+    }
+
+    /// Hand a migrated request to `target`: charge the recompute bill,
+    /// count the hop, and re-admit through the target's wait queue.
+    fn relocate(
+        &self,
+        engines: &mut [ServeEngine<'_>],
+        fd: &mut FrontDoor,
+        m: MigratedRequest,
+        target: usize,
+    ) {
+        fd.counters.migrated += 1;
+        fd.counters.migration_recompute_tokens += m.recompute_tokens();
+        engines[target].submit_migrated(m);
+        // Keep the drain-phase laggard heap covering the target (an
+        // idle engine may just have become busy).
+        if fd.lag_live {
+            fd.lag_heap.push(Reverse((engines[target].clock().to_bits(), target)));
+        }
+        let out = engines[target].outstanding();
+        fd.per_gpu_peak_outstanding[target] = fd.per_gpu_peak_outstanding[target].max(out);
+    }
+
+    /// Move one request between GPUs instead of losing work. Two modes:
+    ///
+    /// * **Shed rescue** (`min_ratio == None`): admission is about to
+    ///   shed. The source must sit *exactly at* its admission quota —
+    ///   extracting a request then opens the slot that absorbs the
+    ///   queue head or the arrival itself, which is the whole point —
+    ///   and the target (lowest pressure among the other GPUs) may go
+    ///   over quota: the moved request was already admitted once, and
+    ///   parking it beats rejecting fresh work outright.
+    /// * **Proactive rebalance** (`min_ratio == Some(r)`): move from
+    ///   the highest-pressure GPU holding migratable work to the
+    ///   lowest-pressure *below-quota* GPU, only while the pressure gap
+    ///   clears the hysteresis (`src > r × tgt`), so near-balanced
+    ///   pools stay still.
+    ///
+    /// Returns whether a migration happened.
+    fn try_migrate(
+        &self,
+        engines: &mut [ServeEngine<'_>],
+        fd: &mut FrontDoor,
+        min_ratio: Option<f64>,
+    ) -> bool {
+        if engines.len() < 2 {
+            return false;
+        }
+        let quota = self.cfg.admission.max_outstanding_per_gpu;
+        let rescuing = min_ratio.is_none();
+        if let Some(r) = min_ratio {
+            // Cheap O(R) early-out for the common balanced case: if even
+            // the *global* max-to-min pressure gap is inside the
+            // hysteresis band, no eligible (source, target) pair can
+            // clear it — skip the per-GPU victim scans entirely.
+            let mut max_p = f64::NEG_INFINITY;
+            let mut min_p = f64::INFINITY;
+            for g in 0..engines.len() {
+                let p = self.pressure(engines, g);
+                max_p = max_p.max(p);
+                min_p = min_p.min(p);
+            }
+            if max_p <= r * min_p {
+                return false;
+            }
+        }
+        // Source: highest pressure among eligible GPUs with something
+        // to move (first maximum in GPU order).
+        let mut src: Option<(f64, usize, usize)> = None;
+        for g in 0..engines.len() {
+            if rescuing && engines[g].outstanding() != quota {
+                continue;
+            }
+            let Some(victim) = engines[g].migration_victim() else { continue };
+            let p = self.pressure(engines, g);
+            let better = match src {
+                None => true,
+                Some((bp, _, _)) => p > bp,
+            };
+            if better {
+                src = Some((p, g, victim));
+            }
+        }
+        let Some((src_p, src_g, victim)) = src else { return false };
+        // Target: lowest pressure among the *other* GPUs (first
+        // minimum in GPU order), quota-respecting unless rescuing.
+        let mut tgt: Option<(f64, usize)> = None;
+        for g in 0..engines.len() {
+            if g == src_g || (!rescuing && engines[g].outstanding() >= quota) {
+                continue;
+            }
+            let p = self.pressure(engines, g);
+            let better = match tgt {
+                None => true,
+                Some((bp, _)) => p < bp,
+            };
+            if better {
+                tgt = Some((p, g));
+            }
+        }
+        let Some((tgt_p, tgt_g)) = tgt else { return false };
+        if let Some(r) = min_ratio {
+            // Proactive hysteresis: only a clear imbalance moves work.
+            if src_p <= r * tgt_p {
+                return false;
+            }
+        }
+        let m = engines[src_g]
+            .extract_request(victim)
+            .expect("the victim is outstanding on its source");
+        self.relocate(engines, fd, m, tgt_g);
+        true
     }
 
     /// Offer one arrival to admission control: place it if any GPU is
-    /// eligible, otherwise queue (bounded) or shed.
+    /// eligible, otherwise queue (bounded) or shed. Under
+    /// [`MigrationPolicy::OnPressure`], a proactive rebalance may run
+    /// first; under any migrating policy, an imminent shed first tries
+    /// a work-preserving relocation ([`Self::try_migrate`]) whose freed
+    /// quota slot absorbs the queue head (or the arrival itself).
     fn offer(&self, engines: &mut [ServeEngine<'_>], fd: &mut FrontDoor, rid: usize) {
         fd.counters.offered += 1;
+        if let MigrationPolicy::OnPressure { ratio } = self.cfg.migration {
+            // Proactive, quota-respecting rebalance with hysteresis —
+            // at most one move per offered arrival, so near-balanced
+            // pools stay still and thrash is bounded by the offer rate.
+            if self.try_migrate(engines, fd, Some(ratio)) {
+                self.drain_queue(engines, fd);
+            }
+        }
         let quota = self.cfg.admission.max_outstanding_per_gpu;
         let eligible = engines.iter().any(|e| e.outstanding() < quota);
         if eligible {
             self.place(engines, fd, rid);
             return;
         }
-        // Every GPU is at quota: queue or shed.
-        if let Some(slo) = self.cfg.admission.slo_s {
-            // SLO-aware early reject: expected queue wait from the
-            // queued-ahead footprint over the measured drain rate. No
-            // evidence (no completions yet) means no early reject.
-            let epoch = fd.epoch.unwrap_or(0.0);
-            let elapsed = fd.meta[rid].t_arrive - epoch;
-            if fd.completed_blocks > 0.0 && elapsed > 0.0 {
-                let drain_rate = fd.completed_blocks / elapsed; // blocks/s
-                let ahead = fd.queued_blocks() + fd.meta[rid].expected_blocks;
-                if ahead / drain_rate > slo {
-                    self.shed(fd, rid);
-                    return;
-                }
-            }
+        self.queue_or_shed(engines, fd, rid, self.cfg.migration.on_shed());
+    }
+
+    /// Would the SLO-aware early reject shed this arrival right now?
+    /// Expected queue wait is the queued-ahead footprint over the
+    /// measured drain rate; no evidence (no completions yet) means no
+    /// early reject.
+    fn slo_would_shed(&self, fd: &FrontDoor, rid: usize) -> bool {
+        let Some(slo) = self.cfg.admission.slo_s else {
+            return false;
+        };
+        let epoch = fd.epoch.unwrap_or(0.0);
+        let elapsed = fd.meta[rid].t_arrive - epoch;
+        if fd.completed_blocks > 0.0 && elapsed > 0.0 {
+            let drain_rate = fd.completed_blocks / elapsed; // blocks/s
+            let ahead = fd.queued_blocks() + fd.meta[rid].expected_blocks;
+            ahead / drain_rate > slo
+        } else {
+            false
         }
-        if fd.queue.len() >= self.cfg.admission.queue_cap {
+    }
+
+    /// Every GPU is at quota: queue the arrival, or shed it — unless a
+    /// migration can preserve the work. A successful migration frees a
+    /// quota slot on the (hot) source; the FIFO queue head takes it,
+    /// and the loop re-evaluates admission with the shorter queue — so
+    /// a would-be shed becomes a placement or a queue entry instead.
+    /// At most one migration per offered arrival.
+    fn queue_or_shed(
+        &self,
+        engines: &mut [ServeEngine<'_>],
+        fd: &mut FrontDoor,
+        rid: usize,
+        mut may_migrate: bool,
+    ) {
+        let quota = self.cfg.admission.max_outstanding_per_gpu;
+        loop {
+            if engines.iter().any(|e| e.outstanding() < quota) {
+                self.place(engines, fd, rid);
+                return;
+            }
+            let would_shed = self.slo_would_shed(fd, rid)
+                || fd.queue.len() >= self.cfg.admission.queue_cap;
+            if !would_shed {
+                fd.queue.push_back(rid);
+                fd.counters.queue_peak = fd.counters.queue_peak.max(fd.queue.len() as u64);
+                return;
+            }
+            if may_migrate && self.try_migrate(engines, fd, None) {
+                may_migrate = false;
+                self.drain_queue(engines, fd);
+                continue;
+            }
             self.shed(fd, rid);
             return;
         }
-        fd.queue.push_back(rid);
-        fd.counters.queue_peak = fd.counters.queue_peak.max(fd.queue.len() as u64);
     }
 
     /// Mark a request shed. A shed closed-loop client goes back to
@@ -648,7 +1054,7 @@ impl<'a> ClusterSim<'a> {
                 .expect("closed loop has clients")
                 .next_arrival(client, t);
             if let Some(a) = next {
-                let eb = self.expected_blocks(a.qid);
+                let eb = self.expected_footprint(a.qid);
                 fd.schedule(&a, client, eb);
             }
         }
@@ -668,13 +1074,18 @@ impl<'a> ClusterSim<'a> {
                 .iter()
                 .enumerate()
                 .filter(|(_, e)| e.outstanding() < quota)
-                .map(|(g, e)| GpuView {
-                    gpu: g,
-                    outstanding: e.outstanding(),
-                    live_traces: e.live_traces(),
-                    free_blocks: e.free_blocks(),
-                    pool_blocks: e.pool_blocks(),
-                    survivor_demand_blocks: e.survivor_demand_blocks(),
+                .map(|(g, e)| {
+                    let p = self.cfg.profile_for(g);
+                    GpuView {
+                        gpu: g,
+                        outstanding: e.outstanding(),
+                        live_traces: e.live_traces(),
+                        free_blocks: e.free_blocks(),
+                        pool_blocks: e.pool_blocks(),
+                        block_size: p.block_size,
+                        timing_scale: p.timing_scale,
+                        survivor_demand_blocks: e.survivor_demand_blocks(),
+                    }
                 }),
         );
         debug_assert!(!views.is_empty(), "place requires an eligible GPU");
@@ -687,7 +1098,7 @@ impl<'a> ClusterSim<'a> {
             rid,
             qid: meta.qid,
             n_traces: self.cfg.n_traces,
-            expected_blocks: meta.expected_blocks,
+            expected_tokens: meta.expected_tokens,
         };
         let g = views[fd.router.place(&req, &views)].gpu;
         fd.views_buf = views;
@@ -890,6 +1301,164 @@ mod tests {
         for o in &r.outcomes {
             assert!(o.latency_s <= r.latency.max_s() + 1e-9);
             assert!(o.latency_s >= r.latency.min_s() - 1e-9);
+        }
+    }
+
+    #[test]
+    fn gpu_profile_and_migration_policy_parse_roundtrip() {
+        let p = GpuProfile::parse("0.45:32:2.5").expect("valid spec");
+        assert_eq!(p, GpuProfile { mem_util: 0.45, block_size: 32, timing_scale: 2.5 });
+        assert_eq!(GpuProfile::parse(&p.spec()), Some(p));
+        let bad_specs =
+            ["", "0.9", "0.9:16", "1.5:16:1", "0:16:1", "0.9:0:1", "0.9:16:0", "0.9:16:1:1"];
+        for bad in bad_specs {
+            assert!(GpuProfile::parse(bad).is_none(), "{bad:?} must not parse");
+        }
+        for pol in [
+            MigrationPolicy::Never,
+            MigrationPolicy::OnShed,
+            MigrationPolicy::OnPressure { ratio: 2.0 },
+            MigrationPolicy::OnPressure { ratio: 3.5 },
+        ] {
+            assert_eq!(MigrationPolicy::parse(&pol.spec()), Some(pol));
+        }
+        assert_eq!(
+            MigrationPolicy::parse("on-pressure"),
+            Some(MigrationPolicy::OnPressure {
+                ratio: MigrationPolicy::DEFAULT_PRESSURE_RATIO
+            })
+        );
+        assert!(MigrationPolicy::parse("on-pressure:0.5").is_none(), "ratio < 1 invalid");
+        assert!(MigrationPolicy::parse("sometimes").is_none());
+    }
+
+    /// An explicit uniform profile list is byte-identical to the
+    /// profile-free configuration — the contract that keeps
+    /// `MigrationPolicy::Never` + empty profiles equal to the
+    /// pre-heterogeneity cluster output.
+    #[test]
+    fn uniform_profiles_match_the_default_pool() {
+        let plain = pressured_cfg(Method::Step, 2);
+        let mut explicit = plain.clone();
+        explicit.gpu_profiles = vec![
+            GpuProfile {
+                mem_util: plain.mem_util,
+                block_size: plain.block_size,
+                timing_scale: 1.0,
+            };
+            2
+        ];
+        let a = run(&plain);
+        let b = run(&explicit);
+        assert_eq!(a.makespan_s, b.makespan_s);
+        assert_eq!(a.counters.report(), b.counters.report());
+        assert_eq!(a.outcomes.len(), b.outcomes.len());
+        for (x, y) in a.outcomes.iter().zip(&b.outcomes) {
+            assert_eq!(x.rid, y.rid);
+            assert_eq!(x.latency_s, y.latency_s);
+            assert_eq!(x.gen_tokens, y.gen_tokens);
+            assert_eq!(x.chosen, y.chosen);
+        }
+    }
+
+    /// When admission never sheds, the on-shed policy never fires, so
+    /// its output is byte-identical to `Never` — migration plumbing is
+    /// inert until the moment it is needed.
+    #[test]
+    fn on_shed_is_inert_without_sheds() {
+        let base = light_cfg(
+            Method::Step,
+            ClusterWorkload::Closed(ClosedLoopSpec::new(3, 30.0, 9)),
+        );
+        let mut migrating = base.clone();
+        migrating.migration = MigrationPolicy::OnShed;
+        let a = run(&base);
+        let b = run(&migrating);
+        assert!(a.shed_rids.is_empty(), "light load must not shed");
+        assert_eq!(b.counters.migrated, 0, "nothing shed, nothing migrated");
+        assert_eq!(a.makespan_s, b.makespan_s);
+        assert_eq!(a.counters.report(), b.counters.report());
+        for (x, y) in a.outcomes.iter().zip(&b.outcomes) {
+            assert_eq!(x.latency_s, y.latency_s);
+            assert_eq!(x.chosen, y.chosen);
+        }
+    }
+
+    /// A harshly heterogeneous, tightly-quota'd pool: the migration
+    /// grid's core claim. Under `Never` admission sheds; under
+    /// `OnShed` the same offered load sheds strictly less (each
+    /// imminent shed relocates work hottest → coolest and the freed
+    /// slot absorbs the arrival), completes more requests, and every
+    /// conservation law still holds.
+    #[test]
+    fn on_shed_migration_sheds_less_than_never() {
+        let mut base = ClusterConfig::new(
+            2,
+            ModelId::Phi4_14B,
+            BenchId::Hmmt2425,
+            Method::Step,
+            4,
+            ClusterWorkload::Closed(ClosedLoopSpec::skewed(4, 10.0, 12, 0.5)),
+        );
+        base.seed = 13;
+        base.gpu_profiles = GpuProfile::default_hetero(2);
+        base.admission.max_outstanding_per_gpu = 1;
+        base.admission.queue_cap = 0;
+        let never = run(&base);
+        assert!(
+            never.counters.shed > 0,
+            "the harsh config must shed under Never (got {})",
+            never.counters.report()
+        );
+        let mut migrating = base.clone();
+        migrating.migration = MigrationPolicy::OnShed;
+        let shed = run(&migrating);
+        assert!(
+            shed.counters.shed < never.counters.shed,
+            "on-shed must shed less: {} vs {}",
+            shed.counters.report(),
+            never.counters.report()
+        );
+        assert!(shed.counters.migrated > 0, "rescues actually happened");
+        assert!(
+            shed.counters.migration_recompute_tokens > 0,
+            "moved KV is recomputed, not teleported"
+        );
+        assert!(shed.counters.completed > never.counters.completed);
+        for r in [&never, &shed] {
+            assert_eq!(r.counters.offered, r.counters.placed + r.counters.shed);
+            assert_eq!(r.counters.completed, r.counters.placed);
+            for w in r.outcomes.windows(2) {
+                assert!(w[0].rid < w[1].rid, "outcomes unique by rid");
+            }
+        }
+    }
+
+    /// The on-pressure policy proactively rebalances a heterogeneous
+    /// pool and upholds the same conservation laws; its runs stay
+    /// deterministic.
+    #[test]
+    fn on_pressure_migration_conserves_and_is_deterministic() {
+        let mut cfg = pressured_cfg(Method::Step, 3);
+        cfg.gpu_profiles = GpuProfile::default_hetero(3);
+        cfg.admission.max_outstanding_per_gpu = 2;
+        cfg.admission.queue_cap = 1;
+        cfg.migration = MigrationPolicy::OnPressure { ratio: 1.5 };
+        let a = run(&cfg);
+        let b = run(&cfg);
+        assert_eq!(a.counters.report(), b.counters.report(), "deterministic");
+        assert_eq!(a.makespan_s, b.makespan_s);
+        assert_eq!(a.counters.offered, a.counters.placed + a.counters.shed);
+        assert_eq!(a.counters.completed, a.counters.placed);
+        assert!(a.counters.migrated >= a.counters.migration_saved);
+        for (x, y) in a.outcomes.iter().zip(&b.outcomes) {
+            assert_eq!(x.rid, y.rid);
+            assert_eq!(x.latency_s, y.latency_s);
+        }
+        // Every outcome's trace accounting stays within its budget: no
+        // trace lost or duplicated across hops.
+        for o in &a.outcomes {
+            assert!(o.n_finished + o.n_pruned <= cfg.n_traces);
         }
     }
 

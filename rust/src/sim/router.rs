@@ -16,8 +16,13 @@
 //! * [`KvPressure`] — pick the GPU whose free pool the projected
 //!   demand — its surviving traces' score-weighted needs
 //!   ([`GpuView::survivor_demand_blocks`]) plus the request's own
-//!   expected footprint — would consume the smallest *fraction* of.
-//!   Memory-aware the way STEP's step scores make possible.
+//!   expected footprint — would consume the smallest *fraction* of,
+//!   scaled by the GPU's relative slowness
+//!   ([`GpuView::timing_scale`]). Memory- **and capacity-**aware: on a
+//!   heterogeneous pool the footprint is quantized by each GPU's own
+//!   block size, and the timing scale keeps a slow-but-empty GPU from
+//!   outbidding a fast-but-busy one (equal block pressure on a 3×
+//!   slower GPU drains 3× slower).
 //!
 //! Policies are pure functions of their inputs (the round-robin cursor
 //! is the only state), so cluster runs stay bit-deterministic.
@@ -42,6 +47,13 @@ pub struct GpuView {
     pub free_blocks: usize,
     /// Physical blocks in the GPU's KV pool.
     pub pool_blocks: usize,
+    /// PagedAttention block size of this GPU's pool, in tokens
+    /// (heterogeneous pools may differ per GPU).
+    pub block_size: usize,
+    /// Relative per-token slowness of this GPU (1.0 = the calibrated
+    /// baseline; 3.0 = three times slower). Capacity-aware policies
+    /// scale projected pressure by it.
+    pub timing_scale: f64,
     /// Estimated blocks the GPU's surviving traces still need (see
     /// [`crate::sim::serve::ServeEngine::survivor_demand_blocks`]).
     pub survivor_demand_blocks: f64,
@@ -56,10 +68,12 @@ pub struct RouteRequest {
     pub qid: usize,
     /// Traces the request will decode (N).
     pub n_traces: usize,
-    /// Expected KV blocks the request (prompt + N traces) will occupy
+    /// Expected KV *tokens* the request (prompt + N traces) will occupy
     /// at its expected full length (benchmark-profile mean — the router
-    /// cannot see the sampled trace lengths).
-    pub expected_blocks: f64,
+    /// cannot see the sampled trace lengths). Tokens, not blocks: on a
+    /// heterogeneous pool each GPU quantizes the footprint by its own
+    /// [`GpuView::block_size`].
+    pub expected_tokens: f64,
 }
 
 /// A placement policy: pick one GPU for each arriving request.
@@ -81,9 +95,11 @@ pub struct RouteRequest {
 ///     live_traces: 0,
 ///     free_blocks: 100,
 ///     pool_blocks: 100,
+///     block_size: 16,
+///     timing_scale: 1.0,
 ///     survivor_demand_blocks: 0.0,
 /// };
-/// let req = RouteRequest { rid: 0, qid: 0, n_traces: 4, expected_blocks: 12.0 };
+/// let req = RouteRequest { rid: 0, qid: 0, n_traces: 4, expected_tokens: 192.0 };
 /// let gpus = [view(0), view(1), view(2)];
 /// let mut rr = RoundRobin::new();
 /// assert_eq!(rr.place(&req, &gpus), 0);
@@ -156,13 +172,18 @@ impl RouterPolicy for LeastOutstanding {
 }
 
 /// Place on the GPU whose free pool the projected demand would consume
-/// the least, *relatively*: score = (survivor demand + the request's
-/// expected footprint) / free blocks. The ratio is what makes the
-/// request's own footprint a real input — a heavy request tolerates a
-/// loaded-but-large free pool better than a clean-but-small one, which
-/// an absolute `demand − free` difference cannot express (any per-GPU
-/// constant cancels out of an argmin). Deterministic first-minimum
-/// tie-breaking in view order.
+/// the least, *relatively*, weighted by how slowly that GPU drains it:
+/// score = timing_scale × (survivor demand + the request's expected
+/// footprint in this GPU's blocks) / free blocks. The ratio is what
+/// makes the request's own footprint a real input — a heavy request
+/// tolerates a loaded-but-large free pool better than a
+/// clean-but-small one, which an absolute `demand − free` difference
+/// cannot express (any per-GPU constant cancels out of an argmin) —
+/// and the timing scale is what makes the policy *capacity*-aware on a
+/// heterogeneous pool: the same block pressure on a 3× slower GPU
+/// represents 3× the wall-clock of queued work, so a slow-but-empty
+/// GPU no longer outbids a fast-but-busy one. Deterministic
+/// first-minimum tie-breaking in view order.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct KvPressure;
 
@@ -174,7 +195,9 @@ impl RouterPolicy for KvPressure {
     fn place(&mut self, req: &RouteRequest, gpus: &[GpuView]) -> usize {
         debug_assert!(!gpus.is_empty(), "place called with a non-empty view set");
         let score = |g: &GpuView| {
-            (g.survivor_demand_blocks + req.expected_blocks) / g.free_blocks.max(1) as f64
+            let expected_blocks = req.expected_tokens / g.block_size.max(1) as f64;
+            (g.survivor_demand_blocks + expected_blocks) / g.free_blocks.max(1) as f64
+                * g.timing_scale
         };
         let mut best = 0usize;
         for (idx, g) in gpus.iter().enumerate().skip(1) {
@@ -244,12 +267,15 @@ mod tests {
             live_traces: outstanding * 4,
             free_blocks: free,
             pool_blocks: 1000,
+            block_size: 16,
+            timing_scale: 1.0,
             survivor_demand_blocks: demand,
         }
     }
 
     fn req() -> RouteRequest {
-        RouteRequest { rid: 0, qid: 0, n_traces: 4, expected_blocks: 50.0 }
+        // 800 tokens / 16-token blocks = 50 expected blocks at baseline.
+        RouteRequest { rid: 0, qid: 0, n_traces: 4, expected_tokens: 800.0 }
     }
 
     #[test]
@@ -289,15 +315,48 @@ mod tests {
     #[test]
     fn kv_pressure_footprint_drives_the_placement() {
         let mut kv = KvPressure;
-        // A heavy request prefers the loaded-but-large free pool
-        // (300 free absorbs 100 + 200 at ratio 1.0; 100 free would sit
-        // at 2.0); a light request flips to the cleaner small pool
+        // A heavy request (3200 tok = 200 blocks) prefers the
+        // loaded-but-large free pool (300 free absorbs 100 + 200 at
+        // ratio 1.0; 100 free would sit at 2.0); a light request
+        // (160 tok = 10 blocks) flips to the cleaner small pool
         // (0.1 vs 0.37).
-        let big = RouteRequest { rid: 0, qid: 0, n_traces: 8, expected_blocks: 200.0 };
+        let big = RouteRequest { rid: 0, qid: 0, n_traces: 8, expected_tokens: 3200.0 };
         let gpus = [view(0, 1, 100, 0.0), view(1, 1, 300, 100.0)];
         assert_eq!(gpus[kv.place(&big, &gpus)].gpu, 1);
-        let small = RouteRequest { expected_blocks: 10.0, ..big };
+        let small = RouteRequest { expected_tokens: 160.0, ..big };
         assert_eq!(gpus[kv.place(&small, &gpus)].gpu, 0);
+    }
+
+    #[test]
+    fn kv_pressure_weighs_timing_scale_on_heterogeneous_pools() {
+        let mut kv = KvPressure;
+        // Equal block pressure: the empty-but-3x-slower GPU loses to a
+        // moderately loaded baseline GPU, because its queued work
+        // drains three times slower.
+        let mut slow = view(0, 0, 200, 0.0);
+        slow.timing_scale = 3.0;
+        let busy = view(1, 2, 200, 150.0);
+        // slow: 3.0 * (0 + 50) / 200 = 0.75; busy: 1.0 * 200 / 200 = 1.0
+        // -> still prefers the slow empty one at this gap...
+        assert_eq!([slow, busy][kv.place(&req(), &[slow, busy])].gpu, 0);
+        // ...but once the gap narrows the fast GPU wins even while
+        // busier: slow 3.0 * 50/200 = 0.75 vs busy 1.0 * 100/200 = 0.5.
+        let busy = view(1, 2, 200, 50.0);
+        assert_eq!([slow, busy][kv.place(&req(), &[slow, busy])].gpu, 1);
+        // A load-oblivious scale-free comparison would have picked the
+        // empty GPU both times.
+    }
+
+    #[test]
+    fn kv_pressure_quantizes_footprint_by_each_gpus_block_size() {
+        let mut kv = KvPressure;
+        // Same tokens, different block sizes: 800 tokens is 50 blocks
+        // at bs=16 but 25 at bs=32, so the coarse-blocked GPU's ratio
+        // halves and it wins at equal free capacity.
+        let fine = view(0, 0, 100, 0.0);
+        let mut coarse = view(1, 0, 100, 0.0);
+        coarse.block_size = 32;
+        assert_eq!([fine, coarse][kv.place(&req(), &[fine, coarse])].gpu, 1);
     }
 
     #[test]

@@ -93,6 +93,20 @@ impl WaitQueue {
         let pos = (0..self.q.len()).find(|&p| fits(self.q[p]))?;
         self.q.remove(pos)
     }
+
+    /// Remove a specific queued trace (the cross-GPU migration path
+    /// pulls a request's preempted traces out of its source engine's
+    /// queue), preserving FIFO order of the rest. Returns whether the
+    /// trace was queued.
+    pub fn remove(&mut self, tid: usize) -> bool {
+        match (0..self.q.len()).find(|&p| self.q[p] == tid) {
+            Some(pos) => {
+                self.q.remove(pos);
+                true
+            }
+            None => false,
+        }
+    }
 }
 
 /// Largest `d` in `[0, cap]` such that `fits(d)` holds, by binary
@@ -517,6 +531,21 @@ mod tests {
         assert_eq!(q.pop_first_fit(|t| t == 5), Some(5));
         assert_eq!(q.pop_first_fit(|_| false), None);
         assert_eq!(q.pop_front(), Some(7));
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn wait_queue_removes_by_tid() {
+        let mut q = WaitQueue::new();
+        q.push_back(3);
+        q.push_back(7);
+        q.push_back(5);
+        assert!(q.remove(7), "middle element leaves");
+        assert!(!q.remove(7), "already gone");
+        assert!(!q.remove(99), "never queued");
+        // FIFO order of the rest is preserved.
+        assert_eq!(q.pop_front(), Some(3));
+        assert_eq!(q.pop_front(), Some(5));
         assert!(q.is_empty());
     }
 

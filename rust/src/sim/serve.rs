@@ -105,6 +105,19 @@ pub struct ServeSimConfig {
     /// single-GPU drivers leave it off and the view (if ever asked)
     /// falls back to an identical-result scan.
     pub route_views: bool,
+    /// Hardware speed multiplier on every timing coefficient (1.0 =
+    /// the calibrated baseline GPU; > 1 = proportionally slower). The
+    /// cluster's heterogeneous pools set this per engine from each
+    /// GPU's profile; `1.0` is bit-exact identity
+    /// ([`crate::sim::timing::TimingModel::scaled`]).
+    pub timing_scale: f64,
+    /// Allow a memory event that would prune the *last surviving*
+    /// trace of a request to instead evict the whole request into the
+    /// migration outbox ([`ServeEngine::drain_migrations_into`]) so a
+    /// cluster driver can relocate it to a less-pressured GPU. Off
+    /// (default) the event prunes as always; single-GPU drivers have
+    /// nowhere to relocate to and leave this off.
+    pub migrate_rescue: bool,
 }
 
 impl ServeSimConfig {
@@ -130,7 +143,60 @@ impl ServeSimConfig {
             workload,
             quota_frac: None,
             route_views: false,
+            timing_scale: 1.0,
+            migrate_rescue: false,
         }
+    }
+}
+
+/// A whole request extracted from one engine for relocation to another
+/// ([`ServeEngine::extract_request`] →
+/// [`ServeEngine::submit_migrated`]). Terminal traces travel with their
+/// votes; surviving traces travel as preempted state and re-enter
+/// through the target's wait queue, so the recompute cost of the moved
+/// KV is charged by the same `sched` resume accounting every
+/// preemption uses.
+#[derive(Debug, Clone)]
+pub struct MigratedRequest {
+    /// Cluster-global request id.
+    pub rid: usize,
+    /// Question the request asks.
+    pub qid: usize,
+    /// Prompt tokens of the question (each surviving trace's resume
+    /// prefill covers `prompt + generated` tokens).
+    pub prompt_tokens: usize,
+    /// Request lifecycle marks, carried so end-to-end latency spans
+    /// hops.
+    pub st: RequestState,
+    /// Per-slot trace runtime state (scores, generated tokens, status,
+    /// accrued wait/decode time), in slot order. Surviving traces leave
+    /// the source as [`TraceStatus::Preempted`] — their KV is freed
+    /// there and rebuilt by the target's recompute-on-resume path. The
+    /// synthetic [`TraceSpec`]s are *not* carried: each is a pure
+    /// function of `(question, global rid, slot)` through the shared
+    /// [`TraceGen`], so the target regenerates them bit-identically.
+    pub traces: Vec<TraceState>,
+    /// Step boundaries the request crossed so far (Slim-SC cadence).
+    pub boundaries: usize,
+    /// Next Slim-SC check threshold.
+    pub next_slim: usize,
+    /// The request's similarity-check RNG, mid-stream.
+    pub slim_rng: Rng,
+    /// Non-terminal traces at extraction (always ≥ 1).
+    pub live: usize,
+    /// Source engine's clock at extraction.
+    pub t_evict: f64,
+}
+
+impl MigratedRequest {
+    /// Prefix tokens (prompt + generated) the target must recompute to
+    /// resume every surviving trace — the migration's recompute bill.
+    pub fn recompute_tokens(&self) -> u64 {
+        self.traces
+            .iter()
+            .filter(|st| st.status.is_active())
+            .map(|st| self.prompt_tokens as u64 + st.generated)
+            .sum()
     }
 }
 
@@ -225,6 +291,9 @@ struct Req {
     boundaries: usize,
     next_slim: usize,
     slim_rng: Rng,
+    /// Migrated out to another engine: this engine must neither report
+    /// an outcome nor a completion for it.
+    gone: bool,
 }
 
 /// Decrement a request's live-trace count; on the transition to zero,
@@ -278,8 +347,18 @@ pub struct ServeEngine<'a> {
     epoch: Option<f64>,
     submitted: usize,
     drained: usize,
+    /// Requests migrated out to other engines (they complete elsewhere).
+    migrated_out: usize,
     /// Undrained completions: (external request id, completion clock).
     completions: Vec<(usize, f64)>,
+    /// Migration outbox: whole requests a memory event evicted instead
+    /// of pruning their last survivor ([`ServeSimConfig::migrate_rescue`]),
+    /// awaiting relocation by the cluster driver.
+    migrations: Vec<MigratedRequest>,
+    /// Local indices of possibly-live requests, compacted lazily by
+    /// [`migration_victim`](Self::migration_victim) — keeps the victim
+    /// scan O(outstanding), not O(every request ever submitted).
+    live_locals: Vec<usize>,
     /// Incremental index over the running set: O(1) `d_event` peek and
     /// batch context size, closed-form block-demand probes (pool-wide
     /// and per-owner), running-set snapshots without a live scan.
@@ -307,7 +386,13 @@ impl<'a> ServeSim<'a> {
              warmup is a per-question protocol"
         );
         assert!(cfg.n_traces > 0, "n_traces must be positive");
-        ServeSim { cfg, gen, scorer, profile: ModelProfile::get(cfg.model) }
+        assert!(
+            cfg.timing_scale.is_finite() && cfg.timing_scale > 0.0,
+            "timing_scale must be a positive finite multiplier"
+        );
+        let mut profile = ModelProfile::get(cfg.model);
+        profile.timing = profile.timing.scaled(cfg.timing_scale);
+        ServeSim { cfg, gen, scorer, profile }
     }
 
     /// score_t under the configured aggregation (paper: running mean).
@@ -412,7 +497,10 @@ impl<'a> ServeEngine<'a> {
             epoch: None,
             submitted: 0,
             drained: 0,
+            migrated_out: 0,
             completions: Vec::new(),
+            migrations: Vec::new(),
+            live_locals: Vec::new(),
             index,
             scores_sorted: Vec::new(),
             running: Vec::new(),
@@ -426,9 +514,10 @@ impl<'a> ServeEngine<'a> {
         self.clock
     }
 
-    /// Requests submitted and not yet complete.
+    /// Requests submitted and not yet complete (requests migrated out
+    /// stopped being this engine's responsibility).
     pub fn outstanding(&self) -> usize {
-        self.submitted - self.drained - self.completions.len()
+        self.submitted - self.drained - self.completions.len() - self.migrated_out
     }
 
     /// No submitted request is still in flight.
@@ -462,6 +551,179 @@ impl<'a> ServeEngine<'a> {
     pub fn drain_completions_into(&mut self, out: &mut Vec<(usize, f64)>) {
         self.drained += self.completions.len();
         out.append(&mut self.completions);
+    }
+
+    /// Move all requests the engine evicted for relocation (memory
+    /// events under [`ServeSimConfig::migrate_rescue`]) into `out`, in
+    /// eviction order. The driver re-places them with
+    /// [`submit_migrated`](Self::submit_migrated) on some engine.
+    pub fn drain_migrations_into(&mut self, out: &mut Vec<MigratedRequest>) {
+        out.append(&mut self.migrations);
+    }
+
+    /// The cheapest outstanding request to relocate: minimal surviving
+    /// resident prefix (prompt + generated over its non-terminal
+    /// traces — exactly the recompute the target will pay), tie-broken
+    /// by lower external request id. `None` when nothing migratable is
+    /// outstanding (every request complete, gone, or mid-drain).
+    ///
+    /// Scans the lazily compacted live-request index, so the cost is
+    /// O(outstanding) — retired requests are dropped from the index the
+    /// first time a scan visits them, not revisited forever. The victim
+    /// is a minimum over a set, so the index's (compaction-dependent)
+    /// iteration order cannot change the result.
+    pub fn migration_victim(&mut self) -> Option<usize> {
+        let mut best: Option<(u64, usize)> = None;
+        let mut i = 0;
+        while i < self.live_locals.len() {
+            let rq = &self.reqs[self.live_locals[i]];
+            if rq.gone || rq.live == 0 {
+                self.live_locals.swap_remove(i);
+                continue;
+            }
+            let cost: u64 = self.traces[rq.lo..rq.lo + rq.n]
+                .iter()
+                .filter(|t| t.st.status.is_active())
+                .map(|t| rq.q.prompt_tokens as u64 + t.st.generated)
+                .sum();
+            let key = (cost, rq.st.rid);
+            let better = match best {
+                None => true,
+                Some(b) => key < b,
+            };
+            if better {
+                best = Some(key);
+            }
+            i += 1;
+        }
+        best.map(|(_, rid)| rid)
+    }
+
+    /// Extract a whole request for relocation to another engine: its
+    /// running traces leave the index and free their KV (settled as
+    /// decode through now, then marked preempted for transport), its
+    /// queued traces leave the wait queue, and the request stops
+    /// counting toward this engine's [`outstanding`](Self::outstanding).
+    /// Returns `None` when `external_rid` is unknown, already gone, or
+    /// already complete. O(outstanding): the lookup goes through the
+    /// live-request index, not the full historical request table.
+    pub fn extract_request(&mut self, external_rid: usize) -> Option<MigratedRequest> {
+        let local = self.live_locals.iter().copied().find(|&l| {
+            let rq = &self.reqs[l];
+            rq.st.rid == external_rid && !rq.gone && rq.live > 0
+        })?;
+        Some(self.extract_local(local))
+    }
+
+    /// [`extract_request`](Self::extract_request) by local request
+    /// index (the in-engine rescue path already holds it).
+    fn extract_local(&mut self, local: usize) -> MigratedRequest {
+        debug_assert!(!self.reqs[local].gone && self.reqs[local].live > 0);
+        let (lo, n) = (self.reqs[local].lo, self.reqs[local].n);
+        let clock = self.clock;
+        for tid in lo..lo + n {
+            match self.traces[tid].st.status {
+                TraceStatus::Running => {
+                    self.index_remove(tid);
+                    let t = &mut self.traces[tid];
+                    sched::settle(&mut t.st, &mut t.last_settle, clock);
+                    t.st.status = TraceStatus::Preempted;
+                    self.pool.free_seq(tid as u64);
+                }
+                TraceStatus::Preempted => {
+                    let removed = self.wait_q.remove(tid);
+                    debug_assert!(removed, "a preempted trace is queued");
+                    let t = &mut self.traces[tid];
+                    sched::settle(&mut t.st, &mut t.last_settle, clock);
+                }
+                _ => {}
+            }
+        }
+        let traces = self.traces[lo..lo + n].iter().map(|t| t.st.clone()).collect();
+        let rq = &mut self.reqs[local];
+        let live = rq.live;
+        rq.live = 0;
+        rq.gone = true;
+        self.migrated_out += 1;
+        MigratedRequest {
+            rid: rq.st.rid,
+            qid: rq.st.qid,
+            prompt_tokens: rq.q.prompt_tokens,
+            st: rq.st.clone(),
+            traces,
+            boundaries: rq.boundaries,
+            next_slim: rq.next_slim,
+            slim_rng: rq.slim_rng.clone(),
+            live,
+            t_evict: clock,
+        }
+    }
+
+    /// Admit a migrated request extracted from another engine. Terminal
+    /// traces keep their votes; surviving traces join the wait queue as
+    /// preempted and are rebuilt by the normal recompute-on-resume path
+    /// (prefill over prompt + generated — the `sched` recompute
+    /// accounting the migration is charged through). Trace specs are
+    /// regenerated from the shared [`TraceGen`], bit-identical to the
+    /// source's. An idle engine's clock first jumps to the eviction
+    /// instant (the request cannot arrive before it left).
+    pub fn submit_migrated(&mut self, m: MigratedRequest) {
+        debug_assert_eq!(m.traces.len(), self.n_per, "engines share the cluster's N");
+        debug_assert!(m.live > 0, "migrating a completed request");
+        if self.is_idle() {
+            self.clock = self.clock.max(m.t_evict);
+        }
+        if self.epoch.is_none() {
+            self.epoch = Some(m.t_evict);
+        }
+        self.submitted += 1;
+        let local = self.reqs.len();
+        let q = self.sim.gen.question(m.qid);
+        let expected_tokens = self.sim.gen.expected_trace_tokens(&q);
+        let lo = self.traces.len();
+        let clock = self.clock;
+        let mut live = 0usize;
+        for (i, mut st) in m.traces.into_iter().enumerate() {
+            let tid = lo + i;
+            let spec = self.sim.gen.trace(&q, m.rid * self.n_per + i);
+            st.id = tid as u64;
+            if st.status.is_active() {
+                st.status = TraceStatus::Preempted;
+                // The source settled this trace through `t_evict` on
+                // its own clock, but accrual resumes from this engine's
+                // clock — a busy target may trail (or lead) the
+                // eviction instant. Pre-charging the signed gap makes
+                // the trace's total wait over the hybrid timeline come
+                // out to exactly `resume clock − t_evict`, instead of
+                // double- or under-counting the skew window. Scheduling
+                // never reads these sums.
+                st.wait_time += clock - m.t_evict;
+                live += 1;
+                debug_assert!(
+                    st.generated < spec.step_ends[st.next_step],
+                    "a surviving trace sits strictly before its next boundary"
+                );
+                self.next_end.push(spec.step_ends[st.next_step]);
+                self.wait_q.push_back(tid);
+            } else {
+                self.next_end.push(st.generated);
+            }
+            self.traces.push(ServeTrace { rid: local, spec, st, last_settle: clock });
+        }
+        debug_assert_eq!(live, m.live);
+        self.live_locals.push(local);
+        self.reqs.push(Req {
+            st: m.st,
+            q,
+            expected_tokens,
+            lo,
+            n: self.n_per,
+            live,
+            boundaries: m.boundaries,
+            next_slim: m.next_slim,
+            slim_rng: m.slim_rng,
+            gone: false,
+        });
     }
 
     /// Estimated KV blocks the engine's *surviving* traces still need to
@@ -607,6 +869,7 @@ impl<'a> ServeEngine<'a> {
                     ^ (arr.rid as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
                     ^ 0x0051_1A5C,
             ),
+            gone: false,
         };
         let mut admitted = 0usize;
         for i in 0..n_per {
@@ -647,6 +910,7 @@ impl<'a> ServeEngine<'a> {
         for t in self.traces[lo..].iter_mut() {
             t.last_settle = clock;
         }
+        self.live_locals.push(local);
         self.reqs.push(rq);
     }
 
@@ -857,12 +1121,31 @@ impl<'a> ServeEngine<'a> {
                         self.sim.agg_score(&traces[i].st)
                     })
                     .expect("memory event with empty victim set");
+                let rid = self.traces[victim].rid;
+                let rescue = self.sim.cfg.migrate_rescue
+                    && self.reqs[rid].live == 1
+                    && running.len() > 1;
+                if rescue {
+                    // Pruning the request's last survivor would complete
+                    // it with every trace abstaining — all its work lost.
+                    // Evict the whole request into the migration outbox
+                    // instead; the victim's KV is freed either way, so
+                    // the memory event still unblocks the pool, and the
+                    // cluster driver relocates the request to the
+                    // least-pressured GPU. When the victim is the *only*
+                    // running trace, other traces' pressure cannot be
+                    // the cause — the trace simply outgrew this pool —
+                    // so prune as always rather than bouncing a request
+                    // no pool may ever hold.
+                    let m = self.extract_local(rid);
+                    self.migrations.push(m);
+                    return;
+                }
                 self.index_remove(victim);
                 let t = &mut self.traces[victim];
                 sched::settle(&mut t.st, &mut t.last_settle, clock);
                 t.st.status = TraceStatus::Pruned;
                 t.st.finish_clock = clock;
-                let rid = t.rid;
                 self.pool.free_seq(victim as u64);
                 self.counters.pruned += 1;
                 request_done(&mut self.reqs[rid], clock, &mut self.completions);
@@ -993,6 +1276,8 @@ impl<'a> ServeEngine<'a> {
         let outcomes: Vec<RequestOutcome> = self
             .reqs
             .iter()
+            // Requests migrated out complete (and report) elsewhere.
+            .filter(|rq| !rq.gone)
             .map(|rq| {
                 let slice = &self.traces[rq.lo..rq.lo + rq.n];
                 let votes: Vec<Vote> = slice
@@ -1353,6 +1638,105 @@ mod tests {
             assert!(steps > 10, "{method:?}: the pressured run should do real work");
             assert_eq!(eng.survivor_demand_blocks(), 0.0);
         }
+    }
+
+    /// A slower GPU profile (timing_scale > 1) stretches the same
+    /// deterministic workload's wall-clock; scale 1.0 is bit-identical
+    /// to the unscaled config.
+    #[test]
+    fn timing_scale_stretches_wall_clock() {
+        let base = pressured_cfg(Method::Sc);
+        let mut unit = base.clone();
+        unit.timing_scale = 1.0;
+        let mut slow = base.clone();
+        slow.timing_scale = 3.0;
+        let r_base = run(&base);
+        let r_unit = run(&unit);
+        let r_slow = run(&slow);
+        assert_eq!(r_base.makespan_s, r_unit.makespan_s, "scale 1.0 is identity");
+        for (a, b) in r_base.outcomes.iter().zip(&r_unit.outcomes) {
+            assert_eq!(a.latency_s, b.latency_s);
+        }
+        assert!(
+            r_slow.makespan_s > r_base.makespan_s,
+            "a 3x slower GPU must take longer ({} vs {})",
+            r_slow.makespan_s,
+            r_base.makespan_s
+        );
+    }
+
+    /// The migration transport: extract a mid-flight request from one
+    /// engine and re-admit it on another — the source reports no
+    /// outcome, the target completes it exactly once under the same
+    /// global rid, and no trace is lost or duplicated.
+    #[test]
+    fn extract_and_resubmit_moves_a_request_across_engines() {
+        for method in [Method::Sc, Method::Step] {
+            let cfg = pressured_cfg(method);
+            let gp = GenParams::default_d64();
+            let scorer = projection_scorer(&gp);
+            let gen = TraceGen::new(cfg.model, cfg.bench, gp, cfg.seed ^ 0x5EED);
+            let mut a = ServeEngine::new(&cfg, &gen, &scorer);
+            let mut b = ServeEngine::new(&cfg, &gen, &scorer);
+
+            a.submit(&Arrival { rid: 7, qid: 1, t_arrive: 0.0 });
+            // Decode a few events so the request is genuinely mid-flight.
+            for _ in 0..3 {
+                a.run_one_event();
+            }
+            assert_eq!(a.outstanding(), 1);
+            assert_eq!(a.migration_victim(), Some(7), "the only request is the victim");
+
+            let m = a.extract_request(7).expect("mid-flight request extracts");
+            assert_eq!(m.rid, 7);
+            assert!(m.live >= 1);
+            assert!(m.recompute_tokens() > 0, "surviving prefixes cost recompute");
+            assert_eq!(a.outstanding(), 0, "the source drops responsibility");
+            assert!(a.is_idle());
+            assert!(a.extract_request(7).is_none(), "a request extracts once");
+            assert_eq!(a.migration_victim(), None);
+
+            b.submit_migrated(m);
+            assert_eq!(b.outstanding(), 1);
+            b.run_to_completion();
+            let mut done = Vec::new();
+            b.drain_completions_into(&mut done);
+            assert_eq!(done.len(), 1, "{method:?}: exactly one completion");
+            assert_eq!(done[0].0, 7, "{method:?}: under the global rid");
+
+            let ra = a.finish();
+            assert!(ra.outcomes.is_empty(), "{method:?}: source reports nothing");
+            let rb = b.finish();
+            assert_eq!(rb.outcomes.len(), 1);
+            let o = &rb.outcomes[0];
+            assert_eq!(o.rid, 7);
+            assert!(o.latency_s > 0.0);
+            assert!(
+                o.n_finished + o.n_pruned <= cfg.n_traces,
+                "{method:?}: no trace duplicated across the hop"
+            );
+        }
+    }
+
+    /// Extraction returns the wait queue and KV pool to a clean state
+    /// on the source: all blocks free, nothing queued.
+    #[test]
+    fn extract_request_releases_all_source_resources() {
+        let cfg = pressured_cfg(Method::Sc);
+        let gp = GenParams::default_d64();
+        let scorer = projection_scorer(&gp);
+        let gen = TraceGen::new(cfg.model, cfg.bench, gp, cfg.seed ^ 0x5EED);
+        let mut a = ServeEngine::new(&cfg, &gen, &scorer);
+        a.submit(&Arrival { rid: 0, qid: 0, t_arrive: 0.0 });
+        for _ in 0..5 {
+            a.run_one_event();
+        }
+        let free_before_full = a.free_blocks() < a.pool_blocks();
+        assert!(free_before_full, "the request must hold KV before extraction");
+        a.extract_request(0).expect("extracts");
+        assert_eq!(a.free_blocks(), a.pool_blocks(), "every block returns");
+        assert_eq!(a.live_traces(), 0);
+        assert!(!a.run_one_event(), "nothing left to do");
     }
 
     /// The KV-pressure view is zero when idle and positive under load.

@@ -58,6 +58,22 @@ impl TimingModel {
     pub fn prefill(&self, tokens: usize) -> f64 {
         self.p0 + self.p1 * tokens as f64
     }
+
+    /// The same model on hardware `scale`× slower than the calibrated
+    /// baseline: every coefficient multiplies by `scale` (> 1 = slower
+    /// GPU, < 1 = faster). `scale == 1.0` is bit-exact identity —
+    /// multiplying a finite f64 by 1.0 never changes its bits — which
+    /// is what keeps uniform heterogeneous-pool configurations
+    /// byte-identical to the unscaled path.
+    pub fn scaled(&self, scale: f64) -> TimingModel {
+        TimingModel {
+            c0: self.c0 * scale,
+            c1: self.c1 * scale,
+            c2: self.c2 * scale,
+            p0: self.p0 * scale,
+            p1: self.p1 * scale,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -99,5 +115,19 @@ mod tests {
     #[test]
     fn prefill_linear() {
         assert!((TM.prefill(100) - (0.01 + 1e-3)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scaled_multiplies_every_coefficient() {
+        let s = TM.scaled(2.5);
+        let (a, b) = (s.decode_iter(4, 100), 2.5 * TM.decode_iter(4, 100));
+        assert!((a - b).abs() < 1e-15, "{a} vs {b}");
+        let (a, b) = (s.prefill(64), 2.5 * TM.prefill(64));
+        assert!((a - b).abs() < 1e-15, "{a} vs {b}");
+        // scale 1.0 is a bit-exact identity (the uniform-pool contract).
+        let id = TM.scaled(1.0);
+        assert_eq!(id.c0.to_bits(), TM.c0.to_bits());
+        assert_eq!(id.c2.to_bits(), TM.c2.to_bits());
+        assert_eq!(id.p1.to_bits(), TM.p1.to_bits());
     }
 }

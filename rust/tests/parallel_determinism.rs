@@ -223,6 +223,54 @@ fn cluster_parallel_engine_stepping_is_byte_identical() {
     }
 }
 
+/// Heterogeneous pools with migration enabled obey the same contract:
+/// the migration grid's metric blocks are byte-identical across
+/// `--threads` (cell sharding) and `--step-threads` (parallel engine
+/// stepping) — relocations happen at interaction points in GPU order,
+/// so parallel stepping adds no ordering freedom.
+#[test]
+fn heterogeneous_migration_grid_is_thread_invariant() {
+    use step::sim::cluster::GpuProfile;
+    let gp = GenParams::default_d64();
+    let sc = projection_scorer(&gp);
+    let base = ClusterOpts {
+        gpus: 3,
+        model: ModelId::Phi4_14B,
+        bench: BenchId::Hmmt2425,
+        n_requests: 6,
+        clients: 3,
+        think_s: 15.0,
+        heavy_frac: 0.5,
+        n_traces: 4,
+        mem_util: 0.5,
+        queue_cap: 0,
+        max_outstanding: 1,
+        gpu_profiles: GpuProfile::default_hetero(3),
+        seed: 7,
+        threads: 1,
+        step_threads: 1,
+        ..Default::default()
+    };
+    let fingerprint = table6::cells_fingerprint;
+    let serial = fingerprint(&table6::run_migration_grid(&base, &gp, &sc));
+    for threads in [2, 8] {
+        let opts = ClusterOpts { threads, ..base.clone() };
+        assert_eq!(
+            serial,
+            fingerprint(&table6::run_migration_grid(&opts, &gp, &sc)),
+            "{threads}-thread migration grid differs from serial"
+        );
+    }
+    for step_threads in [2, 4, 0] {
+        let opts = ClusterOpts { step_threads, ..base.clone() };
+        assert_eq!(
+            serial,
+            fingerprint(&table6::run_migration_grid(&opts, &gp, &sc)),
+            "step_threads={step_threads}: migration grid differs from serial stepping"
+        );
+    }
+}
+
 /// The serve-sim acceptance contract: `--threads 1` and `--threads 8`
 /// produce byte-identical BENCH_serving.json metric blocks. Threads only
 /// shard the (deterministic, single-threaded) per-method simulations.

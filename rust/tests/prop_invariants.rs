@@ -5,7 +5,9 @@
 
 use step::coordinator::voting::{majority_vote, weighted_vote, Vote};
 use step::kvcache::KvCacheManager;
-use step::sim::cluster::{ClusterConfig, ClusterSim, ClusterWorkload};
+use step::sim::cluster::{
+    ClusterConfig, ClusterSim, ClusterWorkload, GpuProfile, MigrationPolicy,
+};
 use step::sim::des::{DesEngine, SimConfig};
 use step::sim::profiles::{BenchId, ModelId};
 use step::sim::router::RouterKind;
@@ -495,6 +497,166 @@ fn prop_cluster_router_invariants() {
             "every completion is attributed to exactly one GPU"
         );
         assert!(r.makespan_s >= 0.0 && r.makespan_s.is_finite());
+    });
+}
+
+#[test]
+fn prop_cluster_migration_invariants() {
+    // Across random heterogeneous pools and migration policies: no
+    // trace is lost or duplicated across migrations (every outcome's
+    // terminal-trace accounting stays within its budget and outcomes
+    // are unique by rid), migrated requests still complete exactly
+    // once (completed == placed, shed requests never complete), the
+    // Never policy performs no migration, and per-GPU outstanding can
+    // exceed the admission quota only by emergency relocations.
+    let gp = GenParams::default_d64();
+    let scorer = proj_scorer(&gp);
+    use step::coordinator::method::Method;
+    let policies = [
+        MigrationPolicy::Never,
+        MigrationPolicy::OnShed,
+        MigrationPolicy::OnPressure { ratio: 1.5 },
+        MigrationPolicy::OnPressure { ratio: 3.0 },
+    ];
+    forall("cluster-migration-invariants", 10, |rng| {
+        let gpus = 2 + rng.below(3);
+        let policy = policies[rng.below(4)];
+        let n_requests = 4 + rng.below(5);
+        let n_traces = 2 + rng.below(3);
+        let mut cfg = ClusterConfig::new(
+            gpus,
+            ModelId::Phi4_14B,
+            BenchId::Hmmt2425,
+            Method::Step,
+            n_traces,
+            ClusterWorkload::Closed(ClosedLoopSpec::skewed(
+                2 + rng.below(4),
+                5.0 + rng.f64() * 30.0,
+                n_requests,
+                rng.f64(),
+            )),
+        );
+        cfg.seed = rng.next_u64();
+        cfg.mem_util = 0.45 + 0.1 * rng.below(3) as f64;
+        cfg.migration = policy;
+        // Random heterogeneous fleet: mixed sizes and speeds.
+        cfg.gpu_profiles = (0..gpus)
+            .map(|_| GpuProfile {
+                mem_util: 0.4 + 0.1 * rng.below(6) as f64,
+                block_size: 16,
+                timing_scale: 1.0 + rng.f64() * 2.0,
+            })
+            .collect();
+        cfg.admission.max_outstanding_per_gpu = 1 + rng.below(2);
+        cfg.admission.queue_cap = rng.below(2);
+        cfg.step_threads = 1 + rng.below(4);
+        let gen = TraceGen::new(cfg.model, cfg.bench, gp.clone(), rng.next_u64());
+        let r = ClusterSim::new(&cfg, &gen, &scorer).run();
+
+        assert_eq!(r.counters.offered, n_requests as u64);
+        assert_eq!(r.counters.offered, r.counters.placed + r.counters.shed);
+        assert_eq!(r.counters.completed, r.counters.placed, "exactly-once completion");
+        assert_eq!(r.outcomes.len() as u64, r.counters.completed);
+        assert!(r.counters.migrated >= r.counters.migration_saved);
+        if policy == MigrationPolicy::Never {
+            assert_eq!(r.counters.migrated, 0, "Never must not migrate");
+            assert_eq!(r.counters.migration_recompute_tokens, 0);
+        }
+        if r.counters.migrated > 0 {
+            assert!(
+                r.counters.migration_recompute_tokens > 0,
+                "moved KV is recomputed, not teleported"
+            );
+        }
+        // Outcomes unique by rid; shed requests never complete; every
+        // request's trace accounting within its N budget (nothing lost
+        // or duplicated across hops).
+        for w in r.outcomes.windows(2) {
+            assert!(w[0].rid < w[1].rid, "outcomes sorted and unique by rid");
+        }
+        for rid in &r.shed_rids {
+            assert!(r.outcomes.iter().all(|o| o.rid != *rid));
+        }
+        for o in &r.outcomes {
+            assert!(o.n_finished + o.n_pruned <= n_traces, "trace conservation");
+            assert!(o.latency_s > 0.0 && o.latency_s.is_finite());
+        }
+        // Quota: exact under Never; relocations may exceed it, but
+        // never by more than the number of migrations that happened.
+        let quota = cfg.admission.max_outstanding_per_gpu;
+        let slack = if policy == MigrationPolicy::Never {
+            0
+        } else {
+            r.counters.migrated as usize
+        };
+        for &peak in &r.per_gpu_peak_outstanding {
+            assert!(
+                peak <= quota + slack,
+                "peak {peak} exceeds quota {quota} + migration slack {slack}"
+            );
+        }
+        assert_eq!(r.per_gpu_requests.iter().sum::<usize>(), r.outcomes.len());
+
+        // Determinism under migration: a rerun reproduces the run.
+        let r2 = ClusterSim::new(&cfg, &gen, &scorer).run();
+        assert_eq!(r.counters.report(), r2.counters.report());
+        assert_eq!(r.makespan_s, r2.makespan_s);
+    });
+}
+
+#[test]
+fn prop_migration_never_is_byte_identical_to_uniform_default() {
+    // `MigrationPolicy::Never` + an explicit uniform profile list must
+    // be byte-identical to the plain (profile-free, migration-free)
+    // cluster — i.e. today's output: the heterogeneity/migration
+    // plumbing is provably inert when disabled.
+    let gp = GenParams::default_d64();
+    let scorer = proj_scorer(&gp);
+    use step::coordinator::method::Method;
+    forall("migration-never-byte-identical", 6, |rng| {
+        let gpus = 1 + rng.below(3);
+        let n_requests = 3 + rng.below(4);
+        let mut plain = ClusterConfig::new(
+            gpus,
+            ModelId::Qwen3_4B,
+            BenchId::GpqaDiamond,
+            if rng.bernoulli(0.5) { Method::Step } else { Method::Sc },
+            2 + rng.below(3),
+            ClusterWorkload::Closed(ClosedLoopSpec::skewed(
+                1 + rng.below(3),
+                10.0 + rng.f64() * 30.0,
+                n_requests,
+                rng.f64(),
+            )),
+        );
+        plain.seed = rng.next_u64();
+        plain.mem_util = 0.5 + 0.1 * rng.below(5) as f64;
+        plain.admission.max_outstanding_per_gpu = 1 + rng.below(3);
+        plain.admission.queue_cap = rng.below(3);
+        let mut uniform = plain.clone();
+        uniform.migration = MigrationPolicy::Never;
+        uniform.gpu_profiles = vec![
+            GpuProfile {
+                mem_util: plain.mem_util,
+                block_size: plain.block_size,
+                timing_scale: 1.0,
+            };
+            gpus
+        ];
+        let gen = TraceGen::new(plain.model, plain.bench, gp.clone(), rng.next_u64());
+        let a = ClusterSim::new(&plain, &gen, &scorer).run();
+        let b = ClusterSim::new(&uniform, &gen, &scorer).run();
+        assert_eq!(a.makespan_s, b.makespan_s);
+        assert_eq!(a.counters.report(), b.counters.report());
+        assert_eq!(a.shed_rids, b.shed_rids);
+        assert_eq!(a.outcomes.len(), b.outcomes.len());
+        for (x, y) in a.outcomes.iter().zip(&b.outcomes) {
+            assert_eq!(x.rid, y.rid);
+            assert_eq!(x.latency_s, y.latency_s);
+            assert_eq!(x.ttfv_s, y.ttfv_s);
+            assert_eq!(x.gen_tokens, y.gen_tokens);
+            assert_eq!(x.chosen, y.chosen);
+        }
     });
 }
 
