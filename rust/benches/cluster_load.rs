@@ -12,7 +12,14 @@
 //! `migrate=never` while staying byte-identical across `step_threads`
 //! — work is preserved, not thrown away. Records the
 //! serial-vs-parallel *stepping* wall-clock and speedup alongside the
-//! cell-sharding numbers, plus the migration gate ratios. Writes
+//! cell-sharding numbers, plus the migration gate ratios.
+//!
+//! A fleet-scale grid then runs STEP under the two-stage `kv-sharded`
+//! router at R in {4, 64, 256, 1024}, recording scheduler events/sec
+//! and the `step_threads` scaling curve per fleet size, asserting each
+//! cell byte-identical across step-thread counts, and asserting the
+//! sharded router reproduces the flat kv-pressure placements
+//! byte-for-byte at small R (one shard). Writes
 //! `results/BENCH_cluster.json` (to `$STEP_RESULTS_DIR` when set).
 //!
 //! Runs self-contained on the built-in generator defaults (no artifacts
@@ -20,10 +27,11 @@
 
 use std::time::Instant;
 
+use step::coordinator::method::Method;
 use step::harness::cells::projection_scorer;
 use step::harness::table6::{
-    attach_migration_grid, cells_fingerprint, metrics_json, run_grids, run_migration_grid,
-    ClusterOpts,
+    attach_migration_grid, cells_fingerprint, metrics_json, run_cell, run_grids,
+    run_migration_grid, ClusterOpts,
 };
 use step::harness::write_results;
 use step::sim::cluster::{GpuProfile, MigrationPolicy};
@@ -203,6 +211,84 @@ fn main() {
         println!("  WARNING: on-shed goodput below never at this load");
     }
 
+    // ---- fleet-scale grid: STEP under the two-stage kv-sharded router
+    // at R in {4, 64, 256, 1024}. The closed-loop population scales
+    // with the fleet so every GPU sees work, while per-request cost
+    // stays small (N=4 traces, modest pools) so the R=1024 cell
+    // finishes in seconds. Each cell runs serially stepped (the
+    // events/sec baseline) and again with parallel engine stepping,
+    // asserting byte-identity and recording the scaling curve.
+    let fleet_opts = |gpus: usize| ClusterOpts {
+        gpus,
+        model: ModelId::Phi4_14B,
+        bench: BenchId::Hmmt2425,
+        n_requests: 2 * gpus,
+        clients: gpus,
+        think_s: 20.0,
+        heavy_frac: 0.5,
+        n_traces: 4,
+        mem_util: 0.4,
+        max_outstanding: 2,
+        router: RouterKind::KvPressureSharded,
+        seed: 7,
+        threads: 1,
+        ..ClusterOpts::default()
+    };
+    let mut fleet_rows: Vec<Json> = Vec::new();
+    for &gpus in &[4usize, 64, 256, 1024] {
+        let o = fleet_opts(gpus);
+        let label = format!("R{gpus}");
+        let t = Instant::now();
+        let cell = run_cell(Method::Step, o.router, &label, &gp, &scorer, &o);
+        let wall_s = t.elapsed().as_secs_f64().max(1e-9);
+        let events_per_sec = cell.events as f64 / wall_s;
+
+        let stepped_opts = ClusterOpts { step_threads: threads, ..o.clone() };
+        let t = Instant::now();
+        let stepped =
+            run_cell(Method::Step, stepped_opts.router, &label, &gp, &scorer, &stepped_opts);
+        let step_wall_s = t.elapsed().as_secs_f64().max(1e-9);
+        let step_events_per_sec = stepped.events as f64 / step_wall_s;
+        let fleet_speedup = wall_s / step_wall_s;
+        let identical = cells_fingerprint(std::slice::from_ref(&cell))
+            == cells_fingerprint(std::slice::from_ref(&stepped));
+        assert!(
+            identical,
+            "fleet cell R={gpus} must be byte-identical across step_threads"
+        );
+        println!(
+            "  fleet R={gpus:>4}: {} events in {wall_s:.2}s = {events_per_sec:.0} ev/s \
+             serial; {step_wall_s:.2}s with {threads} step threads ({fleet_speedup:.2}x)",
+            cell.events
+        );
+        fleet_rows.push(Json::obj(vec![
+            ("gpus", Json::Num(gpus as f64)),
+            ("requests", Json::Num(o.n_requests as f64)),
+            ("events", Json::Num(cell.events as f64)),
+            ("wall_s", Json::Num(wall_s)),
+            ("events_per_sec", Json::Num(events_per_sec)),
+            ("step_wall_s", Json::Num(step_wall_s)),
+            ("step_events_per_sec", Json::Num(step_events_per_sec)),
+            ("step_speedup", Json::Num(fleet_speedup)),
+            ("identical_across_step_threads", Json::Bool(identical)),
+        ]));
+    }
+
+    // Sharded-vs-flat identity at small R: auto shard size covers the
+    // whole 4-GPU fleet, so the two-stage router must reproduce the
+    // flat kv-pressure placements byte-for-byte.
+    let small = fleet_opts(4);
+    let flat = ClusterOpts { router: RouterKind::KvPressure, ..small.clone() };
+    let sharded_cell = run_cell(Method::Step, small.router, "small", &gp, &scorer, &small);
+    let flat_cell = run_cell(Method::Step, flat.router, "small", &gp, &scorer, &flat);
+    let shard_flat_identical = cells_fingerprint(std::slice::from_ref(&sharded_cell))
+        == cells_fingerprint(std::slice::from_ref(&flat_cell));
+    assert!(
+        shard_flat_identical,
+        "kv-sharded must reproduce flat kv-pressure placements at R=4 (one shard)"
+    );
+    println!("  fleet: kv-sharded == kv-pressure at R=4 (single-shard identity)");
+
     let mut report = metrics_json(&opts, &m_serial, &r_serial);
     attach_migration_grid(&mut report, &mig_opts, &migration);
     if let Json::Obj(map) = &mut report {
@@ -221,6 +307,11 @@ fn main() {
         map.insert("migration_shed_ratio".to_string(), Json::Num(shed_ratio));
         map.insert("migration_goodput_ratio".to_string(), Json::Num(goodput_ratio));
         map.insert("migration_p99_ratio".to_string(), Json::Num(p99_ratio));
+        // Fleet-scale events/sec grid (R in {4, 64, 256, 1024}) plus
+        // the small-R sharded-vs-flat placement-identity witness.
+        map.insert("fleet".to_string(), Json::Arr(fleet_rows));
+        map.insert("fleet_threads".to_string(), Json::Num(threads as f64));
+        map.insert("shard_flat_identical".to_string(), Json::Bool(shard_flat_identical));
     }
     let path = write_results("BENCH_cluster", &report).expect("writing BENCH_cluster.json");
     println!("wrote {path:?}");

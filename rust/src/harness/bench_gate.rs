@@ -19,7 +19,12 @@
 //!    * serving: STEP p99 < SC p99, byte-identity across threads;
 //!    * cluster: kv-pressure p99 < round-robin p99, byte-identity
 //!      across `--threads` *and* `--step-threads`, and (when the
-//!      migration grid is present) on-shed shed-rate ≤ never.
+//!      migration grid is present) on-shed shed-rate ≤ never;
+//!    * fleet (when the cluster artifact carries the fleet-scale
+//!      grid): every R's cell byte-identical across step threads, the
+//!      largest fleet's events/sec positive and its wall clock under
+//!      the cap, and the sharded router's placements byte-identical
+//!      to the flat kv-pressure router at small R.
 //!
 //! The verdict is printed as a markdown table, appended to
 //! `$GITHUB_STEP_SUMMARY` when that file is set (the job-summary
@@ -255,8 +260,51 @@ fn evaluate(pairs: &[(Json, Json)]) -> Vec<GateRow> {
             |on_shed, never| on_shed <= never,
         ));
     }
+    // Likewise the fleet-scale grid: gates apply only when present.
+    if let Some(fleet) = cluster.get("fleet").as_arr() {
+        let all_identical = fleet.iter().fold(Some(true), |acc, r| {
+            match (acc, r.get("identical_across_step_threads").as_bool()) {
+                (Some(a), Some(b)) => Some(a && b),
+                _ => None,
+            }
+        });
+        rows.push(flag_row(
+            ARTIFACTS[2],
+            "fleet rows identical across step threads",
+            all_identical,
+        ));
+        let largest = fleet.iter().max_by(|a, b| {
+            let ga = a.get("gpus").as_f64().unwrap_or(0.0);
+            let gb = b.get("gpus").as_f64().unwrap_or(0.0);
+            ga.partial_cmp(&gb).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        rows.push(compare_row(
+            ARTIFACTS[2],
+            "largest-fleet events/sec > 0",
+            largest.and_then(|r| r.get("events_per_sec").as_f64()),
+            Some(0.0),
+            |eps, zero| eps > zero,
+        ));
+        rows.push(compare_row(
+            ARTIFACTS[2],
+            "largest-fleet wall clock <= 60s",
+            largest.and_then(|r| r.get("wall_s").as_f64()),
+            Some(FLEET_WALL_CAP_S),
+            |wall, cap| wall <= cap,
+        ));
+        rows.push(flag_row(
+            ARTIFACTS[2],
+            "kv-sharded == kv-pressure at small R",
+            bool_at(cluster, &["shard_flat_identical"]),
+        ));
+    }
     rows
 }
+
+/// Wall-clock cap on the largest fleet cell (R=1024). The target is
+/// single-digit seconds; the cap leaves headroom for slow CI machines
+/// while still catching an order-of-magnitude regression.
+const FLEET_WALL_CAP_S: f64 = 60.0;
 
 /// Render the verdict as a GitHub-flavored markdown table.
 fn markdown(rows: &[GateRow]) -> String {
@@ -349,6 +397,15 @@ mod tests {
         ])
     }
 
+    fn fleet_row(gpus: usize, eps: f64, wall_s: f64, identical: bool) -> Json {
+        Json::obj(vec![
+            ("gpus", Json::Num(gpus as f64)),
+            ("events_per_sec", Json::Num(eps)),
+            ("wall_s", Json::Num(wall_s)),
+            ("identical_across_step_threads", Json::Bool(identical)),
+        ])
+    }
+
     fn cluster(kv: f64, rr: f64, shed_never: f64, shed_on_shed: f64) -> Json {
         Json::obj(vec![
             (
@@ -365,6 +422,14 @@ mod tests {
                     mig_row("on-shed", shed_on_shed),
                 ]),
             ),
+            (
+                "fleet",
+                Json::Arr(vec![
+                    fleet_row(4, 800.0, 0.2, true),
+                    fleet_row(1024, 5000.0, 4.0, true),
+                ]),
+            ),
+            ("shard_flat_identical", Json::Bool(true)),
             ("identical_across_threads", Json::Bool(true)),
             ("identical_across_step_threads", Json::Bool(true)),
         ])
@@ -417,6 +482,46 @@ mod tests {
         let speedup = rows.iter().find(|r| r.check.contains("speedup")).unwrap();
         assert!(!speedup.ok);
         assert_eq!(speedup.value, "missing/null");
+    }
+
+    #[test]
+    fn healthy_artifacts_exercise_the_fleet_gates() {
+        let rows = evaluate(&pairs(
+            grid(3.2, true),
+            serving(100.0, 200.0),
+            cluster(50.0, 80.0, 0.4, 0.1),
+        ));
+        assert!(rows.iter().any(|r| r.check.contains("fleet rows identical")));
+        assert!(rows.iter().any(|r| r.check.contains("events/sec")));
+        assert!(rows.iter().any(|r| r.check.contains("kv-sharded")));
+    }
+
+    #[test]
+    fn fleet_gate_checks_identity_events_and_wall_clock() {
+        let mut c = cluster(1.0, 2.0, 0.2, 0.1);
+        if let Json::Obj(map) = &mut c {
+            // The 1024-row is the largest fleet: blow its wall clock,
+            // break a row's step-thread identity, and break the
+            // small-R sharded-vs-flat witness.
+            map.insert(
+                "fleet".to_string(),
+                Json::Arr(vec![
+                    fleet_row(4, 800.0, 0.2, true),
+                    fleet_row(1024, 900.0, 120.0, false),
+                ]),
+            );
+            map.insert("shard_flat_identical".to_string(), Json::Bool(false));
+        }
+        let rows = evaluate(&pairs(grid(2.0, true), serving(1.0, 2.0), c));
+        let failed: Vec<&str> =
+            rows.iter().filter(|r| !r.ok).map(|r| r.check.as_str()).collect();
+        assert!(failed.iter().any(|ch| ch.contains("fleet rows identical")), "{failed:?}");
+        assert!(failed.iter().any(|ch| ch.contains("wall clock")), "{failed:?}");
+        assert!(failed.iter().any(|ch| ch.contains("kv-sharded")), "{failed:?}");
+        assert!(
+            !failed.iter().any(|ch| ch.contains("events/sec")),
+            "positive events/sec still passes: {failed:?}"
+        );
     }
 
     #[test]

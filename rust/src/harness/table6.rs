@@ -79,6 +79,9 @@ pub struct ClusterOpts {
     pub quota_frac: Option<f64>,
     /// Placement policy for the methods grid.
     pub router: RouterKind,
+    /// GPU-shard size of the two-stage `kv-sharded` router (0 = auto,
+    /// ≈√R with a floor). Ignored by the flat routers.
+    pub shard_size: usize,
     /// Bound on the cluster admission queue.
     pub queue_cap: usize,
     /// Per-GPU cap on outstanding requests.
@@ -119,6 +122,7 @@ impl Default for ClusterOpts {
             mem_util: 0.9,
             quota_frac: None,
             router: RouterKind::KvPressure,
+            shard_size: 0,
             queue_cap: 64,
             max_outstanding: 8,
             slo_s: None,
@@ -179,6 +183,7 @@ impl ClusterOpts {
         c.seed = self.seed;
         c.quota_frac = self.quota_frac;
         c.router = router;
+        c.shard_size = self.shard_size;
         c.admission = AdmissionConfig {
             queue_cap: self.queue_cap,
             max_outstanding_per_gpu: self.max_outstanding.max(1),
@@ -229,6 +234,9 @@ pub struct ClusterCell {
     pub preemptions: u64,
     /// Total pruned traces across GPUs.
     pub pruned: u64,
+    /// Total scheduler events processed across GPUs (the events/sec
+    /// numerator of the fleet-scale bench).
+    pub events: u64,
     /// Requests shed by admission.
     pub shed: u64,
     /// Requests relocated across GPUs by the migration policy.
@@ -270,6 +278,7 @@ impl ClusterCell {
             tok_k: tok / n / 1000.0,
             preemptions: r.engine_counters.preemptions,
             pruned: r.engine_counters.pruned,
+            events: r.engine_counters.events,
             shed: r.counters.shed,
             migrated: r.counters.migrated,
             migration_saved: r.counters.migration_saved,
@@ -298,6 +307,7 @@ impl ClusterCell {
             ("tok_k", Json::Num(self.tok_k)),
             ("preemptions", Json::Num(self.preemptions as f64)),
             ("pruned", Json::Num(self.pruned as f64)),
+            ("events", Json::Num(self.events as f64)),
             ("shed", Json::Num(self.shed as f64)),
             ("migrated", Json::Num(self.migrated as f64)),
             ("migration_saved", Json::Num(self.migration_saved as f64)),
@@ -418,6 +428,7 @@ pub fn config_json(opts: &ClusterOpts) -> Json {
         ("mem_util", Json::Num(opts.mem_util)),
         ("quota_frac", opt_num(opts.quota_frac)),
         ("router", Json::Str(opts.router.name().to_string())),
+        ("shard_size", Json::Num(opts.shard_size as f64)),
         ("queue_cap", Json::Num(opts.queue_cap as f64)),
         ("max_outstanding", Json::Num(opts.max_outstanding as f64)),
         ("slo_s", opt_num(opts.slo_s)),

@@ -19,15 +19,23 @@ use super::{KvCacheManager, SeqId};
 /// Owner (request / tenant) identifier within a [`SharedKvPool`].
 pub type OwnerId = u32;
 
+/// Sentinel in the dense `owner_of` arena: this sequence slot has no
+/// live owner. Keeps the arena a flat `Vec<u32>` (half the width and
+/// none of the niche-check branches of `Vec<Option<OwnerId>>`), which
+/// matters when a cluster run steps 1024 engines' pools.
+const NO_OWNER: OwnerId = OwnerId::MAX;
+
 /// A [`KvCacheManager`] with per-owner block accounting and optional
-/// per-owner quotas.
+/// per-owner quotas. All accounting lives in dense index-keyed arenas
+/// (`u32` entries, sequence- and owner-id keyed) — no per-pool maps.
 #[derive(Debug, Clone)]
 pub struct SharedKvPool {
     mgr: KvCacheManager,
-    /// Sequence id -> owning request (dense, like the manager's tables).
-    owner_of: Vec<Option<OwnerId>>,
+    /// Sequence id -> owning request (dense, like the manager's tables;
+    /// [`NO_OWNER`] marks free slots).
+    owner_of: Vec<OwnerId>,
     /// Blocks currently held per owner (dense by owner id).
-    used_by: Vec<usize>,
+    used_by: Vec<u32>,
     /// Per-owner block cap; `None` = pool-bound only.
     quota_blocks: Option<usize>,
 }
@@ -83,7 +91,7 @@ impl SharedKvPool {
     /// Blocks currently held by `owner`.
     #[inline]
     pub fn owner_used(&self, owner: OwnerId) -> usize {
-        self.used_by.get(owner as usize).copied().unwrap_or(0)
+        self.used_by.get(owner as usize).copied().unwrap_or(0) as usize
     }
 
     /// Blocks `owner` may still allocate before hitting its quota;
@@ -98,7 +106,7 @@ impl SharedKvPool {
 
     /// The owner a live sequence is registered to.
     pub fn owner_of(&self, seq: SeqId) -> Option<OwnerId> {
-        self.owner_of.get(seq as usize).copied().flatten()
+        self.owner_of.get(seq as usize).copied().filter(|&o| o != NO_OWNER)
     }
 
     /// Resident tokens of a sequence (0 if unknown).
@@ -137,18 +145,19 @@ impl SharedKvPool {
         if !self.can_admit(owner, need) {
             return false;
         }
+        debug_assert!(owner != NO_OWNER, "owner id collides with the arena sentinel");
         let ok = self.mgr.allocate_seq(seq, tokens);
         debug_assert!(ok, "can_admit guaranteed the allocation");
         let idx = seq as usize;
         if self.owner_of.len() <= idx {
-            self.owner_of.resize(idx + 1, None);
+            self.owner_of.resize(idx + 1, NO_OWNER);
         }
-        self.owner_of[idx] = Some(owner);
+        self.owner_of[idx] = owner;
         let oidx = owner as usize;
         if self.used_by.len() <= oidx {
             self.used_by.resize(oidx + 1, 0);
         }
-        self.used_by[oidx] += need;
+        self.used_by[oidx] += need as u32;
         true
     }
 
@@ -163,16 +172,17 @@ impl SharedKvPool {
         }
         let ok = self.mgr.append_tokens(seq, n);
         debug_assert!(ok, "can_admit guaranteed the append");
-        self.used_by[owner as usize] += need;
+        self.used_by[owner as usize] += need as u32;
         true
     }
 
     /// Release a sequence entirely, crediting its blocks back to the
     /// owner. Returns the number of blocks released.
     pub fn free_seq(&mut self, seq: SeqId) -> usize {
-        let owner = self.owner_of[seq as usize].take().expect("freeing unknown seq");
+        let owner = std::mem::replace(&mut self.owner_of[seq as usize], NO_OWNER);
+        assert!(owner != NO_OWNER, "freeing unknown seq");
         let freed = self.mgr.free_seq(seq);
-        self.used_by[owner as usize] -= freed;
+        self.used_by[owner as usize] -= freed as u32;
         freed
     }
 
@@ -180,20 +190,20 @@ impl SharedKvPool {
     /// manager's block tables.
     pub fn check_invariants(&self) {
         self.mgr.check_invariants();
-        let charged: usize = self.used_by.iter().sum();
+        let charged: usize = self.used_by.iter().map(|&u| u as usize).sum();
         assert_eq!(charged, self.mgr.used_blocks(), "owner charge leak");
-        let mut recomputed = vec![0usize; self.used_by.len()];
-        for (seq, owner) in self.owner_of.iter().enumerate() {
-            if let Some(o) = owner {
+        let mut recomputed = vec![0u32; self.used_by.len()];
+        for (seq, &owner) in self.owner_of.iter().enumerate() {
+            if owner != NO_OWNER {
                 let table =
                     self.mgr.block_table(seq as SeqId).expect("owned seq has a table");
-                recomputed[*o as usize] += table.blocks.len();
+                recomputed[owner as usize] += table.blocks.len() as u32;
             }
         }
         assert_eq!(recomputed, self.used_by, "per-owner accounting drift");
         if let Some(q) = self.quota_blocks {
             for (o, &u) in self.used_by.iter().enumerate() {
-                assert!(u <= q, "owner {o} over quota: {u} > {q}");
+                assert!(u as usize <= q, "owner {o} over quota: {u} > {q}");
             }
         }
     }

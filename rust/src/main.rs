@@ -73,9 +73,12 @@ CLUSTER-SIM OPTIONS (plus the serve-sim options above):
     --think S            mean closed-loop think time, seconds (default 60)
     --heavy-frac F       fraction of clients pinned to the longest-trace
                          questions (default 0.5)
-    --router P           round-robin | least-outstanding | kv-pressure
-                         (default kv-pressure; the routers grid always
-                         compares all three under STEP)
+    --router P           round-robin | least-outstanding | kv-pressure |
+                         kv-sharded (default kv-pressure; the routers
+                         grid always compares all four under STEP)
+    --shard-size N       GPUs per shard of the kv-sharded router
+                         (default 0 = auto, ~sqrt(R) with a floor of 8;
+                         ignored by the flat routers)
     --queue-cap N        cluster admission-queue bound (default 64)
     --max-outstanding N  per-GPU cap on live requests (default 8)
     --slo S              SLO-aware early-reject budget, seconds
@@ -224,6 +227,10 @@ fn parse_cluster_opts(args: &[String]) -> Result<ClusterOpts> {
                 let name = need_val(args, i)?;
                 opts.router = RouterKind::parse(name)
                     .ok_or_else(|| anyhow::anyhow!("unknown router '{name}'"))?;
+                i += 2;
+            }
+            "--shard-size" => {
+                opts.shard_size = need_val(args, i)?.parse()?;
                 i += 2;
             }
             "--queue-cap" => {

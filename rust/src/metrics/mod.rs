@@ -99,6 +99,11 @@ pub struct EngineCounters {
     pub early_stopped: u64,
     /// Step-scorer invocations.
     pub step_scores: u64,
+    /// Scheduler events processed: every `step_event` call that
+    /// advanced engine state (a decode interval, a memory event, or a
+    /// resume/drop pass). The denominator of the cluster bench's
+    /// events/sec throughput metric.
+    pub events: u64,
 }
 
 impl EngineCounters {
@@ -113,13 +118,14 @@ impl EngineCounters {
         self.pruned += other.pruned;
         self.early_stopped += other.early_stopped;
         self.step_scores += other.step_scores;
+        self.events += other.events;
     }
 
     /// One-line `key=value` report of every counter.
     pub fn report(&self) -> String {
         format!(
             "requests={} tokens={} iters={} preemptions={} resumes={} \
-             pruned={} early_stopped={} scores={}",
+             pruned={} early_stopped={} scores={} events={}",
             self.requests,
             self.generated_tokens,
             self.decode_iterations,
@@ -128,6 +134,7 @@ impl EngineCounters {
             self.pruned,
             self.early_stopped,
             self.step_scores,
+            self.events,
         )
     }
 }

@@ -81,7 +81,9 @@ use crate::coordinator::scorer::StepScorer;
 use crate::metrics::{ClusterCounters, EngineCounters, LatencySketch};
 use crate::sim::des::ScoreAgg;
 use crate::sim::profiles::{BenchId, ModelId};
-use crate::sim::router::{GpuView, RouteRequest, RouterKind, RouterPolicy};
+use crate::sim::router::{
+    kv_pressure_key, shard_base_key, GpuView, RouteRequest, RouterKind, RouterPolicy,
+};
 use crate::sim::serve::{MigratedRequest, RequestOutcome, ServeEngine, ServeSimConfig};
 use crate::sim::tracegen::TraceGen;
 use crate::sim::workload::{Arrival, ClosedLoopClients, ClosedLoopSpec, WorkloadSpec};
@@ -310,6 +312,12 @@ pub struct ClusterConfig {
     /// Cross-GPU trace-migration policy ([`MigrationPolicy::Never`] by
     /// default — byte-identical to the migration-free cluster).
     pub migration: MigrationPolicy,
+    /// GPU-shard size of the two-stage [`RouterKind::KvPressureSharded`]
+    /// router (stage one picks a shard by cached aggregate, stage two
+    /// scans only that shard). `0` (default) = automatic: ≈√R with a
+    /// floor ([`crate::sim::router::auto_shard_size`]). Ignored by the
+    /// flat routers.
+    pub shard_size: usize,
     /// Worker threads advancing the per-GPU engines *in parallel*
     /// between interaction points (0 = all cores, 1 = serial). The
     /// engines share no state between arrivals and completions are
@@ -348,7 +356,19 @@ impl ClusterConfig {
             admission: AdmissionConfig::default(),
             gpu_profiles: Vec::new(),
             migration: MigrationPolicy::Never,
+            shard_size: 0,
             step_threads: 1,
+        }
+    }
+
+    /// The effective shard size of the two-stage router:
+    /// [`shard_size`](Self::shard_size), or the ≈√R automatic choice
+    /// when it is 0.
+    pub fn resolved_shard_size(&self) -> usize {
+        if self.shard_size > 0 {
+            self.shard_size
+        } else {
+            crate::sim::router::auto_shard_size(self.gpus)
         }
     }
 
@@ -510,6 +530,22 @@ struct FrontDoor {
     migrations_buf: Vec<MigratedRequest>,
     /// Scratch for router views (reused across placements).
     views_buf: Vec<GpuView>,
+    /// Cached per-GPU router views, dense by GPU id. An entry is
+    /// rebuilt only when its engine's state-change
+    /// [`version`](ServeEngine::version) moved since the last
+    /// placement, so idle engines cost one u64 compare instead of a
+    /// survivor-demand fold per placement.
+    view_cache: Vec<GpuView>,
+    /// Engine version each cached view reflects (`u64::MAX` = never
+    /// built, forcing the first refresh).
+    view_version: Vec<u64>,
+    /// Staleness flags for `shard_agg`, set whenever a member view is
+    /// rebuilt (two-stage router only).
+    shard_dirty: Vec<bool>,
+    /// Cached stage-one aggregate per shard: the minimal
+    /// request-independent base key over the shard's eligible
+    /// (below-quota) members; `None` = no eligible member.
+    shard_agg: Vec<Option<(bool, f64)>>,
     /// Lazy min-heap over busy engines' `(clock bits, gpu)` for the
     /// drain phase's laggard pick — O(log R) per event instead of the
     /// O(R) argmin fold. Entries go stale as clocks move; pops validate
@@ -588,6 +624,7 @@ impl<'a> ClusterSim<'a> {
             .map(|ecfg| ServeEngine::new(ecfg, self.gen, self.scorer))
             .collect();
         let nq = self.gen.bench.n_questions;
+        let n_shards = cfg.gpus.div_ceil(cfg.resolved_shard_size());
 
         let mut fd = FrontDoor {
             meta: Vec::new(),
@@ -595,7 +632,7 @@ impl<'a> ClusterSim<'a> {
             seq: 0,
             queue: VecDeque::new(),
             clients: None,
-            router: cfg.router.build(),
+            router: cfg.router.build_with(cfg.resolved_shard_size()),
             counters: ClusterCounters::default(),
             shed_rids: Vec::new(),
             per_gpu_peak_outstanding: vec![0; cfg.gpus],
@@ -605,6 +642,24 @@ impl<'a> ClusterSim<'a> {
             done_buf: Vec::new(),
             migrations_buf: Vec::new(),
             views_buf: Vec::new(),
+            // Placeholder views: `view_version` starts at u64::MAX while
+            // engine versions start at 0, so every entry is rebuilt
+            // before its first read.
+            view_cache: (0..cfg.gpus)
+                .map(|g| GpuView {
+                    gpu: g,
+                    outstanding: 0,
+                    live_traces: 0,
+                    free_blocks: 0,
+                    pool_blocks: 0,
+                    block_size: 1,
+                    timing_scale: 1.0,
+                    survivor_demand_blocks: 0.0,
+                })
+                .collect(),
+            view_version: vec![u64::MAX; cfg.gpus],
+            shard_dirty: vec![true; n_shards],
+            shard_agg: vec![None; n_shards],
             lag_heap: BinaryHeap::new(),
             lag_live: false,
         };
@@ -1060,35 +1115,126 @@ impl<'a> ClusterSim<'a> {
         }
     }
 
+    /// Refresh the cached per-GPU router views: only engines whose
+    /// state-change [`version`](ServeEngine::version) moved since the
+    /// last placement rebuild their view (and dirty their shard's
+    /// stage-one aggregate). An unchanged version guarantees an
+    /// identical view, so the cached placement inputs are byte-equal to
+    /// a full rebuild.
+    fn refresh_views(&self, engines: &[ServeEngine<'_>], fd: &mut FrontDoor) {
+        let shard_size = self.cfg.resolved_shard_size();
+        for (g, e) in engines.iter().enumerate() {
+            let v = e.version();
+            if fd.view_version[g] == v {
+                continue;
+            }
+            fd.view_version[g] = v;
+            fd.shard_dirty[g / shard_size] = true;
+            let p = self.cfg.profile_for(g);
+            fd.view_cache[g] = GpuView {
+                gpu: g,
+                outstanding: e.outstanding(),
+                live_traces: e.live_traces(),
+                free_blocks: e.free_blocks(),
+                pool_blocks: e.pool_blocks(),
+                block_size: p.block_size,
+                timing_scale: p.timing_scale,
+                survivor_demand_blocks: e.survivor_demand_blocks(),
+            };
+        }
+    }
+
+    /// The incremental two-stage placement behind
+    /// [`RouterKind::KvPressureSharded`]: recompute the stage-one
+    /// aggregates of dirty shards only (O(dirty × shard size)), pick
+    /// the winning shard from the cached minima (O(S)), then run the
+    /// exact within-shard scan (O(shard size)). Byte-identical to the
+    /// O(R) reference [`crate::sim::router::ShardedKvPressure`] over
+    /// the full eligible slice — debug builds assert it on every
+    /// placement. Returns the chosen GPU id.
+    fn place_sharded(&self, fd: &mut FrontDoor, req: &RouteRequest, quota: usize) -> usize {
+        let shard_size = self.cfg.resolved_shard_size();
+        let n_gpus = fd.view_cache.len();
+        for s in 0..fd.shard_agg.len() {
+            if !fd.shard_dirty[s] {
+                continue;
+            }
+            fd.shard_dirty[s] = false;
+            let lo = s * shard_size;
+            let hi = (lo + shard_size).min(n_gpus);
+            let mut agg: Option<(bool, f64)> = None;
+            for v in &fd.view_cache[lo..hi] {
+                if v.outstanding >= quota {
+                    continue;
+                }
+                let key = shard_base_key(v);
+                let better = match agg {
+                    None => true,
+                    Some(bk) => key < bk,
+                };
+                if better {
+                    agg = Some(key);
+                }
+            }
+            fd.shard_agg[s] = agg;
+        }
+        // Stage one: lexicographically smallest (min base key, shard id)
+        // — ascending shard order with a strict < keeps the lower shard
+        // on ties, matching the reference.
+        let mut win: Option<((bool, f64), usize)> = None;
+        for (s, agg) in fd.shard_agg.iter().enumerate() {
+            let Some(key) = *agg else { continue };
+            let better = match win {
+                None => true,
+                Some((bk, _)) => key < bk,
+            };
+            if better {
+                win = Some((key, s));
+            }
+        }
+        let (_, s) = win.expect("place requires an eligible GPU");
+        // Stage two: exact first-minimum kv-pressure scan within the
+        // winning shard, in ascending GPU order (= view order of the
+        // reference's eligible slice).
+        let lo = s * shard_size;
+        let hi = (lo + shard_size).min(n_gpus);
+        let mut best: Option<((bool, f64), usize)> = None;
+        for v in &fd.view_cache[lo..hi] {
+            if v.outstanding >= quota {
+                continue;
+            }
+            let key = kv_pressure_key(req, v);
+            let better = match best {
+                None => true,
+                Some((bk, _)) => key < bk,
+            };
+            if better {
+                best = Some((key, v.gpu));
+            }
+        }
+        let (_, g) = best.expect("the winning shard has an eligible member");
+        #[cfg(debug_assertions)]
+        {
+            let views: Vec<GpuView> = fd
+                .view_cache
+                .iter()
+                .filter(|v| v.outstanding < quota)
+                .copied()
+                .collect();
+            let want = views[fd.router.place(req, &views)].gpu;
+            debug_assert_eq!(
+                g, want,
+                "incremental two-stage placement must match the reference router"
+            );
+        }
+        g
+    }
+
     /// Route a request onto an eligible GPU and submit it there. The
     /// caller guarantees at least one GPU is below quota.
     fn place(&self, engines: &mut [ServeEngine<'_>], fd: &mut FrontDoor, rid: usize) {
         let quota = self.cfg.admission.max_outstanding_per_gpu;
-        // Reused scratch: one view per eligible GPU, each engine's
-        // survivor demand served from its incrementally maintained
-        // router-view aggregates (no per-placement sort or scan).
-        let mut views = std::mem::take(&mut fd.views_buf);
-        views.clear();
-        views.extend(
-            engines
-                .iter()
-                .enumerate()
-                .filter(|(_, e)| e.outstanding() < quota)
-                .map(|(g, e)| {
-                    let p = self.cfg.profile_for(g);
-                    GpuView {
-                        gpu: g,
-                        outstanding: e.outstanding(),
-                        live_traces: e.live_traces(),
-                        free_blocks: e.free_blocks(),
-                        pool_blocks: e.pool_blocks(),
-                        block_size: p.block_size,
-                        timing_scale: p.timing_scale,
-                        survivor_demand_blocks: e.survivor_demand_blocks(),
-                    }
-                }),
-        );
-        debug_assert!(!views.is_empty(), "place requires an eligible GPU");
+        self.refresh_views(engines, fd);
         debug_assert!(
             matches!(fd.meta[rid].disposition, ReqDisposition::Queued),
             "a request is placed at most once and never after a shed"
@@ -1100,9 +1246,20 @@ impl<'a> ClusterSim<'a> {
             n_traces: self.cfg.n_traces,
             expected_tokens: meta.expected_tokens,
         };
-        let g = views[fd.router.place(&req, &views)].gpu;
-        fd.views_buf = views;
         let arr = Arrival { rid, qid: meta.qid, t_arrive: meta.t_arrive };
+        let g = if matches!(self.cfg.router, RouterKind::KvPressureSharded) {
+            self.place_sharded(fd, &req, quota)
+        } else {
+            // Flat routers see the eligible slice of the cached views —
+            // the same values a full rebuild would produce.
+            let mut views = std::mem::take(&mut fd.views_buf);
+            views.clear();
+            views.extend(fd.view_cache.iter().filter(|v| v.outstanding < quota).copied());
+            debug_assert!(!views.is_empty(), "place requires an eligible GPU");
+            let g = views[fd.router.place(&req, &views)].gpu;
+            fd.views_buf = views;
+            g
+        };
         // A lagging busy engine first catches up to the arrival instant
         // (service cannot start before the request exists); idle engines
         // jump inside submit.

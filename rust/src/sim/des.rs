@@ -188,7 +188,8 @@ pub struct Scratch {
     index: sched::EventIndex,
     /// Snapshot of the index's running set for the current event (so
     /// boundary processing can mutate the index while iterating).
-    running: Vec<usize>,
+    /// `u32` trace ids, matching the index's arena layout.
+    running: Vec<u32>,
     /// Next step boundary per trace index (mirror of
     /// `spec.step_ends[st.next_step]`, updated at crossings).
     next_end: Vec<u64>,
@@ -369,7 +370,7 @@ impl<'a> DesEngine<'a> {
                 kv.allocate_seq(traces[i].st.id, q.prompt_tokens);
                 traces[i].st.status = TraceStatus::Running;
                 scratch.index.insert(
-                    i,
+                    i as u32,
                     0,
                     q.prompt_tokens as u64,
                     scratch.next_end[i] - traces[i].st.generated,
@@ -441,7 +442,7 @@ impl<'a> DesEngine<'a> {
             *clock += dt;
             engine_accrue!(wait_q, dt);
             for &i in &scratch.running {
-                let t = &mut traces[i];
+                let t = &mut traces[i as usize];
                 t.st.generated += d;
                 let ok = kv.append_tokens(t.st.id, d as usize);
                 debug_assert!(ok, "memory horizon must guarantee the append");
@@ -451,15 +452,16 @@ impl<'a> DesEngine<'a> {
             // ---- boundary / completion events.
             let mut freed_any = false;
             for &i in &scratch.running {
-                let t = &mut traces[i];
-                if t.st.generated != scratch.next_end[i] {
+                let iu = i as usize;
+                let t = &mut traces[iu];
+                if t.st.generated != scratch.next_end[iu] {
                     continue;
                 }
                 let step_n = t.st.next_step + 1;
                 t.st.next_step += 1;
                 boundaries_crossed += 1;
                 if t.st.generated < t.spec.total_tokens {
-                    scratch.next_end[i] = t.spec.step_ends[t.st.next_step];
+                    scratch.next_end[iu] = t.spec.step_ends[t.st.next_step];
                 }
 
                 if self.needs_scores() {
@@ -477,7 +479,7 @@ impl<'a> DesEngine<'a> {
                 }
 
                 if t.st.generated == t.spec.total_tokens {
-                    sched::settle(&mut t.st, &mut scratch.last_settle[i], *clock);
+                    sched::settle(&mut t.st, &mut scratch.last_settle[iu], *clock);
                     t.st.status = TraceStatus::Finished;
                     t.st.finish_clock = *clock;
                     kv.free_seq(t.st.id);
@@ -489,7 +491,7 @@ impl<'a> DesEngine<'a> {
                     let mut stopped = false;
                     if let (Some(th), Some(wc)) = (conf_threshold, completed_group) {
                         if wc < th {
-                            sched::settle(&mut t.st, &mut scratch.last_settle[i], *clock);
+                            sched::settle(&mut t.st, &mut scratch.last_settle[iu], *clock);
                             t.st.status = TraceStatus::EarlyStopped;
                             t.st.finish_clock = *clock;
                             kv.free_seq(t.st.id);
@@ -499,10 +501,12 @@ impl<'a> DesEngine<'a> {
                         }
                     }
                     if !stopped {
-                        scratch.index.set_boundary(i, scratch.next_end[i] - traces[i].st.generated);
+                        scratch
+                            .index
+                            .set_boundary(i, scratch.next_end[iu] - traces[iu].st.generated);
                     }
                 } else {
-                    scratch.index.set_boundary(i, scratch.next_end[i] - traces[i].st.generated);
+                    scratch.index.set_boundary(i, scratch.next_end[iu] - traces[iu].st.generated);
                 }
             }
 
@@ -532,7 +536,7 @@ impl<'a> DesEngine<'a> {
         _rng: &mut Rng,
         scratch: &mut Scratch,
     ) {
-        let running: &[usize] = &scratch.running;
+        let running: &[u32] = &scratch.running;
         match self.cfg.method {
             Method::Step => {
                 // Algorithm 1: prune argmin score_t, release KV at once.
@@ -541,27 +545,29 @@ impl<'a> DesEngine<'a> {
                     VictimPolicy::LowestScore => sched::lowest_score_victim(
                         running,
                         |_| true,
-                        |i| self.agg_score(&traces[i].st),
+                        |i| self.agg_score(&traces[i as usize].st),
                     )
                     .expect("memory event with empty running set"),
                     VictimPolicy::Random => running[_rng.below(running.len())],
                     VictimPolicy::Youngest => {
-                        sched::youngest_victim(running, |_| true, |i| traces[i].st.generated)
-                            .expect("memory event with empty running set")
+                        sched::youngest_victim(running, |_| true, |i| {
+                            traces[i as usize].st.generated
+                        })
+                        .expect("memory event with empty running set")
                     }
                     VictimPolicy::OracleIncorrect => running
                         .iter()
                         .copied()
-                        .find(|&i| !traces[i].spec.label)
+                        .find(|&i| !traces[i as usize].spec.label)
                         .unwrap_or_else(|| {
                             sched::youngest_victim(running, |_| true, |i| {
-                                traces[i].st.generated
+                                traces[i as usize].st.generated
                             })
                             .unwrap()
                         }),
                 };
-                let t = &mut traces[victim];
-                sched::settle(&mut t.st, &mut scratch.last_settle[victim], *clock);
+                let t = &mut traces[victim as usize];
+                sched::settle(&mut t.st, &mut scratch.last_settle[victim as usize], *clock);
                 t.st.status = TraceStatus::Pruned;
                 t.st.finish_clock = *clock;
                 kv.free_seq(t.st.id);
@@ -570,16 +576,17 @@ impl<'a> DesEngine<'a> {
             _ => {
                 // vLLM preemption: evict the youngest running trace
                 // (cheapest recompute), FIFO resume.
-                let victim =
-                    sched::youngest_victim(running, |_| true, |i| traces[i].st.generated)
-                        .expect("memory event with empty running set");
-                let t = &mut traces[victim];
-                sched::settle(&mut t.st, &mut scratch.last_settle[victim], *clock);
+                let victim = sched::youngest_victim(running, |_| true, |i| {
+                    traces[i as usize].st.generated
+                })
+                .expect("memory event with empty running set");
+                let t = &mut traces[victim as usize];
+                sched::settle(&mut t.st, &mut scratch.last_settle[victim as usize], *clock);
                 t.st.status = TraceStatus::Preempted;
                 t.st.preemptions += 1;
                 kv.free_seq(t.st.id);
                 scratch.index.remove(victim);
-                wait_q.push_back(victim);
+                wait_q.push_back(victim as usize);
             }
         }
     }
@@ -669,7 +676,7 @@ impl<'a> DesEngine<'a> {
         sched::settle(&mut t.st, &mut scratch.last_settle[idx], *clock);
         t.st.status = TraceStatus::Running;
         scratch.index.insert(
-            idx,
+            idx as u32,
             0,
             prefix as u64,
             scratch.next_end[idx] - t.st.generated,
@@ -717,7 +724,7 @@ impl<'a> DesEngine<'a> {
                 t.st.status = TraceStatus::Pruned;
                 t.st.finish_clock = *clock;
                 kv.free_seq(t.st.id);
-                scratch.index.remove(victim);
+                scratch.index.remove(victim as u32);
                 pruned_any = true;
             }
         }

@@ -22,7 +22,21 @@
 //!   heterogeneous pool the footprint is quantized by each GPU's own
 //!   block size, and the timing scale keeps a slow-but-empty GPU from
 //!   outbidding a fast-but-busy one (equal block pressure on a 3×
-//!   slower GPU drains 3× slower).
+//!   slower GPU drains 3× slower). A *saturated* GPU (zero free
+//!   blocks) is always ranked behind any GPU with headroom — the
+//!   `free.max(1)` guard alone scored it identically to a GPU with a
+//!   single free block, steering arrivals into guaranteed sheds.
+//! * [`ShardedKvPressure`] — the fleet-scale form of the same policy:
+//!   GPUs partition into fixed shards of [`shard_size`]
+//!   consecutive ids, a cheap global stage picks the shard whose
+//!   *request-independent* base pressure
+//!   (minimum over members) is lowest, and the exact kv-pressure scan
+//!   runs only within that shard — O(S + R/S) per placement instead of
+//!   O(R). With a single shard it is byte-identical to [`KvPressure`];
+//!   the cluster simulator maintains the per-shard aggregates
+//!   incrementally and asserts against this reference implementation.
+//!
+//! [`shard_size`]: ShardedKvPressure::shard_size
 //!
 //! Policies are pure functions of their inputs (the round-robin cursor
 //! is the only state), so cluster runs stay bit-deterministic.
@@ -187,26 +201,144 @@ impl RouterPolicy for LeastOutstanding {
 #[derive(Debug, Clone, Copy, Default)]
 pub struct KvPressure;
 
+/// The kv-pressure placement key for `req` on `g`, ordered
+/// lexicographically: a *saturation flag* (no free blocks at all —
+/// such a GPU can only shed or stall the request, so it ranks behind
+/// every GPU with headroom no matter how loaded), then the
+/// relative-pressure score described on [`KvPressure`]. The
+/// `free.max(1)` guard alone collapsed "zero free blocks" onto "one
+/// free block", which made a fully saturated GPU outbid a lightly
+/// saturated one — the explicit flag restores the ordering.
+///
+/// Shared by [`KvPressure`], [`ShardedKvPressure`]'s within-shard scan,
+/// and the cluster simulator's incremental placement path, so all three
+/// agree byte-for-byte.
+pub(crate) fn kv_pressure_key(req: &RouteRequest, g: &GpuView) -> (bool, f64) {
+    let expected_blocks = req.expected_tokens / g.block_size.max(1) as f64;
+    let score = (g.survivor_demand_blocks + expected_blocks) / g.free_blocks.max(1) as f64
+        * g.timing_scale;
+    (g.free_blocks == 0, score)
+}
+
+/// The request-independent part of [`kv_pressure_key`]: the saturation
+/// flag and the survivor-demand-to-headroom ratio, without the arriving
+/// request's own footprint. This is what the sharded router's global
+/// stage aggregates per shard — it must not depend on the request, or
+/// the per-shard minima could not be cached between placements.
+pub(crate) fn shard_base_key(g: &GpuView) -> (bool, f64) {
+    let score = g.timing_scale * g.survivor_demand_blocks / g.free_blocks.max(1) as f64;
+    (g.free_blocks == 0, score)
+}
+
+/// First minimum of [`kv_pressure_key`] in view order.
+fn kv_pressure_scan(req: &RouteRequest, gpus: &[GpuView]) -> usize {
+    debug_assert!(!gpus.is_empty(), "place called with a non-empty view set");
+    let mut best = 0usize;
+    let mut best_key = kv_pressure_key(req, &gpus[0]);
+    for (idx, g) in gpus.iter().enumerate().skip(1) {
+        let key = kv_pressure_key(req, g);
+        if key < best_key {
+            best = idx;
+            best_key = key;
+        }
+    }
+    best
+}
+
 impl RouterPolicy for KvPressure {
     fn name(&self) -> &'static str {
         "kv-pressure"
     }
 
     fn place(&mut self, req: &RouteRequest, gpus: &[GpuView]) -> usize {
-        debug_assert!(!gpus.is_empty(), "place called with a non-empty view set");
-        let score = |g: &GpuView| {
-            let expected_blocks = req.expected_tokens / g.block_size.max(1) as f64;
-            (g.survivor_demand_blocks + expected_blocks) / g.free_blocks.max(1) as f64
-                * g.timing_scale
-        };
-        let mut best = 0usize;
-        for (idx, g) in gpus.iter().enumerate().skip(1) {
-            if score(g) < score(&gpus[best]) {
-                best = idx;
+        kv_pressure_scan(req, gpus)
+    }
+}
+
+/// Two-stage kv-pressure placement for large fleets.
+///
+/// GPUs partition into fixed shards by absolute id
+/// (`gpu / shard_size` — *never* by position in the eligible slice,
+/// which would move shard boundaries between placements and break
+/// determinism). Stage one ranks shards by the minimum
+/// [`shard_base_key`] over their eligible members, picking the
+/// lexicographically smallest `(key, shard_id)`; stage two runs the
+/// exact [`kv_pressure_key`] scan within the winning shard only. With
+/// every GPU in one shard the policy degenerates to [`KvPressure`]
+/// byte-for-byte.
+///
+/// This struct is the O(R) *reference semantics*: it recomputes the
+/// shard minima from the slice on every call. The cluster simulator
+/// implements the same two stages over incrementally maintained
+/// per-shard aggregates (O(S + R/S) per placement) and
+/// `debug_assert!`s its pick against this reference.
+#[derive(Debug, Clone, Copy)]
+pub struct ShardedKvPressure {
+    /// GPUs per shard (>= 1); shard of a view is `gpu / shard_size`.
+    pub shard_size: usize,
+}
+
+impl ShardedKvPressure {
+    /// A sharded policy with the given shard size (clamped to >= 1).
+    pub fn new(shard_size: usize) -> ShardedKvPressure {
+        ShardedKvPressure { shard_size: shard_size.max(1) }
+    }
+
+    /// Stage one on an eligible slice: the shard with the smallest
+    /// `(min member base key, shard id)`.
+    fn pick_shard(&self, gpus: &[GpuView]) -> usize {
+        let mut best: Option<(usize, (bool, f64))> = None;
+        for g in gpus {
+            let shard = g.gpu / self.shard_size;
+            let key = shard_base_key(g);
+            best = Some(match best {
+                None => (shard, key),
+                Some((bs, bk)) => {
+                    if key < bk || (key == bk && shard < bs) {
+                        (shard, key)
+                    } else {
+                        (bs, bk)
+                    }
+                }
+            });
+        }
+        best.expect("place called with a non-empty view set").0
+    }
+}
+
+impl RouterPolicy for ShardedKvPressure {
+    fn name(&self) -> &'static str {
+        "kv-sharded"
+    }
+
+    fn place(&mut self, req: &RouteRequest, gpus: &[GpuView]) -> usize {
+        let shard = self.pick_shard(gpus);
+        // Stage two: exact scan restricted to the winning shard, in
+        // view order (== ascending GPU id for cluster-built slices).
+        let mut best: Option<(usize, (bool, f64))> = None;
+        for (idx, g) in gpus.iter().enumerate() {
+            if g.gpu / self.shard_size != shard {
+                continue;
+            }
+            let key = kv_pressure_key(req, g);
+            let better = match best {
+                None => true,
+                Some((_, bk)) => key < bk,
+            };
+            if better {
+                best = Some((idx, key));
             }
         }
-        best
+        best.expect("winning shard has at least one member").0
     }
+}
+
+/// Shard size the cluster uses when none is configured: ~sqrt(R)
+/// balances the global stage (R / size shards) against the within-shard
+/// scan (size GPUs), floored at 8 so small fleets collapse to a single
+/// shard and stay byte-identical to the flat [`KvPressure`] policy.
+pub fn auto_shard_size(n_gpus: usize) -> usize {
+    ((n_gpus as f64).sqrt().ceil() as usize).max(8)
 }
 
 /// Selectable router policy (CLI / config surface).
@@ -218,12 +350,23 @@ pub enum RouterKind {
     LeastOutstanding,
     /// [`KvPressure`].
     KvPressure,
+    /// [`ShardedKvPressure`].
+    KvPressureSharded,
 }
+
+/// Shard size [`RouterKind::build`] falls back to when no fleet
+/// geometry is known (the cluster passes an explicit size through
+/// [`RouterKind::build_with`]).
+pub const DEFAULT_SHARD_SIZE: usize = 8;
 
 impl RouterKind {
     /// Every policy, baseline first.
-    pub const ALL: [RouterKind; 3] =
-        [RouterKind::RoundRobin, RouterKind::LeastOutstanding, RouterKind::KvPressure];
+    pub const ALL: [RouterKind; 4] = [
+        RouterKind::RoundRobin,
+        RouterKind::LeastOutstanding,
+        RouterKind::KvPressure,
+        RouterKind::KvPressureSharded,
+    ];
 
     /// Display name (also the CLI spelling).
     pub fn name(&self) -> &'static str {
@@ -231,6 +374,7 @@ impl RouterKind {
             RouterKind::RoundRobin => "round-robin",
             RouterKind::LeastOutstanding => "least-outstanding",
             RouterKind::KvPressure => "kv-pressure",
+            RouterKind::KvPressureSharded => "kv-sharded",
         }
     }
 
@@ -242,16 +386,26 @@ impl RouterKind {
                 Some(RouterKind::LeastOutstanding)
             }
             "kv-pressure" | "kvpressure" | "kv" => Some(RouterKind::KvPressure),
+            "kv-sharded" | "kvsharded" | "kvs" => Some(RouterKind::KvPressureSharded),
             _ => None,
         }
     }
 
-    /// Instantiate the policy.
+    /// Instantiate the policy with [`DEFAULT_SHARD_SIZE`] for the
+    /// sharded kind.
     pub fn build(&self) -> Box<dyn RouterPolicy> {
+        self.build_with(DEFAULT_SHARD_SIZE)
+    }
+
+    /// Instantiate the policy with an explicit shard size (0 falls back
+    /// to [`DEFAULT_SHARD_SIZE`]; ignored by the flat policies).
+    pub fn build_with(&self, shard_size: usize) -> Box<dyn RouterPolicy> {
+        let shard_size = if shard_size == 0 { DEFAULT_SHARD_SIZE } else { shard_size };
         match self {
             RouterKind::RoundRobin => Box::new(RoundRobin::new()),
             RouterKind::LeastOutstanding => Box::new(LeastOutstanding),
             RouterKind::KvPressure => Box::new(KvPressure),
+            RouterKind::KvPressureSharded => Box::new(ShardedKvPressure::new(shard_size)),
         }
     }
 }
@@ -360,11 +514,93 @@ mod tests {
     }
 
     #[test]
+    fn kv_pressure_never_picks_a_saturated_gpu_over_headroom() {
+        let mut kv = KvPressure;
+        // Regression: with only the `free.max(1)` guard, a GPU with 0
+        // free blocks scored identically to one with 1 free block, so a
+        // saturated fast GPU could outbid a slow one with real
+        // headroom. The saturation flag ranks any headroom first.
+        let saturated = view(0, 1, 0, 10.0);
+        let mut slow_with_room = view(1, 3, 1, 10.0);
+        slow_with_room.timing_scale = 4.0;
+        let gpus = [saturated, slow_with_room];
+        assert_eq!(gpus[kv.place(&req(), &gpus)].gpu, 1);
+        // Among saturated GPUs the relative score still orders them.
+        let gpus = [view(0, 1, 0, 500.0), view(1, 1, 0, 10.0)];
+        assert_eq!(gpus[kv.place(&req(), &gpus)].gpu, 1);
+    }
+
+    #[test]
+    fn sharded_matches_flat_when_one_shard_covers_the_fleet() {
+        // shard_size >= fleet: stage one is a no-op and the within-shard
+        // scan is the flat policy, placement by placement.
+        let mut flat = KvPressure;
+        let mut sharded = ShardedKvPressure::new(64);
+        let gpus: Vec<GpuView> = (0..9)
+            .map(|g| view(g, g % 3, 40 + 13 * ((g * 7) % 5), (g as f64 * 37.0) % 90.0))
+            .collect();
+        for tok in [64.0, 800.0, 3200.0] {
+            let r = RouteRequest { expected_tokens: tok, ..req() };
+            assert_eq!(flat.place(&r, &gpus), sharded.place(&r, &gpus), "tok={tok}");
+        }
+    }
+
+    #[test]
+    fn sharded_two_stage_picks_cheapest_shard_then_exact_member() {
+        let mut sharded = ShardedKvPressure::new(2);
+        // Shards {0,1} and {2,3}. Base keys (demand / free): shard 0
+        // min = GPU 1 at 60/1000 = 0.06; shard 1 min = GPU 2 at
+        // 5/100 = 0.05 -> shard 1 wins stage one. The exact scan then
+        // never considers GPU 1, even though its full kv-pressure key
+        // ((60+50)/1000 = 0.11 vs GPU 2's 55/100 = 0.55) would win
+        // globally once the request's own footprint is added.
+        let gpus = [
+            view(0, 1, 10, 90.0),
+            view(1, 1, 1000, 60.0),
+            view(2, 1, 100, 5.0),
+            view(3, 1, 100, 80.0),
+        ];
+        let pick = gpus[sharded.place(&req(), &gpus)].gpu;
+        assert_eq!(pick, 2, "exact scan runs only inside the cheapest shard");
+        let mut flat = KvPressure;
+        assert_eq!(gpus[flat.place(&req(), &gpus)].gpu, 1, "flat would have picked GPU 1");
+    }
+
+    #[test]
+    fn sharded_shards_by_absolute_gpu_id_not_slice_position() {
+        let mut sharded = ShardedKvPressure::new(2);
+        // GPU 1 is at quota and missing from the eligible slice, so the
+        // slice positions are [GPU0, GPU2, GPU3]. Absolute-id shards are
+        // {0} and {2,3}; a positional partition would wrongly pair
+        // {GPU0, GPU2}. Base keys: GPU0 0/10 = 0, GPU2 40/1000 = 0.04,
+        // GPU3 10/50 = 0.2 -> absolute shard {0} wins and GPU 0 is
+        // placed. Positional sharding would scan {GPU0, GPU2} and pick
+        // GPU 2 on the exact key (90/1000 = 0.09 vs GPU0's 50/10 = 5).
+        let gpus = [view(0, 1, 10, 0.0), view(2, 1, 1000, 40.0), view(3, 1, 50, 10.0)];
+        assert_eq!(gpus[sharded.place(&req(), &gpus)].gpu, 0);
+        // Saturation feeds stage one too: a shard whose only eligible
+        // member has zero free blocks loses to any shard with headroom.
+        let gpus = [view(0, 1, 10, 90.0), view(1, 1, 100, 1.0), view(3, 1, 0, 0.0)];
+        assert_eq!(gpus[sharded.place(&req(), &gpus)].gpu, 1);
+    }
+
+    #[test]
+    fn auto_shard_size_tracks_sqrt_with_a_floor() {
+        assert_eq!(auto_shard_size(1), 8);
+        assert_eq!(auto_shard_size(4), 8); // single shard at R=4
+        assert_eq!(auto_shard_size(64), 8);
+        assert_eq!(auto_shard_size(256), 16);
+        assert_eq!(auto_shard_size(1024), 32);
+    }
+
+    #[test]
     fn kind_parse_build_roundtrip() {
         for k in RouterKind::ALL {
             assert_eq!(RouterKind::parse(k.name()), Some(k));
             assert_eq!(k.build().name(), k.name());
         }
+        assert_eq!(RouterKind::parse("kvs"), Some(RouterKind::KvPressureSharded));
         assert_eq!(RouterKind::parse("nope"), None);
+        assert_eq!(RouterKind::KvPressureSharded.build_with(0).name(), "kv-sharded");
     }
 }

@@ -173,6 +173,13 @@ pub fn max_fitting(cap: u64, fits: impl Fn(u64) -> bool) -> u64 {
 /// the scan-based code folded, so every derived horizon is
 /// bit-identical to the naive reference — the differential property
 /// test in `tests/prop_invariants.rs` locks that in.
+///
+/// Trace ids are `u32` throughout (an engine's trace table is bounded
+/// by requests × N, far below 2^32): the running set, the boundary
+/// heap, and the per-owner rows are dense index-keyed arenas of 4-byte
+/// ids, so a fleet of 1024 engines stepping concurrently keeps its hot
+/// scheduler state cache-resident instead of chasing per-engine map
+/// nodes.
 #[derive(Debug, Default)]
 pub struct EventIndex {
     /// PagedAttention block size in tokens.
@@ -180,11 +187,11 @@ pub struct EventIndex {
     /// Total decode iterations advanced since [`reset`](Self::reset).
     iters: u64,
     /// Running trace ids, ascending.
-    tids: Vec<usize>,
+    tids: Vec<u32>,
     /// Per-tid valid absolute boundary key (`u64::MAX` = not running).
     key_of: Vec<u64>,
     /// Lazy min-heap of `(absolute boundary key, tid)`.
-    heap: BinaryHeap<Reverse<(u64, usize)>>,
+    heap: BinaryHeap<Reverse<(u64, u32)>>,
     /// Per-tid resident tokens at insert, and the iteration counter at
     /// insert (current residency = base + iters - base_iters).
     base_resident: Vec<u64>,
@@ -257,7 +264,7 @@ impl EventIndex {
     /// The running trace ids in ascending order (the engines' historical
     /// scan order, so victim selection and boundary iteration are
     /// unchanged).
-    pub fn tids(&self) -> &[usize] {
+    pub fn tids(&self) -> &[u32] {
         &self.tids
     }
 
@@ -274,7 +281,8 @@ impl EventIndex {
         &self.active_owners
     }
 
-    fn ensure_tid(&mut self, tid: usize) {
+    fn ensure_tid(&mut self, tid: u32) {
+        let tid = tid as usize;
         if self.key_of.len() <= tid {
             self.key_of.resize(tid + 1, u64::MAX);
             self.base_resident.resize(tid + 1, 0);
@@ -298,22 +306,23 @@ impl EventIndex {
     /// Register a trace entering the running set with `resident` tokens
     /// (prompt + generated) and `dist` iterations to its next step
     /// boundary. Called at admission and resume.
-    pub fn insert(&mut self, tid: usize, owner: u32, resident: u64, dist: u64) {
+    pub fn insert(&mut self, tid: u32, owner: u32, resident: u64, dist: u64) {
         debug_assert!(dist >= 1, "a running trace is strictly before its boundary");
         self.ensure_tid(tid);
-        debug_assert_eq!(self.key_of[tid], u64::MAX, "trace already running");
+        let ti = tid as usize;
+        debug_assert_eq!(self.key_of[ti], u64::MAX, "trace already running");
         let pos = self.tids.partition_point(|&t| t < tid);
         self.tids.insert(pos, tid);
         let key = self.iters + dist;
-        self.key_of[tid] = key;
+        self.key_of[ti] = key;
         self.heap.push(Reverse((key, tid)));
-        self.base_resident[tid] = resident;
-        self.base_iters[tid] = self.iters;
+        self.base_resident[ti] = resident;
+        self.base_iters[ti] = self.iters;
         self.resident_sum += resident;
         let p = self.phase(resident);
         self.hist[p] += 1;
         if self.track_owners {
-            self.owner_of[tid] = owner;
+            self.owner_of[ti] = owner;
             let o = owner as usize;
             if self.owner_slot.len() <= o {
                 self.owner_slot.resize(o + 1, 0);
@@ -340,18 +349,19 @@ impl EventIndex {
     }
 
     /// Remove a trace from the running set (prune / preempt / finish).
-    pub fn remove(&mut self, tid: usize) {
-        debug_assert_ne!(self.key_of[tid], u64::MAX, "removing a non-running trace");
-        let resident = self.base_resident[tid] + (self.iters - self.base_iters[tid]);
+    pub fn remove(&mut self, tid: u32) {
+        let ti = tid as usize;
+        debug_assert_ne!(self.key_of[ti], u64::MAX, "removing a non-running trace");
+        let resident = self.base_resident[ti] + (self.iters - self.base_iters[ti]);
         let p = self.phase(resident);
         self.hist[p] -= 1;
         self.resident_sum -= resident;
-        self.key_of[tid] = u64::MAX;
+        self.key_of[ti] = u64::MAX;
         let pos = self.tids.partition_point(|&t| t < tid);
         debug_assert_eq!(self.tids[pos], tid);
         self.tids.remove(pos);
         if self.track_owners {
-            let owner = self.owner_of[tid];
+            let owner = self.owner_of[ti];
             let slot = (self.owner_slot[owner as usize] - 1) as usize;
             self.owner_count[slot] -= 1;
             self.owner_hist[slot * self.bs as usize + p] -= 1;
@@ -377,11 +387,11 @@ impl EventIndex {
 
     /// Re-key a trace that just crossed a step boundary: `dist`
     /// iterations to its next boundary.
-    pub fn set_boundary(&mut self, tid: usize, dist: u64) {
+    pub fn set_boundary(&mut self, tid: u32, dist: u64) {
         debug_assert!(dist >= 1);
-        debug_assert_ne!(self.key_of[tid], u64::MAX, "re-keying a non-running trace");
+        debug_assert_ne!(self.key_of[tid as usize], u64::MAX, "re-keying a non-running trace");
         let key = self.iters + dist;
-        self.key_of[tid] = key;
+        self.key_of[tid as usize] = key;
         self.heap.push(Reverse((key, tid)));
     }
 
@@ -390,7 +400,7 @@ impl EventIndex {
     /// (crossed boundaries, removed traces) are popped lazily.
     pub fn d_event(&mut self) -> Option<u64> {
         while let Some(&Reverse((key, tid))) = self.heap.peek() {
-            if self.key_of.get(tid) == Some(&key) {
+            if self.key_of.get(tid as usize) == Some(&key) {
                 return Some(key - self.iters);
             }
             self.heap.pop();
@@ -440,11 +450,13 @@ impl EventIndex {
 /// `running` passing `in_set` with the lowest aggregated step score.
 /// Ties keep the *first* minimum (iteration order), matching the
 /// engines' historical `min_by` semantics, so runs stay deterministic.
-pub fn lowest_score_victim(
-    running: &[usize],
-    in_set: impl Fn(usize) -> bool,
-    score: impl Fn(usize) -> f64,
-) -> Option<usize> {
+/// Generic over the id width so both the `usize`-indexed DES engine
+/// and the `u32`-arena serving engines share one implementation.
+pub fn lowest_score_victim<I: Copy>(
+    running: &[I],
+    in_set: impl Fn(I) -> bool,
+    score: impl Fn(I) -> f64,
+) -> Option<I> {
     running
         .iter()
         .copied()
@@ -455,11 +467,11 @@ pub fn lowest_score_victim(
 /// vLLM's preemption victim: the candidate in `running` passing
 /// `in_set` with the fewest generated tokens (cheapest recompute).
 /// First-minimum tie-breaking, as with [`lowest_score_victim`].
-pub fn youngest_victim(
-    running: &[usize],
-    in_set: impl Fn(usize) -> bool,
-    generated: impl Fn(usize) -> u64,
-) -> Option<usize> {
+pub fn youngest_victim<I: Copy>(
+    running: &[I],
+    in_set: impl Fn(I) -> bool,
+    generated: impl Fn(I) -> u64,
+) -> Option<I> {
     running.iter().copied().filter(|&i| in_set(i)).min_by_key(|&i| generated(i))
 }
 

@@ -368,8 +368,14 @@ pub struct ServeEngine<'a> {
     /// incremental backing of the KV-pressure router view (only kept
     /// when [`ServeSimConfig::route_views`] is on).
     scores_sorted: Vec<f64>,
-    // Reusable hot-path buffers.
-    running: Vec<usize>,
+    /// Monotone state-change counter: bumped by every mutation that can
+    /// change the engine's router view (events, submissions, migrations).
+    /// Cluster drivers cache `GpuView`s keyed by this and skip the
+    /// refresh for engines that have not moved.
+    version: u64,
+    // Reusable hot-path buffers. `running` snapshots the index's u32
+    // arena ids (ascending trace order).
+    running: Vec<u32>,
     h: Vec<f32>,
     z: Vec<f32>,
 }
@@ -503,10 +509,23 @@ impl<'a> ServeEngine<'a> {
             live_locals: Vec::new(),
             index,
             scores_sorted: Vec::new(),
+            version: 0,
             running: Vec::new(),
             h,
             z,
         }
+    }
+
+    /// Monotone state-change counter: increases whenever the engine's
+    /// observable scheduling state (and hence its router view) may have
+    /// changed — any advanced event, submission, or migration in/out.
+    /// Equal versions guarantee an identical [`GpuView`] snapshot, so
+    /// cluster drivers refresh views only for engines whose version
+    /// moved since the last placement.
+    ///
+    /// [`GpuView`]: crate::sim::router::GpuView
+    pub fn version(&self) -> u64 {
+        self.version
     }
 
     /// Current engine wall-clock, seconds.
@@ -645,6 +664,7 @@ impl<'a> ServeEngine<'a> {
         rq.live = 0;
         rq.gone = true;
         self.migrated_out += 1;
+        self.version += 1;
         MigratedRequest {
             rid: rq.st.rid,
             qid: rq.st.qid,
@@ -711,6 +731,7 @@ impl<'a> ServeEngine<'a> {
             self.traces.push(ServeTrace { rid: local, spec, st, last_settle: clock });
         }
         debug_assert_eq!(live, m.live);
+        self.version += 1;
         self.live_locals.push(local);
         self.reqs.push(Req {
             st: m.st,
@@ -763,7 +784,7 @@ impl<'a> ServeEngine<'a> {
             .index
             .tids()
             .iter()
-            .map(|&i| self.sim.agg_score(&self.traces[i].st))
+            .map(|&i| self.sim.agg_score(&self.traces[i as usize].st))
             .collect();
         sorted.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
         self.survivor_fold(&sorted)
@@ -785,7 +806,7 @@ impl<'a> ServeEngine<'a> {
         let bs = self.sim.cfg.block_size as f64;
         let mut demand = 0.0;
         for &i in self.index.tids() {
-            let t = &self.traces[i];
+            let t = &self.traces[i as usize];
             let s = self.sim.agg_score(&t.st);
             let remaining = (self.reqs[t.rid].expected_tokens - t.st.generated as f64).max(floor);
             let w = if weighted {
@@ -805,7 +826,7 @@ impl<'a> ServeEngine<'a> {
     fn index_insert(&mut self, tid: usize, resident: usize) {
         let dist = self.next_end[tid] - self.traces[tid].st.generated;
         let owner = self.traces[tid].rid as OwnerId;
-        self.index.insert(tid, owner, resident as u64, dist);
+        self.index.insert(tid as u32, owner, resident as u64, dist);
         if self.sim.cfg.route_views {
             let s = self.sim.agg_score(&self.traces[tid].st);
             let p = self.scores_sorted.partition_point(|&x| x < s);
@@ -817,7 +838,7 @@ impl<'a> ServeEngine<'a> {
     /// drop it from the index and (when maintained) its current
     /// aggregated score from the sorted multiset.
     fn index_remove(&mut self, tid: usize) {
-        self.index.remove(tid);
+        self.index.remove(tid as u32);
         if self.sim.cfg.route_views {
             let s = self.sim.agg_score(&self.traces[tid].st);
             let p = self.scores_sorted.partition_point(|&x| x < s);
@@ -912,6 +933,7 @@ impl<'a> ServeEngine<'a> {
         }
         self.live_locals.push(local);
         self.reqs.push(rq);
+        self.version += 1;
     }
 
     /// Advance until the clock reaches `t_limit` or the engine runs out
@@ -937,8 +959,22 @@ impl<'a> ServeEngine<'a> {
         matches!(self.step_event(f64::INFINITY), Step::Advanced)
     }
 
-    /// One iteration of the event loop, bounded by `t_limit`.
+    /// One iteration of the event loop, bounded by `t_limit`: runs
+    /// [`step_event_inner`](Self::step_event_inner) and, when state
+    /// advanced, bumps the engine's [`version`](Self::version) and the
+    /// `events` counter (the events/sec numerator).
     fn step_event(&mut self, t_limit: f64) -> Step {
+        let s = self.step_event_inner(t_limit);
+        if matches!(s, Step::Advanced) {
+            self.version += 1;
+            self.counters.events += 1;
+        }
+        s
+    }
+
+    /// The event-loop body: decode interval, memory event, or
+    /// resume/drop pass.
+    fn step_event_inner(&mut self, t_limit: f64) -> Step {
         if self.index.running() == 0 {
             if !self.wait_q.is_empty() {
                 self.resume_or_drop();
@@ -985,7 +1021,7 @@ impl<'a> ServeEngine<'a> {
         self.counters.decode_iterations += d;
         self.counters.generated_tokens += d * b as u64;
         for &i in &running {
-            self.traces[i].st.generated += d;
+            self.traces[i as usize].st.generated += d;
             let ok = self.pool.append_tokens(i as u64, d as usize);
             debug_assert!(ok, "memory horizon must guarantee the append");
         }
@@ -996,7 +1032,8 @@ impl<'a> ServeEngine<'a> {
         let needs_scores = self.sim.cfg.method == Method::Step;
         let route_views = self.sim.cfg.route_views;
         let clock = self.clock;
-        for &i in &running {
+        for &ti in &running {
+            let i = ti as usize;
             if self.traces[i].st.generated != self.next_end[i] {
                 continue;
             }
@@ -1033,7 +1070,7 @@ impl<'a> ServeEngine<'a> {
                 request_done(rq, clock, &mut self.completions);
             } else {
                 let dist = self.next_end[i] - self.traces[i].st.generated;
-                self.index.set_boundary(i, dist);
+                self.index.set_boundary(ti, dist);
             }
         }
 
@@ -1095,7 +1132,7 @@ impl<'a> ServeEngine<'a> {
     /// is that owner's running traces (found through the index's
     /// per-owner demand aggregates, ascending owner order — the same
     /// first-binding-owner the retired sorted-pair scan produced).
-    fn memory_event(&mut self, running: &[usize]) {
+    fn memory_event(&mut self, running: &[u32]) {
         debug_assert!(!running.is_empty());
         let pool_bound = self.index.pool_demand(1) > self.pool.free_blocks() as u64;
         let binding: Option<OwnerId> = if pool_bound || self.pool.quota_blocks().is_none() {
@@ -1107,8 +1144,8 @@ impl<'a> ServeEngine<'a> {
             })
         };
         let traces = &self.traces;
-        let in_set = |i: usize| match binding {
-            Some(o) => traces[i].rid as OwnerId == o,
+        let in_set = |i: u32| match binding {
+            Some(o) => traces[i as usize].rid as OwnerId == o,
             None => true,
         };
         let clock = self.clock;
@@ -1117,10 +1154,11 @@ impl<'a> ServeEngine<'a> {
                 // Algorithm 1, serving form: argmin aggregated step score
                 // over the victim set, release KV at once.
                 let victim =
-                    sched::lowest_score_victim(running, in_set, |i| {
-                        self.sim.agg_score(&traces[i].st)
+                    sched::lowest_score_victim(running, in_set, |i: u32| {
+                        self.sim.agg_score(&traces[i as usize].st)
                     })
                     .expect("memory event with empty victim set");
+                let victim = victim as usize;
                 let rid = self.traces[victim].rid;
                 let rescue = self.sim.cfg.migrate_rescue
                     && self.reqs[rid].live == 1
@@ -1154,8 +1192,11 @@ impl<'a> ServeEngine<'a> {
                 // vLLM preemption: evict the youngest running trace in
                 // the victim set (cheapest recompute), FIFO resume.
                 let victim =
-                    sched::youngest_victim(running, in_set, |i| traces[i].st.generated)
-                        .expect("memory event with empty victim set");
+                    sched::youngest_victim(running, in_set, |i: u32| {
+                        traces[i as usize].st.generated
+                    })
+                    .expect("memory event with empty victim set");
+                let victim = victim as usize;
                 self.index_remove(victim);
                 let t = &mut self.traces[victim];
                 sched::settle(&mut t.st, &mut t.last_settle, clock);

@@ -271,6 +271,55 @@ fn heterogeneous_migration_grid_is_thread_invariant() {
     }
 }
 
+/// Fleet scale: a 256-GPU closed-loop grid under the two-stage
+/// `kv-sharded` router (16 shards at this R, so stage one genuinely
+/// runs over multi-GPU aggregates, and debug builds cross-check every
+/// incremental pick against the reference router) is byte-identical
+/// across randomized `--threads` / `--step-threads` combinations, and
+/// a rerun reproduces it exactly.
+#[test]
+fn fleet_scale_cluster_is_thread_invariant_at_r256() {
+    use step::util::rng::Rng;
+    let gp = GenParams::default_d64();
+    let sc = projection_scorer(&gp);
+    let base = ClusterOpts {
+        gpus: 256,
+        model: ModelId::Qwen3_4B,
+        bench: BenchId::GpqaDiamond,
+        n_requests: 32,
+        clients: 16,
+        think_s: 10.0,
+        heavy_frac: 0.5,
+        n_traces: 2,
+        mem_util: 0.4,
+        max_outstanding: 2,
+        router: step::sim::router::RouterKind::KvPressureSharded,
+        seed: 7,
+        threads: 1,
+        step_threads: 1,
+        ..Default::default()
+    };
+    let fingerprint = table6::cells_fingerprint;
+    let serial = fingerprint(&table6::run_migration_grid(&base, &gp, &sc));
+    let mut rng = Rng::new(0xF1EE7);
+    for _ in 0..3 {
+        let opts = ClusterOpts {
+            threads: 1 + rng.below(8),
+            step_threads: rng.below(9), // 0 = all cores
+            ..base.clone()
+        };
+        assert_eq!(
+            serial,
+            fingerprint(&table6::run_migration_grid(&opts, &gp, &sc)),
+            "R=256 grid differs at threads={} step_threads={}",
+            opts.threads,
+            opts.step_threads
+        );
+    }
+    // A rerun at the base settings reproduces the bytes too.
+    assert_eq!(serial, fingerprint(&table6::run_migration_grid(&base, &gp, &sc)));
+}
+
 /// The serve-sim acceptance contract: `--threads 1` and `--threads 8`
 /// produce byte-identical BENCH_serving.json metric blocks. Threads only
 /// shard the (deterministic, single-threaded) per-method simulations.

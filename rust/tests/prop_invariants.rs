@@ -10,7 +10,7 @@ use step::sim::cluster::{
 };
 use step::sim::des::{DesEngine, SimConfig};
 use step::sim::profiles::{BenchId, ModelId};
-use step::sim::router::RouterKind;
+use step::sim::router::{GpuView, RouteRequest, RouterKind, RouterPolicy};
 use step::sim::sched::{self, EventIndex};
 use step::sim::serve::{ServeEngine, ServeSimConfig};
 use step::sim::tracegen::{GenParams, TraceGen};
@@ -226,7 +226,7 @@ fn prop_event_index_matches_naive_scan() {
                 .enumerate()
                 .filter_map(|(tid, t)| t.as_ref().map(|&tr| (tid, tr)))
                 .collect();
-            let tids: Vec<usize> = live.iter().map(|&(tid, _)| tid).collect();
+            let tids: Vec<u32> = live.iter().map(|&(tid, _)| tid as u32).collect();
             assert_eq!(idx.tids(), &tids[..], "running set drift");
             assert_eq!(idx.running(), live.len());
             let resident: u64 = live.iter().map(|&(_, t)| t.resident).sum();
@@ -305,7 +305,7 @@ fn prop_event_index_matches_naive_scan() {
                         dist: 1 + rng.below(40) as u64,
                     };
                     let tid = model.len();
-                    idx.insert(tid, t.owner, t.resident, t.dist);
+                    idx.insert(tid as u32, t.owner, t.resident, t.dist);
                     model.push(Some(t));
                 }
                 // Reinsert a previously removed tid (preempt → resume:
@@ -318,7 +318,7 @@ fn prop_event_index_matches_naive_scan() {
                         resident: 1 + rng.below(600) as u64,
                         dist: 1 + rng.below(40) as u64,
                     };
-                    idx.insert(tid, t.owner, t.resident, t.dist);
+                    idx.insert(tid as u32, t.owner, t.resident, t.dist);
                     model[tid] = Some(t);
                 }
                 // Advance to at most the event horizon, then process
@@ -334,11 +334,11 @@ fn prop_event_index_matches_naive_scan() {
                         t.dist -= d;
                         if t.dist == 0 {
                             if rng.bernoulli(0.4) {
-                                idx.remove(tid);
+                                idx.remove(tid as u32);
                                 model[tid] = None;
                             } else {
                                 let dist = 1 + rng.below(40) as u64;
-                                idx.set_boundary(tid, dist);
+                                idx.set_boundary(tid as u32, dist);
                                 model[tid].as_mut().expect("just matched").dist = dist;
                             }
                         }
@@ -347,7 +347,7 @@ fn prop_event_index_matches_naive_scan() {
                 // Preempt / prune a random running trace.
                 2 if !live_tids.is_empty() => {
                     let tid = live_tids[rng.below(live_tids.len())];
-                    idx.remove(tid);
+                    idx.remove(tid as u32);
                     model[tid] = None;
                 }
                 _ => {}
@@ -407,6 +407,54 @@ fn prop_survivor_demand_incremental_matches_scan() {
     });
 }
 
+// ------------------------------------------------- sharded-router differential
+
+/// Differential property: whenever one shard covers the whole fleet
+/// (shard size >= R, i.e. shard count 1), the two-stage sharded router
+/// must reproduce the flat kv-pressure placement exactly — same index,
+/// same tie-breaks — over random views and requests. This is the
+/// identity the cluster's incremental placement `debug_assert`s per
+/// arrival; here it is exercised directly over adversarial view slices
+/// (saturated pools, zero-free GPUs, heterogeneous block sizes and
+/// speeds, duplicate pressure keys).
+#[test]
+fn prop_sharded_router_matches_flat_when_one_shard_covers_the_fleet() {
+    forall("sharded-flat-differential", 400, |rng| {
+        let n = 1 + rng.below(24);
+        let views: Vec<GpuView> = (0..n)
+            .map(|g| GpuView {
+                gpu: g,
+                outstanding: rng.below(8),
+                live_traces: rng.below(32),
+                // Small range on purpose: collisions (including hard
+                // zero-free saturation) are the interesting tie cases.
+                free_blocks: rng.below(6),
+                pool_blocks: 64,
+                block_size: [8, 16, 32][rng.below(3)],
+                timing_scale: [1.0, 1.0, 2.5][rng.below(3)],
+                survivor_demand_blocks: (rng.below(5) as f64) * 7.5,
+            })
+            .collect();
+        let req = RouteRequest {
+            rid: rng.below(1000),
+            qid: rng.below(30),
+            n_traces: 1 + rng.below(8),
+            expected_tokens: (rng.below(40) as f64) * 100.0,
+        };
+        let mut flat = RouterKind::KvPressure.build();
+        let want = flat.place(&req, &views);
+        for shard_size in [n, n + rng.below(16), 1024] {
+            let mut sharded = RouterKind::KvPressureSharded.build_with(shard_size);
+            assert_eq!(
+                sharded.place(&req, &views),
+                want,
+                "single-shard sharded pick must equal the flat scan \
+                 (n={n}, shard_size={shard_size})"
+            );
+        }
+    });
+}
+
 // ----------------------------------------------------- engine invariants
 
 fn proj_scorer(gp: &GenParams) -> step::coordinator::scorer::StepScorer {
@@ -427,7 +475,7 @@ fn prop_cluster_router_invariants() {
     forall("cluster-router-invariants", 10, |rng| {
         let gpus = 1 + rng.below(3);
         let method = methods[rng.below(4)];
-        let router = RouterKind::ALL[rng.below(3)];
+        let router = RouterKind::ALL[rng.below(RouterKind::ALL.len())];
         let n_requests = 3 + rng.below(4);
         let workload = if rng.bernoulli(0.5) {
             ClusterWorkload::Open(WorkloadSpec::poisson(0.02 + rng.f64() * 0.1, n_requests))
