@@ -30,8 +30,8 @@ use std::time::Instant;
 use step::coordinator::method::Method;
 use step::harness::cells::projection_scorer;
 use step::harness::table6::{
-    attach_migration_grid, cells_fingerprint, metrics_json, run_cell, run_grids,
-    run_migration_grid, ClusterOpts,
+    attach_migration_grid, cells_fingerprint, config_json, elasticity_schedule, metrics_json,
+    run_cell, run_grids, run_migration_grid, ClusterOpts,
 };
 use step::harness::write_results;
 use step::sim::cluster::{GpuProfile, MigrationPolicy};
@@ -289,6 +289,88 @@ fn main() {
     );
     println!("  fleet: kv-sharded == kv-pressure at R=4 (single-shard identity)");
 
+    // ---- elasticity row: R=64 under a fixed revocation schedule
+    // (4 spot revocations, 10s drain deadline, distinct victims),
+    // drain-relocate vs shed-everything. Capacity is ample (quota 8 x
+    // 64 GPUs vs 128 requests), so every request dropped is revocation
+    // damage — goodput_lost_per_revocation isolates what the drain
+    // controller saves. Runs under the two-stage sharded router so the
+    // dirty-shard aggregates see engines disappear mid-run, and each
+    // row is asserted byte-identical across step-thread counts.
+    let ela_base = ClusterOpts {
+        gpus: 64,
+        model: ModelId::Phi4_14B,
+        bench: BenchId::Hmmt2425,
+        n_requests: 128,
+        clients: 0,
+        rate_rps: 4.0,
+        n_traces: 4,
+        mem_util: 0.4,
+        max_outstanding: 8,
+        router: RouterKind::KvPressureSharded,
+        fleet_events: elasticity_schedule(4, 10.0, 64),
+        seed: 7,
+        threads: 1,
+        ..ClusterOpts::default()
+    };
+    let mut ela_rows: Vec<Json> = Vec::new();
+    let mut ela_cells = Vec::new();
+    for (policy, label) in [
+        (MigrationPolicy::Never, "shed-everything"),
+        (MigrationPolicy::OnShed, "drain-relocate"),
+    ] {
+        let o = ClusterOpts { migrate: policy, ..ela_base.clone() };
+        let t = Instant::now();
+        let cell = run_cell(Method::Step, o.router, label, &gp, &scorer, &o);
+        let wall_s = t.elapsed().as_secs_f64();
+        let stepped_opts = ClusterOpts { step_threads: threads, ..o.clone() };
+        let stepped =
+            run_cell(Method::Step, stepped_opts.router, label, &gp, &scorer, &stepped_opts);
+        let identical = cells_fingerprint(std::slice::from_ref(&cell))
+            == cells_fingerprint(std::slice::from_ref(&stepped));
+        assert!(
+            identical,
+            "elasticity row '{label}' must be byte-identical across step_threads"
+        );
+        println!(
+            "  elasticity {label:>16}: revocations={} drained={} rescued={} abandoned={} \
+             lost/revocation={:.2} ({wall_s:.2}s)",
+            cell.revocations,
+            cell.drained,
+            cell.rescue_migrated,
+            cell.shed_on_revoke,
+            cell.goodput_lost_per_revocation,
+        );
+        let mut row = cell.to_json();
+        if let Json::Obj(map) = &mut row {
+            map.insert("wall_s".to_string(), Json::Num(wall_s));
+            map.insert("identical_across_step_threads".to_string(), Json::Bool(identical));
+        }
+        ela_rows.push(row);
+        ela_cells.push(cell);
+    }
+    let (shed_all, drain) = (&ela_cells[0], &ela_cells[1]);
+    assert_eq!(shed_all.revocations, 4, "every scheduled revocation must fire");
+    assert_eq!(drain.revocations, 4, "every scheduled revocation must fire");
+    assert!(
+        shed_all.shed_on_revoke > 0,
+        "shed-everything must abandon residents at this load"
+    );
+    assert!(drain.rescue_migrated > 0, "the drain controller must relocate residents");
+    assert!(
+        drain.goodput_lost_per_revocation < shed_all.goodput_lost_per_revocation,
+        "drain-relocate must lose strictly less goodput per revocation ({} vs {})",
+        drain.goodput_lost_per_revocation,
+        shed_all.goodput_lost_per_revocation
+    );
+    let elasticity_loss_ratio =
+        drain.goodput_lost_per_revocation / shed_all.goodput_lost_per_revocation.max(1e-12);
+    println!(
+        "  elasticity: drain-relocate loses {:.0}% of shed-everything's \
+         goodput per revocation",
+        100.0 * elasticity_loss_ratio
+    );
+
     let mut report = metrics_json(&opts, &m_serial, &r_serial);
     attach_migration_grid(&mut report, &mig_opts, &migration);
     if let Json::Obj(map) = &mut report {
@@ -312,6 +394,12 @@ fn main() {
         map.insert("fleet".to_string(), Json::Arr(fleet_rows));
         map.insert("fleet_threads".to_string(), Json::Num(threads as f64));
         map.insert("shard_flat_identical".to_string(), Json::Bool(shard_flat_identical));
+        // Elasticity rows (fixed revocation schedule, R=64):
+        // drain-relocate vs shed-everything, with the loss ratio the
+        // bench gate bounds at <= 1.
+        map.insert("elasticity".to_string(), Json::Arr(ela_rows));
+        map.insert("elasticity_config".to_string(), config_json(&ela_base));
+        map.insert("elasticity_loss_ratio".to_string(), Json::Num(elasticity_loss_ratio));
     }
     let path = write_results("BENCH_cluster", &report).expect("writing BENCH_cluster.json");
     println!("wrote {path:?}");

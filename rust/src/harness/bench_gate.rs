@@ -24,7 +24,11 @@
 //!      grid): every R's cell byte-identical across step threads, the
 //!      largest fleet's events/sec positive and its wall clock under
 //!      the cap, and the sharded router's placements byte-identical
-//!      to the flat kv-pressure router at small R.
+//!      to the flat kv-pressure router at small R;
+//!    * elasticity (when the cluster artifact carries the elasticity
+//!      rows): drain-relocate must not lose more goodput per
+//!      revocation than the shed-everything baseline, and every
+//!      chaos row must be byte-identical across step threads.
 //!
 //! The verdict is printed as a markdown table, appended to
 //! `$GITHUB_STEP_SUMMARY` when that file is set (the job-summary
@@ -298,6 +302,42 @@ fn evaluate(pairs: &[(Json, Json)]) -> Vec<GateRow> {
             bool_at(cluster, &["shard_flat_identical"]),
         ));
     }
+    // Elasticity rows (fixed revocation schedule under fleet chaos):
+    // the drain controller must not lose more goodput per revocation
+    // than abandoning the victims' residents, and every chaos row must
+    // be byte-identical across step threads.
+    if let Some(ela) = cluster.get("elasticity").as_arr() {
+        rows.push(compare_row(
+            ARTIFACTS[2],
+            "drain-relocate loss/revocation <= shed-everything",
+            row_num(
+                cluster,
+                "elasticity",
+                "label",
+                "drain-relocate",
+                "goodput_lost_per_revocation",
+            ),
+            row_num(
+                cluster,
+                "elasticity",
+                "label",
+                "shed-everything",
+                "goodput_lost_per_revocation",
+            ),
+            |drain, shed| drain <= shed,
+        ));
+        let all_identical = ela.iter().fold(Some(true), |acc, r| {
+            match (acc, r.get("identical_across_step_threads").as_bool()) {
+                (Some(a), Some(b)) => Some(a && b),
+                _ => None,
+            }
+        });
+        rows.push(flag_row(
+            ARTIFACTS[2],
+            "elasticity rows identical across step threads",
+            all_identical,
+        ));
+    }
     rows
 }
 
@@ -406,6 +446,14 @@ mod tests {
         ])
     }
 
+    fn ela_row(label: &str, loss: f64, identical: bool) -> Json {
+        Json::obj(vec![
+            ("label", Json::Str(label.to_string())),
+            ("goodput_lost_per_revocation", Json::Num(loss)),
+            ("identical_across_step_threads", Json::Bool(identical)),
+        ])
+    }
+
     fn cluster(kv: f64, rr: f64, shed_never: f64, shed_on_shed: f64) -> Json {
         Json::obj(vec![
             (
@@ -427,6 +475,13 @@ mod tests {
                 Json::Arr(vec![
                     fleet_row(4, 800.0, 0.2, true),
                     fleet_row(1024, 5000.0, 4.0, true),
+                ]),
+            ),
+            (
+                "elasticity",
+                Json::Arr(vec![
+                    ela_row("shed-everything", 2.0, true),
+                    ela_row("drain-relocate", 0.25, true),
                 ]),
             ),
             ("shard_flat_identical", Json::Bool(true)),
@@ -521,6 +576,41 @@ mod tests {
         assert!(
             !failed.iter().any(|ch| ch.contains("events/sec")),
             "positive events/sec still passes: {failed:?}"
+        );
+    }
+
+    #[test]
+    fn healthy_artifacts_exercise_the_elasticity_gates() {
+        let rows = evaluate(&pairs(
+            grid(3.2, true),
+            serving(100.0, 200.0),
+            cluster(50.0, 80.0, 0.4, 0.1),
+        ));
+        assert!(rows.iter().any(|r| r.check.contains("drain-relocate") && r.ok));
+        assert!(rows.iter().any(|r| r.check.contains("elasticity rows identical") && r.ok));
+    }
+
+    #[test]
+    fn elasticity_gate_checks_loss_and_identity() {
+        let mut c = cluster(1.0, 2.0, 0.2, 0.1);
+        if let Json::Obj(map) = &mut c {
+            // Drain loses MORE than shedding everything, and one chaos
+            // row breaks its step-thread identity: both gates trip.
+            map.insert(
+                "elasticity".to_string(),
+                Json::Arr(vec![
+                    ela_row("shed-everything", 0.5, true),
+                    ela_row("drain-relocate", 1.5, false),
+                ]),
+            );
+        }
+        let rows = evaluate(&pairs(grid(2.0, true), serving(1.0, 2.0), c));
+        let failed: Vec<&str> =
+            rows.iter().filter(|r| !r.ok).map(|r| r.check.as_str()).collect();
+        assert!(failed.iter().any(|ch| ch.contains("drain-relocate")), "{failed:?}");
+        assert!(
+            failed.iter().any(|ch| ch.contains("elasticity rows identical")),
+            "{failed:?}"
         );
     }
 

@@ -28,8 +28,8 @@ use super::cells::projection_scorer;
 use crate::coordinator::method::Method;
 use crate::coordinator::scorer::StepScorer;
 use crate::sim::cluster::{
-    AdmissionConfig, ClusterConfig, ClusterResult, ClusterSim, ClusterWorkload, GpuProfile,
-    MigrationPolicy,
+    parse_fleet_events, AdmissionConfig, ClusterConfig, ClusterResult, ClusterSim,
+    ClusterWorkload, GpuProfile, MigrationPolicy,
 };
 use crate::sim::profiles::{BenchId, ModelId};
 use crate::sim::router::RouterKind;
@@ -47,6 +47,21 @@ pub const MIGRATIONS: [MigrationPolicy; 3] = [
     MigrationPolicy::Never,
     MigrationPolicy::OnShed,
     MigrationPolicy::OnPressure { ratio: MigrationPolicy::DEFAULT_PRESSURE_RATIO },
+];
+
+/// Revocation counts the elasticity grid sweeps.
+pub const ELASTICITY_REVOCATIONS: [usize; 2] = [2, 4];
+
+/// Drain deadlines (seconds) the elasticity grid sweeps.
+pub const ELASTICITY_DEADLINES: [f64; 2] = [10.0, 40.0];
+
+/// The policy axis of the elasticity grid, baseline first:
+/// `shed-everything` (no migration — the deadline force-clear abandons
+/// every resident) vs `drain-relocate` (the drain controller moves
+/// residents out over the migration hop).
+pub const ELASTICITY_POLICIES: [(MigrationPolicy, &str); 2] = [
+    (MigrationPolicy::Never, "shed-everything"),
+    (MigrationPolicy::OnShed, "drain-relocate"),
 ];
 
 /// Options of one cluster-serving run (`step cluster-sim`).
@@ -93,6 +108,18 @@ pub struct ClusterOpts {
     pub gpu_profiles: Vec<GpuProfile>,
     /// Cross-GPU migration policy (`--migrate`).
     pub migrate: MigrationPolicy,
+    /// Fleet-event schedule spec (`--fleet-events`): `;`-separated
+    /// `T:GPU:ACTION[:DEADLINE]` entries or `rand:SEED:N:HORIZON`.
+    /// Empty = the static fleet.
+    pub fleet_events: String,
+    /// Standby engines behind the initial fleet (`--standby`), indexed
+    /// `gpus..gpus+standby`; activated by join events or the scaling
+    /// controller.
+    pub standby: usize,
+    /// Admission-queue depth at which the scaling controller activates
+    /// a standby engine (`--scale-up-queue-depth`, 0 = only on an
+    /// imminent shed).
+    pub scale_up_queue_depth: usize,
     /// Master seed.
     pub seed: u64,
     /// Worker threads sharding the cells (0 = all cores). Metric
@@ -128,6 +155,9 @@ impl Default for ClusterOpts {
             slo_s: None,
             gpu_profiles: Vec::new(),
             migrate: MigrationPolicy::Never,
+            fleet_events: String::new(),
+            standby: 0,
+            scale_up_queue_depth: 0,
             seed: 0,
             threads: 0,
             step_threads: 1,
@@ -191,6 +221,10 @@ impl ClusterOpts {
         };
         c.gpu_profiles = self.gpu_profiles.clone();
         c.migration = self.migrate;
+        c.fleet_events = parse_fleet_events(&self.fleet_events, self.gpus, self.standby)
+            .expect("invalid --fleet-events spec (the CLI validates before running)");
+        c.standby = self.standby;
+        c.scale_up_queue_depth = self.scale_up_queue_depth;
         c.step_threads = self.step_threads;
         c
     }
@@ -204,6 +238,28 @@ impl ClusterOpts {
         if o.gpu_profiles.is_empty() {
             o.gpu_profiles = GpuProfile::default_hetero(o.gpus);
         }
+        o
+    }
+
+    /// The option set the elasticity grid runs at: the caller's model,
+    /// fleet size, trace budget, and seed under a fixed open-loop
+    /// workload on a uniform pool, with a standby pool as deep as the
+    /// initial fleet so the scaling controller can backfill revoked
+    /// capacity. Each grid row then substitutes its own revocation
+    /// schedule and migration policy.
+    pub fn elasticity_opts(&self) -> ClusterOpts {
+        let mut o = self.clone();
+        o.clients = 0;
+        o.rate_rps = 1.0;
+        o.burst = None;
+        o.n_requests = o.n_requests.min(24);
+        o.queue_cap = 64;
+        o.max_outstanding = 8;
+        o.slo_s = None;
+        o.gpu_profiles = Vec::new();
+        o.fleet_events = String::new();
+        o.standby = o.gpus;
+        o.scale_up_queue_depth = 4;
         o
     }
 }
@@ -252,6 +308,17 @@ pub struct ClusterCell {
     pub max_gpu_share: f64,
     /// Largest per-GPU peak KV-block usage fraction.
     pub peak_block_frac: f64,
+    /// Spot revocations fired by the fleet schedule.
+    pub revocations: u64,
+    /// Requests that completed naturally on a draining GPU.
+    pub drained: u64,
+    /// Residents the drain controller relocated off a draining GPU.
+    pub rescue_migrated: u64,
+    /// Residents abandoned by a revocation deadline force-clear.
+    pub shed_on_revoke: u64,
+    /// Requests dropped (shed + abandoned) per revocation — the
+    /// elasticity grid's headline metric.
+    pub goodput_lost_per_revocation: f64,
 }
 
 impl ClusterCell {
@@ -290,6 +357,11 @@ impl ClusterCell {
                 .iter()
                 .copied()
                 .fold(0.0f64, f64::max),
+            revocations: r.counters.revocations,
+            drained: r.counters.drained,
+            rescue_migrated: r.counters.rescue_migrated,
+            shed_on_revoke: r.counters.shed_on_revoke,
+            goodput_lost_per_revocation: r.counters.goodput_lost_per_revocation(),
         }
     }
 
@@ -315,6 +387,14 @@ impl ClusterCell {
             ("queue_peak", Json::Num(self.queue_peak as f64)),
             ("max_gpu_share", Json::Num(self.max_gpu_share)),
             ("peak_block_frac", Json::Num(self.peak_block_frac)),
+            ("revocations", Json::Num(self.revocations as f64)),
+            ("drained", Json::Num(self.drained as f64)),
+            ("rescue_migrated", Json::Num(self.rescue_migrated as f64)),
+            ("shed_on_revoke", Json::Num(self.shed_on_revoke as f64)),
+            (
+                "goodput_lost_per_revocation",
+                Json::Num(self.goodput_lost_per_revocation),
+            ),
         ])
     }
 }
@@ -393,6 +473,83 @@ pub fn run_migration_grid(
     }
 }
 
+/// The fleet-event spec of one elasticity row: `n_revocations` spot
+/// revocations from t = 30 s, cycling victims from GPU 0, each with
+/// the same drain deadline. Revocations are spaced past the deadline
+/// so a lapped victim is fully revoked before its re-join fires 5 s
+/// ahead of the next revocation — every scheduled revocation lands on
+/// an active engine. Deterministic and self-describing — the spec
+/// string round-trips through [`parse_fleet_events`].
+pub fn elasticity_schedule(n_revocations: usize, deadline_s: f64, gpus: usize) -> String {
+    let g = gpus.max(1);
+    // Strictly clear of the previous lap's force-clear even on a
+    // single-GPU fleet (join and deadline at the same instant would
+    // apply join-first onto a still-draining engine, a no-op).
+    let spacing = 20.0f64.max(deadline_s + 10.0);
+    let mut parts = Vec::new();
+    for i in 0..n_revocations {
+        let t = 30.0 + spacing * i as f64;
+        let v = i % g;
+        if i >= g {
+            parts.push(format!("{}:{v}:join", t - 5.0));
+        }
+        parts.push(format!("{t}:{v}:revoke:{deadline_s}"));
+    }
+    parts.join(";")
+}
+
+/// Run the elasticity grid: STEP under the configured router while the
+/// fleet is revoked out from under it — one row per (revocation count ×
+/// drain deadline × policy) combination, `shed-everything` before
+/// `drain-relocate` within each pair so the baseline is adjacent to the
+/// treatment. Callers normally pass [`ClusterOpts::elasticity_opts`].
+/// Rows shard across `opts.threads` like the other grids; output is
+/// bit-identical for any thread count.
+pub fn run_elasticity_grid(
+    opts: &ClusterOpts,
+    gen_params: &GenParams,
+    scorer: &StepScorer,
+) -> Vec<ClusterCell> {
+    let jobs: Vec<(String, MigrationPolicy, String)> = ELASTICITY_REVOCATIONS
+        .iter()
+        .flat_map(|&n| {
+            ELASTICITY_DEADLINES.iter().flat_map(move |&d| {
+                ELASTICITY_POLICIES.iter().map(move |&(policy, plabel)| {
+                    (
+                        elasticity_schedule(n, d, opts.gpus),
+                        policy,
+                        format!("{n}rev/d{d:.0}/{plabel}"),
+                    )
+                })
+            })
+        })
+        .collect();
+    let run_one = |(schedule, policy, label): &(String, MigrationPolicy, String)| {
+        let mut o = opts.clone();
+        o.fleet_events = schedule.clone();
+        o.migrate = *policy;
+        run_cell(Method::Step, o.router, label, gen_params, scorer, &o)
+    };
+    let threads = pool::resolve_threads(opts.threads).min(jobs.len());
+    if threads <= 1 {
+        jobs.iter().map(run_one).collect()
+    } else {
+        pool::parallel_map(threads, jobs.len(), |i| run_one(&jobs[i]))
+    }
+}
+
+/// Splice the elasticity grid (rows + the option set that produced
+/// them) into an assembled `BENCH_cluster.json` payload.
+pub fn attach_elasticity_grid(json: &mut Json, ela_opts: &ClusterOpts, cells: &[ClusterCell]) {
+    if let Json::Obj(map) = json {
+        map.insert(
+            "elasticity".to_string(),
+            Json::Arr(cells.iter().map(|c| c.to_json()).collect()),
+        );
+        map.insert("elasticity_config".to_string(), config_json(ela_opts));
+    }
+}
+
 /// The option set serialized as the `config` block shared by
 /// `BENCH_cluster.json`'s main payload and its `migration_config`.
 pub fn config_json(opts: &ClusterOpts) -> Json {
@@ -434,6 +591,9 @@ pub fn config_json(opts: &ClusterOpts) -> Json {
         ("slo_s", opt_num(opts.slo_s)),
         ("gpu_profiles", profiles),
         ("migrate", Json::Str(opts.migrate.spec())),
+        ("fleet_events", Json::Str(opts.fleet_events.clone())),
+        ("standby", Json::Num(opts.standby as f64)),
+        ("scale_up_queue_depth", Json::Num(opts.scale_up_queue_depth as f64)),
         ("seed", Json::Num(opts.seed as f64)),
     ])
 }
@@ -594,8 +754,43 @@ pub fn run(opts: &ClusterOpts) -> Result<(Vec<ClusterCell>, Vec<ClusterCell>)> {
             }
         );
     }
+    // The elasticity grid: revocation count × drain deadline ×
+    // (shed-everything vs drain-relocate) on the uniform pool with a
+    // standby backfill.
+    let ela_opts = opts.elasticity_opts();
+    let elasticity = run_elasticity_grid(&ela_opts, &gen_params, &scorer);
+    print_grid(
+        &format!(
+            "-- elasticity (STEP, standby {}, open @ {} rps)",
+            ela_opts.standby, ela_opts.rate_rps
+        ),
+        &elasticity,
+    );
+    let mean_loss = |suffix: &str| {
+        let v: Vec<f64> = elasticity
+            .iter()
+            .filter(|c| c.label.ends_with(suffix))
+            .map(|c| c.goodput_lost_per_revocation)
+            .collect();
+        if v.is_empty() {
+            0.0
+        } else {
+            v.iter().sum::<f64>() / v.len() as f64
+        }
+    };
+    let (drain, shed_all) = (mean_loss("drain-relocate"), mean_loss("shed-everything"));
+    println!(
+        "  goodput lost/revocation drain-relocate {drain:.2} vs shed-everything {shed_all:.2} \
+         — {}",
+        if drain <= shed_all {
+            "draining over the migration hop beats abandoning residents"
+        } else {
+            "WARNING: drain-relocate lost more than shed-everything at this load"
+        }
+    );
     let mut json = metrics_json(opts, &methods, &routers);
     attach_migration_grid(&mut json, &mig_opts, &migration);
+    attach_elasticity_grid(&mut json, &ela_opts, &elasticity);
     // Harness-convention artifact plus the canonical BENCH_cluster.json
     // metric blocks (also written by the cluster_load bench at its own
     // quick config — last writer wins; the embedded config block
@@ -681,6 +876,64 @@ mod tests {
         assert!(text.contains("\"migration\""));
         assert!(text.contains("\"migration_config\""));
         assert!(text.contains("\"gpu_profiles\""));
+    }
+
+    #[test]
+    fn elasticity_grid_covers_the_sweep_in_order() {
+        let gp = GenParams::default_d64();
+        let sc = projection_scorer(&gp);
+        let opts = tiny().elasticity_opts();
+        assert_eq!(opts.standby, opts.gpus, "standby backfill as deep as the fleet");
+        assert!(opts.clients == 0, "elasticity rows run open loop");
+        let cells = run_elasticity_grid(&opts, &gp, &sc);
+        let n_rows =
+            ELASTICITY_REVOCATIONS.len() * ELASTICITY_DEADLINES.len() * ELASTICITY_POLICIES.len();
+        assert_eq!(cells.len(), n_rows);
+        let mut i = 0;
+        for &n in &ELASTICITY_REVOCATIONS {
+            for &d in &ELASTICITY_DEADLINES {
+                for &(_, plabel) in &ELASTICITY_POLICIES {
+                    assert_eq!(cells[i].label, format!("{n}rev/d{d:.0}/{plabel}"));
+                    assert_eq!(
+                        cells[i].revocations, n as u64,
+                        "{}: every scheduled revocation fires",
+                        cells[i].label
+                    );
+                    i += 1;
+                }
+            }
+        }
+        // Within every (count, deadline) pair, draining never loses
+        // more goodput than abandoning residents outright.
+        for pair in cells.chunks(2) {
+            assert!(
+                pair[1].goodput_lost_per_revocation <= pair[0].goodput_lost_per_revocation,
+                "{} vs {}",
+                pair[1].label,
+                pair[0].label
+            );
+        }
+        // Attached to the payload, the grid and its config are present.
+        let (m, r) = run_grids(&tiny(), &gp, &sc);
+        let mut json = metrics_json(&tiny(), &m, &r);
+        attach_elasticity_grid(&mut json, &opts, &cells);
+        let text = json.to_string_pretty();
+        assert!(text.contains("\"elasticity\""));
+        assert!(text.contains("\"elasticity_config\""));
+        assert!(text.contains("\"goodput_lost_per_revocation\""));
+        assert!(text.contains("\"standby\""));
+    }
+
+    #[test]
+    fn elasticity_schedule_round_trips() {
+        let spec = elasticity_schedule(3, 10.0, 2);
+        assert_eq!(spec, "30:0:revoke:10;50:1:revoke:10;65:0:join;70:0:revoke:10");
+        let evs = parse_fleet_events(&spec, 2, 2).expect("schedule parses");
+        assert_eq!(evs.len(), 4);
+        // A long deadline pushes laps apart so the victim is clear
+        // before its re-join.
+        let long = elasticity_schedule(3, 40.0, 2);
+        assert_eq!(long, "30:0:revoke:40;80:1:revoke:40;125:0:join;130:0:revoke:40");
     }
 
     #[test]

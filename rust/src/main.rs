@@ -7,7 +7,7 @@
 use anyhow::{bail, Result};
 use step::harness::bench_gate::GateOpts;
 use step::harness::{self, table5::ServingOpts, table6::ClusterOpts, HarnessOpts};
-use step::sim::cluster::{GpuProfile, MigrationPolicy};
+use step::sim::cluster::{parse_fleet_events, GpuProfile, MigrationPolicy};
 use step::sim::profiles::{BenchId, ModelId};
 use step::sim::router::RouterKind;
 
@@ -36,9 +36,13 @@ COMMANDS (experiments; see DESIGN.md §6):
                 engines — uniform or heterogeneous (--gpu-profile) —
                 behind a router (round-robin / least-outstanding /
                 kv-pressure) with admission control, closed-loop
-                workloads, and cross-GPU trace migration (--migrate);
-                reports goodput, shed rate, cluster-wide p50/p95/p99
-                per method, per router, and per migration policy
+                workloads, cross-GPU trace migration (--migrate), and
+                elastic fleets under a deterministic chaos schedule
+                (--fleet-events: joins, leaves, spot revocations with
+                drain deadlines, plus a standby scale-up pool); reports
+                goodput, shed rate, cluster-wide p50/p95/p99 per
+                method, per router, per migration policy, and per
+                elasticity cell (goodput lost per revocation)
     bench-gate  Compare fresh BENCH_{grid,serving,cluster}.json against
                 the checked-in results/ schemas (key-set match + the
                 non-null perf gates) and fail on regression; writes a
@@ -97,6 +101,21 @@ CLUSTER-SIM OPTIONS (plus the serve-sim options above):
                          on-shed relocates work instead of shedding;
                          on-pressure also rebalances with hysteresis
                          and rescues last-survivor prunes
+    --fleet-events SPEC  deterministic fleet chaos schedule: ;-separated
+                         T:GPU:ACTION[:DEADLINE] entries (join | leave |
+                         revoke:DEADLINE_S) or rand:SEED:N:HORIZON_S for
+                         a seeded random schedule. A revocation drains
+                         the victim — admission stops, residents migrate
+                         out under --migrate on-shed/on-pressure before
+                         the deadline, the rest are abandoned. Empty =
+                         static fleet (default)
+    --standby N          standby engines behind the initial fleet
+                         (indices R..R+N), activated by join events or
+                         the scaling controller (default 0)
+    --scale-up-queue-depth N
+                         admission-queue depth that triggers activating
+                         a standby engine (default 0 = only when a
+                         request would otherwise shed)
 
 BENCH-GATE OPTIONS:
     --results DIR    fresh bench artifacts to check (default:
@@ -270,6 +289,18 @@ fn parse_cluster_opts(args: &[String]) -> Result<ClusterOpts> {
                 })?;
                 i += 2;
             }
+            "--fleet-events" => {
+                opts.fleet_events = need_val(args, i)?.clone();
+                i += 2;
+            }
+            "--standby" => {
+                opts.standby = need_val(args, i)?.parse()?;
+                i += 2;
+            }
+            "--scale-up-queue-depth" => {
+                opts.scale_up_queue_depth = need_val(args, i)?.parse()?;
+                i += 2;
+            }
             "--requests" => {
                 opts.n_requests = need_val(args, i)?.parse()?;
                 i += 2;
@@ -316,6 +347,15 @@ fn parse_cluster_opts(args: &[String]) -> Result<ClusterOpts> {
             }
             other => bail!("unknown cluster-sim option '{other}'\n\n{USAGE}"),
         }
+    }
+    // --fleet-events can precede --gpus/--standby, so validate the spec
+    // against the final fleet shape here rather than inline.
+    if parse_fleet_events(&opts.fleet_events, opts.gpus, opts.standby).is_none() {
+        bail!(
+            "bad --fleet-events spec '{}' (want ;-separated T:GPU:ACTION[:DEADLINE] with \
+             GPU < gpus+standby, or rand:SEED:N:HORIZON_S)",
+            opts.fleet_events
+        );
     }
     Ok(opts)
 }

@@ -140,9 +140,11 @@ impl EngineCounters {
 }
 
 /// Cluster-level request accounting: what the admission layer did with
-/// every offered request. Conservation law (asserted by
-/// `tests/prop_invariants.rs`): `offered == placed + shed`, and at the
-/// end of a run `completed == placed`.
+/// every offered request. Conservation laws (asserted by
+/// `tests/prop_invariants.rs` and `tests/chaos.rs`):
+/// `offered == placed + shed`, and at the end of a run
+/// `completed + shed_on_revoke == placed` (with a static fleet
+/// `shed_on_revoke == 0` and the old `completed == placed` holds).
 #[derive(Debug, Clone, Default)]
 pub struct ClusterCounters {
     /// Arrivals presented to admission control.
@@ -165,6 +167,17 @@ pub struct ClusterCounters {
     /// Migrations that rescued a request from losing work outright: a
     /// memory event about to prune its last surviving trace.
     pub migration_saved: u64,
+    /// Spot revocations fired by the fleet schedule.
+    pub revocations: u64,
+    /// Requests that completed naturally on a draining GPU before its
+    /// revocation deadline.
+    pub drained: u64,
+    /// Residents relocated off a draining GPU by the drain controller
+    /// before the deadline (a subset of `migrated`).
+    pub rescue_migrated: u64,
+    /// Residents the deadline force-clear had to abandon — placed work
+    /// that never completes. Zero with a static fleet.
+    pub shed_on_revoke: u64,
 }
 
 impl ClusterCounters {
@@ -187,11 +200,24 @@ impl ClusterCounters {
         }
     }
 
+    /// Goodput lost per revocation: every request that was dropped —
+    /// shed at admission or abandoned by a deadline force-clear —
+    /// amortized over the revocations that destabilized the fleet.
+    /// Zero when no revocation fired.
+    pub fn goodput_lost_per_revocation(&self) -> f64 {
+        if self.revocations == 0 {
+            0.0
+        } else {
+            (self.shed + self.shed_on_revoke) as f64 / self.revocations as f64
+        }
+    }
+
     /// One-line `key=value` report of every counter.
     pub fn report(&self) -> String {
         format!(
             "offered={} placed={} shed={} completed={} queue_peak={} \
-             migrated={} migration_recompute_tok={} migration_saved={}",
+             migrated={} migration_recompute_tok={} migration_saved={} \
+             revocations={} drained={} rescue_migrated={} shed_on_revoke={}",
             self.offered,
             self.placed,
             self.shed,
@@ -200,6 +226,10 @@ impl ClusterCounters {
             self.migrated,
             self.migration_recompute_tokens,
             self.migration_saved,
+            self.revocations,
+            self.drained,
+            self.rescue_migrated,
+            self.shed_on_revoke,
         )
     }
 }
@@ -298,19 +328,30 @@ mod tests {
             offered: 10,
             placed: 8,
             shed: 2,
-            completed: 8,
+            completed: 6,
             queue_peak: 3,
             migrated: 4,
             migration_recompute_tokens: 1200,
             migration_saved: 1,
+            revocations: 2,
+            drained: 1,
+            rescue_migrated: 3,
+            shed_on_revoke: 2,
         };
         assert!((c.shed_rate() - 0.2).abs() < 1e-12);
-        assert!((c.goodput_rps(4.0) - 2.0).abs() < 1e-12);
+        assert!((c.goodput_rps(4.0) - 1.5).abs() < 1e-12);
         assert_eq!(ClusterCounters::default().shed_rate(), 0.0);
         assert_eq!(c.goodput_rps(0.0), 0.0);
+        // (shed + shed_on_revoke) / revocations = (2 + 2) / 2.
+        assert!((c.goodput_lost_per_revocation() - 2.0).abs() < 1e-12);
+        assert_eq!(ClusterCounters::default().goodput_lost_per_revocation(), 0.0);
         assert!(c.report().contains("shed=2"));
         assert!(c.report().contains("migrated=4"));
         assert!(c.report().contains("migration_recompute_tok=1200"));
         assert!(c.report().contains("migration_saved=1"));
+        assert!(c.report().contains("revocations=2"));
+        assert!(c.report().contains("drained=1"));
+        assert!(c.report().contains("rescue_migrated=3"));
+        assert!(c.report().contains("shed_on_revoke=2"));
     }
 }

@@ -37,6 +37,22 @@
 //! hysteresis) and rescues requests whose *last* surviving trace a
 //! memory event would prune.
 //!
+//! **Elastic fleets.** A deterministic [`FleetEvent`] schedule
+//! (explicit, or seeded-random via [`random_fleet_events`]) makes R
+//! dynamic: GPUs join from a standby pool, leave gracefully, or get
+//! spot-revoked with a drain deadline. A revocation stops admission to
+//! the victim (its cached router view reads as permanently at-quota,
+//! so every placement filter excludes it), and the drain controller
+//! relocates its residents through the same migration hop onto active
+//! below-quota GPUs; whatever is still resident when the deadline
+//! fires is abandoned and counted as
+//! [`ClusterCounters::shed_on_revoke`]. A scaling controller activates
+//! standby GPUs when admission runs hot (an imminent shed, or the
+//! queue reaching [`ClusterConfig::scale_up_queue_depth`]). Control
+//! events run on the same global clock as arrivals — ties go to the
+//! control event — so every chaos schedule is byte-identical across
+//! `--threads` and `--step-threads`.
+//!
 //! **Event order.** Arrivals (open-loop pregenerated, or closed-loop
 //! completion-driven) live in one global min-heap keyed by
 //! `(time, issue sequence)`. Before each arrival is offered, every
@@ -88,6 +104,7 @@ use crate::sim::serve::{MigratedRequest, RequestOutcome, ServeEngine, ServeSimCo
 use crate::sim::tracegen::TraceGen;
 use crate::sim::workload::{Arrival, ClosedLoopClients, ClosedLoopSpec, WorkloadSpec};
 use crate::util::pool;
+use crate::util::rng::Rng;
 
 /// Capacity/speed profile of one GPU in a heterogeneous pool.
 ///
@@ -228,6 +245,229 @@ impl MigrationPolicy {
     }
 }
 
+/// What a scheduled fleet-lifecycle event does to its target GPU.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FleetAction {
+    /// Activate a standby (or previously departed) GPU: it becomes
+    /// placeable immediately.
+    Join,
+    /// Graceful departure: admission stops, residents run to natural
+    /// completion (no force-clear), and the GPU departs once empty.
+    Leave,
+    /// Spot revocation: admission stops and the drain controller has
+    /// `deadline_s` seconds to relocate residents before the
+    /// force-clear abandons whatever is left.
+    Revoke {
+        /// Seconds between the revocation notice and the force-clear.
+        deadline_s: f64,
+    },
+}
+
+/// One deterministic fleet-lifecycle event: at simulation time
+/// [`t_s`](Self::t_s), apply [`action`](Self::action) to GPU
+/// [`gpu`](Self::gpu). Events targeting a GPU in an incompatible state
+/// (joining an active GPU, revoking a standby or already-draining one)
+/// are no-ops, so arbitrary schedules are safe to run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FleetEvent {
+    /// Simulation time the event fires (seconds, non-negative finite).
+    pub t_s: f64,
+    /// Target GPU id (dense over active + standby slots).
+    pub gpu: usize,
+    /// What happens to the target.
+    pub action: FleetAction,
+}
+
+impl FleetEvent {
+    /// Parse one explicit event spec — `T:GPU:join`, `T:GPU:leave`, or
+    /// `T:GPU:revoke:DEADLINE_S` — with `gpu < total_gpus`.
+    pub fn parse(s: &str, total_gpus: usize) -> Option<FleetEvent> {
+        let mut it = s.split(':');
+        let t_s: f64 = it.next()?.trim().parse().ok()?;
+        let gpu: usize = it.next()?.trim().parse().ok()?;
+        let action = match it.next()?.trim() {
+            "join" => FleetAction::Join,
+            "leave" => FleetAction::Leave,
+            "revoke" => {
+                let deadline_s: f64 = it.next()?.trim().parse().ok()?;
+                if !deadline_s.is_finite() || deadline_s < 0.0 {
+                    return None;
+                }
+                FleetAction::Revoke { deadline_s }
+            }
+            _ => return None,
+        };
+        if it.next().is_some() || !t_s.is_finite() || t_s < 0.0 || gpu >= total_gpus {
+            return None;
+        }
+        Some(FleetEvent { t_s, gpu, action })
+    }
+
+    /// The CLI spelling (round-trips through [`parse`](Self::parse)).
+    pub fn spec(&self) -> String {
+        match self.action {
+            FleetAction::Join => format!("{}:{}:join", self.t_s, self.gpu),
+            FleetAction::Leave => format!("{}:{}:leave", self.t_s, self.gpu),
+            FleetAction::Revoke { deadline_s } => {
+                format!("{}:{}:revoke:{}", self.t_s, self.gpu, deadline_s)
+            }
+        }
+    }
+}
+
+/// Parse the CLI `--fleet-events` spelling: either
+/// `rand:SEED:N_EVENTS:HORIZON_S` (the seeded chaos generator,
+/// [`random_fleet_events`]) or a `;`-separated list of explicit
+/// events, each `T:GPU:join`, `T:GPU:leave`, or
+/// `T:GPU:revoke:DEADLINE_S`. GPU ids must be below `gpus + standby`.
+/// An empty spec is the empty schedule — the static fleet.
+pub fn parse_fleet_events(
+    spec: &str,
+    gpus: usize,
+    standby: usize,
+) -> Option<Vec<FleetEvent>> {
+    let spec = spec.trim();
+    if spec.is_empty() {
+        return Some(Vec::new());
+    }
+    if let Some(rest) = spec.strip_prefix("rand:") {
+        let mut it = rest.split(':');
+        let seed: u64 = it.next()?.trim().parse().ok()?;
+        let n_events: usize = it.next()?.trim().parse().ok()?;
+        let horizon_s: f64 = it.next()?.trim().parse().ok()?;
+        if it.next().is_some() || !horizon_s.is_finite() || horizon_s <= 0.0 {
+            return None;
+        }
+        return Some(random_fleet_events(seed, gpus, standby, n_events, horizon_s));
+    }
+    let total = gpus + standby;
+    let mut out = Vec::new();
+    for part in spec.split(';') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        out.push(FleetEvent::parse(part, total)?);
+    }
+    Some(out)
+}
+
+/// The shared deterministic chaos driver: generate `n_events` fleet
+/// events over `[0, horizon_s]` from `seed`. A shadow fleet state
+/// keeps the schedule sensible — at least one GPU stays
+/// (shadow-)active, departures are preferred over joins when both are
+/// possible (p = 0.6), a departure is a spot revocation with
+/// p = 0.75 (deadline uniform in 5–25 % of the horizon) and a
+/// graceful leave otherwise, and joins reactivate standby or departed
+/// slots. Times come out sorted ascending. The same
+/// `(seed, gpus, standby, n_events, horizon_s)` always yields the same
+/// schedule — the chaos tests, the CLI, and the bench all share it.
+pub fn random_fleet_events(
+    seed: u64,
+    gpus: usize,
+    standby: usize,
+    n_events: usize,
+    horizon_s: f64,
+) -> Vec<FleetEvent> {
+    let total = gpus + standby;
+    let mut rng = Rng::new(seed ^ 0xF1EE_7E4E_A75C_11A0);
+    let mut times: Vec<f64> =
+        (0..n_events).map(|_| rng.range_f64(0.0, horizon_s)).collect();
+    times.sort_by_key(|t| t.to_bits());
+    let mut active: Vec<bool> = (0..total).map(|g| g < gpus).collect();
+    let mut out = Vec::with_capacity(n_events);
+    for t_s in times {
+        let on: Vec<usize> = (0..total).filter(|&g| active[g]).collect();
+        let off: Vec<usize> = (0..total).filter(|&g| !active[g]).collect();
+        let can_remove = on.len() > 1;
+        let can_add = !off.is_empty();
+        let remove = match (can_remove, can_add) {
+            (true, true) => rng.bernoulli(0.6),
+            (true, false) => true,
+            (false, true) => false,
+            (false, false) => break,
+        };
+        if remove {
+            let gpu = on[rng.below(on.len())];
+            let action = if rng.bernoulli(0.75) {
+                FleetAction::Revoke {
+                    deadline_s: rng.range_f64(0.05 * horizon_s, 0.25 * horizon_s),
+                }
+            } else {
+                FleetAction::Leave
+            };
+            active[gpu] = false;
+            out.push(FleetEvent { t_s, gpu, action });
+        } else {
+            let gpu = off[rng.below(off.len())];
+            active[gpu] = true;
+            out.push(FleetEvent { t_s, gpu, action: FleetAction::Join });
+        }
+    }
+    out
+}
+
+/// Lifecycle state of one GPU slot in the elastic fleet.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum GpuState {
+    /// In the standby pool: holds no work and steps no events until a
+    /// join event or the scaling controller activates it.
+    Standby,
+    /// Serving: placeable and stepped by the event loop.
+    Active,
+    /// Admission stopped; residents drain (relocate or complete) until
+    /// the absolute deadline (`f64::INFINITY` = graceful leave, no
+    /// force-clear). Still stepped so in-flight work makes progress.
+    Draining {
+        /// Absolute force-clear instant (simulation seconds).
+        deadline_s: f64,
+    },
+    /// Departed: empty, unstepped, invisible to the router. A later
+    /// join event may reactivate the slot.
+    Revoked,
+}
+
+impl GpuState {
+    /// May the router place new work here?
+    fn placeable(self) -> bool {
+        matches!(self, GpuState::Active)
+    }
+
+    /// Does the event loop advance this engine?
+    fn steppable(self) -> bool {
+        matches!(self, GpuState::Active | GpuState::Draining { .. })
+    }
+}
+
+/// What a fleet-log entry records.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FleetLogKind {
+    /// The GPU became active (standby activation or rejoin).
+    Joined,
+    /// Admission to the GPU stopped (graceful leave or revocation
+    /// notice).
+    DrainStarted,
+    /// The GPU left the fleet holding zero residents.
+    Departed,
+}
+
+/// One entry of the fleet-lifecycle audit log
+/// ([`ClusterResult::fleet_log`]). The chaos suite asserts on it: a
+/// [`Departed`](FleetLogKind::Departed) entry always shows zero
+/// residents, and lands at or before the revocation deadline.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FleetLogEntry {
+    /// Simulation time of the transition (seconds).
+    pub t_s: f64,
+    /// The GPU that transitioned.
+    pub gpu: usize,
+    /// Which transition happened.
+    pub kind: FleetLogKind,
+    /// Outstanding residents immediately after the transition (always
+    /// zero for [`FleetLogKind::Departed`]).
+    pub residents_after: usize,
+}
+
 /// The arrival regime driving a cluster run.
 #[derive(Debug, Clone)]
 pub enum ClusterWorkload {
@@ -326,6 +566,21 @@ pub struct ClusterConfig {
     /// contract already permits. Default 1: the harness shards whole
     /// cluster cells across threads, and nesting both oversubscribes.
     pub step_threads: usize,
+    /// Deterministic fleet-lifecycle schedule. Empty (default) = the
+    /// static fleet, byte-identical to the schedule-free cluster.
+    /// Entries are sorted by time before the run; events targeting a
+    /// GPU in an incompatible state are no-ops.
+    pub fleet_events: Vec<FleetEvent>,
+    /// Extra engines in the standby pool behind the active
+    /// [`gpus`](Self::gpus) (dense ids `gpus..gpus + standby`). They
+    /// hold no work and step no events until a join event or the
+    /// scaling controller activates them.
+    pub standby: usize,
+    /// Queue-depth trigger of the scaling controller: an arrival about
+    /// to shed always tries to activate a standby GPU first; with this
+    /// set above 0, the admission queue reaching this depth does too.
+    /// Standby exhaustion falls back to the usual queue/shed path.
+    pub scale_up_queue_depth: usize,
 }
 
 impl ClusterConfig {
@@ -358,17 +613,27 @@ impl ClusterConfig {
             migration: MigrationPolicy::Never,
             shard_size: 0,
             step_threads: 1,
+            fleet_events: Vec::new(),
+            standby: 0,
+            scale_up_queue_depth: 0,
         }
+    }
+
+    /// Total engine slots: active fleet plus standby pool. Per-GPU
+    /// vectors (views, peaks, results) are dense over this range so
+    /// shard arithmetic stays valid as GPUs join and leave.
+    pub fn total_gpus(&self) -> usize {
+        self.gpus + self.standby
     }
 
     /// The effective shard size of the two-stage router:
     /// [`shard_size`](Self::shard_size), or the ≈√R automatic choice
-    /// when it is 0.
+    /// (over every slot, standby included) when it is 0.
     pub fn resolved_shard_size(&self) -> usize {
         if self.shard_size > 0 {
             self.shard_size
         } else {
-            crate::sim::router::auto_shard_size(self.gpus)
+            crate::sim::router::auto_shard_size(self.total_gpus())
         }
     }
 
@@ -471,7 +736,8 @@ pub struct ClusterResult {
     /// One outcome per *completed* request, sorted by cluster-global
     /// request id (shed requests have no outcome).
     pub outcomes: Vec<RequestOutcome>,
-    /// Request ids admission shed, in arrival order.
+    /// Request ids dropped — shed by admission, or abandoned by a
+    /// revocation force-clear — in drop order.
     pub shed_rids: Vec<usize>,
     /// Wall-clock from the first arrival to the last completion.
     pub makespan_s: f64,
@@ -490,6 +756,9 @@ pub struct ClusterResult {
     pub per_gpu_peak_outstanding: Vec<usize>,
     /// Peak KV-block usage fraction per GPU.
     pub per_gpu_peak_block_frac: Vec<f64>,
+    /// Fleet-lifecycle audit log, in transition order (empty for a
+    /// static fleet).
+    pub fleet_log: Vec<FleetLogEntry>,
 }
 
 impl ClusterResult {
@@ -555,6 +824,21 @@ struct FrontDoor {
     /// rebuilt on entering the drain phase and invalidated whenever the
     /// arrival phase advances engines wholesale).
     lag_live: bool,
+    /// Lifecycle state per GPU slot (dense over active + standby).
+    state: Vec<GpuState>,
+    /// The time-sorted fleet-event schedule; `fleet_next` indexes the
+    /// next unapplied entry.
+    fleet_events: Vec<FleetEvent>,
+    fleet_next: usize,
+    /// Min-heap of pending force-clear deadlines `(deadline bits, gpu)`.
+    /// Entries go stale when a draining GPU empties early (or the slot
+    /// later rejoins and is revoked again); pops validate against the
+    /// GPU's current `Draining` deadline.
+    deadline_heap: BinaryHeap<Reverse<(u64, usize)>>,
+    /// Number of GPUs currently in a `Draining` state.
+    draining: usize,
+    /// Fleet-lifecycle audit log.
+    fleet_log: Vec<FleetLogEntry>,
 }
 
 impl FrontDoor {
@@ -617,14 +901,22 @@ impl<'a> ClusterSim<'a> {
     /// Run the whole workload to completion.
     pub fn run(&self) -> ClusterResult {
         let cfg = self.cfg;
+        let total = cfg.total_gpus();
         let ecfgs: Vec<ServeSimConfig> =
-            (0..cfg.gpus).map(|g| cfg.engine_config_for(g)).collect();
+            (0..total).map(|g| cfg.engine_config_for(g)).collect();
         let mut engines: Vec<ServeEngine<'_>> = ecfgs
             .iter()
             .map(|ecfg| ServeEngine::new(ecfg, self.gen, self.scorer))
             .collect();
         let nq = self.gen.bench.n_questions;
-        let n_shards = cfg.gpus.div_ceil(cfg.resolved_shard_size());
+        let n_shards = total.div_ceil(cfg.resolved_shard_size());
+
+        // The schedule runs in time order whatever order it was given
+        // in; entries aimed past the slot range are dropped up front.
+        // The stable sort keeps same-instant events in authored order.
+        let mut schedule = cfg.fleet_events.clone();
+        schedule.retain(|e| e.gpu < total && e.t_s.is_finite() && e.t_s >= 0.0);
+        schedule.sort_by_key(|e| e.t_s.to_bits());
 
         let mut fd = FrontDoor {
             meta: Vec::new(),
@@ -635,7 +927,7 @@ impl<'a> ClusterSim<'a> {
             router: cfg.router.build_with(cfg.resolved_shard_size()),
             counters: ClusterCounters::default(),
             shed_rids: Vec::new(),
-            per_gpu_peak_outstanding: vec![0; cfg.gpus],
+            per_gpu_peak_outstanding: vec![0; total],
             completed_blocks: 0.0,
             epoch: None,
             t_last_done: 0.0,
@@ -645,7 +937,7 @@ impl<'a> ClusterSim<'a> {
             // Placeholder views: `view_version` starts at u64::MAX while
             // engine versions start at 0, so every entry is rebuilt
             // before its first read.
-            view_cache: (0..cfg.gpus)
+            view_cache: (0..total)
                 .map(|g| GpuView {
                     gpu: g,
                     outstanding: 0,
@@ -657,11 +949,19 @@ impl<'a> ClusterSim<'a> {
                     survivor_demand_blocks: 0.0,
                 })
                 .collect(),
-            view_version: vec![u64::MAX; cfg.gpus],
+            view_version: vec![u64::MAX; total],
             shard_dirty: vec![true; n_shards],
             shard_agg: vec![None; n_shards],
             lag_heap: BinaryHeap::new(),
             lag_live: false,
+            state: (0..total)
+                .map(|g| if g < cfg.gpus { GpuState::Active } else { GpuState::Standby })
+                .collect(),
+            fleet_events: schedule,
+            fleet_next: 0,
+            deadline_heap: BinaryHeap::new(),
+            draining: 0,
+            fleet_log: Vec::new(),
         };
 
         // ---- seed the arrival stream.
@@ -692,31 +992,34 @@ impl<'a> ClusterSim<'a> {
 
         // ---- the global event loop.
         loop {
-            if let Some(&Reverse(head)) = fd.pending.peek() {
-                let ta = f64::from_bits(head.t_bits);
+            // Control events (fleet joins/leaves/revocations and
+            // force-clear deadlines) interleave with arrivals on the
+            // same clock; ties go to the control event, so a revocation
+            // firing exactly at an arrival instant stops admission
+            // before the arrival is offered. All control handling runs
+            // serially after the wholesale advancement, so the sequence
+            // is identical for every `step_threads` value.
+            let t_ctl = Self::next_control_time(&fd);
+            let t_arr = fd.pending.peek().map(|&Reverse(h)| f64::from_bits(h.t_bits));
+            let ctl_first = match (t_ctl, t_arr) {
+                (Some(tc), Some(ta)) => tc <= ta,
+                (Some(_), None) => true,
+                (None, _) => false,
+            };
+            if ctl_first {
+                let tc = t_ctl.expect("checked Some above");
+                self.advance_engines(&mut engines, &fd, step_threads, tc);
+                fd.lag_live = false;
+                self.harvest(&mut engines, &mut fd);
+                self.apply_control(&mut engines, &mut fd, tc);
+                self.drain_queue(&mut engines, &mut fd);
+                continue;
+            }
+            if let Some(ta) = t_arr {
                 // Advance every engine to the arrival instant; harvest
                 // completions (which may spawn earlier closed-loop
                 // arrivals — the heap reorders) and drain the queue.
-                // Only engines actually behind `ta` with work in flight
-                // need stepping — fan out only when two or more do, so
-                // sparse intervals don't pay thread-spawn overhead.
-                if step_threads > 1 {
-                    let mut lagging: Vec<&mut ServeEngine<'_>> = engines
-                        .iter_mut()
-                        .filter(|e| !e.is_idle() && e.clock() < ta)
-                        .collect();
-                    if lagging.len() > 1 {
-                        pool::parallel_for_each_mut(step_threads, &mut lagging, |_, e| {
-                            e.run_until(ta)
-                        });
-                    } else if let Some(e) = lagging.first_mut() {
-                        e.run_until(ta);
-                    }
-                } else {
-                    for e in engines.iter_mut() {
-                        e.run_until(ta);
-                    }
-                }
+                self.advance_engines(&mut engines, &fd, step_threads, ta);
                 // Every clock moved: the laggard heap is stale wholesale.
                 fd.lag_live = false;
                 self.harvest(&mut engines, &mut fd);
@@ -727,7 +1030,7 @@ impl<'a> ClusterSim<'a> {
                 if !fd.lag_live {
                     fd.lag_heap.clear();
                     for (g, e) in engines.iter().enumerate() {
-                        if !e.is_idle() {
+                        if fd.state[g].steppable() && !e.is_idle() {
                             fd.lag_heap.push(Reverse((e.clock().to_bits(), g)));
                         }
                     }
@@ -736,12 +1039,15 @@ impl<'a> ClusterSim<'a> {
                 // Laggard pick: pop until a live entry surfaces. Clock
                 // bits order like the non-negative finite clocks, and
                 // the `(bits, gpu)` key reproduces the serial fold's
-                // lowest-GPU tie-break.
+                // lowest-GPU tie-break. Keys of engines that left the
+                // fleet are stale by definition — skipped here, never
+                // advanced.
                 let next = loop {
                     match fd.lag_heap.peek() {
                         None => break None,
                         Some(&Reverse((bits, g)))
-                            if !engines[g].is_idle()
+                            if fd.state[g].steppable()
+                                && !engines[g].is_idle()
                                 && engines[g].clock().to_bits() == bits =>
                         {
                             break Some(g)
@@ -764,11 +1070,22 @@ impl<'a> ClusterSim<'a> {
                         self.drain_queue(&mut engines, &mut fd);
                     }
                     None if !fd.queue.is_empty() => {
-                        // Engines idle with requests still queued: quota
-                        // is free again, so placements resume (possibly
-                        // only partially — the next loop pass advances
-                        // the now-busy engines).
-                        self.drain_queue(&mut engines, &mut fd);
+                        if self.any_eligible(&engines, &fd) {
+                            // Engines idle with requests still queued:
+                            // quota is free again, so placements resume
+                            // (possibly only partially — the next loop
+                            // pass advances the now-busy engines).
+                            self.drain_queue(&mut engines, &mut fd);
+                        } else {
+                            // No active GPU, nothing in flight, and no
+                            // control event left to change either: the
+                            // queue can never drain. Shed it so the run
+                            // terminates (closed-loop clients re-issue
+                            // until their budget is fully offered).
+                            while let Some(rid) = fd.queue.pop_front() {
+                                self.shed(&mut fd, rid);
+                            }
+                        }
                     }
                     None => break,
                 }
@@ -780,7 +1097,17 @@ impl<'a> ClusterSim<'a> {
             fd.counters.placed + fd.counters.shed,
             "placement conservation"
         );
-        debug_assert_eq!(fd.counters.completed, fd.counters.placed);
+        debug_assert_eq!(
+            fd.counters.completed + fd.counters.shed_on_revoke,
+            fd.counters.placed,
+            "every placed request completes or is abandoned by a force-clear"
+        );
+        debug_assert_eq!(
+            fd.fleet_next,
+            fd.fleet_events.len(),
+            "the fleet schedule is fully consumed"
+        );
+        debug_assert!(fd.deadline_heap.is_empty(), "no force-clear left pending");
 
         // ---- aggregate: per-GPU results merge into cluster metrics.
         let mut outcomes: Vec<RequestOutcome> = Vec::new();
@@ -821,7 +1148,281 @@ impl<'a> ClusterSim<'a> {
             per_gpu_requests,
             per_gpu_peak_outstanding: fd.per_gpu_peak_outstanding,
             per_gpu_peak_block_frac,
+            fleet_log: fd.fleet_log,
         }
+    }
+
+    /// Advance every steppable engine to `t` — the wholesale catch-up
+    /// before an arrival or control instant, fanned out across
+    /// `step_threads` when two or more engines actually lag. Standby
+    /// and departed engines hold no work and are skipped entirely.
+    fn advance_engines(
+        &self,
+        engines: &mut [ServeEngine<'_>],
+        fd: &FrontDoor,
+        step_threads: usize,
+        t: f64,
+    ) {
+        if step_threads > 1 {
+            let mut lagging: Vec<&mut ServeEngine<'_>> = engines
+                .iter_mut()
+                .enumerate()
+                .filter(|(g, e)| fd.state[*g].steppable() && !e.is_idle() && e.clock() < t)
+                .map(|(_, e)| e)
+                .collect();
+            if lagging.len() > 1 {
+                pool::parallel_for_each_mut(step_threads, &mut lagging, |_, e| {
+                    e.run_until(t)
+                });
+            } else if let Some(e) = lagging.first_mut() {
+                e.run_until(t);
+            }
+        } else {
+            for (g, e) in engines.iter_mut().enumerate() {
+                if fd.state[g].steppable() {
+                    e.run_until(t);
+                }
+            }
+        }
+    }
+
+    /// The next control instant: the earlier of the next unapplied
+    /// schedule entry and the earliest pending force-clear deadline.
+    /// A stale deadline entry (its GPU emptied early and departed) may
+    /// surface here; it costs one harmless extra control step and is
+    /// discarded by [`apply_control`](Self::apply_control) —
+    /// deterministically, so every thread count sees the same sequence.
+    fn next_control_time(fd: &FrontDoor) -> Option<f64> {
+        let sched = fd.fleet_events.get(fd.fleet_next).map(|e| e.t_s);
+        let dl = fd.deadline_heap.peek().map(|&Reverse((bits, _))| f64::from_bits(bits));
+        match (sched, dl) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, None) => a,
+            (None, b) => b,
+        }
+    }
+
+    /// Apply every control event due at `t`: schedule entries first (in
+    /// schedule order), then force-clear deadlines (in deadline order).
+    /// The engines have already been advanced and harvested to `t`.
+    fn apply_control(&self, engines: &mut [ServeEngine<'_>], fd: &mut FrontDoor, t: f64) {
+        while let Some(&ev) = fd.fleet_events.get(fd.fleet_next) {
+            if ev.t_s > t {
+                break;
+            }
+            fd.fleet_next += 1;
+            match ev.action {
+                FleetAction::Join => self.fleet_join(&*engines, fd, ev.gpu, t),
+                FleetAction::Leave => {
+                    self.fleet_drain(engines, fd, ev.gpu, f64::INFINITY, t);
+                }
+                FleetAction::Revoke { deadline_s } => {
+                    if self.fleet_drain(engines, fd, ev.gpu, t + deadline_s, t) {
+                        fd.counters.revocations += 1;
+                        fd.deadline_heap
+                            .push(Reverse(((t + deadline_s).to_bits(), ev.gpu)));
+                    }
+                }
+            }
+        }
+        while let Some(&Reverse((bits, g))) = fd.deadline_heap.peek() {
+            if f64::from_bits(bits) > t {
+                break;
+            }
+            fd.deadline_heap.pop();
+            // An entry is live only while its GPU still drains toward
+            // exactly this deadline — it may have emptied and departed,
+            // or rejoined (and even been revoked again), since the push.
+            let live = matches!(fd.state[g], GpuState::Draining { deadline_s }
+                if deadline_s.to_bits() == bits);
+            if live {
+                self.fleet_force_clear(engines, fd, g, f64::from_bits(bits));
+            }
+        }
+    }
+
+    /// Activate GPU `g` (standby activation or rejoin after a
+    /// departure). Joining a GPU that is active or still draining is a
+    /// no-op, so arbitrary schedules stay safe.
+    fn fleet_join(&self, engines: &[ServeEngine<'_>], fd: &mut FrontDoor, g: usize, t: f64) {
+        if !matches!(fd.state[g], GpuState::Standby | GpuState::Revoked) {
+            return;
+        }
+        debug_assert_eq!(engines[g].outstanding(), 0, "a joining GPU is empty");
+        fd.state[g] = GpuState::Active;
+        // Force a view rebuild: the at-quota sentinel must clear.
+        fd.view_version[g] = u64::MAX;
+        fd.fleet_log.push(FleetLogEntry {
+            t_s: t,
+            gpu: g,
+            kind: FleetLogKind::Joined,
+            residents_after: engines[g].outstanding(),
+        });
+        // A joining engine is empty and idle; the laggard heap tracks
+        // busy engines only, so no entry is needed until work lands.
+    }
+
+    /// Stop admission to GPU `g` and start draining it toward the
+    /// absolute `deadline_s` (`f64::INFINITY` = graceful leave).
+    /// Returns whether the drain actually started (the GPU was
+    /// active). An already-empty GPU departs on the spot.
+    fn fleet_drain(
+        &self,
+        engines: &mut [ServeEngine<'_>],
+        fd: &mut FrontDoor,
+        g: usize,
+        deadline_s: f64,
+        t: f64,
+    ) -> bool {
+        if !matches!(fd.state[g], GpuState::Active) {
+            return false;
+        }
+        fd.state[g] = GpuState::Draining { deadline_s };
+        fd.draining += 1;
+        fd.view_version[g] = u64::MAX;
+        fd.fleet_log.push(FleetLogEntry {
+            t_s: t,
+            gpu: g,
+            kind: FleetLogKind::DrainStarted,
+            residents_after: engines[g].outstanding(),
+        });
+        // First relocation pass right away; an emptied victim departs
+        // immediately.
+        self.drain_step_gpu(engines, fd, g);
+        if engines[g].outstanding() == 0 {
+            self.depart(&*engines, fd, g, t);
+        }
+        true
+    }
+
+    /// One relocation pass of the drain controller over draining GPU
+    /// `g`: while the migration policy permits and some *active*
+    /// below-quota GPU has room, extract residents and move them out
+    /// (rescue migrations). Quota-respecting — the drain must not
+    /// overload survivors, which is what makes the deadline
+    /// meaningful. With [`MigrationPolicy::Never`] this is a no-op:
+    /// the shed-everything baseline, where residents either finish
+    /// before the deadline or are abandoned by the force-clear.
+    fn drain_step_gpu(&self, engines: &mut [ServeEngine<'_>], fd: &mut FrontDoor, g: usize) {
+        if !self.cfg.migration.on_shed() {
+            return;
+        }
+        let quota = self.cfg.admission.max_outstanding_per_gpu;
+        loop {
+            if engines[g].outstanding() == 0 {
+                return;
+            }
+            // Target: lowest-pressure active GPU with quota headroom
+            // (first minimum in GPU order).
+            let mut tgt: Option<(f64, usize)> = None;
+            for o in 0..engines.len() {
+                if o == g || !fd.state[o].placeable() || engines[o].outstanding() >= quota
+                {
+                    continue;
+                }
+                let p = self.pressure(engines, o);
+                let better = match tgt {
+                    None => true,
+                    Some((bp, _)) => p < bp,
+                };
+                if better {
+                    tgt = Some((p, o));
+                }
+            }
+            let Some((_, tgt_g)) = tgt else { return };
+            let Some(victim) = engines[g].migration_victim() else { return };
+            let m = engines[g]
+                .extract_request(victim)
+                .expect("the victim is outstanding on its source");
+            fd.counters.rescue_migrated += 1;
+            self.relocate(engines, fd, m, tgt_g);
+        }
+    }
+
+    /// The revocation deadline fired with residents still on GPU `g`:
+    /// one last relocation pass, then abandon whatever is left —
+    /// placed work that never completes, counted as
+    /// [`ClusterCounters::shed_on_revoke`].
+    fn fleet_force_clear(
+        &self,
+        engines: &mut [ServeEngine<'_>],
+        fd: &mut FrontDoor,
+        g: usize,
+        t: f64,
+    ) {
+        self.drain_step_gpu(engines, fd, g);
+        while let Some(victim) = engines[g].migration_victim() {
+            let m = engines[g]
+                .extract_request(victim)
+                .expect("the victim is outstanding on its source");
+            self.abandon(fd, m.rid, t);
+        }
+        debug_assert_eq!(
+            engines[g].outstanding(),
+            0,
+            "every resident relocated, completed, or was abandoned"
+        );
+        self.depart(&*engines, fd, g, t);
+    }
+
+    /// Count an abandoned (force-cleared) request: placed work that
+    /// never completes. Its closed-loop client re-enters the think
+    /// state, so the configured budget is still fully offered.
+    fn abandon(&self, fd: &mut FrontDoor, rid: usize, t: f64) {
+        fd.counters.shed_on_revoke += 1;
+        fd.shed_rids.push(rid);
+        let client = fd.meta[rid].client;
+        if client != usize::MAX {
+            let next = fd
+                .clients
+                .as_mut()
+                .expect("closed loop has clients")
+                .next_arrival(client, t);
+            if let Some(a) = next {
+                let eb = self.expected_footprint(a.qid);
+                fd.schedule(&a, client, eb);
+            }
+        }
+    }
+
+    /// Remove an emptied draining GPU from the fleet: it stops
+    /// stepping, leaves the router's eligible set, and exits the
+    /// laggard heap lazily (its stale keys are skipped on pop).
+    fn depart(&self, engines: &[ServeEngine<'_>], fd: &mut FrontDoor, g: usize, t: f64) {
+        debug_assert_eq!(engines[g].outstanding(), 0, "departure requires an empty GPU");
+        debug_assert!(matches!(fd.state[g], GpuState::Draining { .. }));
+        fd.state[g] = GpuState::Revoked;
+        fd.draining -= 1;
+        fd.view_version[g] = u64::MAX;
+        fd.fleet_log.push(FleetLogEntry {
+            t_s: t,
+            gpu: g,
+            kind: FleetLogKind::Departed,
+            residents_after: 0,
+        });
+    }
+
+    /// The scaling controller's one move: activate the lowest-indexed
+    /// standby GPU, if any. Departed (revoked) slots do not come back
+    /// this way — the spot market reclaimed them; only an explicit
+    /// join event revives those. Returns whether the fleet grew.
+    fn scale_up(&self, engines: &[ServeEngine<'_>], fd: &mut FrontDoor, t: f64) -> bool {
+        let Some(g) =
+            (0..engines.len()).find(|&g| matches!(fd.state[g], GpuState::Standby))
+        else {
+            return false;
+        };
+        self.fleet_join(engines, fd, g, t);
+        true
+    }
+
+    /// Is any active GPU below its admission quota?
+    fn any_eligible(&self, engines: &[ServeEngine<'_>], fd: &FrontDoor) -> bool {
+        let quota = self.cfg.admission.max_outstanding_per_gpu;
+        engines
+            .iter()
+            .enumerate()
+            .any(|(g, e)| fd.state[g].placeable() && e.outstanding() < quota)
     }
 
     /// The benchmark's top trace-length quartile — the question subset
@@ -848,6 +1449,11 @@ impl<'a> ClusterSim<'a> {
             engines[g].drain_completions_into(&mut done);
             for &(rid, t_done) in &done {
                 fd.counters.completed += 1;
+                if matches!(fd.state[g], GpuState::Draining { .. }) {
+                    // A natural completion on a draining GPU beat the
+                    // deadline.
+                    fd.counters.drained += 1;
+                }
                 fd.completed_blocks += fd.meta[rid].expected_blocks;
                 fd.t_last_done = fd.t_last_done.max(t_done);
                 let client = fd.meta[rid].client;
@@ -875,19 +1481,55 @@ impl<'a> ClusterSim<'a> {
             e.drain_migrations_into(&mut migs);
         }
         for m in migs.drain(..) {
-            let mut target = 0usize;
-            let mut best = f64::INFINITY;
-            for g in 0..engines.len() {
-                let p = self.pressure(engines, g);
-                if p < best {
-                    best = p;
-                    target = g;
+            // Prefer an active target; with none left (every survivor
+            // draining), fall back to any still-stepping GPU so the
+            // rescue lands somewhere rather than vanishing — the
+            // rescuing engine itself is steppable, so one always
+            // exists.
+            let mut target: Option<(f64, usize)> = None;
+            for pass in 0..2 {
+                for g in 0..engines.len() {
+                    let ok = if pass == 0 {
+                        fd.state[g].placeable()
+                    } else {
+                        fd.state[g].steppable()
+                    };
+                    if !ok {
+                        continue;
+                    }
+                    let p = self.pressure(engines, g);
+                    let better = match target {
+                        None => true,
+                        Some((bp, _)) => p < bp,
+                    };
+                    if better {
+                        target = Some((p, g));
+                    }
+                }
+                if target.is_some() {
+                    break;
                 }
             }
+            let (_, target) = target.expect("a rescuing engine is itself steppable");
             fd.counters.migration_saved += 1;
             self.relocate(engines, fd, m, target);
         }
         fd.migrations_buf = migs;
+        // Drain controller: while any GPU is draining, every harvest
+        // retries relocation (capacity elsewhere may just have freed
+        // up), and a GPU that emptied departs at its own clock.
+        if fd.draining > 0 {
+            for g in 0..engines.len() {
+                if !matches!(fd.state[g], GpuState::Draining { .. }) {
+                    continue;
+                }
+                self.drain_step_gpu(engines, fd, g);
+                if engines[g].outstanding() == 0 {
+                    let t = engines[g].clock();
+                    self.depart(&*engines, fd, g, t);
+                }
+            }
+        }
     }
 
     /// Projected drain pressure of GPU `g`: its surviving traces' KV
@@ -956,6 +1598,9 @@ impl<'a> ClusterSim<'a> {
             let mut max_p = f64::NEG_INFINITY;
             let mut min_p = f64::INFINITY;
             for g in 0..engines.len() {
+                if !fd.state[g].placeable() {
+                    continue;
+                }
                 let p = self.pressure(engines, g);
                 max_p = max_p.max(p);
                 min_p = min_p.min(p);
@@ -964,11 +1609,13 @@ impl<'a> ClusterSim<'a> {
                 return false;
             }
         }
-        // Source: highest pressure among eligible GPUs with something
-        // to move (first maximum in GPU order).
+        // Source: highest pressure among eligible *active* GPUs with
+        // something to move (first maximum in GPU order). Draining GPUs
+        // are the drain controller's business, not the rebalancer's.
         let mut src: Option<(f64, usize, usize)> = None;
         for g in 0..engines.len() {
-            if rescuing && engines[g].outstanding() != quota {
+            if !fd.state[g].placeable() || (rescuing && engines[g].outstanding() != quota)
+            {
                 continue;
             }
             let Some(victim) = engines[g].migration_victim() else { continue };
@@ -982,11 +1629,14 @@ impl<'a> ClusterSim<'a> {
             }
         }
         let Some((src_p, src_g, victim)) = src else { return false };
-        // Target: lowest pressure among the *other* GPUs (first
+        // Target: lowest pressure among the *other* active GPUs (first
         // minimum in GPU order), quota-respecting unless rescuing.
         let mut tgt: Option<(f64, usize)> = None;
         for g in 0..engines.len() {
-            if g == src_g || (!rescuing && engines[g].outstanding() >= quota) {
+            if g == src_g
+                || !fd.state[g].placeable()
+                || (!rescuing && engines[g].outstanding() >= quota)
+            {
                 continue;
             }
             let p = self.pressure(engines, g);
@@ -1028,9 +1678,7 @@ impl<'a> ClusterSim<'a> {
                 self.drain_queue(engines, fd);
             }
         }
-        let quota = self.cfg.admission.max_outstanding_per_gpu;
-        let eligible = engines.iter().any(|e| e.outstanding() < quota);
-        if eligible {
+        if self.any_eligible(engines, fd) {
             self.place(engines, fd, rid);
             return;
         }
@@ -1056,12 +1704,14 @@ impl<'a> ClusterSim<'a> {
         }
     }
 
-    /// Every GPU is at quota: queue the arrival, or shed it — unless a
-    /// migration can preserve the work. A successful migration frees a
-    /// quota slot on the (hot) source; the FIFO queue head takes it,
-    /// and the loop re-evaluates admission with the shorter queue — so
-    /// a would-be shed becomes a placement or a queue entry instead.
-    /// At most one migration per offered arrival.
+    /// Every active GPU is at quota: queue the arrival, or shed it —
+    /// unless the scaling controller or a migration can absorb the
+    /// pressure. A successful migration frees a quota slot on the
+    /// (hot) source; the FIFO queue head takes it, and the loop
+    /// re-evaluates admission with the shorter queue — so a would-be
+    /// shed becomes a placement or a queue entry instead. At most one
+    /// migration per offered arrival; scale-ups are bounded by the
+    /// standby pool.
     fn queue_or_shed(
         &self,
         engines: &mut [ServeEngine<'_>],
@@ -1069,14 +1719,22 @@ impl<'a> ClusterSim<'a> {
         rid: usize,
         mut may_migrate: bool,
     ) {
-        let quota = self.cfg.admission.max_outstanding_per_gpu;
+        let t = fd.meta[rid].t_arrive;
         loop {
-            if engines.iter().any(|e| e.outstanding() < quota) {
+            if self.any_eligible(engines, fd) {
                 self.place(engines, fd, rid);
                 return;
             }
             let would_shed = self.slo_would_shed(fd, rid)
                 || fd.queue.len() >= self.cfg.admission.queue_cap;
+            let queue_deep = self.cfg.scale_up_queue_depth > 0
+                && fd.queue.len() >= self.cfg.scale_up_queue_depth;
+            // Scaling controller: admission pressure (an imminent shed,
+            // or a deep queue) activates a standby GPU; the loop then
+            // re-evaluates with the larger fleet.
+            if (would_shed || queue_deep) && self.scale_up(engines, fd, t) {
+                continue;
+            }
             if !would_shed {
                 fd.queue.push_back(rid);
                 fd.counters.queue_peak = fd.counters.queue_peak.max(fd.queue.len() as u64);
@@ -1130,6 +1788,27 @@ impl<'a> ClusterSim<'a> {
             }
             fd.view_version[g] = v;
             fd.shard_dirty[g / shard_size] = true;
+            if !fd.state[g].placeable() {
+                // Sentinel: a standby, draining, or departed GPU reads
+                // as permanently at-quota, so every
+                // `outstanding < quota` filter — the flat eligible
+                // slice, the shard aggregates, and the debug
+                // cross-check — excludes it without special-casing
+                // fleet state. State transitions bump `view_version`
+                // to `u64::MAX`, so the sentinel is (re)built on the
+                // next placement.
+                fd.view_cache[g] = GpuView {
+                    gpu: g,
+                    outstanding: usize::MAX,
+                    live_traces: 0,
+                    free_blocks: 0,
+                    pool_blocks: 0,
+                    block_size: 1,
+                    timing_scale: 1.0,
+                    survivor_demand_blocks: 0.0,
+                };
+                continue;
+            }
             let p = self.cfg.profile_for(g);
             fd.view_cache[g] = GpuView {
                 gpu: g,
@@ -1279,11 +1958,11 @@ impl<'a> ClusterSim<'a> {
         fd.per_gpu_peak_outstanding[g] = fd.per_gpu_peak_outstanding[g].max(out);
     }
 
-    /// Place queued requests (FIFO) while some GPU is below quota.
+    /// Place queued requests (FIFO) while some active GPU is below
+    /// quota.
     fn drain_queue(&self, engines: &mut [ServeEngine<'_>], fd: &mut FrontDoor) {
-        let quota = self.cfg.admission.max_outstanding_per_gpu;
         while !fd.queue.is_empty() {
-            if !engines.iter().any(|e| e.outstanding() < quota) {
+            if !self.any_eligible(engines, fd) {
                 return;
             }
             let rid = fd.queue.pop_front().expect("checked non-empty");
@@ -1617,6 +2296,220 @@ mod tests {
         for o in &a.outcomes {
             assert!(o.n_finished + o.n_pruned <= cfg.n_traces);
         }
+    }
+
+    #[test]
+    fn fleet_event_parse_roundtrip() {
+        let evs = parse_fleet_events("0:1:join; 30:0:revoke:20; 45:1:leave", 2, 1)
+            .expect("valid spec");
+        assert_eq!(
+            evs,
+            vec![
+                FleetEvent { t_s: 0.0, gpu: 1, action: FleetAction::Join },
+                FleetEvent {
+                    t_s: 30.0,
+                    gpu: 0,
+                    action: FleetAction::Revoke { deadline_s: 20.0 }
+                },
+                FleetEvent { t_s: 45.0, gpu: 1, action: FleetAction::Leave },
+            ]
+        );
+        // Round-trips through the per-event spec spelling.
+        let respelled: Vec<String> = evs.iter().map(|e| e.spec()).collect();
+        assert_eq!(parse_fleet_events(&respelled.join(";"), 2, 1), Some(evs));
+        assert_eq!(parse_fleet_events("", 4, 0), Some(Vec::new()));
+        let bad_specs = [
+            "x",
+            "1:0",
+            "1:0:explode",
+            "1:0:revoke",
+            "1:9:join",
+            "-1:0:join",
+            "1:0:revoke:-2",
+            "1:0:join:1",
+        ];
+        for bad in bad_specs {
+            assert!(parse_fleet_events(bad, 2, 1).is_none(), "{bad:?} must not parse");
+        }
+        // The rand: spelling is the shared chaos generator, verbatim.
+        let rand = parse_fleet_events("rand:7:6:600", 4, 2).expect("valid rand spec");
+        assert_eq!(rand, random_fleet_events(7, 4, 2, 6, 600.0));
+        assert_eq!(rand.len(), 6);
+        for w in rand.windows(2) {
+            assert!(w[0].t_s <= w[1].t_s, "generated schedules are time-sorted");
+        }
+        for e in &rand {
+            assert!(e.gpu < 6 && e.t_s >= 0.0 && e.t_s <= 600.0);
+            if let FleetAction::Revoke { deadline_s } = e.action {
+                assert!((30.0..=150.0).contains(&deadline_s), "5-25% of the horizon");
+            }
+        }
+    }
+
+    /// An empty schedule — and an untouched standby pool — is
+    /// byte-identical to today's static fleet: the elastic plumbing is
+    /// inert until an event or the scaling controller fires.
+    #[test]
+    fn empty_schedule_and_inert_standby_match_the_static_fleet() {
+        let base = pressured_cfg(Method::Step, 2);
+        let mut elastic = base.clone();
+        elastic.fleet_events = Vec::new();
+        elastic.standby = 2;
+        let a = run(&base);
+        let b = run(&elastic);
+        assert_eq!(a.makespan_s, b.makespan_s);
+        assert_eq!(a.counters.report(), b.counters.report());
+        assert_eq!(a.outcomes.len(), b.outcomes.len());
+        for (x, y) in a.outcomes.iter().zip(&b.outcomes) {
+            assert_eq!(x.rid, y.rid);
+            assert_eq!(x.latency_s, y.latency_s);
+            assert_eq!(x.chosen, y.chosen);
+        }
+        assert!(b.fleet_log.is_empty(), "no event fired, nothing logged");
+        assert_eq!(b.per_gpu_requests[2], 0, "standby slots never served");
+        assert_eq!(b.per_gpu_requests[3], 0);
+    }
+
+    /// A revocation mid-run: under `Never` the deadline force-clear
+    /// abandons the victim's residents (the shed-everything baseline);
+    /// under `OnShed` the drain controller relocates them and strictly
+    /// less goodput is lost per revocation. Conservation holds both
+    /// ways, and the victim departs empty by its deadline.
+    #[test]
+    fn revocation_drains_relocates_and_conserves() {
+        let mut base = ClusterConfig::new(
+            2,
+            ModelId::Phi4_14B,
+            BenchId::Hmmt2425,
+            Method::Step,
+            4,
+            ClusterWorkload::Open(WorkloadSpec::poisson(1.0, 6)),
+        );
+        base.seed = 13;
+        base.fleet_events =
+            parse_fleet_events("30:0:revoke:20", base.gpus, 0).expect("valid spec");
+        let never = run(&base);
+        let mut migrating = base.clone();
+        migrating.migration = MigrationPolicy::OnShed;
+        let drained = run(&migrating);
+        for r in [&never, &drained] {
+            assert_eq!(r.counters.offered, 6);
+            assert_eq!(r.counters.offered, r.counters.placed + r.counters.shed);
+            assert_eq!(
+                r.counters.completed + r.counters.shed_on_revoke,
+                r.counters.placed,
+                "every placed request completes or is abandoned: {}",
+                r.counters.report()
+            );
+            assert_eq!(r.counters.revocations, 1);
+            assert_eq!(
+                r.outcomes.len() as u64 + r.shed_rids.len() as u64,
+                r.counters.offered,
+                "exactly once: every request completes or is dropped"
+            );
+            let dep = r
+                .fleet_log
+                .iter()
+                .find(|e| e.kind == FleetLogKind::Departed && e.gpu == 0)
+                .expect("the revoked GPU departs");
+            assert!(dep.t_s <= 50.0 + 1e-9, "departed by the deadline");
+            assert_eq!(dep.residents_after, 0);
+        }
+        assert!(
+            never.counters.shed_on_revoke > 0,
+            "shed-everything abandons residents: {}",
+            never.counters.report()
+        );
+        assert!(
+            drained.counters.rescue_migrated > 0,
+            "the drain controller relocated residents: {}",
+            drained.counters.report()
+        );
+        assert!(
+            drained.counters.goodput_lost_per_revocation()
+                < never.counters.goodput_lost_per_revocation(),
+            "drain-relocate loses strictly less: {} vs {}",
+            drained.counters.report(),
+            never.counters.report()
+        );
+        assert!(drained.counters.completed > never.counters.completed);
+    }
+
+    /// Regression for the drain-phase laggard heap: a graceful leave
+    /// under `Never` keeps its residents until they complete naturally
+    /// during tail-phase laggard stepping, so the GPU departs while the
+    /// heap is live — its stale `(clock, gpu)` keys must be skipped,
+    /// not advanced, and the run must stay byte-identical across
+    /// `step_threads`.
+    #[test]
+    fn laggard_heap_tolerates_departed_engines() {
+        let mut cfg = ClusterConfig::new(
+            2,
+            ModelId::Phi4_14B,
+            BenchId::Hmmt2425,
+            Method::Step,
+            4,
+            ClusterWorkload::Open(WorkloadSpec::poisson(1.0, 6)),
+        );
+        cfg.seed = 11;
+        cfg.fleet_events =
+            parse_fleet_events("40:1:leave", cfg.gpus, 0).expect("valid spec");
+        let r = run(&cfg);
+        assert_eq!(r.counters.revocations, 0, "a leave is not a revocation");
+        assert_eq!(r.counters.shed_on_revoke, 0, "a leave never force-clears");
+        assert_eq!(r.counters.completed, r.counters.placed);
+        assert_eq!(r.outcomes.len() as u64 + r.shed_rids.len() as u64, 6);
+        let dep = r
+            .fleet_log
+            .iter()
+            .find(|e| e.kind == FleetLogKind::Departed)
+            .expect("the leaving GPU departs once empty");
+        assert_eq!(dep.gpu, 1);
+        assert_eq!(dep.residents_after, 0);
+        assert!(dep.t_s >= 40.0, "it held residents at the leave notice");
+        assert!(r.counters.drained > 0, "residents completed while draining");
+        // Byte-identical across step-thread counts with the departure
+        // in flight.
+        let mut par = cfg.clone();
+        par.step_threads = 4;
+        let p = run(&par);
+        assert_eq!(r.counters.report(), p.counters.report());
+        assert_eq!(r.makespan_s, p.makespan_s);
+        for (x, y) in r.outcomes.iter().zip(&p.outcomes) {
+            assert_eq!(x.rid, y.rid);
+            assert_eq!(x.latency_s, y.latency_s);
+        }
+    }
+
+    /// The scaling controller: an imminent shed activates standby
+    /// capacity instead of rejecting work, and the grown fleet sheds
+    /// strictly less than the fixed one.
+    #[test]
+    fn scale_up_activates_standby_before_shedding() {
+        let mut cfg = pressured_cfg(Method::Sc, 1);
+        cfg.admission.max_outstanding_per_gpu = 1;
+        cfg.admission.queue_cap = 0;
+        let base = run(&cfg);
+        assert!(base.counters.shed > 0, "the harsh config sheds without standby");
+        let mut scaled = cfg.clone();
+        scaled.standby = 2;
+        let r = run(&scaled);
+        let joins =
+            r.fleet_log.iter().filter(|e| e.kind == FleetLogKind::Joined).count();
+        assert!(joins >= 1, "pressure activated standby capacity");
+        assert!(
+            r.counters.shed < base.counters.shed,
+            "a grown fleet sheds less: {} vs {}",
+            r.counters.report(),
+            base.counters.report()
+        );
+        assert_eq!(r.counters.offered, r.counters.placed + r.counters.shed);
+        assert_eq!(r.counters.completed, r.counters.placed);
+        assert!(
+            r.per_gpu_requests[1] + r.per_gpu_requests[2] > 0,
+            "activated standby GPUs actually served: {:?}",
+            r.per_gpu_requests
+        );
     }
 
     #[test]

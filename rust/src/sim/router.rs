@@ -40,6 +40,22 @@
 //!
 //! Policies are pure functions of their inputs (the round-robin cursor
 //! is the only state), so cluster runs stay bit-deterministic.
+//!
+//! **Elastic fleets.** Engines can appear (standby activation, join
+//! events) and disappear (leaves, spot revocations) mid-run without any
+//! policy here noticing: the cluster keeps a cached view per *slot* —
+//! active and standby alike — and renders every non-placeable slot
+//! (standby, draining, departed) as a sentinel view with
+//! `outstanding == usize::MAX`. Every eligibility filter is the same
+//! `outstanding < quota` test, so sentinels fall out of the flat
+//! eligible slice, the sharded router's per-shard aggregates, and the
+//! debug cross-check uniformly — the dirty-shard bookkeeping needs no
+//! fleet-state special cases, only a `view_version` bump on each state
+//! transition to force the sentinel (re)build. Policies therefore only
+//! ever see currently-placeable GPUs, exactly as with a static fleet;
+//! [`RoundRobin`]'s cursor advances by absolute GPU id, so a slot
+//! vanishing or reappearing between placements just looks like another
+//! eligibility hole.
 
 /// Read-only scheduling view of one per-GPU engine at routing time.
 ///

@@ -34,6 +34,15 @@
 //! Everything here is pure bookkeeping over indices and
 //! [`TraceState`]s; the engines keep ownership of their trace vectors,
 //! pools, and clocks.
+//!
+//! The scheduler core is deliberately *fleet-agnostic*: joins, drains,
+//! and revocations ([`crate::sim::cluster`]'s elastic-fleet layer) are
+//! engine-**external** lifecycle transitions. A draining engine keeps
+//! scheduling its residents with the unchanged mechanics here (that is
+//! what lets drained work complete or migrate instead of being thrown
+//! away), and a departed engine simply stops being stepped — no state
+//! in this module spans engines, so nothing here needs to know the
+//! fleet changed shape.
 
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, VecDeque};

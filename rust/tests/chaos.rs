@@ -1,0 +1,255 @@
+//! Chaos harness: deterministic fleet-failure injection against the
+//! cluster simulator. One shared driver — the seeded `FleetEvent`
+//! schedule generator (`random_fleet_events`, also reachable as
+//! `--fleet-events rand:SEED:N:HORIZON_S`) — feeds every property:
+//!
+//! * **exactly-once conservation** — under any revocation schedule, no
+//!   request is lost or duplicated: every offered request is either an
+//!   outcome or a dropped rid, never both, never twice;
+//! * **clean departure** — a revoked GPU holds zero residents once it
+//!   departs, and an applied revocation departs by its deadline;
+//! * **static-fleet identity** — an empty `--fleet-events` schedule
+//!   (and an untouched standby pool) is byte-identical to today's
+//!   static fleet.
+//!
+//! Schedules are deterministic in the seed, so every run of this suite
+//! exercises the same chaos byte-for-byte.
+
+use step::coordinator::method::Method;
+use step::harness::cells::projection_scorer;
+use step::harness::table6::{self, ClusterOpts};
+use step::sim::cluster::{
+    random_fleet_events, ClusterConfig, ClusterResult, ClusterSim, ClusterWorkload,
+    FleetAction, FleetEvent, FleetLogKind, MigrationPolicy,
+};
+use step::sim::profiles::{BenchId, ModelId};
+use step::sim::tracegen::{GenParams, TraceGen};
+use step::sim::workload::WorkloadSpec;
+
+/// 3 active + 2 standby GPUs under an open-loop workload whose service
+/// times (Phi-4 on HMMT) run long enough that mid-run chaos reliably
+/// catches live residents.
+fn chaos_cfg(
+    seed: u64,
+    schedule: Vec<FleetEvent>,
+    migration: MigrationPolicy,
+) -> ClusterConfig {
+    let mut c = ClusterConfig::new(
+        3,
+        ModelId::Phi4_14B,
+        BenchId::Hmmt2425,
+        Method::Step,
+        4,
+        ClusterWorkload::Open(WorkloadSpec::poisson(0.5, 10)),
+    );
+    c.seed = seed;
+    c.standby = 2;
+    c.scale_up_queue_depth = 2;
+    c.migration = migration;
+    c.fleet_events = schedule;
+    c
+}
+
+fn run(cfg: &ClusterConfig) -> ClusterResult {
+    let gp = GenParams::default_d64();
+    let scorer = projection_scorer(&gp);
+    let gen = TraceGen::new(cfg.model, cfg.bench, gp, cfg.seed ^ 0x5EED);
+    ClusterSim::new(cfg, &gen, &scorer).run()
+}
+
+/// The shared chaos driver is a pure function of its seed, time-sorted,
+/// in-bounds, and spec-round-trippable.
+#[test]
+fn chaos_driver_is_deterministic_and_well_formed() {
+    let a = random_fleet_events(42, 4, 3, 12, 600.0);
+    assert_eq!(a, random_fleet_events(42, 4, 3, 12, 600.0), "same seed, same schedule");
+    assert_ne!(a, random_fleet_events(43, 4, 3, 12, 600.0), "seeds diverge");
+    assert_eq!(a.len(), 12);
+    for w in a.windows(2) {
+        assert!(w[0].t_s <= w[1].t_s, "schedules are time-sorted");
+    }
+    for e in &a {
+        assert!(e.gpu < 7, "targets stay inside active + standby");
+        assert!(e.t_s >= 0.0 && e.t_s <= 600.0);
+        if let FleetAction::Revoke { deadline_s } = e.action {
+            assert!(deadline_s > 0.0 && deadline_s.is_finite());
+        }
+    }
+    // The generated schedule round-trips through the CLI spelling.
+    let spec: Vec<String> = a.iter().map(|e| e.spec()).collect();
+    assert_eq!(
+        step::sim::cluster::parse_fleet_events(&spec.join(";"), 4, 3),
+        Some(a)
+    );
+}
+
+/// Exactly-once completion conservation under randomized revocation
+/// schedules, with and without the drain controller: every offered
+/// request is either an outcome or a dropped rid — never both, never
+/// twice, none missing — and the counter laws hold.
+#[test]
+fn no_request_lost_or_duplicated_under_any_revocation_schedule() {
+    for seed in 0..6u64 {
+        let schedule = random_fleet_events(seed, 3, 2, 5, 180.0);
+        for policy in [MigrationPolicy::Never, MigrationPolicy::OnShed] {
+            let r = run(&chaos_cfg(seed, schedule.clone(), policy));
+            let label = format!("seed {seed} policy {}", policy.name());
+            assert_eq!(r.counters.offered, 10, "{label}");
+            assert_eq!(
+                r.counters.offered,
+                r.counters.placed + r.counters.shed,
+                "{label}: admission conservation"
+            );
+            assert_eq!(
+                r.counters.completed + r.counters.shed_on_revoke,
+                r.counters.placed,
+                "{label}: every placed request completes or is abandoned"
+            );
+            let mut seen = vec![0u32; 10];
+            for o in &r.outcomes {
+                seen[o.rid] += 1;
+            }
+            for &rid in &r.shed_rids {
+                seen[rid] += 1;
+            }
+            for (rid, &n) in seen.iter().enumerate() {
+                assert_eq!(n, 1, "{label}: rid {rid} seen {n} times");
+            }
+            for w in r.outcomes.windows(2) {
+                assert!(w[0].rid < w[1].rid, "{label}: outcomes sorted by rid");
+            }
+        }
+    }
+}
+
+/// Every departure in the fleet log — drain completion, deadline
+/// force-clear, or graceful leave — leaves zero residents behind, pairs
+/// with an earlier drain-start, and an applied revocation departs no
+/// later than its deadline.
+#[test]
+fn revoked_gpus_hold_zero_residents_after_their_deadline() {
+    for seed in [1u64, 4, 9] {
+        let schedule = random_fleet_events(seed, 3, 2, 6, 200.0);
+        let scheduled_revokes = schedule
+            .iter()
+            .filter(|e| matches!(e.action, FleetAction::Revoke { .. }))
+            .count() as u64;
+        let r = run(&chaos_cfg(seed, schedule.clone(), MigrationPolicy::OnShed));
+        assert!(
+            r.counters.revocations <= scheduled_revokes,
+            "seed {seed}: only scheduled revocations can fire"
+        );
+        let mut drain_started = vec![false; 5];
+        for e in &r.fleet_log {
+            match e.kind {
+                FleetLogKind::DrainStarted => drain_started[e.gpu] = true,
+                FleetLogKind::Departed => {
+                    assert!(
+                        drain_started[e.gpu],
+                        "seed {seed}: gpu {} departed without draining",
+                        e.gpu
+                    );
+                    assert_eq!(
+                        e.residents_after, 0,
+                        "seed {seed}: gpu {} departed with residents",
+                        e.gpu
+                    );
+                    drain_started[e.gpu] = false;
+                }
+                FleetLogKind::Joined => {}
+            }
+        }
+        // A revocation that applied (drain-start logged at its instant)
+        // must produce a departure by its deadline.
+        for ev in &schedule {
+            let FleetAction::Revoke { deadline_s } = ev.action else { continue };
+            let applied = r.fleet_log.iter().any(|l| {
+                l.kind == FleetLogKind::DrainStarted && l.gpu == ev.gpu && l.t_s == ev.t_s
+            });
+            if applied {
+                assert!(
+                    r.fleet_log.iter().any(|l| {
+                        l.kind == FleetLogKind::Departed
+                            && l.gpu == ev.gpu
+                            && l.t_s >= ev.t_s
+                            && l.t_s <= ev.t_s + deadline_s + 1e-9
+                    }),
+                    "seed {seed}: revoked gpu {} missed its deadline",
+                    ev.gpu
+                );
+            }
+        }
+    }
+}
+
+/// An explicit two-revocation schedule: both fire, both victims depart
+/// empty by their deadlines, and the drain controller strictly beats
+/// abandoning the residents.
+#[test]
+fn explicit_revocations_drain_and_beat_shedding_everything() {
+    let schedule = step::sim::cluster::parse_fleet_events("25:0:revoke:15;40:1:revoke:15", 3, 2)
+        .expect("valid explicit spec");
+    let never = run(&chaos_cfg(3, schedule.clone(), MigrationPolicy::Never));
+    let drained = run(&chaos_cfg(3, schedule, MigrationPolicy::OnShed));
+    for (r, label) in [(&never, "never"), (&drained, "on-shed")] {
+        assert_eq!(r.counters.revocations, 2, "{label}");
+        assert_eq!(
+            r.outcomes.len() as u64 + r.shed_rids.len() as u64,
+            r.counters.offered,
+            "{label}: exactly-once"
+        );
+        let departures = r
+            .fleet_log
+            .iter()
+            .filter(|e| e.kind == FleetLogKind::Departed && e.residents_after == 0)
+            .count();
+        assert!(departures >= 2, "{label}: both victims depart empty");
+    }
+    assert!(never.counters.shed_on_revoke > 0, "shed-everything abandons work");
+    assert!(drained.counters.rescue_migrated > 0, "the drain controller relocates");
+    assert!(
+        drained.counters.goodput_lost_per_revocation()
+            < never.counters.goodput_lost_per_revocation(),
+        "drain-relocate must lose strictly less per revocation: {} vs {}",
+        drained.counters.report(),
+        never.counters.report()
+    );
+}
+
+/// An empty `--fleet-events` schedule produces byte-identical
+/// `BENCH_cluster.json` metric blocks to the static fleet, and an
+/// untouched standby pool changes nothing either — the elastic
+/// plumbing is invisible until an event or the scaling controller
+/// fires.
+#[test]
+fn empty_fleet_events_is_byte_identical_to_the_static_fleet() {
+    let gp = GenParams::default_d64();
+    let sc = projection_scorer(&gp);
+    let base = ClusterOpts {
+        gpus: 2,
+        model: ModelId::Qwen3_4B,
+        bench: BenchId::GpqaDiamond,
+        n_requests: 4,
+        clients: 2,
+        think_s: 20.0,
+        n_traces: 4,
+        seed: 7,
+        threads: 1,
+        ..Default::default()
+    };
+    assert_eq!(base.fleet_events, "", "the default schedule is empty");
+    let (m0, r0) = table6::run_grids(&base, &gp, &sc);
+    // Inert standby: no event, light load, controller threshold unmet.
+    let standby = ClusterOpts { standby: 2, ..base.clone() };
+    let (m1, r1) = table6::run_grids(&standby, &gp, &sc);
+    assert_eq!(
+        table6::cells_fingerprint(&m0),
+        table6::cells_fingerprint(&m1),
+        "standby pool changed the methods grid bytes"
+    );
+    assert_eq!(
+        table6::cells_fingerprint(&r0),
+        table6::cells_fingerprint(&r1),
+        "standby pool changed the routers grid bytes"
+    );
+}

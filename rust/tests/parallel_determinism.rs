@@ -320,6 +320,60 @@ fn fleet_scale_cluster_is_thread_invariant_at_r256() {
     assert_eq!(serial, fingerprint(&table6::run_migration_grid(&base, &gp, &sc)));
 }
 
+/// Elastic fleets under chaos obey the determinism contract too: with
+/// a seeded random `FleetEvent` schedule firing joins, leaves, and spot
+/// revocations mid-run (plus a standby pool the scaling controller can
+/// activate), the cluster metric blocks stay byte-identical across
+/// randomized `--threads` / `--step-threads` combinations, and a rerun
+/// reproduces them exactly. Fleet-lifecycle transitions are control
+/// events on the same clock as arrivals, applied serially between
+/// engine-advance phases, so parallel stepping gains no ordering
+/// freedom from engines appearing or disappearing.
+#[test]
+fn chaos_schedule_cluster_is_thread_invariant() {
+    use step::util::rng::Rng;
+    let gp = GenParams::default_d64();
+    let sc = projection_scorer(&gp);
+    let base = ClusterOpts {
+        gpus: 4,
+        model: ModelId::Phi4_14B,
+        bench: BenchId::Hmmt2425,
+        n_requests: 8,
+        clients: 4,
+        think_s: 20.0,
+        heavy_frac: 0.5,
+        n_traces: 4,
+        mem_util: 0.5,
+        fleet_events: "rand:9:6:240".to_string(),
+        standby: 2,
+        scale_up_queue_depth: 2,
+        migrate: step::sim::cluster::MigrationPolicy::OnShed,
+        seed: 7,
+        threads: 1,
+        step_threads: 1,
+        ..Default::default()
+    };
+    let fingerprint = table6::cells_fingerprint;
+    let serial = fingerprint(&table6::run_migration_grid(&base, &gp, &sc));
+    let mut rng = Rng::new(0xC4A05);
+    for _ in 0..3 {
+        let opts = ClusterOpts {
+            threads: 1 + rng.below(8),
+            step_threads: rng.below(9), // 0 = all cores
+            ..base.clone()
+        };
+        assert_eq!(
+            serial,
+            fingerprint(&table6::run_migration_grid(&opts, &gp, &sc)),
+            "chaos grid differs at threads={} step_threads={}",
+            opts.threads,
+            opts.step_threads
+        );
+    }
+    // A rerun at the base settings reproduces the bytes too.
+    assert_eq!(serial, fingerprint(&table6::run_migration_grid(&base, &gp, &sc)));
+}
+
 /// The serve-sim acceptance contract: `--threads 1` and `--threads 8`
 /// produce byte-identical BENCH_serving.json metric blocks. Threads only
 /// shard the (deterministic, single-threaded) per-method simulations.
