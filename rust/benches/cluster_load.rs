@@ -31,7 +31,7 @@ use step::coordinator::method::Method;
 use step::harness::cells::projection_scorer;
 use step::harness::table6::{
     attach_migration_grid, cells_fingerprint, config_json, elasticity_schedule, metrics_json,
-    run_cell, run_grids, run_migration_grid, ClusterOpts,
+    run_cell, run_grids, run_migration_grid, run_traced_cell, ClusterOpts,
 };
 use step::harness::write_results;
 use step::sim::cluster::{GpuProfile, MigrationPolicy};
@@ -371,6 +371,34 @@ fn main() {
         100.0 * elasticity_loss_ratio
     );
 
+    // ---- tracing identity + overhead: the canonical STEP cell with
+    // the unbounded event log attached vs untraced. The metric row
+    // must be byte-identical (recorders never influence scheduling —
+    // the `trace_identical` gate), and the wall ratio bounds what
+    // tracing costs when it is switched on (`trace_wall_ratio` gate;
+    // the disabled-path cost is measured by micro_hotpath).
+    let t4 = Instant::now();
+    let untraced_cell =
+        run_cell(Method::Step, opts.router, Method::Step.name(), &gp, &scorer, &opts);
+    let untraced_wall = t4.elapsed().as_secs_f64().max(1e-9);
+    let t5 = Instant::now();
+    let (traced_cell, trace_events, trace_dropped) = run_traced_cell(&opts, &gp, &scorer);
+    let traced_wall = t5.elapsed().as_secs_f64().max(1e-9);
+    let trace_identical = cells_fingerprint(std::slice::from_ref(&untraced_cell))
+        == cells_fingerprint(std::slice::from_ref(&traced_cell));
+    assert!(
+        trace_identical,
+        "traced STEP cell must be byte-identical to the untraced run"
+    );
+    assert_eq!(trace_dropped, 0, "the unbounded event log never drops");
+    assert!(!trace_events.is_empty(), "the traced cell must record a stream");
+    let trace_wall_ratio = traced_wall / untraced_wall;
+    println!(
+        "  tracing: {} events, wall x{trace_wall_ratio:.2} vs untraced \
+         (metric rows byte-identical)",
+        trace_events.len()
+    );
+
     let mut report = metrics_json(&opts, &m_serial, &r_serial);
     attach_migration_grid(&mut report, &mig_opts, &migration);
     if let Json::Obj(map) = &mut report {
@@ -400,6 +428,11 @@ fn main() {
         map.insert("elasticity".to_string(), Json::Arr(ela_rows));
         map.insert("elasticity_config".to_string(), config_json(&ela_base));
         map.insert("elasticity_loss_ratio".to_string(), Json::Num(elasticity_loss_ratio));
+        // Observability gates: traced == untraced metric bytes on the
+        // canonical STEP cell, and the enabled-tracing wall ratio.
+        map.insert("trace_identical".to_string(), Json::Bool(trace_identical));
+        map.insert("trace_wall_ratio".to_string(), Json::Num(trace_wall_ratio));
+        map.insert("trace_events".to_string(), Json::Num(trace_events.len() as f64));
     }
     let path = write_results("BENCH_cluster", &report).expect("writing BENCH_cluster.json");
     println!("wrote {path:?}");

@@ -9,6 +9,7 @@ use step::coordinator::method::Method;
 use step::coordinator::scorer::StepScorer;
 use step::coordinator::voting::{weighted_vote, Vote};
 use step::kvcache::KvCacheManager;
+use step::obs::{EventBuf, EventKind, NullRecorder, Recorder, SimEvent};
 use step::sim::des::{DesEngine, Scratch, SimConfig};
 use step::sim::profiles::{BenchId, ModelId};
 use step::sim::sched::{self, EventIndex};
@@ -155,6 +156,40 @@ fn main() {
             engine.run_question_with(black_box(qid % 30), &mut scratch)
         });
     }
+
+    // ---- observability emission path on the full DES question: the
+    // disabled branch (no recorder attached — one `is_some()` test per
+    // emission site, no event construction) vs a NullRecorder attached
+    // (event construction + one dynamic call per site, every event
+    // discarded). The disabled case is the §Perf "tracing off is free"
+    // target; the gap between the two is the enabled-path floor.
+    {
+        let cfg = SimConfig::new(ModelId::DeepSeek8B, BenchId::Hmmt2425, Method::Step, 64);
+        let engine = DesEngine::new(&cfg, &gen, &proj_scorer);
+        let mut off = Scratch::new();
+        let mut qid = 0usize;
+        b.run("obs/question_recorder_off(HMMT,N=64,step)", || {
+            qid += 1;
+            engine.run_question_with(black_box(qid % 30), &mut off)
+        });
+        let mut on = Scratch::new();
+        on.rec = Some(Box::new(NullRecorder));
+        let mut qid = 0usize;
+        b.run("obs/question_null_recorder(HMMT,N=64,step)", || {
+            qid += 1;
+            engine.run_question_with(black_box(qid % 30), &mut on)
+        });
+    }
+
+    // Raw sink cost: recording into the bounded flight-recorder ring
+    // (the always-on chaos configuration).
+    let mut ring = EventBuf::ring(256);
+    b.run_with_items("obs/ring_record(x64)", 64.0, || {
+        for i in 0..64usize {
+            ring.record(SimEvent::new(i as f64, EventKind::StepScore { score: 0.5 }).rid(i));
+        }
+        ring.len()
+    });
 
     // ---- router view: the incrementally maintained score multiset vs
     // the sort-per-call scan, on a mid-run engine holding many live

@@ -28,7 +28,11 @@
 //!    * elasticity (when the cluster artifact carries the elasticity
 //!      rows): drain-relocate must not lose more goodput per
 //!      revocation than the shed-everything baseline, and every
-//!      chaos row must be byte-identical across step threads.
+//!      chaos row must be byte-identical across step threads;
+//!    * tracing (when the cluster artifact carries the observability
+//!      fields): the traced STEP cell's metric row byte-identical to
+//!      the untraced run — recorders must never influence scheduling —
+//!      and the enabled-tracing wall ratio under its cap.
 //!
 //! The verdict is printed as a markdown table, appended to
 //! `$GITHUB_STEP_SUMMARY` when that file is set (the job-summary
@@ -338,8 +342,34 @@ fn evaluate(pairs: &[(Json, Json)]) -> Vec<GateRow> {
             all_identical,
         ));
     }
+    // Observability gates, applied when the artifact carries the
+    // tracing fields (cluster_load writes them; a table6 run without
+    // tracing flags legitimately omits them).
+    if let Some(identical) = bool_at(cluster, &["trace_identical"]) {
+        rows.push(flag_row(
+            ARTIFACTS[2],
+            "traced == untraced metric bytes",
+            Some(identical),
+        ));
+    }
+    if let Some(ratio) = num_at(cluster, &["trace_wall_ratio"]) {
+        rows.push(compare_row(
+            ARTIFACTS[2],
+            "traced wall ratio <= cap",
+            Some(ratio),
+            Some(TRACE_WALL_CAP),
+            |r, cap| r > 0.0 && r <= cap,
+        ));
+    }
     rows
 }
+
+/// Cap on the traced-vs-untraced wall ratio of the canonical STEP
+/// cell. Recording into an unbounded in-memory log should cost low
+/// single-digit multiples at worst; the cap is generous because the
+/// quick cells run sub-second and CI wall clocks are noisy, while
+/// still catching a pathological emission path.
+const TRACE_WALL_CAP: f64 = 25.0;
 
 /// Wall-clock cap on the largest fleet cell (R=1024). The target is
 /// single-digit seconds; the cap leaves headroom for slow CI machines
@@ -487,6 +517,9 @@ mod tests {
             ("shard_flat_identical", Json::Bool(true)),
             ("identical_across_threads", Json::Bool(true)),
             ("identical_across_step_threads", Json::Bool(true)),
+            ("trace_identical", Json::Bool(true)),
+            ("trace_wall_ratio", Json::Num(1.4)),
+            ("trace_events", Json::Num(5000.0)),
         ])
     }
 
@@ -612,6 +645,41 @@ mod tests {
             failed.iter().any(|ch| ch.contains("elasticity rows identical")),
             "{failed:?}"
         );
+    }
+
+    #[test]
+    fn healthy_artifacts_exercise_the_tracing_gates() {
+        let rows = evaluate(&pairs(
+            grid(3.2, true),
+            serving(100.0, 200.0),
+            cluster(50.0, 80.0, 0.4, 0.1),
+        ));
+        assert!(rows.iter().any(|r| r.check.contains("traced == untraced") && r.ok));
+        assert!(rows.iter().any(|r| r.check.contains("traced wall ratio") && r.ok));
+        // An artifact without the tracing fields (a table6 run with no
+        // tracing flags) skips the rows instead of failing them.
+        let mut bare = cluster(50.0, 80.0, 0.4, 0.1);
+        if let Json::Obj(map) = &mut bare {
+            map.remove("trace_identical");
+            map.remove("trace_wall_ratio");
+            map.remove("trace_events");
+        }
+        let rows = evaluate(&pairs(grid(3.2, true), serving(100.0, 200.0), bare));
+        assert!(!rows.iter().any(|r| r.check.contains("traced")), "{rows:?}");
+    }
+
+    #[test]
+    fn tracing_gate_checks_identity_and_overhead() {
+        let mut c = cluster(1.0, 2.0, 0.2, 0.1);
+        if let Json::Obj(map) = &mut c {
+            map.insert("trace_identical".to_string(), Json::Bool(false));
+            map.insert("trace_wall_ratio".to_string(), Json::Num(40.0));
+        }
+        let rows = evaluate(&pairs(grid(2.0, true), serving(1.0, 2.0), c));
+        let failed: Vec<&str> =
+            rows.iter().filter(|r| !r.ok).map(|r| r.check.as_str()).collect();
+        assert!(failed.iter().any(|ch| ch.contains("traced == untraced")), "{failed:?}");
+        assert!(failed.iter().any(|ch| ch.contains("traced wall ratio")), "{failed:?}");
     }
 
     #[test]

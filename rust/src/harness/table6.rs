@@ -22,11 +22,14 @@
 //! each cell's simulation is single-threaded and deterministic in the
 //! seed; threads only shard the cells.
 
+use std::path::PathBuf;
+
 use anyhow::Result;
 
 use super::cells::projection_scorer;
 use crate::coordinator::method::Method;
 use crate::coordinator::scorer::StepScorer;
+use crate::obs::{perfetto, to_jsonl, SimEvent};
 use crate::sim::cluster::{
     parse_fleet_events, AdmissionConfig, ClusterConfig, ClusterResult, ClusterSim,
     ClusterWorkload, GpuProfile, MigrationPolicy,
@@ -120,6 +123,22 @@ pub struct ClusterOpts {
     /// a standby engine (`--scale-up-queue-depth`, 0 = only on an
     /// imminent shed).
     pub scale_up_queue_depth: usize,
+    /// JSONL event-log path (`--trace-out`): rerun the canonical STEP
+    /// cell with the event log enabled and write the merged stream as
+    /// JSON Lines. `None` = tracing off. Not part of the metric JSON —
+    /// the determinism contract says it cannot change a byte of it,
+    /// and the traced rerun is compared against the untraced cell to
+    /// prove that.
+    pub trace_out: Option<PathBuf>,
+    /// Chrome/Perfetto trace path (`--perfetto-out`): write the traced
+    /// STEP cell's stream as a trace-event JSON document loadable in
+    /// `ui.perfetto.dev`. `None` = off.
+    pub perfetto_out: Option<PathBuf>,
+    /// Event-kind filter for the JSONL log (`--trace-filter`,
+    /// comma-separated [`crate::obs::KIND_NAMES`]). Empty = every
+    /// kind. The Perfetto export and the traced≡untraced comparison
+    /// always see the full stream.
+    pub trace_filter: Vec<String>,
     /// Master seed.
     pub seed: u64,
     /// Worker threads sharding the cells (0 = all cores). Metric
@@ -158,6 +177,9 @@ impl Default for ClusterOpts {
             fleet_events: String::new(),
             standby: 0,
             scale_up_queue_depth: 0,
+            trace_out: None,
+            perfetto_out: None,
+            trace_filter: Vec::new(),
             seed: 0,
             threads: 0,
             step_threads: 1,
@@ -412,6 +434,25 @@ pub fn run_cell(
     let gen = TraceGen::new(opts.model, opts.bench, gen_params.clone(), opts.seed ^ 0x5EED);
     let r = ClusterSim::new(&cfg, &gen, scorer).run();
     ClusterCell::from_result(label, &r)
+}
+
+/// Run the canonical STEP cell with the event log enabled, returning
+/// the metric row, the merged event stream, and the ring-drop count
+/// (always 0 here — the CLI traces unbounded). The row must compare
+/// byte-identical to the untraced STEP cell of the methods grid; that
+/// comparison is the determinism contract's CLI-side enforcement
+/// (`run` bails when it breaks).
+pub fn run_traced_cell(
+    opts: &ClusterOpts,
+    gen_params: &GenParams,
+    scorer: &StepScorer,
+) -> (ClusterCell, Vec<SimEvent>, u64) {
+    let mut cfg = opts.config(Method::Step, opts.router);
+    cfg.event_log = Some(0);
+    let gen = TraceGen::new(opts.model, opts.bench, gen_params.clone(), opts.seed ^ 0x5EED);
+    let r = ClusterSim::new(&cfg, &gen, scorer).run();
+    let cell = ClusterCell::from_result(Method::Step.name(), &r);
+    (cell, r.events, r.events_dropped)
 }
 
 /// Run both grids — methods under `opts.router`, then every router with
@@ -798,6 +839,39 @@ pub fn run(opts: &ClusterOpts) -> Result<(Vec<ClusterCell>, Vec<ClusterCell>)> {
     super::write_results("table6_cluster", &json)?;
     let path = super::write_results("BENCH_cluster", &json)?;
     println!("wrote {path:?} (and results/table6_cluster.json)");
+
+    // Tracing sinks: rerun the canonical STEP cell with the event log
+    // on, prove the metric row is byte-identical to the untraced one
+    // (the determinism contract), then write the requested sinks.
+    if opts.trace_out.is_some() || opts.perfetto_out.is_some() {
+        let (traced, events, dropped) = run_traced_cell(opts, &gen_params, &scorer);
+        let untraced = methods
+            .iter()
+            .find(|c| c.label == Method::Step.name())
+            .expect("methods grid always carries the STEP row");
+        let same = traced.to_json().to_string_pretty()
+            == untraced.to_json().to_string_pretty();
+        println!(
+            "-- tracing (STEP cell rerun: {} events, {dropped} dropped)",
+            events.len()
+        );
+        if !same {
+            anyhow::bail!(
+                "determinism contract broken: traced STEP cell diverged from the \
+                 untraced run (recorders must never influence scheduling)"
+            );
+        }
+        println!("  traced == untraced: metric block byte-identical");
+        if let Some(p) = &opts.trace_out {
+            let text = to_jsonl(&events, &opts.trace_filter);
+            std::fs::write(p, &text)?;
+            println!("wrote {p:?} ({} JSONL events)", text.lines().count());
+        }
+        if let Some(p) = &opts.perfetto_out {
+            std::fs::write(p, perfetto::chrome_trace(&events).to_string_compact())?;
+            println!("wrote {p:?} (open in ui.perfetto.dev)");
+        }
+    }
     Ok((methods, routers))
 }
 
@@ -934,6 +1008,26 @@ mod tests {
         // before its re-join.
         let long = elasticity_schedule(3, 40.0, 2);
         assert_eq!(long, "30:0:revoke:40;80:1:revoke:40;125:0:join;130:0:revoke:40");
+    }
+
+    #[test]
+    fn traced_cell_matches_untraced_step_row() {
+        let gp = GenParams::default_d64();
+        let sc = projection_scorer(&gp);
+        let opts = tiny();
+        let (methods, _) = run_grids(&opts, &gp, &sc);
+        let step = methods
+            .iter()
+            .find(|c| c.label == Method::Step.name())
+            .expect("STEP row present");
+        let (traced, events, dropped) = run_traced_cell(&opts, &gp, &sc);
+        assert_eq!(
+            traced.to_json().to_string_pretty(),
+            step.to_json().to_string_pretty(),
+            "recorders must never influence scheduling"
+        );
+        assert!(!events.is_empty(), "the traced rerun records the stream");
+        assert_eq!(dropped, 0, "the CLI traces unbounded");
     }
 
     #[test]

@@ -17,6 +17,9 @@
 //! * [`harness`] — one module per reproduced table/figure plus the
 //!   serving cell; each writes `results/*.json`.
 //! * [`metrics`] — latency histograms/sketches and engine counters.
+//! * [`obs`] — observability: structured sim-time event telemetry
+//!   (recorder trait, JSONL + Perfetto sinks, flight-recorder rings,
+//!   counters-from-events replay) threaded through all three engines.
 //! * [`model`] / [`runtime`] — the e2e path: tokenizer, sampler, and the
 //!   PJRT artifact registry (execution gated behind the `pjrt` feature).
 //! * [`util`] — in-tree substrates forced by the offline vendor set:
@@ -33,6 +36,7 @@ pub mod harness;
 pub mod kvcache;
 pub mod metrics;
 pub mod model;
+pub mod obs;
 pub mod runtime;
 pub mod sim;
 pub mod util;

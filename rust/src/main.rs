@@ -47,6 +47,10 @@ COMMANDS (experiments; see DESIGN.md §6):
                 the checked-in results/ schemas (key-set match + the
                 non-null perf gates) and fail on regression; writes a
                 markdown table to $GITHUB_STEP_SUMMARY when set
+    trace-check Validate a --trace-out JSONL event log: re-derive the
+                admission/goodput counters from events alone and check
+                the per-request lifecycle + conservation laws
+                (step trace-check FILE; nonzero exit on any violation)
     all         Everything above at full scale (except serve-sim and
                 cluster-sim)
 
@@ -116,6 +120,21 @@ CLUSTER-SIM OPTIONS (plus the serve-sim options above):
                          admission-queue depth that triggers activating
                          a standby engine (default 0 = only when a
                          request would otherwise shed)
+    --trace-out PATH     after the grids, rerun the canonical STEP cell
+                         with the event log on and write the merged
+                         stream as JSON Lines (one event per line).
+                         The run first proves the traced metric block
+                         is byte-identical to the untraced one — the
+                         recorder determinism contract
+    --perfetto-out PATH  write the same traced stream as Chrome
+                         trace-event JSON (open in ui.perfetto.dev or
+                         chrome://tracing): per-GPU tracks, per-request
+                         queued/running spans, KV-occupancy and
+                         queue-depth counter tracks
+    --trace-filter KINDS comma-separated event kinds kept in the JSONL
+                         log, e.g. offer,place,shed,complete
+                         (default: every kind). Unknown kinds fail at
+                         parse time naming the flag
 
 BENCH-GATE OPTIONS:
     --results DIR    fresh bench artifacts to check (default:
@@ -140,19 +159,19 @@ fn parse_opts(args: &[String]) -> Result<HarnessOpts> {
                 i += 1;
             }
             "--questions" => {
-                opts.max_questions = Some(need_val(args, i)?.parse()?);
+                opts.max_questions = Some(parse_val(args, i)?);
                 i += 2;
             }
             "--traces" => {
-                opts.n_traces = need_val(args, i)?.parse()?;
+                opts.n_traces = parse_val(args, i)?;
                 i += 2;
             }
             "--seed" => {
-                opts.seed = need_val(args, i)?.parse()?;
+                opts.seed = parse_val(args, i)?;
                 i += 2;
             }
             "--threads" => {
-                opts.threads = need_val(args, i)?.parse()?;
+                opts.threads = parse_val(args, i)?;
                 i += 2;
             }
             other => bail!("unknown option '{other}'\n\n{USAGE}"),
@@ -166,53 +185,71 @@ fn need_val(args: &[String], i: usize) -> Result<&String> {
         .ok_or_else(|| anyhow::anyhow!("option {} needs a value", args[i]))
 }
 
+/// Parse the value of the flag at `args[i]`; errors name the flag and
+/// echo the offending value.
+fn parse_val<T: std::str::FromStr>(args: &[String], i: usize) -> Result<T>
+where
+    T::Err: std::fmt::Display,
+{
+    let v = need_val(args, i)?;
+    v.parse()
+        .map_err(|e| anyhow::anyhow!("{}: bad value '{v}': {e}", args[i]))
+}
+
 fn parse_serving_opts(args: &[String]) -> Result<ServingOpts> {
     let mut opts = ServingOpts::default();
     let mut i = 0;
     while i < args.len() {
         match args[i].as_str() {
             "--requests" => {
-                opts.n_requests = need_val(args, i)?.parse()?;
+                opts.n_requests = parse_val(args, i)?;
                 i += 2;
             }
             "--rate" => {
-                opts.rate_rps = need_val(args, i)?.parse()?;
+                opts.rate_rps = parse_val(args, i)?;
                 i += 2;
             }
             "--burst" => {
-                opts.burst = Some(need_val(args, i)?.parse()?);
+                opts.burst = Some(parse_val(args, i)?);
                 i += 2;
             }
             "--traces" => {
-                opts.n_traces = need_val(args, i)?.parse()?;
+                opts.n_traces = parse_val(args, i)?;
                 i += 2;
             }
             "--seed" => {
-                opts.seed = need_val(args, i)?.parse()?;
+                opts.seed = parse_val(args, i)?;
                 i += 2;
             }
             "--threads" => {
-                opts.threads = need_val(args, i)?.parse()?;
+                opts.threads = parse_val(args, i)?;
                 i += 2;
             }
             "--model" => {
                 let name = need_val(args, i)?;
-                opts.model = ModelId::parse(name)
-                    .ok_or_else(|| anyhow::anyhow!("unknown model '{name}'"))?;
+                opts.model = ModelId::parse(name).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "--model: unknown model '{name}' (qwen3-4b | deepseek-8b | phi-4)"
+                    )
+                })?;
                 i += 2;
             }
             "--bench" => {
                 let name = need_val(args, i)?;
-                opts.bench = BenchId::parse(name)
-                    .ok_or_else(|| anyhow::anyhow!("unknown bench '{name}'"))?;
+                opts.bench = BenchId::parse(name).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "--bench: unknown bench '{name}' (aime-25 | hmmt | gpqa | \
+                         equibench | divlogiceval)"
+                    )
+                })?;
                 i += 2;
             }
             "--mem-util" => {
-                opts.mem_util = need_val(args, i)?.parse()?;
+                opts.mem_util = parse_val(args, i)?;
                 i += 2;
             }
             "--quota-frac" => {
-                opts.quota_frac = Some(need_val(args, i)?.parse()?);
+                opts.quota_frac = Some(parse_val(args, i)?);
                 i += 2;
             }
             other => bail!("unknown serve-sim option '{other}'\n\n{USAGE}"),
@@ -227,53 +264,57 @@ fn parse_cluster_opts(args: &[String]) -> Result<ClusterOpts> {
     while i < args.len() {
         match args[i].as_str() {
             "--gpus" => {
-                opts.gpus = need_val(args, i)?.parse()?;
+                opts.gpus = parse_val(args, i)?;
                 i += 2;
             }
             "--clients" => {
-                opts.clients = need_val(args, i)?.parse()?;
+                opts.clients = parse_val(args, i)?;
                 i += 2;
             }
             "--think" => {
-                opts.think_s = need_val(args, i)?.parse()?;
+                opts.think_s = parse_val(args, i)?;
                 i += 2;
             }
             "--heavy-frac" => {
-                opts.heavy_frac = need_val(args, i)?.parse()?;
+                opts.heavy_frac = parse_val(args, i)?;
                 i += 2;
             }
             "--router" => {
                 let name = need_val(args, i)?;
-                opts.router = RouterKind::parse(name)
-                    .ok_or_else(|| anyhow::anyhow!("unknown router '{name}'"))?;
+                opts.router = RouterKind::parse(name).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "--router: unknown router '{name}' (round-robin | \
+                         least-outstanding | kv-pressure | kv-sharded)"
+                    )
+                })?;
                 i += 2;
             }
             "--shard-size" => {
-                opts.shard_size = need_val(args, i)?.parse()?;
+                opts.shard_size = parse_val(args, i)?;
                 i += 2;
             }
             "--queue-cap" => {
-                opts.queue_cap = need_val(args, i)?.parse()?;
+                opts.queue_cap = parse_val(args, i)?;
                 i += 2;
             }
             "--max-outstanding" => {
-                opts.max_outstanding = need_val(args, i)?.parse()?;
+                opts.max_outstanding = parse_val(args, i)?;
                 i += 2;
             }
             "--slo" => {
-                opts.slo_s = Some(need_val(args, i)?.parse()?);
+                opts.slo_s = Some(parse_val(args, i)?);
                 i += 2;
             }
             "--step-threads" => {
-                opts.step_threads = need_val(args, i)?.parse()?;
+                opts.step_threads = parse_val(args, i)?;
                 i += 2;
             }
             "--gpu-profile" => {
                 let spec = need_val(args, i)?;
                 let p = GpuProfile::parse(spec).ok_or_else(|| {
                     anyhow::anyhow!(
-                        "bad gpu profile '{spec}' (want MEM_UTIL:BLOCK_SIZE:TIMING_SCALE, \
-                         e.g. 0.9:16:1.0)"
+                        "--gpu-profile: bad profile '{spec}' (want \
+                         MEM_UTIL:BLOCK_SIZE:TIMING_SCALE, e.g. 0.9:16:1.0)"
                     )
                 })?;
                 opts.gpu_profiles.push(p);
@@ -283,7 +324,7 @@ fn parse_cluster_opts(args: &[String]) -> Result<ClusterOpts> {
                 let name = need_val(args, i)?;
                 opts.migrate = MigrationPolicy::parse(name).ok_or_else(|| {
                     anyhow::anyhow!(
-                        "unknown migration policy '{name}' (never | on-shed | \
+                        "--migrate: unknown migration policy '{name}' (never | on-shed | \
                          on-pressure[:RATIO])"
                     )
                 })?;
@@ -294,55 +335,82 @@ fn parse_cluster_opts(args: &[String]) -> Result<ClusterOpts> {
                 i += 2;
             }
             "--standby" => {
-                opts.standby = need_val(args, i)?.parse()?;
+                opts.standby = parse_val(args, i)?;
                 i += 2;
             }
             "--scale-up-queue-depth" => {
-                opts.scale_up_queue_depth = need_val(args, i)?.parse()?;
+                opts.scale_up_queue_depth = parse_val(args, i)?;
+                i += 2;
+            }
+            "--trace-out" => {
+                opts.trace_out = Some(need_val(args, i)?.into());
+                i += 2;
+            }
+            "--perfetto-out" => {
+                opts.perfetto_out = Some(need_val(args, i)?.into());
+                i += 2;
+            }
+            "--trace-filter" => {
+                let spec = need_val(args, i)?;
+                let kinds: Vec<String> = spec
+                    .split(',')
+                    .map(|s| s.trim().to_string())
+                    .filter(|s| !s.is_empty())
+                    .collect();
+                step::obs::validate_kinds(&kinds)
+                    .map_err(|e| anyhow::anyhow!("--trace-filter: {e}"))?;
+                opts.trace_filter = kinds;
                 i += 2;
             }
             "--requests" => {
-                opts.n_requests = need_val(args, i)?.parse()?;
+                opts.n_requests = parse_val(args, i)?;
                 i += 2;
             }
             "--rate" => {
-                opts.rate_rps = need_val(args, i)?.parse()?;
+                opts.rate_rps = parse_val(args, i)?;
                 i += 2;
             }
             "--burst" => {
-                opts.burst = Some(need_val(args, i)?.parse()?);
+                opts.burst = Some(parse_val(args, i)?);
                 i += 2;
             }
             "--traces" => {
-                opts.n_traces = need_val(args, i)?.parse()?;
+                opts.n_traces = parse_val(args, i)?;
                 i += 2;
             }
             "--seed" => {
-                opts.seed = need_val(args, i)?.parse()?;
+                opts.seed = parse_val(args, i)?;
                 i += 2;
             }
             "--threads" => {
-                opts.threads = need_val(args, i)?.parse()?;
+                opts.threads = parse_val(args, i)?;
                 i += 2;
             }
             "--model" => {
                 let name = need_val(args, i)?;
-                opts.model = ModelId::parse(name)
-                    .ok_or_else(|| anyhow::anyhow!("unknown model '{name}'"))?;
+                opts.model = ModelId::parse(name).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "--model: unknown model '{name}' (qwen3-4b | deepseek-8b | phi-4)"
+                    )
+                })?;
                 i += 2;
             }
             "--bench" => {
                 let name = need_val(args, i)?;
-                opts.bench = BenchId::parse(name)
-                    .ok_or_else(|| anyhow::anyhow!("unknown bench '{name}'"))?;
+                opts.bench = BenchId::parse(name).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "--bench: unknown bench '{name}' (aime-25 | hmmt | gpqa | \
+                         equibench | divlogiceval)"
+                    )
+                })?;
                 i += 2;
             }
             "--mem-util" => {
-                opts.mem_util = need_val(args, i)?.parse()?;
+                opts.mem_util = parse_val(args, i)?;
                 i += 2;
             }
             "--quota-frac" => {
-                opts.quota_frac = Some(need_val(args, i)?.parse()?);
+                opts.quota_frac = Some(parse_val(args, i)?);
                 i += 2;
             }
             other => bail!("unknown cluster-sim option '{other}'\n\n{USAGE}"),
@@ -352,7 +420,7 @@ fn parse_cluster_opts(args: &[String]) -> Result<ClusterOpts> {
     // against the final fleet shape here rather than inline.
     if parse_fleet_events(&opts.fleet_events, opts.gpus, opts.standby).is_none() {
         bail!(
-            "bad --fleet-events spec '{}' (want ;-separated T:GPU:ACTION[:DEADLINE] with \
+            "--fleet-events: bad spec '{}' (want ;-separated T:GPU:ACTION[:DEADLINE] with \
              GPU < gpus+standby, or rand:SEED:N:HORIZON_S)",
             opts.fleet_events
         );
@@ -398,6 +466,26 @@ fn main() -> Result<()> {
     if cmd == "bench-gate" {
         let gopts = parse_gate_opts(&args[1..])?;
         harness::bench_gate::run(&gopts)?;
+        return Ok(());
+    }
+    if cmd == "trace-check" {
+        let Some(path) = args.get(1) else {
+            bail!("trace-check needs a FILE argument (a --trace-out JSONL log)\n\n{USAGE}");
+        };
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("trace-check: cannot read '{path}': {e}"))?;
+        let events = step::obs::parse_jsonl(&text)
+            .map_err(|e| anyhow::anyhow!("trace-check: {path}: {e}"))?;
+        let report = step::obs::replay::check(&events);
+        println!("trace-check {path}: {} events", report.events);
+        println!("  replayed counters: {}", report.counters.report());
+        if !report.ok() {
+            for v in &report.violations {
+                eprintln!("  VIOLATION: {v}");
+            }
+            bail!("trace-check: {} violation(s) in {path}", report.violations.len());
+        }
+        println!("  OK: per-request lifecycle and conservation laws hold");
         return Ok(());
     }
     let opts = parse_opts(&args[1..])?;

@@ -1,0 +1,703 @@
+//! Observability: structured, sim-time-stamped event telemetry for the
+//! DES, serving, and cluster engines.
+//!
+//! The engines expose end-of-run aggregates
+//! ([`crate::metrics::EngineCounters`] /
+//! [`crate::metrics::ClusterCounters`]); this module records the event
+//! *sequence* that produced them. Every scheduling decision — admission,
+//! placement, shedding, step scoring, pruning, preemption, resume,
+//! memory events, migration hops, fleet lifecycle transitions,
+//! completion — emits a [`SimEvent`] stamped with the simulation clock,
+//! GPU, request/trace id, and cause, into a [`Recorder`] attached to
+//! the engine (or the cluster front door).
+//!
+//! **Determinism contract.** Recorders observe; they never influence
+//! scheduling. An engine with no recorder attached pays one branch per
+//! emission site and constructs nothing (the zero-cost disabled path,
+//! measured by `benches/micro_hotpath.rs`), and a run with recorders
+//! attached produces byte-identical metrics to the untraced run —
+//! enforced by `tests/trace_replay.rs` and the `trace_identical` bench
+//! gate.
+//!
+//! **Merging.** Each engine records into its own lane, so parallel
+//! engine stepping (`--step-threads`) needs no synchronization; per-lane
+//! streams are deterministic, and [`merge_streams`] imposes the one
+//! canonical global order `(time, lane, emission index)` — identical
+//! for every thread count.
+//!
+//! Sinks on top: a JSONL event log ([`to_jsonl`] / [`parse_jsonl`],
+//! `--trace-out`) with event-kind filtering, a Chrome/Perfetto trace
+//! exporter ([`perfetto::chrome_trace`], `--perfetto-out`), a
+//! counters-from-events replay checker ([`replay`], `step trace-check`),
+//! and a bounded flight-recorder ring ([`EventBuf::ring`]) that keeps
+//! the last N events for post-mortem dumps ([`dump_tail`]).
+
+pub mod perfetto;
+pub mod replay;
+
+use std::collections::VecDeque;
+
+use crate::util::json::Json;
+
+/// The event taxonomy: what happened at one scheduling decision point.
+///
+/// Cluster front-door kinds (`Offer`..`Depart`) are emitted by
+/// `sim/cluster.rs`; engine kinds (`Admit`..`MemoryEvent`) by
+/// `sim/serve.rs` and (for the single-question engine) `sim/des.rs`;
+/// `Complete` is emitted by the cluster harvest at the completion
+/// instant.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum EventKind {
+    /// An arrival was presented to admission control.
+    Offer,
+    /// Admission routed a request onto the [`SimEvent::gpu`] engine.
+    Place,
+    /// A request entered the bounded admission queue.
+    Queue {
+        /// Queue depth immediately after the push.
+        depth: usize,
+    },
+    /// Admission rejected a request (cause: `queue-full`, `slo`, or
+    /// `stuck-queue`).
+    Shed,
+    /// A revocation force-clear abandoned a placed request.
+    Abandon,
+    /// The scaling controller activated the standby [`SimEvent::gpu`].
+    ScaleUp,
+    /// A GPU became active (standby activation or rejoin).
+    FleetJoin,
+    /// The schedule asked a GPU to leave gracefully.
+    FleetLeave,
+    /// A spot revocation fired against [`SimEvent::gpu`].
+    Revoke {
+        /// Seconds between the notice and the force-clear.
+        deadline_s: f64,
+    },
+    /// Admission to [`SimEvent::gpu`] stopped and its drain began
+    /// (cause: `leave` or `revoke`).
+    Drain {
+        /// Residents on the GPU when the drain started.
+        residents: usize,
+    },
+    /// An emptied draining GPU left the fleet.
+    Depart,
+    /// One migration hop: a request relocated to GPU `dst` (cause:
+    /// `shed-rescue`, `rebalance`, `drain`, or `rescue`).
+    Migrate {
+        /// Destination GPU.
+        dst: usize,
+        /// Prefix tokens the target recomputes to resume the traces.
+        recompute_tokens: u64,
+    },
+    /// An engine accepted a request and admitted/queued its traces.
+    Admit {
+        /// Traces the request fans out into (N; 1 for CoT).
+        traces: usize,
+    },
+    /// The step scorer evaluated one reasoning-step boundary.
+    StepScore {
+        /// The step score pushed into the trace's running aggregate.
+        score: f64,
+    },
+    /// A trace was removed by a pruning policy (cause: `memory`,
+    /// `slim-sc`, or `stall-drop`).
+    Prune,
+    /// A trace was preempted to the waiting queue by a memory event.
+    Preempt,
+    /// A waiting trace resumed (recompute-on-resume prefill).
+    Resume,
+    /// A KV-saturation memory event fired on the engine.
+    MemoryEvent {
+        /// Free pool blocks at the instant the event fired.
+        free_blocks: usize,
+    },
+    /// A request ran to completion (cause `drain` when it beat a
+    /// drain deadline on a departing GPU).
+    Complete,
+}
+
+/// Every kind's canonical (JSONL / `--trace-filter`) name, in taxonomy
+/// order.
+pub const KIND_NAMES: &[&str] = &[
+    "offer",
+    "place",
+    "queue",
+    "shed",
+    "abandon",
+    "scale-up",
+    "fleet-join",
+    "fleet-leave",
+    "revoke",
+    "drain",
+    "depart",
+    "migrate",
+    "admit",
+    "step-score",
+    "prune",
+    "preempt",
+    "resume",
+    "memory",
+    "complete",
+];
+
+/// The cause vocabulary (interned so [`SimEvent`] stays `Copy`).
+const CAUSES: &[&str] = &[
+    "queue-full",
+    "slo",
+    "stuck-queue",
+    "deadline",
+    "leave",
+    "revoke",
+    "shed-rescue",
+    "rebalance",
+    "drain",
+    "rescue",
+    "memory",
+    "slim-sc",
+    "stall-drop",
+];
+
+fn intern_cause(s: &str) -> Option<&'static str> {
+    CAUSES.iter().find(|&&c| c == s).copied()
+}
+
+impl EventKind {
+    /// The canonical name (stable; the JSONL `kind` field and the
+    /// `--trace-filter` vocabulary).
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::Offer => "offer",
+            EventKind::Place => "place",
+            EventKind::Queue { .. } => "queue",
+            EventKind::Shed => "shed",
+            EventKind::Abandon => "abandon",
+            EventKind::ScaleUp => "scale-up",
+            EventKind::FleetJoin => "fleet-join",
+            EventKind::FleetLeave => "fleet-leave",
+            EventKind::Revoke { .. } => "revoke",
+            EventKind::Drain { .. } => "drain",
+            EventKind::Depart => "depart",
+            EventKind::Migrate { .. } => "migrate",
+            EventKind::Admit { .. } => "admit",
+            EventKind::StepScore { .. } => "step-score",
+            EventKind::Prune => "prune",
+            EventKind::Preempt => "preempt",
+            EventKind::Resume => "resume",
+            EventKind::MemoryEvent { .. } => "memory",
+            EventKind::Complete => "complete",
+        }
+    }
+}
+
+/// One structured simulation event: [`kind`](Self::kind) plus the
+/// context stamps shared by every kind. Engine-side emissions leave
+/// [`gpu`](Self::gpu) as `None`; the cluster stamps the engine's GPU id
+/// when it drains the lane.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SimEvent {
+    /// Simulation clock of the decision (seconds).
+    pub t_s: f64,
+    /// GPU the event happened on (`None`: front-door / cluster scope,
+    /// or a single-engine run outside the cluster).
+    pub gpu: Option<usize>,
+    /// Cluster-global request id (the question id for the DES engine).
+    pub rid: Option<usize>,
+    /// Engine-local trace id, for trace-scoped kinds.
+    pub trace: Option<usize>,
+    /// Live KV-resident sequences on the engine after the event — the
+    /// Perfetto live-traces counter track samples this.
+    pub live: Option<usize>,
+    /// KV blocks in use on the engine after the event — the Perfetto
+    /// KV-occupancy counter track samples this.
+    pub kv: Option<usize>,
+    /// Why the decision fired (kind-specific vocabulary; see
+    /// [`EventKind`]).
+    pub cause: Option<&'static str>,
+    /// What happened.
+    pub kind: EventKind,
+}
+
+impl SimEvent {
+    /// A bare event: `kind` at clock `t_s`, every stamp unset.
+    pub fn new(t_s: f64, kind: EventKind) -> SimEvent {
+        SimEvent {
+            t_s,
+            gpu: None,
+            rid: None,
+            trace: None,
+            live: None,
+            kv: None,
+            cause: None,
+            kind,
+        }
+    }
+
+    /// Stamp the GPU id.
+    pub fn gpu(mut self, g: usize) -> SimEvent {
+        self.gpu = Some(g);
+        self
+    }
+
+    /// Stamp the request id.
+    pub fn rid(mut self, rid: usize) -> SimEvent {
+        self.rid = Some(rid);
+        self
+    }
+
+    /// Stamp the engine-local trace id.
+    pub fn trace(mut self, tid: usize) -> SimEvent {
+        self.trace = Some(tid);
+        self
+    }
+
+    /// Stamp the engine load sample (live sequences, KV blocks in use).
+    pub fn load(mut self, live: usize, kv: usize) -> SimEvent {
+        self.live = Some(live);
+        self.kv = Some(kv);
+        self
+    }
+
+    /// Stamp the cause.
+    pub fn cause(mut self, cause: &'static str) -> SimEvent {
+        self.cause = Some(cause);
+        self
+    }
+
+    /// The flat JSON object form — `t`, `kind`, the set context stamps,
+    /// and the kind's payload keys. Round-trips through
+    /// [`from_json`](Self::from_json).
+    pub fn to_json(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> = vec![
+            ("t", Json::Num(self.t_s)),
+            ("kind", Json::Str(self.kind.name().to_string())),
+        ];
+        if let Some(g) = self.gpu {
+            pairs.push(("gpu", Json::Num(g as f64)));
+        }
+        if let Some(r) = self.rid {
+            pairs.push(("rid", Json::Num(r as f64)));
+        }
+        if let Some(t) = self.trace {
+            pairs.push(("trace", Json::Num(t as f64)));
+        }
+        if let Some(l) = self.live {
+            pairs.push(("live", Json::Num(l as f64)));
+        }
+        if let Some(k) = self.kv {
+            pairs.push(("kv", Json::Num(k as f64)));
+        }
+        if let Some(c) = self.cause {
+            pairs.push(("cause", Json::Str(c.to_string())));
+        }
+        match self.kind {
+            EventKind::Queue { depth } => {
+                pairs.push(("depth", Json::Num(depth as f64)));
+            }
+            EventKind::Revoke { deadline_s } => {
+                pairs.push(("deadline_s", Json::Num(deadline_s)));
+            }
+            EventKind::Drain { residents } => {
+                pairs.push(("residents", Json::Num(residents as f64)));
+            }
+            EventKind::Migrate { dst, recompute_tokens } => {
+                pairs.push(("dst", Json::Num(dst as f64)));
+                pairs.push(("recompute_tokens", Json::Num(recompute_tokens as f64)));
+            }
+            EventKind::Admit { traces } => {
+                pairs.push(("traces", Json::Num(traces as f64)));
+            }
+            EventKind::StepScore { score } => {
+                pairs.push(("score", Json::Num(score)));
+            }
+            EventKind::MemoryEvent { free_blocks } => {
+                pairs.push(("free_blocks", Json::Num(free_blocks as f64)));
+            }
+            _ => {}
+        }
+        Json::obj(pairs)
+    }
+
+    /// Parse the JSON object form back into an event.
+    pub fn from_json(v: &Json) -> Result<SimEvent, String> {
+        let t_s = v.get("t").as_f64().ok_or("event is missing 't'")?;
+        let kind_name =
+            v.get("kind").as_str().ok_or("event is missing 'kind'")?.to_string();
+        let num = |key: &str| -> Result<usize, String> {
+            v.get(key)
+                .as_usize()
+                .ok_or_else(|| format!("'{kind_name}' event is missing '{key}'"))
+        };
+        let kind = match kind_name.as_str() {
+            "offer" => EventKind::Offer,
+            "place" => EventKind::Place,
+            "queue" => EventKind::Queue { depth: num("depth")? },
+            "shed" => EventKind::Shed,
+            "abandon" => EventKind::Abandon,
+            "scale-up" => EventKind::ScaleUp,
+            "fleet-join" => EventKind::FleetJoin,
+            "fleet-leave" => EventKind::FleetLeave,
+            "revoke" => EventKind::Revoke {
+                deadline_s: v
+                    .get("deadline_s")
+                    .as_f64()
+                    .ok_or("'revoke' event is missing 'deadline_s'")?,
+            },
+            "drain" => EventKind::Drain { residents: num("residents")? },
+            "depart" => EventKind::Depart,
+            "migrate" => EventKind::Migrate {
+                dst: num("dst")?,
+                recompute_tokens: num("recompute_tokens")? as u64,
+            },
+            "admit" => EventKind::Admit { traces: num("traces")? },
+            "step-score" => EventKind::StepScore {
+                score: v
+                    .get("score")
+                    .as_f64()
+                    .ok_or("'step-score' event is missing 'score'")?,
+            },
+            "prune" => EventKind::Prune,
+            "preempt" => EventKind::Preempt,
+            "resume" => EventKind::Resume,
+            "memory" => EventKind::MemoryEvent { free_blocks: num("free_blocks")? },
+            "complete" => EventKind::Complete,
+            other => return Err(format!("unknown event kind '{other}'")),
+        };
+        let cause = match v.get("cause").as_str() {
+            None => None,
+            Some(c) => Some(
+                intern_cause(c).ok_or_else(|| format!("unknown event cause '{c}'"))?,
+            ),
+        };
+        Ok(SimEvent {
+            t_s,
+            gpu: v.get("gpu").as_usize(),
+            rid: v.get("rid").as_usize(),
+            trace: v.get("trace").as_usize(),
+            live: v.get("live").as_usize(),
+            kv: v.get("kv").as_usize(),
+            cause,
+            kind,
+        })
+    }
+}
+
+/// An event sink the engines emit into.
+///
+/// Recorders observe and never influence scheduling: the engines call
+/// [`record`](Self::record) at decision points that already happened,
+/// and an engine with no recorder attached skips event construction
+/// entirely (the zero-cost disabled path). Implementations must be
+/// `Send` — the cluster steps its engines in parallel — and `Debug` so
+/// engine scratch state stays derivable.
+pub trait Recorder: std::fmt::Debug + Send {
+    /// Record one event.
+    fn record(&mut self, ev: SimEvent);
+
+    /// Drain buffered events in emission order (empty for sinks that
+    /// do not buffer).
+    fn drain(&mut self) -> Vec<SimEvent> {
+        Vec::new()
+    }
+
+    /// Events discarded by a bounded ring (0 for unbounded sinks).
+    fn dropped(&self) -> u64 {
+        0
+    }
+}
+
+/// The no-op recorder: every event is discarded. Attaching it measures
+/// the cost of the emission path itself (event construction plus one
+/// dynamic call) against the branch-only disabled path.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NullRecorder;
+
+impl Recorder for NullRecorder {
+    fn record(&mut self, _ev: SimEvent) {}
+}
+
+/// An in-memory event buffer: unbounded log or bounded flight-recorder
+/// ring that keeps the last `cap` events (older ones are dropped and
+/// counted).
+#[derive(Debug, Default, Clone)]
+pub struct EventBuf {
+    cap: usize,
+    buf: VecDeque<SimEvent>,
+    dropped: u64,
+}
+
+impl EventBuf {
+    /// An event buffer: `cap == 0` is the unbounded log, `cap > 0` a
+    /// flight-recorder ring over the last `cap` events.
+    pub fn new(cap: usize) -> EventBuf {
+        EventBuf { cap, buf: VecDeque::new(), dropped: 0 }
+    }
+
+    /// The unbounded event log.
+    pub fn unbounded() -> EventBuf {
+        EventBuf::new(0)
+    }
+
+    /// A flight-recorder ring keeping the last `cap` events.
+    pub fn ring(cap: usize) -> EventBuf {
+        EventBuf::new(cap.max(1))
+    }
+
+    /// Buffered events (oldest first, drops excluded).
+    pub fn events(&self) -> impl Iterator<Item = &SimEvent> {
+        self.buf.iter()
+    }
+
+    /// Number of buffered events.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Whether nothing is buffered.
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+}
+
+impl Recorder for EventBuf {
+    fn record(&mut self, ev: SimEvent) {
+        if self.cap > 0 && self.buf.len() == self.cap {
+            self.buf.pop_front();
+            self.dropped += 1;
+        }
+        self.buf.push_back(ev);
+    }
+
+    fn drain(&mut self) -> Vec<SimEvent> {
+        self.buf.drain(..).collect()
+    }
+
+    fn dropped(&self) -> u64 {
+        self.dropped
+    }
+}
+
+/// Merge per-lane event streams into the canonical global order.
+///
+/// Each stream is one `(lane, events)` pair — the cluster uses lane 0
+/// for the front door and lane `g + 1` for GPU `g` — with events in
+/// emission order. The merged order sorts by
+/// `(time, lane, emission index)`: simulation clocks are non-negative
+/// finite, so their IEEE-754 bit patterns order identically to the
+/// values, and the lane/index tie-break makes the result independent of
+/// how engine stepping was threaded.
+pub fn merge_streams(streams: Vec<(usize, Vec<SimEvent>)>) -> Vec<SimEvent> {
+    let mut keyed: Vec<(u64, usize, usize, SimEvent)> = Vec::new();
+    for (lane, evs) in streams {
+        for (i, ev) in evs.into_iter().enumerate() {
+            keyed.push((ev.t_s.to_bits(), lane, i, ev));
+        }
+    }
+    keyed.sort_by_key(|&(t, lane, i, _)| (t, lane, i));
+    keyed.into_iter().map(|(_, _, _, ev)| ev).collect()
+}
+
+/// Validate a `--trace-filter` kind list against [`KIND_NAMES`];
+/// `Err` names the first unknown kind.
+pub fn validate_kinds(kinds: &[String]) -> Result<(), String> {
+    for k in kinds {
+        if !KIND_NAMES.contains(&k.as_str()) {
+            return Err(format!(
+                "unknown event kind '{k}' (expected one of: {})",
+                KIND_NAMES.join(", ")
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Serialize events as JSON Lines — one compact object per line — for
+/// `--trace-out`. An empty `filter` keeps every kind; otherwise only
+/// events whose [`EventKind::name`] is listed are written.
+pub fn to_jsonl(events: &[SimEvent], filter: &[String]) -> String {
+    let mut out = String::new();
+    for ev in events {
+        if !filter.is_empty() && !filter.iter().any(|k| k == ev.kind.name()) {
+            continue;
+        }
+        out.push_str(&ev.to_json().to_string_compact());
+        out.push('\n');
+    }
+    out
+}
+
+/// Parse a JSONL event log back into events. Blank lines are skipped;
+/// errors name the offending line.
+pub fn parse_jsonl(text: &str) -> Result<Vec<SimEvent>, String> {
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let v = Json::parse(line)
+            .map_err(|e| format!("line {}: invalid JSON: {e:?}", i + 1))?;
+        let ev =
+            SimEvent::from_json(&v).map_err(|e| format!("line {}: {e}", i + 1))?;
+        out.push(ev);
+    }
+    Ok(out)
+}
+
+/// Render the last `n` events as a post-mortem dump — the
+/// flight-recorder output printed on invariant violations and chaos
+/// failures.
+pub fn dump_tail(label: &str, events: &[SimEvent], n: usize) -> String {
+    let tail = &events[events.len().saturating_sub(n)..];
+    let mut out = format!(
+        "==== {label}: last {} of {} recorded events ====\n",
+        tail.len(),
+        events.len()
+    );
+    for ev in tail {
+        out.push_str(&ev.to_json().to_string_compact());
+        out.push('\n');
+    }
+    out.push_str("==== end of flight recorder ====");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> SimEvent {
+        SimEvent::new(1.25, EventKind::Migrate { dst: 3, recompute_tokens: 420 })
+            .gpu(1)
+            .rid(7)
+            .cause("rebalance")
+            .load(5, 12)
+    }
+
+    #[test]
+    fn event_json_round_trips() {
+        let ev = sample();
+        let back = SimEvent::from_json(&ev.to_json()).unwrap();
+        assert_eq!(back, ev);
+        // Every kind round-trips, stamps or not.
+        let kinds = [
+            EventKind::Offer,
+            EventKind::Place,
+            EventKind::Queue { depth: 4 },
+            EventKind::Shed,
+            EventKind::Abandon,
+            EventKind::ScaleUp,
+            EventKind::FleetJoin,
+            EventKind::FleetLeave,
+            EventKind::Revoke { deadline_s: 12.5 },
+            EventKind::Drain { residents: 2 },
+            EventKind::Depart,
+            EventKind::Migrate { dst: 0, recompute_tokens: 9 },
+            EventKind::Admit { traces: 8 },
+            EventKind::StepScore { score: -0.75 },
+            EventKind::Prune,
+            EventKind::Preempt,
+            EventKind::Resume,
+            EventKind::MemoryEvent { free_blocks: 3 },
+            EventKind::Complete,
+        ];
+        assert_eq!(kinds.len(), KIND_NAMES.len());
+        for (k, name) in kinds.iter().zip(KIND_NAMES) {
+            assert_eq!(k.name(), *name);
+            let ev = SimEvent::new(0.5, *k);
+            assert_eq!(SimEvent::from_json(&ev.to_json()).unwrap(), ev);
+        }
+    }
+
+    #[test]
+    fn from_json_rejects_unknowns() {
+        let bad = Json::obj(vec![
+            ("t", Json::Num(0.0)),
+            ("kind", Json::Str("warp".into())),
+        ]);
+        assert!(SimEvent::from_json(&bad).unwrap_err().contains("warp"));
+        let bad_cause = Json::obj(vec![
+            ("t", Json::Num(0.0)),
+            ("kind", Json::Str("shed".into())),
+            ("cause", Json::Str("cosmic-ray".into())),
+        ]);
+        assert!(SimEvent::from_json(&bad_cause).unwrap_err().contains("cosmic-ray"));
+    }
+
+    #[test]
+    fn ring_keeps_the_last_n_and_counts_drops() {
+        let mut r = EventBuf::ring(8);
+        for i in 0..20 {
+            r.record(SimEvent::new(i as f64, EventKind::Offer).rid(i));
+        }
+        assert_eq!(r.len(), 8);
+        assert_eq!(Recorder::dropped(&r), 12);
+        let evs = r.drain();
+        assert_eq!(evs.first().unwrap().rid, Some(12));
+        assert_eq!(evs.last().unwrap().rid, Some(19));
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn unbounded_buffer_never_drops() {
+        let mut b = EventBuf::unbounded();
+        for i in 0..1000 {
+            b.record(SimEvent::new(0.0, EventKind::Offer).rid(i));
+        }
+        assert_eq!(b.len(), 1000);
+        assert_eq!(Recorder::dropped(&b), 0);
+        assert_eq!(b.events().count(), 1000);
+    }
+
+    #[test]
+    fn merge_orders_by_time_then_lane_then_index() {
+        let a = vec![
+            SimEvent::new(1.0, EventKind::Offer).rid(0),
+            SimEvent::new(3.0, EventKind::Offer).rid(1),
+        ];
+        let b = vec![
+            SimEvent::new(1.0, EventKind::Admit { traces: 2 }).rid(0),
+            SimEvent::new(2.0, EventKind::Prune).rid(0),
+        ];
+        let merged = merge_streams(vec![(1, b), (0, a)]);
+        let kinds: Vec<&str> = merged.iter().map(|e| e.kind.name()).collect();
+        assert_eq!(kinds, vec!["offer", "admit", "prune", "offer"]);
+        // Same streams, any submission order: same merge.
+        let t: Vec<f64> = merged.iter().map(|e| e.t_s).collect();
+        assert!(t.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn jsonl_round_trips_and_filters() {
+        let evs = vec![
+            SimEvent::new(0.0, EventKind::Offer).rid(0),
+            SimEvent::new(0.5, EventKind::Place).rid(0).gpu(2),
+            SimEvent::new(1.0, EventKind::Complete).rid(0).gpu(2),
+        ];
+        let text = to_jsonl(&evs, &[]);
+        assert_eq!(parse_jsonl(&text).unwrap(), evs);
+        let only = to_jsonl(&evs, &["complete".to_string()]);
+        let parsed = parse_jsonl(&only).unwrap();
+        assert_eq!(parsed.len(), 1);
+        assert_eq!(parsed[0].kind, EventKind::Complete);
+        assert!(validate_kinds(&["complete".to_string()]).is_ok());
+        assert!(validate_kinds(&["compleat".to_string()])
+            .unwrap_err()
+            .contains("compleat"));
+    }
+
+    #[test]
+    fn parse_jsonl_names_the_bad_line() {
+        let text = "{\"t\":0,\"kind\":\"offer\"}\nnot json\n";
+        assert!(parse_jsonl(text).unwrap_err().starts_with("line 2"));
+    }
+
+    #[test]
+    fn dump_tail_truncates_to_n() {
+        let evs: Vec<SimEvent> =
+            (0..10).map(|i| SimEvent::new(i as f64, EventKind::Offer).rid(i)).collect();
+        let dump = dump_tail("boom", &evs, 3);
+        assert!(dump.contains("last 3 of 10"));
+        assert!(dump.contains("\"rid\":9"));
+        assert!(!dump.contains("\"rid\":6"));
+    }
+}

@@ -1,0 +1,241 @@
+//! Chrome-trace-event / Perfetto exporter (`--perfetto-out`).
+//!
+//! Renders a merged [`SimEvent`] stream as the Chrome trace-event JSON
+//! format (`{"traceEvents": [...]}`), loadable in `ui.perfetto.dev` or
+//! `chrome://tracing`:
+//!
+//! * **pid 1 "cluster"** — one track per scheduling locus: tid 0 is
+//!   the front door, tid `g + 1` is GPU `g`. Non-span kinds (prunes,
+//!   preemptions, fleet transitions, …) render as thread-scoped
+//!   instants there.
+//! * **pid 2 "requests"** — one track per request (tid = rid) carrying
+//!   its `queued` (Offer→Place/Shed) and `running` (Place→Complete/
+//!   Abandon) duration spans as `B`/`E` pairs.
+//! * **Counter tracks** (`ph: "C"`) — `queue_depth` from `Queue`
+//!   events, and per-GPU `kv[g*]` / `live[g*]` occupancy sampled from
+//!   the load stamps engine events carry.
+//!
+//! Timestamps are the simulation clock in integer microseconds; the
+//! input stream is already in canonical merged order
+//! ([`crate::obs::merge_streams`]), so `ts` comes out monotone —
+//! `tests/trace_replay.rs` keeps the exporter honest with a shape test
+//! (valid JSON, monotone `ts`, matched `B`/`E` pairs, counter-track
+//! names).
+
+use std::collections::BTreeMap;
+
+use crate::obs::{EventKind, SimEvent};
+use crate::util::json::Json;
+
+/// The `pid` of the per-locus (front door + GPUs) process group.
+pub const PID_CLUSTER: usize = 1;
+/// The `pid` of the per-request span process group.
+pub const PID_REQUESTS: usize = 2;
+
+fn str_json(s: &str) -> Json {
+    Json::Str(s.to_string())
+}
+
+fn meta(pid: usize, tid: usize, what: &str, name: &str) -> Json {
+    Json::obj(vec![
+        ("ph", str_json("M")),
+        ("name", str_json(what)),
+        ("pid", Json::Num(pid as f64)),
+        ("tid", Json::Num(tid as f64)),
+        ("args", Json::obj(vec![("name", str_json(name))])),
+    ])
+}
+
+fn span(ph: &str, name: &str, tid: usize, ts: f64) -> Json {
+    Json::obj(vec![
+        ("ph", str_json(ph)),
+        ("name", str_json(name)),
+        ("pid", Json::Num(PID_REQUESTS as f64)),
+        ("tid", Json::Num(tid as f64)),
+        ("ts", Json::Num(ts)),
+    ])
+}
+
+fn instant(name: &str, tid: usize, ts: f64, args: Vec<(&str, Json)>) -> Json {
+    Json::obj(vec![
+        ("ph", str_json("i")),
+        ("name", str_json(name)),
+        ("pid", Json::Num(PID_CLUSTER as f64)),
+        ("tid", Json::Num(tid as f64)),
+        ("ts", Json::Num(ts)),
+        ("s", str_json("t")),
+        ("args", Json::obj(args)),
+    ])
+}
+
+fn counter(name: &str, tid: usize, ts: f64, series: &str, value: f64) -> Json {
+    Json::obj(vec![
+        ("ph", str_json("C")),
+        ("name", str_json(name)),
+        ("pid", Json::Num(PID_CLUSTER as f64)),
+        ("tid", Json::Num(tid as f64)),
+        ("ts", Json::Num(ts)),
+        ("args", Json::obj(vec![(series, Json::Num(value))])),
+    ])
+}
+
+/// The cluster-process track id of an event: its GPU's track, or the
+/// front door's.
+fn locus_tid(ev: &SimEvent) -> usize {
+    ev.gpu.map_or(0, |g| g + 1)
+}
+
+/// Export a merged event stream as a Chrome trace-event JSON document.
+///
+/// Open request spans (a request still queued or running when the
+/// stream ends — e.g. a filtered log) are closed at the last observed
+/// timestamp so the document always balances its `B`/`E` pairs.
+pub fn chrome_trace(events: &[SimEvent]) -> Json {
+    let mut out: Vec<Json> = Vec::new();
+    out.push(meta(PID_CLUSTER, 0, "process_name", "cluster"));
+    out.push(meta(PID_REQUESTS, 0, "process_name", "requests"));
+    out.push(meta(PID_CLUSTER, 0, "thread_name", "front-door"));
+    let mut gpus: Vec<usize> = events.iter().filter_map(|e| e.gpu).collect();
+    gpus.sort_unstable();
+    gpus.dedup();
+    for &g in &gpus {
+        out.push(meta(PID_CLUSTER, g + 1, "thread_name", &format!("gpu{g}")));
+    }
+
+    // rid -> the currently open span name on its request track.
+    let mut open: BTreeMap<usize, &'static str> = BTreeMap::new();
+    let mut last_ts = 0.0f64;
+    for ev in events {
+        let ts = (ev.t_s * 1e6).round();
+        last_ts = last_ts.max(ts);
+        let tid = locus_tid(ev);
+        match ev.kind {
+            EventKind::Offer => {
+                if let Some(rid) = ev.rid {
+                    out.push(span("B", "queued", rid, ts));
+                    open.insert(rid, "queued");
+                }
+            }
+            EventKind::Place => {
+                if let Some(rid) = ev.rid {
+                    if open.remove(&rid).is_some() {
+                        out.push(span("E", "queued", rid, ts));
+                    }
+                    out.push(span("B", "running", rid, ts));
+                    open.insert(rid, "running");
+                }
+            }
+            EventKind::Shed | EventKind::Complete | EventKind::Abandon => {
+                if let Some(rid) = ev.rid {
+                    if let Some(name) = open.remove(&rid) {
+                        out.push(span("E", name, rid, ts));
+                    }
+                }
+                if !matches!(ev.kind, EventKind::Complete) {
+                    let mut args = Vec::new();
+                    if let Some(c) = ev.cause {
+                        args.push(("cause", str_json(c)));
+                    }
+                    out.push(instant(ev.kind.name(), tid, ts, args));
+                }
+            }
+            EventKind::Queue { depth } => {
+                out.push(counter("queue_depth", 0, ts, "depth", depth as f64));
+            }
+            _ => {
+                let mut args = Vec::new();
+                if let Some(rid) = ev.rid {
+                    args.push(("rid", Json::Num(rid as f64)));
+                }
+                if let Some(c) = ev.cause {
+                    args.push(("cause", str_json(c)));
+                }
+                out.push(instant(ev.kind.name(), tid, ts, args));
+            }
+        }
+        // KV-occupancy / live-trace counter tracks, sampled at every
+        // event boundary that carries a load stamp.
+        if let Some(g) = ev.gpu {
+            if let Some(kv) = ev.kv {
+                out.push(counter(&format!("kv[g{g}]"), g + 1, ts, "blocks", kv as f64));
+            }
+            if let Some(live) = ev.live {
+                out.push(counter(
+                    &format!("live[g{g}]"),
+                    g + 1,
+                    ts,
+                    "traces",
+                    live as f64,
+                ));
+            }
+        }
+    }
+    for (rid, name) in open {
+        out.push(span("E", name, rid, last_ts));
+    }
+    Json::obj(vec![
+        ("displayTimeUnit", str_json("ms")),
+        ("traceEvents", Json::Arr(out)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::SimEvent;
+
+    #[test]
+    fn spans_pair_and_counters_sample() {
+        let events = vec![
+            SimEvent::new(0.0, EventKind::Offer).rid(0),
+            SimEvent::new(0.0, EventKind::Queue { depth: 1 }).rid(0),
+            SimEvent::new(0.5, EventKind::Place).rid(0).gpu(1),
+            SimEvent::new(0.5, EventKind::Admit { traces: 4 })
+                .rid(0)
+                .gpu(1)
+                .load(4, 10),
+            SimEvent::new(1.0, EventKind::Prune).rid(0).gpu(1).cause("memory"),
+            SimEvent::new(2.0, EventKind::Complete).rid(0).gpu(1),
+            // Left open on purpose: closed at the final timestamp.
+            SimEvent::new(2.5, EventKind::Offer).rid(1),
+        ];
+        let doc = chrome_trace(&events);
+        let tes = doc.get("traceEvents").as_arr().unwrap();
+        let mut b = 0;
+        let mut e = 0;
+        let mut counters = Vec::new();
+        for te in tes {
+            match te.get("ph").as_str().unwrap() {
+                "B" => b += 1,
+                "E" => e += 1,
+                "C" => counters.push(te.get("name").as_str().unwrap().to_string()),
+                _ => {}
+            }
+        }
+        assert_eq!(b, e, "every B span has a matching E");
+        assert_eq!(b, 3, "queued, running, and the dangling queued span");
+        assert!(counters.iter().any(|n| n == "queue_depth"));
+        assert!(counters.iter().any(|n| n == "kv[g1]"));
+        assert!(counters.iter().any(|n| n == "live[g1]"));
+    }
+
+    #[test]
+    fn ts_is_monotone_in_merged_order() {
+        let events = vec![
+            SimEvent::new(0.0, EventKind::Offer).rid(0),
+            SimEvent::new(0.25, EventKind::Place).rid(0).gpu(0),
+            SimEvent::new(0.75, EventKind::Complete).rid(0).gpu(0),
+        ];
+        let doc = chrome_trace(&events);
+        let mut last = f64::NEG_INFINITY;
+        for te in doc.get("traceEvents").as_arr().unwrap() {
+            if te.get("ph").as_str() == Some("M") {
+                continue;
+            }
+            let ts = te.get("ts").as_f64().unwrap();
+            assert!(ts >= last, "ts must be monotone: {ts} < {last}");
+            last = ts;
+        }
+        assert_eq!(last, 0.75e6);
+    }
+}

@@ -1,0 +1,270 @@
+//! Log-vs-counters consistency: re-derive [`ClusterCounters`] from a
+//! recorded event stream alone, and check the admission conservation
+//! laws event-by-event.
+//!
+//! Every counter the cluster front door maintains increments at exactly
+//! one emission site, so a faithful trace must reproduce the counters
+//! byte-for-byte ([`replay_counters`] + [`ClusterCounters::report`]).
+//! [`check`] additionally walks each request's lifecycle — offered →
+//! placed/shed → completed/abandoned, exactly once each — which is what
+//! `step trace-check` runs against a `--trace-out` JSONL file in CI.
+
+use std::collections::HashMap;
+
+use crate::metrics::ClusterCounters;
+use crate::obs::{EventKind, SimEvent};
+
+/// Re-derive the cluster's admission/goodput counters from events
+/// alone. Counter ↔ event mapping:
+///
+/// * `offered`/`placed`/`shed`/`completed` — `Offer`/`Place`/`Shed`/
+///   `Complete` counts;
+/// * `queue_peak` — max `Queue` depth;
+/// * `migrated` — `Migrate` count, `migration_recompute_tokens` its
+///   summed payload, `rescue_migrated` the `drain`-caused subset,
+///   `migration_saved` the `rescue`-caused subset;
+/// * `revocations` — `Revoke` count;
+/// * `drained` — `drain`-caused `Complete`s;
+/// * `shed_on_revoke` — `Abandon` count.
+pub fn replay_counters(events: &[SimEvent]) -> ClusterCounters {
+    let mut c = ClusterCounters::default();
+    for ev in events {
+        match ev.kind {
+            EventKind::Offer => c.offered += 1,
+            EventKind::Place => c.placed += 1,
+            EventKind::Shed => c.shed += 1,
+            EventKind::Queue { depth } => {
+                c.queue_peak = c.queue_peak.max(depth as u64);
+            }
+            EventKind::Complete => {
+                c.completed += 1;
+                if ev.cause == Some("drain") {
+                    c.drained += 1;
+                }
+            }
+            EventKind::Abandon => c.shed_on_revoke += 1,
+            EventKind::Migrate { recompute_tokens, .. } => {
+                c.migrated += 1;
+                c.migration_recompute_tokens += recompute_tokens;
+                match ev.cause {
+                    Some("drain") => c.rescue_migrated += 1,
+                    Some("rescue") => c.migration_saved += 1,
+                    _ => {}
+                }
+            }
+            EventKind::Revoke { .. } => c.revocations += 1,
+            _ => {}
+        }
+    }
+    c
+}
+
+/// What [`check`] found in an event stream.
+#[derive(Debug, Clone)]
+pub struct ReplayReport {
+    /// The counters re-derived by [`replay_counters`].
+    pub counters: ClusterCounters,
+    /// Number of events examined.
+    pub events: usize,
+    /// Conservation/lifecycle violations, human-readable (empty for a
+    /// well-formed trace).
+    pub violations: Vec<String>,
+}
+
+impl ReplayReport {
+    /// Whether the trace is well-formed.
+    pub fn ok(&self) -> bool {
+        self.violations.is_empty()
+    }
+}
+
+/// Per-request lifecycle state while replaying.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Lifecycle {
+    Offered,
+    Placed,
+    Shed,
+    Done,
+}
+
+/// Validate an event stream: time-ordering, per-request lifecycle
+/// (each rid is offered at most once, placed or shed after an offer,
+/// completed or abandoned exactly once after a placement), and the
+/// end-of-run conservation laws `offered == placed + shed` and
+/// `completed + shed_on_revoke == placed`.
+pub fn check(events: &[SimEvent]) -> ReplayReport {
+    let mut violations = Vec::new();
+    let mut last_t = f64::NEG_INFINITY;
+    let mut life: HashMap<usize, Lifecycle> = HashMap::new();
+    for (i, ev) in events.iter().enumerate() {
+        if !(ev.t_s.is_finite() && ev.t_s >= 0.0) {
+            violations.push(format!("event {i}: bad clock {}", ev.t_s));
+        } else if ev.t_s < last_t {
+            violations.push(format!(
+                "event {i}: clock {} runs backwards past {last_t}",
+                ev.t_s
+            ));
+        } else {
+            last_t = ev.t_s;
+        }
+        let rid = ev.rid;
+        match ev.kind {
+            EventKind::Offer => {
+                let Some(rid) = rid else {
+                    violations.push(format!("event {i}: offer without rid"));
+                    continue;
+                };
+                if life.insert(rid, Lifecycle::Offered).is_some() {
+                    violations.push(format!("event {i}: rid {rid} offered twice"));
+                }
+            }
+            EventKind::Place => {
+                let Some(rid) = rid else {
+                    violations.push(format!("event {i}: place without rid"));
+                    continue;
+                };
+                match life.get(&rid) {
+                    Some(Lifecycle::Offered) => {
+                        life.insert(rid, Lifecycle::Placed);
+                    }
+                    other => violations.push(format!(
+                        "event {i}: rid {rid} placed from state {other:?}"
+                    )),
+                }
+            }
+            EventKind::Shed => {
+                let Some(rid) = rid else {
+                    violations.push(format!("event {i}: shed without rid"));
+                    continue;
+                };
+                match life.get(&rid) {
+                    Some(Lifecycle::Offered) => {
+                        life.insert(rid, Lifecycle::Shed);
+                    }
+                    other => violations.push(format!(
+                        "event {i}: rid {rid} shed from state {other:?}"
+                    )),
+                }
+            }
+            EventKind::Complete | EventKind::Abandon => {
+                let what = ev.kind.name();
+                let Some(rid) = rid else {
+                    violations.push(format!("event {i}: {what} without rid"));
+                    continue;
+                };
+                match life.get(&rid) {
+                    Some(Lifecycle::Placed) => {
+                        life.insert(rid, Lifecycle::Done);
+                    }
+                    other => violations.push(format!(
+                        "event {i}: rid {rid} {what} from state {other:?} \
+                         (completion must be exactly-once after a placement)"
+                    )),
+                }
+            }
+            _ => {}
+        }
+    }
+    let counters = replay_counters(events);
+    if counters.offered != counters.placed + counters.shed {
+        violations.push(format!(
+            "placement conservation broken: offered={} != placed={} + shed={}",
+            counters.offered, counters.placed, counters.shed
+        ));
+    }
+    if counters.completed + counters.shed_on_revoke != counters.placed {
+        violations.push(format!(
+            "completion conservation broken: completed={} + shed_on_revoke={} != \
+             placed={}",
+            counters.completed, counters.shed_on_revoke, counters.placed
+        ));
+    }
+    ReplayReport { counters, events: events.len(), violations }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::SimEvent;
+
+    fn ev(t: f64, kind: EventKind, rid: usize) -> SimEvent {
+        SimEvent::new(t, kind).rid(rid)
+    }
+
+    #[test]
+    fn well_formed_stream_passes_and_counts() {
+        let events = vec![
+            ev(0.0, EventKind::Offer, 0),
+            ev(0.0, EventKind::Place, 0),
+            ev(1.0, EventKind::Offer, 1),
+            ev(1.0, EventKind::Queue { depth: 1 }, 1),
+            ev(2.0, EventKind::Offer, 2),
+            ev(2.0, EventKind::Shed, 2).cause("queue-full"),
+            ev(3.0, EventKind::Place, 1),
+            ev(4.0, EventKind::Complete, 0),
+            ev(5.0, EventKind::Complete, 1),
+        ];
+        let report = check(&events);
+        assert!(report.ok(), "unexpected violations: {:?}", report.violations);
+        let c = report.counters;
+        assert_eq!((c.offered, c.placed, c.shed, c.completed), (3, 2, 1, 2));
+        assert_eq!(c.queue_peak, 1);
+    }
+
+    #[test]
+    fn double_completion_is_flagged() {
+        let events = vec![
+            ev(0.0, EventKind::Offer, 0),
+            ev(0.0, EventKind::Place, 0),
+            ev(1.0, EventKind::Complete, 0),
+            ev(2.0, EventKind::Complete, 0),
+        ];
+        let report = check(&events);
+        assert!(!report.ok());
+        assert!(report.violations.iter().any(|v| v.contains("exactly-once")));
+    }
+
+    #[test]
+    fn unplaced_completion_and_lost_placement_are_flagged() {
+        // A completion with no placement at all.
+        let r = check(&[ev(0.0, EventKind::Complete, 3)]);
+        assert!(r.violations.iter().any(|v| v.contains("rid 3")));
+        // A placement that never resolves breaks conservation.
+        let r = check(&[
+            ev(0.0, EventKind::Offer, 0),
+            ev(0.0, EventKind::Place, 0),
+        ]);
+        assert!(r.violations.iter().any(|v| v.contains("completion conservation")));
+    }
+
+    #[test]
+    fn backwards_clock_is_flagged() {
+        let r = check(&[
+            ev(5.0, EventKind::Offer, 0),
+            ev(1.0, EventKind::Place, 0),
+            ev(6.0, EventKind::Complete, 0),
+        ]);
+        assert!(r.violations.iter().any(|v| v.contains("runs backwards")));
+    }
+
+    #[test]
+    fn migration_and_fleet_counters_replay() {
+        let events = vec![
+            ev(0.0, EventKind::Offer, 0),
+            ev(0.0, EventKind::Place, 0),
+            SimEvent::new(1.0, EventKind::Revoke { deadline_s: 5.0 }).gpu(1),
+            ev(1.5, EventKind::Migrate { dst: 0, recompute_tokens: 64 }, 0)
+                .cause("drain"),
+            ev(2.0, EventKind::Migrate { dst: 1, recompute_tokens: 36 }, 0)
+                .cause("rescue"),
+            ev(3.0, EventKind::Complete, 0).cause("drain"),
+        ];
+        let c = replay_counters(&events);
+        assert_eq!(c.migrated, 2);
+        assert_eq!(c.migration_recompute_tokens, 100);
+        assert_eq!(c.rescue_migrated, 1);
+        assert_eq!(c.migration_saved, 1);
+        assert_eq!(c.revocations, 1);
+        assert_eq!(c.drained, 1);
+    }
+}

@@ -95,6 +95,7 @@ use std::collections::{BinaryHeap, VecDeque};
 use crate::coordinator::method::{Method, MethodParams};
 use crate::coordinator::scorer::StepScorer;
 use crate::metrics::{ClusterCounters, EngineCounters, LatencySketch};
+use crate::obs::{dump_tail, merge_streams, EventBuf, EventKind, Recorder, SimEvent};
 use crate::sim::des::ScoreAgg;
 use crate::sim::profiles::{BenchId, ModelId};
 use crate::sim::router::{
@@ -581,6 +582,14 @@ pub struct ClusterConfig {
     /// set above 0, the admission queue reaching this depth does too.
     /// Standby exhaustion falls back to the usual queue/shed path.
     pub scale_up_queue_depth: usize,
+    /// Attach per-lane event recorders (front door + one per engine)
+    /// and return the merged stream in [`ClusterResult::events`]:
+    /// `Some(cap)` bounds each lane to its last `cap` events (a
+    /// flight-recorder ring; `0` = unbounded log). `None` (default) is
+    /// the zero-cost disabled path; recorders observe but never
+    /// influence scheduling, so every metric byte is identical either
+    /// way.
+    pub event_log: Option<usize>,
 }
 
 impl ClusterConfig {
@@ -616,6 +625,7 @@ impl ClusterConfig {
             fleet_events: Vec::new(),
             standby: 0,
             scale_up_queue_depth: 0,
+            event_log: None,
         }
     }
 
@@ -759,6 +769,15 @@ pub struct ClusterResult {
     /// Fleet-lifecycle audit log, in transition order (empty for a
     /// static fleet).
     pub fleet_log: Vec<FleetLogEntry>,
+    /// The merged observability event stream, in canonical
+    /// `(time, lane, emission)` order — empty unless
+    /// [`ClusterConfig::event_log`] was set. Never serialized into
+    /// metric blocks, so traced and untraced metric bytes stay
+    /// identical.
+    pub events: Vec<SimEvent>,
+    /// Events discarded by bounded flight-recorder rings (0 for
+    /// unbounded logs and the disabled path).
+    pub events_dropped: u64,
 }
 
 impl ClusterResult {
@@ -839,6 +858,9 @@ struct FrontDoor {
     draining: usize,
     /// Fleet-lifecycle audit log.
     fleet_log: Vec<FleetLogEntry>,
+    /// Front-door event recorder (lane 0 of the merged stream); `None`
+    /// is the zero-cost disabled path.
+    rec: Option<EventBuf>,
 }
 
 impl FrontDoor {
@@ -866,6 +888,16 @@ impl FrontDoor {
     /// Sum of expected footprints currently waiting in the queue.
     fn queued_blocks(&self) -> f64 {
         self.queue.iter().map(|&rid| self.meta[rid].expected_blocks).sum()
+    }
+
+    /// Emit one event if a recorder is attached. The builder runs only
+    /// on the enabled path; recorders observe admission decisions, they
+    /// never influence them.
+    #[inline]
+    fn emit(&mut self, build: impl FnOnce() -> SimEvent) {
+        if let Some(rec) = self.rec.as_mut() {
+            rec.record(build());
+        }
     }
 }
 
@@ -908,6 +940,11 @@ impl<'a> ClusterSim<'a> {
             .iter()
             .map(|ecfg| ServeEngine::new(ecfg, self.gen, self.scorer))
             .collect();
+        if let Some(cap) = cfg.event_log {
+            for eng in engines.iter_mut() {
+                eng.set_recorder(Box::new(EventBuf::new(cap)));
+            }
+        }
         let nq = self.gen.bench.n_questions;
         let n_shards = total.div_ceil(cfg.resolved_shard_size());
 
@@ -962,6 +999,7 @@ impl<'a> ClusterSim<'a> {
             deadline_heap: BinaryHeap::new(),
             draining: 0,
             fleet_log: Vec::new(),
+            rec: cfg.event_log.map(EventBuf::new),
         };
 
         // ---- seed the arrival stream.
@@ -1083,12 +1121,43 @@ impl<'a> ClusterSim<'a> {
                             // terminates (closed-loop clients re-issue
                             // until their budget is fully offered).
                             while let Some(rid) = fd.queue.pop_front() {
-                                self.shed(&mut fd, rid);
+                                self.shed(&mut fd, rid, "stuck-queue");
                             }
                         }
                     }
                     None => break,
                 }
+            }
+        }
+
+        // ---- recorders: drain the per-lane streams (front door =
+        // lane 0, GPU g = lane g + 1; the gpu stamp is applied here —
+        // engines do not know their cluster slot) into the canonical
+        // merged order.
+        let mut events: Vec<SimEvent> = Vec::new();
+        let mut events_dropped = 0u64;
+        if cfg.event_log.is_some() {
+            let mut streams = Vec::with_capacity(engines.len() + 1);
+            if let Some(rec) = fd.rec.as_mut() {
+                events_dropped += rec.dropped();
+                streams.push((0usize, rec.drain()));
+            }
+            for (g, eng) in engines.iter_mut().enumerate() {
+                if let Some(mut rec) = eng.take_recorder() {
+                    events_dropped += rec.dropped();
+                    let evs: Vec<SimEvent> =
+                        rec.drain().into_iter().map(|e| e.gpu(g)).collect();
+                    streams.push((g + 1, evs));
+                }
+            }
+            events = merge_streams(streams);
+            // Flight recorder: a broken conservation law dumps the tail
+            // of the stream before the assertions below fire.
+            let conserved = fd.counters.offered == fd.counters.placed + fd.counters.shed
+                && fd.counters.completed + fd.counters.shed_on_revoke
+                    == fd.counters.placed;
+            if !conserved {
+                eprintln!("{}", dump_tail("cluster invariant violation", &events, 64));
             }
         }
 
@@ -1149,6 +1218,8 @@ impl<'a> ClusterSim<'a> {
             per_gpu_peak_outstanding: fd.per_gpu_peak_outstanding,
             per_gpu_peak_block_frac,
             fleet_log: fd.fleet_log,
+            events,
+            events_dropped,
         }
     }
 
@@ -1214,11 +1285,18 @@ impl<'a> ClusterSim<'a> {
             match ev.action {
                 FleetAction::Join => self.fleet_join(&*engines, fd, ev.gpu, t),
                 FleetAction::Leave => {
-                    self.fleet_drain(engines, fd, ev.gpu, f64::INFINITY, t);
+                    if self.fleet_drain(engines, fd, ev.gpu, f64::INFINITY, t) {
+                        let g = ev.gpu;
+                        fd.emit(|| SimEvent::new(t, EventKind::FleetLeave).gpu(g));
+                    }
                 }
                 FleetAction::Revoke { deadline_s } => {
                     if self.fleet_drain(engines, fd, ev.gpu, t + deadline_s, t) {
                         fd.counters.revocations += 1;
+                        let g = ev.gpu;
+                        fd.emit(|| {
+                            SimEvent::new(t, EventKind::Revoke { deadline_s }).gpu(g)
+                        });
                         fd.deadline_heap
                             .push(Reverse(((t + deadline_s).to_bits(), ev.gpu)));
                     }
@@ -1258,6 +1336,7 @@ impl<'a> ClusterSim<'a> {
             kind: FleetLogKind::Joined,
             residents_after: engines[g].outstanding(),
         });
+        fd.emit(|| SimEvent::new(t, EventKind::FleetJoin).gpu(g));
         // A joining engine is empty and idle; the laggard heap tracks
         // busy engines only, so no entry is needed until work lands.
     }
@@ -1280,11 +1359,16 @@ impl<'a> ClusterSim<'a> {
         fd.state[g] = GpuState::Draining { deadline_s };
         fd.draining += 1;
         fd.view_version[g] = u64::MAX;
+        let residents = engines[g].outstanding();
         fd.fleet_log.push(FleetLogEntry {
             t_s: t,
             gpu: g,
             kind: FleetLogKind::DrainStarted,
-            residents_after: engines[g].outstanding(),
+            residents_after: residents,
+        });
+        let cause = if deadline_s.is_infinite() { "leave" } else { "revoke" };
+        fd.emit(|| {
+            SimEvent::new(t, EventKind::Drain { residents }).gpu(g).cause(cause)
         });
         // First relocation pass right away; an emptied victim departs
         // immediately.
@@ -1335,7 +1419,7 @@ impl<'a> ClusterSim<'a> {
                 .extract_request(victim)
                 .expect("the victim is outstanding on its source");
             fd.counters.rescue_migrated += 1;
-            self.relocate(engines, fd, m, tgt_g);
+            self.relocate(engines, fd, m, tgt_g, "drain");
         }
     }
 
@@ -1371,6 +1455,7 @@ impl<'a> ClusterSim<'a> {
     fn abandon(&self, fd: &mut FrontDoor, rid: usize, t: f64) {
         fd.counters.shed_on_revoke += 1;
         fd.shed_rids.push(rid);
+        fd.emit(|| SimEvent::new(t, EventKind::Abandon).rid(rid).cause("deadline"));
         let client = fd.meta[rid].client;
         if client != usize::MAX {
             let next = fd
@@ -1400,6 +1485,7 @@ impl<'a> ClusterSim<'a> {
             kind: FleetLogKind::Departed,
             residents_after: 0,
         });
+        fd.emit(|| SimEvent::new(t, EventKind::Depart).gpu(g));
     }
 
     /// The scaling controller's one move: activate the lowest-indexed
@@ -1412,6 +1498,7 @@ impl<'a> ClusterSim<'a> {
         else {
             return false;
         };
+        fd.emit(|| SimEvent::new(t, EventKind::ScaleUp).gpu(g));
         self.fleet_join(engines, fd, g, t);
         true
     }
@@ -1449,11 +1536,20 @@ impl<'a> ClusterSim<'a> {
             engines[g].drain_completions_into(&mut done);
             for &(rid, t_done) in &done {
                 fd.counters.completed += 1;
-                if matches!(fd.state[g], GpuState::Draining { .. }) {
+                let drained_now = matches!(fd.state[g], GpuState::Draining { .. });
+                if drained_now {
                     // A natural completion on a draining GPU beat the
                     // deadline.
                     fd.counters.drained += 1;
                 }
+                fd.emit(|| {
+                    let ev = SimEvent::new(t_done, EventKind::Complete).rid(rid).gpu(g);
+                    if drained_now {
+                        ev.cause("drain")
+                    } else {
+                        ev
+                    }
+                });
                 fd.completed_blocks += fd.meta[rid].expected_blocks;
                 fd.t_last_done = fd.t_last_done.max(t_done);
                 let client = fd.meta[rid].client;
@@ -1512,7 +1608,7 @@ impl<'a> ClusterSim<'a> {
             }
             let (_, target) = target.expect("a rescuing engine is itself steppable");
             fd.counters.migration_saved += 1;
-            self.relocate(engines, fd, m, target);
+            self.relocate(engines, fd, m, target, "rescue");
         }
         fd.migrations_buf = migs;
         // Drain controller: while any GPU is draining, every harvest
@@ -1550,9 +1646,19 @@ impl<'a> ClusterSim<'a> {
         fd: &mut FrontDoor,
         m: MigratedRequest,
         target: usize,
+        cause: &'static str,
     ) {
         fd.counters.migrated += 1;
-        fd.counters.migration_recompute_tokens += m.recompute_tokens();
+        let recompute_tokens = m.recompute_tokens();
+        fd.counters.migration_recompute_tokens += recompute_tokens;
+        let rid = m.rid;
+        let t_evict = m.t_evict;
+        fd.emit(|| {
+            SimEvent::new(t_evict, EventKind::Migrate { dst: target, recompute_tokens })
+                .rid(rid)
+                .gpu(target)
+                .cause(cause)
+        });
         engines[target].submit_migrated(m);
         // Keep the drain-phase laggard heap covering the target (an
         // idle engine may just have become busy).
@@ -1658,7 +1764,8 @@ impl<'a> ClusterSim<'a> {
         let m = engines[src_g]
             .extract_request(victim)
             .expect("the victim is outstanding on its source");
-        self.relocate(engines, fd, m, tgt_g);
+        let cause = if rescuing { "shed-rescue" } else { "rebalance" };
+        self.relocate(engines, fd, m, tgt_g, cause);
         true
     }
 
@@ -1670,6 +1777,8 @@ impl<'a> ClusterSim<'a> {
     /// quota slot absorbs the queue head (or the arrival itself).
     fn offer(&self, engines: &mut [ServeEngine<'_>], fd: &mut FrontDoor, rid: usize) {
         fd.counters.offered += 1;
+        let t_arrive = fd.meta[rid].t_arrive;
+        fd.emit(|| SimEvent::new(t_arrive, EventKind::Offer).rid(rid));
         if let MigrationPolicy::OnPressure { ratio } = self.cfg.migration {
             // Proactive, quota-respecting rebalance with hysteresis —
             // at most one move per offered arrival, so near-balanced
@@ -1738,6 +1847,8 @@ impl<'a> ClusterSim<'a> {
             if !would_shed {
                 fd.queue.push_back(rid);
                 fd.counters.queue_peak = fd.counters.queue_peak.max(fd.queue.len() as u64);
+                let depth = fd.queue.len();
+                fd.emit(|| SimEvent::new(t, EventKind::Queue { depth }).rid(rid));
                 return;
             }
             if may_migrate && self.try_migrate(engines, fd, None) {
@@ -1745,7 +1856,8 @@ impl<'a> ClusterSim<'a> {
                 self.drain_queue(engines, fd);
                 continue;
             }
-            self.shed(fd, rid);
+            let cause = if self.slo_would_shed(fd, rid) { "slo" } else { "queue-full" };
+            self.shed(fd, rid, cause);
             return;
         }
     }
@@ -1754,10 +1866,12 @@ impl<'a> ClusterSim<'a> {
     /// thinking and issues its next request after a fresh think gap
     /// (the user walks away and comes back with new work), so the
     /// request budget is always fully offered and the run terminates.
-    fn shed(&self, fd: &mut FrontDoor, rid: usize) {
+    fn shed(&self, fd: &mut FrontDoor, rid: usize, cause: &'static str) {
         fd.meta[rid].disposition = ReqDisposition::Shed;
         fd.counters.shed += 1;
         fd.shed_rids.push(rid);
+        let t_arrive = fd.meta[rid].t_arrive;
+        fd.emit(|| SimEvent::new(t_arrive, EventKind::Shed).rid(rid).cause(cause));
         let client = fd.meta[rid].client;
         if client != usize::MAX {
             let t = fd.meta[rid].t_arrive;
@@ -1953,6 +2067,12 @@ impl<'a> ClusterSim<'a> {
         }
         fd.meta[rid].disposition = ReqDisposition::Placed;
         fd.counters.placed += 1;
+        let t_place = engines[g].clock();
+        let live = engines[g].live_traces();
+        let used = engines[g].pool_blocks().saturating_sub(engines[g].free_blocks());
+        fd.emit(|| {
+            SimEvent::new(t_place, EventKind::Place).rid(rid).gpu(g).load(live, used)
+        });
         let out = engines[g].outstanding();
         debug_assert!(out <= quota, "placement must respect the per-GPU quota");
         fd.per_gpu_peak_outstanding[g] = fd.per_gpu_peak_outstanding[g].max(out);
@@ -2122,6 +2242,63 @@ mod tests {
                 assert_eq!(x.chosen, y.chosen);
             }
         }
+    }
+
+    /// The tentpole's determinism contract: attaching recorders must
+    /// not change one metric byte (across `step_threads` values), the
+    /// merged stream passes every lifecycle/conservation check, and
+    /// [`crate::obs::replay::replay_counters`] re-derives the cluster
+    /// counters byte-for-byte from events alone.
+    #[test]
+    fn event_log_is_invisible_and_replays_counters() {
+        let mut cfg = pressured_cfg(Method::Step, 3);
+        cfg.standby = 1;
+        cfg.scale_up_queue_depth = 2;
+        cfg.migration = MigrationPolicy::OnShed;
+        cfg.admission.max_outstanding_per_gpu = 2;
+        cfg.admission.queue_cap = 2;
+        cfg.fleet_events = vec![
+            FleetEvent {
+                t_s: 40.0,
+                gpu: 1,
+                action: FleetAction::Revoke { deadline_s: 5.0 },
+            },
+            FleetEvent { t_s: 120.0, gpu: 1, action: FleetAction::Join },
+        ];
+        let untraced = run(&cfg);
+        assert!(untraced.events.is_empty() && untraced.events_dropped == 0);
+        let mut traced_cfg = cfg.clone();
+        traced_cfg.event_log = Some(0);
+        for step_threads in [1, 2] {
+            let mut c = traced_cfg.clone();
+            c.step_threads = step_threads;
+            let traced = run(&c);
+            assert_eq!(untraced.makespan_s, traced.makespan_s);
+            assert_eq!(untraced.counters.report(), traced.counters.report());
+            assert_eq!(untraced.outcomes.len(), traced.outcomes.len());
+            for (x, y) in untraced.outcomes.iter().zip(&traced.outcomes) {
+                assert_eq!(x.rid, y.rid);
+                assert_eq!(x.latency_s, y.latency_s);
+                assert_eq!(x.chosen, y.chosen);
+            }
+            assert!(!traced.events.is_empty());
+            assert_eq!(traced.events_dropped, 0, "unbounded lanes never drop");
+            let report = crate::obs::replay::check(&traced.events);
+            assert!(report.ok(), "trace violations: {:?}", report.violations);
+            assert_eq!(
+                report.counters.report(),
+                traced.counters.report(),
+                "counters re-derived from events alone match byte-for-byte"
+            );
+        }
+        // The flight-recorder variant keeps each lane's tail and counts
+        // what it drops.
+        let mut ring = traced_cfg.clone();
+        ring.event_log = Some(8);
+        let r = run(&ring);
+        assert!(r.events.len() <= 8 * (ring.total_gpus() + 1));
+        assert!(r.events_dropped > 0, "the tiny ring must drop under this load");
+        assert_eq!(untraced.counters.report(), r.counters.report());
     }
 
     #[test]

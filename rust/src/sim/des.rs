@@ -20,6 +20,7 @@ use crate::coordinator::scorer::StepScorer;
 use crate::coordinator::trace::{TraceState, TraceStatus};
 use crate::coordinator::voting::{weighted_vote, Vote};
 use crate::kvcache::KvCacheManager;
+use crate::obs::{EventKind, Recorder, SimEvent};
 use crate::sim::gpu::GpuSpec;
 use crate::sim::sched::{self, WaitQueue};
 use crate::sim::profiles::{BenchId, ModelId, ModelProfile};
@@ -199,12 +200,30 @@ pub struct Scratch {
     /// Hidden state / MLP activation buffers for the scorer.
     h: Vec<f32>,
     z: Vec<f32>,
+    /// Attached event recorder (`None` — the default — is the zero-cost
+    /// disabled path: one branch per emission site, no event
+    /// construction). Recorders observe; they never influence
+    /// scheduling, and results are bit-identical with one attached.
+    pub rec: Option<Box<dyn Recorder>>,
+    /// External request id stamped on emitted events (the qid of the
+    /// question currently running).
+    rid: usize,
 }
 
 impl Scratch {
     /// Empty scratch; buffers warm up on first use.
     pub fn new() -> Scratch {
         Scratch::default()
+    }
+
+    /// Emit one event if a recorder is attached. The builder receives
+    /// the current question's external rid; it runs only on the enabled
+    /// path.
+    #[inline]
+    fn emit(&mut self, build: impl FnOnce(usize) -> SimEvent) {
+        if let Some(rec) = self.rec.as_mut() {
+            rec.record(build(self.rid));
+        }
     }
 }
 
@@ -246,6 +265,7 @@ impl<'a> DesEngine<'a> {
     /// scratch, so batch drivers reuse the hot-path buffers across
     /// questions. Results are identical either way.
     pub fn run_question_with(&self, qid: usize, scratch: &mut Scratch) -> QuestionResult {
+        scratch.rid = qid;
         let q = self.gen.question(qid);
         let n = if self.cfg.method == Method::Cot { 1 } else { self.cfg.n_traces };
         let mut rng = Rng::new(self.cfg.seed ^ (qid as u64).wrapping_mul(0x2545F4914F6CDD1D));
@@ -389,6 +409,10 @@ impl<'a> DesEngine<'a> {
         for &i in phase {
             scratch.last_settle[i] = *clock;
         }
+        let t_admit = *clock;
+        scratch.emit(|rid| {
+            SimEvent::new(t_admit, EventKind::Admit { traces: admitted }).rid(rid)
+        });
         let mut boundaries_crossed: usize = 0;
         let mut next_slim_check: usize = params.slim_check_interval_steps * phase.len().max(1);
 
@@ -409,6 +433,13 @@ impl<'a> DesEngine<'a> {
                     sched::settle(&mut t.st, &mut scratch.last_settle[head], *clock);
                     t.st.status = TraceStatus::Pruned;
                     t.st.finish_clock = *clock;
+                    let t_now = *clock;
+                    scratch.emit(|rid| {
+                        SimEvent::new(t_now, EventKind::Prune)
+                            .rid(rid)
+                            .trace(head)
+                            .cause("stall-drop")
+                    });
                 }
                 continue;
             }
@@ -471,6 +502,12 @@ impl<'a> DesEngine<'a> {
                     if self.cfg.record_dynamics {
                         t.dynamics.push((t.st.generated, t.st.mean_score(params.default_score)));
                     }
+                    let t_now = *clock;
+                    scratch.emit(|rid| {
+                        SimEvent::new(t_now, EventKind::StepScore { score: s })
+                            .rid(rid)
+                            .trace(iu)
+                    });
                 }
                 let mut completed_group = None;
                 if self.needs_conf() {
@@ -536,6 +573,11 @@ impl<'a> DesEngine<'a> {
         _rng: &mut Rng,
         scratch: &mut Scratch,
     ) {
+        let free_now = kv.free_blocks();
+        let t_now = *clock;
+        scratch.emit(|rid| {
+            SimEvent::new(t_now, EventKind::MemoryEvent { free_blocks: free_now }).rid(rid)
+        });
         let running: &[u32] = &scratch.running;
         match self.cfg.method {
             Method::Step => {
@@ -572,6 +614,12 @@ impl<'a> DesEngine<'a> {
                 t.st.finish_clock = *clock;
                 kv.free_seq(t.st.id);
                 scratch.index.remove(victim);
+                scratch.emit(|rid| {
+                    SimEvent::new(t_now, EventKind::Prune)
+                        .rid(rid)
+                        .trace(victim as usize)
+                        .cause("memory")
+                });
             }
             _ => {
                 // vLLM preemption: evict the youngest running trace
@@ -587,6 +635,12 @@ impl<'a> DesEngine<'a> {
                 kv.free_seq(t.st.id);
                 scratch.index.remove(victim);
                 wait_q.push_back(victim as usize);
+                scratch.emit(|rid| {
+                    SimEvent::new(t_now, EventKind::Preempt)
+                        .rid(rid)
+                        .trace(victim as usize)
+                        .cause("memory")
+                });
             }
         }
     }
@@ -681,6 +735,8 @@ impl<'a> DesEngine<'a> {
             prefix as u64,
             scratch.next_end[idx] - t.st.generated,
         );
+        let t_now = *clock;
+        scratch.emit(|rid| SimEvent::new(t_now, EventKind::Resume).rid(rid).trace(idx));
     }
 
     /// Slim-SC similarity check (thought level): pair up the active
@@ -726,6 +782,13 @@ impl<'a> DesEngine<'a> {
                 kv.free_seq(t.st.id);
                 scratch.index.remove(victim as u32);
                 pruned_any = true;
+                let t_now = *clock;
+                scratch.emit(|rid| {
+                    SimEvent::new(t_now, EventKind::Prune)
+                        .rid(rid)
+                        .trace(victim)
+                        .cause("slim-sc")
+                });
             }
         }
         pruned_any
@@ -972,6 +1035,39 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// Determinism contract: an attached recorder observes the run
+    /// without changing a single result bit, and under pressure the
+    /// stream carries the memory / prune / step-score kinds.
+    #[test]
+    fn recorder_is_invisible_to_results_and_sees_pressure() {
+        let mut cfg = engine_cfg(Method::Step);
+        cfg.mem_util = 0.5;
+        cfg.n_traces = 32;
+        cfg.model = ModelId::Phi4_14B;
+        cfg.bench = BenchId::Hmmt2425;
+        let gen = TraceGen::new(cfg.model, cfg.bench, GenParams::default_d64(), 5);
+        let scorer = dummy_scorer();
+        let engine = DesEngine::new(&cfg, &gen, &scorer);
+        let untraced = engine.run_question(1);
+        let mut scratch = Scratch::new();
+        scratch.rec = Some(Box::new(crate::obs::EventBuf::unbounded()));
+        let traced = engine.run_question_with(1, &mut scratch);
+        assert_eq!(untraced.latency_s, traced.latency_s);
+        assert_eq!(untraced.gen_tokens, traced.gen_tokens);
+        assert_eq!(untraced.chosen, traced.chosen);
+        assert_eq!(untraced.n_pruned, traced.n_pruned);
+        let mut rec = scratch.rec.take().unwrap();
+        let events = rec.drain();
+        assert!(events
+            .iter()
+            .any(|e| matches!(e.kind, EventKind::MemoryEvent { .. })));
+        assert!(events.iter().any(|e| matches!(e.kind, EventKind::Prune)));
+        assert!(events
+            .iter()
+            .any(|e| matches!(e.kind, EventKind::StepScore { .. })));
+        assert!(events.iter().all(|e| e.rid == Some(1)), "rid stamps the qid");
     }
 
     /// Reusing one Scratch across questions must not change any result.

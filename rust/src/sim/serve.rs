@@ -59,6 +59,7 @@ use crate::coordinator::trace::{TraceState, TraceStatus};
 use crate::coordinator::voting::{weighted_vote, Vote};
 use crate::kvcache::{OwnerId, SharedKvPool};
 use crate::metrics::EngineCounters;
+use crate::obs::{EventKind, Recorder, SimEvent};
 use crate::sim::des::ScoreAgg;
 use crate::sim::gpu::GpuSpec;
 use crate::sim::profiles::{BenchId, ModelId, ModelProfile};
@@ -378,6 +379,11 @@ pub struct ServeEngine<'a> {
     running: Vec<u32>,
     h: Vec<f32>,
     z: Vec<f32>,
+    /// Attached event recorder (`None` — the default — is the zero-cost
+    /// disabled path: one branch per emission site, no event
+    /// construction). Recorders observe; they never influence
+    /// scheduling.
+    rec: Option<Box<dyn Recorder>>,
 }
 
 impl<'a> ServeSim<'a> {
@@ -513,6 +519,31 @@ impl<'a> ServeEngine<'a> {
             running: Vec::new(),
             h,
             z,
+            rec: None,
+        }
+    }
+
+    /// Attach an event recorder; emission sites start constructing
+    /// [`SimEvent`]s into it. Replaces any previous recorder.
+    pub fn set_recorder(&mut self, rec: Box<dyn Recorder>) {
+        self.rec = Some(rec);
+    }
+
+    /// Detach and return the recorder (drivers drain it before
+    /// [`finish`](Self::finish) consumes the engine).
+    pub fn take_recorder(&mut self) -> Option<Box<dyn Recorder>> {
+        self.rec.take()
+    }
+
+    /// Record one event if a recorder is attached. The builder closure
+    /// receives the engine's load stamp (live sequences, KV blocks in
+    /// use) and runs only on the enabled path.
+    #[inline]
+    fn emit<F: FnOnce(usize, usize) -> SimEvent>(&mut self, build: F) {
+        if let Some(rec) = self.rec.as_mut() {
+            let live = self.pool.num_seqs();
+            let kv = self.pool.used_blocks();
+            rec.record(build(live, kv));
         }
     }
 
@@ -934,6 +965,12 @@ impl<'a> ServeEngine<'a> {
         self.live_locals.push(local);
         self.reqs.push(rq);
         self.version += 1;
+        let rid = arr.rid;
+        self.emit(|live, kv| {
+            SimEvent::new(clock, EventKind::Admit { traces: n_per })
+                .rid(rid)
+                .load(live, kv)
+        });
     }
 
     /// Advance until the clock reaches `t_limit` or the engine runs out
@@ -1056,6 +1093,15 @@ impl<'a> ServeEngine<'a> {
                     let new = self.sim.agg_score(&self.traces[i].st);
                     self.scores_replace(old, new);
                 }
+                if self.rec.is_some() {
+                    let ext = self.reqs[rid].st.rid;
+                    self.emit(|live, kv| {
+                        SimEvent::new(clock, EventKind::StepScore { score: s })
+                            .rid(ext)
+                            .trace(i)
+                            .load(live, kv)
+                    });
+                }
             }
             if self.traces[i].st.generated == self.traces[i].spec.total_tokens {
                 self.index_remove(i);
@@ -1134,6 +1180,12 @@ impl<'a> ServeEngine<'a> {
     /// first-binding-owner the retired sorted-pair scan produced).
     fn memory_event(&mut self, running: &[u32]) {
         debug_assert!(!running.is_empty());
+        let free_now = self.pool.free_blocks();
+        let t_now = self.clock;
+        self.emit(|live, kv| {
+            SimEvent::new(t_now, EventKind::MemoryEvent { free_blocks: free_now })
+                .load(live, kv)
+        });
         let pool_bound = self.index.pool_demand(1) > self.pool.free_blocks() as u64;
         let binding: Option<OwnerId> = if pool_bound || self.pool.quota_blocks().is_none() {
             None
@@ -1187,6 +1239,14 @@ impl<'a> ServeEngine<'a> {
                 self.pool.free_seq(victim as u64);
                 self.counters.pruned += 1;
                 request_done(&mut self.reqs[rid], clock, &mut self.completions);
+                let ext = self.reqs[rid].st.rid;
+                self.emit(|live, kv| {
+                    SimEvent::new(clock, EventKind::Prune)
+                        .rid(ext)
+                        .trace(victim)
+                        .cause("memory")
+                        .load(live, kv)
+                });
             }
             _ => {
                 // vLLM preemption: evict the youngest running trace in
@@ -1205,6 +1265,14 @@ impl<'a> ServeEngine<'a> {
                 self.pool.free_seq(victim as u64);
                 self.counters.preemptions += 1;
                 self.wait_q.push_back(victim);
+                let ext = self.reqs[self.traces[victim].rid].st.rid;
+                self.emit(|live, kv| {
+                    SimEvent::new(clock, EventKind::Preempt)
+                        .rid(ext)
+                        .trace(victim)
+                        .cause("memory")
+                        .load(live, kv)
+                });
             }
         }
     }
@@ -1242,6 +1310,14 @@ impl<'a> ServeEngine<'a> {
                 self.counters.pruned += 1;
                 request_done(&mut self.reqs[rid], clock, &mut self.completions);
                 pruned_any = true;
+                let ext = self.reqs[rid].st.rid;
+                self.emit(|live, kv| {
+                    SimEvent::new(clock, EventKind::Prune)
+                        .rid(ext)
+                        .trace(victim)
+                        .cause("slim-sc")
+                        .load(live, kv)
+                });
             }
         }
         pruned_any
@@ -1266,6 +1342,14 @@ impl<'a> ServeEngine<'a> {
         let rid = t.rid;
         self.counters.pruned += 1;
         request_done(&mut self.reqs[rid], clock, &mut self.completions);
+        let ext = self.reqs[rid].st.rid;
+        self.emit(|live, kv| {
+            SimEvent::new(clock, EventKind::Prune)
+                .rid(ext)
+                .trace(head)
+                .cause("stall-drop")
+                .load(live, kv)
+        });
     }
 
     /// Resume the wait-queue head if its whole prefix fits — vLLM's FCFS
@@ -1301,6 +1385,10 @@ impl<'a> ServeEngine<'a> {
         sched::settle(&mut t.st, &mut t.last_settle, clock);
         t.st.status = TraceStatus::Running;
         self.index_insert(tid, prefix);
+        let ext = self.reqs[rid].st.rid;
+        self.emit(|live, kv| {
+            SimEvent::new(clock, EventKind::Resume).rid(ext).trace(tid).load(live, kv)
+        });
     }
 
     /// Final aggregation: voting + per-request SLO metrics, in

@@ -14,6 +14,11 @@
 //!
 //! Schedules are deterministic in the seed, so every run of this suite
 //! exercises the same chaos byte-for-byte.
+//!
+//! Every chaos run keeps a bounded flight-recorder ring
+//! (`ClusterConfig::event_log`); when a property panics, a drop guard
+//! dumps the last recorded events so the failing schedule's end-state
+//! is in the test output, not just the assertion message.
 
 use step::coordinator::method::Method;
 use step::harness::cells::projection_scorer;
@@ -47,6 +52,10 @@ fn chaos_cfg(
     c.scale_up_queue_depth = 2;
     c.migration = migration;
     c.fleet_events = schedule;
+    // Bounded flight-recorder ring per lane: cheap enough to leave on
+    // for every chaos run (the determinism contract says it cannot
+    // change the results), deep enough to explain a failure.
+    c.event_log = Some(256);
     c
 }
 
@@ -55,6 +64,27 @@ fn run(cfg: &ClusterConfig) -> ClusterResult {
     let scorer = projection_scorer(&gp);
     let gen = TraceGen::new(cfg.model, cfg.bench, gp, cfg.seed ^ 0x5EED);
     ClusterSim::new(cfg, &gen, &scorer).run()
+}
+
+/// Drop guard over a run's flight-recorder ring: dumps the tail of the
+/// recorded events iff the test body panics past it.
+struct FlightRecorder {
+    label: String,
+    events: Vec<step::obs::SimEvent>,
+}
+
+impl FlightRecorder {
+    fn arm(label: &str, r: &ClusterResult) -> FlightRecorder {
+        FlightRecorder { label: label.to_string(), events: r.events.clone() }
+    }
+}
+
+impl Drop for FlightRecorder {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            eprintln!("{}", step::obs::dump_tail(&self.label, &self.events, 64));
+        }
+    }
 }
 
 /// The shared chaos driver is a pure function of its seed, time-sorted,
@@ -94,6 +124,7 @@ fn no_request_lost_or_duplicated_under_any_revocation_schedule() {
         for policy in [MigrationPolicy::Never, MigrationPolicy::OnShed] {
             let r = run(&chaos_cfg(seed, schedule.clone(), policy));
             let label = format!("seed {seed} policy {}", policy.name());
+            let _flight = FlightRecorder::arm(&label, &r);
             assert_eq!(r.counters.offered, 10, "{label}");
             assert_eq!(
                 r.counters.offered,
@@ -135,6 +166,7 @@ fn revoked_gpus_hold_zero_residents_after_their_deadline() {
             .filter(|e| matches!(e.action, FleetAction::Revoke { .. }))
             .count() as u64;
         let r = run(&chaos_cfg(seed, schedule.clone(), MigrationPolicy::OnShed));
+        let _flight = FlightRecorder::arm(&format!("seed {seed} clean-departure"), &r);
         assert!(
             r.counters.revocations <= scheduled_revokes,
             "seed {seed}: only scheduled revocations can fire"
@@ -191,6 +223,8 @@ fn explicit_revocations_drain_and_beat_shedding_everything() {
         .expect("valid explicit spec");
     let never = run(&chaos_cfg(3, schedule.clone(), MigrationPolicy::Never));
     let drained = run(&chaos_cfg(3, schedule, MigrationPolicy::OnShed));
+    let _flight_n = FlightRecorder::arm("explicit-revocations never", &never);
+    let _flight_d = FlightRecorder::arm("explicit-revocations on-shed", &drained);
     for (r, label) in [(&never, "never"), (&drained, "on-shed")] {
         assert_eq!(r.counters.revocations, 2, "{label}");
         assert_eq!(
@@ -214,6 +248,24 @@ fn explicit_revocations_drain_and_beat_shedding_everything() {
         drained.counters.report(),
         never.counters.report()
     );
+}
+
+/// The flight recorder actually records: under a revoking schedule the
+/// bounded ring is non-empty, stays within its per-lane budget, and
+/// carries the fleet-transition kinds a post-mortem needs.
+#[test]
+fn flight_recorder_ring_is_bounded_and_sees_the_chaos() {
+    let schedule = step::sim::cluster::parse_fleet_events("25:0:revoke:15;40:1:revoke:15", 3, 2)
+        .expect("valid explicit spec");
+    let r = run(&chaos_cfg(3, schedule, MigrationPolicy::OnShed));
+    assert!(!r.events.is_empty(), "the ring recorded nothing");
+    // 256 events per lane: the front door plus every engine slot.
+    let lanes = 3 + 2 + 1;
+    assert!(r.events.len() <= 256 * lanes, "{} events exceed the ring budget", r.events.len());
+    let kinds: Vec<&str> = r.events.iter().map(|e| e.kind.name()).collect();
+    for k in ["revoke", "drain", "complete"] {
+        assert!(kinds.contains(&k), "ring is missing '{k}' events");
+    }
 }
 
 /// An empty `--fleet-events` schedule produces byte-identical

@@ -1,0 +1,189 @@
+//! Observability contract tests over real cluster runs:
+//!
+//! * **determinism differential** — a traced run's metric block is
+//!   byte-identical to the untraced run, for every `--step-threads`
+//!   value, and the merged event stream itself is canonical (identical
+//!   bytes for any engine-stepping thread count);
+//! * **replay property** — `ClusterCounters` re-derived from the event
+//!   stream alone reproduces the run's counters byte-for-byte
+//!   (`report()` string equality), across seeds, migration policies,
+//!   and fleet schedules;
+//! * **JSONL round-trip** — `--trace-out` output parses back into the
+//!   exact event stream, and kind filtering keeps only what it names;
+//! * **Perfetto shape** — the `--perfetto-out` document is valid JSON
+//!   with monotone timestamps, balanced `B`/`E` span pairs, and the
+//!   queue-depth / KV-occupancy / live-traces counter tracks.
+
+use std::collections::{HashMap, HashSet};
+
+use step::coordinator::method::Method;
+use step::harness::cells::projection_scorer;
+use step::harness::table6::ClusterCell;
+use step::obs::{parse_jsonl, perfetto, replay, to_jsonl};
+use step::sim::cluster::{
+    parse_fleet_events, ClusterConfig, ClusterResult, ClusterSim, ClusterWorkload,
+    MigrationPolicy,
+};
+use step::sim::profiles::{BenchId, ModelId};
+use step::sim::tracegen::{GenParams, TraceGen};
+use step::sim::workload::ClosedLoopSpec;
+use step::util::json::Json;
+
+/// A pressured 3-GPU cluster (skewed closed loop, tight pool) so the
+/// stream carries prunes, preemptions, queueing, and — under a
+/// revoking schedule — drains and migration hops.
+fn cfg(seed: u64, migration: MigrationPolicy, fleet: &str) -> ClusterConfig {
+    let mut c = ClusterConfig::new(
+        3,
+        ModelId::Phi4_14B,
+        BenchId::Hmmt2425,
+        Method::Step,
+        8,
+        ClusterWorkload::Closed(ClosedLoopSpec::skewed(8, 30.0, 16, 0.5)),
+    );
+    c.seed = seed;
+    c.mem_util = 0.5;
+    c.migration = migration;
+    c.standby = 1;
+    c.scale_up_queue_depth = 2;
+    c.fleet_events = parse_fleet_events(fleet, 3, 1).expect("valid fleet spec");
+    c
+}
+
+fn run(cfg: &ClusterConfig) -> ClusterResult {
+    let gp = GenParams::default_d64();
+    let scorer = projection_scorer(&gp);
+    let gen = TraceGen::new(cfg.model, cfg.bench, gp, cfg.seed ^ 0x5EED);
+    ClusterSim::new(cfg, &gen, &scorer).run()
+}
+
+/// Recorders never influence scheduling: with the event log on, the
+/// metric block stays byte-identical to the untraced run for every
+/// engine-stepping thread count, and the merged stream itself is one
+/// canonical byte sequence.
+#[test]
+fn traced_run_is_byte_identical_across_step_threads() {
+    let fleet = "40:1:revoke:8;120:1:join";
+    let base = run(&cfg(11, MigrationPolicy::OnShed, fleet));
+    assert!(base.events.is_empty(), "untraced runs must record nothing");
+    let base_row = ClusterCell::from_result("step", &base).to_json().to_string_pretty();
+    let mut canonical_stream: Option<String> = None;
+    for step_threads in [1usize, 2] {
+        let mut c = cfg(11, MigrationPolicy::OnShed, fleet);
+        c.event_log = Some(0);
+        c.step_threads = step_threads;
+        let r = run(&c);
+        assert_eq!(
+            ClusterCell::from_result("step", &r).to_json().to_string_pretty(),
+            base_row,
+            "step_threads={step_threads}: tracing changed the metric block"
+        );
+        assert!(!r.events.is_empty(), "step_threads={step_threads}");
+        assert_eq!(r.events_dropped, 0, "the unbounded log never drops");
+        let stream = to_jsonl(&r.events, &[]);
+        match &canonical_stream {
+            None => canonical_stream = Some(stream),
+            Some(first) => assert_eq!(
+                &stream, first,
+                "step_threads={step_threads}: merged stream is not canonical"
+            ),
+        }
+    }
+}
+
+/// The event stream is a faithful ledger: counters re-derived from
+/// events alone reproduce the run's counters byte-for-byte, and the
+/// per-request lifecycle/conservation laws hold — across seeds and
+/// migration policies under a revoking schedule.
+#[test]
+fn replayed_counters_match_the_run_byte_for_byte() {
+    for seed in [1u64, 5, 9] {
+        for policy in [MigrationPolicy::Never, MigrationPolicy::OnShed] {
+            let mut c = cfg(seed, policy, "30:0:revoke:10");
+            c.event_log = Some(0);
+            let r = run(&c);
+            let label = format!("seed {seed} policy {}", policy.name());
+            let report = replay::check(&r.events);
+            assert!(report.ok(), "{label}: {:?}", report.violations);
+            assert_eq!(
+                report.counters.report(),
+                r.counters.report(),
+                "{label}: events do not replay the counters"
+            );
+        }
+    }
+}
+
+/// `--trace-out` output round-trips: serialize, parse, same events;
+/// a kind filter keeps exactly what it names.
+#[test]
+fn jsonl_round_trips_a_real_run_and_filters() {
+    let mut c = cfg(2, MigrationPolicy::OnShed, "");
+    c.event_log = Some(0);
+    let r = run(&c);
+    let text = to_jsonl(&r.events, &[]);
+    assert_eq!(parse_jsonl(&text).expect("valid JSONL"), r.events);
+    let filter = vec!["place".to_string(), "complete".to_string()];
+    let filtered = parse_jsonl(&to_jsonl(&r.events, &filter)).expect("valid filtered JSONL");
+    assert!(!filtered.is_empty(), "a real run places and completes requests");
+    assert!(
+        filtered.iter().all(|e| matches!(e.kind.name(), "place" | "complete")),
+        "filter leaked other kinds"
+    );
+}
+
+/// The Perfetto export of a real fixed-seed run: valid JSON, monotone
+/// `ts`, every `B` span balanced by an `E` on the same track, and the
+/// counter tracks the viewer renders are present.
+#[test]
+fn perfetto_export_has_a_valid_shape() {
+    let mut c = cfg(3, MigrationPolicy::OnShed, "40:0:revoke:10");
+    c.event_log = Some(0);
+    let r = run(&c);
+    let doc = perfetto::chrome_trace(&r.events);
+    let back = Json::parse(&doc.to_string_compact()).expect("exporter emits valid JSON");
+    let tes = back.get("traceEvents").as_arr().expect("traceEvents array");
+    assert!(!tes.is_empty());
+    let mut open: HashMap<(usize, String), i64> = HashMap::new();
+    let mut counters: HashSet<String> = HashSet::new();
+    let mut last = f64::NEG_INFINITY;
+    for te in tes {
+        let ph = te.get("ph").as_str().expect("ph");
+        if ph == "M" {
+            continue;
+        }
+        let ts = te.get("ts").as_f64().expect("ts");
+        assert!(ts >= last, "ts runs backwards: {ts} < {last}");
+        last = ts;
+        let tid = te.get("tid").as_usize().expect("tid");
+        let name = te.get("name").as_str().expect("name").to_string();
+        match ph {
+            "B" => *open.entry((tid, name)).or_insert(0) += 1,
+            "E" => {
+                let depth = open.get_mut(&(tid, name.clone())).unwrap_or_else(|| {
+                    panic!("E without a B: tid {tid} name {name}")
+                });
+                *depth -= 1;
+                assert!(*depth >= 0, "over-closed span: tid {tid} name {name}");
+            }
+            "C" => {
+                counters.insert(name);
+            }
+            "i" => {}
+            other => panic!("unexpected ph '{other}'"),
+        }
+    }
+    assert!(
+        open.values().all(|&d| d == 0),
+        "unbalanced spans remain open: {open:?}"
+    );
+    assert!(counters.contains("queue_depth"), "missing queue_depth counter track");
+    assert!(
+        counters.iter().any(|n| n.starts_with("kv[g")),
+        "missing KV-occupancy counter tracks: {counters:?}"
+    );
+    assert!(
+        counters.iter().any(|n| n.starts_with("live[g")),
+        "missing live-traces counter tracks: {counters:?}"
+    );
+}
