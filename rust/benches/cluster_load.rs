@@ -22,6 +22,15 @@
 //! byte-for-byte at small R (one shard). Writes
 //! `results/BENCH_cluster.json` (to `$STEP_RESULTS_DIR` when set).
 //!
+//! A prefix-cache row reruns the skewed closed loop through the
+//! affinity sweep (cache off, then on at every credit weight),
+//! asserting the registry shares prompts (hit rate > 0), prunes
+//! strictly less than the no-cache baseline at no accuracy cost, keeps
+//! the p99 tail at or under the baseline, and that cache-off stays
+//! byte-identical to the default cluster — recording
+//! `prefix_hit_rate` / `prefix_saved_blocks` / `prefix_p99_ratio` /
+//! `prefix_off_identical` for the bench gate.
+//!
 //! Runs self-contained on the built-in generator defaults (no artifacts
 //! needed), so CI and fresh checkouts can benchmark the cluster layer.
 
@@ -30,8 +39,9 @@ use std::time::Instant;
 use step::coordinator::method::Method;
 use step::harness::cells::projection_scorer;
 use step::harness::table6::{
-    attach_migration_grid, cells_fingerprint, config_json, elasticity_schedule, metrics_json,
-    run_cell, run_grids, run_migration_grid, run_traced_cell, ClusterOpts,
+    attach_affinity_grid, attach_migration_grid, cells_fingerprint, config_json,
+    elasticity_schedule, metrics_json, run_affinity_grid, run_cell, run_grids,
+    run_migration_grid, run_traced_cell, AffinityCell, ClusterOpts,
 };
 use step::harness::write_results;
 use step::sim::cluster::{GpuProfile, MigrationPolicy};
@@ -399,8 +409,106 @@ fn main() {
         trace_events.len()
     );
 
+    // ---- prefix-cache row: the same skewed closed loop rerun through
+    // the affinity sweep — cache off first, then on at every credit
+    // weight. The gates this section feeds: the registry must actually
+    // share prompts (hit rate > 0), sharing must relieve KV pressure
+    // (strictly fewer prunes than the no-cache baseline at no accuracy
+    // cost), the cache-plus-affinity tail must not exceed the no-cache
+    // tail (prefix_p99_ratio <= 1), and the cache-off configuration —
+    // whatever the affinity weight says — must stay byte-identical to
+    // the default cluster.
+    let t6 = Instant::now();
+    let affinity = run_affinity_grid(&opts, &gp, &scorer);
+    let affinity_s = t6.elapsed().as_secs_f64();
+    println!("affinity sweep: {affinity_s:.2}s");
+    for c in &affinity {
+        println!(
+            "  {:>10}: hit={:.1}%  saved_blocks={}  evicted={}  p99={:.1}s  pruned={} \
+             acc={:.1}%  shed={:.1}%",
+            c.label,
+            100.0 * c.prefix_hit_rate,
+            c.prefix_saved_blocks,
+            c.prefix_evictions,
+            c.p99_s,
+            c.pruned,
+            c.acc,
+            100.0 * c.shed_rate,
+        );
+    }
+    // Byte-identity of the prefix-enabled sweep across engine-stepping
+    // parallelism (the determinism contract extends to the registry).
+    let aff_fp = |cells: &[AffinityCell]| -> String {
+        cells
+            .iter()
+            .map(|c| c.to_json().to_string_pretty())
+            .collect::<Vec<_>>()
+            .join("\n")
+    };
+    let aff_step_opts = ClusterOpts { step_threads: threads, ..opts.clone() };
+    let affinity_stepped = run_affinity_grid(&aff_step_opts, &gp, &scorer);
+    assert_eq!(
+        aff_fp(&affinity),
+        aff_fp(&affinity_stepped),
+        "affinity sweep must be byte-identical across step_threads"
+    );
+    let base = &affinity[0];
+    assert!(!base.prefix_cache && base.prefix_hit_rate == 0.0, "baseline runs cache-off");
+    let w_on = affinity
+        .iter()
+        .find(|c| c.prefix_cache && c.affinity_weight == 0.5)
+        .expect("the sweep carries the w0.5 row");
+    assert!(
+        w_on.prefix_hit_rate > 0.0,
+        "the skewed closed loop must share prompts (hit rate 0)"
+    );
+    assert!(w_on.prefix_saved_blocks > 0, "shared admissions must save blocks");
+    assert!(
+        base.pruned > 0,
+        "the no-cache baseline must prune under this load (else the claim is vacuous)"
+    );
+    assert!(
+        w_on.pruned < base.pruned,
+        "shared prompts must relieve pruning pressure ({} vs {})",
+        w_on.pruned,
+        base.pruned
+    );
+    assert!(
+        w_on.acc >= base.acc,
+        "prefix sharing must not cost accuracy ({} vs {})",
+        w_on.acc,
+        base.acc
+    );
+    let prefix_p99_ratio = w_on.p99_s / base.p99_s.max(1e-12);
+    assert!(
+        prefix_p99_ratio <= 1.0 + 1e-9,
+        "cache-plus-affinity p99 must not exceed the no-cache tail (x{prefix_p99_ratio:.3})"
+    );
+    println!(
+        "  prefix: hit={:.1}%  saved_blocks={}  pruned {} -> {}  p99 x{prefix_p99_ratio:.2} \
+         vs no-cache",
+        100.0 * w_on.prefix_hit_rate,
+        w_on.prefix_saved_blocks,
+        base.pruned,
+        w_on.pruned,
+    );
+    // Off-path identity: prefix off with a non-zero affinity weight is
+    // byte-identical to the default STEP cell (the `prefix_off_identical`
+    // gate).
+    let off_opts = ClusterOpts { affinity_weight: 0.7, ..opts.clone() };
+    let off_cell =
+        run_cell(Method::Step, off_opts.router, Method::Step.name(), &gp, &scorer, &off_opts);
+    let prefix_off_identical = cells_fingerprint(std::slice::from_ref(&untraced_cell))
+        == cells_fingerprint(std::slice::from_ref(&off_cell));
+    assert!(
+        prefix_off_identical,
+        "prefix-cache off must stay byte-identical to the default cluster"
+    );
+    println!("  prefix: cache-off == default (byte-identical metric row)");
+
     let mut report = metrics_json(&opts, &m_serial, &r_serial);
     attach_migration_grid(&mut report, &mig_opts, &migration);
+    attach_affinity_grid(&mut report, &opts, &affinity);
     if let Json::Obj(map) = &mut report {
         map.insert("bench_serial_s".to_string(), Json::Num(serial_s));
         map.insert("bench_parallel_s".to_string(), Json::Num(parallel_s));
@@ -433,6 +541,16 @@ fn main() {
         map.insert("trace_identical".to_string(), Json::Bool(trace_identical));
         map.insert("trace_wall_ratio".to_string(), Json::Num(trace_wall_ratio));
         map.insert("trace_events".to_string(), Json::Num(trace_events.len() as f64));
+        // Prefix-cache gates: the w0.5 row's hit rate and saved blocks,
+        // its p99 relative to the no-cache baseline (bounded at <= 1),
+        // and the cache-off byte-identity witness.
+        map.insert("prefix_hit_rate".to_string(), Json::Num(w_on.prefix_hit_rate));
+        map.insert(
+            "prefix_saved_blocks".to_string(),
+            Json::Num(w_on.prefix_saved_blocks as f64),
+        );
+        map.insert("prefix_p99_ratio".to_string(), Json::Num(prefix_p99_ratio));
+        map.insert("prefix_off_identical".to_string(), Json::Bool(prefix_off_identical));
     }
     let path = write_results("BENCH_cluster", &report).expect("writing BENCH_cluster.json");
     println!("wrote {path:?}");

@@ -8,7 +8,7 @@
 use step::coordinator::method::Method;
 use step::coordinator::scorer::StepScorer;
 use step::coordinator::voting::{weighted_vote, Vote};
-use step::kvcache::KvCacheManager;
+use step::kvcache::{KvCacheManager, OwnerId, SharedKvPool};
 use step::obs::{EventBuf, EventKind, NullRecorder, Recorder, SimEvent};
 use step::sim::des::{DesEngine, Scratch, SimConfig};
 use step::sim::profiles::{BenchId, ModelId};
@@ -89,6 +89,78 @@ fn main() {
             freed += churn_mgr.free_seq(i);
         }
         freed
+    });
+
+    // ---- prefix registry lookup: the O(1) digest the router's
+    // affinity stamping reads per (request, GPU) placement vs the
+    // registry-walk reference, on a registry holding many pinned
+    // prefixes.
+    let mut reg_pool = SharedKvPool::new(65536, 16, None);
+    for q in 0..512usize {
+        let share = reg_pool
+            .allocate_seq_shared(q as OwnerId, q as u64, q, 401 + (q % 7) * 16, 0)
+            .expect("pool sized for every prefix");
+        assert!(!share.hit, "distinct questions each pin their own prefix");
+    }
+    for q in 0..512usize {
+        assert_eq!(
+            reg_pool.prefix_hit_blocks(q),
+            reg_pool.prefix_hit_blocks_scan(q),
+            "digest must equal the registry walk"
+        );
+    }
+    b.run_with_items("kvcache/prefix_lookup_scan(512)", 512.0, || {
+        let mut sum = 0usize;
+        for q in 0..512usize {
+            sum += reg_pool.prefix_hit_blocks_scan(black_box(q));
+        }
+        sum
+    });
+    b.run_with_items("kvcache/prefix_lookup_digest(512)", 512.0, || {
+        let mut sum = 0usize;
+        for q in 0..512usize {
+            sum += reg_pool.prefix_hit_blocks(black_box(q));
+        }
+        sum
+    });
+
+    // ---- CoW prompt fork: steady-state sibling churn against one hot
+    // pinned prefix (the shared-admission hot path — registry hit,
+    // fork the private tail, free it again) vs the plain full-prompt
+    // lifecycle it replaces. Seq 0 stays live so the prefix never goes
+    // cold mid-bench.
+    let mut cow_pool = SharedKvPool::new(8192, 16, None);
+    let first = cow_pool
+        .allocate_seq_shared(0, 0, 0, 1000, 0)
+        .expect("the first trace pins the prefix");
+    assert!(!first.hit, "an empty registry misses");
+    assert_eq!(
+        cow_pool.prefix_hit_blocks(0) + cow_pool.shared_blocks_needed(0, 1000, 0),
+        1000usize.div_ceil(16),
+        "pinned blocks plus the private tail must cover the full prompt"
+    );
+    let cow_free0 = cow_pool.free_blocks();
+    b.run_with_items("kvcache/cow_fork_churn(64)", 64.0, || {
+        let mut blocks = 0usize;
+        for i in 1..=64u64 {
+            let share = cow_pool
+                .allocate_seq_shared(i as OwnerId, i, 0, 1000, 0)
+                .expect("the hit path admits");
+            debug_assert!(share.hit, "sibling admissions reuse the pin");
+            blocks += share.shared_blocks;
+            blocks += cow_pool.free_seq(i);
+        }
+        blocks
+    });
+    assert_eq!(cow_pool.free_blocks(), cow_free0, "fork churn leaks no blocks");
+    let mut plain_pool = SharedKvPool::new(8192, 16, None);
+    b.run_with_items("kvcache/plain_prompt_churn(64)", 64.0, || {
+        let mut blocks = 0usize;
+        for i in 1..=64u64 {
+            assert!(plain_pool.allocate_seq(i as OwnerId, i, 1000));
+            blocks += plain_pool.free_seq(i);
+        }
+        blocks
     });
 
     // ---- voting.

@@ -32,7 +32,13 @@
 //!    * tracing (when the cluster artifact carries the observability
 //!      fields): the traced STEP cell's metric row byte-identical to
 //!      the untraced run — recorders must never influence scheduling —
-//!      and the enabled-tracing wall ratio under its cap.
+//!      and the enabled-tracing wall ratio under its cap;
+//!    * prefix cache (when the cluster artifact carries the
+//!      prefix-cache fields): the skewed closed loop must actually
+//!      share prompts (hit rate above zero), affinity-weighted
+//!      placement must not worsen the p99 tail over the cache-on
+//!      unweighted baseline, and the cache-off configuration must stay
+//!      byte-identical to the default cluster.
 //!
 //! The verdict is printed as a markdown table, appended to
 //! `$GITHUB_STEP_SUMMARY` when that file is set (the job-summary
@@ -361,6 +367,34 @@ fn evaluate(pairs: &[(Json, Json)]) -> Vec<GateRow> {
             |r, cap| r > 0.0 && r <= cap,
         ));
     }
+    // Prefix-cache gates, applied when the artifact carries the
+    // prefix-cache fields (cluster_load writes them; a table6 run
+    // without the prefix row legitimately omits them).
+    if let Some(hit) = num_at(cluster, &["prefix_hit_rate"]) {
+        rows.push(compare_row(
+            ARTIFACTS[2],
+            "prefix hit rate > 0",
+            Some(hit),
+            Some(0.0),
+            |h, zero| h > zero,
+        ));
+    }
+    if let Some(ratio) = num_at(cluster, &["prefix_p99_ratio"]) {
+        rows.push(compare_row(
+            ARTIFACTS[2],
+            "affinity-on p99 <= affinity-off",
+            Some(ratio),
+            Some(1.0),
+            |r, one| r > 0.0 && r <= one + 1e-9,
+        ));
+    }
+    if let Some(identical) = bool_at(cluster, &["prefix_off_identical"]) {
+        rows.push(flag_row(
+            ARTIFACTS[2],
+            "prefix-off == default metric bytes",
+            Some(identical),
+        ));
+    }
     rows
 }
 
@@ -520,6 +554,10 @@ mod tests {
             ("trace_identical", Json::Bool(true)),
             ("trace_wall_ratio", Json::Num(1.4)),
             ("trace_events", Json::Num(5000.0)),
+            ("prefix_hit_rate", Json::Num(0.35)),
+            ("prefix_saved_blocks", Json::Num(420.0)),
+            ("prefix_p99_ratio", Json::Num(0.95)),
+            ("prefix_off_identical", Json::Bool(true)),
         ])
     }
 
@@ -680,6 +718,47 @@ mod tests {
             rows.iter().filter(|r| !r.ok).map(|r| r.check.as_str()).collect();
         assert!(failed.iter().any(|ch| ch.contains("traced == untraced")), "{failed:?}");
         assert!(failed.iter().any(|ch| ch.contains("traced wall ratio")), "{failed:?}");
+    }
+
+    #[test]
+    fn healthy_artifacts_exercise_the_prefix_gates() {
+        let rows = evaluate(&pairs(
+            grid(3.2, true),
+            serving(100.0, 200.0),
+            cluster(50.0, 80.0, 0.4, 0.1),
+        ));
+        assert!(rows.iter().any(|r| r.check.contains("prefix hit rate") && r.ok));
+        assert!(rows.iter().any(|r| r.check.contains("affinity-on p99") && r.ok));
+        assert!(rows.iter().any(|r| r.check.contains("prefix-off ==") && r.ok));
+        // An artifact without the prefix fields skips the rows instead
+        // of failing them.
+        let mut bare = cluster(50.0, 80.0, 0.4, 0.1);
+        if let Json::Obj(map) = &mut bare {
+            map.remove("prefix_hit_rate");
+            map.remove("prefix_saved_blocks");
+            map.remove("prefix_p99_ratio");
+            map.remove("prefix_off_identical");
+        }
+        let rows = evaluate(&pairs(grid(3.2, true), serving(100.0, 200.0), bare));
+        assert!(!rows.iter().any(|r| r.check.contains("prefix")), "{rows:?}");
+    }
+
+    #[test]
+    fn prefix_gate_checks_hits_tail_and_identity() {
+        let mut c = cluster(1.0, 2.0, 0.2, 0.1);
+        if let Json::Obj(map) = &mut c {
+            // A dead registry, a worsened affinity tail, and a broken
+            // off-path identity: all three gates trip.
+            map.insert("prefix_hit_rate".to_string(), Json::Num(0.0));
+            map.insert("prefix_p99_ratio".to_string(), Json::Num(1.2));
+            map.insert("prefix_off_identical".to_string(), Json::Bool(false));
+        }
+        let rows = evaluate(&pairs(grid(2.0, true), serving(1.0, 2.0), c));
+        let failed: Vec<&str> =
+            rows.iter().filter(|r| !r.ok).map(|r| r.check.as_str()).collect();
+        assert!(failed.iter().any(|ch| ch.contains("prefix hit rate")), "{failed:?}");
+        assert!(failed.iter().any(|ch| ch.contains("affinity-on p99")), "{failed:?}");
+        assert!(failed.iter().any(|ch| ch.contains("prefix-off ==")), "{failed:?}");
     }
 
     #[test]

@@ -52,6 +52,12 @@ pub const MIGRATIONS: [MigrationPolicy; 3] = [
     MigrationPolicy::OnPressure { ratio: MigrationPolicy::DEFAULT_PRESSURE_RATIO },
 ];
 
+/// Affinity-credit weights the prefix-cache sweep compares, after the
+/// cache-off baseline row. `0.0` proves the credit is inert (placement
+/// arithmetic untouched); the rest trade placement pressure against
+/// prefix locality.
+pub const AFFINITY_WEIGHTS: [f64; 4] = [0.0, 0.25, 0.5, 1.0];
+
 /// Revocation counts the elasticity grid sweeps.
 pub const ELASTICITY_REVOCATIONS: [usize; 2] = [2, 4];
 
@@ -150,6 +156,16 @@ pub struct ClusterOpts {
     /// the cells themselves shard across `threads`. Not part of the
     /// metric JSON — it cannot change a single byte of it.
     pub step_threads: usize,
+    /// Share each question's full prompt blocks copy-on-write through
+    /// every engine's per-GPU prefix registry (`--prefix-cache`). Off
+    /// (default) is byte-identical to the registry-free cluster.
+    pub prefix_cache: bool,
+    /// Affinity credit of the kv-pressure routers
+    /// (`--affinity-weight`): the expected-footprint term of a
+    /// candidate GPU is discounted by this weight times its pinned
+    /// prefix blocks for the request's question. 0 (default) leaves
+    /// placement arithmetic untouched.
+    pub affinity_weight: f64,
 }
 
 impl Default for ClusterOpts {
@@ -183,6 +199,8 @@ impl Default for ClusterOpts {
             seed: 0,
             threads: 0,
             step_threads: 1,
+            prefix_cache: false,
+            affinity_weight: 0.0,
         }
     }
 }
@@ -248,6 +266,8 @@ impl ClusterOpts {
         c.standby = self.standby;
         c.scale_up_queue_depth = self.scale_up_queue_depth;
         c.step_threads = self.step_threads;
+        c.prefix_cache = self.prefix_cache;
+        c.affinity_weight = self.affinity_weight;
         c
     }
 
@@ -514,6 +534,117 @@ pub fn run_migration_grid(
     }
 }
 
+/// One row of the affinity-weight sweep: the prefix-cache/placement
+/// metrics the other grids don't carry. The first row is the cache-off
+/// baseline the hit-rate and prune claims are measured against.
+#[derive(Debug, Clone)]
+pub struct AffinityCell {
+    /// Row label: `no-cache`, or `w{weight}` with the cache on.
+    pub label: String,
+    /// Whether this row ran with the prefix registry enabled.
+    pub prefix_cache: bool,
+    /// Affinity credit the row's placements used.
+    pub affinity_weight: f64,
+    /// Shared admissions over all admissions touching the registry.
+    pub prefix_hit_rate: f64,
+    /// KV blocks the registry served without re-prefilling.
+    pub prefix_saved_blocks: u64,
+    /// Cold registry entries reclaimed under pressure.
+    pub prefix_evictions: u64,
+    /// Cluster-wide 99th-percentile latency, seconds.
+    pub p99_s: f64,
+    /// Total pruned traces across GPUs.
+    pub pruned: u64,
+    /// Accuracy over completed requests, percent.
+    pub acc: f64,
+    /// Fraction of offered requests shed by admission.
+    pub shed_rate: f64,
+}
+
+impl AffinityCell {
+    /// Condense one cluster run into an affinity-sweep row.
+    pub fn from_result(
+        label: &str,
+        prefix_cache: bool,
+        affinity_weight: f64,
+        r: &ClusterResult,
+    ) -> AffinityCell {
+        let n = r.outcomes.len().max(1) as f64;
+        let correct = r.outcomes.iter().filter(|o| o.correct).count() as f64;
+        AffinityCell {
+            label: label.to_string(),
+            prefix_cache,
+            affinity_weight,
+            prefix_hit_rate: r.engine_counters.prefix_hit_rate(),
+            prefix_saved_blocks: r.engine_counters.prefix_saved_blocks,
+            prefix_evictions: r.engine_counters.prefix_evictions,
+            p99_s: r.latency.percentile_s(99.0),
+            pruned: r.engine_counters.pruned,
+            acc: 100.0 * correct / n,
+            shed_rate: r.counters.shed_rate(),
+        }
+    }
+
+    /// Serialize as one metric block of `BENCH_cluster.json`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("label", Json::Str(self.label.clone())),
+            ("prefix_cache", Json::Bool(self.prefix_cache)),
+            ("affinity_weight", Json::Num(self.affinity_weight)),
+            ("prefix_hit_rate", Json::Num(self.prefix_hit_rate)),
+            ("prefix_saved_blocks", Json::Num(self.prefix_saved_blocks as f64)),
+            ("prefix_evictions", Json::Num(self.prefix_evictions as f64)),
+            ("p99_s", Json::Num(self.p99_s)),
+            ("pruned", Json::Num(self.pruned as f64)),
+            ("acc", Json::Num(self.acc)),
+            ("shed_rate", Json::Num(self.shed_rate)),
+        ])
+    }
+}
+
+/// Run the affinity-weight sweep: STEP under the configured router on
+/// the caller's workload — the cache-off baseline first, then the
+/// prefix cache on at every weight in [`AFFINITY_WEIGHTS`]. Rows shard
+/// across `opts.threads` like the other grids; output is bit-identical
+/// for any thread count.
+pub fn run_affinity_grid(
+    opts: &ClusterOpts,
+    gen_params: &GenParams,
+    scorer: &StepScorer,
+) -> Vec<AffinityCell> {
+    let jobs: Vec<(bool, f64, String)> = std::iter::once((false, 0.0, "no-cache".to_string()))
+        .chain(AFFINITY_WEIGHTS.iter().map(|&w| (true, w, format!("w{w}"))))
+        .collect();
+    let run_one = |(cache, w, label): &(bool, f64, String)| {
+        let mut o = opts.clone();
+        o.prefix_cache = *cache;
+        o.affinity_weight = *w;
+        let cfg = o.config(Method::Step, o.router);
+        let gen =
+            TraceGen::new(o.model, o.bench, gen_params.clone(), o.seed ^ 0x5EED);
+        let r = ClusterSim::new(&cfg, &gen, scorer).run();
+        AffinityCell::from_result(label, *cache, *w, &r)
+    };
+    let threads = pool::resolve_threads(opts.threads).min(jobs.len());
+    if threads <= 1 {
+        jobs.iter().map(run_one).collect()
+    } else {
+        pool::parallel_map(threads, jobs.len(), |i| run_one(&jobs[i]))
+    }
+}
+
+/// Splice the affinity-weight sweep (rows + the option set it swept
+/// over) into an assembled `BENCH_cluster.json` payload.
+pub fn attach_affinity_grid(json: &mut Json, opts: &ClusterOpts, cells: &[AffinityCell]) {
+    if let Json::Obj(map) = json {
+        map.insert(
+            "affinity".to_string(),
+            Json::Arr(cells.iter().map(|c| c.to_json()).collect()),
+        );
+        map.insert("affinity_config".to_string(), config_json(opts));
+    }
+}
+
 /// The fleet-event spec of one elasticity row: `n_revocations` spot
 /// revocations from t = 30 s, cycling victims from GPU 0, each with
 /// the same drain deadline. Revocations are spaced past the deadline
@@ -635,6 +766,8 @@ pub fn config_json(opts: &ClusterOpts) -> Json {
         ("fleet_events", Json::Str(opts.fleet_events.clone())),
         ("standby", Json::Num(opts.standby as f64)),
         ("scale_up_queue_depth", Json::Num(opts.scale_up_queue_depth as f64)),
+        ("prefix_cache", Json::Bool(opts.prefix_cache)),
+        ("affinity_weight", Json::Num(opts.affinity_weight)),
         ("seed", Json::Num(opts.seed as f64)),
     ])
 }
@@ -829,9 +962,49 @@ pub fn run(opts: &ClusterOpts) -> Result<(Vec<ClusterCell>, Vec<ClusterCell>)> {
             "WARNING: drain-relocate lost more than shed-everything at this load"
         }
     );
+    // The affinity sweep: prefix cache off, then on at every credit
+    // weight, on the caller's workload.
+    let affinity = run_affinity_grid(opts, &gen_params, &scorer);
+    println!("-- affinity (STEP, prefix cache off then w sweep)");
+    println!(
+        "{:>10} | {:>6} | {:>9} | {:>7} | {:>8} | {:>7} | {:>6} | {:>6}",
+        "row", "hit%", "saved_blk", "evicted", "p99(s)", "pruned", "acc%", "shed%"
+    );
+    for c in &affinity {
+        println!(
+            "{:>10} | {:>6.1} | {:>9} | {:>7} | {:>8.1} | {:>7} | {:>6.1} | {:>6.1}",
+            c.label,
+            100.0 * c.prefix_hit_rate,
+            c.prefix_saved_blocks,
+            c.prefix_evictions,
+            c.p99_s,
+            c.pruned,
+            c.acc,
+            100.0 * c.shed_rate,
+        );
+    }
+    if let (Some(base), Some(on)) = (
+        affinity.iter().find(|c| !c.prefix_cache),
+        affinity.iter().find(|c| c.prefix_cache && c.affinity_weight > 0.0),
+    ) {
+        println!(
+            "  pruned {} (cache, {}) vs {} (no cache) at p99 {:.1}s vs {:.1}s — {}",
+            on.pruned,
+            on.label,
+            base.pruned,
+            on.p99_s,
+            base.p99_s,
+            if on.pruned <= base.pruned {
+                "shared prompts relieve KV pressure"
+            } else {
+                "WARNING: prefix cache pruned more at this load"
+            }
+        );
+    }
     let mut json = metrics_json(opts, &methods, &routers);
     attach_migration_grid(&mut json, &mig_opts, &migration);
     attach_elasticity_grid(&mut json, &ela_opts, &elasticity);
+    attach_affinity_grid(&mut json, opts, &affinity);
     // Harness-convention artifact plus the canonical BENCH_cluster.json
     // metric blocks (also written by the cluster_load bench at its own
     // quick config — last writer wins; the embedded config block
@@ -996,6 +1169,40 @@ mod tests {
         assert!(text.contains("\"elasticity_config\""));
         assert!(text.contains("\"goodput_lost_per_revocation\""));
         assert!(text.contains("\"standby\""));
+    }
+
+    #[test]
+    fn affinity_grid_covers_baseline_and_every_weight_in_order() {
+        let gp = GenParams::default_d64();
+        let sc = projection_scorer(&gp);
+        let opts = tiny();
+        let cells = run_affinity_grid(&opts, &gp, &sc);
+        assert_eq!(cells.len(), 1 + AFFINITY_WEIGHTS.len());
+        assert_eq!(cells[0].label, "no-cache");
+        assert!(!cells[0].prefix_cache);
+        assert_eq!(cells[0].prefix_hit_rate, 0.0, "no registry, no hits");
+        assert_eq!(cells[0].prefix_saved_blocks, 0);
+        for (c, &w) in cells[1..].iter().zip(&AFFINITY_WEIGHTS) {
+            assert_eq!(c.label, format!("w{w}"));
+            assert!(c.prefix_cache);
+            assert_eq!(c.affinity_weight, w);
+            assert!(
+                c.prefix_hit_rate > 0.0,
+                "{}: sibling traces must share their prompt",
+                c.label
+            );
+            assert!(c.prefix_saved_blocks > 0, "{}", c.label);
+            assert!((0.0..=100.0).contains(&c.acc), "{}", c.label);
+        }
+        // Attached to the payload, the grid and its config are present.
+        let (m, r) = run_grids(&opts, &gp, &sc);
+        let mut json = metrics_json(&opts, &m, &r);
+        attach_affinity_grid(&mut json, &opts, &cells);
+        let text = json.to_string_pretty();
+        assert!(text.contains("\"affinity\""));
+        assert!(text.contains("\"affinity_config\""));
+        assert!(text.contains("\"prefix_hit_rate\""));
+        assert!(text.contains("\"prefix_saved_blocks\""));
     }
 
     #[test]

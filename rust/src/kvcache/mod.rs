@@ -14,7 +14,7 @@ pub mod allocator;
 pub mod shared;
 
 pub use allocator::{BlockAllocator, BlockId};
-pub use shared::{OwnerId, SharedKvPool};
+pub use shared::{OwnerId, PrefixShare, SharedKvPool, PREFIX_OWNER};
 
 /// Sequence identifier (one reasoning trace = one sequence).
 pub type SeqId = u64;
@@ -39,6 +39,11 @@ pub struct KvCacheManager {
     block_size: usize,
     tables: Vec<Option<BlockTable>>,
     num_seqs: usize,
+    /// Blocks allocated outside any per-sequence table (the shared
+    /// pool's pinned prompt-prefix blocks live here). Tracked so
+    /// [`Self::check_invariants`] can still reconcile the allocator's
+    /// used count against the tables.
+    raw_blocks: usize,
     /// Peak block usage observed (for reports).
     pub peak_used_blocks: usize,
     /// Retired block-table Vecs recycled on the next admission. The DES
@@ -57,6 +62,7 @@ impl KvCacheManager {
             block_size,
             tables: Vec::new(),
             num_seqs: 0,
+            raw_blocks: 0,
             peak_used_blocks: 0,
             spare_tables: Vec::new(),
         }
@@ -185,6 +191,33 @@ impl KvCacheManager {
         self.slot(seq)
     }
 
+    /// Blocks currently held outside any sequence table (see
+    /// [`Self::alloc_raw`]).
+    pub fn raw_blocks(&self) -> usize {
+        self.raw_blocks
+    }
+
+    /// Allocate `n` blocks outside any sequence table, appending their
+    /// ids to `into`. The shared pool's prefix registry pins prompt
+    /// blocks this way: they back many sequences at once, so no single
+    /// block table may list them. All-or-nothing; returns false (and
+    /// changes nothing) if the pool is short.
+    pub fn alloc_raw(&mut self, n: usize, into: &mut Vec<BlockId>) -> bool {
+        if !self.alloc.alloc_n_into(n, into) {
+            return false;
+        }
+        self.raw_blocks += n;
+        self.peak_used_blocks = self.peak_used_blocks.max(self.alloc.num_used());
+        true
+    }
+
+    /// Release blocks taken with [`Self::alloc_raw`].
+    pub fn free_raw(&mut self, blocks: &[BlockId]) {
+        debug_assert!(self.raw_blocks >= blocks.len(), "freeing more raw blocks than held");
+        self.alloc.free_all(blocks);
+        self.raw_blocks -= blocks.len();
+    }
+
     /// True iff advancing every listed sequence by one token fits.
     pub fn can_step_all(&self, seqs: &[SeqId]) -> bool {
         let need: usize = seqs
@@ -198,7 +231,7 @@ impl KvCacheManager {
     pub fn check_invariants(&self) {
         let table_blocks: usize =
             self.tables.iter().flatten().map(|t| t.blocks.len()).sum();
-        assert_eq!(table_blocks, self.alloc.num_used(), "block leak");
+        assert_eq!(table_blocks + self.raw_blocks, self.alloc.num_used(), "block leak");
         for t in self.tables.iter().flatten() {
             assert_eq!(
                 t.blocks.len(),
@@ -308,6 +341,24 @@ mod tests {
         assert_eq!(m.used_blocks(), 0);
         // The recycled Vec must not leak into a half-allocated state.
         assert!(m.allocate_seq(3, 32));
+        m.check_invariants();
+    }
+
+    #[test]
+    fn raw_blocks_share_the_pool_and_reconcile() {
+        let mut m = mgr(4);
+        let mut pinned = Vec::new();
+        assert!(m.alloc_raw(2, &mut pinned));
+        assert_eq!(m.used_blocks(), 2);
+        assert_eq!(m.raw_blocks(), 2);
+        assert!(m.allocate_seq(1, 32)); // the remaining 2 blocks
+        assert!(!m.alloc_raw(1, &mut pinned), "pool exhausted");
+        assert_eq!(pinned.len(), 2, "failed raw alloc must not touch the list");
+        m.check_invariants();
+        m.free_raw(&pinned);
+        assert_eq!(m.raw_blocks(), 0);
+        assert_eq!(m.used_blocks(), 2);
+        assert_eq!(m.peak_used_blocks, 4);
         m.check_invariants();
     }
 

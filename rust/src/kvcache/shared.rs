@@ -1,10 +1,10 @@
-//! Shared KV pool: per-owner accounting and quotas over one
-//! [`KvCacheManager`].
+//! Shared KV pool: per-owner accounting, quotas, and copy-on-write
+//! prompt-prefix sharing over one [`KvCacheManager`].
 //!
 //! The multi-request serving simulator ([`crate::sim::serve`]) admits
 //! many requests against a *single* physical block pool — the regime
 //! where one tenant's growth can starve every other. [`SharedKvPool`]
-//! wraps the block-table manager with two additions:
+//! wraps the block-table manager with three additions:
 //!
 //! * **ownership** — every sequence is registered to an [`OwnerId`]
 //!   (one owner per request), and the pool tracks blocks held per owner;
@@ -13,8 +13,25 @@
 //!   even while the pool has free blocks, bounding cross-tenant
 //!   interference; without one, only pool exhaustion triggers events and
 //!   STEP's cross-request pruning picks the globally weakest trace.
+//! * **prefix sharing** — an opt-in copy-on-write path
+//!   ([`Self::allocate_seq_shared`]) that pins a question's *full*
+//!   prompt blocks once in a per-pool registry and admits each sequence
+//!   with only its private suffix (the partially-filled tail block is
+//!   the CoW fork: generation appends into it, so it is never shared).
+//!   Registry blocks are charged to the sentinel [`PREFIX_OWNER`],
+//!   refcounted per question, and — once the last sharer releases —
+//!   kept as a reclaimable cache that LRU-evicts under pressure.
+//!
+//! The sharing path is entirely additive: a pool that never calls
+//! [`Self::allocate_seq_shared`] holds an empty registry, and every
+//! legacy method then computes byte-for-byte what it did before the
+//! registry existed (the determinism contract behind
+//! `--prefix-cache` off).
 
-use super::{KvCacheManager, SeqId};
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BinaryHeap};
+
+use super::{BlockId, KvCacheManager, SeqId};
 
 /// Owner (request / tenant) identifier within a [`SharedKvPool`].
 pub type OwnerId = u32;
@@ -25,9 +42,45 @@ pub type OwnerId = u32;
 /// matters when a cluster run steps 1024 engines' pools.
 const NO_OWNER: OwnerId = OwnerId::MAX;
 
-/// A [`KvCacheManager`] with per-owner block accounting and optional
-/// per-owner quotas. All accounting lives in dense index-keyed arenas
-/// (`u32` entries, sequence- and owner-id keyed) — no per-pool maps.
+/// Sentinel owner the prefix registry's pinned blocks are charged to.
+/// Shared blocks belong to every sharer and therefore to no request:
+/// charging them once here keeps the per-owner ledger reconciling with
+/// the manager ([`SharedKvPool::check_invariants`]) without
+/// double-charging any tenant, and quotas never apply to it.
+pub const PREFIX_OWNER: OwnerId = OwnerId::MAX - 1;
+
+/// Sentinel in the dense `prefix_of` arena: this sequence shares no
+/// prefix.
+const NO_PREFIX: u32 = u32::MAX;
+
+/// Outcome of a copy-on-write admission
+/// ([`SharedKvPool::allocate_seq_shared`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PrefixShare {
+    /// Did the registry already hold this question's prompt blocks?
+    /// A hit reuses them (no prefill for the shared span); a miss pins
+    /// them fresh.
+    pub hit: bool,
+    /// Full prompt blocks pinned in (or reused from) the registry.
+    /// Zero when the prompt is shorter than one block.
+    pub shared_blocks: usize,
+}
+
+/// One pinned prompt prefix: the question's full blocks, how many live
+/// sequences share them, and the LRU tick stamped when the refcount
+/// last dropped to zero.
+#[derive(Debug, Clone)]
+struct PrefixEntry {
+    blocks: Vec<BlockId>,
+    refs: u32,
+    tick: u64,
+}
+
+/// A [`KvCacheManager`] with per-owner block accounting, optional
+/// per-owner quotas, and a copy-on-write prompt-prefix registry. All
+/// per-sequence accounting lives in dense index-keyed arenas (`u32`
+/// entries, sequence- and owner-id keyed) — no per-pool maps on the
+/// decode hot path.
 #[derive(Debug, Clone)]
 pub struct SharedKvPool {
     mgr: KvCacheManager,
@@ -38,6 +91,29 @@ pub struct SharedKvPool {
     used_by: Vec<u32>,
     /// Per-owner block cap; `None` = pool-bound only.
     quota_blocks: Option<usize>,
+    /// Pinned prompt prefixes by question id. The authoritative store;
+    /// iterated only by invariant checks and the scan reference.
+    registry: BTreeMap<u32, PrefixEntry>,
+    /// O(1) registry digest: blocks a share of `qid` would reuse right
+    /// now (dense by question id; the router's affinity lookups and the
+    /// admission hot path read this, never the map).
+    hit_blocks: Vec<u32>,
+    /// Sequence id -> shared question id ([`NO_PREFIX`] = private).
+    prefix_of: Vec<u32>,
+    /// Blocks charged to [`PREFIX_OWNER`] (Σ registry entry sizes).
+    prefix_used: usize,
+    /// Blocks held by zero-ref registry entries — allocated, but
+    /// evictable on demand. `free_blocks()` stays *hard* free;
+    /// [`Self::available_blocks`] adds this reclaimable slack.
+    reclaimable: usize,
+    /// Lazy min-heap of `(tick, qid)` for zero-ref entries; stale keys
+    /// (resurrected or re-retired entries) are skipped on pop.
+    zero_ref: BinaryHeap<Reverse<(u64, u32)>>,
+    /// Monotone LRU clock, bumped each time a refcount drops to zero.
+    tick: u64,
+    /// Evictions performed since the last drain: `(qid, blocks)`. The
+    /// serving engine drains this to emit `PrefixEvict` events.
+    evictions: Vec<(u32, u32)>,
 }
 
 impl SharedKvPool {
@@ -49,6 +125,14 @@ impl SharedKvPool {
             owner_of: Vec::new(),
             used_by: Vec::new(),
             quota_blocks,
+            registry: BTreeMap::new(),
+            hit_blocks: Vec::new(),
+            prefix_of: Vec::new(),
+            prefix_used: 0,
+            reclaimable: 0,
+            zero_ref: BinaryHeap::new(),
+            tick: 0,
+            evictions: Vec::new(),
         }
     }
 
@@ -62,13 +146,30 @@ impl SharedKvPool {
         self.mgr.capacity_tokens() / self.mgr.block_size()
     }
 
-    /// Currently free blocks.
+    /// Currently free blocks (hard free: not allocated to anything,
+    /// including zero-ref cached prefixes — see
+    /// [`Self::available_blocks`] for the reclaimable view).
     #[inline]
     pub fn free_blocks(&self) -> usize {
         self.mgr.free_blocks()
     }
 
-    /// Currently allocated blocks.
+    /// Blocks held by zero-ref registry entries: allocated, but
+    /// evictable the moment an admission or append needs them.
+    #[inline]
+    pub fn reclaimable_blocks(&self) -> usize {
+        self.reclaimable
+    }
+
+    /// Hard-free plus reclaimable blocks — the capacity an allocation
+    /// willing to evict cold prefixes can actually reach. Equal to
+    /// [`Self::free_blocks`] whenever the registry is unused.
+    #[inline]
+    pub fn available_blocks(&self) -> usize {
+        self.mgr.free_blocks() + self.reclaimable
+    }
+
+    /// Currently allocated blocks (pinned registry blocks included).
     pub fn used_blocks(&self) -> usize {
         self.mgr.used_blocks()
     }
@@ -88,9 +189,13 @@ impl SharedKvPool {
         self.quota_blocks
     }
 
-    /// Blocks currently held by `owner`.
+    /// Blocks currently held by `owner` ([`PREFIX_OWNER`] reports the
+    /// registry's pinned total).
     #[inline]
     pub fn owner_used(&self, owner: OwnerId) -> usize {
+        if owner == PREFIX_OWNER {
+            return self.prefix_used;
+        }
         self.used_by.get(owner as usize).copied().unwrap_or(0) as usize
     }
 
@@ -99,6 +204,7 @@ impl SharedKvPool {
     /// active owner on every probe of the serving engine's quota-bound
     /// memory-horizon search (the per-owner *demands* come from the
     /// scheduler's incremental index; this is only the headroom side).
+    /// Quotas never apply to [`PREFIX_OWNER`].
     #[inline]
     pub fn owner_headroom(&self, owner: OwnerId) -> Option<usize> {
         self.quota_blocks.map(|q| q.saturating_sub(self.owner_used(owner)))
@@ -109,7 +215,9 @@ impl SharedKvPool {
         self.owner_of.get(seq as usize).copied().filter(|&o| o != NO_OWNER)
     }
 
-    /// Resident tokens of a sequence (0 if unknown).
+    /// Resident tokens of a sequence (0 if unknown). For a shared
+    /// sequence this is its *private* suffix only — the pinned prompt
+    /// span lives in the registry, not the sequence's table.
     #[inline]
     pub fn seq_tokens(&self, seq: SeqId) -> usize {
         self.mgr.seq_tokens(seq)
@@ -145,53 +253,280 @@ impl SharedKvPool {
         if !self.can_admit(owner, need) {
             return false;
         }
-        debug_assert!(owner != NO_OWNER, "owner id collides with the arena sentinel");
+        debug_assert!(
+            owner != NO_OWNER && owner != PREFIX_OWNER,
+            "owner id collides with a sentinel"
+        );
         let ok = self.mgr.allocate_seq(seq, tokens);
         debug_assert!(ok, "can_admit guaranteed the allocation");
+        self.bind_seq(owner, seq, need, NO_PREFIX);
+        true
+    }
+
+    /// Split a prompt into its shareable full blocks and the private
+    /// tail tokens (the partially-filled block generation appends into).
+    #[inline]
+    fn split_prompt(&self, prompt_tokens: usize) -> (usize, usize) {
+        let bs = self.mgr.block_size();
+        let full = prompt_tokens / bs;
+        (full, prompt_tokens - full * bs)
+    }
+
+    /// Blocks a fresh share of question `qid` would reuse right now
+    /// (0 when the registry misses). O(1) digest lookup — the router's
+    /// affinity credit calls this per candidate GPU.
+    #[inline]
+    pub fn prefix_hit_blocks(&self, qid: usize) -> usize {
+        self.hit_blocks.get(qid).copied().unwrap_or(0) as usize
+    }
+
+    /// Scan-based reference for [`Self::prefix_hit_blocks`]: walks the
+    /// authoritative registry map. The micro-benchmark locks the digest
+    /// against this the way the router views are locked against their
+    /// scan.
+    pub fn prefix_hit_blocks_scan(&self, qid: usize) -> usize {
+        self.registry.get(&(qid as u32)).map(|e| e.blocks.len()).unwrap_or(0)
+    }
+
+    /// New blocks a shared admission of (`qid`, `prompt_tokens`) plus
+    /// `extra_tokens` of already-generated suffix would consume right
+    /// now: the private suffix, plus the full prompt blocks only on a
+    /// registry miss.
+    pub fn shared_blocks_needed(
+        &self,
+        qid: usize,
+        prompt_tokens: usize,
+        extra_tokens: usize,
+    ) -> usize {
+        let (full, tail) = self.split_prompt(prompt_tokens);
+        let private = self.mgr.blocks_needed_for_new(tail + extra_tokens);
+        if full > 0 && self.prefix_hit_blocks(qid) > 0 {
+            private
+        } else {
+            private + full
+        }
+    }
+
+    /// Would a shared admission ([`Self::allocate_seq_shared`]) of this
+    /// shape succeed right now? Pool feasibility counts reclaimable
+    /// blocks (cold prefixes are evicted on demand), minus the target
+    /// question's own cached blocks when it is zero-ref — a hit repins
+    /// them, so they stop being evictable. The owner's quota covers the
+    /// private suffix only.
+    pub fn can_admit_shared(
+        &self,
+        owner: OwnerId,
+        qid: usize,
+        prompt_tokens: usize,
+        extra_tokens: usize,
+    ) -> bool {
+        let (full, tail) = self.split_prompt(prompt_tokens);
+        let private = self.mgr.blocks_needed_for_new(tail + extra_tokens);
+        let entry = if full > 0 { self.registry.get(&(qid as u32)) } else { None };
+        let need = private + if entry.is_some() { 0 } else { full };
+        let mut avail = self.available_blocks();
+        if let Some(e) = entry {
+            if e.refs == 0 {
+                avail -= e.blocks.len();
+            }
+        }
+        need <= avail
+            && match self.owner_headroom(owner) {
+                Some(h) => private <= h,
+                None => true,
+            }
+    }
+
+    /// Copy-on-write admission: pin (or reuse) the question's full
+    /// prompt blocks in the registry and allocate only the private
+    /// suffix — the prompt's tail tokens plus `extra_tokens` of
+    /// already-generated context (resume / migration re-admits) — as
+    /// the sequence's own table. All-or-nothing: returns `None`
+    /// (changing nothing) when the pool (counting evictable cold
+    /// prefixes) or the owner's quota cannot take it. Cold registry
+    /// entries are LRU-evicted as needed; drain
+    /// [`Self::take_prefix_evictions`] afterwards.
+    pub fn allocate_seq_shared(
+        &mut self,
+        owner: OwnerId,
+        seq: SeqId,
+        qid: usize,
+        prompt_tokens: usize,
+        extra_tokens: usize,
+    ) -> Option<PrefixShare> {
+        if !self.can_admit_shared(owner, qid, prompt_tokens, extra_tokens) {
+            return None;
+        }
+        debug_assert!(
+            owner != NO_OWNER && owner != PREFIX_OWNER,
+            "owner id collides with a sentinel"
+        );
+        let (full, tail) = self.split_prompt(prompt_tokens);
+        let private_tokens = tail + extra_tokens;
+        let need = self.mgr.blocks_needed_for_new(private_tokens);
+        let qkey = qid as u32;
+        let share = if full == 0 {
+            // Sub-block prompt: nothing shareable, plain private admit.
+            PrefixShare { hit: false, shared_blocks: 0 }
+        } else if let Some(e) = self.registry.get_mut(&qkey) {
+            // Hit: repin before any eviction can touch the entry.
+            if e.refs == 0 {
+                self.reclaimable -= e.blocks.len();
+            }
+            e.refs += 1;
+            PrefixShare { hit: true, shared_blocks: e.blocks.len() }
+        } else {
+            // Miss: pin the prompt's full blocks, evicting cold
+            // entries if the hard-free pool is short.
+            self.ensure_free(full + need);
+            let mut blocks = Vec::with_capacity(full);
+            let ok = self.mgr.alloc_raw(full, &mut blocks);
+            debug_assert!(ok, "can_admit_shared guaranteed the registry pin");
+            self.prefix_used += full;
+            if self.hit_blocks.len() <= qid {
+                self.hit_blocks.resize(qid + 1, 0);
+            }
+            self.hit_blocks[qid] = full as u32;
+            self.registry.insert(qkey, PrefixEntry { blocks, refs: 1, tick: self.tick });
+            PrefixShare { hit: false, shared_blocks: full }
+        };
+        self.ensure_free(need);
+        let ok = self.mgr.allocate_seq(seq, private_tokens);
+        debug_assert!(ok, "can_admit_shared guaranteed the private suffix");
+        self.bind_seq(owner, seq, need, if full > 0 { qkey } else { NO_PREFIX });
+        Some(share)
+    }
+
+    /// Register a freshly-allocated sequence in the dense arenas.
+    fn bind_seq(&mut self, owner: OwnerId, seq: SeqId, charged: usize, prefix: u32) {
         let idx = seq as usize;
         if self.owner_of.len() <= idx {
             self.owner_of.resize(idx + 1, NO_OWNER);
         }
         self.owner_of[idx] = owner;
+        if self.prefix_of.len() <= idx {
+            self.prefix_of.resize(idx + 1, NO_PREFIX);
+        }
+        self.prefix_of[idx] = prefix;
         let oidx = owner as usize;
         if self.used_by.len() <= oidx {
             self.used_by.resize(oidx + 1, 0);
         }
-        self.used_by[oidx] += need as u32;
-        true
+        self.used_by[oidx] += charged as u32;
+    }
+
+    /// Evict zero-ref registry entries (oldest tick first) until the
+    /// manager has `need` hard-free blocks. The caller must have
+    /// checked [`Self::available_blocks`] covers the need.
+    fn ensure_free(&mut self, need: usize) {
+        while self.mgr.free_blocks() < need {
+            let evicted = self.evict_lru_prefix();
+            debug_assert!(evicted, "available_blocks covered the need");
+            if !evicted {
+                break;
+            }
+        }
+    }
+
+    /// Drop the least-recently-retired zero-ref entry, returning
+    /// whether one existed. Stale heap keys (resurrected entries) are
+    /// skipped lazily.
+    fn evict_lru_prefix(&mut self) -> bool {
+        while let Some(Reverse((tick, qkey))) = self.zero_ref.pop() {
+            let live = matches!(
+                self.registry.get(&qkey),
+                Some(e) if e.refs == 0 && e.tick == tick
+            );
+            if !live {
+                continue;
+            }
+            let e = self.registry.remove(&qkey).expect("checked live");
+            self.reclaimable -= e.blocks.len();
+            self.prefix_used -= e.blocks.len();
+            self.mgr.free_raw(&e.blocks);
+            self.hit_blocks[qkey as usize] = 0;
+            self.evictions.push((qkey, e.blocks.len() as u32));
+            return true;
+        }
+        false
+    }
+
+    /// Evictions performed since the last drain, as `(qid, blocks)`.
+    /// Empty unless an admission or append had to reclaim cold
+    /// prefixes.
+    pub fn take_prefix_evictions(&mut self) -> Vec<(u32, u32)> {
+        if self.evictions.is_empty() {
+            return Vec::new();
+        }
+        std::mem::take(&mut self.evictions)
     }
 
     /// Append `n` tokens to a live sequence, charging any new blocks to
-    /// its owner. Returns false (changing nothing) if the pool or the
-    /// owner's quota is short.
+    /// its owner. Returns false (changing nothing) if the pool — after
+    /// reclaiming cold prefixes — or the owner's quota is short.
     pub fn append_tokens(&mut self, seq: SeqId, n: usize) -> bool {
         let owner = self.owner_of(seq).expect("appending to unknown seq");
         let need = self.mgr.blocks_needed_for_append(seq, n);
-        if need > 0 && !self.can_admit(owner, need) {
-            return false;
+        if need > 0 {
+            let pool_ok = self.available_blocks() >= need;
+            let quota_ok = match self.owner_headroom(owner) {
+                Some(h) => need <= h,
+                None => true,
+            };
+            if !pool_ok || !quota_ok {
+                return false;
+            }
+            self.ensure_free(need);
         }
         let ok = self.mgr.append_tokens(seq, n);
-        debug_assert!(ok, "can_admit guaranteed the append");
+        debug_assert!(ok, "the feasibility check guaranteed the append");
         self.used_by[owner as usize] += need as u32;
         true
     }
 
-    /// Release a sequence entirely, crediting its blocks back to the
-    /// owner. Returns the number of blocks released.
+    /// Release a sequence entirely, crediting its private blocks back
+    /// to the owner. A shared sequence also drops its prefix reference;
+    /// the last sharer retires the entry into the reclaimable LRU cache
+    /// (its blocks stay pinned until pressure evicts them or a new
+    /// share resurrects them). Returns the number of blocks
+    /// *hard-freed* — a shared sequence releases only its private
+    /// suffix.
     pub fn free_seq(&mut self, seq: SeqId) -> usize {
         let owner = std::mem::replace(&mut self.owner_of[seq as usize], NO_OWNER);
         assert!(owner != NO_OWNER, "freeing unknown seq");
         let freed = self.mgr.free_seq(seq);
         self.used_by[owner as usize] -= freed as u32;
+        if let Some(slot) = self.prefix_of.get_mut(seq as usize) {
+            let qkey = std::mem::replace(slot, NO_PREFIX);
+            if qkey != NO_PREFIX {
+                let e = self
+                    .registry
+                    .get_mut(&qkey)
+                    .expect("shared seq has a registry entry");
+                e.refs -= 1;
+                if e.refs == 0 {
+                    self.tick += 1;
+                    e.tick = self.tick;
+                    self.reclaimable += e.blocks.len();
+                    self.zero_ref.push(Reverse((e.tick, qkey)));
+                }
+            }
+        }
         freed
     }
 
-    /// Invariant check for tests: per-owner charges reconcile with the
-    /// manager's block tables.
+    /// Invariant check for tests and the serving engine's debug builds:
+    /// per-owner charges, registry pins, the O(1) digest, and the
+    /// reclaimable ledger all reconcile with the manager's block
+    /// accounting.
     pub fn check_invariants(&self) {
         self.mgr.check_invariants();
         let charged: usize = self.used_by.iter().map(|&u| u as usize).sum();
-        assert_eq!(charged, self.mgr.used_blocks(), "owner charge leak");
+        assert_eq!(
+            charged + self.prefix_used,
+            self.mgr.used_blocks(),
+            "owner charge leak"
+        );
         let mut recomputed = vec![0u32; self.used_by.len()];
         for (seq, &owner) in self.owner_of.iter().enumerate() {
             if owner != NO_OWNER {
@@ -201,6 +536,42 @@ impl SharedKvPool {
             }
         }
         assert_eq!(recomputed, self.used_by, "per-owner accounting drift");
+        let pinned: usize = self.registry.values().map(|e| e.blocks.len()).sum();
+        assert_eq!(pinned, self.prefix_used, "registry pin drift");
+        assert_eq!(pinned, self.mgr.raw_blocks(), "registry / raw-block drift");
+        let cold: usize = self
+            .registry
+            .values()
+            .filter(|e| e.refs == 0)
+            .map(|e| e.blocks.len())
+            .sum();
+        assert_eq!(cold, self.reclaimable, "reclaimable ledger drift");
+        for (&q, e) in &self.registry {
+            assert!(!e.blocks.is_empty(), "empty registry entry for qid {q}");
+            assert_eq!(
+                self.prefix_hit_blocks(q as usize),
+                e.blocks.len(),
+                "digest drift for qid {q}"
+            );
+        }
+        let live_digests = self.hit_blocks.iter().filter(|&&b| b > 0).count();
+        assert_eq!(live_digests, self.registry.len(), "stale digest entries");
+        let mut refs: BTreeMap<u32, u32> = BTreeMap::new();
+        for &q in &self.prefix_of {
+            if q != NO_PREFIX {
+                *refs.entry(q).or_insert(0) += 1;
+            }
+        }
+        for (&q, e) in &self.registry {
+            assert_eq!(
+                e.refs,
+                refs.get(&q).copied().unwrap_or(0),
+                "refcount drift for qid {q}"
+            );
+        }
+        for &q in refs.keys() {
+            assert!(self.registry.contains_key(&q), "sharer of an evicted prefix {q}");
+        }
         if let Some(q) = self.quota_blocks {
             for (o, &u) in self.used_by.iter().enumerate() {
                 assert!(u as usize <= q, "owner {o} over quota: {u} > {q}");
@@ -283,5 +654,150 @@ mod tests {
         p.allocate_seq(0, 0, 16);
         p.free_seq(0);
         p.free_seq(0);
+    }
+
+    // --- prefix sharing ---
+
+    #[test]
+    fn shared_prompt_blocks_are_pinned_once() {
+        let mut p = pool(16, None);
+        // Prompt 40 tokens @ bs 16: 2 full blocks shared, 8-token tail.
+        let a = p.allocate_seq_shared(0, 0, 7, 40, 0).expect("fits");
+        assert_eq!(a, PrefixShare { hit: false, shared_blocks: 2 });
+        let b = p.allocate_seq_shared(0, 1, 7, 40, 0).expect("fits");
+        assert_eq!(b, PrefixShare { hit: true, shared_blocks: 2 });
+        // 2 pinned + 2 private tails, not 6.
+        assert_eq!(p.used_blocks(), 4);
+        assert_eq!(p.owner_used(0), 2, "owner pays only the private tails");
+        assert_eq!(p.owner_used(PREFIX_OWNER), 2);
+        assert_eq!(p.prefix_hit_blocks(7), 2);
+        assert_eq!(p.prefix_hit_blocks(7), p.prefix_hit_blocks_scan(7));
+        assert_eq!(p.prefix_hit_blocks(3), 0);
+        p.check_invariants();
+    }
+
+    #[test]
+    fn last_ref_retires_to_reclaimable_and_resurrects() {
+        let mut p = pool(16, None);
+        assert!(p.allocate_seq_shared(0, 0, 5, 32, 0).is_some()); // 2 full, no tail
+        assert_eq!(p.seq_tokens(0), 0, "block-aligned prompt has no private tail");
+        assert_eq!(p.reclaimable_blocks(), 0);
+        p.free_seq(0);
+        // The entry survives as evictable cache.
+        assert_eq!(p.used_blocks(), 2);
+        assert_eq!(p.reclaimable_blocks(), 2);
+        assert_eq!(p.available_blocks(), 16);
+        assert_eq!(p.prefix_hit_blocks(5), 2, "cached entry still hits");
+        p.check_invariants();
+        // A new share resurrects it without fresh allocation.
+        let s = p.allocate_seq_shared(1, 1, 5, 32, 0).expect("fits");
+        assert!(s.hit, "cached prefix must hit");
+        assert_eq!(p.reclaimable_blocks(), 0);
+        assert!(p.take_prefix_evictions().is_empty());
+        p.check_invariants();
+    }
+
+    #[test]
+    fn pressure_evicts_cold_prefixes_lru_first() {
+        let mut p = pool(6, None);
+        // Pin two 2-block prefixes, then retire both (qid 1 first).
+        assert!(p.allocate_seq_shared(0, 0, 1, 32, 0).is_some());
+        assert!(p.allocate_seq_shared(0, 1, 2, 32, 0).is_some());
+        p.free_seq(0); // qid 1 retires first -> older tick
+        p.free_seq(1);
+        assert_eq!(p.reclaimable_blocks(), 4);
+        assert_eq!(p.free_blocks(), 2);
+        // The plain path is hard-free-bound: it never reclaims.
+        assert!(!p.allocate_seq(1, 2, 64), "4 blocks > 2 hard-free");
+        assert!(p.take_prefix_evictions().is_empty());
+        // The CoW path evicts cold entries, oldest retirement first: a
+        // 3-full-block miss plus a 1-block tail needs 4 hard-free.
+        assert!(p.allocate_seq_shared(1, 2, 9, 56, 0).is_some(), "evicts cold prefixes");
+        let ev = p.take_prefix_evictions();
+        assert_eq!(ev, vec![(1, 2)], "LRU order: qid 1 retired first");
+        assert_eq!(p.prefix_hit_blocks(1), 0);
+        assert_eq!(p.prefix_hit_blocks(2), 2, "the warmer entry survives");
+        assert_eq!(p.reclaimable_blocks(), 2);
+        p.check_invariants();
+    }
+
+    #[test]
+    fn append_reclaims_cold_prefixes_under_pressure() {
+        let mut p = pool(4, None);
+        assert!(p.allocate_seq_shared(0, 0, 1, 32, 0).is_some()); // 2 pinned
+        assert!(p.allocate_seq(1, 1, 32)); // 2 private
+        p.free_seq(0); // prefix qid 1 now cold (2 reclaimable)
+        assert_eq!(p.free_blocks(), 0);
+        assert!(p.append_tokens(1, 1), "append evicts the cold prefix");
+        assert_eq!(p.take_prefix_evictions(), vec![(1, 2)]);
+        assert_eq!(p.free_blocks(), 1);
+        p.check_invariants();
+    }
+
+    #[test]
+    fn a_hit_on_a_cold_entry_is_not_evictable_capacity() {
+        let mut p = pool(4, None);
+        assert!(p.allocate_seq_shared(0, 0, 1, 64, 0).is_some()); // all 4 pinned
+        p.free_seq(0);
+        assert_eq!(p.reclaimable_blocks(), 4);
+        // A hit repins all 4; asking for a private tail too must fail
+        // (the hit blocks stop being evictable).
+        assert!(!p.can_admit_shared(1, 1, 72, 0), "tail block cannot fit");
+        assert!(p.allocate_seq_shared(1, 1, 1, 64, 0).is_some(), "exact hit fits");
+        assert_eq!(p.reclaimable_blocks(), 0);
+        p.check_invariants();
+    }
+
+    #[test]
+    fn shared_quota_covers_private_suffix_only() {
+        let mut p = pool(16, Some(2));
+        // 3 full shared blocks + 1 tail block: quota sees only the tail.
+        assert!(p.allocate_seq_shared(0, 0, 4, 56, 0).is_some());
+        assert_eq!(p.owner_used(0), 1);
+        assert!(p.append_tokens(0, 8), "within the tail block");
+        assert!(p.append_tokens(0, 16), "second private block = quota");
+        assert!(!p.append_tokens(0, 16), "third private block over quota");
+        p.check_invariants();
+    }
+
+    #[test]
+    fn sub_block_prompts_share_nothing() {
+        let mut p = pool(8, None);
+        let s = p.allocate_seq_shared(0, 0, 3, 10, 0).expect("fits");
+        assert_eq!(s, PrefixShare { hit: false, shared_blocks: 0 });
+        assert_eq!(p.prefix_hit_blocks(3), 0);
+        assert_eq!(p.owner_used(PREFIX_OWNER), 0);
+        assert_eq!(p.free_seq(0), 1, "entirely private");
+        p.check_invariants();
+    }
+
+    #[test]
+    fn resumed_suffix_is_charged_with_the_tail() {
+        let mut p = pool(16, None);
+        // Resume re-admit: 40-token prompt (2 full + 8 tail) with 20
+        // generated tokens -> private 28 tokens = 2 blocks.
+        let s = p.allocate_seq_shared(0, 0, 2, 40, 20).expect("fits");
+        assert_eq!(s.shared_blocks, 2);
+        assert_eq!(p.seq_tokens(0), 28);
+        assert_eq!(p.owner_used(0), 2);
+        assert_eq!(
+            p.shared_blocks_needed(2, 40, 20),
+            2,
+            "a second sharer pays only its private suffix"
+        );
+        assert_eq!(p.shared_blocks_needed(9, 40, 20), 4, "a miss pays the pin too");
+        p.check_invariants();
+    }
+
+    #[test]
+    fn legacy_paths_are_untouched_by_an_empty_registry() {
+        let mut p = pool(8, None);
+        assert_eq!(p.available_blocks(), p.free_blocks());
+        assert!(p.allocate_seq(0, 0, 32));
+        assert!(p.append_tokens(0, 64));
+        assert_eq!(p.available_blocks(), p.free_blocks());
+        assert_eq!(p.reclaimable_blocks(), 0);
+        assert_eq!(p.free_seq(0), 6);
+        p.check_invariants();
     }
 }

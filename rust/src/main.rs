@@ -120,6 +120,16 @@ CLUSTER-SIM OPTIONS (plus the serve-sim options above):
                          admission-queue depth that triggers activating
                          a standby engine (default 0 = only when a
                          request would otherwise shed)
+    --prefix-cache       share each question's full prompt blocks
+                         copy-on-write through a per-GPU prefix
+                         registry (default off; off is byte-identical
+                         to today). Adds the affinity-weight sweep to
+                         the cluster grids
+    --affinity-weight W  kv-pressure routing credit: discount a GPU's
+                         expected-footprint term by W x its pinned
+                         prefix blocks for the request's question
+                         (default 0 = placement arithmetic untouched;
+                         needs --prefix-cache to matter)
     --trace-out PATH     after the grids, rerun the canonical STEP cell
                          with the event log on and write the merged
                          stream as JSON Lines (one event per line).
@@ -340,6 +350,20 @@ fn parse_cluster_opts(args: &[String]) -> Result<ClusterOpts> {
             }
             "--scale-up-queue-depth" => {
                 opts.scale_up_queue_depth = parse_val(args, i)?;
+                i += 2;
+            }
+            "--prefix-cache" => {
+                opts.prefix_cache = true;
+                i += 1;
+            }
+            "--affinity-weight" => {
+                opts.affinity_weight = parse_val(args, i)?;
+                if !(0.0..=10.0).contains(&opts.affinity_weight) {
+                    bail!(
+                        "--affinity-weight: want a credit weight in [0, 10], got {}",
+                        opts.affinity_weight
+                    );
+                }
                 i += 2;
             }
             "--trace-out" => {

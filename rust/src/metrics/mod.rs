@@ -104,6 +104,18 @@ pub struct EngineCounters {
     /// resume/drop pass). The denominator of the cluster bench's
     /// events/sec throughput metric.
     pub events: u64,
+    /// Prefix-cache admissions that reused pinned prompt blocks
+    /// (registry hits; zero with `--prefix-cache` off).
+    pub prefix_hits: u64,
+    /// Prefix-cache admissions that pinned prompt blocks fresh
+    /// (registry misses — sub-block prompts with nothing shareable
+    /// included).
+    pub prefix_misses: u64,
+    /// Prompt KV blocks registry hits did not have to allocate or
+    /// prefill — the capacity the cache multiplied.
+    pub prefix_saved_blocks: u64,
+    /// Zero-reference registry entries evicted under pool pressure.
+    pub prefix_evictions: u64,
 }
 
 impl EngineCounters {
@@ -119,13 +131,29 @@ impl EngineCounters {
         self.early_stopped += other.early_stopped;
         self.step_scores += other.step_scores;
         self.events += other.events;
+        self.prefix_hits += other.prefix_hits;
+        self.prefix_misses += other.prefix_misses;
+        self.prefix_saved_blocks += other.prefix_saved_blocks;
+        self.prefix_evictions += other.prefix_evictions;
+    }
+
+    /// Fraction of prefix-cache admissions that hit the registry
+    /// (0 when the cache saw no admissions, e.g. `--prefix-cache` off).
+    pub fn prefix_hit_rate(&self) -> f64 {
+        let total = self.prefix_hits + self.prefix_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.prefix_hits as f64 / total as f64
+        }
     }
 
     /// One-line `key=value` report of every counter.
     pub fn report(&self) -> String {
         format!(
             "requests={} tokens={} iters={} preemptions={} resumes={} \
-             pruned={} early_stopped={} scores={} events={}",
+             pruned={} early_stopped={} scores={} events={} prefix_hits={} \
+             prefix_misses={} prefix_saved_blocks={} prefix_evictions={}",
             self.requests,
             self.generated_tokens,
             self.decode_iterations,
@@ -135,6 +163,10 @@ impl EngineCounters {
             self.early_stopped,
             self.step_scores,
             self.events,
+            self.prefix_hits,
+            self.prefix_misses,
+            self.prefix_saved_blocks,
+            self.prefix_evictions,
         )
     }
 }
@@ -320,6 +352,30 @@ mod tests {
         assert_eq!(a.requests, 4);
         assert_eq!(a.pruned, 2);
         assert_eq!(a.preemptions, 7);
+    }
+
+    #[test]
+    fn prefix_counters_fold_and_rate() {
+        let mut a = EngineCounters {
+            prefix_hits: 3,
+            prefix_misses: 1,
+            prefix_saved_blocks: 12,
+            ..Default::default()
+        };
+        let b = EngineCounters {
+            prefix_hits: 1,
+            prefix_misses: 3,
+            prefix_evictions: 2,
+            ..Default::default()
+        };
+        a.add(&b);
+        assert_eq!(a.prefix_hits, 4);
+        assert_eq!(a.prefix_misses, 4);
+        assert_eq!(a.prefix_saved_blocks, 12);
+        assert_eq!(a.prefix_evictions, 2);
+        assert!((a.prefix_hit_rate() - 0.5).abs() < 1e-12);
+        assert_eq!(EngineCounters::default().prefix_hit_rate(), 0.0);
+        assert!(a.report().contains("prefix_hits=4"));
     }
 
     #[test]

@@ -111,6 +111,32 @@ pub enum EventKind {
         /// Free pool blocks at the instant the event fired.
         free_blocks: usize,
     },
+    /// A copy-on-write admission pinned a question's full prompt
+    /// blocks fresh in the engine's prefix registry (a registry miss).
+    PrefixShare {
+        /// Question whose prompt blocks were pinned.
+        qid: usize,
+        /// Full prompt blocks pinned once for every future sharer.
+        blocks: usize,
+    },
+    /// A copy-on-write admission reused prompt blocks already pinned
+    /// in the registry (a hit: the shared span needs no prefill).
+    PrefixHit {
+        /// Question whose pinned blocks were reused.
+        qid: usize,
+        /// Pinned blocks the admission reused.
+        blocks: usize,
+    },
+    /// Pressure evicted a zero-reference prefix-registry entry (cause
+    /// `pressure`), hard-freeing its pinned blocks. The replay checker
+    /// holds each `(gpu, qid)` pin to a strict share → evict
+    /// alternation: shared blocks are freed exactly once.
+    PrefixEvict {
+        /// Question whose cached entry was evicted.
+        qid: usize,
+        /// Pinned blocks returned to the free pool.
+        blocks: usize,
+    },
     /// A request ran to completion (cause `drain` when it beat a
     /// drain deadline on a departing GPU).
     Complete,
@@ -137,6 +163,9 @@ pub const KIND_NAMES: &[&str] = &[
     "preempt",
     "resume",
     "memory",
+    "prefix-share",
+    "prefix-hit",
+    "prefix-evict",
     "complete",
 ];
 
@@ -155,6 +184,7 @@ const CAUSES: &[&str] = &[
     "memory",
     "slim-sc",
     "stall-drop",
+    "pressure",
 ];
 
 fn intern_cause(s: &str) -> Option<&'static str> {
@@ -184,6 +214,9 @@ impl EventKind {
             EventKind::Preempt => "preempt",
             EventKind::Resume => "resume",
             EventKind::MemoryEvent { .. } => "memory",
+            EventKind::PrefixShare { .. } => "prefix-share",
+            EventKind::PrefixHit { .. } => "prefix-hit",
+            EventKind::PrefixEvict { .. } => "prefix-evict",
             EventKind::Complete => "complete",
         }
     }
@@ -312,6 +345,12 @@ impl SimEvent {
             EventKind::MemoryEvent { free_blocks } => {
                 pairs.push(("free_blocks", Json::Num(free_blocks as f64)));
             }
+            EventKind::PrefixShare { qid, blocks }
+            | EventKind::PrefixHit { qid, blocks }
+            | EventKind::PrefixEvict { qid, blocks } => {
+                pairs.push(("qid", Json::Num(qid as f64)));
+                pairs.push(("blocks", Json::Num(blocks as f64)));
+            }
             _ => {}
         }
         Json::obj(pairs)
@@ -359,6 +398,15 @@ impl SimEvent {
             "preempt" => EventKind::Preempt,
             "resume" => EventKind::Resume,
             "memory" => EventKind::MemoryEvent { free_blocks: num("free_blocks")? },
+            "prefix-share" => {
+                EventKind::PrefixShare { qid: num("qid")?, blocks: num("blocks")? }
+            }
+            "prefix-hit" => {
+                EventKind::PrefixHit { qid: num("qid")?, blocks: num("blocks")? }
+            }
+            "prefix-evict" => {
+                EventKind::PrefixEvict { qid: num("qid")?, blocks: num("blocks")? }
+            }
             "complete" => EventKind::Complete,
             other => return Err(format!("unknown event kind '{other}'")),
         };
@@ -598,6 +646,9 @@ mod tests {
             EventKind::Preempt,
             EventKind::Resume,
             EventKind::MemoryEvent { free_blocks: 3 },
+            EventKind::PrefixShare { qid: 5, blocks: 7 },
+            EventKind::PrefixHit { qid: 5, blocks: 7 },
+            EventKind::PrefixEvict { qid: 5, blocks: 7 },
             EventKind::Complete,
         ];
         assert_eq!(kinds.len(), KIND_NAMES.len());

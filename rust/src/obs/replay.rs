@@ -89,13 +89,18 @@ enum Lifecycle {
 
 /// Validate an event stream: time-ordering, per-request lifecycle
 /// (each rid is offered at most once, placed or shed after an offer,
-/// completed or abandoned exactly once after a placement), and the
+/// completed or abandoned exactly once after a placement), the
+/// prefix-cache pin lifecycle (per `(gpu, qid)`: shares and evicts
+/// strictly alternate with matching block counts and hits only land on
+/// a live pin — shared blocks are freed exactly once), and the
 /// end-of-run conservation laws `offered == placed + shed` and
 /// `completed + shed_on_revoke == placed`.
 pub fn check(events: &[SimEvent]) -> ReplayReport {
     let mut violations = Vec::new();
     let mut last_t = f64::NEG_INFINITY;
     let mut life: HashMap<usize, Lifecycle> = HashMap::new();
+    // Live prefix pins: (gpu, qid) -> pinned block count.
+    let mut pins: HashMap<(Option<usize>, usize), usize> = HashMap::new();
     for (i, ev) in events.iter().enumerate() {
         if !(ev.t_s.is_finite() && ev.t_s >= 0.0) {
             violations.push(format!("event {i}: bad clock {}", ev.t_s));
@@ -159,6 +164,43 @@ pub fn check(events: &[SimEvent]) -> ReplayReport {
                     other => violations.push(format!(
                         "event {i}: rid {rid} {what} from state {other:?} \
                          (completion must be exactly-once after a placement)"
+                    )),
+                }
+            }
+            EventKind::PrefixShare { qid, blocks } => {
+                if pins.insert((ev.gpu, qid), blocks).is_some() {
+                    violations.push(format!(
+                        "event {i}: qid {qid} prefix pinned twice on gpu {:?} \
+                         without an evict between",
+                        ev.gpu
+                    ));
+                }
+            }
+            EventKind::PrefixHit { qid, blocks } => match pins.get(&(ev.gpu, qid)) {
+                Some(&pinned) if pinned == blocks => {}
+                Some(&pinned) => violations.push(format!(
+                    "event {i}: qid {qid} prefix hit for {blocks} blocks but \
+                     {pinned} are pinned on gpu {:?}",
+                    ev.gpu
+                )),
+                None => violations.push(format!(
+                    "event {i}: qid {qid} prefix hit with no live pin on gpu {:?}",
+                    ev.gpu
+                )),
+            },
+            EventKind::PrefixEvict { qid, blocks } => {
+                match pins.remove(&(ev.gpu, qid)) {
+                    Some(pinned) if pinned == blocks => {}
+                    Some(pinned) => violations.push(format!(
+                        "event {i}: qid {qid} prefix evict freed {blocks} blocks \
+                         but {pinned} were pinned on gpu {:?} (shared blocks must \
+                         be freed exactly once)",
+                        ev.gpu
+                    )),
+                    None => violations.push(format!(
+                        "event {i}: qid {qid} prefix evict with no live pin on \
+                         gpu {:?} (shared blocks must be freed exactly once)",
+                        ev.gpu
                     )),
                 }
             }
@@ -245,6 +287,47 @@ mod tests {
             ev(6.0, EventKind::Complete, 0),
         ]);
         assert!(r.violations.iter().any(|v| v.contains("runs backwards")));
+    }
+
+    #[test]
+    fn prefix_pin_lifecycle_alternates_share_and_evict() {
+        // Well-formed: share → hits → evict → share again, per (gpu, qid).
+        let ok = check(&[
+            SimEvent::new(0.0, EventKind::PrefixShare { qid: 3, blocks: 4 }).gpu(0),
+            SimEvent::new(0.5, EventKind::PrefixHit { qid: 3, blocks: 4 }).gpu(0),
+            // The same qid on another GPU is an independent pin.
+            SimEvent::new(0.6, EventKind::PrefixShare { qid: 3, blocks: 4 }).gpu(1),
+            SimEvent::new(1.0, EventKind::PrefixEvict { qid: 3, blocks: 4 })
+                .gpu(0)
+                .cause("pressure"),
+            SimEvent::new(2.0, EventKind::PrefixShare { qid: 3, blocks: 4 }).gpu(0),
+        ]);
+        assert!(ok.ok(), "unexpected violations: {:?}", ok.violations);
+
+        // A double free of the shared blocks is flagged.
+        let double = check(&[
+            SimEvent::new(0.0, EventKind::PrefixShare { qid: 3, blocks: 4 }).gpu(0),
+            SimEvent::new(1.0, EventKind::PrefixEvict { qid: 3, blocks: 4 }).gpu(0),
+            SimEvent::new(2.0, EventKind::PrefixEvict { qid: 3, blocks: 4 }).gpu(0),
+        ]);
+        assert!(double.violations.iter().any(|v| v.contains("exactly once")));
+
+        // A hit without a live pin, a re-pin without an evict, and a
+        // block-count mismatch are all flagged.
+        let r = check(&[
+            SimEvent::new(0.0, EventKind::PrefixHit { qid: 1, blocks: 2 }).gpu(0),
+        ]);
+        assert!(r.violations.iter().any(|v| v.contains("no live pin")));
+        let r = check(&[
+            SimEvent::new(0.0, EventKind::PrefixShare { qid: 1, blocks: 2 }).gpu(0),
+            SimEvent::new(1.0, EventKind::PrefixShare { qid: 1, blocks: 2 }).gpu(0),
+        ]);
+        assert!(r.violations.iter().any(|v| v.contains("pinned twice")));
+        let r = check(&[
+            SimEvent::new(0.0, EventKind::PrefixShare { qid: 1, blocks: 2 }).gpu(0),
+            SimEvent::new(1.0, EventKind::PrefixEvict { qid: 1, blocks: 3 }).gpu(0),
+        ]);
+        assert!(r.violations.iter().any(|v| v.contains("freed 3")));
     }
 
     #[test]

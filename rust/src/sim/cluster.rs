@@ -590,6 +590,17 @@ pub struct ClusterConfig {
     /// influence scheduling, so every metric byte is identical either
     /// way.
     pub event_log: Option<usize>,
+    /// Share each question's full prompt blocks copy-on-write through
+    /// every engine's per-GPU prefix registry. `false` (default) is
+    /// byte-identical to the registry-free cluster.
+    pub prefix_cache: bool,
+    /// Affinity credit `w` of the kv-pressure routers: a candidate
+    /// GPU's expected-footprint term is discounted by `w ×` its
+    /// registry's pinned blocks for the request's question. `0.0`
+    /// (default) leaves placement arithmetic untouched; only the
+    /// kv-pressure stage-two scan reads it (shard aggregates stay
+    /// request-independent).
+    pub affinity_weight: f64,
 }
 
 impl ClusterConfig {
@@ -626,6 +637,8 @@ impl ClusterConfig {
             standby: 0,
             scale_up_queue_depth: 0,
             event_log: None,
+            prefix_cache: false,
+            affinity_weight: 0.0,
         }
     }
 
@@ -688,6 +701,7 @@ impl ClusterConfig {
         // Last-survivor rescue is the on-pressure policy's engine-side
         // half; the other policies leave memory events untouched.
         c.migrate_rescue = matches!(self.migration, MigrationPolicy::OnPressure { .. });
+        c.prefix_cache = self.prefix_cache;
         c
     }
 }
@@ -984,6 +998,8 @@ impl<'a> ClusterSim<'a> {
                     block_size: 1,
                     timing_scale: 1.0,
                     survivor_demand_blocks: 0.0,
+                    prefix_hit_blocks: 0.0,
+                    affinity_weight: 0.0,
                 })
                 .collect(),
             view_version: vec![u64::MAX; total],
@@ -1635,7 +1651,7 @@ impl<'a> ClusterSim<'a> {
     fn pressure(&self, engines: &[ServeEngine<'_>], g: usize) -> f64 {
         let p = self.cfg.profile_for(g);
         p.timing_scale * engines[g].survivor_demand_blocks()
-            / engines[g].free_blocks().max(1) as f64
+            / engines[g].available_blocks().max(1) as f64
     }
 
     /// Hand a migrated request to `target`: charge the recompute bill,
@@ -1920,6 +1936,8 @@ impl<'a> ClusterSim<'a> {
                     block_size: 1,
                     timing_scale: 1.0,
                     survivor_demand_blocks: 0.0,
+                    prefix_hit_blocks: 0.0,
+                    affinity_weight: 0.0,
                 };
                 continue;
             }
@@ -1928,13 +1946,39 @@ impl<'a> ClusterSim<'a> {
                 gpu: g,
                 outstanding: e.outstanding(),
                 live_traces: e.live_traces(),
-                free_blocks: e.free_blocks(),
+                // Zero-ref registry entries are reclaimable on demand,
+                // so the router sees them as placeable capacity. With
+                // the prefix cache off the registry is empty and this
+                // is exactly `free_blocks()`.
+                free_blocks: e.available_blocks(),
                 pool_blocks: e.pool_blocks(),
                 block_size: p.block_size,
                 timing_scale: p.timing_scale,
                 survivor_demand_blocks: e.survivor_demand_blocks(),
+                // Affinity data is per-(request, GPU): it is stamped
+                // into per-placement stack copies, never into this
+                // version-keyed cache.
+                prefix_hit_blocks: 0.0,
+                affinity_weight: 0.0,
             };
         }
+    }
+
+    /// Stamp the candidate request's prefix affinity into a
+    /// per-placement stack copy of a cached view: how many registry
+    /// blocks of the request's question this GPU already pins, and the
+    /// configured credit weight. The version-keyed view cache stays
+    /// request-independent; with the cache off or the weight at zero
+    /// the copy comes back untouched, so placement arithmetic — and
+    /// therefore every placement — is bit-identical to today.
+    #[inline]
+    fn affine_view(&self, engines: &[ServeEngine<'_>], v: &GpuView, qid: usize) -> GpuView {
+        let mut v = *v;
+        if self.cfg.prefix_cache && self.cfg.affinity_weight > 0.0 {
+            v.affinity_weight = self.cfg.affinity_weight;
+            v.prefix_hit_blocks = engines[v.gpu].prefix_hit_blocks(qid) as f64;
+        }
+        v
     }
 
     /// The incremental two-stage placement behind
@@ -1944,8 +1988,16 @@ impl<'a> ClusterSim<'a> {
     /// exact within-shard scan (O(shard size)). Byte-identical to the
     /// O(R) reference [`crate::sim::router::ShardedKvPressure`] over
     /// the full eligible slice — debug builds assert it on every
-    /// placement. Returns the chosen GPU id.
-    fn place_sharded(&self, fd: &mut FrontDoor, req: &RouteRequest, quota: usize) -> usize {
+    /// placement. Affinity credit enters only the stage-two scan (the
+    /// stage-one aggregates are request-independent by construction),
+    /// exactly mirroring the reference. Returns the chosen GPU id.
+    fn place_sharded(
+        &self,
+        engines: &[ServeEngine<'_>],
+        fd: &mut FrontDoor,
+        req: &RouteRequest,
+        quota: usize,
+    ) -> usize {
         let shard_size = self.cfg.resolved_shard_size();
         let n_gpus = fd.view_cache.len();
         for s in 0..fd.shard_agg.len() {
@@ -1996,7 +2048,8 @@ impl<'a> ClusterSim<'a> {
             if v.outstanding >= quota {
                 continue;
             }
-            let key = kv_pressure_key(req, v);
+            let av = self.affine_view(engines, v, req.qid);
+            let key = kv_pressure_key(req, &av);
             let better = match best {
                 None => true,
                 Some((bk, _)) => key < bk,
@@ -2012,7 +2065,7 @@ impl<'a> ClusterSim<'a> {
                 .view_cache
                 .iter()
                 .filter(|v| v.outstanding < quota)
-                .copied()
+                .map(|v| self.affine_view(engines, v, req.qid))
                 .collect();
             let want = views[fd.router.place(req, &views)].gpu;
             debug_assert_eq!(
@@ -2041,13 +2094,21 @@ impl<'a> ClusterSim<'a> {
         };
         let arr = Arrival { rid, qid: meta.qid, t_arrive: meta.t_arrive };
         let g = if matches!(self.cfg.router, RouterKind::KvPressureSharded) {
-            self.place_sharded(fd, &req, quota)
+            self.place_sharded(&*engines, fd, &req, quota)
         } else {
             // Flat routers see the eligible slice of the cached views —
-            // the same values a full rebuild would produce.
+            // the same values a full rebuild would produce — with the
+            // candidate's affinity stamped into the per-placement
+            // copies (a no-op unless the prefix cache and a positive
+            // weight are both configured).
             let mut views = std::mem::take(&mut fd.views_buf);
             views.clear();
-            views.extend(fd.view_cache.iter().filter(|v| v.outstanding < quota).copied());
+            views.extend(
+                fd.view_cache
+                    .iter()
+                    .filter(|v| v.outstanding < quota)
+                    .map(|v| self.affine_view(&*engines, v, req.qid)),
+            );
             debug_assert!(!views.is_empty(), "place requires an eligible GPU");
             let g = views[fd.router.place(&req, &views)].gpu;
             fd.views_buf = views;
@@ -2687,6 +2748,72 @@ mod tests {
             "activated standby GPUs actually served: {:?}",
             r.per_gpu_requests
         );
+    }
+
+    /// Prefix-cache off is byte-identical to today's cluster whatever
+    /// the affinity weight says: the registry plumbing and the router
+    /// stamping are both structurally inert until `--prefix-cache`
+    /// turns them on.
+    #[test]
+    fn prefix_cache_off_matches_the_default_cluster() {
+        for router in [RouterKind::KvPressure, RouterKind::KvPressureSharded] {
+            let mut base = pressured_cfg(Method::Step, 2);
+            base.router = router;
+            let mut off = base.clone();
+            off.affinity_weight = 0.7; // ignored without the cache
+            let a = run(&base);
+            let b = run(&off);
+            assert_eq!(a.makespan_s, b.makespan_s, "{router:?}");
+            assert_eq!(a.counters.report(), b.counters.report(), "{router:?}");
+            assert_eq!(a.engine_counters.prefix_hits, 0);
+            assert_eq!(b.engine_counters.prefix_misses, 0);
+            assert_eq!(a.outcomes.len(), b.outcomes.len());
+            for (x, y) in a.outcomes.iter().zip(&b.outcomes) {
+                assert_eq!(x.rid, y.rid);
+                assert_eq!(x.latency_s, y.latency_s, "{router:?}");
+                assert_eq!(x.chosen, y.chosen);
+            }
+        }
+    }
+
+    /// A prefix-cache cluster under pressure: prompts actually share
+    /// (hit rate above zero — every sibling trace reuses the first
+    /// trace's pinned prompt), the admission conservation laws hold,
+    /// and the run is byte-identical across repeats and
+    /// `step_threads` values for both kv-pressure routers (the sharded
+    /// router's debug cross-check vs the reference runs on every
+    /// placement).
+    #[test]
+    fn prefix_cache_cluster_shares_conserves_and_stays_deterministic() {
+        for router in [RouterKind::KvPressure, RouterKind::KvPressureSharded] {
+            let mut cfg = pressured_cfg(Method::Step, 2);
+            cfg.router = router;
+            cfg.prefix_cache = true;
+            cfg.affinity_weight = 0.5;
+            let a = run(&cfg);
+            assert!(a.engine_counters.prefix_hits > 0, "{router:?}: prompts shared");
+            assert!(a.engine_counters.prefix_saved_blocks > 0, "{router:?}");
+            assert!(a.engine_counters.prefix_hit_rate() > 0.0, "{router:?}");
+            assert_eq!(a.counters.offered, a.counters.placed + a.counters.shed);
+            assert_eq!(a.counters.completed, a.counters.placed);
+            let b = run(&cfg);
+            assert_eq!(a.counters.report(), b.counters.report(), "{router:?}");
+            assert_eq!(
+                a.engine_counters.prefix_hits,
+                b.engine_counters.prefix_hits,
+                "{router:?}"
+            );
+            let mut par = cfg.clone();
+            par.step_threads = 4;
+            let p = run(&par);
+            assert_eq!(a.counters.report(), p.counters.report(), "{router:?}");
+            assert_eq!(a.makespan_s, p.makespan_s, "{router:?}");
+            assert_eq!(a.outcomes.len(), p.outcomes.len());
+            for (x, y) in a.outcomes.iter().zip(&p.outcomes) {
+                assert_eq!(x.rid, y.rid);
+                assert_eq!(x.latency_s, y.latency_s, "{router:?}");
+            }
+        }
     }
 
     #[test]

@@ -87,6 +87,17 @@ pub struct GpuView {
     /// Estimated blocks the GPU's surviving traces still need (see
     /// [`crate::sim::serve::ServeEngine::survivor_demand_blocks`]).
     pub survivor_demand_blocks: f64,
+    /// Blocks the *arriving request's question* would reuse from this
+    /// GPU's prefix registry (0 with the cache off, on a miss, or for
+    /// request-independent uses of the view). Per-(request, GPU) data:
+    /// the cluster stamps it into per-placement view copies, never into
+    /// its version-keyed view cache.
+    pub prefix_hit_blocks: f64,
+    /// Affinity-credit weight `w`: [`kv_pressure_key`] subtracts
+    /// `w × prefix_hit_blocks` from the request's expected footprint.
+    /// At 0 (the default) the scoring arithmetic is untouched, so
+    /// placements stay bit-identical to the affinity-blind router.
+    pub affinity_weight: f64,
 }
 
 /// What the router knows about an arriving request.
@@ -128,6 +139,8 @@ pub struct RouteRequest {
 ///     block_size: 16,
 ///     timing_scale: 1.0,
 ///     survivor_demand_blocks: 0.0,
+///     prefix_hit_blocks: 0.0,
+///     affinity_weight: 0.0,
 /// };
 /// let req = RouteRequest { rid: 0, qid: 0, n_traces: 4, expected_tokens: 192.0 };
 /// let gpus = [view(0), view(1), view(2)];
@@ -229,8 +242,23 @@ pub struct KvPressure;
 /// Shared by [`KvPressure`], [`ShardedKvPressure`]'s within-shard scan,
 /// and the cluster simulator's incremental placement path, so all three
 /// agree byte-for-byte.
+///
+/// **Affinity credit.** When the view carries a positive
+/// [`GpuView::affinity_weight`] and the GPU's prefix registry holds
+/// blocks of this request's question ([`GpuView::prefix_hit_blocks`]),
+/// the request's expected footprint shrinks by `w × hit_blocks`
+/// (floored at zero — a cached prompt can waive the request's own
+/// footprint, never turn it into anti-pressure): KV the GPU already
+/// holds is KV the placement does not consume. Both guards are
+/// structural, so `w == 0` (or the cache off) leaves the scoring
+/// arithmetic — and hence every placement — bit-identical to the
+/// affinity-blind router.
 pub(crate) fn kv_pressure_key(req: &RouteRequest, g: &GpuView) -> (bool, f64) {
-    let expected_blocks = req.expected_tokens / g.block_size.max(1) as f64;
+    let mut expected_blocks = req.expected_tokens / g.block_size.max(1) as f64;
+    if g.affinity_weight > 0.0 && g.prefix_hit_blocks > 0.0 {
+        expected_blocks =
+            (expected_blocks - g.affinity_weight * g.prefix_hit_blocks).max(0.0);
+    }
     let score = (g.survivor_demand_blocks + expected_blocks) / g.free_blocks.max(1) as f64
         * g.timing_scale;
     (g.free_blocks == 0, score)
@@ -240,7 +268,9 @@ pub(crate) fn kv_pressure_key(req: &RouteRequest, g: &GpuView) -> (bool, f64) {
 /// flag and the survivor-demand-to-headroom ratio, without the arriving
 /// request's own footprint. This is what the sharded router's global
 /// stage aggregates per shard — it must not depend on the request, or
-/// the per-shard minima could not be cached between placements.
+/// the per-shard minima could not be cached between placements. The
+/// affinity credit is per-(request, GPU) data and therefore lives only
+/// in [`kv_pressure_key`]'s stage-two scan.
 pub(crate) fn shard_base_key(g: &GpuView) -> (bool, f64) {
     let score = g.timing_scale * g.survivor_demand_blocks / g.free_blocks.max(1) as f64;
     (g.free_blocks == 0, score)
@@ -440,6 +470,8 @@ mod tests {
             block_size: 16,
             timing_scale: 1.0,
             survivor_demand_blocks: demand,
+            prefix_hit_blocks: 0.0,
+            affinity_weight: 0.0,
         }
     }
 
@@ -544,6 +576,37 @@ mod tests {
         // Among saturated GPUs the relative score still orders them.
         let gpus = [view(0, 1, 0, 500.0), view(1, 1, 0, 10.0)];
         assert_eq!(gpus[kv.place(&req(), &gpus)].gpu, 1);
+    }
+
+    #[test]
+    fn affinity_credit_steers_toward_the_prefix_holder_only_when_weighted() {
+        let mut kv = KvPressure;
+        // Identical GPUs: the first minimum wins.
+        let plain = [view(0, 1, 100, 50.0), view(1, 1, 100, 50.0)];
+        assert_eq!(plain[kv.place(&req(), &plain)].gpu, 0);
+        // GPU 1 holds 30 of the question's prompt blocks: with w > 0
+        // the credit shrinks the footprint ((50 + 50 - 30)/100 = 0.7
+        // vs 1.0) and GPU 1 wins.
+        let mut holder = plain;
+        holder[1].prefix_hit_blocks = 30.0;
+        holder[1].affinity_weight = 1.0;
+        assert_eq!(holder[kv.place(&req(), &holder)].gpu, 1);
+        // Half weight still wins, proportionally: (100 - 15)/100 = 0.85.
+        holder[1].affinity_weight = 0.5;
+        assert_eq!(holder[kv.place(&req(), &holder)].gpu, 1);
+        // w = 0 leaves the arithmetic untouched even with hit blocks
+        // present: placement reverts to the affinity-blind pick.
+        holder[1].affinity_weight = 0.0;
+        assert_eq!(holder[kv.place(&req(), &holder)].gpu, 0);
+        // The credit floors at zero: an enormous cached prefix waives
+        // the request's own footprint but never subtracts survivor
+        // demand (score stays at 50/100 = 0.5).
+        holder[1].affinity_weight = 1.0;
+        holder[1].prefix_hit_blocks = 1e6;
+        let key = kv_pressure_key(&req(), &holder[1]);
+        assert!((key.1 - 0.5).abs() < 1e-12, "floored score, got {}", key.1);
+        // The request-independent shard base key never sees affinity.
+        assert_eq!(shard_base_key(&holder[1]), shard_base_key(&plain[1]));
     }
 
     #[test]

@@ -207,6 +207,13 @@ pub struct EventIndex {
     base_iters: Vec<u64>,
     /// Σ resident tokens over running traces (the scheduler's K0).
     resident_sum: u64,
+    /// Tokens pinned in shared prompt-prefix blocks on this engine's
+    /// pool. Counted *once* toward K0 regardless of how many running
+    /// traces share them (each trace inserts only its private
+    /// residency), and never in the phase histograms — pinned blocks
+    /// are full by construction, so they contribute no future block
+    /// demand. Zero whenever the prefix cache is off.
+    pinned_tokens: u64,
     /// Histogram over advance-invariant block phases (len = bs).
     hist: Vec<u64>,
     /// Whether per-owner aggregates are maintained (quota engines).
@@ -254,6 +261,7 @@ impl EventIndex {
         self.base_resident.clear();
         self.base_iters.clear();
         self.resident_sum = 0;
+        self.pinned_tokens = 0;
         self.hist.clear();
         self.hist.resize(block_size, 0);
         self.track_owners = track_owners;
@@ -278,9 +286,22 @@ impl EventIndex {
     }
 
     /// Σ resident tokens over the running set — the scheduler's batch
-    /// context size `K0`, previously an O(live) fold per event.
+    /// context size `K0`, previously an O(live) fold per event — plus
+    /// the tokens pinned in shared prefixes, counted exactly once.
     pub fn resident_tokens(&self) -> u64 {
-        self.resident_sum
+        self.resident_sum + self.pinned_tokens
+    }
+
+    /// Account tokens newly pinned in a shared prompt prefix: they
+    /// enter K0 once, here, instead of once per sharing trace.
+    pub fn add_pinned_tokens(&mut self, tokens: u64) {
+        self.pinned_tokens += tokens;
+    }
+
+    /// Release pinned-prefix tokens (registry eviction).
+    pub fn sub_pinned_tokens(&mut self, tokens: u64) {
+        debug_assert!(self.pinned_tokens >= tokens, "pinned-token underflow");
+        self.pinned_tokens -= tokens;
     }
 
     /// Owners with at least one running trace, ascending (empty unless
@@ -629,6 +650,29 @@ mod tests {
         idx.remove(1);
         assert_eq!(idx.d_event(), None);
         assert_eq!(idx.pool_demand(100), 0);
+    }
+
+    #[test]
+    fn pinned_tokens_enter_k0_once_and_never_the_histograms() {
+        let mut idx = EventIndex::new(16, false);
+        // Two sharers of a 32-token pinned prefix insert only their
+        // private residency (8 tokens each); the prefix enters once.
+        idx.add_pinned_tokens(32);
+        idx.insert(0, 0, 8, 4);
+        idx.insert(1, 0, 8, 4);
+        assert_eq!(idx.resident_tokens(), 32 + 16);
+        // Block demand sees only the private phases: 8 free slots each.
+        assert_eq!(idx.pool_demand(8), 0);
+        assert_eq!(idx.pool_demand(9), 2);
+        idx.advance(4);
+        assert_eq!(idx.resident_tokens(), 32 + 24, "advance never scales pins");
+        idx.remove(0);
+        idx.remove(1);
+        assert_eq!(idx.resident_tokens(), 32, "pins outlive their sharers");
+        idx.sub_pinned_tokens(32);
+        assert_eq!(idx.resident_tokens(), 0);
+        idx.reset(16, false);
+        assert_eq!(idx.resident_tokens(), 0, "reset clears pins");
     }
 
     #[test]

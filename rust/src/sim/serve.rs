@@ -57,7 +57,7 @@ use crate::coordinator::request::RequestState;
 use crate::coordinator::scorer::StepScorer;
 use crate::coordinator::trace::{TraceState, TraceStatus};
 use crate::coordinator::voting::{weighted_vote, Vote};
-use crate::kvcache::{OwnerId, SharedKvPool};
+use crate::kvcache::{OwnerId, PrefixShare, SharedKvPool};
 use crate::metrics::EngineCounters;
 use crate::obs::{EventKind, Recorder, SimEvent};
 use crate::sim::des::ScoreAgg;
@@ -119,6 +119,14 @@ pub struct ServeSimConfig {
     /// (default) the event prunes as always; single-GPU drivers have
     /// nowhere to relocate to and leave this off.
     pub migrate_rescue: bool,
+    /// Share prompt-prefix KV copy-on-write: admissions pin a
+    /// question's full prompt blocks once in the pool's prefix registry
+    /// ([`crate::kvcache::SharedKvPool::allocate_seq_shared`]) and each
+    /// trace holds only its private suffix, so repeated questions —
+    /// and sibling traces of one request — stop paying prompt KV (and
+    /// prompt prefill) per trace. Off (default) the engine's arithmetic
+    /// is byte-identical to the pre-registry code.
+    pub prefix_cache: bool,
 }
 
 impl ServeSimConfig {
@@ -146,6 +154,7 @@ impl ServeSimConfig {
             route_views: false,
             timing_scale: 1.0,
             migrate_rescue: false,
+            prefix_cache: false,
         }
     }
 }
@@ -465,7 +474,18 @@ impl<'a> ServeSim<'a> {
         tid: usize,
     ) -> bool {
         let rid = traces[tid].rid;
-        let prefix = reqs[rid].q.prompt_tokens + traces[tid].st.generated as usize;
+        let prompt = reqs[rid].q.prompt_tokens;
+        let generated = traces[tid].st.generated as usize;
+        if self.cfg.prefix_cache {
+            // Shared resume: a registry hit pays only the private
+            // suffix; feasibility counts evictable cold prefixes. The
+            // strict `>` keeps the plain path's +1 block of headroom.
+            let qid = reqs[rid].st.qid;
+            return pool.can_admit_shared(rid as OwnerId, qid, prompt, generated)
+                && pool.available_blocks()
+                    > pool.shared_blocks_needed(qid, prompt, generated);
+        }
+        let prefix = prompt + generated;
         pool.can_admit(rid as OwnerId, pool.blocks_needed_for_new(prefix) + 1)
     }
 }
@@ -580,9 +600,26 @@ impl<'a> ServeEngine<'a> {
         self.pool.num_seqs()
     }
 
-    /// Free blocks in the engine's KV pool.
+    /// Free blocks in the engine's KV pool (hard free; see
+    /// [`available_blocks`](Self::available_blocks)).
     pub fn free_blocks(&self) -> usize {
         self.pool.free_blocks()
+    }
+
+    /// Hard-free plus reclaimable (zero-ref cached prefix) blocks —
+    /// the capacity an admission willing to evict cold prefixes can
+    /// reach. Equal to [`free_blocks`](Self::free_blocks) with the
+    /// prefix cache off.
+    pub fn available_blocks(&self) -> usize {
+        self.pool.available_blocks()
+    }
+
+    /// Blocks a shared admission of question `qid` would reuse from
+    /// the engine's prefix registry right now (0 on a miss or with the
+    /// cache off) — the router's affinity signal, served from the
+    /// pool's O(1) digest.
+    pub fn prefix_hit_blocks(&self, qid: usize) -> usize {
+        self.pool.prefix_hit_blocks(qid)
     }
 
     /// Physical blocks in the engine's KV pool.
@@ -689,6 +726,7 @@ impl<'a> ServeEngine<'a> {
                 _ => {}
             }
         }
+        self.debug_check_pool();
         let traces = self.traces[lo..lo + n].iter().map(|t| t.st.clone()).collect();
         let rq = &mut self.reqs[local];
         let live = rq.live;
@@ -924,18 +962,42 @@ impl<'a> ServeEngine<'a> {
             gone: false,
         };
         let mut admitted = 0usize;
+        let mut prefill_tokens = 0usize;
+        let prefix_cache = self.sim.cfg.prefix_cache;
         for i in 0..n_per {
             let tid = lo + i;
             // Trace streams offset by rid so repeated questions still
             // decode distinct samples (cluster-wide: rid is global).
             let spec = self.sim.gen.trace(&rq.q, arr.rid * n_per + i);
             let mut st = TraceState::new(tid as u64, self.sim.cfg.params.deepconf_window);
-            let need = self.pool.blocks_needed_for_new(rq.q.prompt_tokens);
-            let fits = self.pool.can_admit(local as OwnerId, need);
+            let prompt = rq.q.prompt_tokens;
+            // `resident` is what enters the index: the full prompt on
+            // the plain path, only the private suffix on the shared one
+            // (the pinned span enters K0 once, not per sharer).
+            let (fits, resident) = if prefix_cache {
+                match self
+                    .pool
+                    .allocate_seq_shared(local as OwnerId, tid as u64, arr.qid, prompt, 0)
+                {
+                    Some(share) => {
+                        let span = share.shared_blocks * self.sim.cfg.block_size;
+                        prefill_tokens += if share.hit { prompt - span } else { prompt };
+                        self.note_prefix_share(arr.qid, share);
+                        (true, prompt - span)
+                    }
+                    None => (false, 0),
+                }
+            } else {
+                let need = self.pool.blocks_needed_for_new(prompt);
+                let fits = self.pool.can_admit(local as OwnerId, need);
+                if fits {
+                    let ok = self.pool.allocate_seq(local as OwnerId, tid as u64, prompt);
+                    debug_assert!(ok, "can_admit guaranteed the admission");
+                    prefill_tokens += prompt;
+                }
+                (fits, prompt)
+            };
             if fits {
-                let ok =
-                    self.pool.allocate_seq(local as OwnerId, tid as u64, rq.q.prompt_tokens);
-                debug_assert!(ok, "can_admit guaranteed the admission");
                 admitted += 1;
             } else {
                 st.status = TraceStatus::Preempted;
@@ -944,12 +1006,13 @@ impl<'a> ServeEngine<'a> {
             self.next_end.push(spec.step_ends[0]);
             self.traces.push(ServeTrace { rid: local, spec, st, last_settle: 0.0 });
             if fits {
-                self.index_insert(tid, rq.q.prompt_tokens);
+                self.index_insert(tid, resident);
             }
         }
+        self.drain_prefix_evictions();
         if admitted > 0 {
             rq.st.admitted(self.clock);
-            let dt = self.sim.profile.timing.prefill(rq.q.prompt_tokens * admitted);
+            let dt = self.sim.profile.timing.prefill(prefill_tokens);
             // The engine stalls for the prefill; earlier requests' live
             // traces need no bookkeeping here — their open settle
             // windows span the stall and classify it by status when
@@ -971,6 +1034,68 @@ impl<'a> ServeEngine<'a> {
                 .rid(rid)
                 .load(live, kv)
         });
+        self.debug_check_pool();
+    }
+
+    /// Account one copy-on-write admission: counters, the pinned-token
+    /// K0 term (a fresh pin enters once; hits and resurrections add
+    /// nothing — their tokens are already counted), and the
+    /// `PrefixShare` / `PrefixHit` event.
+    fn note_prefix_share(&mut self, qid: usize, share: PrefixShare) {
+        let blocks = share.shared_blocks;
+        if share.hit {
+            self.counters.prefix_hits += 1;
+            self.counters.prefix_saved_blocks += blocks as u64;
+        } else {
+            self.counters.prefix_misses += 1;
+            if blocks > 0 {
+                self.index
+                    .add_pinned_tokens((blocks * self.sim.cfg.block_size) as u64);
+            }
+        }
+        if blocks > 0 && self.rec.is_some() {
+            let clock = self.clock;
+            let kind = if share.hit {
+                EventKind::PrefixHit { qid, blocks }
+            } else {
+                EventKind::PrefixShare { qid, blocks }
+            };
+            self.emit(|live, kv| SimEvent::new(clock, kind).load(live, kv));
+        }
+    }
+
+    /// Drain registry evictions the pool performed since the last call:
+    /// retire their tokens from the K0 pinned term and emit
+    /// `PrefixEvict` — each pin's blocks are freed exactly once, the
+    /// conservation law `obs::replay` checks. No-op with the prefix
+    /// cache off (the pool never evicts then).
+    fn drain_prefix_evictions(&mut self) {
+        if !self.sim.cfg.prefix_cache {
+            return;
+        }
+        let bs = self.sim.cfg.block_size;
+        let clock = self.clock;
+        for (qid, blocks) in self.pool.take_prefix_evictions() {
+            self.index.sub_pinned_tokens((blocks as usize * bs) as u64);
+            self.counters.prefix_evictions += 1;
+            let (qid, blocks) = (qid as usize, blocks as usize);
+            self.emit(|live, kv| {
+                SimEvent::new(clock, EventKind::PrefixEvict { qid, blocks })
+                    .cause("pressure")
+                    .load(live, kv)
+            });
+        }
+    }
+
+    /// Debug-build pool invariant sweep (per-owner charges, registry
+    /// refcounts and pins, the O(1) digest): every mutation class on
+    /// the serving hot path funnels through here, so CoW bugs fail
+    /// loudly in the property suites, not just the pool unit tests.
+    /// Compiled out in release builds.
+    #[inline]
+    fn debug_check_pool(&self) {
+        #[cfg(debug_assertions)]
+        self.pool.check_invariants();
     }
 
     /// Advance until the clock reaches `t_limit` or the engine runs out
@@ -1062,6 +1187,9 @@ impl<'a> ServeEngine<'a> {
             let ok = self.pool.append_tokens(i as u64, d as usize);
             debug_assert!(ok, "memory horizon must guarantee the append");
         }
+        // Appends may have reclaimed cold prefixes (the horizon counts
+        // them as capacity).
+        self.drain_prefix_evictions();
         self.index.advance(d);
 
         // ---- boundary / completion events.
@@ -1141,6 +1269,7 @@ impl<'a> ServeEngine<'a> {
 
         if freed_any {
             while self.try_resume_head() {}
+            self.debug_check_pool();
         }
         self.running = running;
         Step::Advanced
@@ -1152,7 +1281,10 @@ impl<'a> ServeEngine<'a> {
     /// index's block-offset histograms — O(block size + active owners)
     /// instead of an O(live) regather per probe.
     fn memory_horizon(&self, cap: u64) -> u64 {
-        let free = self.pool.free_blocks() as u64;
+        // Reclaimable (zero-ref cached prefix) blocks count as free:
+        // the append path evicts them on demand. Identical to hard
+        // free with the prefix cache off.
+        let free = self.pool.available_blocks() as u64;
         let quota = self.pool.quota_blocks();
         let (index, pool) = (&self.index, &self.pool);
         sched::max_fitting(cap, |d| {
@@ -1186,7 +1318,7 @@ impl<'a> ServeEngine<'a> {
             SimEvent::new(t_now, EventKind::MemoryEvent { free_blocks: free_now })
                 .load(live, kv)
         });
-        let pool_bound = self.index.pool_demand(1) > self.pool.free_blocks() as u64;
+        let pool_bound = self.index.pool_demand(1) > self.pool.available_blocks() as u64;
         let binding: Option<OwnerId> = if pool_bound || self.pool.quota_blocks().is_none() {
             None
         } else {
@@ -1275,6 +1407,7 @@ impl<'a> ServeEngine<'a> {
                 });
             }
         }
+        self.debug_check_pool();
     }
 
     /// Slim-SC similarity check within one request (thought level): pair
@@ -1368,12 +1501,31 @@ impl<'a> ServeEngine<'a> {
     /// KV with a prefill pass that stalls the engine.
     fn admit_resumed(&mut self, tid: usize) {
         let rid = self.traces[tid].rid;
-        let prefix = self.reqs[rid].q.prompt_tokens + self.traces[tid].st.generated as usize;
-        let ok = self.pool.allocate_seq(rid as OwnerId, tid as u64, prefix);
-        debug_assert!(ok, "resume_fits guaranteed the admission");
+        let prompt = self.reqs[rid].q.prompt_tokens;
+        let generated = self.traces[tid].st.generated as usize;
+        let prefix = prompt + generated;
+        // Shared resume: a registry hit restores the pinned span for
+        // free, so the recompute prefill covers only the private suffix
+        // (tail + generated); a miss re-pins and pays the full prefix.
+        // The plain path recomputes everything, as before.
+        let (prefill, resident) = if self.sim.cfg.prefix_cache {
+            let qid = self.reqs[rid].st.qid;
+            let share = self
+                .pool
+                .allocate_seq_shared(rid as OwnerId, tid as u64, qid, prompt, generated)
+                .expect("resume_fits guaranteed the admission");
+            let span = share.shared_blocks * self.sim.cfg.block_size;
+            self.note_prefix_share(qid, share);
+            self.drain_prefix_evictions();
+            (if share.hit { prefix - span } else { prefix }, prefix - span)
+        } else {
+            let ok = self.pool.allocate_seq(rid as OwnerId, tid as u64, prefix);
+            debug_assert!(ok, "resume_fits guaranteed the admission");
+            (prefix, prefix)
+        };
         self.reqs[rid].st.admitted(self.clock);
         self.counters.resumes += 1;
-        let dt = self.sim.profile.timing.prefill(prefix);
+        let dt = self.sim.profile.timing.prefill(prefill);
         self.clock += dt;
         // The resumed trace's own KV reconstruction counts as waiting
         // (paper: "resumed with KV cache reconstructed"): settle its
@@ -1384,11 +1536,12 @@ impl<'a> ServeEngine<'a> {
         let t = &mut self.traces[tid];
         sched::settle(&mut t.st, &mut t.last_settle, clock);
         t.st.status = TraceStatus::Running;
-        self.index_insert(tid, prefix);
+        self.index_insert(tid, resident);
         let ext = self.reqs[rid].st.rid;
         self.emit(|live, kv| {
             SimEvent::new(clock, EventKind::Resume).rid(ext).trace(tid).load(live, kv)
         });
+        self.debug_check_pool();
     }
 
     /// Final aggregation: voting + per-request SLO metrics, in
@@ -1584,6 +1737,124 @@ mod tests {
                 assert_eq!(x.chosen, y.chosen);
             }
         }
+    }
+
+    fn prefix_cfg(method: Method) -> ServeSimConfig {
+        let mut c = pressured_cfg(method);
+        c.prefix_cache = true;
+        c
+    }
+
+    #[test]
+    fn prefix_cache_shares_prompts_and_completes() {
+        for method in [Method::Sc, Method::Step] {
+            let r = run(&prefix_cfg(method));
+            assert_eq!(r.outcomes.len(), 3, "{method:?}");
+            // The N traces of each request share one prompt: the first
+            // admission pins it, the rest hit the registry.
+            assert!(r.counters.prefix_misses > 0, "{method:?}: someone pins");
+            assert!(r.counters.prefix_hits > 0, "{method:?}: siblings hit");
+            assert!(r.counters.prefix_saved_blocks > 0, "{method:?}");
+            for o in &r.outcomes {
+                assert!(o.latency_s > 0.0, "{method:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn prefix_cache_prunes_no_more_than_the_baseline() {
+        let base = run(&pressured_cfg(Method::Step));
+        let shared = run(&prefix_cfg(Method::Step));
+        // Shared prompts raise effective KV capacity, so memory events
+        // fire later and prune at most as much as the private baseline.
+        assert!(
+            shared.counters.pruned <= base.counters.pruned,
+            "shared {} > private {}",
+            shared.counters.pruned,
+            base.counters.pruned
+        );
+        assert!(base.counters.pruned > 0, "the baseline must be pressured");
+    }
+
+    #[test]
+    fn prefix_cache_off_leaves_counters_untouched() {
+        let a = run(&pressured_cfg(Method::Step));
+        assert_eq!(a.counters.prefix_hits, 0);
+        assert_eq!(a.counters.prefix_misses, 0);
+        assert_eq!(a.counters.prefix_saved_blocks, 0);
+        assert_eq!(a.counters.prefix_evictions, 0);
+    }
+
+    #[test]
+    fn prefix_cache_is_deterministic_given_seed() {
+        for method in [Method::Sc, Method::Step] {
+            let a = run(&prefix_cfg(method));
+            let b = run(&prefix_cfg(method));
+            assert_eq!(a.makespan_s, b.makespan_s, "{method:?}");
+            assert_eq!(a.counters.generated_tokens, b.counters.generated_tokens);
+            assert_eq!(a.counters.prefix_hits, b.counters.prefix_hits);
+            assert_eq!(a.counters.prefix_evictions, b.counters.prefix_evictions);
+            for (x, y) in a.outcomes.iter().zip(&b.outcomes) {
+                assert_eq!(x.latency_s, y.latency_s, "{method:?}");
+                assert_eq!(x.chosen, y.chosen);
+            }
+        }
+    }
+
+    #[test]
+    fn prefix_cache_respects_quotas() {
+        let mut cfg = prefix_cfg(Method::Step);
+        cfg.quota_frac = Some(0.4);
+        let r = run(&cfg);
+        assert_eq!(r.outcomes.len(), 3);
+        assert!(r.peak_used_blocks <= r.pool_blocks);
+        assert!(r.counters.prefix_hits > 0);
+    }
+
+    /// Drive a traced prefix-cache run and hold its event stream to the
+    /// pin conservation law: every `(qid)` pin alternates share → evict
+    /// with matching block counts, and hits only land on live pins —
+    /// shared blocks are freed exactly once.
+    #[test]
+    fn prefix_events_satisfy_the_pin_conservation_law() {
+        let cfg = prefix_cfg(Method::Step);
+        let gp = GenParams::default_d64();
+        let scorer = projection_scorer(&gp);
+        let gen = TraceGen::new(cfg.model, cfg.bench, gp, cfg.seed ^ 0x5EED);
+        let arrivals = cfg
+            .workload
+            .generate(gen.bench.n_questions, cfg.seed ^ 0xA331_4A11_D00D_FEED);
+        let mut eng = ServeEngine::new(&cfg, &gen, &scorer);
+        eng.set_recorder(Box::new(crate::obs::EventBuf::unbounded()));
+        let mut next = 0usize;
+        loop {
+            while next < arrivals.len() && arrivals[next].t_arrive <= eng.clock() {
+                eng.submit(&arrivals[next]);
+                next += 1;
+            }
+            if next < arrivals.len() {
+                if eng.is_idle() {
+                    eng.advance_idle_to(arrivals[next].t_arrive);
+                    continue;
+                }
+                eng.run_until(arrivals[next].t_arrive);
+            } else if !eng.run_one_event() {
+                break;
+            }
+        }
+        let events = eng.take_recorder().unwrap().drain();
+        let shares = events
+            .iter()
+            .filter(|e| matches!(e.kind, EventKind::PrefixShare { .. }))
+            .count();
+        let hits = events
+            .iter()
+            .filter(|e| matches!(e.kind, EventKind::PrefixHit { .. }))
+            .count();
+        assert!(shares > 0, "a pressured run must pin prompts");
+        assert!(hits > 0, "sibling traces must hit");
+        let report = crate::obs::replay::check(&events);
+        assert!(report.ok(), "pin law violated: {:?}", report.violations);
     }
 
     #[test]

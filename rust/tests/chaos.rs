@@ -250,6 +250,53 @@ fn explicit_revocations_drain_and_beat_shedding_everything() {
     );
 }
 
+/// Revocation while prompt prefixes are shared: a prefix-cache cluster
+/// under the explicit two-revocation schedule still conserves requests
+/// exactly once, records shared admissions (pins and sibling hits),
+/// satisfies the pin conservation law on the full event stream — every
+/// shared block pinned and freed exactly once, even on GPUs that
+/// drain, relocate their residents, and depart — and reruns
+/// byte-identically.
+#[test]
+fn revocation_while_prefixes_are_shared_conserves_pins() {
+    let schedule = step::sim::cluster::parse_fleet_events("25:0:revoke:15;40:1:revoke:15", 3, 2)
+        .expect("valid explicit spec");
+    let mut c = chaos_cfg(3, schedule, MigrationPolicy::OnShed);
+    c.prefix_cache = true;
+    c.affinity_weight = 0.5;
+    // Unbounded log: the replay checker needs the whole ledger, not the
+    // flight-recorder tail.
+    c.event_log = Some(0);
+    let r = run(&c);
+    let _flight = FlightRecorder::arm("revoke-while-shared", &r);
+    assert_eq!(r.counters.revocations, 2);
+    assert_eq!(
+        r.outcomes.len() as u64 + r.shed_rids.len() as u64,
+        r.counters.offered,
+        "exactly-once under revocation with shared prefixes"
+    );
+    assert!(r.engine_counters.prefix_misses > 0, "prompts were pinned");
+    assert!(r.engine_counters.prefix_hits > 0, "sibling traces shared the pins");
+    let report = step::obs::replay::check(&r.events);
+    assert!(report.ok(), "pin conservation violated: {:?}", report.violations);
+    assert_eq!(
+        report.counters.report(),
+        r.counters.report(),
+        "events do not replay the counters"
+    );
+    // Departed victims left nothing pinned behind them.
+    for e in &r.fleet_log {
+        if e.kind == FleetLogKind::Departed {
+            assert_eq!(e.residents_after, 0, "gpu {} departed with residents", e.gpu);
+        }
+    }
+    // Determinism: the chaos run reproduces byte-for-byte.
+    let r2 = run(&c);
+    assert_eq!(r.counters.report(), r2.counters.report());
+    assert_eq!(r.engine_counters.report(), r2.engine_counters.report());
+    assert_eq!(r.events, r2.events, "event stream is not reproducible");
+}
+
 /// The flight recorder actually records: under a revoking schedule the
 /// bounded ring is non-empty, stays within its per-lane budget, and
 /// carries the fleet-transition kinds a post-mortem needs.

@@ -374,6 +374,61 @@ fn chaos_schedule_cluster_is_thread_invariant() {
     assert_eq!(serial, fingerprint(&table6::run_migration_grid(&base, &gp, &sc)));
 }
 
+/// Prefix-cache clusters obey the determinism contract too: the
+/// affinity-weight sweep (no-cache baseline plus every weight, CoW
+/// sharing and affinity-credited routing live) is byte-identical
+/// across randomized `--threads` / `--step-threads` combinations, and
+/// a rerun reproduces it exactly. Registry pins, CoW forks, and
+/// evictions all happen inside per-GPU engines between interaction
+/// points, so parallel stepping gains no ordering freedom from them.
+#[test]
+fn prefix_affinity_grid_is_thread_invariant() {
+    use step::util::rng::Rng;
+    let gp = GenParams::default_d64();
+    let sc = projection_scorer(&gp);
+    let base = ClusterOpts {
+        gpus: 3,
+        model: ModelId::Phi4_14B,
+        bench: BenchId::Hmmt2425,
+        n_requests: 8,
+        clients: 4,
+        think_s: 15.0,
+        heavy_frac: 0.5,
+        n_traces: 4,
+        mem_util: 0.5,
+        router: step::sim::router::RouterKind::KvPressureSharded,
+        seed: 7,
+        threads: 1,
+        step_threads: 1,
+        ..Default::default()
+    };
+    let fingerprint = |cells: &[table6::AffinityCell]| -> String {
+        cells
+            .iter()
+            .map(|c| c.to_json().to_string_pretty())
+            .collect::<Vec<_>>()
+            .join("\n")
+    };
+    let serial = fingerprint(&table6::run_affinity_grid(&base, &gp, &sc));
+    let mut rng = Rng::new(0xAF51);
+    for _ in 0..3 {
+        let opts = ClusterOpts {
+            threads: 1 + rng.below(8),
+            step_threads: rng.below(9), // 0 = all cores
+            ..base.clone()
+        };
+        assert_eq!(
+            serial,
+            fingerprint(&table6::run_affinity_grid(&opts, &gp, &sc)),
+            "affinity grid differs at threads={} step_threads={}",
+            opts.threads,
+            opts.step_threads
+        );
+    }
+    // A rerun at the base settings reproduces the bytes too.
+    assert_eq!(serial, fingerprint(&table6::run_affinity_grid(&base, &gp, &sc)));
+}
+
 /// The serve-sim acceptance contract: `--threads 1` and `--threads 8`
 /// produce byte-identical BENCH_serving.json metric blocks. Threads only
 /// shard the (deterministic, single-threaded) per-method simulations.

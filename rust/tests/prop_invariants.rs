@@ -5,8 +5,10 @@
 
 use step::coordinator::voting::{majority_vote, weighted_vote, Vote};
 use step::kvcache::KvCacheManager;
+use step::obs::replay;
 use step::sim::cluster::{
-    ClusterConfig, ClusterSim, ClusterWorkload, GpuProfile, MigrationPolicy,
+    parse_fleet_events, ClusterConfig, ClusterSim, ClusterWorkload, GpuProfile,
+    MigrationPolicy,
 };
 use step::sim::des::{DesEngine, SimConfig};
 use step::sim::profiles::{BenchId, ModelId};
@@ -705,6 +707,146 @@ fn prop_migration_never_is_byte_identical_to_uniform_default() {
             assert_eq!(x.gen_tokens, y.gen_tokens);
             assert_eq!(x.chosen, y.chosen);
         }
+    });
+}
+
+#[test]
+fn prop_prefix_cache_off_is_byte_identical_to_default() {
+    // With the prefix cache off, the CoW/affinity plumbing must be
+    // provably inert: a config that only sets `affinity_weight` (cache
+    // still off) is byte-identical to the plain default cluster across
+    // random routers, methods, quotas, and engine-stepping thread
+    // counts, and records no prefix traffic.
+    let gp = GenParams::default_d64();
+    let scorer = proj_scorer(&gp);
+    use step::coordinator::method::Method;
+    forall("prefix-off-byte-identical", 6, |rng| {
+        let gpus = 1 + rng.below(3);
+        let n_requests = 3 + rng.below(4);
+        let mut plain = ClusterConfig::new(
+            gpus,
+            ModelId::Phi4_14B,
+            BenchId::Hmmt2425,
+            if rng.bernoulli(0.5) { Method::Step } else { Method::Sc },
+            2 + rng.below(3),
+            ClusterWorkload::Closed(ClosedLoopSpec::skewed(
+                1 + rng.below(3),
+                10.0 + rng.f64() * 30.0,
+                n_requests,
+                rng.f64(),
+            )),
+        );
+        plain.router = RouterKind::ALL[rng.below(RouterKind::ALL.len())];
+        plain.seed = rng.next_u64();
+        plain.mem_util = 0.5 + 0.1 * rng.below(4) as f64;
+        plain.admission.max_outstanding_per_gpu = 1 + rng.below(3);
+        plain.admission.queue_cap = rng.below(3);
+        plain.step_threads = 1 + rng.below(4);
+        let mut off = plain.clone();
+        off.prefix_cache = false;
+        off.affinity_weight = rng.f64() * 2.0;
+        let gen = TraceGen::new(plain.model, plain.bench, gp.clone(), rng.next_u64());
+        let a = ClusterSim::new(&plain, &gen, &scorer).run();
+        let b = ClusterSim::new(&off, &gen, &scorer).run();
+        assert_eq!(a.makespan_s, b.makespan_s);
+        assert_eq!(a.counters.report(), b.counters.report());
+        assert_eq!(a.engine_counters.report(), b.engine_counters.report());
+        assert_eq!(a.shed_rids, b.shed_rids);
+        assert_eq!(
+            b.engine_counters.prefix_hits + b.engine_counters.prefix_misses,
+            0,
+            "cache off must record no prefix traffic"
+        );
+        assert_eq!(a.outcomes.len(), b.outcomes.len());
+        for (x, y) in a.outcomes.iter().zip(&b.outcomes) {
+            assert_eq!(x.rid, y.rid);
+            assert_eq!(x.latency_s, y.latency_s);
+            assert_eq!(x.ttfv_s, y.ttfv_s);
+            assert_eq!(x.gen_tokens, y.gen_tokens);
+            assert_eq!(x.chosen, y.chosen);
+        }
+    });
+}
+
+#[test]
+fn prop_prefix_cache_conserves_pins_under_random_schedules() {
+    // Prefix-cache clusters under randomized routers, affinity weights,
+    // migration policies, quotas, and revoking fleet schedules: the
+    // event stream satisfies the pin conservation law (every shared
+    // block pinned and freed exactly once, hits only against live
+    // pins), counters replay byte-for-byte from events alone, prefix
+    // traffic is recorded whenever anything was placed, and the whole
+    // run is invariant across engine-stepping thread counts.
+    let gp = GenParams::default_d64();
+    let scorer = proj_scorer(&gp);
+    use step::coordinator::method::Method;
+    let policies = [
+        MigrationPolicy::Never,
+        MigrationPolicy::OnShed,
+        MigrationPolicy::OnPressure { ratio: 1.5 },
+    ];
+    forall("prefix-pin-conservation", 6, |rng| {
+        let gpus = 2 + rng.below(2);
+        let n_requests = 4 + rng.below(4);
+        let mut cfg = ClusterConfig::new(
+            gpus,
+            ModelId::Phi4_14B,
+            BenchId::Hmmt2425,
+            Method::Step,
+            3 + rng.below(3),
+            ClusterWorkload::Closed(ClosedLoopSpec::skewed(
+                2 + rng.below(3),
+                5.0 + rng.f64() * 30.0,
+                n_requests,
+                rng.f64(),
+            )),
+        );
+        cfg.prefix_cache = true;
+        cfg.affinity_weight = [0.0, 0.25, 0.5][rng.below(3)];
+        cfg.router = if rng.bernoulli(0.5) {
+            RouterKind::KvPressure
+        } else {
+            RouterKind::KvPressureSharded
+        };
+        cfg.seed = rng.next_u64();
+        cfg.mem_util = 0.45 + 0.05 * rng.below(4) as f64;
+        cfg.migration = policies[rng.below(3)];
+        cfg.admission.max_outstanding_per_gpu = 1 + rng.below(3);
+        cfg.event_log = Some(0);
+        cfg.step_threads = 1 + rng.below(4);
+        if rng.bernoulli(0.5) {
+            cfg.standby = 1;
+            cfg.fleet_events =
+                parse_fleet_events("30:0:revoke:10", gpus, 1).expect("valid fleet spec");
+        }
+        let gen = TraceGen::new(cfg.model, cfg.bench, gp.clone(), rng.next_u64());
+        let r = ClusterSim::new(&cfg, &gen, &scorer).run();
+
+        let report = replay::check(&r.events);
+        assert!(report.ok(), "pin conservation violated: {:?}", report.violations);
+        assert_eq!(
+            report.counters.report(),
+            r.counters.report(),
+            "events do not replay the counters"
+        );
+        let ec = &r.engine_counters;
+        if r.counters.placed > 0 {
+            assert!(ec.prefix_misses > 0, "a placed request pins its prompt");
+        }
+        assert!(
+            ec.prefix_evictions <= ec.prefix_misses,
+            "each eviction retires an entry pinned by exactly one miss"
+        );
+
+        // Thread invariance: a different step-thread count reproduces
+        // the run exactly, events and all.
+        let mut threaded = cfg.clone();
+        threaded.step_threads = cfg.step_threads % 4 + 1;
+        let r2 = ClusterSim::new(&threaded, &gen, &scorer).run();
+        assert_eq!(r.counters.report(), r2.counters.report());
+        assert_eq!(r.engine_counters.report(), r2.engine_counters.report());
+        assert_eq!(r.makespan_s, r2.makespan_s);
+        assert_eq!(r.events, r2.events, "merged event stream is not canonical");
     });
 }
 

@@ -114,6 +114,51 @@ fn replayed_counters_match_the_run_byte_for_byte() {
     }
 }
 
+/// A prefix-cache run is a first-class citizen of the ledger: the
+/// stream carries `prefix-share` / `prefix-hit` / `prefix-evict`
+/// events, the pin conservation law holds (every shared block pinned
+/// and freed exactly once, hits only against live pins) even while the
+/// fleet revokes a GPU mid-share, the counters replay byte-for-byte,
+/// and the merged stream is canonical across step-thread counts.
+#[test]
+fn prefix_cache_traced_run_replays_and_conserves_pins() {
+    let mut canonical: Option<ClusterResult> = None;
+    for step_threads in [1usize, 2] {
+        let mut c = cfg(13, MigrationPolicy::OnShed, "30:0:revoke:10");
+        c.prefix_cache = true;
+        c.affinity_weight = 0.5;
+        c.event_log = Some(0);
+        c.step_threads = step_threads;
+        let r = run(&c);
+        assert!(
+            r.events.iter().any(|e| e.kind.name() == "prefix-share"),
+            "shared admissions must be traced"
+        );
+        assert!(
+            r.events.iter().any(|e| e.kind.name() == "prefix-hit"),
+            "sibling traces of one question must hit the registry"
+        );
+        let report = replay::check(&r.events);
+        assert!(report.ok(), "step_threads={step_threads}: {:?}", report.violations);
+        assert_eq!(
+            report.counters.report(),
+            r.counters.report(),
+            "step_threads={step_threads}: events do not replay the counters"
+        );
+        match &canonical {
+            None => canonical = Some(r),
+            Some(first) => {
+                assert_eq!(
+                    to_jsonl(&r.events, &[]),
+                    to_jsonl(&first.events, &[]),
+                    "step_threads={step_threads}: merged stream is not canonical"
+                );
+                assert_eq!(r.counters.report(), first.counters.report());
+            }
+        }
+    }
+}
+
 /// `--trace-out` output round-trips: serialize, parse, same events;
 /// a kind filter keeps exactly what it names.
 #[test]
