@@ -31,17 +31,28 @@
 //! `prefix_hit_rate` / `prefix_saved_blocks` / `prefix_p99_ratio` /
 //! `prefix_off_identical` for the bench gate.
 //!
+//! A signal Pareto grid then races every pruning signal (hidden-mlp /
+//! latent-temporal / confidence / prm-oracle) × pruning method ×
+//! memory pressure on the same workload, asserting hidden-mlp STEP
+//! accuracy does not fall below intrinsic confidence at the matched
+//! load, and that an explicit `--signal hidden-mlp` run stays
+//! byte-identical to the default cell — recording `signal_pareto` /
+//! `signal_acc_hidden_mlp` / `signal_acc_confidence` /
+//! `signal_default_identical` for the bench gate.
+//!
 //! Runs self-contained on the built-in generator defaults (no artifacts
 //! needed), so CI and fresh checkouts can benchmark the cluster layer.
 
 use std::time::Instant;
 
 use step::coordinator::method::Method;
+use step::coordinator::signal::SignalSpec;
 use step::harness::cells::projection_scorer;
 use step::harness::table6::{
-    attach_affinity_grid, attach_migration_grid, cells_fingerprint, config_json,
-    elasticity_schedule, metrics_json, run_affinity_grid, run_cell, run_grids,
-    run_migration_grid, run_traced_cell, AffinityCell, ClusterOpts,
+    attach_affinity_grid, attach_migration_grid, attach_signal_grid, cells_fingerprint,
+    config_json, elasticity_schedule, metrics_json, run_affinity_grid, run_cell, run_grids,
+    run_migration_grid, run_signal_grid, run_traced_cell, signal_step_acc, AffinityCell,
+    ClusterOpts,
 };
 use step::harness::write_results;
 use step::sim::cluster::{GpuProfile, MigrationPolicy};
@@ -506,9 +517,58 @@ fn main() {
     );
     println!("  prefix: cache-off == default (byte-identical metric row)");
 
+    // ---- signal Pareto grid: every pruning signal × pruning method ×
+    // memory pressure on the skewed closed loop. Feeds the
+    // `signal_pareto` gates: hidden states must not rank below
+    // intrinsic confidence on STEP accuracy (same workload, same
+    // memory events — only the victim selection differs), and an
+    // explicit `--signal hidden-mlp` run must stay byte-identical to
+    // the default cell (the trait-refactor identity contract).
+    let t7 = Instant::now();
+    let pareto = run_signal_grid(&opts, &gp, &scorer);
+    let pareto_s = t7.elapsed().as_secs_f64();
+    println!("signal pareto grid: {pareto_s:.2}s");
+    for c in &pareto {
+        println!(
+            "  {:>28}: acc={:.1}%  p99={:.1}s  pruned={}  scores={}  prune/step={:.4}",
+            c.label, c.acc, c.p99_s, c.pruned, c.step_scores, c.pruned_step_frac,
+        );
+    }
+    let signal_acc_hidden_mlp = signal_step_acc(&pareto, "hidden-mlp");
+    let signal_acc_confidence = signal_step_acc(&pareto, "confidence");
+    assert!(
+        signal_acc_hidden_mlp >= signal_acc_confidence,
+        "hidden-mlp STEP accuracy must not fall below confidence \
+         ({signal_acc_hidden_mlp} vs {signal_acc_confidence})"
+    );
+    println!(
+        "  signal: STEP acc hidden-mlp {signal_acc_hidden_mlp:.1}% >= confidence \
+         {signal_acc_confidence:.1}% (hidden states beat intrinsic confidence)"
+    );
+    let explicit_opts = ClusterOpts {
+        signal: SignalSpec::parse("hidden-mlp").expect("the default signal parses"),
+        ..opts.clone()
+    };
+    let explicit_cell = run_cell(
+        Method::Step,
+        explicit_opts.router,
+        Method::Step.name(),
+        &gp,
+        &scorer,
+        &explicit_opts,
+    );
+    let signal_default_identical = cells_fingerprint(std::slice::from_ref(&untraced_cell))
+        == cells_fingerprint(std::slice::from_ref(&explicit_cell));
+    assert!(
+        signal_default_identical,
+        "--signal hidden-mlp must stay byte-identical to the default cell"
+    );
+    println!("  signal: explicit hidden-mlp == default (byte-identical metric row)");
+
     let mut report = metrics_json(&opts, &m_serial, &r_serial);
     attach_migration_grid(&mut report, &mig_opts, &migration);
     attach_affinity_grid(&mut report, &opts, &affinity);
+    attach_signal_grid(&mut report, &opts, &pareto);
     if let Json::Obj(map) = &mut report {
         map.insert("bench_serial_s".to_string(), Json::Num(serial_s));
         map.insert("bench_parallel_s".to_string(), Json::Num(parallel_s));
@@ -551,6 +611,13 @@ fn main() {
         );
         map.insert("prefix_p99_ratio".to_string(), Json::Num(prefix_p99_ratio));
         map.insert("prefix_off_identical".to_string(), Json::Bool(prefix_off_identical));
+        // Signal-grid identity witness: an explicit `--signal
+        // hidden-mlp` run byte-identical to the default STEP cell (the
+        // accuracy comparison fields ride in via attach_signal_grid).
+        map.insert(
+            "signal_default_identical".to_string(),
+            Json::Bool(signal_default_identical),
+        );
     }
     let path = write_results("BENCH_cluster", &report).expect("writing BENCH_cluster.json");
     println!("wrote {path:?}");

@@ -30,28 +30,27 @@ fn main() {
     let w2: Vec<f32> = (0..hidden).map(|_| rng.normal() as f32 * 0.05).collect();
     let scorer = StepScorer::new(d, hidden, w1, b1, w2, 0.0).unwrap();
     let h: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
-    b.run_with_items("scorer/score_one(d=64,h=512)", 1.0, || scorer.score(black_box(&h)));
+    let mut one_z = vec![0.0f32; hidden];
+    b.run_with_items("scorer/score_one(d=64,h=512)", 1.0, || {
+        scorer.score_into(black_box(&h), &mut one_z)
+    });
 
     let batch: Vec<Vec<f32>> = (0..64)
         .map(|_| (0..d).map(|_| rng.normal() as f32).collect())
         .collect();
+    let (mut fused_out, mut fused_z) = (Vec::new(), Vec::new());
     b.run_with_items("scorer/score_batch_fused(64)", 64.0, || {
-        scorer.score_batch(black_box(&batch))
+        scorer.score_batch_into(black_box(&batch), &mut fused_out, &mut fused_z);
+        fused_out.len()
     });
     // Pre-tiling reference path: one independent matvec per input, the
     // w1 matrix streamed from memory 64 times instead of 8.
+    let mut naive_z = vec![0.0f32; hidden];
     b.run_with_items("scorer/score_batch_naive(64)", 64.0, || {
-        let out: Vec<f32> = black_box(&batch).iter().map(|h| scorer.score(h)).collect();
+        let out: Vec<f32> =
+            black_box(&batch).iter().map(|h| scorer.score_into(h, &mut naive_z)).collect();
         out
     });
-    // Allocation-free variant: persistent output + activation scratch.
-    let mut batch_out: Vec<f32> = Vec::with_capacity(64);
-    let mut batch_z: Vec<f32> = Vec::new();
-    b.run_with_items("scorer/score_batch_into(64)", 64.0, || {
-        scorer.score_batch_into(black_box(&batch), &mut batch_out, &mut batch_z);
-        batch_out.len()
-    });
-
     // ---- paged KV allocator.
     b.run_with_items("kvcache/alloc_free_seq(32k tokens)", 2000.0, || {
         let mut m = KvCacheManager::new(4096, 16);

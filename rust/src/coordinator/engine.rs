@@ -294,10 +294,12 @@ impl ServeEngine {
                 traces[lane].push_score(scores[slot] as f64);
                 // Cross-check the HLO scorer against the native MLP (the
                 // two must agree; debug builds verify).
-                debug_assert!(
-                    (scores[slot] - self.scorer_native.score(&hidden[lane])).abs()
+                debug_assert!({
+                    let mut z = vec![0.0f32; self.scorer_native.hidden];
+                    (scores[slot] - self.scorer_native.score_into(&hidden[lane], &mut z))
+                        .abs()
                         < 1e-3
-                );
+                });
             }
 
             // Advance lanes.

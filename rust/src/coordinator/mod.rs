@@ -10,5 +10,6 @@ pub mod engine;
 pub mod method;
 pub mod request;
 pub mod scorer;
+pub mod signal;
 pub mod trace;
 pub mod voting;

@@ -61,6 +61,10 @@ impl StepScorer {
     }
 
     /// Score one hidden state -> correctness probability.
+    #[deprecated(
+        note = "allocates per call; use `score_into` with caller scratch \
+                (or the `coordinator::signal::TraceSignal` trait)"
+    )]
     pub fn score(&self, h: &[f32]) -> f32 {
         let mut z = vec![0.0f32; self.hidden];
         self.score_into(h, &mut z)
@@ -109,6 +113,10 @@ impl StepScorer {
     /// ReLU fused into the activation init / final reduction. Arithmetic
     /// order per element is identical to [`StepScorer::score`], so the
     /// batched path is bit-exact with the one-at-a-time path.
+    #[deprecated(
+        note = "allocates per call; use `score_batch_into` with caller buffers \
+                (or the `coordinator::signal::TraceSignal` trait)"
+    )]
     pub fn score_batch(&self, hs: &[Vec<f32>]) -> Vec<f32> {
         let mut out = Vec::with_capacity(hs.len());
         let mut z = Vec::new();
@@ -181,6 +189,20 @@ pub fn sigmoid(x: f32) -> f32 {
 mod tests {
     use super::*;
 
+    /// The non-deprecated singular path with throwaway scratch.
+    fn score1(s: &StepScorer, h: &[f32]) -> f32 {
+        let mut z = vec![0.0f32; s.hidden];
+        s.score_into(h, &mut z)
+    }
+
+    /// The non-deprecated batch path with throwaway buffers.
+    fn batch(s: &StepScorer, hs: &[Vec<f32>]) -> Vec<f32> {
+        let mut out = Vec::new();
+        let mut z = Vec::new();
+        s.score_batch_into(hs, &mut out, &mut z);
+        out
+    }
+
     fn tiny() -> StepScorer {
         // d=2, hidden=2: z = relu([h0+h1, h0-h1]), logit = z0 - 0.5 z1.
         StepScorer::new(
@@ -198,9 +220,9 @@ mod tests {
     fn matches_hand_computation() {
         let s = tiny();
         // h = [1, 2]: z = relu([3, -1]) = [3, 0], logit = 3.
-        assert!((s.score(&[1.0, 2.0]) - sigmoid(3.0)).abs() < 1e-6);
+        assert!((score1(&s, &[1.0, 2.0]) - sigmoid(3.0)).abs() < 1e-6);
         // h = [2, 1]: z = [3, 1], logit = 3 - 0.5 = 2.5.
-        assert!((s.score(&[2.0, 1.0]) - sigmoid(2.5)).abs() < 1e-6);
+        assert!((score1(&s, &[2.0, 1.0]) - sigmoid(2.5)).abs() < 1e-6);
     }
 
     #[test]
@@ -217,16 +239,16 @@ mod tests {
         )
         .unwrap();
         let s = StepScorer::from_json(&blob).unwrap();
-        assert!((s.score(&[1.0, 2.0]) - tiny().score(&[1.0, 2.0])).abs() < 1e-7);
+        assert!((score1(&s, &[1.0, 2.0]) - score1(&tiny(), &[1.0, 2.0])).abs() < 1e-7);
     }
 
     #[test]
     fn batch_matches_single() {
         let s = tiny();
         let hs = vec![vec![1.0, 2.0], vec![2.0, 1.0], vec![-1.0, -1.0]];
-        let batch = s.score_batch(&hs);
+        let batch = batch(&s, &hs);
         for (h, &b) in hs.iter().zip(&batch) {
-            assert_eq!(s.score(h), b);
+            assert_eq!(score1(&s, h), b);
         }
     }
 
@@ -246,10 +268,10 @@ mod tests {
         let hs: Vec<Vec<f32>> = (0..19)
             .map(|i| (0..3).map(|j| ((i * 3 + j) as f32 * 0.61).cos()).collect())
             .collect();
-        let batch = s.score_batch(&hs);
+        let batch = batch(&s, &hs);
         assert_eq!(batch.len(), 19);
         for (h, &b) in hs.iter().zip(&batch) {
-            assert_eq!(s.score(h), b, "batched path must be bit-exact");
+            assert_eq!(score1(&s, h), b, "batched path must be bit-exact");
         }
     }
 
@@ -257,7 +279,7 @@ mod tests {
     fn probability_range() {
         let s = tiny();
         for h in [[-100.0, 0.0], [100.0, 100.0], [0.0, 0.0]] {
-            let p = s.score(&h);
+            let p = score1(&s, &h);
             assert!((0.0..=1.0).contains(&p));
         }
     }

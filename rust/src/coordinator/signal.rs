@@ -1,0 +1,634 @@
+//! Pluggable pruning signals: the `TraceSignal` trait and the signal
+//! zoo raced by the serving/cluster harnesses.
+//!
+//! The paper's claim is that *hidden states* are the right early signal
+//! for step-level trace pruning. This module makes that claim testable:
+//! every engine scores step boundaries through the object-safe
+//! [`TraceSignal`] trait, and the trained MLP ([`HiddenMlpSignal`],
+//! wrapping [`StepScorer`]) is just the default implementation —
+//! byte-identical to the pre-trait hot path, locked by
+//! `tests/signal_differential.rs`. Rivals implemented against the same
+//! simulated hidden states:
+//!
+//! * [`LatentTemporalSignal`] — EWMA + slope over the hidden-state
+//!   trajectory's projection onto the signal direction (à la *Tracing
+//!   the Traces*, arXiv:2510.10494);
+//! * [`ConfidenceSignal`] — intrinsic token-confidence gating, no
+//!   hidden states at all (à la *Guided by Gut*, arXiv:2505.20325);
+//! * [`PrmOracleSignal`] — the simulated process-reward-model score, a
+//!   full-trace verifier upper bound (paper Table 2's PRM baseline).
+//!
+//! **Determinism rules for signal authors.** A signal is a pure
+//! function of the [`StepCtx`] it is handed: no interior mutability, no
+//! RNG of its own, no clocks — all per-call state lives in the
+//! caller-owned [`SignalScratch`], and reusing one scratch across calls
+//! must not change any output bit (`scratch_reuse_is_pure` below).
+//! Signals must be `Send + Sync` (cluster engines step in parallel
+//! sharing the per-GPU signal boxes) and cheaply cloneable through
+//! [`TraceSignal::clone_box`] so every per-GPU engine owns an
+//! independent instance.
+//!
+//! Selection is a parsed [`SignalSpec`] (`--signal NAME[:PARAM=V,...]`
+//! on `serve-sim` / `cluster-sim`), threaded through `SimConfig` /
+//! `ServeSimConfig` / `ClusterConfig` and stamped into step-score and
+//! prune [`crate::obs::SimEvent`]s so `step trace-check` attributes
+//! prunes per signal.
+
+use std::fmt::Debug;
+
+use crate::coordinator::scorer::{sigmoid, StepScorer};
+use crate::sim::tracegen::{Question, TraceGen, TraceSpec};
+
+/// Everything a signal may look at when scoring one step boundary:
+/// the deterministic trace generator (the simulated model), the
+/// question, the trace, and the 1-based boundary index.
+#[derive(Debug, Clone, Copy)]
+pub struct StepCtx<'a> {
+    /// The trace generator (hidden states, confidences, PRM scores).
+    pub gen: &'a TraceGen,
+    /// Question the trace answers.
+    pub q: &'a Question,
+    /// The trace being scored.
+    pub spec: &'a TraceSpec,
+    /// 1-based step-boundary index (`1..=spec.n_steps()`).
+    pub step_n: usize,
+}
+
+/// Caller-owned scratch for [`TraceSignal`] calls: hidden-state and
+/// activation buffers, resized on demand and reused across calls. All
+/// mutable per-call state lives here — signals themselves hold only
+/// immutable parameters.
+#[derive(Debug, Default, Clone)]
+pub struct SignalScratch {
+    /// Hidden-state buffer (`gen.gen.d` wide once warm).
+    pub h: Vec<f32>,
+    /// MLP activation buffer (`scorer.hidden` wide once warm).
+    pub z: Vec<f32>,
+}
+
+impl SignalScratch {
+    /// Empty scratch; buffers warm up on first use.
+    pub fn new() -> SignalScratch {
+        SignalScratch::default()
+    }
+}
+
+/// One pruning signal: a pure scoring policy over step boundaries.
+///
+/// Object-safe so engines hold `Box<dyn TraceSignal>`; `Send + Sync`
+/// because the cluster steps per-GPU engines in parallel. See the
+/// module docs for the determinism rules implementations must obey.
+pub trait TraceSignal: Debug + Send + Sync {
+    /// The signal's canonical name (the `--signal` vocabulary, event
+    /// stamps, and Pareto-grid labels).
+    fn name(&self) -> &'static str;
+
+    /// Score one step boundary → a pruning score in higher-is-better
+    /// orientation (the engines prune the argmin aggregate).
+    fn score_step(&self, ctx: &StepCtx<'_>, scratch: &mut SignalScratch) -> f32;
+
+    /// Fused batch entry point: score each context in order into `out`
+    /// (cleared first). The default loops [`score_step`]
+    /// (Self::score_step); implementations may override with a fused
+    /// kernel, but must stay bit-identical to the singular path.
+    fn score_batch_into(
+        &self,
+        ctxs: &[StepCtx<'_>],
+        scratch: &mut SignalScratch,
+        out: &mut Vec<f32>,
+    ) {
+        out.clear();
+        for ctx in ctxs {
+            out.push(self.score_step(ctx, scratch));
+        }
+    }
+
+    /// Cheap clone into a fresh box, so per-GPU engines own independent
+    /// instances built from one parsed spec.
+    fn clone_box(&self) -> Box<dyn TraceSignal>;
+}
+
+impl Clone for Box<dyn TraceSignal> {
+    fn clone(&self) -> Self {
+        self.clone_box()
+    }
+}
+
+/// The paper's signal: the trained 2-layer MLP over the step-boundary
+/// hidden state. This is the default and is byte-identical to the
+/// pre-trait hot path (`hidden_state_into` → `score_into`).
+#[derive(Debug, Clone)]
+pub struct HiddenMlpSignal {
+    /// The wrapped MLP.
+    pub scorer: StepScorer,
+}
+
+impl TraceSignal for HiddenMlpSignal {
+    fn name(&self) -> &'static str {
+        "hidden-mlp"
+    }
+
+    fn score_step(&self, ctx: &StepCtx<'_>, scratch: &mut SignalScratch) -> f32 {
+        scratch.h.resize(ctx.gen.gen.d, 0.0);
+        scratch.z.resize(self.scorer.hidden, 0.0);
+        ctx.gen.hidden_state_into(ctx.q, ctx.spec, ctx.step_n, &mut scratch.h);
+        self.scorer.score_into(&scratch.h, &mut scratch.z)
+    }
+
+    fn clone_box(&self) -> Box<dyn TraceSignal> {
+        Box::new(self.clone())
+    }
+}
+
+/// Latent-temporal signal (à la arXiv:2510.10494): project the
+/// hidden-state trajectory of the last `window` boundaries onto the
+/// generator's signal direction, then squash an EWMA of the projections
+/// plus a slope term. Trend-following: a trace whose latent quality is
+/// still climbing scores above one that plateaued at the same level.
+#[derive(Debug, Clone)]
+pub struct LatentTemporalSignal {
+    /// EWMA decay per step (weight on the newest projection).
+    pub lambda: f64,
+    /// Weight on the first-to-last slope of the window.
+    pub slope: f64,
+    /// Trajectory window (boundaries recomputed per call).
+    pub window: usize,
+}
+
+impl LatentTemporalSignal {
+    /// Projection of boundary `n`'s hidden state onto the signal
+    /// direction, via the scratch hidden-state buffer.
+    fn proj(&self, ctx: &StepCtx<'_>, n: usize, scratch: &mut SignalScratch) -> f64 {
+        ctx.gen.hidden_state_into(ctx.q, ctx.spec, n, &mut scratch.h);
+        scratch
+            .h
+            .iter()
+            .zip(&ctx.gen.gen.signal_dir)
+            .map(|(&hi, &di)| hi as f64 * di as f64)
+            .sum()
+    }
+}
+
+impl TraceSignal for LatentTemporalSignal {
+    fn name(&self) -> &'static str {
+        "latent-temporal"
+    }
+
+    fn score_step(&self, ctx: &StepCtx<'_>, scratch: &mut SignalScratch) -> f32 {
+        scratch.h.resize(ctx.gen.gen.d, 0.0);
+        let n = ctx.step_n;
+        let first = n.saturating_sub(self.window.max(1) - 1).max(1);
+        let p0 = self.proj(ctx, first, scratch);
+        let mut ewma = p0;
+        let mut last = p0;
+        for k in (first + 1)..=n {
+            last = self.proj(ctx, k, scratch);
+            ewma = self.lambda * last + (1.0 - self.lambda) * ewma;
+        }
+        let span = (n - first).max(1) as f64;
+        let slope = (last - p0) / span;
+        sigmoid((ewma + self.slope * slope) as f32)
+    }
+
+    fn clone_box(&self) -> Box<dyn TraceSignal> {
+        Box::new(self.clone())
+    }
+}
+
+/// Intrinsic-confidence signal (à la arXiv:2505.20325): the simulated
+/// mean token confidence of the step, optionally sharpened by `gamma`.
+/// Needs no hidden states at all — the cheap rival the Pareto grid
+/// races the MLP against.
+#[derive(Debug, Clone)]
+pub struct ConfidenceSignal {
+    /// Sharpening exponent on the confidence (1 = raw).
+    pub gamma: f64,
+}
+
+impl TraceSignal for ConfidenceSignal {
+    fn name(&self) -> &'static str {
+        "confidence"
+    }
+
+    fn score_step(&self, ctx: &StepCtx<'_>, _scratch: &mut SignalScratch) -> f32 {
+        ctx.gen.step_confidence(ctx.spec, ctx.step_n).powf(self.gamma) as f32
+    }
+
+    fn clone_box(&self) -> Box<dyn TraceSignal> {
+        Box::new(self.clone())
+    }
+}
+
+/// PRM-oracle upper bound: the simulated full-trace process-reward
+/// score, identical at every boundary of one trace. What a perfect(er)
+/// whole-trace verifier would buy if it were free at step granularity.
+#[derive(Debug, Clone)]
+pub struct PrmOracleSignal;
+
+impl TraceSignal for PrmOracleSignal {
+    fn name(&self) -> &'static str {
+        "prm-oracle"
+    }
+
+    fn score_step(&self, ctx: &StepCtx<'_>, _scratch: &mut SignalScratch) -> f32 {
+        ctx.gen.prm_score(ctx.spec) as f32
+    }
+
+    fn clone_box(&self) -> Box<dyn TraceSignal> {
+        Box::new(self.clone())
+    }
+}
+
+/// The signal families the zoo knows, in [`SIGNAL_NAMES`] order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SignalKind {
+    /// The paper's trained MLP over hidden states (the default).
+    HiddenMlp,
+    /// EWMA/slope over the hidden-state trajectory.
+    LatentTemporal,
+    /// Intrinsic token-confidence gating.
+    Confidence,
+    /// Full-trace PRM score (oracle upper bound).
+    PrmOracle,
+}
+
+/// Every signal's canonical name, in [`SignalKind`] order — the
+/// `--signal` vocabulary and the event-stamp intern table.
+pub const SIGNAL_NAMES: &[&str] =
+    &["hidden-mlp", "latent-temporal", "confidence", "prm-oracle"];
+
+impl SignalKind {
+    /// The canonical name (stable; `--signal`, event stamps, labels).
+    pub fn name(&self) -> &'static str {
+        match self {
+            SignalKind::HiddenMlp => "hidden-mlp",
+            SignalKind::LatentTemporal => "latent-temporal",
+            SignalKind::Confidence => "confidence",
+            SignalKind::PrmOracle => "prm-oracle",
+        }
+    }
+}
+
+/// A parsed `--signal NAME[:PARAM=V,...]` selection: which signal plus
+/// its parameters, with defaults matching the zoo's tuned values.
+/// `Default` is the paper's `hidden-mlp`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SignalSpec {
+    /// Which signal family.
+    pub kind: SignalKind,
+    /// `latent-temporal` EWMA decay (`lambda`, in (0, 1]).
+    pub lambda: f64,
+    /// `latent-temporal` slope weight (`slope`).
+    pub slope: f64,
+    /// `latent-temporal` trajectory window (`window`, >= 1).
+    pub window: usize,
+    /// `confidence` sharpening exponent (`gamma`, > 0).
+    pub gamma: f64,
+}
+
+impl Default for SignalSpec {
+    fn default() -> Self {
+        SignalSpec {
+            kind: SignalKind::HiddenMlp,
+            lambda: 0.6,
+            slope: 4.0,
+            window: 8,
+            gamma: 1.0,
+        }
+    }
+}
+
+impl SignalSpec {
+    /// Parse `NAME[:PARAM=V,...]`. Unknown names list the vocabulary;
+    /// a parameter that does not apply to the named signal (or fails
+    /// to parse / violates its range) is rejected by name.
+    pub fn parse(s: &str) -> Result<SignalSpec, String> {
+        let (name, params) = match s.split_once(':') {
+            Some((n, p)) => (n, Some(p)),
+            None => (s, None),
+        };
+        let kind = match name {
+            "hidden-mlp" => SignalKind::HiddenMlp,
+            "latent-temporal" => SignalKind::LatentTemporal,
+            "confidence" => SignalKind::Confidence,
+            "prm-oracle" => SignalKind::PrmOracle,
+            other => {
+                return Err(format!(
+                    "unknown signal '{other}' (expected one of: {})",
+                    SIGNAL_NAMES.join(", ")
+                ))
+            }
+        };
+        let mut spec = SignalSpec { kind, ..SignalSpec::default() };
+        let Some(params) = params else { return Ok(spec) };
+        for kv in params.split(',').filter(|kv| !kv.is_empty()) {
+            let (key, val) = kv
+                .split_once('=')
+                .ok_or_else(|| format!("signal param '{kv}' is not PARAM=V"))?;
+            let f = || -> Result<f64, String> {
+                val.parse::<f64>()
+                    .map_err(|e| format!("signal param '{key}': bad value '{val}': {e}"))
+            };
+            match (kind, key) {
+                (SignalKind::LatentTemporal, "lambda") => {
+                    spec.lambda = f()?;
+                    if !(spec.lambda > 0.0 && spec.lambda <= 1.0) {
+                        return Err(format!(
+                            "signal param 'lambda' must be in (0, 1], got {val}"
+                        ));
+                    }
+                }
+                (SignalKind::LatentTemporal, "slope") => spec.slope = f()?,
+                (SignalKind::LatentTemporal, "window") => {
+                    spec.window = val.parse::<usize>().map_err(|e| {
+                        format!("signal param 'window': bad value '{val}': {e}")
+                    })?;
+                    if spec.window == 0 {
+                        return Err("signal param 'window' must be >= 1".to_string());
+                    }
+                }
+                (SignalKind::Confidence, "gamma") => {
+                    spec.gamma = f()?;
+                    if spec.gamma <= 0.0 {
+                        return Err(format!(
+                            "signal param 'gamma' must be > 0, got {val}"
+                        ));
+                    }
+                }
+                (_, other) => {
+                    return Err(format!(
+                        "signal param '{other}' does not apply to '{}'",
+                        kind.name()
+                    ))
+                }
+            }
+        }
+        Ok(spec)
+    }
+
+    /// The selected signal's canonical name.
+    pub fn name(&self) -> &'static str {
+        self.kind.name()
+    }
+
+    /// Render back to `NAME[:PARAM=V,...]` form (non-default params
+    /// only) — the config-block serialization.
+    pub fn spec_string(&self) -> String {
+        let d = SignalSpec::default();
+        let mut params: Vec<String> = Vec::new();
+        match self.kind {
+            SignalKind::LatentTemporal => {
+                if self.lambda != d.lambda {
+                    params.push(format!("lambda={}", self.lambda));
+                }
+                if self.slope != d.slope {
+                    params.push(format!("slope={}", self.slope));
+                }
+                if self.window != d.window {
+                    params.push(format!("window={}", self.window));
+                }
+            }
+            SignalKind::Confidence => {
+                if self.gamma != d.gamma {
+                    params.push(format!("gamma={}", self.gamma));
+                }
+            }
+            _ => {}
+        }
+        if params.is_empty() {
+            self.name().to_string()
+        } else {
+            format!("{}:{}", self.name(), params.join(","))
+        }
+    }
+
+    /// Build the signal instance. `hidden-mlp` clones the engine's
+    /// scorer; the rivals ignore it.
+    pub fn build(&self, scorer: &StepScorer) -> Box<dyn TraceSignal> {
+        match self.kind {
+            SignalKind::HiddenMlp => {
+                Box::new(HiddenMlpSignal { scorer: scorer.clone() })
+            }
+            SignalKind::LatentTemporal => Box::new(LatentTemporalSignal {
+                lambda: self.lambda,
+                slope: self.slope,
+                window: self.window,
+            }),
+            SignalKind::Confidence => Box::new(ConfidenceSignal { gamma: self.gamma }),
+            SignalKind::PrmOracle => Box::new(PrmOracleSignal),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::profiles::{BenchId, ModelId};
+    use crate::sim::tracegen::GenParams;
+
+    fn gen() -> TraceGen {
+        TraceGen::new(ModelId::Qwen3_4B, BenchId::Aime25, GenParams::default_d64(), 42)
+    }
+
+    fn mlp() -> StepScorer {
+        crate::harness::cells::projection_scorer(&GenParams::default_d64())
+    }
+
+    fn all_signals() -> Vec<Box<dyn TraceSignal>> {
+        let scorer = mlp();
+        SIGNAL_NAMES
+            .iter()
+            .map(|n| SignalSpec::parse(n).unwrap().build(&scorer))
+            .collect()
+    }
+
+    #[test]
+    fn parse_accepts_names_and_params() {
+        assert_eq!(SignalSpec::parse("hidden-mlp").unwrap(), SignalSpec::default());
+        let lt = SignalSpec::parse("latent-temporal:lambda=0.5,window=4").unwrap();
+        assert_eq!(lt.kind, SignalKind::LatentTemporal);
+        assert_eq!(lt.lambda, 0.5);
+        assert_eq!(lt.window, 4);
+        let c = SignalSpec::parse("confidence:gamma=2").unwrap();
+        assert_eq!(c.kind, SignalKind::Confidence);
+        assert_eq!(c.gamma, 2.0);
+        assert_eq!(SignalSpec::parse("prm-oracle").unwrap().kind, SignalKind::PrmOracle);
+    }
+
+    #[test]
+    fn parse_rejects_and_names_the_offender() {
+        assert!(SignalSpec::parse("entropy").unwrap_err().contains("entropy"));
+        // A param that belongs to another signal is named.
+        let e = SignalSpec::parse("confidence:lambda=0.5").unwrap_err();
+        assert!(e.contains("lambda") && e.contains("confidence"), "{e}");
+        let e = SignalSpec::parse("hidden-mlp:gamma=1").unwrap_err();
+        assert!(e.contains("gamma"), "{e}");
+        // Bad values and ranges are named too.
+        assert!(SignalSpec::parse("confidence:gamma=zero").unwrap_err().contains("gamma"));
+        assert!(SignalSpec::parse("confidence:gamma=-1").unwrap_err().contains("gamma"));
+        assert!(SignalSpec::parse("latent-temporal:lambda=1.5")
+            .unwrap_err()
+            .contains("lambda"));
+        assert!(SignalSpec::parse("latent-temporal:window=0")
+            .unwrap_err()
+            .contains("window"));
+        assert!(SignalSpec::parse("latent-temporal:slope")
+            .unwrap_err()
+            .contains("PARAM=V"));
+    }
+
+    #[test]
+    fn spec_string_round_trips() {
+        for s in [
+            "hidden-mlp",
+            "latent-temporal",
+            "latent-temporal:lambda=0.5,window=4",
+            "confidence",
+            "confidence:gamma=2",
+            "prm-oracle",
+        ] {
+            let spec = SignalSpec::parse(s).unwrap();
+            assert_eq!(SignalSpec::parse(&spec.spec_string()).unwrap(), spec);
+        }
+    }
+
+    #[test]
+    fn hidden_mlp_matches_raw_scorer_path() {
+        let g = gen();
+        let scorer = mlp();
+        let sig = SignalSpec::default().build(&scorer);
+        let mut scratch = SignalScratch::new();
+        let q = g.question(0);
+        for i in 0..4 {
+            let t = g.trace(&q, i);
+            for n in 1..=t.n_steps().min(6) {
+                let ctx = StepCtx { gen: &g, q: &q, spec: &t, step_n: n };
+                let via_trait = sig.score_step(&ctx, &mut scratch);
+                let h = g.hidden_state(&q, &t, n);
+                let mut z = vec![0.0f32; scorer.hidden];
+                let direct = scorer.score_into(&h, &mut z);
+                assert_eq!(via_trait, direct, "trace {i} step {n}: not bit-identical");
+            }
+        }
+    }
+
+    #[test]
+    fn signals_are_deterministic_and_scratch_reuse_is_pure() {
+        let g = gen();
+        let q = g.question(1);
+        let t = g.trace(&q, 2);
+        for sig in all_signals() {
+            let mut fresh_scores = Vec::new();
+            for n in 1..=t.n_steps().min(8) {
+                let ctx = StepCtx { gen: &g, q: &q, spec: &t, step_n: n };
+                let mut fresh = SignalScratch::new();
+                fresh_scores.push(sig.score_step(&ctx, &mut fresh));
+            }
+            // One reused scratch (dirtied between calls) must reproduce
+            // every score bit-for-bit.
+            let mut reused = SignalScratch::new();
+            for (k, n) in (1..=t.n_steps().min(8)).enumerate() {
+                let ctx = StepCtx { gen: &g, q: &q, spec: &t, step_n: n };
+                let a = sig.score_step(&ctx, &mut reused);
+                reused.h.iter_mut().for_each(|x| *x = f32::NAN);
+                reused.z.iter_mut().for_each(|x| *x = f32::NAN);
+                let b = sig.score_step(&ctx, &mut reused);
+                assert_eq!(a, b, "{}: dirty scratch changed the score", sig.name());
+                assert_eq!(a, fresh_scores[k], "{}: scratch reuse impure", sig.name());
+            }
+        }
+    }
+
+    #[test]
+    fn batch_matches_singular_for_every_signal() {
+        let g = gen();
+        let q = g.question(3);
+        let traces: Vec<TraceSpec> = (0..3).map(|i| g.trace(&q, i)).collect();
+        let ctxs: Vec<StepCtx> = traces
+            .iter()
+            .flat_map(|t| {
+                (1..=t.n_steps().min(5))
+                    .map(move |n| StepCtx { gen: &g, q: &q, spec: t, step_n: n })
+            })
+            .collect();
+        for sig in all_signals() {
+            let mut scratch = SignalScratch::new();
+            let mut out = vec![-1.0f32; 3]; // pre-dirtied: must be cleared
+            sig.score_batch_into(&ctxs, &mut scratch, &mut out);
+            assert_eq!(out.len(), ctxs.len(), "{}", sig.name());
+            for (ctx, &b) in ctxs.iter().zip(&out) {
+                assert_eq!(
+                    sig.score_step(ctx, &mut scratch),
+                    b,
+                    "{}: batch diverges from singular",
+                    sig.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn signals_rank_quality() {
+        // Every signal must score a high-quality trace above a
+        // low-quality one of the same question, late in the trace where
+        // the signal has converged (mean over several traces to damp
+        // per-trace noise).
+        let g = gen();
+        let q = g.question(5);
+        let traces: Vec<TraceSpec> = (0..32).map(|i| g.trace(&q, i)).collect();
+        for sig in all_signals() {
+            let mut scratch = SignalScratch::new();
+            let (mut good, mut ng) = (0.0f64, 0);
+            let (mut bad, mut nb) = (0.0f64, 0);
+            for t in &traces {
+                let n = t.n_steps();
+                let ctx = StepCtx { gen: &g, q: &q, spec: t, step_n: n };
+                let s = sig.score_step(&ctx, &mut scratch) as f64;
+                if t.label {
+                    good += s;
+                    ng += 1;
+                } else {
+                    bad += s;
+                    nb += 1;
+                }
+            }
+            assert!(ng >= 3 && nb >= 3, "degenerate label split");
+            let (good, bad) = (good / ng as f64, bad / nb as f64);
+            assert!(
+                good > bad,
+                "{}: correct traces must outscore incorrect ({good} vs {bad})",
+                sig.name()
+            );
+        }
+    }
+
+    #[test]
+    fn per_gpu_clones_are_independent_and_equal() {
+        let g = gen();
+        let q = g.question(0);
+        let t = g.trace(&q, 0);
+        let ctx = StepCtx { gen: &g, q: &q, spec: &t, step_n: 1 };
+        for sig in all_signals() {
+            let clone = sig.clone_box();
+            assert_eq!(clone.name(), sig.name());
+            let mut s1 = SignalScratch::new();
+            let mut s2 = SignalScratch::new();
+            assert_eq!(sig.score_step(&ctx, &mut s1), clone.score_step(&ctx, &mut s2));
+        }
+    }
+
+    #[test]
+    fn names_align_with_kinds() {
+        let kinds = [
+            SignalKind::HiddenMlp,
+            SignalKind::LatentTemporal,
+            SignalKind::Confidence,
+            SignalKind::PrmOracle,
+        ];
+        assert_eq!(kinds.len(), SIGNAL_NAMES.len());
+        for (k, name) in kinds.iter().zip(SIGNAL_NAMES) {
+            assert_eq!(k.name(), *name);
+            assert_eq!(SignalSpec::parse(name).unwrap().kind, *k);
+        }
+    }
+}

@@ -33,6 +33,11 @@
 //!      fields): the traced STEP cell's metric row byte-identical to
 //!      the untraced run — recorders must never influence scheduling —
 //!      and the enabled-tracing wall ratio under its cap;
+//!    * signal Pareto (when the cluster artifact carries the signal
+//!      grid): hidden-mlp STEP accuracy must not fall below intrinsic
+//!      confidence at the grid's matched load, and the default
+//!      hidden-mlp path must stay byte-identical to the pre-trait
+//!      scorer;
 //!    * prefix cache (when the cluster artifact carries the
 //!      prefix-cache fields): the skewed closed loop must actually
 //!      share prompts (hit rate above zero), affinity-weighted
@@ -367,6 +372,28 @@ fn evaluate(pairs: &[(Json, Json)]) -> Vec<GateRow> {
             |r, cap| r > 0.0 && r <= cap,
         ));
     }
+    // Signal Pareto gates, applied when the artifact carries the
+    // signal grid: hidden states must not rank worse than intrinsic
+    // confidence on STEP accuracy at the grid's matched load (same
+    // workload, same memory events — only the victim selection
+    // differs), and the default hidden-mlp path must stay
+    // byte-identical to the pre-trait scorer.
+    if cluster.get("signal_pareto").as_arr().is_some() {
+        rows.push(compare_row(
+            ARTIFACTS[2],
+            "hidden-mlp STEP acc >= confidence",
+            num_at(cluster, &["signal_acc_hidden_mlp"]),
+            num_at(cluster, &["signal_acc_confidence"]),
+            |mlp, conf| mlp >= conf,
+        ));
+    }
+    if let Some(identical) = bool_at(cluster, &["signal_default_identical"]) {
+        rows.push(flag_row(
+            ARTIFACTS[2],
+            "hidden-mlp == default metric bytes",
+            Some(identical),
+        ));
+    }
     // Prefix-cache gates, applied when the artifact carries the
     // prefix-cache fields (cluster_load writes them; a table6 run
     // without the prefix row legitimately omits them).
@@ -518,6 +545,15 @@ mod tests {
         ])
     }
 
+    fn pareto_row(signal: &str, method: &str, acc: f64) -> Json {
+        Json::obj(vec![
+            ("label", Json::Str(format!("{signal}/{method}/mu0.9"))),
+            ("signal", Json::Str(signal.to_string())),
+            ("method", Json::Str(method.to_string())),
+            ("acc", Json::Num(acc)),
+        ])
+    }
+
     fn cluster(kv: f64, rr: f64, shed_never: f64, shed_on_shed: f64) -> Json {
         Json::obj(vec![
             (
@@ -548,6 +584,16 @@ mod tests {
                     ela_row("drain-relocate", 0.25, true),
                 ]),
             ),
+            (
+                "signal_pareto",
+                Json::Arr(vec![
+                    pareto_row("hidden-mlp", "STEP", 75.0),
+                    pareto_row("confidence", "STEP", 62.5),
+                ]),
+            ),
+            ("signal_acc_hidden_mlp", Json::Num(75.0)),
+            ("signal_acc_confidence", Json::Num(62.5)),
+            ("signal_default_identical", Json::Bool(true)),
             ("shard_flat_identical", Json::Bool(true)),
             ("identical_across_threads", Json::Bool(true)),
             ("identical_across_step_threads", Json::Bool(true)),
@@ -759,6 +805,45 @@ mod tests {
         assert!(failed.iter().any(|ch| ch.contains("prefix hit rate")), "{failed:?}");
         assert!(failed.iter().any(|ch| ch.contains("affinity-on p99")), "{failed:?}");
         assert!(failed.iter().any(|ch| ch.contains("prefix-off ==")), "{failed:?}");
+    }
+
+    #[test]
+    fn healthy_artifacts_exercise_the_signal_gates() {
+        let rows = evaluate(&pairs(
+            grid(3.2, true),
+            serving(100.0, 200.0),
+            cluster(50.0, 80.0, 0.4, 0.1),
+        ));
+        assert!(rows.iter().any(|r| r.check.contains("hidden-mlp STEP acc") && r.ok));
+        assert!(rows.iter().any(|r| r.check.contains("hidden-mlp == default") && r.ok));
+        // An artifact without the signal grid (an older artifact)
+        // skips the rows instead of failing them.
+        let mut bare = cluster(50.0, 80.0, 0.4, 0.1);
+        if let Json::Obj(map) = &mut bare {
+            map.remove("signal_pareto");
+            map.remove("signal_acc_hidden_mlp");
+            map.remove("signal_acc_confidence");
+            map.remove("signal_default_identical");
+        }
+        let rows = evaluate(&pairs(grid(3.2, true), serving(100.0, 200.0), bare));
+        assert!(!rows.iter().any(|r| r.check.contains("hidden-mlp")), "{rows:?}");
+    }
+
+    #[test]
+    fn signal_gate_checks_accuracy_ordering_and_default_identity() {
+        let mut c = cluster(1.0, 2.0, 0.2, 0.1);
+        if let Json::Obj(map) = &mut c {
+            // Confidence out-ranks hidden states, and the default path
+            // drifted from the pre-trait scorer: both gates trip.
+            map.insert("signal_acc_hidden_mlp".to_string(), Json::Num(50.0));
+            map.insert("signal_acc_confidence".to_string(), Json::Num(62.5));
+            map.insert("signal_default_identical".to_string(), Json::Bool(false));
+        }
+        let rows = evaluate(&pairs(grid(2.0, true), serving(1.0, 2.0), c));
+        let failed: Vec<&str> =
+            rows.iter().filter(|r| !r.ok).map(|r| r.check.as_str()).collect();
+        assert!(failed.iter().any(|ch| ch.contains("hidden-mlp STEP acc")), "{failed:?}");
+        assert!(failed.iter().any(|ch| ch.contains("hidden-mlp == default")), "{failed:?}");
     }
 
     #[test]

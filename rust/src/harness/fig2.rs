@@ -44,13 +44,15 @@ pub fn run_fig2a(opts: &HarnessOpts) -> Result<Fig2a> {
             let q = gen.question(qid);
             let mut q_scores = Vec::with_capacity(traces_per_q);
             let mut q_labels = Vec::with_capacity(traces_per_q);
+            let (mut sbuf, mut zbuf) = (Vec::new(), Vec::new());
             for i in 0..traces_per_q {
                 let t = gen.trace(&q, i);
                 let k = ((t.n_steps() as f64 * frac).ceil() as usize).max(1);
                 let hs: Vec<Vec<f32>> =
                     (1..=k).map(|n| gen.hidden_state(&q, &t, n)).collect();
-                // Fused batch path, bit-exact with summing score() calls.
-                let s: f64 = scorer.score_batch(&hs).iter().map(|&x| x as f64).sum();
+                // Fused batch path, bit-exact with summing score_into() calls.
+                scorer.score_batch_into(&hs, &mut sbuf, &mut zbuf);
+                let s: f64 = sbuf.iter().map(|&x| x as f64).sum();
                 q_scores.push(s / k as f64);
                 q_labels.push(t.label);
             }

@@ -46,16 +46,18 @@ pub fn run(opts: &HarnessOpts) -> Result<Fig5> {
                 if !traces.iter().any(|t| t.label) || traces.iter().all(|t| t.label) {
                     return vec![(None, None); fractions.len()]; // RankAcc undefined
                 }
+                let (mut sbuf, mut zbuf) = (Vec::new(), Vec::new());
                 let step_scores: Vec<Vec<f64>> = traces
                     .iter()
                     .map(|t| {
                         // Fused batch path: all of a trace's step hidden
                         // states scored in one tiled pass (bit-exact with
-                        // per-step score()).
+                        // per-step score_into()).
                         let hs: Vec<Vec<f32>> = (1..=t.n_steps())
                             .map(|n| gen.hidden_state(&q, t, n))
                             .collect();
-                        scorer.score_batch(&hs).into_iter().map(|s| s as f64).collect()
+                        scorer.score_batch_into(&hs, &mut sbuf, &mut zbuf);
+                        sbuf.iter().map(|&s| s as f64).collect()
                     })
                     .collect();
                 let step_confs: Vec<Vec<f64>> = traces

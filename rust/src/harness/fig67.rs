@@ -35,14 +35,15 @@ pub fn run_model(opts: &HarnessOpts, model: ModelId) -> Result<Dynamics> {
         pool::parallel_map(threads, n_questions, |qid| {
             let q = gen.question(qid);
             let mut acc: Vec<(f64, f64, usize, usize)> = Vec::new();
+            let (mut scores, mut zbuf) = (Vec::new(), Vec::new());
             for i in 0..opts.n_traces {
                 let t = gen.trace(&q, i);
                 // Fused batch path over the trace's step hidden states
-                // (bit-exact with per-step score()).
+                // (bit-exact with per-step score_into()).
                 let hs: Vec<Vec<f32>> = (1..=t.n_steps())
                     .map(|n| gen.hidden_state(&q, &t, n))
                     .collect();
-                let scores = scorer.score_batch(&hs);
+                scorer.score_batch_into(&hs, &mut scores, &mut zbuf);
                 let mut sum = 0.0;
                 for (j, &s) in scores.iter().enumerate() {
                     sum += s as f64;

@@ -76,16 +76,17 @@ pub fn run(opts: &HarnessOpts) -> Result<Vec<Table2Row>> {
                         let mut votes_m = Vec::new();
                         let mut votes_p = Vec::new();
                         let mut votes_s = Vec::new();
+                        let (mut sbuf, mut zbuf) = (Vec::new(), Vec::new());
                         for t in &traces {
                             let Some(ans) = t.answer else { continue };
                             // STEP weight: mean step score over the full
                             // trace, via the fused batch path (bit-exact
-                            // with summing per-step score()).
+                            // with summing per-step score_into()).
                             let k = t.n_steps();
                             let hs: Vec<Vec<f32>> =
                                 (1..=k).map(|n| gen.hidden_state(&q, t, n)).collect();
-                            let s: f64 =
-                                scorer.score_batch(&hs).iter().map(|&x| x as f64).sum();
+                            scorer.score_batch_into(&hs, &mut sbuf, &mut zbuf);
+                            let s: f64 = sbuf.iter().map(|&x| x as f64).sum();
                             let step_w = s / k as f64;
                             votes_m.push(Vote { answer: Some(ans), weight: 1.0 });
                             votes_p.push(Vote { answer: Some(ans), weight: gen.prm_score(t) });

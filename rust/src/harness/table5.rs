@@ -20,6 +20,7 @@ use anyhow::Result;
 use super::cells::projection_scorer;
 use crate::coordinator::method::Method;
 use crate::coordinator::scorer::StepScorer;
+use crate::coordinator::signal::SignalSpec;
 use crate::metrics::LatencySketch;
 use crate::sim::profiles::{BenchId, ModelId};
 use crate::sim::serve::{ServeSim, ServeSimConfig};
@@ -56,6 +57,8 @@ pub struct ServingOpts {
     /// Worker threads sharding the methods (0 = all cores). Metric
     /// output is bit-identical for any value.
     pub threads: usize,
+    /// Pruning signal scoring every decoded step (`--signal`).
+    pub signal: SignalSpec,
 }
 
 impl Default for ServingOpts {
@@ -71,6 +74,7 @@ impl Default for ServingOpts {
             quota_frac: None,
             seed: 0,
             threads: 0,
+            signal: SignalSpec::default(),
         }
     }
 }
@@ -148,11 +152,12 @@ pub fn run_cell(
     scorer: &StepScorer,
     opts: &ServingOpts,
 ) -> ServingCell {
-    let mut cfg =
-        ServeSimConfig::new(opts.model, opts.bench, method, opts.n_traces, opts.workload());
-    cfg.mem_util = opts.mem_util;
-    cfg.seed = opts.seed;
-    cfg.quota_frac = opts.quota_frac;
+    let cfg = ServeSimConfig::builder(opts.model, opts.bench, method, opts.n_traces, opts.workload())
+        .mem_util(opts.mem_util)
+        .seed(opts.seed)
+        .quota_frac(opts.quota_frac)
+        .signal(opts.signal.clone())
+        .build();
     let gen = TraceGen::new(opts.model, opts.bench, gen_params.clone(), opts.seed ^ 0x5EED);
     let r = ServeSim::new(&cfg, &gen, scorer).run();
 
@@ -229,6 +234,7 @@ pub fn metrics_json(opts: &ServingOpts, cells: &[ServingCell]) -> Json {
                 ("n_traces", Json::Num(opts.n_traces as f64)),
                 ("mem_util", Json::Num(opts.mem_util)),
                 ("quota_frac", quota),
+                ("signal", Json::Str(opts.signal.spec_string())),
                 ("seed", Json::Num(opts.seed as f64)),
             ]),
         ),

@@ -29,6 +29,7 @@ use anyhow::Result;
 use super::cells::projection_scorer;
 use crate::coordinator::method::Method;
 use crate::coordinator::scorer::StepScorer;
+use crate::coordinator::signal::{SignalKind, SignalSpec};
 use crate::obs::{perfetto, to_jsonl, SimEvent};
 use crate::sim::cluster::{
     parse_fleet_events, AdmissionConfig, ClusterConfig, ClusterResult, ClusterSim,
@@ -57,6 +58,25 @@ pub const MIGRATIONS: [MigrationPolicy; 3] = [
 /// arithmetic untouched); the rest trade placement pressure against
 /// prefix locality.
 pub const AFFINITY_WEIGHTS: [f64; 4] = [0.0, 0.25, 0.5, 1.0];
+
+/// The signal axis of the Pareto grid ([`run_signal_grid`]), the
+/// default `hidden-mlp` first so the identity and accuracy gates read
+/// off the leading rows.
+pub const PARETO_SIGNALS: [SignalKind; 4] = [
+    SignalKind::HiddenMlp,
+    SignalKind::LatentTemporal,
+    SignalKind::Confidence,
+    SignalKind::PrmOracle,
+];
+
+/// The method axis of the Pareto grid: `slim-sc` is the signal-inert
+/// reference (similarity pruning never consults the signal, so its
+/// rows must agree across signals), `step` is where the signals race.
+pub const PARETO_METHODS: [Method; 2] = [Method::SlimSc, Method::Step];
+
+/// The memory-pressure axis of the Pareto grid
+/// (gpu_memory_utilization of each pool): roomy, then pressured.
+pub const PARETO_MEM_UTILS: [f64; 2] = [0.9, 0.6];
 
 /// Revocation counts the elasticity grid sweeps.
 pub const ELASTICITY_REVOCATIONS: [usize; 2] = [2, 4];
@@ -166,6 +186,9 @@ pub struct ClusterOpts {
     /// prefix blocks for the request's question. 0 (default) leaves
     /// placement arithmetic untouched.
     pub affinity_weight: f64,
+    /// Pruning signal scoring every decoded step (`--signal`). The
+    /// default `hidden-mlp` is byte-identical to the pre-trait scorer.
+    pub signal: SignalSpec,
 }
 
 impl Default for ClusterOpts {
@@ -201,6 +224,7 @@ impl Default for ClusterOpts {
             step_threads: 1,
             prefix_cache: false,
             affinity_weight: 0.0,
+            signal: SignalSpec::default(),
         }
     }
 }
@@ -241,34 +265,37 @@ impl ClusterOpts {
 
     /// The cluster configuration for one (method, router) cell.
     pub fn config(&self, method: Method, router: RouterKind) -> ClusterConfig {
-        let mut c = ClusterConfig::new(
+        ClusterConfig::builder(
             self.gpus,
             self.model,
             self.bench,
             method,
             self.n_traces,
             self.workload(),
-        );
-        c.mem_util = self.mem_util;
-        c.seed = self.seed;
-        c.quota_frac = self.quota_frac;
-        c.router = router;
-        c.shard_size = self.shard_size;
-        c.admission = AdmissionConfig {
+        )
+        .mem_util(self.mem_util)
+        .seed(self.seed)
+        .quota_frac(self.quota_frac)
+        .router(router)
+        .shard_size(self.shard_size)
+        .admission(AdmissionConfig {
             queue_cap: self.queue_cap,
             max_outstanding_per_gpu: self.max_outstanding.max(1),
             slo_s: self.slo_s,
-        };
-        c.gpu_profiles = self.gpu_profiles.clone();
-        c.migration = self.migrate;
-        c.fleet_events = parse_fleet_events(&self.fleet_events, self.gpus, self.standby)
-            .expect("invalid --fleet-events spec (the CLI validates before running)");
-        c.standby = self.standby;
-        c.scale_up_queue_depth = self.scale_up_queue_depth;
-        c.step_threads = self.step_threads;
-        c.prefix_cache = self.prefix_cache;
-        c.affinity_weight = self.affinity_weight;
-        c
+        })
+        .gpu_profiles(self.gpu_profiles.clone())
+        .migration(self.migrate)
+        .fleet_events(
+            parse_fleet_events(&self.fleet_events, self.gpus, self.standby)
+                .expect("invalid --fleet-events spec (the CLI validates before running)"),
+        )
+        .standby(self.standby)
+        .scale_up_queue_depth(self.scale_up_queue_depth)
+        .step_threads(self.step_threads)
+        .prefix_cache(self.prefix_cache)
+        .affinity_weight(self.affinity_weight)
+        .signal(self.signal.clone())
+        .build()
     }
 
     /// The heterogeneous option set the migration grid runs at: the
@@ -645,6 +672,166 @@ pub fn attach_affinity_grid(json: &mut Json, opts: &ClusterOpts, cells: &[Affini
     }
 }
 
+/// One row of the signal Pareto grid: a (signal × method × memory
+/// pressure) cell's accuracy / tail-latency / prune trade-off.
+#[derive(Debug, Clone)]
+pub struct ParetoCell {
+    /// Row label: `SIGNAL/METHOD/muU` (e.g. `confidence/step/mu0.6`).
+    pub label: String,
+    /// Signal the row ran (a [`crate::coordinator::signal::SIGNAL_NAMES`] entry).
+    pub signal: String,
+    /// Method the row ran.
+    pub method: String,
+    /// gpu_memory_utilization of each pool.
+    pub mem_util: f64,
+    /// Accuracy over completed requests, percent.
+    pub acc: f64,
+    /// Cluster-wide 99th-percentile latency, seconds.
+    pub p99_s: f64,
+    /// Completed requests per second of cluster makespan.
+    pub goodput_rps: f64,
+    /// Mean generated tokens per completed request, thousands.
+    pub tok_k: f64,
+    /// Total pruned traces across GPUs.
+    pub pruned: u64,
+    /// Signal invocations across GPUs (0 for the SC family —
+    /// similarity pruning never consults the signal).
+    pub step_scores: u64,
+    /// Prunes per scored step (`pruned / step_scores`; 0 when the row
+    /// never scored) — how aggressively the signal's victim selection
+    /// fired per unit of scoring work.
+    pub pruned_step_frac: f64,
+}
+
+impl ParetoCell {
+    /// Condense one cluster run into a Pareto-grid row.
+    pub fn from_result(
+        label: &str,
+        signal: &str,
+        method: Method,
+        mem_util: f64,
+        r: &ClusterResult,
+    ) -> ParetoCell {
+        let n = r.outcomes.len().max(1) as f64;
+        let correct = r.outcomes.iter().filter(|o| o.correct).count() as f64;
+        let tok: f64 = r.outcomes.iter().map(|o| o.gen_tokens as f64).sum();
+        let scores = r.engine_counters.step_scores;
+        ParetoCell {
+            label: label.to_string(),
+            signal: signal.to_string(),
+            method: method.name().to_string(),
+            mem_util,
+            acc: 100.0 * correct / n,
+            p99_s: r.latency.percentile_s(99.0),
+            goodput_rps: r.goodput_rps(),
+            tok_k: tok / n / 1000.0,
+            pruned: r.engine_counters.pruned,
+            step_scores: scores,
+            pruned_step_frac: if scores == 0 {
+                0.0
+            } else {
+                r.engine_counters.pruned as f64 / scores as f64
+            },
+        }
+    }
+
+    /// Serialize as one metric block of `BENCH_cluster.json`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("label", Json::Str(self.label.clone())),
+            ("signal", Json::Str(self.signal.clone())),
+            ("method", Json::Str(self.method.clone())),
+            ("mem_util", Json::Num(self.mem_util)),
+            ("acc", Json::Num(self.acc)),
+            ("p99_s", Json::Num(self.p99_s)),
+            ("goodput_rps", Json::Num(self.goodput_rps)),
+            ("tok_k", Json::Num(self.tok_k)),
+            ("pruned", Json::Num(self.pruned as f64)),
+            ("step_scores", Json::Num(self.step_scores as f64)),
+            ("pruned_step_frac", Json::Num(self.pruned_step_frac)),
+        ])
+    }
+}
+
+/// Run the signal Pareto grid: every [`PARETO_SIGNALS`] signal ×
+/// [`PARETO_METHODS`] method × [`PARETO_MEM_UTILS`] memory pressure on
+/// the caller's workload, in that nesting order. Non-default signal
+/// parameters ride along from `opts.signal` so `--signal` tuning
+/// applies to the matching family's rows. Rows shard across
+/// `opts.threads` like the other grids; output is bit-identical for
+/// any thread count.
+pub fn run_signal_grid(
+    opts: &ClusterOpts,
+    gen_params: &GenParams,
+    scorer: &StepScorer,
+) -> Vec<ParetoCell> {
+    let jobs: Vec<(SignalSpec, Method, f64, String)> = PARETO_SIGNALS
+        .iter()
+        .flat_map(|&kind| {
+            PARETO_METHODS.iter().flat_map(move |&m| {
+                PARETO_MEM_UTILS.iter().map(move |&mu| {
+                    let spec = SignalSpec { kind, ..opts.signal.clone() };
+                    let label = format!("{}/{}/mu{mu}", spec.name(), m.name());
+                    (spec, m, mu, label)
+                })
+            })
+        })
+        .collect();
+    let run_one = |(spec, m, mu, label): &(SignalSpec, Method, f64, String)| {
+        let mut o = opts.clone();
+        o.signal = spec.clone();
+        o.mem_util = *mu;
+        let cfg = o.config(*m, o.router);
+        let gen = TraceGen::new(o.model, o.bench, gen_params.clone(), o.seed ^ 0x5EED);
+        let r = ClusterSim::new(&cfg, &gen, scorer).run();
+        ParetoCell::from_result(label, spec.name(), *m, *mu, &r)
+    };
+    let threads = pool::resolve_threads(opts.threads).min(jobs.len());
+    if threads <= 1 {
+        jobs.iter().map(run_one).collect()
+    } else {
+        pool::parallel_map(threads, jobs.len(), |i| run_one(&jobs[i]))
+    }
+}
+
+/// Mean accuracy of a signal's STEP rows across the grid's memory
+/// pressures — the quantity the `hidden-mlp beats confidence` bench
+/// gate compares (SC-family rows are signal-inert, so only STEP rows
+/// measure the signal).
+pub fn signal_step_acc(cells: &[ParetoCell], signal: &str) -> f64 {
+    let v: Vec<f64> = cells
+        .iter()
+        .filter(|c| c.signal == signal && c.method == Method::Step.name())
+        .map(|c| c.acc)
+        .collect();
+    if v.is_empty() {
+        0.0
+    } else {
+        v.iter().sum::<f64>() / v.len() as f64
+    }
+}
+
+/// Splice the signal Pareto grid (rows + the option set it swept over
+/// + the headline accuracy comparison) into an assembled
+/// `BENCH_cluster.json` payload.
+pub fn attach_signal_grid(json: &mut Json, opts: &ClusterOpts, cells: &[ParetoCell]) {
+    if let Json::Obj(map) = json {
+        map.insert(
+            "signal_pareto".to_string(),
+            Json::Arr(cells.iter().map(|c| c.to_json()).collect()),
+        );
+        map.insert("signal_pareto_config".to_string(), config_json(opts));
+        map.insert(
+            "signal_acc_hidden_mlp".to_string(),
+            Json::Num(signal_step_acc(cells, "hidden-mlp")),
+        );
+        map.insert(
+            "signal_acc_confidence".to_string(),
+            Json::Num(signal_step_acc(cells, "confidence")),
+        );
+    }
+}
+
 /// The fleet-event spec of one elasticity row: `n_revocations` spot
 /// revocations from t = 30 s, cycling victims from GPU 0, each with
 /// the same drain deadline. Revocations are spaced past the deadline
@@ -768,6 +955,7 @@ pub fn config_json(opts: &ClusterOpts) -> Json {
         ("scale_up_queue_depth", Json::Num(opts.scale_up_queue_depth as f64)),
         ("prefix_cache", Json::Bool(opts.prefix_cache)),
         ("affinity_weight", Json::Num(opts.affinity_weight)),
+        ("signal", Json::Str(opts.signal.spec_string())),
         ("seed", Json::Num(opts.seed as f64)),
     ])
 }
@@ -1001,10 +1189,37 @@ pub fn run(opts: &ClusterOpts) -> Result<(Vec<ClusterCell>, Vec<ClusterCell>)> {
             }
         );
     }
+    // The signal Pareto grid: every pruning signal × pruning method ×
+    // memory pressure on the caller's workload.
+    let pareto = run_signal_grid(opts, &gen_params, &scorer);
+    println!("-- signal pareto (signal x method x mem pressure)");
+    println!(
+        "{:>28} | {:>6} | {:>8} | {:>7} | {:>7} | {:>8} | {:>9}",
+        "row", "acc%", "p99(s)", "good/s", "pruned", "scores", "prune/stp"
+    );
+    for c in &pareto {
+        println!(
+            "{:>28} | {:>6.1} | {:>8.1} | {:>7.4} | {:>7} | {:>8} | {:>9.4}",
+            c.label, c.acc, c.p99_s, c.goodput_rps, c.pruned, c.step_scores, c.pruned_step_frac,
+        );
+    }
+    let (mlp_acc, conf_acc) = (
+        signal_step_acc(&pareto, "hidden-mlp"),
+        signal_step_acc(&pareto, "confidence"),
+    );
+    println!(
+        "  STEP acc hidden-mlp {mlp_acc:.1}% vs confidence {conf_acc:.1}% — {}",
+        if mlp_acc >= conf_acc {
+            "hidden states beat intrinsic confidence (the paper's signal claim)"
+        } else {
+            "WARNING: hidden-mlp accuracy below confidence at this load"
+        }
+    );
     let mut json = metrics_json(opts, &methods, &routers);
     attach_migration_grid(&mut json, &mig_opts, &migration);
     attach_elasticity_grid(&mut json, &ela_opts, &elasticity);
     attach_affinity_grid(&mut json, opts, &affinity);
+    attach_signal_grid(&mut json, opts, &pareto);
     // Harness-convention artifact plus the canonical BENCH_cluster.json
     // metric blocks (also written by the cluster_load bench at its own
     // quick config — last writer wins; the embedded config block
@@ -1203,6 +1418,104 @@ mod tests {
         assert!(text.contains("\"affinity_config\""));
         assert!(text.contains("\"prefix_hit_rate\""));
         assert!(text.contains("\"prefix_saved_blocks\""));
+    }
+
+    #[test]
+    fn signal_grid_covers_the_cross_product_in_order() {
+        let gp = GenParams::default_d64();
+        let sc = projection_scorer(&gp);
+        let opts = tiny();
+        let cells = run_signal_grid(&opts, &gp, &sc);
+        let n_rows =
+            PARETO_SIGNALS.len() * PARETO_METHODS.len() * PARETO_MEM_UTILS.len();
+        assert_eq!(cells.len(), n_rows);
+        let mut i = 0;
+        for &kind in &PARETO_SIGNALS {
+            let spec = SignalSpec { kind, ..SignalSpec::default() };
+            for &m in &PARETO_METHODS {
+                for &mu in &PARETO_MEM_UTILS {
+                    let c = &cells[i];
+                    assert_eq!(c.label, format!("{}/{}/mu{mu}", spec.name(), m.name()));
+                    assert_eq!(c.signal, spec.name());
+                    assert_eq!(c.method, m.name());
+                    assert_eq!(c.mem_util, mu);
+                    assert!((0.0..=100.0).contains(&c.acc), "{}", c.label);
+                    if m == Method::Step {
+                        assert!(c.step_scores > 0, "{}: STEP scores every step", c.label);
+                    } else {
+                        assert_eq!(
+                            c.step_scores, 0,
+                            "{}: similarity pruning never consults the signal",
+                            c.label
+                        );
+                    }
+                    i += 1;
+                }
+            }
+        }
+        // The SC-family rows are signal-inert: within a memory
+        // pressure they must agree bit-for-bit across every signal.
+        for &mu in &PARETO_MEM_UTILS {
+            let slim: Vec<&ParetoCell> = cells
+                .iter()
+                .filter(|c| c.method == Method::SlimSc.name() && c.mem_util == mu)
+                .collect();
+            for c in &slim[1..] {
+                assert_eq!(c.acc, slim[0].acc, "{}", c.label);
+                assert_eq!(c.p99_s, slim[0].p99_s, "{}", c.label);
+                assert_eq!(c.pruned, slim[0].pruned, "{}", c.label);
+            }
+        }
+    }
+
+    #[test]
+    fn signal_grid_default_row_matches_methods_grid_step_row() {
+        // The hidden-mlp/step row at the option set's memory pressure
+        // runs the exact configuration of the methods grid's STEP cell,
+        // so its metrics must agree bit-for-bit — the Pareto grid's
+        // rendering of the default-signal identity contract.
+        let gp = GenParams::default_d64();
+        let sc = projection_scorer(&gp);
+        let opts = tiny();
+        assert_eq!(opts.mem_util, 0.9, "tiny() runs at the grid's roomy pressure");
+        let (methods, _) = run_grids(&opts, &gp, &sc);
+        let step = methods.iter().find(|c| c.label == Method::Step.name()).unwrap();
+        let cells = run_signal_grid(&opts, &gp, &sc);
+        let row = cells
+            .iter()
+            .find(|c| c.label == "hidden-mlp/STEP/mu0.9")
+            .expect("default row present");
+        assert_eq!(row.acc, step.acc);
+        assert_eq!(row.p99_s, step.p99_s);
+        assert_eq!(row.goodput_rps, step.goodput_rps);
+        assert_eq!(row.pruned, step.pruned);
+    }
+
+    #[test]
+    fn signal_grid_attaches_rows_config_and_acc_summary() {
+        let gp = GenParams::default_d64();
+        let sc = projection_scorer(&gp);
+        let opts = tiny();
+        let cells = run_signal_grid(&opts, &gp, &sc);
+        let (m, r) = run_grids(&opts, &gp, &sc);
+        let mut json = metrics_json(&opts, &m, &r);
+        attach_signal_grid(&mut json, &opts, &cells);
+        let text = json.to_string_pretty();
+        assert!(text.contains("\"signal_pareto\""));
+        assert!(text.contains("\"signal_pareto_config\""));
+        assert!(text.contains("\"signal_acc_hidden_mlp\""));
+        assert!(text.contains("\"signal_acc_confidence\""));
+        assert!(text.contains("\"pruned_step_frac\""));
+        // The summary fields reproduce the STEP-row means.
+        assert_eq!(
+            signal_step_acc(&cells, "hidden-mlp"),
+            cells
+                .iter()
+                .filter(|c| c.signal == "hidden-mlp" && c.method == Method::Step.name())
+                .map(|c| c.acc)
+                .sum::<f64>()
+                / PARETO_MEM_UTILS.len() as f64
+        );
     }
 
     #[test]

@@ -5,6 +5,7 @@
 //! (no clap in the offline vendor set).
 
 use anyhow::{bail, Result};
+use step::coordinator::signal::SignalSpec;
 use step::harness::bench_gate::GateOpts;
 use step::harness::{self, table5::ServingOpts, table6::ClusterOpts, HarnessOpts};
 use step::sim::cluster::{parse_fleet_events, GpuProfile, MigrationPolicy};
@@ -73,6 +74,17 @@ SERVE-SIM OPTIONS (plus --seed/--threads/--traces above):
     --mem-util U     gpu_memory_utilization of the shared pool (default 0.9)
     --quota-frac F   per-request KV quota as a fraction of the pool
                      (default: none — pool-bound, cross-request pruning)
+    --signal NAME[:PARAM=V,...]
+                     pruning signal scoring step boundaries:
+                     hidden-mlp (default; the paper's MLP over hidden
+                     states, byte-identical to the pre-signal engines) |
+                     latent-temporal[:lambda=0.6,slope=4,window=8]
+                     (EWMA + slope over the hidden-state trajectory) |
+                     confidence[:gamma=1] (intrinsic token confidence) |
+                     prm-oracle (PRM upper bound). Unknown names or
+                     params fail at parse time naming the flag. The
+                     signal is stamped into step-score/prune events, so
+                     trace-check attributes prunes per signal
 
 CLUSTER-SIM OPTIONS (plus the serve-sim options above):
     --gpus R             per-GPU engines in the cluster (default 4)
@@ -206,6 +218,13 @@ where
         .map_err(|e| anyhow::anyhow!("{}: bad value '{v}': {e}", args[i]))
 }
 
+/// Parse a `--signal NAME[:PARAM=V,...]` value — the one parser both
+/// serve-sim and cluster-sim share; errors name the flag.
+fn parse_signal_val(args: &[String], i: usize) -> Result<SignalSpec> {
+    let spec = need_val(args, i)?;
+    SignalSpec::parse(spec).map_err(|e| anyhow::anyhow!("--signal: {e}"))
+}
+
 fn parse_serving_opts(args: &[String]) -> Result<ServingOpts> {
     let mut opts = ServingOpts::default();
     let mut i = 0;
@@ -260,6 +279,10 @@ fn parse_serving_opts(args: &[String]) -> Result<ServingOpts> {
             }
             "--quota-frac" => {
                 opts.quota_frac = Some(parse_val(args, i)?);
+                i += 2;
+            }
+            "--signal" => {
+                opts.signal = parse_signal_val(args, i)?;
                 i += 2;
             }
             other => bail!("unknown serve-sim option '{other}'\n\n{USAGE}"),
@@ -437,6 +460,10 @@ fn parse_cluster_opts(args: &[String]) -> Result<ClusterOpts> {
                 opts.quota_frac = Some(parse_val(args, i)?);
                 i += 2;
             }
+            "--signal" => {
+                opts.signal = parse_signal_val(args, i)?;
+                i += 2;
+            }
             other => bail!("unknown cluster-sim option '{other}'\n\n{USAGE}"),
         }
     }
@@ -503,6 +530,12 @@ fn main() -> Result<()> {
         let report = step::obs::replay::check(&events);
         println!("trace-check {path}: {} events", report.events);
         println!("  replayed counters: {}", report.counters.report());
+        for a in &report.attribution {
+            println!(
+                "  signal {}: {} step-scores, {} prunes",
+                a.signal, a.step_scores, a.prunes
+            );
+        }
         if !report.ok() {
             for v in &report.violations {
                 eprintln!("  VIOLATION: {v}");

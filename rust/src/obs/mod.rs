@@ -191,6 +191,13 @@ fn intern_cause(s: &str) -> Option<&'static str> {
     CAUSES.iter().find(|&&c| c == s).copied()
 }
 
+/// Intern a pruning-signal name against the
+/// [`crate::coordinator::signal::SIGNAL_NAMES`] vocabulary (interned so
+/// [`SimEvent`] stays `Copy`).
+fn intern_signal(s: &str) -> Option<&'static str> {
+    crate::coordinator::signal::SIGNAL_NAMES.iter().find(|&&n| n == s).copied()
+}
+
 impl EventKind {
     /// The canonical name (stable; the JSONL `kind` field and the
     /// `--trace-filter` vocabulary).
@@ -246,6 +253,10 @@ pub struct SimEvent {
     /// Why the decision fired (kind-specific vocabulary; see
     /// [`EventKind`]).
     pub cause: Option<&'static str>,
+    /// The pruning signal behind the decision, for `step-score` and
+    /// `prune` events (a [`crate::coordinator::signal::SIGNAL_NAMES`]
+    /// entry) — lets `trace-check` replay attribute prunes per signal.
+    pub signal: Option<&'static str>,
     /// What happened.
     pub kind: EventKind,
 }
@@ -261,6 +272,7 @@ impl SimEvent {
             live: None,
             kv: None,
             cause: None,
+            signal: None,
             kind,
         }
     }
@@ -296,6 +308,13 @@ impl SimEvent {
         self
     }
 
+    /// Stamp the pruning signal (a
+    /// [`crate::coordinator::signal::TraceSignal::name`]).
+    pub fn signal(mut self, signal: &'static str) -> SimEvent {
+        self.signal = Some(signal);
+        self
+    }
+
     /// The flat JSON object form — `t`, `kind`, the set context stamps,
     /// and the kind's payload keys. Round-trips through
     /// [`from_json`](Self::from_json).
@@ -321,6 +340,9 @@ impl SimEvent {
         }
         if let Some(c) = self.cause {
             pairs.push(("cause", Json::Str(c.to_string())));
+        }
+        if let Some(s) = self.signal {
+            pairs.push(("signal", Json::Str(s.to_string())));
         }
         match self.kind {
             EventKind::Queue { depth } => {
@@ -416,6 +438,13 @@ impl SimEvent {
                 intern_cause(c).ok_or_else(|| format!("unknown event cause '{c}'"))?,
             ),
         };
+        let signal = match v.get("signal").as_str() {
+            None => None,
+            Some(s) => Some(
+                intern_signal(s)
+                    .ok_or_else(|| format!("unknown event signal '{s}'"))?,
+            ),
+        };
         Ok(SimEvent {
             t_s,
             gpu: v.get("gpu").as_usize(),
@@ -424,6 +453,7 @@ impl SimEvent {
             live: v.get("live").as_usize(),
             kv: v.get("kv").as_usize(),
             cause,
+            signal,
             kind,
         })
     }
@@ -619,6 +649,23 @@ mod tests {
             .rid(7)
             .cause("rebalance")
             .load(5, 12)
+    }
+
+    #[test]
+    fn signal_stamp_round_trips_and_rejects_unknowns() {
+        let ev = SimEvent::new(2.0, EventKind::Prune)
+            .trace(3)
+            .cause("memory")
+            .signal("confidence");
+        let back = SimEvent::from_json(&ev.to_json()).unwrap();
+        assert_eq!(back, ev);
+        assert_eq!(back.signal, Some("confidence"));
+        let bad = Json::obj(vec![
+            ("t", Json::Num(0.0)),
+            ("kind", Json::Str("prune".into())),
+            ("signal", Json::Str("vibes".into())),
+        ]);
+        assert!(SimEvent::from_json(&bad).unwrap_err().contains("vibes"));
     }
 
     #[test]

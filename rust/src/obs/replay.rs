@@ -9,7 +9,7 @@
 //! placed/shed → completed/abandoned, exactly once each — which is what
 //! `step trace-check` runs against a `--trace-out` JSONL file in CI.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 
 use crate::metrics::ClusterCounters;
 use crate::obs::{EventKind, SimEvent};
@@ -59,6 +59,43 @@ pub fn replay_counters(events: &[SimEvent]) -> ClusterCounters {
     c
 }
 
+/// Per-pruning-signal activity re-derived from the `signal` stamps on
+/// `step-score` and `prune` events — attributes each prune to the
+/// signal whose scores selected the victim.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SignalAttribution {
+    /// The signal name (a `--signal` vocabulary entry).
+    pub signal: &'static str,
+    /// Step-boundary evaluations stamped with this signal.
+    pub step_scores: u64,
+    /// Prunes stamped with this signal.
+    pub prunes: u64,
+}
+
+/// Re-derive per-signal attribution from an event stream, in signal-name
+/// order. Events without a `signal` stamp (pre-signal traces, or prunes
+/// that never consulted a score) are excluded.
+pub fn signal_attribution(events: &[SimEvent]) -> Vec<SignalAttribution> {
+    let mut by_signal: BTreeMap<&'static str, (u64, u64)> = BTreeMap::new();
+    for ev in events {
+        let Some(sig) = ev.signal else { continue };
+        let e = by_signal.entry(sig).or_insert((0, 0));
+        match ev.kind {
+            EventKind::StepScore { .. } => e.0 += 1,
+            EventKind::Prune => e.1 += 1,
+            _ => {}
+        }
+    }
+    by_signal
+        .into_iter()
+        .map(|(signal, (step_scores, prunes))| SignalAttribution {
+            signal,
+            step_scores,
+            prunes,
+        })
+        .collect()
+}
+
 /// What [`check`] found in an event stream.
 #[derive(Debug, Clone)]
 pub struct ReplayReport {
@@ -66,6 +103,8 @@ pub struct ReplayReport {
     pub counters: ClusterCounters,
     /// Number of events examined.
     pub events: usize,
+    /// Per-signal step-score/prune attribution ([`signal_attribution`]).
+    pub attribution: Vec<SignalAttribution>,
     /// Conservation/lifecycle violations, human-readable (empty for a
     /// well-formed trace).
     pub violations: Vec<String>,
@@ -221,7 +260,12 @@ pub fn check(events: &[SimEvent]) -> ReplayReport {
             counters.completed, counters.shed_on_revoke, counters.placed
         ));
     }
-    ReplayReport { counters, events: events.len(), violations }
+    ReplayReport {
+        counters,
+        events: events.len(),
+        attribution: signal_attribution(events),
+        violations,
+    }
 }
 
 #[cfg(test)]
@@ -328,6 +372,28 @@ mod tests {
             SimEvent::new(1.0, EventKind::PrefixEvict { qid: 1, blocks: 3 }).gpu(0),
         ]);
         assert!(r.violations.iter().any(|v| v.contains("freed 3")));
+    }
+
+    #[test]
+    fn signal_attribution_groups_scores_and_prunes() {
+        let events = vec![
+            ev(0.0, EventKind::StepScore { score: 0.8 }, 0).signal("hidden-mlp"),
+            ev(0.1, EventKind::StepScore { score: 0.4 }, 0).signal("hidden-mlp"),
+            ev(0.2, EventKind::Prune, 0).cause("memory").signal("hidden-mlp"),
+            ev(0.3, EventKind::StepScore { score: 0.6 }, 1).signal("confidence"),
+            ev(0.4, EventKind::Prune, 1).cause("slim-sc").signal("confidence"),
+            ev(0.5, EventKind::Prune, 1).cause("memory").signal("confidence"),
+            // Unstamped events are excluded from attribution.
+            ev(0.6, EventKind::Prune, 2).cause("stall-drop"),
+        ];
+        let attr = signal_attribution(&events);
+        assert_eq!(
+            attr,
+            vec![
+                SignalAttribution { signal: "confidence", step_scores: 1, prunes: 2 },
+                SignalAttribution { signal: "hidden-mlp", step_scores: 2, prunes: 1 },
+            ]
+        );
     }
 
     #[test]

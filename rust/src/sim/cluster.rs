@@ -94,6 +94,7 @@ use std::collections::{BinaryHeap, VecDeque};
 
 use crate::coordinator::method::{Method, MethodParams};
 use crate::coordinator::scorer::StepScorer;
+use crate::coordinator::signal::SignalSpec;
 use crate::metrics::{ClusterCounters, EngineCounters, LatencySketch};
 use crate::obs::{dump_tail, merge_streams, EventBuf, EventKind, Recorder, SimEvent};
 use crate::sim::des::ScoreAgg;
@@ -601,6 +602,10 @@ pub struct ClusterConfig {
     /// kv-pressure stage-two scan reads it (shard aggregates stay
     /// request-independent).
     pub affinity_weight: f64,
+    /// The pruning signal every engine scores step boundaries with
+    /// (`--signal`; default `hidden-mlp`, byte-identical to the
+    /// pre-trait scorer path).
+    pub signal: SignalSpec,
 }
 
 impl ClusterConfig {
@@ -639,6 +644,23 @@ impl ClusterConfig {
             event_log: None,
             prefix_cache: false,
             affinity_weight: 0.0,
+            signal: SignalSpec::default(),
+        }
+    }
+
+    /// Builder-style construction: the paper defaults of [`Self::new`]
+    /// plus chainable field setters, so adding a config field is not a
+    /// breaking change at every call site.
+    pub fn builder(
+        gpus: usize,
+        model: ModelId,
+        bench: BenchId,
+        method: Method,
+        n_traces: usize,
+        workload: ClusterWorkload,
+    ) -> ClusterConfigBuilder {
+        ClusterConfigBuilder {
+            cfg: ClusterConfig::new(gpus, model, bench, method, n_traces, workload),
         }
     }
 
@@ -702,7 +724,117 @@ impl ClusterConfig {
         // half; the other policies leave memory events untouched.
         c.migrate_rescue = matches!(self.migration, MigrationPolicy::OnPressure { .. });
         c.prefix_cache = self.prefix_cache;
+        c.signal = self.signal.clone();
         c
+    }
+}
+
+/// Chainable builder over [`ClusterConfig`] ([`ClusterConfig::builder`]).
+#[derive(Debug, Clone)]
+pub struct ClusterConfigBuilder {
+    cfg: ClusterConfig,
+}
+
+impl ClusterConfigBuilder {
+    /// Set the master seed.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+
+    /// Set the uniform gpu_memory_utilization.
+    pub fn mem_util(mut self, mem_util: f64) -> Self {
+        self.cfg.mem_util = mem_util;
+        self
+    }
+
+    /// Set the per-request KV quota fraction.
+    pub fn quota_frac(mut self, quota_frac: Option<f64>) -> Self {
+        self.cfg.quota_frac = quota_frac;
+        self
+    }
+
+    /// Set the placement policy.
+    pub fn router(mut self, router: RouterKind) -> Self {
+        self.cfg.router = router;
+        self
+    }
+
+    /// Set the admission-control policy.
+    pub fn admission(mut self, admission: AdmissionConfig) -> Self {
+        self.cfg.admission = admission;
+        self
+    }
+
+    /// Set the per-GPU capacity/speed profiles.
+    pub fn gpu_profiles(mut self, profiles: Vec<GpuProfile>) -> Self {
+        self.cfg.gpu_profiles = profiles;
+        self
+    }
+
+    /// Set the cross-GPU migration policy.
+    pub fn migration(mut self, migration: MigrationPolicy) -> Self {
+        self.cfg.migration = migration;
+        self
+    }
+
+    /// Set the two-stage router's shard size (0 = automatic).
+    pub fn shard_size(mut self, shard_size: usize) -> Self {
+        self.cfg.shard_size = shard_size;
+        self
+    }
+
+    /// Set the engine-stepping worker threads.
+    pub fn step_threads(mut self, step_threads: usize) -> Self {
+        self.cfg.step_threads = step_threads;
+        self
+    }
+
+    /// Set the deterministic fleet-lifecycle schedule.
+    pub fn fleet_events(mut self, events: Vec<FleetEvent>) -> Self {
+        self.cfg.fleet_events = events;
+        self
+    }
+
+    /// Set the standby pool size.
+    pub fn standby(mut self, standby: usize) -> Self {
+        self.cfg.standby = standby;
+        self
+    }
+
+    /// Set the scaling controller's queue-depth trigger.
+    pub fn scale_up_queue_depth(mut self, depth: usize) -> Self {
+        self.cfg.scale_up_queue_depth = depth;
+        self
+    }
+
+    /// Attach per-lane event recorders (`Some(cap)`; `0` = unbounded).
+    pub fn event_log(mut self, cap: Option<usize>) -> Self {
+        self.cfg.event_log = cap;
+        self
+    }
+
+    /// Share prompt-prefix KV copy-on-write on every engine.
+    pub fn prefix_cache(mut self, on: bool) -> Self {
+        self.cfg.prefix_cache = on;
+        self
+    }
+
+    /// Set the routers' prefix-affinity credit.
+    pub fn affinity_weight(mut self, w: f64) -> Self {
+        self.cfg.affinity_weight = w;
+        self
+    }
+
+    /// Set the pruning signal of every engine.
+    pub fn signal(mut self, signal: SignalSpec) -> Self {
+        self.cfg.signal = signal;
+        self
+    }
+
+    /// Finish: the configured [`ClusterConfig`].
+    pub fn build(self) -> ClusterConfig {
+        self.cfg
     }
 }
 

@@ -17,6 +17,7 @@
 
 use crate::coordinator::method::{Method, MethodParams};
 use crate::coordinator::scorer::StepScorer;
+use crate::coordinator::signal::{SignalScratch, SignalSpec, StepCtx, TraceSignal};
 use crate::coordinator::trace::{TraceState, TraceStatus};
 use crate::coordinator::voting::{weighted_vote, Vote};
 use crate::kvcache::KvCacheManager;
@@ -82,6 +83,10 @@ pub struct SimConfig {
     pub victim: VictimPolicy,
     /// Ablation knob: how step scores aggregate into score_t.
     pub score_agg: ScoreAgg,
+    /// The pruning signal scoring step boundaries (`--signal`; default
+    /// `hidden-mlp`, the paper's MLP over hidden states — byte-identical
+    /// to the pre-trait scorer path).
+    pub signal: SignalSpec,
 }
 
 impl SimConfig {
@@ -100,6 +105,7 @@ impl SimConfig {
             record_dynamics: false,
             victim: VictimPolicy::LowestScore,
             score_agg: ScoreAgg::Mean,
+            signal: SignalSpec::default(),
         }
     }
 }
@@ -197,9 +203,9 @@ pub struct Scratch {
     /// Lazy-accrual marks: wall-clock up to which each trace's wait /
     /// decode time has been settled ([`sched::settle`]).
     last_settle: Vec<f64>,
-    /// Hidden state / MLP activation buffers for the scorer.
-    h: Vec<f32>,
-    z: Vec<f32>,
+    /// Per-worker signal scratch (hidden-state / activation buffers) —
+    /// the only mutable state a [`TraceSignal`] may touch.
+    sig: SignalScratch,
     /// Attached event recorder (`None` — the default — is the zero-cost
     /// disabled path: one branch per emission site, no event
     /// construction). Recorders observe; they never influence
@@ -232,13 +238,23 @@ pub struct DesEngine<'a> {
     cfg: &'a SimConfig,
     gen: &'a TraceGen,
     scorer: &'a StepScorer,
+    /// The pruning signal built from `cfg.signal` (owned, so engines
+    /// shared across worker threads need no synchronization beyond
+    /// `TraceSignal: Send + Sync`).
+    signal: Box<dyn TraceSignal>,
     profile: ModelProfile,
 }
 
 impl<'a> DesEngine<'a> {
     /// Bind a configuration to a trace generator and step scorer.
     pub fn new(cfg: &'a SimConfig, gen: &'a TraceGen, scorer: &'a StepScorer) -> Self {
-        DesEngine { cfg, gen, scorer, profile: ModelProfile::get(cfg.model) }
+        DesEngine {
+            cfg,
+            gen,
+            scorer,
+            signal: cfg.signal.build(scorer),
+            profile: ModelProfile::get(cfg.model),
+        }
     }
 
     fn kv_manager(&self) -> KvCacheManager {
@@ -370,8 +386,8 @@ impl<'a> DesEngine<'a> {
         }
 
         // Warm the reusable hot-path state (no per-event allocations).
-        scratch.h.resize(self.gen.gen.d, 0.0);
-        scratch.z.resize(self.scorer.hidden, 0.0);
+        scratch.sig.h.resize(self.gen.gen.d, 0.0);
+        scratch.sig.z.resize(self.scorer.hidden, 0.0);
         scratch.next_end.resize(traces.len(), 0);
         scratch.last_settle.resize(traces.len(), 0.0);
         for &i in phase {
@@ -496,17 +512,19 @@ impl<'a> DesEngine<'a> {
                 }
 
                 if self.needs_scores() {
-                    self.gen.hidden_state_into(q, &t.spec, step_n, &mut scratch.h);
-                    let s = self.scorer.score_into(&scratch.h, &mut scratch.z) as f64;
+                    let ctx = StepCtx { gen: self.gen, q, spec: &t.spec, step_n };
+                    let s = self.signal.score_step(&ctx, &mut scratch.sig) as f64;
                     t.st.push_score(s);
                     if self.cfg.record_dynamics {
                         t.dynamics.push((t.st.generated, t.st.mean_score(params.default_score)));
                     }
                     let t_now = *clock;
+                    let sig = self.signal.name();
                     scratch.emit(|rid| {
                         SimEvent::new(t_now, EventKind::StepScore { score: s })
                             .rid(rid)
                             .trace(iu)
+                            .signal(sig)
                     });
                 }
                 let mut completed_group = None;
@@ -614,11 +632,15 @@ impl<'a> DesEngine<'a> {
                 t.st.finish_clock = *clock;
                 kv.free_seq(t.st.id);
                 scratch.index.remove(victim);
+                // Memory prunes are the signal-driven removals: stamp
+                // the signal whose scores selected the victim.
+                let sig = self.signal.name();
                 scratch.emit(|rid| {
                     SimEvent::new(t_now, EventKind::Prune)
                         .rid(rid)
                         .trace(victim as usize)
                         .cause("memory")
+                        .signal(sig)
                 });
             }
             _ => {

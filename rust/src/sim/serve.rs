@@ -55,6 +55,7 @@
 use crate::coordinator::method::{Method, MethodParams};
 use crate::coordinator::request::RequestState;
 use crate::coordinator::scorer::StepScorer;
+use crate::coordinator::signal::{SignalScratch, SignalSpec, StepCtx, TraceSignal};
 use crate::coordinator::trace::{TraceState, TraceStatus};
 use crate::coordinator::voting::{weighted_vote, Vote};
 use crate::kvcache::{OwnerId, PrefixShare, SharedKvPool};
@@ -127,6 +128,10 @@ pub struct ServeSimConfig {
     /// prompt prefill) per trace. Off (default) the engine's arithmetic
     /// is byte-identical to the pre-registry code.
     pub prefix_cache: bool,
+    /// The pruning signal scoring step boundaries (`--signal`; default
+    /// `hidden-mlp`, the paper's MLP over hidden states — byte-identical
+    /// to the pre-trait scorer path).
+    pub signal: SignalSpec,
 }
 
 impl ServeSimConfig {
@@ -155,7 +160,90 @@ impl ServeSimConfig {
             timing_scale: 1.0,
             migrate_rescue: false,
             prefix_cache: false,
+            signal: SignalSpec::default(),
         }
+    }
+
+    /// Builder-style construction: the paper defaults of [`Self::new`]
+    /// plus chainable field setters, so adding a config field is not a
+    /// breaking change at every call site.
+    pub fn builder(
+        model: ModelId,
+        bench: BenchId,
+        method: Method,
+        n_traces: usize,
+        workload: WorkloadSpec,
+    ) -> ServeSimConfigBuilder {
+        ServeSimConfigBuilder { cfg: ServeSimConfig::new(model, bench, method, n_traces, workload) }
+    }
+}
+
+/// Chainable builder over [`ServeSimConfig`]
+/// ([`ServeSimConfig::builder`]).
+#[derive(Debug, Clone)]
+pub struct ServeSimConfigBuilder {
+    cfg: ServeSimConfig,
+}
+
+impl ServeSimConfigBuilder {
+    /// Set the master seed.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+
+    /// Set gpu_memory_utilization for the shared pool.
+    pub fn mem_util(mut self, mem_util: f64) -> Self {
+        self.cfg.mem_util = mem_util;
+        self
+    }
+
+    /// Set the per-request KV quota fraction.
+    pub fn quota_frac(mut self, quota_frac: Option<f64>) -> Self {
+        self.cfg.quota_frac = quota_frac;
+        self
+    }
+
+    /// Maintain the incremental router-view aggregates.
+    pub fn route_views(mut self, on: bool) -> Self {
+        self.cfg.route_views = on;
+        self
+    }
+
+    /// Set the hardware speed multiplier.
+    pub fn timing_scale(mut self, scale: f64) -> Self {
+        self.cfg.timing_scale = scale;
+        self
+    }
+
+    /// Allow last-survivor memory events to evict into the migration
+    /// outbox.
+    pub fn migrate_rescue(mut self, on: bool) -> Self {
+        self.cfg.migrate_rescue = on;
+        self
+    }
+
+    /// Share prompt-prefix KV copy-on-write.
+    pub fn prefix_cache(mut self, on: bool) -> Self {
+        self.cfg.prefix_cache = on;
+        self
+    }
+
+    /// Set the pruning signal.
+    pub fn signal(mut self, signal: SignalSpec) -> Self {
+        self.cfg.signal = signal;
+        self
+    }
+
+    /// Set the step-score aggregation.
+    pub fn score_agg(mut self, agg: ScoreAgg) -> Self {
+        self.cfg.score_agg = agg;
+        self
+    }
+
+    /// Finish: the configured [`ServeSimConfig`].
+    pub fn build(self) -> ServeSimConfig {
+        self.cfg
     }
 }
 
@@ -386,8 +474,13 @@ pub struct ServeEngine<'a> {
     // Reusable hot-path buffers. `running` snapshots the index's u32
     // arena ids (ascending trace order).
     running: Vec<u32>,
-    h: Vec<f32>,
-    z: Vec<f32>,
+    /// The pruning signal built from `cfg.signal` (owned per engine, so
+    /// per-GPU engines stepped on different threads share nothing
+    /// mutable).
+    signal: Box<dyn TraceSignal>,
+    /// Signal scratch (hidden-state / activation buffers) — the only
+    /// mutable state the signal may touch.
+    sig: SignalScratch,
     /// Attached event recorder (`None` — the default — is the zero-cost
     /// disabled path: one branch per emission site, no event
     /// construction). Recorders observe; they never influence
@@ -510,8 +603,9 @@ impl<'a> ServeEngine<'a> {
             .max(1);
         let quota = cfg.quota_frac.map(|f| ((pool_blocks as f64 * f) as usize).max(1));
         let pool = SharedKvPool::new(pool_blocks, cfg.block_size, quota);
-        let h = vec![0.0f32; gen.gen.d];
-        let z = vec![0.0f32; scorer.hidden];
+        let mut sig = SignalScratch::new();
+        sig.h.resize(gen.gen.d, 0.0);
+        sig.z.resize(scorer.hidden, 0.0);
         // Per-owner demand aggregates are only needed when quotas can
         // bind the memory horizon.
         let index = EventIndex::new(cfg.block_size, quota.is_some());
@@ -537,8 +631,8 @@ impl<'a> ServeEngine<'a> {
             scores_sorted: Vec::new(),
             version: 0,
             running: Vec::new(),
-            h,
-            z,
+            signal: cfg.signal.build(scorer),
+            sig,
             rec: None,
         }
     }
@@ -1213,8 +1307,13 @@ impl<'a> ServeEngine<'a> {
             if needs_scores {
                 let old = self.sim.agg_score(&self.traces[i].st);
                 let t = &mut self.traces[i];
-                self.sim.gen.hidden_state_into(&self.reqs[rid].q, &t.spec, step_n, &mut self.h);
-                let s = self.sim.scorer.score_into(&self.h, &mut self.z) as f64;
+                let ctx = StepCtx {
+                    gen: self.sim.gen,
+                    q: &self.reqs[rid].q,
+                    spec: &t.spec,
+                    step_n,
+                };
+                let s = self.signal.score_step(&ctx, &mut self.sig) as f64;
                 t.st.push_score(s);
                 self.counters.step_scores += 1;
                 if route_views {
@@ -1223,11 +1322,13 @@ impl<'a> ServeEngine<'a> {
                 }
                 if self.rec.is_some() {
                     let ext = self.reqs[rid].st.rid;
+                    let sig = self.signal.name();
                     self.emit(|live, kv| {
                         SimEvent::new(clock, EventKind::StepScore { score: s })
                             .rid(ext)
                             .trace(i)
                             .load(live, kv)
+                            .signal(sig)
                     });
                 }
             }
@@ -1372,12 +1473,16 @@ impl<'a> ServeEngine<'a> {
                 self.counters.pruned += 1;
                 request_done(&mut self.reqs[rid], clock, &mut self.completions);
                 let ext = self.reqs[rid].st.rid;
+                // Memory prunes are the signal-driven removals: stamp
+                // the signal whose scores selected the victim.
+                let sig = self.signal.name();
                 self.emit(|live, kv| {
                     SimEvent::new(clock, EventKind::Prune)
                         .rid(ext)
                         .trace(victim)
                         .cause("memory")
                         .load(live, kv)
+                        .signal(sig)
                 });
             }
             _ => {

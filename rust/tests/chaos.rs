@@ -39,24 +39,24 @@ fn chaos_cfg(
     schedule: Vec<FleetEvent>,
     migration: MigrationPolicy,
 ) -> ClusterConfig {
-    let mut c = ClusterConfig::new(
+    ClusterConfig::builder(
         3,
         ModelId::Phi4_14B,
         BenchId::Hmmt2425,
         Method::Step,
         4,
         ClusterWorkload::Open(WorkloadSpec::poisson(0.5, 10)),
-    );
-    c.seed = seed;
-    c.standby = 2;
-    c.scale_up_queue_depth = 2;
-    c.migration = migration;
-    c.fleet_events = schedule;
+    )
+    .seed(seed)
+    .standby(2)
+    .scale_up_queue_depth(2)
+    .migration(migration)
+    .fleet_events(schedule)
     // Bounded flight-recorder ring per lane: cheap enough to leave on
     // for every chaos run (the determinism contract says it cannot
     // change the results), deep enough to explain a failure.
-    c.event_log = Some(256);
-    c
+    .event_log(Some(256))
+    .build()
 }
 
 fn run(cfg: &ClusterConfig) -> ClusterResult {

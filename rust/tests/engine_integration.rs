@@ -34,8 +34,9 @@ fn trained_scorer_separates_trace_quality() {
             // Mid-trace prefix: early steps are dominated by the
             // exploration transient (Fig 5's rising curve).
             let k = t.n_steps().min(150);
+            let mut z = vec![0.0f32; scorer.hidden];
             let mean: f64 = (1..=k)
-                .map(|n| scorer.score(&gen.hidden_state(&q, &t, n)) as f64)
+                .map(|n| scorer.score_into(&gen.hidden_state(&q, &t, n), &mut z) as f64)
                 .sum::<f64>()
                 / k as f64;
             scores.push(mean);

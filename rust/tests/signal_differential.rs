@@ -1,0 +1,272 @@
+//! The signal-zoo API contract over real harness runs:
+//!
+//! * **default differential** — `--signal hidden-mlp` parsed through
+//!   [`SignalSpec`] produces serving and cluster metric blocks
+//!   byte-identical to the implicit default, across seeds and
+//!   `--threads` / `--step-threads` values (the trait refactor's
+//!   no-behavior-change lock, CLI-surface edition of the unit-level
+//!   `hidden_mlp_matches_raw_scorer_path` test);
+//! * **rival divergence** — every non-default signal actually changes
+//!   the step-score sequence of a pressured STEP run (the zoo is not
+//!   four names for one policy), while its event stream still replays
+//!   cleanly and attributes every stamped event to the one selected
+//!   signal;
+//! * **rival determinism** — the determinism contract extends to the
+//!   zoo: non-default signals are byte-identical across engine-stepping
+//!   thread counts and reruns;
+//! * **generator single-source** — `hidden_state` is bit-identical to
+//!   `hidden_state_into` (the convenience wrapper may never drift from
+//!   the hot path every signal reads through).
+
+use step::coordinator::method::Method;
+use step::coordinator::signal::SignalSpec;
+use step::harness::cells::projection_scorer;
+use step::harness::{table5, table6};
+use step::obs::{replay, to_jsonl, EventKind, SimEvent};
+use step::sim::cluster::{ClusterConfig, ClusterResult, ClusterSim, ClusterWorkload};
+use step::sim::profiles::{BenchId, ModelId};
+use step::sim::tracegen::{GenParams, TraceGen};
+use step::sim::workload::ClosedLoopSpec;
+
+/// A pressured 3-GPU STEP cluster (skewed closed loop, tight pool) with
+/// the event log on, built through the config builder: enough memory
+/// pressure that the signal's scores drive real victim selection.
+fn traced_cfg(seed: u64, signal: SignalSpec) -> ClusterConfig {
+    ClusterConfig::builder(
+        3,
+        ModelId::Phi4_14B,
+        BenchId::Hmmt2425,
+        Method::Step,
+        8,
+        ClusterWorkload::Closed(ClosedLoopSpec::skewed(8, 30.0, 16, 0.5)),
+    )
+    .seed(seed)
+    .mem_util(0.5)
+    .event_log(Some(0))
+    .signal(signal)
+    .build()
+}
+
+fn run(cfg: &ClusterConfig) -> ClusterResult {
+    let gp = GenParams::default_d64();
+    let scorer = projection_scorer(&gp);
+    let gen = TraceGen::new(cfg.model, cfg.bench, gp, cfg.seed ^ 0x5EED);
+    ClusterSim::new(cfg, &gen, &scorer).run()
+}
+
+/// The step-score sequence of an event stream, in merge order.
+fn step_scores(events: &[SimEvent]) -> Vec<f64> {
+    events
+        .iter()
+        .filter_map(|e| match e.kind {
+            EventKind::StepScore { score } => Some(score),
+            _ => None,
+        })
+        .collect()
+}
+
+/// Parsing `hidden-mlp` through the `--signal` surface is the implicit
+/// default: serving and cluster metric blocks are byte-identical, for
+/// every thread count — so turning the scorer into the default
+/// `TraceSignal` implementation changed no observable output.
+#[test]
+fn explicit_hidden_mlp_matches_the_default_byte_for_byte() {
+    let gp = GenParams::default_d64();
+    let sc = projection_scorer(&gp);
+    let explicit = SignalSpec::parse("hidden-mlp").expect("the default signal parses");
+    assert_eq!(explicit, SignalSpec::default(), "parse('hidden-mlp') must be Default");
+
+    let serve_base = table5::ServingOpts {
+        model: ModelId::Qwen3_4B,
+        bench: BenchId::GpqaDiamond,
+        n_requests: 4,
+        rate_rps: 0.05,
+        n_traces: 4,
+        seed: 7,
+        threads: 1,
+        ..Default::default()
+    };
+    let serve = |opts: &table5::ServingOpts| -> String {
+        table5::metrics_json(opts, &table5::run_methods(opts, &gp, &sc)).to_string_pretty()
+    };
+    let default_block = serve(&serve_base);
+    for threads in [1usize, 4] {
+        let opts = table5::ServingOpts {
+            signal: explicit.clone(),
+            threads,
+            ..serve_base.clone()
+        };
+        assert_eq!(
+            serve(&opts),
+            default_block,
+            "threads={threads}: explicit --signal hidden-mlp changed the serving block"
+        );
+    }
+
+    let cluster_base = table6::ClusterOpts {
+        gpus: 2,
+        model: ModelId::Qwen3_4B,
+        bench: BenchId::GpqaDiamond,
+        n_requests: 4,
+        clients: 2,
+        think_s: 20.0,
+        n_traces: 4,
+        mem_util: 0.5,
+        seed: 7,
+        threads: 1,
+        step_threads: 1,
+        ..Default::default()
+    };
+    let cluster = |opts: &table6::ClusterOpts| -> String {
+        let (m, r) = table6::run_grids(opts, &gp, &sc);
+        table6::metrics_json(opts, &m, &r).to_string_pretty()
+    };
+    for seed in [7u64, 11] {
+        let base = table6::ClusterOpts { seed, ..cluster_base.clone() };
+        let default_block = cluster(&base);
+        for (threads, step_threads) in [(1usize, 2usize), (4, 0)] {
+            let opts = table6::ClusterOpts {
+                signal: explicit.clone(),
+                threads,
+                step_threads,
+                ..base.clone()
+            };
+            assert_eq!(
+                cluster(&opts),
+                default_block,
+                "seed={seed} threads={threads} step_threads={step_threads}: \
+                 explicit --signal hidden-mlp changed the cluster block"
+            );
+        }
+    }
+}
+
+/// Every rival signal really is a different scoring policy: under the
+/// same pressured STEP schedule its step-score sequence diverges from
+/// the hidden-MLP default — while its event stream still satisfies the
+/// lifecycle/conservation laws and every stamped step-score event is
+/// attributed to exactly the selected signal.
+#[test]
+fn rival_signals_diverge_from_the_default_and_replay_cleanly() {
+    let base = run(&traced_cfg(11, SignalSpec::default()));
+    let base_scores = step_scores(&base.events);
+    assert!(!base_scores.is_empty(), "a pressured STEP run must score boundaries");
+
+    for name in ["latent-temporal", "confidence", "prm-oracle"] {
+        let spec = SignalSpec::parse(name).expect("zoo names parse");
+        let r = run(&traced_cfg(11, spec));
+        let scores = step_scores(&r.events);
+        assert!(!scores.is_empty(), "{name}: no step boundaries scored");
+        assert_ne!(
+            scores, base_scores,
+            "{name}: rival scores are bit-identical to hidden-mlp"
+        );
+
+        let report = replay::check(&r.events);
+        assert!(report.ok(), "{name}: {:?}", report.violations);
+        assert_eq!(
+            report.counters.report(),
+            r.counters.report(),
+            "{name}: events do not replay the counters"
+        );
+        assert_eq!(
+            report.attribution.len(),
+            1,
+            "{name}: one signal ran, one attribution row expected ({:?})",
+            report.attribution
+        );
+        let a = &report.attribution[0];
+        assert_eq!(a.signal, name, "stamps must carry the selected signal");
+        assert_eq!(
+            a.step_scores,
+            scores.len() as u64,
+            "{name}: every step-score event is stamped"
+        );
+        let prune_events =
+            r.events.iter().filter(|e| matches!(e.kind, EventKind::Prune)).count() as u64;
+        assert!(
+            a.prunes <= prune_events,
+            "{name}: attributed prunes exceed prune events"
+        );
+    }
+}
+
+/// The determinism contract extends to the zoo: a non-default signal's
+/// traced run is byte-identical (metric report and merged event stream)
+/// across engine-stepping thread counts, and a rerun reproduces it.
+#[test]
+fn rival_signal_runs_are_step_thread_invariant() {
+    for name in ["latent-temporal", "confidence"] {
+        let spec = SignalSpec::parse(name).expect("zoo names parse");
+        let base = run(&traced_cfg(13, spec.clone()));
+        let base_stream = to_jsonl(&base.events, &[]);
+        for step_threads in [2usize, 0] {
+            let mut cfg = traced_cfg(13, spec.clone());
+            cfg.step_threads = step_threads;
+            let r = run(&cfg);
+            assert_eq!(
+                r.counters.report(),
+                base.counters.report(),
+                "{name} step_threads={step_threads}: counters differ from serial"
+            );
+            assert_eq!(
+                to_jsonl(&r.events, &[]),
+                base_stream,
+                "{name} step_threads={step_threads}: merged stream is not canonical"
+            );
+        }
+        let rerun = run(&traced_cfg(13, spec));
+        assert_eq!(to_jsonl(&rerun.events, &[]), base_stream, "{name}: rerun diverged");
+    }
+}
+
+/// The signal selection lands in the serving config block: the
+/// `--signal` spec string is serialized so an artifact records which
+/// signal produced it.
+#[test]
+fn serving_config_block_records_the_signal_spec() {
+    let gp = GenParams::default_d64();
+    let sc = projection_scorer(&gp);
+    let opts = table5::ServingOpts {
+        model: ModelId::Qwen3_4B,
+        bench: BenchId::GpqaDiamond,
+        n_requests: 2,
+        n_traces: 4,
+        seed: 7,
+        threads: 1,
+        signal: SignalSpec::parse("confidence:gamma=2").expect("valid spec"),
+        ..Default::default()
+    };
+    let block = table5::metrics_json(&opts, &table5::run_methods(&opts, &gp, &sc))
+        .to_string_pretty();
+    assert!(
+        block.contains("\"signal\": \"confidence:gamma=2\""),
+        "config block must record the signal spec string: {block}"
+    );
+}
+
+/// `hidden_state` is the convenience wrapper over `hidden_state_into`
+/// and may never drift from it: both produce bit-identical vectors for
+/// every (question, trace, boundary), including into a dirty reused
+/// buffer.
+#[test]
+fn hidden_state_wrapper_is_bit_identical_to_the_hot_path() {
+    let gp = GenParams::default_d64();
+    let g = TraceGen::new(ModelId::Qwen3_4B, BenchId::Aime25, gp.clone(), 42);
+    let mut buf = vec![0.0f32; gp.d];
+    for qid in 0..3 {
+        let q = g.question(qid);
+        for i in 0..4 {
+            let t = g.trace(&q, i);
+            for n in 1..=t.n_steps().min(6) {
+                let fresh = g.hidden_state(&q, &t, n);
+                buf.iter_mut().for_each(|x| *x = f32::NAN); // dirty the buffer
+                g.hidden_state_into(&q, &t, n, &mut buf);
+                assert_eq!(
+                    fresh, buf,
+                    "q{qid} trace {i} step {n}: wrapper drifted from hidden_state_into"
+                );
+            }
+        }
+    }
+}

@@ -33,21 +33,21 @@ use step::util::json::Json;
 /// stream carries prunes, preemptions, queueing, and — under a
 /// revoking schedule — drains and migration hops.
 fn cfg(seed: u64, migration: MigrationPolicy, fleet: &str) -> ClusterConfig {
-    let mut c = ClusterConfig::new(
+    ClusterConfig::builder(
         3,
         ModelId::Phi4_14B,
         BenchId::Hmmt2425,
         Method::Step,
         8,
         ClusterWorkload::Closed(ClosedLoopSpec::skewed(8, 30.0, 16, 0.5)),
-    );
-    c.seed = seed;
-    c.mem_util = 0.5;
-    c.migration = migration;
-    c.standby = 1;
-    c.scale_up_queue_depth = 2;
-    c.fleet_events = parse_fleet_events(fleet, 3, 1).expect("valid fleet spec");
-    c
+    )
+    .seed(seed)
+    .mem_util(0.5)
+    .migration(migration)
+    .standby(1)
+    .scale_up_queue_depth(2)
+    .fleet_events(parse_fleet_events(fleet, 3, 1).expect("valid fleet spec"))
+    .build()
 }
 
 fn run(cfg: &ClusterConfig) -> ClusterResult {
